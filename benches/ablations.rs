@@ -1,0 +1,24 @@
+//! Ablation benches: the design-choice experiments of DESIGN.md §9,
+//! rendered + timed. `cargo bench --bench ablations`.
+
+use takum_avx10::harness::ablation;
+use takum_avx10::matrix::generator::CollectionSpec;
+use takum_avx10::util::bench::Bencher;
+
+fn main() {
+    let spec = CollectionSpec { count: 300, ..Default::default() };
+
+    println!("{}", ablation::takum_variant(spec, 8));
+    println!("{}", ablation::takum_variant(spec, 16));
+    println!("{}", ablation::domain_breakdown(spec, &["takum8", "posit8", "e4m3", "e5m2"]));
+    let (_, txt) = ablation::seed_sensitivity(300, &[1, 2, 3, 4, 5]);
+    println!("{txt}");
+
+    let mut b = Bencher::new();
+    b.group("ablation harness timings (300 matrices)");
+    b.bench("A: takum variant panel (8-bit)", || ablation::takum_variant(spec, 8));
+    b.bench("B: domain breakdown (4 formats)", || {
+        ablation::domain_breakdown(spec, &["takum8", "posit8", "e4m3", "e5m2"])
+    });
+    b.bench("C: seed sensitivity (3 seeds)", || ablation::seed_sensitivity(100, &[1, 2, 3]));
+}

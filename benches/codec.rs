@@ -1,0 +1,80 @@
+//! L3 hot-path bench: the scalar/batch codecs that the Figure 2 sweep
+//! spends its time in, plus the LUT fast paths (§Perf before/after).
+
+use takum_avx10::num::{self, format_by_name, lut, takum_linear};
+use takum_avx10::util::bench::Bencher;
+use takum_avx10::util::rng::Rng;
+
+const N: usize = 4096;
+
+fn inputs(seed: u64) -> Vec<f64> {
+    let mut r = Rng::new(seed);
+    (0..N).map(|_| r.wide_f64(-40, 40)).collect()
+}
+
+fn main() {
+    let xs = inputs(1);
+    let mut b = Bencher::new();
+
+    b.group("encode+decode round-trip, 4096 values/iter");
+    for name in ["takum8", "takum16", "takum32", "takum_log8", "posit8", "posit16", "posit32",
+                 "e4m3", "e5m2", "float16", "bfloat16"] {
+        let f = format_by_name(name).unwrap();
+        b.bench_with_elements(&format!("codec {name}"), N as u64, || {
+            let mut acc = 0.0;
+            for &x in &xs {
+                acc += f.roundtrip(x);
+            }
+            acc
+        });
+    }
+
+    b.group("8-bit LUT fast path vs codec");
+    for name in ["takum8", "posit8", "e4m3", "e5m2"] {
+        let f = format_by_name(name).unwrap();
+        let table = lut::cached(name).unwrap();
+        b.bench_with_elements(&format!("{name} codec"), N as u64, || {
+            let mut acc = 0.0;
+            for &x in &xs {
+                acc += f.roundtrip(x);
+            }
+            acc
+        });
+        b.bench_with_elements(&format!("{name} LUT"), N as u64, || {
+            let mut acc = 0.0;
+            for &x in &xs {
+                acc += table.roundtrip(x);
+            }
+            acc
+        });
+    }
+
+    b.group("norm accumulation");
+    b.bench_with_elements("dd relative_error(takum8) over 4096", N as u64, || {
+        let f = format_by_name("takum8").unwrap();
+        takum_avx10::matrix::norms::relative_error(&xs, &*f)
+    });
+
+    b.group("takum primitive ops");
+    b.bench_with_elements("takum_linear::encode n=16", N as u64, || {
+        let mut acc = 0u64;
+        for &x in &xs {
+            acc = acc.wrapping_add(takum_linear::encode(x, 16));
+        }
+        acc
+    });
+    b.bench_with_elements("takum_linear::decode n=16", N as u64, || {
+        let mut acc = 0.0;
+        for i in 0..N as u64 {
+            acc += takum_linear::decode(i & 0xFFFF, 16);
+        }
+        acc
+    });
+    b.bench_with_elements("order_key (takum compare)", N as u64, || {
+        let mut acc = 0i64;
+        for i in 0..N as u64 {
+            acc = acc.wrapping_add(num::takum_linear::order_key(i & 0xFFFF, 16));
+        }
+        acc
+    });
+}

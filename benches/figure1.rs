@@ -1,0 +1,22 @@
+//! Bench + regeneration for **Figure 1** (E1): dynamic range vs
+//! bit-string length. `cargo bench --bench figure1` prints the figure's
+//! data table and times its computation.
+
+use takum_avx10::harness::figure1;
+use takum_avx10::util::bench::Bencher;
+
+fn main() {
+    println!("{}", figure1::render());
+
+    let mut b = Bencher::new();
+    b.group("figure1: dynamic range computation");
+    b.bench("dynamic_range_table (takum+posit n=2..64 + fixed)", figure1::dynamic_range_table);
+    b.bench("render", figure1::render);
+
+    // Sanity: the claims behind the figure.
+    let table = figure1::dynamic_range_table();
+    let takum = table.iter().find(|s| s.name == "linear takum").unwrap();
+    let d8 = takum.points.iter().find(|(n, _)| *n == 8).unwrap().1;
+    let d64 = takum.points.iter().find(|(n, _)| *n == 64).unwrap().1;
+    println!("\ntakum dynamic range: {d8:.1} decades at n=8 vs {d64:.1} at n=64 (near-constant)");
+}

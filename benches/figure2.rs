@@ -1,0 +1,39 @@
+//! Bench + regeneration for **Figure 2** (E2–E4): the conversion-error
+//! CDF panels. Times the end-to-end sweep (generator + codecs + dd norms +
+//! coordinator) per panel and prints the CDF tables.
+//!
+//! Full-collection run: `TAKUM_BENCH_FULL=1 cargo bench --bench figure2`
+//! (default uses a 300-matrix slice to keep bench wall time sane).
+
+use takum_avx10::coordinator::{sweep, SweepConfig};
+use takum_avx10::harness::figure2::{render_panel, run_panel};
+use takum_avx10::matrix::generator::CollectionSpec;
+use takum_avx10::util::bench::Bencher;
+
+fn main() {
+    let full = std::env::var("TAKUM_BENCH_FULL").is_ok();
+    let count = if full { 1401 } else { 300 };
+    let spec = CollectionSpec { count, ..Default::default() };
+
+    for bits in [8u32, 16, 32] {
+        let p = run_panel(spec, bits);
+        println!("{}", render_panel(&p));
+    }
+
+    let mut b = Bencher::new();
+    b.group(&format!("figure2 sweep ({count} matrices)"));
+    for bits in [8u32, 16, 32] {
+        b.bench_with_elements(&format!("sequential panel, {bits}-bit"), count as u64, || {
+            run_panel(spec, bits)
+        });
+    }
+    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    for bits in [8u32, 16, 32] {
+        let cfg = SweepConfig { spec, bits, workers, ..Default::default() };
+        b.bench_with_elements(
+            &format!("coordinator panel, {bits}-bit, {workers} workers"),
+            count as u64,
+            || sweep(&cfg, None).unwrap(),
+        );
+    }
+}

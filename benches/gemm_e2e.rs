@@ -1,0 +1,55 @@
+//! End-to-end GEMM bench (E11): the simulated takum pipeline vs the
+//! AVX10.2 baselines, and — when artifacts are present — the AOT-compiled
+//! Pallas quantised-GEMM kernel through PJRT.
+
+use takum_avx10::harness::gemm::gemm;
+use takum_avx10::runtime::{default_artifact_dir, PjrtService, TensorF64};
+use takum_avx10::util::bench::Bencher;
+use takum_avx10::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let n = 32usize;
+
+    b.group(&format!("simulated quantised GEMM, n={n} (instruction-accurate)"));
+    for f in ["t8", "t16", "bf16", "f16", "e4m3", "e5m2"] {
+        let r = gemm(n, f, 1, 1.0).unwrap();
+        println!(
+            "  {f:<6} rel.err={:.3e}  instructions={} (dp={}, cvt={})",
+            r.rel_error, r.executed, r.dp_instructions, r.convert_instructions
+        );
+        b.bench_with_elements(&format!("gemm {f}"), (n * n) as u64, || {
+            gemm(n, f, 1, 1.0).unwrap()
+        });
+    }
+
+    match PjrtService::start(&default_artifact_dir()) {
+        Ok(service) => {
+            b.group("PJRT quant_gemm_t8 artifact (128×128, AOT Pallas)");
+            let h = service.handle();
+            let dim = 128usize;
+            let mut rng = Rng::new(2);
+            let a: Vec<f64> = (0..dim * dim).map(|_| rng.log_normal(0.0, 1.0)).collect();
+            let bv: Vec<f64> = (0..dim * dim).map(|_| rng.log_normal(0.0, 1.0)).collect();
+            b.bench_with_elements("quant_gemm_t8 execute", (dim * dim) as u64, || {
+                h.run_f64(
+                    "quant_gemm_t8",
+                    vec![
+                        TensorF64::matrix(a.clone(), dim as i64, dim as i64),
+                        TensorF64::matrix(bv.clone(), dim as i64, dim as i64),
+                    ],
+                )
+                .unwrap()
+            });
+            b.group("PJRT takum round-trip artifacts (65536 values)");
+            let vals: Vec<f64> = (0..1 << 16).map(|_| rng.wide_f64(-40, 40)).collect();
+            for nbits in [8, 16, 32] {
+                let name = format!("takum{nbits}_roundtrip");
+                b.bench_with_elements(&name.clone(), 1 << 16, || {
+                    h.run_f64(&name, vec![TensorF64::vec(vals.clone())]).unwrap()
+                });
+            }
+        }
+        Err(e) => eprintln!("(skipping PJRT benches: {e:#})"),
+    }
+}

@@ -1,0 +1,77 @@
+//! Simulator dispatch/throughput bench (the L3 component behind E11):
+//! lanes-per-second for the core proposed instructions and the legacy
+//! baseline equivalents.
+
+use takum_avx10::sim::{Instruction, LaneType, Machine, Operand, VecReg};
+use takum_avx10::util::bench::Bencher;
+use takum_avx10::util::rng::Rng;
+
+fn main() {
+    let mut b = Bencher::new();
+    let mut m = Machine::new();
+    let mut r = Rng::new(7);
+
+    b.group("vector instruction throughput (lanes/s as elem/s)");
+    for (mn, ty) in [
+        ("VADDPT8", LaneType::Takum(8)),
+        ("VADDPT16", LaneType::Takum(16)),
+        ("VADDPT32", LaneType::Takum(32)),
+        ("VADDPT64", LaneType::Takum(64)),
+        ("VMULPT16", LaneType::Takum(16)),
+        ("VDIVPT16", LaneType::Takum(16)),
+        ("VADDNEPBF16", LaneType::Mini(takum_avx10::num::BF16)),
+        ("VADDPH", LaneType::Mini(takum_avx10::num::F16)),
+        ("VADDPS", LaneType::Mini(takum_avx10::num::F32)),
+    ] {
+        let lanes = VecReg::lanes(ty.width());
+        let vals: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-10, 10)).collect();
+        m.load_f64(0, ty, &vals);
+        m.load_f64(1, ty, &vals);
+        let ins = Instruction::new(mn, Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]);
+        b.bench_with_elements(mn, lanes as u64, || m.step(&ins).unwrap());
+    }
+
+    b.group("widening dot products");
+    for (mn, ty, wide) in [
+        ("VDPPT8PT16", LaneType::Takum(8), LaneType::Takum(16)),
+        ("VDPPT16PT32", LaneType::Takum(16), LaneType::Takum(32)),
+        ("VDPBF16PS", LaneType::Mini(takum_avx10::num::BF16), LaneType::Mini(takum_avx10::num::F32)),
+    ] {
+        let lanes = VecReg::lanes(ty.width());
+        let vals: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-4, 4)).collect();
+        m.load_f64(0, ty, &vals);
+        m.load_f64(1, ty, &vals);
+        m.load_f64(2, wide, &vec![0.0; VecReg::lanes(wide.width())]);
+        let ins = Instruction::new(mn, Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]);
+        b.bench_with_elements(mn, lanes as u64, || m.step(&ins).unwrap());
+    }
+
+    b.group("compares: takum int-compare vs IEEE value-compare");
+    for (mn, ty) in [
+        ("VCMPPT16", LaneType::Takum(16)),
+        ("VCMPPH", LaneType::Mini(takum_avx10::num::F16)),
+    ] {
+        let lanes = VecReg::lanes(16);
+        let vals: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-10, 10)).collect();
+        m.load_f64(0, ty, &vals);
+        m.load_f64(1, ty, &vals);
+        let ins = Instruction::new(
+            mn,
+            Operand::Kreg(1),
+            vec![Operand::Vreg(0), Operand::Vreg(1), Operand::Imm(1)],
+        );
+        b.bench_with_elements(mn, lanes as u64, || m.step(&ins).unwrap());
+    }
+
+    b.group("masking overhead");
+    let t = LaneType::Takum(16);
+    let lanes = VecReg::lanes(16);
+    let vals: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-10, 10)).collect();
+    m.load_f64(0, t, &vals);
+    m.load_f64(1, t, &vals);
+    m.set_mask(1, 0x5555_5555);
+    let plain = Instruction::new("VADDPT16", Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]);
+    let masked = plain.clone().with_mask(1, true);
+    b.bench_with_elements("VADDPT16 unmasked", lanes as u64, || m.step(&plain).unwrap());
+    b.bench_with_elements("VADDPT16 {k1}{z}", lanes as u64, || m.step(&masked).unwrap());
+}

@@ -1,0 +1,33 @@
+//! Bench + regeneration for **Tables I–V** (E5–E10): the AVX10.2 →
+//! proposed-ISA streamlining. Prints the summary and times the pipeline
+//! stages (pattern expansion, transformation, rendering).
+
+use takum_avx10::harness::tables::regenerate;
+use takum_avx10::isa::database::{Category, GROUPS};
+use takum_avx10::isa::pattern::Pattern;
+use takum_avx10::isa::report;
+use takum_avx10::isa::transform::transform_stats;
+use takum_avx10::util::bench::Bencher;
+
+fn main() {
+    let artifacts = regenerate();
+    println!("{}", artifacts.summary);
+
+    let mut b = Bencher::new();
+    b.group("tables: ISA model pipeline");
+    b.bench("parse+expand all 36 group patterns", || {
+        GROUPS
+            .iter()
+            .flat_map(|g| g.avx_patterns.iter())
+            .map(|p| Pattern::parse(p).unwrap().expand().len())
+            .sum::<usize>()
+    });
+    b.bench("transform_stats (rename all 769 mnemonics + verify)", transform_stats);
+    for cat in Category::ALL {
+        b.bench(&format!("render table: {}", cat.name()), move || {
+            report::render_category_table(cat)
+        });
+    }
+    b.bench("render_summary (full evaluation)", report::render_summary);
+    b.bench("render_tsv", report::render_tsv);
+}

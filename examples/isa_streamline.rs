@@ -1,0 +1,45 @@
+//! Regenerate the paper's Tables I–V and the §IV evaluation summary
+//! (experiments E5–E10).
+//!
+//! ```sh
+//! cargo run --release --example isa_streamline
+//! ```
+
+use takum_avx10::isa::database::{groups, Category};
+use takum_avx10::isa::report;
+use takum_avx10::isa::transform::{map_instruction, Mapping};
+
+fn main() {
+    for cat in Category::ALL {
+        println!("{}", report::render_category_table(cat));
+    }
+    println!("{}", report::render_summary());
+
+    // A few concrete rename examples, mechanically derived:
+    println!("example renames (method 2+3 of §III):");
+    for (m, g) in [
+        ("VADDNEPBF16", "F01"),
+        ("VGETEXPPH", "F03"),
+        ("VCVTPH2UW", "F07"),
+        ("VCVTBIASPH2BF8", "F07"),
+        ("VPMOVUSQB", "I08"),
+        ("KORTESTW", "M01"),
+        ("VPGATHERDQ", "B01"),
+    ] {
+        match map_instruction(m, g) {
+            Mapping::To(t) => println!("  {m:<16} → {t}"),
+            Mapping::Removed(r) => println!("  {m:<16} → (removed: {})", &r[..40.min(r.len())]),
+        }
+    }
+
+    // Totals per legacy group for reference.
+    println!("\nper-group sizes:");
+    for g in groups() {
+        println!(
+            "  {}  {:>3} instructions  ({})",
+            g.spec.id,
+            g.avx_instructions.len(),
+            g.spec.note
+        );
+    }
+}

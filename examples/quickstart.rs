@@ -1,0 +1,71 @@
+//! Quickstart: a tour of the takum-avx10 public API.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use takum_avx10::num::{self, format_by_name, takum, takum_linear};
+
+fn main() {
+    // --- 1. Encode/decode any width ------------------------------------
+    println!("== linear takum, any width ==");
+    for n in [8u32, 12, 16, 32] {
+        let bits = takum_linear::encode(std::f64::consts::PI, n);
+        let back = takum_linear::decode(bits, n);
+        println!(
+            "π as takum{n:<2}  bits={bits:#010x}  value={back:.10}  rel.err={:.2e}",
+            (back - std::f64::consts::PI).abs() / std::f64::consts::PI
+        );
+    }
+
+    // --- 2. The format registry (all Figure 2 formats) -----------------
+    println!("\n== registry ==");
+    for name in ["takum8", "posit8", "e4m3", "e5m2", "float16", "bfloat16"] {
+        let f = format_by_name(name).unwrap();
+        println!(
+            "{:<9} {:>2} bits  min={:.3e}  max={:.3e}  ({:.1} decades)",
+            f.name(),
+            f.bits(),
+            f.min_positive(),
+            f.max_finite(),
+            f.dynamic_range_decades()
+        );
+    }
+
+    // --- 3. Takum structural properties ---------------------------------
+    println!("\n== takum structural properties ==");
+    let x = 2.75f64;
+    let b = takum_linear::encode(x, 16);
+    let nb = takum_linear::encode(-x, 16);
+    println!("negation is two's complement: enc({x})={b:#06x} enc({}) ={nb:#06x}", -x);
+    assert_eq!(nb, (b.wrapping_neg()) & 0xFFFF);
+
+    let small = takum_linear::encode(1.0, 16);
+    let big = takum_linear::encode(1000.0, 16);
+    println!(
+        "comparison = signed-integer comparison: key(1.0)={} < key(1000.0)={}",
+        takum_linear::order_key(small, 16),
+        takum_linear::order_key(big, 16)
+    );
+
+    // saturation: takums never overflow to NaR
+    assert_eq!(takum_linear::encode(1e300, 8), 0x7F);
+    println!("saturation: 1e300 as takum8 = {:#04x} (max pos), never NaR", 0x7Fu8);
+
+    // --- 4. Logarithmic takums: exact ℓ-domain multiplication ----------
+    println!("\n== logarithmic takum ℓ-domain arithmetic ==");
+    let a = takum::encode(3.0, 16);
+    let (sa, la) = takum::log_fixed(a, 16).unwrap();
+    let sq = takum::encode_from_log_fixed(sa, la * 2, 16);
+    println!("3.0² via exact ℓ-doubling = {}", takum::decode(sq, 16));
+
+    // --- 5. Double-double accumulation (the float128 stand-in) ---------
+    println!("\n== double-double ==");
+    let mut acc = num::Dd::ZERO;
+    for _ in 0..1_000_000 {
+        acc = acc.add_sq_f64(1e-8);
+    }
+    println!("Σ (1e-8)² ×1e6 = {:.6e} (f64 naive would lose precision)", acc.to_f64());
+
+    println!("\nok");
+}

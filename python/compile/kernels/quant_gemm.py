@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: takum-quantised GEMM — the `VDPPT8PT16` pipeline as a
+TPU-style tiled kernel.
+
+Pipeline per grid step (modelled on the proposed widening dot-product
+instruction): stage a takum8-quantised A-tile and B-tile into VMEM,
+decode in-register, feed the MXU-shaped `jnp.dot` in f32-like precision
+(f64 here, exact for the short dot products involved), and re-quantise
+the accumulator tile to takum16 — encode/decode never leave the kernel.
+
+Block choice (see DESIGN.md §8): TILE_M×TILE_K = 64×64 per operand; with
+f64 staging this is 2×32 KiB decoded + 32 KiB accumulator per step,
+comfortably double-bufferable in a 16 MiB VMEM. On real hardware the
+decoded operands would be bf16 feeding the MXU; interpret=True keeps the
+numerics identical on CPU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE = 64
+
+
+def _gemm_kernel(a_ref, b_ref, o_ref, *, n_in: int, n_acc: int):
+    k_step = pl.program_id(2)
+
+    a = ref.takum_roundtrip(a_ref[...].reshape(-1), n_in).reshape(a_ref.shape)
+    b = ref.takum_roundtrip(b_ref[...].reshape(-1), n_in).reshape(b_ref.shape)
+    partial_sum = a @ b
+
+    @pl.when(k_step == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    acc = o_ref[...] + partial_sum
+    # Accumulator re-quantisation: the widening dot product writes takum
+    # lanes of width n_acc.
+    o_ref[...] = ref.takum_roundtrip(acc.reshape(-1), n_acc).reshape(acc.shape)
+
+
+def quant_gemm(a, b, n_in: int = 8, n_acc: int = 16):
+    """C = quantise(A)·quantise(B) with takum{n_acc} accumulators.
+
+    Shapes must be multiples of TILE on every dimension.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2 and m % TILE == 0 and k % TILE == 0 and n % TILE == 0
+
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, n_in=n_in, n_acc=n_acc),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float64),
+        grid=(m // TILE, n // TILE, k // TILE),
+        in_specs=[
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE, TILE), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE, TILE), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(a, b)

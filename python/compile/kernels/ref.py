@@ -1,0 +1,131 @@
+"""Pure-jnp oracle for the linear-takum codec.
+
+This mirrors, bit for bit, the rust implementation in
+``rust/src/num/takum_linear.rs``: the encoder builds the exact extended
+bit string ``S | D | RRR | C(r) | frac52`` in a uint64 (the takum header
+is at most 12 bits, so header+52 fraction bits always fit) and rounds
+once — round-to-nearest, ties-to-even on the bit string, saturating to
+``[1, 2^(n-1) - 1]``. Negative values are two's complements.
+
+The Pallas kernels in ``takum_codec.py`` are validated against these
+functions by ``python/tests``; the rust side re-validates the compiled
+artifacts against its native codec, closing the L1↔L3 loop.
+"""
+
+import jax.numpy as jnp
+from jax import lax
+
+# Plain-int constants: Pallas kernels must not close over device arrays,
+# and Python ints fold into the trace as literals.
+MASK52 = (1 << 52) - 1
+
+
+def _mask(n: int) -> int:
+    return (1 << n) - 1
+
+
+def takum_encode(x, n: int):
+    """Encode f64 array -> n-bit linear takum bit patterns (uint64)."""
+    assert 2 <= n <= 56, "kernel supports n <= 56 (drop > 0 everywhere)"
+    x = jnp.asarray(x, jnp.float64)
+    bits = lax.bitcast_convert_type(x, jnp.uint64)
+    sign = (bits >> 63).astype(jnp.bool_)
+    mag = bits & 0x7FFF_FFFF_FFFF_FFFF
+
+    is_zero = x == 0.0
+    nonfinite = ~jnp.isfinite(x)
+
+    raw_e = (mag >> 52).astype(jnp.int64)
+    frac = mag & MASK52
+    # Subnormal f64 inputs (raw_e == 0) are far below takum's minpos
+    # (2^-1022 << 2^-255): the e = -1023 they get here saturates correctly.
+    e = raw_e - 1023
+
+    # Saturate the characteristic into the takum envelope.
+    over = e > 254
+    under = e < -255
+    c = jnp.clip(e, -255, 254)
+    frac52 = jnp.where(over, jnp.uint64(MASK52), jnp.where(under, jnp.uint64(0), frac))
+
+    # r = floor(log2(v)) for v in [1, 256] via exact integer comparisons.
+    d = c >= 0
+    v = jnp.where(d, c + 1, -c)
+    r = jnp.zeros_like(c)
+    for k in range(1, 8):
+        r = r + (v >= (1 << k)).astype(c.dtype)
+
+    c_field = jnp.where(d, c - ((1 << r) - 1), c + (1 << (r + 1)) - 1).astype(jnp.uint64)
+    big_r = jnp.where(d, r, 7 - r).astype(jnp.uint64)
+    header = (d.astype(jnp.uint64) << 3) | big_r
+
+    ru = r.astype(jnp.uint64)
+    ext = (header << (ru + 52)) | (c_field << 52) | frac52
+    ext_bits = ru + 57  # 5 + r + 52, including the sign bit 0
+    drop = ext_bits - n  # >= 57 - n > 0 for n <= 56
+
+    one = jnp.uint64(1)
+    keep = ext >> drop
+    rem = ext & ((one << drop) - 1)
+    half = one << (drop - 1)
+    round_up = (rem > half) | ((rem == half) & ((keep & 1) == 1))
+    keep = keep + round_up.astype(jnp.uint64)
+    # Saturate: never to zero, never into the NaR/negative half.
+    keep = jnp.clip(keep, jnp.uint64(1), jnp.uint64(_mask(n - 1)))
+
+    neg = (~keep + 1) & _mask(n)
+    out = jnp.where(sign, neg, keep)
+    out = jnp.where(is_zero, jnp.uint64(0), out)
+    out = jnp.where(nonfinite, jnp.uint64(1 << (n - 1)), out)
+    return out
+
+
+def takum_decode(bits, n: int):
+    """Decode n-bit linear takum patterns (uint64) -> f64."""
+    assert 2 <= n <= 56
+    bits = jnp.asarray(bits, jnp.uint64) & _mask(n)
+    is_zero = bits == 0
+    is_nar = bits == (1 << (n - 1))
+    sign = (bits >> (n - 1)) & 1
+    pos = jnp.where(sign == 1, (~bits + 1) & _mask(n), bits)
+
+    p = max(n, 12)
+    b = pos << (p - n)
+    d = (b >> (p - 2)) & 1
+    big_r = ((b >> (p - 5)) & 7).astype(jnp.int64)
+    r = jnp.where(d == 1, big_r, 7 - big_r)
+    m = (p - 5) - r
+    mu = m.astype(jnp.uint64)
+    one = jnp.uint64(1)
+    c_field = ((b >> mu) & ((one << r.astype(jnp.uint64)) - 1)).astype(jnp.int64)
+    c = jnp.where(d == 1, (1 << r) - 1 + c_field, -(1 << (r + 1)) + 1 + c_field)
+    man = b & ((one << mu) - 1)
+
+    # Assemble the f64 directly: c in [-255, 254] is always a normal f64
+    # exponent; m <= p - 5 <= 52 for n <= 56 (after zero-padding p >= 12).
+    val_bits = ((c + 1023).astype(jnp.uint64) << 52) | (man << (52 - mu))
+    val = lax.bitcast_convert_type(val_bits, jnp.float64)
+    val = jnp.where(sign == 1, -val, val)
+    val = jnp.where(is_zero, 0.0, val)
+    return jnp.where(is_nar, jnp.float64(jnp.nan), val)
+
+
+def takum_roundtrip(x, n: int):
+    """Round-trip f64 values through n-bit linear takum."""
+    return takum_decode(takum_encode(x, n), n)
+
+
+def quant_gemm(a, b, n_in: int = 8, n_acc: int = 16, k_chunk: int = 2):
+    """Reference for the takum-quantised GEMM: quantise A and B to
+    ``takum{n_in}``, multiply in f64, and re-quantise the running
+    accumulator to ``takum{n_acc}`` after every ``k_chunk`` columns.
+    ``k_chunk=2`` is the per-instruction `VDPPT8PT16` semantics;
+    ``k_chunk=TILE`` matches the Pallas kernel's per-tile re-quantisation.
+    """
+    aq = takum_roundtrip(a.reshape(-1), n_in).reshape(a.shape)
+    bq = takum_roundtrip(b.reshape(-1), n_in).reshape(b.shape)
+    k = a.shape[1]
+    acc = jnp.zeros((a.shape[0], b.shape[1]), jnp.float64)
+    for kk in range(0, k, k_chunk):
+        part = aq[:, kk : kk + k_chunk] @ bq[kk : kk + k_chunk, :]
+        acc = takum_roundtrip((acc + part).reshape(-1), n_acc).reshape(acc.shape)
+    return acc

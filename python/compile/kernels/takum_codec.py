@@ -1,0 +1,76 @@
+"""L1 Pallas kernels: vectorised linear-takum codec.
+
+The paper's compute hot-spot is per-lane format conversion (the F07
+conversion matrix and the round-trip behind Figure 2). The kernel is pure
+integer bit manipulation over VMEM tiles — on a real TPU this is VPU work
+with lanes of int32/int64; here it is lowered with ``interpret=True`` so
+the CPU PJRT client (and the rust runtime) can execute the identical HLO.
+
+Hardware adaptation (DESIGN.md §3): the AVX 512-bit register maps to a
+VMEM tile; the takum "common decoder reads at most 12 header bits"
+property appears as the fixed 7-step exact `floor(log2)` ladder and
+constant-width field extractions, identical for every precision n.
+
+TPU tiling: `BLOCK` of 8×128 f64 lanes = 8 KiB per operand tile in VMEM;
+encode+decode are fused in one kernel so the bits never travel back to
+HBM (the round-trip artifact used by the Figure 2 sweep).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+# 2-D tile; the flat roundtrip entry reshapes into (rows of 128 lanes).
+BLOCK_ROWS = 8
+BLOCK_COLS = 128
+BLOCK = BLOCK_ROWS * BLOCK_COLS
+
+
+def _roundtrip_kernel(x_ref, o_ref, *, n: int):
+    x = x_ref[...]
+    bits = ref.takum_encode(x, n)
+    o_ref[...] = ref.takum_decode(bits, n)
+
+
+def _encode_kernel(x_ref, o_ref, *, n: int):
+    o_ref[...] = ref.takum_encode(x_ref[...], n)
+
+
+def _decode_kernel(b_ref, o_ref, *, n: int):
+    o_ref[...] = ref.takum_decode(b_ref[...], n)
+
+
+def _grid_call(kernel, x, out_dtype, n: int):
+    """Tile a flat array into (rows, BLOCK_COLS) blocks and run the kernel
+    over a 1-D grid. Length must be a multiple of BLOCK."""
+    assert x.ndim == 1 and x.shape[0] % BLOCK == 0, x.shape
+    rows = x.shape[0] // BLOCK_COLS
+    x2 = x.reshape(rows, BLOCK_COLS)
+    out = pl.pallas_call(
+        functools.partial(kernel, n=n),
+        out_shape=jax.ShapeDtypeStruct((rows, BLOCK_COLS), out_dtype),
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, BLOCK_COLS), lambda i: (i, 0)),
+        interpret=True,  # CPU-PJRT execution; Mosaic lowering is TPU-only
+    )(x2)
+    return out.reshape(-1)
+
+
+def takum_roundtrip(x, n: int):
+    """f64[N] -> f64[N], N % 1024 == 0: decode(encode(x)) in one kernel."""
+    return _grid_call(_roundtrip_kernel, x, jnp.float64, n)
+
+
+def takum_encode(x, n: int):
+    """f64[N] -> uint64[N] bit patterns."""
+    return _grid_call(_encode_kernel, x, jnp.uint64, n)
+
+
+def takum_decode(bits, n: int):
+    """uint64[N] -> f64[N]."""
+    return _grid_call(_decode_kernel, bits, jnp.float64, n)

@@ -1,0 +1,67 @@
+"""L2: the JAX computations that get AOT-compiled for the rust runtime.
+
+Two computation families, both calling the L1 Pallas kernels:
+
+* ``takum_roundtrip_fn(n)`` — the Figure 2 conversion hot path: round-trip
+  a fixed-size batch of f64 values through the n-bit linear takum codec.
+  The rust coordinator streams matrix values through this executable in
+  `--engine pjrt` mode.
+* ``quant_gemm_fn()`` — the `VDPPT8PT16` widening-dot-product GEMM on a
+  fixed 128×128 problem (takum8 inputs, takum16 accumulators).
+
+Everything is shaped statically (PJRT AOT requires it); the rust side pads
+its batches. f64 throughout: the conversion-error measurement needs more
+precision than f32 carries (takum32 round-trip errors are ~1e-11).
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .kernels import quant_gemm as qg  # noqa: E402
+from .kernels import takum_codec  # noqa: E402
+
+# Batch size of the round-trip executable (must match
+# `SweepConfig::pjrt_batch` on the rust side).
+ROUNDTRIP_BATCH = 1 << 16
+
+# GEMM problem shape.
+GEMM_DIM = 128
+
+
+def takum_roundtrip_fn(n: int):
+    """Return the jittable round-trip computation for width n."""
+
+    def fn(x):
+        return (takum_codec.takum_roundtrip(x, n),)
+
+    return fn
+
+
+def roundtrip_example_args():
+    return (jax.ShapeDtypeStruct((ROUNDTRIP_BATCH,), jnp.float64),)
+
+
+def quant_gemm_fn(n_in: int = 8, n_acc: int = 16):
+    """Return the jittable quantised-GEMM computation."""
+
+    def fn(a, b):
+        return (qg.quant_gemm(a, b, n_in=n_in, n_acc=n_acc),)
+
+    return fn
+
+
+def gemm_example_args():
+    spec = jax.ShapeDtypeStruct((GEMM_DIM, GEMM_DIM), jnp.float64)
+    return (spec, spec)
+
+
+#: All artifacts built by `make artifacts`: name -> (fn, example args).
+ARTIFACTS = {
+    "takum8_roundtrip": (takum_roundtrip_fn(8), roundtrip_example_args()),
+    "takum16_roundtrip": (takum_roundtrip_fn(16), roundtrip_example_args()),
+    "takum32_roundtrip": (takum_roundtrip_fn(32), roundtrip_example_args()),
+    "quant_gemm_t8": (quant_gemm_fn(8, 16), gemm_example_args()),
+}

@@ -1,0 +1,101 @@
+"""Pallas kernels vs the pure-jnp oracle — the core L1 correctness signal.
+
+The kernels run under interpret=True (the same lowering the AOT artifacts
+use), so agreement here transfers directly to what the rust runtime
+executes."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import quant_gemm as qg
+from compile.kernels import ref, takum_codec
+
+
+def _batch(values):
+    """Pad a value list to one kernel block."""
+    x = np.zeros(takum_codec.BLOCK, dtype=np.float64)
+    x[: len(values)] = values
+    return jnp.asarray(x)
+
+
+SPECIALS = [0.0, 1.0, -1.0, 1.5, -0.75, 2.0**100, -(2.0**-100), 448.0, 1e300, -1e-300,
+            float("inf"), float("-inf"), float("nan"), 3.75, -123.25, 2.0**-1074]
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_roundtrip_kernel_matches_ref(n):
+    rng = np.random.default_rng(42)
+    vals = np.concatenate(
+        [
+            np.array(SPECIALS),
+            rng.lognormal(0, 30, 400) * rng.choice([-1, 1], 400),
+            rng.normal(0, 1, 400),
+        ]
+    )
+    x = _batch(list(vals))
+    got = np.asarray(takum_codec.takum_roundtrip(x, n))
+    want = np.asarray(ref.takum_roundtrip(x, n))
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("n", [8, 16, 32])
+def test_encode_decode_kernels_match_ref(n):
+    rng = np.random.default_rng(7)
+    x = _batch(list(rng.lognormal(0, 20, 900) * rng.choice([-1, 1], 900)))
+    got_bits = np.asarray(takum_codec.takum_encode(x, n))
+    want_bits = np.asarray(ref.takum_encode(x, n))
+    np.testing.assert_array_equal(got_bits, want_bits)
+    got_vals = np.asarray(takum_codec.takum_decode(jnp.asarray(got_bits), n))
+    want_vals = np.asarray(ref.takum_decode(jnp.asarray(want_bits), n))
+    np.testing.assert_array_equal(got_vals, want_vals)
+
+
+def test_multi_block_grid():
+    # 4 blocks: the grid/BlockSpec tiling must not permute values.
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(0, 100, 4 * takum_codec.BLOCK))
+    got = np.asarray(takum_codec.takum_roundtrip(x, 16))
+    want = np.asarray(ref.takum_roundtrip(x, 16))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**32 - 1),
+    n=st.sampled_from([8, 16, 32]),
+    scale=st.floats(min_value=-60, max_value=60),
+)
+def test_prop_kernel_equals_ref_random_batches(seed, n, scale):
+    rng = np.random.default_rng(seed)
+    x = _batch(list(rng.normal(0, 1, 1000) * 10.0**scale))
+    got = np.asarray(takum_codec.takum_roundtrip(x, n))
+    want = np.asarray(ref.takum_roundtrip(x, n))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_gemm_kernel_matches_tiled_reference():
+    rng = np.random.default_rng(11)
+    m = qg.TILE
+    a = jnp.asarray(rng.lognormal(0, 1, (m, 2 * m)) * rng.choice([-1, 1], (m, 2 * m)))
+    b = jnp.asarray(rng.lognormal(0, 1, (2 * m, m)) * rng.choice([-1, 1], (2 * m, m)))
+    got = np.asarray(qg.quant_gemm(a, b, 8, 16))
+    want = np.asarray(ref.quant_gemm(a, b, 8, 16, k_chunk=qg.TILE))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_gemm_kernel_accuracy_sane():
+    rng = np.random.default_rng(13)
+    m = qg.TILE
+    a = jnp.asarray(rng.lognormal(0, 1, (m, m)))
+    b = jnp.asarray(rng.lognormal(0, 1, (m, m)))
+    got = np.asarray(qg.quant_gemm(a, b, 8, 16))
+    exact = np.asarray(a) @ np.asarray(b)
+    rel = np.linalg.norm(got - exact) / np.linalg.norm(exact)
+    assert 0 < rel < 0.2, rel

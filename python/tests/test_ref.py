@@ -1,0 +1,135 @@
+"""Oracle self-tests: the pure-jnp codec against first-principles takum
+properties (mirroring the rust unit tests, so L1 and L3 provably agree on
+the same spec)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ref
+
+
+def enc1(x, n):
+    return int(ref.takum_encode(jnp.array([x], jnp.float64), n)[0])
+
+
+def dec1(b, n):
+    return float(ref.takum_decode(jnp.array([b], jnp.uint64), n)[0])
+
+
+@pytest.mark.parametrize("n", [8, 12, 16, 32, 48])
+def test_zero_and_nar(n):
+    assert enc1(0.0, n) == 0
+    assert dec1(0, n) == 0.0
+    assert enc1(float("nan"), n) == 1 << (n - 1)
+    assert enc1(float("inf"), n) == 1 << (n - 1)
+    assert np.isnan(dec1(1 << (n - 1), n))
+
+
+@pytest.mark.parametrize("n", [8, 12, 16, 32])
+def test_one_and_known_values(n):
+    assert enc1(1.0, n) == 0b01 << (n - 2)
+    assert dec1(0b01 << (n - 2), n) == 1.0
+
+
+def test_known_12bit_patterns():
+    assert enc1(1.5, 12) == 0b0_1_000_1000000
+    assert enc1(0.75, 12) == 0b0_0_111_1000000
+    assert dec1(0b0_1_000_1000000, 12) == 1.5
+
+
+@pytest.mark.parametrize("n", [8, 12, 16, 32])
+def test_saturation_not_nar_not_zero(n):
+    assert enc1(1e300, n) == (1 << (n - 1)) - 1
+    assert enc1(1e-300, n) == 1
+    assert enc1(-1e300, n) == (1 << (n - 1)) + 1
+    assert enc1(-1e-300, n) == (1 << n) - 1
+
+
+def test_negation_is_twos_complement_exhaustive_8bit():
+    bits = jnp.arange(256, dtype=jnp.uint64)
+    vals = ref.takum_decode(bits, 8)
+    neg_bits = (~bits + jnp.uint64(1)) & jnp.uint64(0xFF)
+    neg_vals = ref.takum_decode(neg_bits, 8)
+    v = np.asarray(vals)
+    nv = np.asarray(neg_vals)
+    mask = ~np.isnan(v)
+    np.testing.assert_array_equal(nv[mask], -v[mask])
+
+
+def test_roundtrip_idempotent_exhaustive_16bit():
+    bits = jnp.arange(1 << 16, dtype=jnp.uint64)
+    nar = 1 << 15
+    vals = ref.takum_decode(bits, 16)
+    back = ref.takum_encode(jnp.where(jnp.isnan(vals), 0.0, vals), 16)
+    b = np.asarray(bits)
+    bk = np.asarray(back)
+    mask = b != nar
+    np.testing.assert_array_equal(bk[mask], b[mask])
+
+
+def test_monotone_exhaustive_8bit():
+    # signed-int order of encodings == value order
+    ks = np.arange(-127, 128)
+    vals = np.asarray(ref.takum_decode(jnp.array(ks % 256, jnp.uint64), 8))
+    assert np.all(np.diff(vals) > 0)
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    x=st.floats(
+        allow_nan=False,
+        allow_infinity=False,
+        min_value=-1e60,
+        max_value=1e60,
+    ),
+    n=st.sampled_from([8, 12, 16, 24, 32, 40]),
+)
+def test_prop_decode_encode_idempotent(x, n):
+    b = enc1(x, n)
+    v = dec1(b, n)
+    if np.isnan(v):
+        return
+    assert enc1(v, n) == b
+
+
+@settings(max_examples=300, deadline=None)
+@given(
+    x=st.floats(allow_nan=False, allow_infinity=False, min_value=1e-30, max_value=1e30),
+    n=st.sampled_from([8, 16, 32]),
+)
+def test_prop_rounds_to_bracketing_neighbour(x, n):
+    b = enc1(x, n)
+    v = dec1(b, n)
+    up = dec1((b + 1) & ((1 << n) - 1), n)
+    dn = dec1((b - 1) & ((1 << n) - 1), n)
+    assert dn <= x <= up or v == x
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    x=st.floats(allow_nan=False, allow_infinity=False, min_value=-1e30, max_value=1e30),
+)
+def test_prop_wider_is_more_accurate(x):
+    if x == 0:
+        return
+    errs = []
+    for n in (8, 16, 32):
+        v = dec1(enc1(x, n), n)
+        errs.append(abs(v - x) / abs(x))
+    assert errs[0] >= errs[1] >= errs[2]
+
+
+def test_quant_gemm_reference_shapes_and_exactness():
+    # Powers of two are exact in every takum width: a power-of-two GEMM
+    # with small exact accumulations must be exact end to end.
+    a = jnp.full((4, 4), 2.0, jnp.float64)
+    b = jnp.eye(4, dtype=jnp.float64) * 0.5
+    c = ref.quant_gemm(a, b, 8, 16, k_chunk=2)
+    np.testing.assert_array_equal(np.asarray(c), np.full((4, 4), 1.0))

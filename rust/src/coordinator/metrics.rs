@@ -1,0 +1,70 @@
+//! Sweep metrics: throughput and distribution of work across the pool.
+
+use std::time::Duration;
+
+#[derive(Debug, Clone, Default)]
+pub struct SweepMetrics {
+    pub matrices: usize,
+    pub values: u64,
+    pub conversions: u64,
+    pub wall: Duration,
+    /// Matrices processed per worker (load-balance check).
+    pub per_worker: Vec<usize>,
+    /// Batched PJRT calls issued (0 for the native engine).
+    pub pjrt_calls: u64,
+}
+
+impl SweepMetrics {
+    pub fn matrices_per_sec(&self) -> f64 {
+        self.matrices as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn conversions_per_sec(&self) -> f64 {
+        self.conversions as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "sweep: {} matrices, {} values, {} conversions in {:.2?} \
+             ({:.0} matrices/s, {:.2} Mconv/s)\n",
+            self.matrices,
+            self.values,
+            self.conversions,
+            self.wall,
+            self.matrices_per_sec(),
+            self.conversions_per_sec() / 1e6,
+        ));
+        if !self.per_worker.is_empty() {
+            let min = self.per_worker.iter().min().unwrap();
+            let max = self.per_worker.iter().max().unwrap();
+            s.push_str(&format!(
+                "workers: {} (per-worker matrices min {min} / max {max})\n",
+                self.per_worker.len()
+            ));
+        }
+        if self.pjrt_calls > 0 {
+            s.push_str(&format!("pjrt batch calls: {}\n", self.pjrt_calls));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rates() {
+        let m = SweepMetrics {
+            matrices: 100,
+            values: 1000,
+            conversions: 4000, // values × formats
+            wall: Duration::from_secs(2),
+            per_worker: vec![50, 50],
+            pjrt_calls: 0,
+        };
+        assert!((m.matrices_per_sec() - 50.0).abs() < 1e-9);
+        assert!(m.render().contains("100 matrices"));
+    }
+}

@@ -1,0 +1,15 @@
+//! The L3 coordinator: drives the 1,401-matrix conversion sweep across a
+//! worker pool with bounded work queues, merges per-format error
+//! distributions, and (optionally) routes the takum round-trips through
+//! the AOT-compiled PJRT kernels instead of the native codecs.
+//!
+//! The offline image carries no `tokio`, so the pool is built on scoped
+//! std threads and `mpsc` channels — same architecture (leader distributes
+//! index ranges, workers stream results back, a merger folds them) without
+//! the async runtime.
+
+pub mod metrics;
+pub mod sweep;
+
+pub use metrics::SweepMetrics;
+pub use sweep::{sweep, Engine, SweepConfig};

@@ -1,0 +1,253 @@
+//! Parallel Figure 2 sweep.
+//!
+//! Work distribution: an atomic index counter hands out matrix indices;
+//! each worker regenerates its matrices locally from the collection seed
+//! (no matrix ever crosses a thread boundary), converts the value vector
+//! through every panel format, and streams `(format, error)` records to
+//! the merger through a bounded channel (backpressure: workers block when
+//! the merger lags).
+//!
+//! Engines:
+//! * [`Engine::Native`] — rust codecs ([`crate::num`]) for every format.
+//! * [`Engine::Pjrt`] — takum round-trips go through the AOT-compiled
+//!   Pallas kernel artifacts via [`crate::runtime::PjrtService`] in
+//!   fixed-size batches; other formats stay native. Numerically identical
+//!   to Native (asserted by integration tests).
+
+use super::metrics::SweepMetrics;
+use crate::harness::figure2::{FormatCdf, PanelResult};
+use crate::matrix::generator::{self, CollectionSpec};
+use crate::matrix::norms::{relative_error, relative_error_from_roundtrip, ConversionError};
+use crate::num::{formats_at_width, FormatRef};
+use crate::runtime::{PjrtHandle, TensorF64};
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// Conversion engine for the takum formats of the panel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Engine {
+    Native,
+    Pjrt,
+}
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    pub spec: CollectionSpec,
+    pub bits: u32,
+    pub workers: usize,
+    pub engine: Engine,
+    /// Batch size (values) per PJRT call; must match the artifact's
+    /// static input shape.
+    pub pjrt_batch: usize,
+}
+
+impl Default for SweepConfig {
+    fn default() -> Self {
+        SweepConfig {
+            spec: CollectionSpec::default(),
+            bits: 8,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            engine: Engine::Native,
+            pjrt_batch: 1 << 16,
+        }
+    }
+}
+
+struct Record {
+    format_idx: usize,
+    error: ConversionError,
+}
+
+/// Run the sweep; returns the panel plus metrics.
+pub fn sweep(cfg: &SweepConfig, pjrt: Option<&PjrtHandle>) -> Result<(PanelResult, SweepMetrics)> {
+    let formats = formats_at_width(cfg.bits);
+    anyhow::ensure!(!formats.is_empty(), "no Figure 2 panel at {} bits", cfg.bits);
+    if cfg.engine == Engine::Pjrt {
+        anyhow::ensure!(pjrt.is_some(), "PJRT engine requested but no service handle given");
+    }
+
+    let start = Instant::now();
+    let next = AtomicUsize::new(0);
+    let pjrt_calls = std::sync::atomic::AtomicU64::new(0);
+    let values_total = std::sync::atomic::AtomicU64::new(0);
+    // Bounded fan-in: keep the merger at most ~4k records behind.
+    let (tx, rx) = mpsc::sync_channel::<Record>(4096);
+
+    let workers = cfg.workers.max(1);
+    let mut errs: Vec<Vec<f64>> = vec![Vec::with_capacity(cfg.spec.count); formats.len()];
+    let mut exceeded = vec![0usize; formats.len()];
+    let mut per_worker = vec![0usize; workers];
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let formats = formats.clone();
+            let next = &next;
+            let cfg2 = cfg.clone();
+            let pjrt = pjrt.cloned();
+            let pjrt_calls = &pjrt_calls;
+            let values_total = &values_total;
+            handles.push(s.spawn(move || {
+                let mut local = 0usize;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= cfg2.spec.count {
+                        break;
+                    }
+                    let g = generator::generate(cfg2.spec.seed, i);
+                    values_total.fetch_add(g.coo.values.len() as u64, Ordering::Relaxed);
+                    for (fi, f) in formats.iter().enumerate() {
+                        let err = convert_one(&cfg2, f, &g.coo.values, pjrt.as_ref(), pjrt_calls);
+                        if tx.send(Record { format_idx: fi, error: err }).is_err() {
+                            return local;
+                        }
+                    }
+                    local += 1;
+                }
+                local
+            }));
+        }
+        drop(tx);
+
+        // Merge on this thread while workers stream (bounded channel ⇒
+        // backpressure if we lag).
+        while let Ok(rec) = rx.recv() {
+            match rec.error {
+                ConversionError::Finite(e) => errs[rec.format_idx].push(e),
+                ConversionError::Exceeded => exceeded[rec.format_idx] += 1,
+            }
+        }
+        for (w, h) in handles.into_iter().enumerate() {
+            per_worker[w] = h.join().expect("worker panicked");
+        }
+    });
+
+    let curves: Vec<FormatCdf> = formats
+        .iter()
+        .enumerate()
+        .map(|(fi, f)| {
+            errs[fi].sort_by(|a, b| a.total_cmp(b));
+            FormatCdf {
+                format: f.name(),
+                errors: std::mem::take(&mut errs[fi]),
+                exceeded: exceeded[fi],
+                total: cfg.spec.count,
+            }
+        })
+        .collect();
+
+    let metrics = SweepMetrics {
+        matrices: cfg.spec.count,
+        values: values_total.load(Ordering::Relaxed),
+        conversions: values_total.load(Ordering::Relaxed) * formats.len() as u64,
+        wall: start.elapsed(),
+        per_worker,
+        pjrt_calls: pjrt_calls.load(Ordering::Relaxed),
+    };
+    Ok((PanelResult { bits: cfg.bits, spec: cfg.spec, curves }, metrics))
+}
+
+/// Convert one value vector through one format under the configured engine.
+fn convert_one(
+    cfg: &SweepConfig,
+    format: &FormatRef,
+    values: &[f64],
+    pjrt: Option<&PjrtHandle>,
+    pjrt_calls: &std::sync::atomic::AtomicU64,
+) -> ConversionError {
+    let name = format.name();
+    let is_takum = name.starts_with("takum") && !name.starts_with("takum_log");
+    if cfg.engine == Engine::Pjrt && is_takum {
+        if let Some(h) = pjrt {
+            match pjrt_roundtrip(h, &name, values, cfg.pjrt_batch, pjrt_calls) {
+                Ok(rt) => return relative_error_from_roundtrip(values, &rt),
+                Err(e) => {
+                    // Fail loudly: silently falling back would fake the
+                    // three-layer path.
+                    panic!("pjrt round-trip failed for {name}: {e:#}");
+                }
+            }
+        }
+    }
+    relative_error(values, &**format)
+}
+
+/// Round-trip a value vector through the AOT kernel `takum_roundtrip_{n}`
+/// in fixed-size padded batches.
+fn pjrt_roundtrip(
+    h: &PjrtHandle,
+    format_name: &str,
+    values: &[f64],
+    batch: usize,
+    pjrt_calls: &std::sync::atomic::AtomicU64,
+) -> Result<Vec<f64>> {
+    let artifact = format!("{}_roundtrip", format_name); // takum8_roundtrip …
+    let mut out = Vec::with_capacity(values.len());
+    for chunk in values.chunks(batch) {
+        let mut padded = chunk.to_vec();
+        padded.resize(batch, 0.0);
+        let res = h.run_f64(&artifact, vec![TensorF64::vec(padded)])?;
+        pjrt_calls.fetch_add(1, Ordering::Relaxed);
+        let rt = res
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("empty result from {artifact}"))?;
+        out.extend_from_slice(&rt[..chunk.len()]);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::figure2;
+
+    #[test]
+    fn parallel_matches_sequential() {
+        let spec = CollectionSpec { seed: 0xC0FFEE, count: 80 };
+        let cfg = SweepConfig { spec, bits: 8, workers: 4, ..Default::default() };
+        let (par, metrics) = sweep(&cfg, None).unwrap();
+        let seq = figure2::run_panel(spec, 8);
+        assert_eq!(par.curves.len(), seq.curves.len());
+        for (a, b) in par.curves.iter().zip(&seq.curves) {
+            assert_eq!(a.format, b.format);
+            assert_eq!(a.exceeded, b.exceeded, "{}", a.format);
+            assert_eq!(a.errors, b.errors, "{}", a.format);
+        }
+        assert_eq!(metrics.matrices, 80);
+        assert!(metrics.values > 0);
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let spec = CollectionSpec { seed: 1, count: 10 };
+        let cfg = SweepConfig { spec, bits: 16, workers: 1, ..Default::default() };
+        let (p, _) = sweep(&cfg, None).unwrap();
+        assert_eq!(p.curves.len(), 4);
+        for c in &p.curves {
+            assert_eq!(c.errors.len() + c.exceeded, 10);
+        }
+    }
+
+    #[test]
+    fn pjrt_engine_without_handle_errors() {
+        let cfg = SweepConfig {
+            spec: CollectionSpec { seed: 1, count: 1 },
+            engine: Engine::Pjrt,
+            ..Default::default()
+        };
+        assert!(sweep(&cfg, None).is_err());
+    }
+
+    #[test]
+    fn per_worker_counts_sum_to_total() {
+        let spec = CollectionSpec { seed: 2, count: 23 };
+        let cfg = SweepConfig { spec, bits: 8, workers: 3, ..Default::default() };
+        let (_, m) = sweep(&cfg, None).unwrap();
+        assert_eq!(m.per_worker.iter().sum::<usize>(), 23);
+    }
+}

@@ -1,0 +1,170 @@
+//! Ablations over the Figure 2 pipeline — the design choices DESIGN.md
+//! calls out, each isolated:
+//!
+//! * **A. takum variant** — linear vs logarithmic takum on the same
+//!   corpus (the paper plots linear; the log variant is the "real" takum
+//!   arithmetic; their representational behaviour is nearly identical).
+//! * **B. corpus profile** — per-domain breakdown showing *which* matrix
+//!   populations drive each format's failures (badly-scaled kills OFP8,
+//!   wide-spread chemistry hurts everything 8-bit, integer graphs are
+//!   free wins).
+//! * **C. seed sensitivity** — the headline fractions across independent
+//!   collection seeds (reproduction stability).
+
+use crate::matrix::generator::{self, CollectionSpec, DomainProfile};
+use crate::matrix::norms::{relative_error, ConversionError};
+use crate::num::{format_by_name, FormatRef};
+
+/// A: linear vs logarithmic takum at a bit width.
+pub fn takum_variant(spec: CollectionSpec, bits: u32) -> String {
+    let formats: Vec<FormatRef> = vec![
+        format_by_name(&format!("takum{bits}")).unwrap(),
+        format_by_name(&format!("takum_log{bits}")).unwrap(),
+    ];
+    let panel = super::figure2::run_panel_with_formats(spec, bits, &formats);
+    let mut out = format!("ablation A: takum variants at {bits} bits ({} matrices)\n", spec.count);
+    out.push_str(&format!(
+        "{:<14} {:>10} {:>10} {:>10}\n",
+        "variant", "≤1e-2", "≤0.5", "≤0.99"
+    ));
+    for c in &panel.curves {
+        out.push_str(&format!(
+            "{:<14} {:>10.3} {:>10.3} {:>10.3}\n",
+            c.format,
+            c.fraction_below(1e-2),
+            c.fraction_below(0.5),
+            c.fraction_below(0.99)
+        ));
+    }
+    out
+}
+
+/// B: per-domain stability of a format pair at 8 bits.
+pub fn domain_breakdown(spec: CollectionSpec, format_names: &[&str]) -> String {
+    let formats: Vec<FormatRef> =
+        format_names.iter().map(|n| format_by_name(n).unwrap()).collect();
+    // (domain, format) -> (below_99, exceeded, total)
+    let mut acc: std::collections::BTreeMap<(&'static str, String), (usize, usize, usize)> =
+        Default::default();
+    for g in generator::collection(spec) {
+        for f in &formats {
+            let entry = acc.entry((g.meta.domain.name(), f.name())).or_default();
+            entry.2 += 1;
+            match relative_error(&g.coo.values, &**f) {
+                ConversionError::Finite(e) if e <= 0.99 => entry.0 += 1,
+                ConversionError::Exceeded => entry.1 += 1,
+                _ => {}
+            }
+        }
+    }
+    let mut out = format!(
+        "ablation B: per-domain fraction below 100% error ({} matrices)\n",
+        spec.count
+    );
+    out.push_str(&format!("{:<15}", "domain"));
+    for f in format_names {
+        out.push_str(&format!("{f:>10}"));
+    }
+    out.push('\n');
+    for d in DomainProfile::ALL {
+        out.push_str(&format!("{:<15}", d.name()));
+        for f in &formats {
+            let (ok, _, total) = acc
+                .get(&(d.name(), f.name()))
+                .copied()
+                .unwrap_or((0, 0, 0));
+            if total == 0 {
+                out.push_str(&format!("{:>10}", "-"));
+            } else {
+                out.push_str(&format!("{:>10.2}", ok as f64 / total as f64));
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// C: seed sensitivity of the §II headline (takum8 below-100% fraction).
+pub fn seed_sensitivity(count: usize, seeds: &[u64]) -> (Vec<f64>, String) {
+    let f = format_by_name("takum8").unwrap();
+    let mut fracs = Vec::new();
+    for &seed in seeds {
+        let spec = CollectionSpec { seed, count };
+        let mut ok = 0usize;
+        for g in generator::collection(spec) {
+            if let ConversionError::Finite(e) = relative_error(&g.coo.values, &*f) {
+                if e <= 0.99 {
+                    ok += 1;
+                }
+            }
+        }
+        fracs.push(ok as f64 / count as f64);
+    }
+    let mean = fracs.iter().sum::<f64>() / fracs.len() as f64;
+    let spread = fracs.iter().fold(0.0f64, |a, &x| a.max((x - mean).abs()));
+    let mut out = format!(
+        "ablation C: takum8 below-100% across {} seeds ({count} matrices each)\n",
+        seeds.len()
+    );
+    out.push_str(&format!("  fractions: {fracs:.3?}\n  mean {mean:.3}, max |dev| {spread:.3}\n"));
+    (fracs, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> CollectionSpec {
+        CollectionSpec { seed: CollectionSpec::default().seed, count: 150 }
+    }
+
+    #[test]
+    fn variants_nearly_identical() {
+        // Log and linear takum have the same envelope; their stability
+        // fractions must agree within a few percent.
+        for bits in [8u32, 16] {
+            let formats: Vec<FormatRef> = vec![
+                format_by_name(&format!("takum{bits}")).unwrap(),
+                format_by_name(&format!("takum_log{bits}")).unwrap(),
+            ];
+            let p = super::super::figure2::run_panel_with_formats(spec(), bits, &formats);
+            let a = p.curves[0].fraction_below(0.99);
+            let b = p.curves[1].fraction_below(0.99);
+            assert!((a - b).abs() < 0.05, "bits={bits} lin={a} log={b}");
+        }
+    }
+
+    #[test]
+    fn domain_breakdown_shows_the_mechanisms() {
+        let txt = domain_breakdown(spec(), &["takum8", "e4m3"]);
+        assert!(txt.contains("integer-graph"));
+        assert!(txt.contains("badly-scaled"));
+        // Integer graphs are easy for everything; parse the first row.
+        let row = txt.lines().find(|l| l.starts_with("integer-graph")).unwrap();
+        let cols: Vec<f64> = row
+            .split_whitespace()
+            .skip(1)
+            .map(|c| c.parse().unwrap())
+            .collect();
+        assert!(cols[0] > 0.9, "takum8 on integer graphs: {row}");
+        assert!(cols[1] > 0.9, "e4m3 on integer graphs: {row}");
+        // Badly-scaled matrices: takum8 survives, e4m3 does not.
+        let row = txt.lines().find(|l| l.starts_with("badly-scaled")).unwrap();
+        let cols: Vec<f64> = row
+            .split_whitespace()
+            .skip(1)
+            .map(|c| c.parse().unwrap())
+            .collect();
+        assert!(cols[0] > 0.5, "takum8 on badly-scaled: {row}");
+        assert!(cols[1] < 0.3, "e4m3 on badly-scaled: {row}");
+    }
+
+    #[test]
+    fn seed_sensitivity_is_small() {
+        let (fracs, _) = seed_sensitivity(120, &[1, 2, 3]);
+        let mean = fracs.iter().sum::<f64>() / 3.0;
+        for f in &fracs {
+            assert!((f - mean).abs() < 0.1, "{fracs:?}");
+        }
+    }
+}

@@ -1,0 +1,138 @@
+//! Figure 1: dynamic range relative to the bit-string length n for linear
+//! takum, posit and a selection of floating-point formats.
+
+use crate::num::format_by_name;
+
+/// One line/point of the figure.
+#[derive(Debug, Clone)]
+pub struct RangeSeries {
+    pub name: &'static str,
+    /// (n, decimal orders of magnitude covered by positive finite values).
+    pub points: Vec<(u32, f64)>,
+}
+
+/// Compute the figure's data: takum and posit as functions of n (2..=64
+/// and 3..=64 respectively), IEEE-style formats as single points at their
+/// fixed widths.
+pub fn dynamic_range_table() -> Vec<RangeSeries> {
+    let mut takum = RangeSeries { name: "linear takum", points: Vec::new() };
+    for n in 2..=64u32 {
+        let f = format_by_name(&format!("takum{n}")).unwrap();
+        takum.points.push((n, f.dynamic_range_decades()));
+    }
+    let mut posit = RangeSeries { name: "posit", points: Vec::new() };
+    for n in 3..=64u32 {
+        let f = format_by_name(&format!("posit{n}")).unwrap();
+        posit.points.push((n, f.dynamic_range_decades()));
+    }
+    let mut out = vec![takum, posit];
+    for (label, name, n) in [
+        ("OFP8 E4M3", "e4m3", 8u32),
+        ("OFP8 E5M2", "e5m2", 8),
+        ("float16", "float16", 16),
+        ("bfloat16", "bfloat16", 16),
+        ("float32", "float32", 32),
+        ("float64", "float64", 64),
+    ] {
+        let f = format_by_name(name).unwrap();
+        out.push(RangeSeries { name: label, points: vec![(n, f.dynamic_range_decades())] });
+    }
+    out
+}
+
+/// Render the figure data as an aligned text table (columns at the
+/// AVX10.2-relevant widths the paper marks on the x-axis).
+pub fn render() -> String {
+    let table = dynamic_range_table();
+    let widths = [8u32, 16, 32, 64];
+    let mut out = String::new();
+    out.push_str("Figure 1: dynamic range (decimal orders of magnitude) vs bit-string length\n");
+    out.push_str(&format!("{:<14}", "format"));
+    for w in widths {
+        out.push_str(&format!("{:>12}", format!("n={w}")));
+    }
+    out.push('\n');
+    for s in &table {
+        out.push_str(&format!("{:<14}", s.name));
+        for w in widths {
+            match s.points.iter().find(|(n, _)| *n == w) {
+                Some((_, d)) => out.push_str(&format!("{d:>12.1}")),
+                None => out.push_str(&format!("{:>12}", "-")),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn decades(name: &str, n: u32) -> f64 {
+        dynamic_range_table()
+            .iter()
+            .find(|s| s.name == name)
+            .unwrap()
+            .points
+            .iter()
+            .find(|(m, _)| *m == n)
+            .unwrap()
+            .1
+    }
+
+    #[test]
+    fn takum_range_nearly_constant() {
+        // The paper's headline: takum dynamic range is nearly fully
+        // realised already at 8 bits.
+        let d8 = decades("linear takum", 8);
+        let d16 = decades("linear takum", 16);
+        let d64 = decades("linear takum", 64);
+        assert!(d8 > 140.0, "d8={d8}");
+        assert!(d64 < 154.0);
+        assert!((d64 - d8) / d64 < 0.07, "d8={d8} d64={d64}");
+        assert!(d16 >= d8 && d64 >= d16);
+    }
+
+    #[test]
+    fn posit_range_grows_linearly() {
+        // posit⟨n,2⟩ spans 2^±4(n-2): 8·(n-2)·log10(2) decades.
+        for n in [8u32, 16, 32, 64] {
+            let expect = 8.0 * (n as f64 - 2.0) * 2f64.log10();
+            let got = decades("posit", n);
+            assert!((got - expect).abs() < 1e-6, "n={n} got={got} expect={expect}");
+        }
+    }
+
+    #[test]
+    fn fixed_format_points() {
+        // E4M3: 448 / 2^-9 ⇒ ~5.4 decades; E5M2: 57344 / 2^-16 ⇒ ~9.6;
+        // float16 ≈ 12.3; bfloat16 ≈ 78.3 (subnormals included).
+        let e = decades("OFP8 E4M3", 8);
+        assert!((5.0..6.0).contains(&e), "{e}");
+        let e = decades("OFP8 E5M2", 8);
+        assert!((9.0..10.5).contains(&e), "{e}");
+        let f = decades("float16", 16);
+        assert!((12.0..13.0).contains(&f), "{f}");
+        let b = decades("bfloat16", 16);
+        assert!(b > 70.0, "{b}");
+    }
+
+    #[test]
+    fn ordering_at_8_bits_matches_figure() {
+        // takum ≫ posit > E5M2 > E4M3 at n = 8.
+        let t = decades("linear takum", 8);
+        let p = decades("posit", 8);
+        let e5 = decades("OFP8 E5M2", 8);
+        let e4 = decades("OFP8 E4M3", 8);
+        assert!(t > p && p > e5 && e5 > e4, "t={t} p={p} e5={e5} e4={e4}");
+    }
+
+    #[test]
+    fn render_contains_all() {
+        let r = render();
+        for s in ["linear takum", "posit", "E4M3", "float64"] {
+            assert!(r.contains(s), "{s}");
+        }
+    }
+}

@@ -1,0 +1,255 @@
+//! Figure 2: cumulative distribution of relative 2-norm conversion errors
+//! over the (synthetic) matrix collection, one panel per bit width
+//! (8 / 16 / 32), one curve per format.
+//!
+//! This module is the *sequential* reference implementation; the
+//! [`crate::coordinator`] runs the same computation across a worker pool
+//! (optionally pushing the round-trip through the AOT-compiled PJRT
+//! kernels) and produces identical numbers — asserted by integration
+//! tests.
+
+use crate::matrix::generator::{self, CollectionSpec};
+use crate::matrix::norms::{relative_error, ConversionError};
+use crate::num::{formats_at_width, FormatRef};
+
+/// CDF of one format over the collection.
+#[derive(Debug, Clone)]
+pub struct FormatCdf {
+    pub format: String,
+    /// Finite errors, ascending.
+    pub errors: Vec<f64>,
+    /// Matrices whose entries exceeded the format's dynamic range (∞).
+    pub exceeded: usize,
+    pub total: usize,
+}
+
+impl FormatCdf {
+    /// Fraction of matrices with error ≤ `x` (the ∞ bucket never
+    /// qualifies).
+    pub fn fraction_below(&self, x: f64) -> f64 {
+        let n = self.errors.partition_point(|e| *e <= x);
+        n as f64 / self.total as f64
+    }
+
+    /// Fraction in the ∞ bucket.
+    pub fn fraction_exceeded(&self) -> f64 {
+        self.exceeded as f64 / self.total as f64
+    }
+
+    /// Error at a given cumulative fraction (`p ∈ [0,1]`), `None` if the
+    /// fraction falls into the ∞ bucket.
+    pub fn quantile(&self, p: f64) -> Option<f64> {
+        let k = ((p * self.total as f64).ceil() as usize).max(1);
+        self.errors.get(k - 1).copied()
+    }
+}
+
+/// One panel (bit width) of the figure.
+#[derive(Debug, Clone)]
+pub struct PanelResult {
+    pub bits: u32,
+    pub spec: CollectionSpec,
+    pub curves: Vec<FormatCdf>,
+}
+
+/// Run one panel sequentially over `spec.count` matrices.
+pub fn run_panel(spec: CollectionSpec, bits: u32) -> PanelResult {
+    let formats = formats_at_width(bits);
+    assert!(!formats.is_empty(), "no Figure 2 panel at {bits} bits");
+    run_panel_with_formats(spec, bits, &formats)
+}
+
+/// Run a panel over an explicit format list (used by ablations).
+pub fn run_panel_with_formats(
+    spec: CollectionSpec,
+    bits: u32,
+    formats: &[FormatRef],
+) -> PanelResult {
+    let mut errs: Vec<Vec<f64>> = vec![Vec::with_capacity(spec.count); formats.len()];
+    let mut exceeded = vec![0usize; formats.len()];
+    for g in generator::collection(spec) {
+        for (fi, f) in formats.iter().enumerate() {
+            match relative_error(&g.coo.values, &**f) {
+                ConversionError::Finite(e) => errs[fi].push(e),
+                ConversionError::Exceeded => exceeded[fi] += 1,
+            }
+        }
+    }
+    let curves = formats
+        .iter()
+        .zip(errs)
+        .zip(exceeded)
+        .map(|((f, mut e), x)| {
+            e.sort_by(|a, b| a.total_cmp(b));
+            FormatCdf { format: f.name(), errors: e, exceeded: x, total: spec.count }
+        })
+        .collect();
+    PanelResult { bits, spec, curves }
+}
+
+/// The thresholds the text of §II quotes (fraction of matrices below
+/// 100 % relative error) plus finer CDF points for the shape check.
+pub const REPORT_THRESHOLDS: [f64; 7] = [1e-4, 1e-3, 1e-2, 1e-1, 0.5, 0.99, 0.999];
+
+/// Panel-appropriate thresholds: the 32-bit formats resolve to ~1e-8, so
+/// the paper's plot (and the posit-vs-float32 crossover) lives at much
+/// smaller errors there.
+pub fn panel_thresholds(bits: u32) -> Vec<f64> {
+    match bits {
+        32 => vec![1e-8, 3e-8, 1e-7, 1e-6, 1e-4, 1e-2, 0.99],
+        16 => vec![1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 0.5, 0.99],
+        _ => REPORT_THRESHOLDS.to_vec(),
+    }
+}
+
+/// Render a panel as a text table of CDF values at the report thresholds.
+pub fn render_panel(p: &PanelResult) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "Figure 2, {}-bit panel ({} matrices, seed {:#x})\n",
+        p.bits, p.spec.count, p.spec.seed
+    ));
+    let thresholds = panel_thresholds(p.bits);
+    out.push_str(&format!("{:<10}", "format"));
+    for t in &thresholds {
+        let label = if *t >= 0.01 { format!("≤{t}") } else { format!("≤{t:.0e}") };
+        out.push_str(&format!("{:>10}", label));
+    }
+    out.push_str(&format!("{:>8}\n", "∞"));
+    for c in &p.curves {
+        out.push_str(&format!("{:<10}", c.format));
+        for t in &thresholds {
+            out.push_str(&format!("{:>10.3}", c.fraction_below(*t)));
+        }
+        out.push_str(&format!("{:>8.3}\n", c.fraction_exceeded()));
+    }
+    out
+}
+
+/// ASCII CDF plot (log-x), for the CLI.
+pub fn render_ascii_plot(p: &PanelResult, width: usize, height: usize) -> String {
+    let (lo, hi) = (1e-6f64.log10(), 1.0f64.log10() + 0.5);
+    let mut grid = vec![vec![b' '; width]; height];
+    let marks = [b'T', b'P', b'f', b'b', b'4', b'5', b'3'];
+    let mark_of = |name: &str| -> u8 {
+        match name {
+            n if n.starts_with("takum") => marks[0],
+            n if n.starts_with("posit") => marks[1],
+            "float16" => marks[2],
+            "bfloat16" => marks[3],
+            "e4m3" => marks[4],
+            "e5m2" => marks[5],
+            "float32" => marks[6],
+            _ => b'?',
+        }
+    };
+    for c in &p.curves {
+        let m = mark_of(&c.format);
+        for xi in 0..width {
+            let lx = lo + (hi - lo) * xi as f64 / (width - 1) as f64;
+            let frac = c.fraction_below(10f64.powf(lx));
+            let y = ((1.0 - frac) * (height - 1) as f64).round() as usize;
+            let y = y.min(height - 1);
+            if grid[y][xi] == b' ' {
+                grid[y][xi] = m;
+            }
+        }
+    }
+    let mut out = String::new();
+    out.push_str(&format!(
+        "CDF (x: rel. 2-norm error 1e-6 → ~3, log scale; y: fraction of matrices)  [{}]\n",
+        p.curves.iter().map(|c| format!("{}={}", mark_of(&c.format) as char, c.format)).collect::<Vec<_>>().join(", ")
+    ));
+    for row in grid {
+        out.push('|');
+        out.push_str(std::str::from_utf8(&row).unwrap());
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> CollectionSpec {
+        CollectionSpec { seed: 0xF16, count: 160 }
+    }
+
+    #[test]
+    fn panel_is_deterministic() {
+        let a = run_panel(small_spec(), 8);
+        let b = run_panel(small_spec(), 8);
+        for (ca, cb) in a.curves.iter().zip(&b.curves) {
+            assert_eq!(ca.errors, cb.errors);
+            assert_eq!(ca.exceeded, cb.exceeded);
+        }
+    }
+
+    #[test]
+    fn eight_bit_shape_matches_paper() {
+        // §II claims at 8 bits: takum ~90% below 100%, posit ~65%,
+        // E4M3/E5M2 ~45–55%. We assert the *ordering* and loose bands on
+        // the small test slice (the full-collection numbers are recorded
+        // in EXPERIMENTS.md).
+        let p = run_panel(CollectionSpec { seed: CollectionSpec::default().seed, count: 300 }, 8);
+        let below = |name: &str| {
+            let c = p.curves.iter().find(|c| c.format == name).unwrap();
+            c.fraction_below(0.99)
+        };
+        let (t, po, e4, e5) = (below("takum8"), below("posit8"), below("e4m3"), below("e5m2"));
+        assert!(t > po, "takum {t} vs posit {po}");
+        assert!(po > e4 && po > e5, "posit {po} vs e4m3 {e4}, e5m2 {e5}");
+        assert!(t > 0.80, "takum8 stability {t}");
+        assert!((0.40..0.90).contains(&po), "posit8 {po}");
+    }
+
+    #[test]
+    fn ieee_formats_have_infinity_bucket_tapered_do_not() {
+        let p = run_panel(small_spec(), 8);
+        for c in &p.curves {
+            if c.format.starts_with("takum") || c.format.starts_with("posit") {
+                assert_eq!(c.exceeded, 0, "{}", c.format);
+            }
+        }
+        let e4 = p.curves.iter().find(|c| c.format == "e4m3").unwrap();
+        assert!(e4.exceeded > 0);
+    }
+
+    #[test]
+    fn sixteen_bit_takum_dominates() {
+        let p = run_panel(small_spec(), 16);
+        let takum = p.curves.iter().find(|c| c.format == "takum16").unwrap();
+        let f16 = p.curves.iter().find(|c| c.format == "float16").unwrap();
+        let bf16 = p.curves.iter().find(|c| c.format == "bfloat16").unwrap();
+        assert!(takum.fraction_below(0.999) >= f16.fraction_below(0.999));
+        assert!(takum.fraction_below(0.999) >= bf16.fraction_below(0.999));
+        // takum16 also wins at mid-range precision thresholds.
+        assert!(takum.fraction_below(1e-2) >= bf16.fraction_below(1e-2));
+    }
+
+    #[test]
+    fn quantiles_and_fractions_consistent() {
+        let p = run_panel(small_spec(), 32);
+        for c in &p.curves {
+            if let Some(q) = c.quantile(0.5) {
+                let f = c.fraction_below(q);
+                assert!(f >= 0.5 - 1.0 / c.total as f64, "{}: {f}", c.format);
+            }
+        }
+    }
+
+    #[test]
+    fn render_contains_formats() {
+        let p = run_panel(small_spec(), 8);
+        let r = render_panel(&p);
+        for f in ["takum8", "posit8", "e4m3", "e5m2"] {
+            assert!(r.contains(f));
+        }
+        let plot = render_ascii_plot(&p, 60, 16);
+        assert!(plot.lines().count() >= 16);
+    }
+}

@@ -1,0 +1,11 @@
+//! The evaluation harness: one module per paper artefact (Figure 1,
+//! Figure 2, Tables I–V) plus shared report formatting.
+
+pub mod ablation;
+pub mod figure1;
+pub mod figure2;
+pub mod tables;
+pub mod gemm;
+
+pub use figure1::dynamic_range_table;
+pub use figure2::{run_panel, PanelResult};

@@ -1,0 +1,23 @@
+//! The AVX10.2 instruction-set model and the paper's streamlining engine.
+//!
+//! * [`pattern`] — the mini-regex dialect the paper uses in Tables I–V
+//!   (alternation groups, optional suffixes) with exact expansion,
+//!   counting and matching.
+//! * [`database`] — all AVX10.2 instructions, authored as the paper's 36
+//!   groups (B01–B12, M01–M04, I01–I09, F01–F08, C01–C03).
+//! * [`transform`] — the four streamlining methods of §III as mechanical
+//!   rewrite rules (bit-quantity naming, takum floating-point naming,
+//!   generalisation, unification).
+//! * [`proposed`] — the proposed instruction set and per-group mapping
+//!   behind Tables I–V.
+//! * [`report`] — table rendering (text/markdown/TSV).
+
+pub mod pattern;
+pub mod database;
+pub mod transform;
+pub mod proposed;
+pub mod report;
+pub mod rvv;
+
+pub use database::{groups, Category, GroupSpec};
+pub use pattern::Pattern;

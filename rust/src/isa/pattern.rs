@@ -1,0 +1,347 @@
+//! The pattern dialect of the paper's Tables I–V.
+//!
+//! Grammar (everything the tables need, nothing more):
+//!
+//! ```text
+//! pattern  := seq
+//! seq      := item*
+//! item     := atom '?'?
+//! atom     := literal | '(' seq ('|' seq)* ')'
+//! literal  := [A-Z0-9_]+ (longest run)
+//! ```
+//!
+//! A pattern denotes a *finite* set of mnemonics; [`Pattern::expand`]
+//! materialises it (order: left-to-right, alternatives in written order),
+//! [`Pattern::count`] sizes it without materialising, and
+//! [`Pattern::matches`] tests membership by backtracking.
+
+use std::fmt;
+
+/// Parse error with byte position.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PatternError {
+    pub pos: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for PatternError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "pattern error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for PatternError {}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Node {
+    Lit(String),
+    /// `( a | b | … )`
+    Alt(Vec<Node>),
+    /// Concatenation.
+    Seq(Vec<Node>),
+    /// `x?`
+    Opt(Box<Node>),
+}
+
+/// A parsed pattern.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pattern {
+    src: String,
+    root: Node,
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err<T>(&self, msg: &str) -> Result<T, PatternError> {
+        Err(PatternError { pos: self.i, msg: msg.into() })
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.s.get(self.i).copied()
+    }
+
+    fn parse_seq(&mut self) -> Result<Node, PatternError> {
+        let mut items = Vec::new();
+        loop {
+            match self.peek() {
+                None | Some(b')') | Some(b'|') => break,
+                Some(b'(') => {
+                    self.i += 1;
+                    let node = self.parse_alt()?;
+                    if self.peek() != Some(b')') {
+                        return self.err("expected ')'");
+                    }
+                    self.i += 1;
+                    items.push(self.maybe_opt(node));
+                }
+                Some(b'?') => return self.err("dangling '?'"),
+                Some(c) if is_lit(c) => {
+                    let start = self.i;
+                    while self.peek().map(is_lit) == Some(true) {
+                        self.i += 1;
+                    }
+                    let lit = std::str::from_utf8(&self.s[start..self.i]).unwrap().to_string();
+                    // '?' binds to the *last character* of a literal run,
+                    // e.g. `ANDN?` = AND + optional N.
+                    if self.peek() == Some(b'?') {
+                        self.i += 1;
+                        let (head, last) = lit.split_at(lit.len() - 1);
+                        if !head.is_empty() {
+                            items.push(Node::Lit(head.to_string()));
+                        }
+                        items.push(Node::Opt(Box::new(Node::Lit(last.to_string()))));
+                    } else {
+                        items.push(Node::Lit(lit));
+                    }
+                }
+                Some(c) => return self.err(&format!("unexpected character {:?}", c as char)),
+            }
+        }
+        Ok(match items.len() {
+            0 => Node::Lit(String::new()),
+            1 => items.pop().unwrap(),
+            _ => Node::Seq(items),
+        })
+    }
+
+    fn maybe_opt(&mut self, node: Node) -> Node {
+        if self.peek() == Some(b'?') {
+            self.i += 1;
+            Node::Opt(Box::new(node))
+        } else {
+            node
+        }
+    }
+
+    fn parse_alt(&mut self) -> Result<Node, PatternError> {
+        let mut alts = vec![self.parse_seq()?];
+        while self.peek() == Some(b'|') {
+            self.i += 1;
+            alts.push(self.parse_seq()?);
+        }
+        Ok(if alts.len() == 1 { alts.pop().unwrap() } else { Node::Alt(alts) })
+    }
+}
+
+#[inline]
+fn is_lit(c: u8) -> bool {
+    c.is_ascii_uppercase() || c.is_ascii_digit() || c == b'_'
+}
+
+impl Pattern {
+    /// Parse a pattern string.
+    pub fn parse(src: &str) -> Result<Pattern, PatternError> {
+        let mut p = Parser { s: src.as_bytes(), i: 0 };
+        let root = p.parse_alt()?;
+        if p.i != src.len() {
+            return p.err("trailing input (unbalanced ')'?)");
+        }
+        Ok(Pattern { src: src.to_string(), root })
+    }
+
+    /// The source string.
+    pub fn source(&self) -> &str {
+        &self.src
+    }
+
+    /// Number of distinct expansions (before de-duplication).
+    pub fn count_raw(&self) -> usize {
+        fn go(n: &Node) -> usize {
+            match n {
+                Node::Lit(_) => 1,
+                Node::Opt(x) => 1 + go(x),
+                Node::Alt(xs) => xs.iter().map(go).sum(),
+                Node::Seq(xs) => xs.iter().map(go).product(),
+            }
+        }
+        go(&self.root)
+    }
+
+    /// All expansions, in written order, de-duplicated (a pattern like
+    /// `A(B|B)` collapses).
+    pub fn expand(&self) -> Vec<String> {
+        fn go(n: &Node) -> Vec<String> {
+            match n {
+                Node::Lit(s) => vec![s.clone()],
+                Node::Opt(x) => {
+                    let mut v = go(x);
+                    v.insert(0, String::new());
+                    v
+                }
+                Node::Alt(xs) => xs.iter().flat_map(go).collect(),
+                Node::Seq(xs) => {
+                    let mut acc = vec![String::new()];
+                    for x in xs {
+                        let parts = go(x);
+                        let mut next = Vec::with_capacity(acc.len() * parts.len());
+                        for a in &acc {
+                            for p in &parts {
+                                next.push(format!("{a}{p}"));
+                            }
+                        }
+                        acc = next;
+                    }
+                    acc
+                }
+            }
+        }
+        let mut out = go(&self.root);
+        let mut seen = std::collections::HashSet::new();
+        out.retain(|s| seen.insert(s.clone()));
+        out
+    }
+
+    /// Number of distinct mnemonics.
+    pub fn count(&self) -> usize {
+        self.expand().len()
+    }
+
+    /// Membership test by backtracking (no expansion).
+    pub fn matches(&self, s: &str) -> bool {
+        fn go(n: &Node, s: &[u8], pos: usize, rest: &mut dyn FnMut(usize) -> bool) -> bool {
+            match n {
+                Node::Lit(l) => {
+                    let l = l.as_bytes();
+                    if s.len() >= pos + l.len() && &s[pos..pos + l.len()] == l {
+                        rest(pos + l.len())
+                    } else {
+                        false
+                    }
+                }
+                Node::Opt(x) => rest(pos) || go(x, s, pos, rest),
+                Node::Alt(xs) => xs.iter().any(|x| go(x, s, pos, rest)),
+                Node::Seq(xs) => {
+                    fn seq(
+                        xs: &[Node],
+                        s: &[u8],
+                        pos: usize,
+                        rest: &mut dyn FnMut(usize) -> bool,
+                    ) -> bool {
+                        match xs.split_first() {
+                            None => rest(pos),
+                            Some((h, t)) => {
+                                go(h, s, pos, &mut |p| seq(t, s, p, rest))
+                            }
+                        }
+                    }
+                    seq(xs, s, pos, rest)
+                }
+            }
+        }
+        go(&self.root, s.as_bytes(), 0, &mut |p| p == s.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp(s: &str) -> Vec<String> {
+        Pattern::parse(s).unwrap().expand()
+    }
+
+    #[test]
+    fn literal() {
+        assert_eq!(exp("VADDPS"), vec!["VADDPS"]);
+    }
+
+    #[test]
+    fn alternation() {
+        assert_eq!(exp("V(ADD|SUB)PS"), vec!["VADDPS", "VSUBPS"]);
+    }
+
+    #[test]
+    fn nested() {
+        assert_eq!(
+            exp("K(OR(TEST)?|XNOR)(B|W)"),
+            vec!["KORB", "KORW", "KORTESTB", "KORTESTW", "KXNORB", "KXNORW"]
+        );
+    }
+
+    #[test]
+    fn optional_on_last_char_of_literal() {
+        // ANDN? = AND, ANDN — the paper's idiom.
+        assert_eq!(exp("K(ANDN?)(B|W)"), vec!["KANDB", "KANDW", "KANDNB", "KANDNW"]);
+    }
+
+    #[test]
+    fn optional_group() {
+        // expansion order: optionals expand empty-first per atom, so the
+        // cartesian order interleaves.
+        assert_eq!(exp("VAES(DEC|ENC)(LAST)?"),
+            vec!["VAESDEC", "VAESDECLAST", "VAESENC", "VAESENCLAST"]);
+    }
+
+    #[test]
+    fn dedup() {
+        assert_eq!(exp("A(B|B)").len(), 1);
+    }
+
+    #[test]
+    fn count_matches_expand() {
+        for p in [
+            "V(DBP|MP|P)SADBW",
+            "VPDP(B|W)(S|U)(S|U)DS?",
+            "VMOV(D(Q(A(32|64)?|U(8|16|32|64)?))?|NTDQA?|Q|W)",
+        ] {
+            let pat = Pattern::parse(p).unwrap();
+            assert_eq!(pat.count(), pat.expand().len(), "{p}");
+        }
+    }
+
+    #[test]
+    fn the_i06_group_counts_16() {
+        assert_eq!(Pattern::parse("VPDP(B|W)(S|U)(S|U)DS?").unwrap().count(), 16);
+    }
+
+    #[test]
+    fn mask_group_counts_48() {
+        let p = "K(ADD|ANDN?|MOV|NOT|OR(TEST)?|SHIFTL|SHIFTR|TEST|XNOR|XOR)(B|W|D|Q)";
+        assert_eq!(Pattern::parse(p).unwrap().count(), 48);
+    }
+
+    #[test]
+    fn matches_agrees_with_expand() {
+        let p = Pattern::parse("VCVT(BIAS|NE2?)PH2(B|H)F8S?").unwrap();
+        let all = p.expand();
+        assert_eq!(all.len(), 12);
+        for m in &all {
+            assert!(p.matches(m), "{m}");
+        }
+        assert!(!p.matches("VCVTPH2BF8"));
+        assert!(!p.matches("VCVTNEPH2BF8SS"));
+        assert!(!p.matches("VCVTNEPH2BF"));
+    }
+
+    #[test]
+    fn movs_group() {
+        let v = exp("VMOV(D(Q(A(32|64)?|U(8|16|32|64)?))?|NTDQA?|Q|W)");
+        assert!(v.contains(&"VMOVD".to_string()));
+        assert!(v.contains(&"VMOVDQA".to_string()));
+        assert!(v.contains(&"VMOVDQA64".to_string()));
+        assert!(v.contains(&"VMOVDQU8".to_string()));
+        assert!(v.contains(&"VMOVNTDQ".to_string()));
+        assert!(v.contains(&"VMOVNTDQA".to_string()));
+        assert!(v.contains(&"VMOVQ".to_string()));
+        assert!(v.contains(&"VMOVW".to_string()));
+        assert_eq!(v.len(), 13);
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(Pattern::parse("A(B").is_err());
+        assert!(Pattern::parse("A)B").is_err());
+        assert!(Pattern::parse("?A").is_err());
+        assert!(Pattern::parse("a").is_err()); // lowercase not in dialect
+    }
+
+    #[test]
+    fn empty_alternative_allowed() {
+        // (X|) is an explicit empty alternative — equivalent to (X)?.
+        assert_eq!(exp("A(X|)B"), vec!["AXB", "AB"]);
+    }
+}

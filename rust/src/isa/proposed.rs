@@ -1,0 +1,164 @@
+//! The proposed (takum-based) instruction set: aggregation over the
+//! database + transform, powering Tables I–V and the §IV evaluation
+//! numbers.
+
+use super::database::{groups, Category};
+use super::transform::{map_instruction, transform_stats, Mapping, TransformStats};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// One rendered row of a paper table (one merged group).
+#[derive(Debug, Clone)]
+pub struct TableRow {
+    /// Legacy group ids folded into this row (e.g. `["B01","B02","B03"]`).
+    pub legacy_ids: Vec<&'static str>,
+    pub merged_id: &'static str,
+    pub category: Category,
+    pub avx_patterns: Vec<&'static str>,
+    pub proposed_patterns: Vec<&'static str>,
+    pub avx_count: usize,
+    pub proposed_count: usize,
+    /// Legacy instructions removed outright (biased/inter-format converts).
+    pub removed: usize,
+    pub note: String,
+}
+
+/// Build the merged-table rows, in table order.
+pub fn table_rows() -> Vec<TableRow> {
+    let mut rows: Vec<TableRow> = Vec::new();
+    let mut index: BTreeMap<&str, usize> = BTreeMap::new();
+    for g in groups() {
+        let removed = g
+            .avx_instructions
+            .iter()
+            .filter(|m| matches!(map_instruction(m, g.spec.id), Mapping::Removed(_)))
+            .count();
+        match index.get(g.spec.merged_id) {
+            Some(&i) => {
+                let row = &mut rows[i];
+                row.legacy_ids.push(g.spec.id);
+                row.avx_patterns.extend_from_slice(g.spec.avx_patterns);
+                row.proposed_patterns.extend_from_slice(g.spec.proposed_patterns);
+                row.avx_count += g.avx_instructions.len();
+                row.proposed_count += g.proposed_instructions.len();
+                row.removed += removed;
+            }
+            None => {
+                index.insert(g.spec.merged_id, rows.len());
+                rows.push(TableRow {
+                    legacy_ids: vec![g.spec.id],
+                    merged_id: g.spec.merged_id,
+                    category: g.spec.category,
+                    avx_patterns: g.spec.avx_patterns.to_vec(),
+                    proposed_patterns: g.spec.proposed_patterns.to_vec(),
+                    avx_count: g.avx_instructions.len(),
+                    proposed_count: g.proposed_instructions.len(),
+                    removed,
+                    note: g.spec.note.to_string(),
+                });
+            }
+        }
+    }
+    rows
+}
+
+/// The §IV evaluation summary.
+#[derive(Debug, Clone)]
+pub struct Evaluation {
+    /// Per category: (paper's AVX10.2 count, our AVX10.2 count, proposed count).
+    pub per_category: Vec<(Category, usize, usize, usize)>,
+    pub legacy_groups: usize,
+    pub merged_groups: usize,
+    pub stats: TransformStats,
+    /// Distinct precision-suffix conventions before/after (readability
+    /// metric: B/W/D/Q + H/S/D + BF16/HF8/BF8/… vs the uniform
+    /// B/U/S/T × 8/16/32/64).
+    pub legacy_suffix_conventions: usize,
+    pub proposed_suffix_conventions: usize,
+}
+
+/// Compute the evaluation summary (E10).
+pub fn evaluate() -> Evaluation {
+    let per_category = Category::ALL
+        .iter()
+        .map(|&c| {
+            (
+                c,
+                c.paper_count(),
+                super::database::category_count(c),
+                super::database::proposed_category_count(c),
+            )
+        })
+        .collect();
+    let merged: BTreeSet<&str> = groups().iter().map(|g| g.spec.merged_id).collect();
+    Evaluation {
+        per_category,
+        legacy_groups: groups().len(),
+        merged_groups: merged.len(),
+        stats: transform_stats(),
+        legacy_suffix_conventions: legacy_conventions().len(),
+        proposed_suffix_conventions: 2, // B/U/S×width and P/S×T×width
+    }
+}
+
+/// The precision-naming conventions present in the legacy ISA (each one a
+/// distinct thing the reader must know — the paper's readability argument).
+pub fn legacy_conventions() -> Vec<&'static str> {
+    vec![
+        "B/W/D/Q bit quantities",
+        "S/U signedness prefixes (e.g. MAXS/MAXU)",
+        "H/S/D floating-point precisions",
+        "PBF16/NEPBF16 bfloat16 packed forms",
+        "HF8/BF8 OFP8 names",
+        "X-suffixed widening forms (PHX, PSX)",
+        "14-bit reciprocal approximations (RCP14)",
+        "NE exception-free variants",
+        "BIAS-prefixed conversions",
+        "32X4/64X2-style subvector shapes",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_cover_all_groups() {
+        let rows = table_rows();
+        assert_eq!(rows.len(), 21);
+        let total: usize = rows.iter().map(|r| r.avx_count).sum();
+        assert_eq!(total, super::super::database::total_count());
+    }
+
+    #[test]
+    fn unified_fp_row() {
+        let rows = table_rows();
+        let f = rows.iter().find(|r| r.merged_id == "F01-06").unwrap();
+        assert_eq!(f.legacy_ids, vec!["F01", "F02", "F03", "F04", "F05", "F06"]);
+        assert_eq!(f.avx_count, 133 + 8 + 50 + 37 + 8 + 14);
+        // 46 op families × {P,S} × {T8,T16,T32,T64}
+        assert_eq!(f.proposed_count, 46 * 8);
+    }
+
+    #[test]
+    fn conversion_row_shrinks_special_cases() {
+        let rows = table_rows();
+        let f7 = rows.iter().find(|r| r.merged_id == "F07").unwrap();
+        assert_eq!(f7.avx_count, 111);
+        assert_eq!(f7.proposed_count, 128); // closed 4×(2×4×4) matrix
+        assert!(f7.removed > 30, "removed={}", f7.removed);
+    }
+
+    #[test]
+    fn evaluation_summary() {
+        let e = evaluate();
+        assert_eq!(e.legacy_groups, 36);
+        assert_eq!(e.merged_groups, 21);
+        for (cat, paper, ours, _proposed) in &e.per_category {
+            match cat {
+                Category::Integer => assert_eq!(*ours, paper + 13),
+                _ => assert_eq!(ours, paper, "{cat:?}"),
+            }
+        }
+        assert!(e.legacy_suffix_conventions > e.proposed_suffix_conventions);
+    }
+}

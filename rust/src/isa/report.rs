@@ -1,0 +1,175 @@
+//! Rendering of Tables I–V and the §IV summary as plain text / markdown /
+//! TSV, used by the CLI, the examples and the bench harness.
+
+use super::database::Category;
+use super::proposed::{evaluate, table_rows, TableRow};
+
+/// Wrap a pattern string to a column width, breaking at `|`.
+fn wrap(s: &str, width: usize) -> Vec<String> {
+    let mut lines = Vec::new();
+    let mut cur = String::new();
+    for piece in s.split_inclusive('|') {
+        if !cur.is_empty() && cur.len() + piece.len() > width {
+            lines.push(std::mem::take(&mut cur));
+        }
+        cur.push_str(piece);
+    }
+    if !cur.is_empty() {
+        lines.push(cur);
+    }
+    lines
+}
+
+/// Render one category's table (Tables I–V) as fixed-width text.
+pub fn render_category_table(cat: Category) -> String {
+    let rows: Vec<TableRow> =
+        table_rows().into_iter().filter(|r| r.category == cat).collect();
+    let mut out = String::new();
+    let title = match cat {
+        Category::Bitwise => "Table I: bitwise instructions",
+        Category::Mask => "Table II: mask instructions",
+        Category::Integer => "Table III: integer instructions",
+        Category::FloatingPoint => "Table IV: floating-point instructions",
+        Category::Cryptographic => "Table V: cryptographic instructions",
+    };
+    out.push_str(&format!("{title}\n"));
+    out.push_str(&format!("{}\n", "=".repeat(title.len())));
+    let col = 58;
+    out.push_str(&format!(
+        "{:<8} {:<6} {:<col$}   {:<col$}\n",
+        "ID", "count", "AVX10.2 instructions", "proposed instructions"
+    ));
+    out.push_str(&format!("{}\n", "-".repeat(8 + 7 + 2 * col + 3)));
+    for r in &rows {
+        let id = r.legacy_ids.join("+");
+        let left: Vec<String> =
+            r.avx_patterns.iter().flat_map(|p| wrap(p, col)).collect();
+        let right: Vec<String> =
+            r.proposed_patterns.iter().flat_map(|p| wrap(p, col)).collect();
+        let n = left.len().max(right.len()).max(1);
+        for i in 0..n {
+            let l = left.get(i).map(String::as_str).unwrap_or("");
+            let rg = right.get(i).map(String::as_str).unwrap_or("");
+            if i == 0 {
+                out.push_str(&format!(
+                    "{:<8} {:<6} {:<col$}   {:<col$}\n",
+                    id,
+                    format!("{}→{}", r.avx_count, r.proposed_count),
+                    l,
+                    rg
+                ));
+            } else {
+                out.push_str(&format!("{:<8} {:<6} {:<col$}   {:<col$}\n", "", "", l, rg));
+            }
+        }
+    }
+    out
+}
+
+/// Render the §IV summary (E10).
+pub fn render_summary() -> String {
+    let e = evaluate();
+    let mut out = String::new();
+    out.push_str("AVX10.2 → takum streamlining summary (paper §IV)\n");
+    out.push_str("------------------------------------------------\n");
+    out.push_str(&format!(
+        "{:<16} {:>8} {:>8} {:>10}\n",
+        "category", "paper", "ours", "proposed"
+    ));
+    let (mut tp, mut to, mut tq) = (0usize, 0usize, 0usize);
+    for (cat, paper, ours, proposed) in &e.per_category {
+        out.push_str(&format!(
+            "{:<16} {:>8} {:>8} {:>10}\n",
+            cat.name(),
+            paper,
+            ours,
+            proposed
+        ));
+        tp += paper;
+        to += ours;
+        tq += proposed;
+    }
+    out.push_str(&format!("{:<16} {:>8} {:>8} {:>10}\n", "total", tp, to, tq));
+    out.push('\n');
+    out.push_str(&format!(
+        "instruction groups:        {} → {}\n",
+        e.legacy_groups, e.merged_groups
+    ));
+    out.push_str(&format!(
+        "naming conventions:        {} → {}\n",
+        e.legacy_suffix_conventions, e.proposed_suffix_conventions
+    ));
+    let s = &e.stats;
+    out.push_str(&format!(
+        "legacy mnemonics mapped:   {} of {} ({} removed: {} biased, {} inter-format)\n",
+        s.mapped,
+        s.legacy_total,
+        s.removed_biased + s.removed_interformat,
+        s.removed_biased,
+        s.removed_interformat
+    ));
+    out.push_str(&format!(
+        "distinct rename targets:   {} (merge ratio {:.2}×)\n",
+        s.distinct_targets,
+        s.mapped as f64 / s.distinct_targets as f64
+    ));
+    out.push_str(&format!(
+        "new via generalisation:    {} (e.g. 8-bit takum arithmetic)\n",
+        s.generalisation_new
+    ));
+    out
+}
+
+/// TSV export of all rows (for downstream plotting).
+pub fn render_tsv() -> String {
+    let mut out =
+        String::from("merged_id\tcategory\tavx_count\tproposed_count\tremoved\tnote\n");
+    for r in table_rows() {
+        out.push_str(&format!(
+            "{}\t{}\t{}\t{}\t{}\t{}\n",
+            r.merged_id,
+            r.category.name(),
+            r.avx_count,
+            r.proposed_count,
+            r.removed,
+            r.note
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_render_nonempty() {
+        for cat in Category::ALL {
+            let t = render_category_table(cat);
+            assert!(t.len() > 100, "{cat:?}");
+            assert!(t.contains("proposed"));
+        }
+    }
+
+    #[test]
+    fn summary_contains_headline_numbers() {
+        let s = render_summary();
+        assert!(s.contains("bitwise"));
+        assert!(s.contains("220"));
+        assert!(s.contains("363"));
+        assert!(s.contains("36 → 21"));
+    }
+
+    #[test]
+    fn tsv_has_all_rows() {
+        let tsv = render_tsv();
+        assert_eq!(tsv.lines().count(), 1 + 21);
+    }
+
+    #[test]
+    fn wrap_breaks_on_pipes() {
+        let lines = wrap("AAA|BBB|CCC|DDD", 8);
+        assert!(lines.len() >= 2);
+        assert!(lines.iter().all(|l| l.len() <= 8));
+    }
+}

@@ -1,0 +1,41 @@
+//! # takum-avx10
+//!
+//! Production-grade reproduction of *"Streamlining SIMD ISA Extensions with
+//! Takum Arithmetic: A Case Study on Intel AVX10.2"* (Hunhold, MOCAST 2025).
+//!
+//! The crate provides four subsystems, layered bottom-up:
+//!
+//! 1. [`num`] — complete software implementations of every number format the
+//!    paper discusses: logarithmic and linear takums for arbitrary bit-string
+//!    lengths, posits (`posit<n,2>`, Posit Standard 2022), and IEEE 754 plus
+//!    its derivatives (float16, bfloat16, OFP8 E4M3/E5M2, float32, float64),
+//!    together with a double-double extended-precision accumulator used as
+//!    the float128 stand-in for error measurement.
+//! 2. [`isa`] — a model of the AVX10.2 instruction set: a pattern-expansion
+//!    engine, the full 756-instruction database grouped exactly as the
+//!    paper's Tables I–V, and the streamlining transformation that derives
+//!    the proposed takum-based instruction set.
+//! 3. [`sim`] — an executable SIMD simulator (512-bit vector registers, mask
+//!    registers, assembler, execution engine) for the proposed takum ISA and
+//!    an AVX10.2 OFP8/BF16 baseline subset, so the proposed instructions are
+//!    not just names but runnable semantics.
+//! 4. [`matrix`] + [`harness`] — the sparse-matrix substrate, the synthetic
+//!    SuiteSparse-like collection, and the benchmark harness that regenerates
+//!    every figure and table of the paper's evaluation.
+//!
+//! The [`runtime`] module loads AOT-compiled JAX/Pallas computations
+//! (HLO text produced by `python/compile/aot.py`) through the PJRT C API and
+//! the [`coordinator`] drives the 1,401-matrix conversion sweep across a
+//! worker pool. Python never runs at request time.
+
+pub mod util;
+pub mod num;
+pub mod isa;
+pub mod sim;
+pub mod matrix;
+pub mod harness;
+pub mod runtime;
+pub mod coordinator;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,236 @@
+//! `takum-avx10` — CLI for the reproduction harness.
+//!
+//! ```text
+//! takum-avx10 figure1
+//! takum-avx10 figure2 --bits 8 [--count 1401] [--seed N] [--workers N]
+//!                      [--engine native|pjrt] [--plot]
+//! takum-avx10 tables  [--category b|m|i|f|c] [--summary] [--tsv]
+//! takum-avx10 simulate <program.s> [--dump vN:TYPE ...]
+//! takum-avx10 gemm    [--n 64] [--format t8|bf16|e4m3|e5m2]
+//! takum-avx10 artifacts
+//! ```
+//!
+//! (No `clap` in the offline image — a small hand-rolled parser below.)
+
+use anyhow::{anyhow, bail, Context, Result};
+use takum_avx10::coordinator::{sweep, Engine, SweepConfig};
+use takum_avx10::harness::{figure1, figure2, tables};
+use takum_avx10::isa::database::Category;
+use takum_avx10::matrix::generator::CollectionSpec;
+use takum_avx10::runtime::{default_artifact_dir, PjrtService};
+use takum_avx10::sim::{assemble, LaneType, Machine};
+
+/// Minimal flag parser: `--key value` and bare flags.
+struct Args {
+    positional: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(raw: &[String]) -> Args {
+        let mut positional = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut it = raw.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = match it.peek() {
+                    Some(v) if !v.starts_with("--") => it.next().unwrap().clone(),
+                    _ => "true".to_string(),
+                };
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Args { positional, flags }
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(String::as_str)
+    }
+
+    fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("bad value for --{key}: {v:?}")),
+        }
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+}
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(raw: &[String]) -> Result<()> {
+    let cmd = raw.first().map(String::as_str).unwrap_or("help");
+    let args = Args::parse(raw.get(1..).unwrap_or(&[]));
+    match cmd {
+        "figure1" => cmd_figure1(),
+        "figure2" => cmd_figure2(&args),
+        "tables" => cmd_tables(&args),
+        "simulate" => cmd_simulate(&args),
+        "gemm" => cmd_gemm(&args),
+        "artifacts" => cmd_artifacts(),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}; see `takum-avx10 help`"),
+    }
+}
+
+const HELP: &str = "\
+takum-avx10 — takum arithmetic + streamlined AVX10.2 reproduction harness
+
+commands:
+  figure1                         dynamic range vs bit-string length (Figure 1)
+  figure2 --bits 8|16|32          conversion-error CDF panel (Figure 2)
+          [--count N] [--seed S] [--workers W] [--engine native|pjrt] [--plot]
+  tables  [--category b|m|i|f|c]  AVX10.2 → takum instruction tables (I–V)
+          [--summary] [--tsv] [--rvv]
+  simulate FILE [--dump vN:TYPE]  run an assembly program on the simulator
+  gemm    [--n 64] [--format t8|t16|bf16|f16]  quantised GEMM on the simulator
+  artifacts                       list AOT artifacts loadable by the runtime
+";
+
+fn cmd_figure1() -> Result<()> {
+    print!("{}", figure1::render());
+    Ok(())
+}
+
+fn cmd_figure2(args: &Args) -> Result<()> {
+    let bits: u32 = args.get_parse("bits", 8)?;
+    let count: usize = args.get_parse("count", 1401)?;
+    let seed: u64 = args.get_parse("seed", CollectionSpec::default().seed)?;
+    let workers: usize = args.get_parse(
+        "workers",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+    )?;
+    let engine = match args.get("engine").unwrap_or("native") {
+        "native" => Engine::Native,
+        "pjrt" => Engine::Pjrt,
+        e => bail!("unknown engine {e:?}"),
+    };
+    let cfg = SweepConfig {
+        spec: CollectionSpec { seed, count },
+        bits,
+        workers,
+        engine,
+        ..Default::default()
+    };
+    let service = if engine == Engine::Pjrt {
+        Some(PjrtService::start(&default_artifact_dir()).context("starting PJRT service")?)
+    } else {
+        None
+    };
+    let handle = service.as_ref().map(|s| s.handle());
+    let (panel, metrics) = sweep(&cfg, handle.as_ref())?;
+    print!("{}", figure2::render_panel(&panel));
+    if args.has("plot") {
+        print!("{}", figure2::render_ascii_plot(&panel, 72, 20));
+    }
+    eprint!("{}", metrics.render());
+    Ok(())
+}
+
+fn cmd_tables(args: &Args) -> Result<()> {
+    let artifacts = tables::regenerate();
+    if args.has("tsv") {
+        print!("{}", artifacts.tsv);
+        return Ok(());
+    }
+    match args.get("category") {
+        Some(c) => {
+            let cat = Category::parse(c).ok_or_else(|| anyhow!("unknown category {c:?}"))?;
+            let t = artifacts.tables.iter().find(|(tc, _)| *tc == cat).unwrap();
+            print!("{}", t.1);
+        }
+        None => {
+            if !args.has("summary") {
+                for (_, t) in &artifacts.tables {
+                    println!("{t}");
+                }
+            }
+        }
+    }
+    if args.has("summary") || args.get("category").is_none() {
+        print!("{}", artifacts.summary);
+    }
+    if args.has("rvv") {
+        print!("\n{}", takum_avx10::isa::rvv::render());
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let path = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("simulate needs a program file"))?;
+    let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let prog = assemble(&src)?;
+    let mut m = Machine::new();
+    m.run(&prog)?;
+    println!("executed {} instructions", m.executed);
+    for (mn, n) in &m.counts {
+        println!("  {mn:<20} {n}");
+    }
+    // --dump v3:t16,v2:f32
+    if let Some(spec) = args.get("dump") {
+        for part in spec.split(',') {
+            let (reg, ty) = part
+                .split_once(':')
+                .ok_or_else(|| anyhow!("bad --dump spec {part:?}"))?;
+            let r: u8 = reg.trim_start_matches(['v', 'V']).parse()?;
+            let ty = parse_lane_type(ty)?;
+            println!("v{r} = {:?}", m.read_f64(r, ty));
+        }
+    }
+    Ok(())
+}
+
+fn parse_lane_type(s: &str) -> Result<LaneType> {
+    Ok(match s {
+        "t8" => LaneType::Takum(8),
+        "t16" => LaneType::Takum(16),
+        "t32" => LaneType::Takum(32),
+        "t64" => LaneType::Takum(64),
+        "f16" => LaneType::Mini(takum_avx10::num::F16),
+        "bf16" => LaneType::Mini(takum_avx10::num::BF16),
+        "e4m3" => LaneType::Mini(takum_avx10::num::E4M3),
+        "e5m2" => LaneType::Mini(takum_avx10::num::E5M2),
+        "f32" => LaneType::Mini(takum_avx10::num::F32),
+        "f64" => LaneType::Mini(takum_avx10::num::F64),
+        "u8" => LaneType::UInt(8),
+        "s32" => LaneType::SInt(32),
+        _ => bail!("unknown lane type {s:?}"),
+    })
+}
+
+/// Quantised GEMM on the simulator: C (wide) += A·B with A/B in a narrow
+/// format via the widening dot-product instruction — the `VDPPT8PT16`
+/// pipeline vs the AVX10.2 `VDPBF16PS` baseline.
+fn cmd_gemm(args: &Args) -> Result<()> {
+    let n: usize = args.get_parse("n", 64)?;
+    let fname = args.get("format").unwrap_or("t8");
+    let out = takum_avx10::harness::gemm::run_sim_gemm(n, fname, 0xBEEF)?;
+    print!("{out}");
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let dir = default_artifact_dir();
+    let service = PjrtService::start(&dir)?;
+    for n in service.handle().names()? {
+        println!("{n}");
+    }
+    Ok(())
+}

@@ -1,0 +1,76 @@
+//! Coordinate-format sparse matrix.
+
+/// A sparse matrix in COO form. Entries are not required to be sorted;
+/// duplicates are summed on CSR conversion (SuiteSparse convention).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Coo {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub rows: Vec<u32>,
+    pub cols: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl Coo {
+    pub fn new(nrows: usize, ncols: usize) -> Coo {
+        Coo { nrows, ncols, rows: Vec::new(), cols: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn with_capacity(nrows: usize, ncols: usize, cap: usize) -> Coo {
+        Coo {
+            nrows,
+            ncols,
+            rows: Vec::with_capacity(cap),
+            cols: Vec::with_capacity(cap),
+            values: Vec::with_capacity(cap),
+        }
+    }
+
+    /// Number of stored entries (before duplicate summation).
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn push(&mut self, r: u32, c: u32, v: f64) {
+        debug_assert!((r as usize) < self.nrows && (c as usize) < self.ncols);
+        self.rows.push(r);
+        self.cols.push(c);
+        self.values.push(v);
+    }
+
+    /// Frobenius norm (f64 accumulation; the evaluation uses
+    /// [`crate::matrix::norms`] with double-double instead).
+    pub fn frobenius(&self) -> f64 {
+        self.values.iter().map(|v| v * v).sum::<f64>().sqrt()
+    }
+
+    /// Largest absolute entry.
+    pub fn max_abs(&self) -> f64 {
+        self.values.iter().fold(0.0f64, |a, &v| a.max(v.abs()))
+    }
+
+    /// Smallest nonzero absolute entry (0 if the matrix is all-zero).
+    pub fn min_abs_nonzero(&self) -> f64 {
+        self.values
+            .iter()
+            .filter(|v| **v != 0.0)
+            .fold(f64::INFINITY, |a, &v| a.min(v.abs()))
+            .min(f64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_norms() {
+        let mut m = Coo::new(3, 3);
+        m.push(0, 0, 3.0);
+        m.push(1, 2, -4.0);
+        assert_eq!(m.nnz(), 2);
+        assert_eq!(m.frobenius(), 5.0);
+        assert_eq!(m.max_abs(), 4.0);
+        assert_eq!(m.min_abs_nonzero(), 3.0);
+    }
+}

@@ -1,0 +1,115 @@
+//! Compressed-sparse-row matrix with the operations the simulator's GEMM
+//! example and the harness need (SpMV, dense extraction).
+
+use super::coo::Coo;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Csr {
+    pub nrows: usize,
+    pub ncols: usize,
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u32>,
+    pub values: Vec<f64>,
+}
+
+impl Csr {
+    /// Build from COO, sorting rows/cols and summing duplicates.
+    pub fn from_coo(coo: &Coo) -> Csr {
+        let mut order: Vec<usize> = (0..coo.nnz()).collect();
+        order.sort_unstable_by_key(|&k| (coo.rows[k], coo.cols[k]));
+        let mut row_counts = vec![0u32; coo.nrows];
+        let mut indices: Vec<u32> = Vec::with_capacity(coo.nnz());
+        let mut values: Vec<f64> = Vec::with_capacity(coo.nnz());
+        let mut last: Option<(u32, u32)> = None;
+        for &k in &order {
+            let (r, c, v) = (coo.rows[k], coo.cols[k], coo.values[k]);
+            if last == Some((r, c)) {
+                *values.last_mut().unwrap() += v;
+            } else {
+                indices.push(c);
+                values.push(v);
+                row_counts[r as usize] += 1;
+                last = Some((r, c));
+            }
+        }
+        let mut indptr = vec![0u32; coo.nrows + 1];
+        for r in 0..coo.nrows {
+            indptr[r + 1] = indptr[r] + row_counts[r];
+        }
+        Csr { nrows: coo.nrows, ncols: coo.ncols, indptr, indices, values }
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// y = A·x (f64 reference SpMV).
+    pub fn spmv(&self, x: &[f64], y: &mut [f64]) {
+        assert_eq!(x.len(), self.ncols);
+        assert_eq!(y.len(), self.nrows);
+        for r in 0..self.nrows {
+            let mut acc = 0.0;
+            for k in self.indptr[r] as usize..self.indptr[r + 1] as usize {
+                acc += self.values[k] * x[self.indices[k] as usize];
+            }
+            y[r] = acc;
+        }
+    }
+
+    /// Extract a dense row-major block (for feeding the PJRT GEMM demo).
+    pub fn to_dense(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.nrows * self.ncols];
+        for r in 0..self.nrows {
+            for k in self.indptr[r] as usize..self.indptr[r + 1] as usize {
+                out[r * self.ncols + self.indices[k] as usize] = self.values[k];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        let mut m = Coo::new(3, 4);
+        m.push(2, 1, 5.0);
+        m.push(0, 0, 1.0);
+        m.push(0, 3, 2.0);
+        m.push(2, 1, 0.5); // duplicate, summed
+        m
+    }
+
+    #[test]
+    fn from_coo_sorts_and_sums() {
+        let c = Csr::from_coo(&sample());
+        assert_eq!(c.indptr, vec![0, 2, 2, 3]);
+        assert_eq!(c.indices, vec![0, 3, 1]);
+        assert_eq!(c.values, vec![1.0, 2.0, 5.5]);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let c = Csr::from_coo(&sample());
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let mut y = [0.0; 3];
+        c.spmv(&x, &mut y);
+        assert_eq!(y, [1.0 + 8.0, 0.0, 11.0]);
+        // Dense mirror agrees.
+        let d = c.to_dense();
+        for r in 0..3 {
+            let want: f64 = (0..4).map(|j| d[r * 4 + j] * x[j]).sum();
+            assert_eq!(y[r], want);
+        }
+    }
+
+    #[test]
+    fn empty_rows_ok() {
+        let mut m = Coo::new(5, 2);
+        m.push(4, 1, 7.0);
+        let c = Csr::from_coo(&m);
+        assert_eq!(c.indptr, vec![0, 0, 0, 0, 0, 1]);
+        assert_eq!(c.nnz(), 1);
+    }
+}

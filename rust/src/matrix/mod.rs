@@ -1,0 +1,12 @@
+//! Sparse-matrix substrate: COO/CSR storage, norms in double-double, and
+//! the seeded synthetic stand-in for the SuiteSparse collection used by
+//! Figure 2.
+
+pub mod coo;
+pub mod csr;
+pub mod norms;
+pub mod generator;
+
+pub use coo::Coo;
+pub use csr::Csr;
+pub use generator::{collection, CollectionSpec, DomainProfile, MatrixMeta};

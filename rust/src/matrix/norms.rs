@@ -1,0 +1,196 @@
+//! Relative 2-norm conversion error, the Figure 2 metric.
+//!
+//! MuFoLAB converts the matrix into the target format, converts back to
+//! float128, and reports `‖A − Â‖₂ / ‖A‖₂` over the stored entries. We
+//! accumulate both norms in double-double (the float128 stand-in, see
+//! DESIGN.md) and mark matrices whose entries *exceed the dynamic range*
+//! of the target format (±∞/NaN after conversion) with the paper's ∞
+//! symbol. Saturating formats (takum, posit) never produce the marker.
+
+use crate::num::{Dd, NumberFormat};
+
+/// Outcome of converting one matrix into one format.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ConversionError {
+    /// Relative 2-norm error (finite).
+    Finite(f64),
+    /// The format's dynamic range was exceeded (the figure's ∞ bucket).
+    Exceeded,
+}
+
+impl ConversionError {
+    pub fn as_f64(&self) -> f64 {
+        match self {
+            ConversionError::Finite(e) => *e,
+            ConversionError::Exceeded => f64::INFINITY,
+        }
+    }
+
+    pub fn is_exceeded(&self) -> bool {
+        matches!(self, ConversionError::Exceeded)
+    }
+}
+
+/// Relative 2-norm error of round-tripping `values` through `format`.
+///
+/// Hot path of the Figure 2 sweep. 8-bit formats take the
+/// [`crate::num::lut`] fast path (bisection-derived decision boundaries,
+/// bit-identical to the codec — §Perf iteration 2); everything else runs
+/// the codec directly.
+pub fn relative_error(values: &[f64], format: &dyn NumberFormat) -> ConversionError {
+    if format.bits() == 8 {
+        if let Some(table) = crate::num::lut::cached(&format.name()) {
+            return relative_error_lut(values, table);
+        }
+    }
+    let mut num = Dd::ZERO;
+    let mut den = Dd::ZERO;
+    for &v in values {
+        let rt = format.roundtrip(v);
+        if !rt.is_finite() && v.is_finite() {
+            return ConversionError::Exceeded;
+        }
+        let d = rt - v;
+        num = num.add_sq_f64(d);
+        den = den.add_sq_f64(v);
+    }
+    if den.hi == 0.0 {
+        return ConversionError::Finite(0.0);
+    }
+    ConversionError::Finite(num.div(den).sqrt().to_f64())
+}
+
+fn relative_error_lut(values: &[f64], table: &crate::num::lut::Lut8) -> ConversionError {
+    let mut num = Dd::ZERO;
+    let mut den = Dd::ZERO;
+    for &v in values {
+        if table.overflows(v) {
+            return ConversionError::Exceeded;
+        }
+        let rt = if v.is_nan() { f64::NAN } else { table.roundtrip(v) };
+        if !rt.is_finite() && v.is_finite() {
+            return ConversionError::Exceeded;
+        }
+        num = num.add_sq_f64(rt - v);
+        den = den.add_sq_f64(v);
+    }
+    if den.hi == 0.0 {
+        return ConversionError::Finite(0.0);
+    }
+    ConversionError::Finite(num.div(den).sqrt().to_f64())
+}
+
+/// Same, but with a caller-provided round-trip function (used by the
+/// PJRT-artifact path, where the conversion runs inside the AOT-compiled
+/// kernel and rust only post-processes the returned batch).
+pub fn relative_error_from_roundtrip(values: &[f64], roundtripped: &[f64]) -> ConversionError {
+    assert_eq!(values.len(), roundtripped.len());
+    let mut num = Dd::ZERO;
+    let mut den = Dd::ZERO;
+    for (&v, &rt) in values.iter().zip(roundtripped) {
+        if !rt.is_finite() && v.is_finite() {
+            return ConversionError::Exceeded;
+        }
+        num = num.add_sq_f64(rt - v);
+        den = den.add_sq_f64(v);
+    }
+    if den.hi == 0.0 {
+        return ConversionError::Finite(0.0);
+    }
+    ConversionError::Finite(num.div(den).sqrt().to_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::format_by_name;
+
+    #[test]
+    fn zero_error_for_representable() {
+        let f = format_by_name("takum16").unwrap();
+        // Powers of two and small integers are exact.
+        let vals = [1.0, 2.0, -4.0, 0.5, 0.0];
+        match relative_error(&vals, &*f) {
+            ConversionError::Finite(e) => assert_eq!(e, 0.0),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn exceeded_for_ieee_overflow() {
+        let f = format_by_name("e4m3").unwrap();
+        let vals = [1.0, 1000.0];
+        assert!(relative_error(&vals, &*f).is_exceeded());
+        // Saturating formats never exceed.
+        let t = format_by_name("takum8").unwrap();
+        assert!(!relative_error(&vals, &*t).is_exceeded());
+    }
+
+    #[test]
+    fn error_bounded_below_one_for_tapered_in_precision_region() {
+        // While the characteristic field is not truncated (|c| small
+        // enough that mantissa bits exist), takum8 rounds value-nearest
+        // and every per-entry error stays below 100% — the paper's
+        // "stability" region.
+        let t = format_by_name("takum8").unwrap();
+        let vals: Vec<f64> = (0..100).map(|i| 1.5f64.powi(i - 50) * 1.1).collect();
+        match relative_error(&vals, &*t) {
+            ConversionError::Finite(e) => assert!(e < 1.0, "e={e}"),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn extreme_scales_can_exceed_one_hundred_percent() {
+        // Far outside the precision region the takum8 characteristic is
+        // itself truncated: representable values are up to 16× apart and
+        // encoding-space rounding can overshoot by >100% — this is the
+        // mechanism behind the ~10% of matrices at/above 100% error in
+        // Figure 2's takum8 curve.
+        let t = format_by_name("takum8").unwrap();
+        let mut worst: f64 = 0.0;
+        for i in 0..400 {
+            let x = 2f64.powi(100) * (1.0 + i as f64 / 400.0 * 15.0);
+            let e = (t.roundtrip(x) - x).abs() / x;
+            worst = worst.max(e);
+        }
+        assert!(worst > 1.0, "worst={worst}");
+    }
+
+    #[test]
+    fn underflow_contributes_finite_error() {
+        let f = format_by_name("e4m3").unwrap();
+        // 1e-9 underflows to zero: per-entry 100% but finite.
+        let vals = [1.0, 1e-9];
+        match relative_error(&vals, &*f) {
+            ConversionError::Finite(e) => assert!(e > 0.0 && e < 1.0),
+            _ => panic!("underflow must not be the ∞ marker"),
+        }
+    }
+
+    #[test]
+    fn matches_known_quantization_error() {
+        // bfloat16 of 1+2^-9: rounds to 1+2^-7·? — error = 2^-9 exactly
+        // (RNE tie to even: 1+2^-9 is halfway between 1 and 1+2^-7 ⇒ 1).
+        let f = format_by_name("bfloat16").unwrap();
+        let x = 1.0 + (-9f64).exp2();
+        match relative_error(&[x], &*f) {
+            ConversionError::Finite(e) => {
+                let expect = ((-9f64).exp2()) / x;
+                assert!((e - expect).abs() < 1e-15, "e={e} expect={expect}");
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn roundtrip_variant_agrees() {
+        let f = format_by_name("posit16").unwrap();
+        let mut r = crate::util::rng::Rng::new(0x1234);
+        let vals: Vec<f64> = (0..500).map(|_| r.wide_f64(-30, 30)).collect();
+        let rts: Vec<f64> = vals.iter().map(|&v| f.roundtrip(v)).collect();
+        let a = relative_error(&vals, &*f).as_f64();
+        let b = relative_error_from_roundtrip(&vals, &rts).as_f64();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,454 @@
+//! Takum arithmetic operations — the computational core a downstream user
+//! of the proposed ISA would rely on (the semantics behind the simulator's
+//! `VADD/VSUB/VMUL/VDIV/VSQRT/VFMADD…PT*` instructions).
+//!
+//! Semantics follow the takum draft standard:
+//!
+//! * **NaR propagation**: any operation with a NaR input yields NaR; so do
+//!   undefined results (0/0, √negative, division by zero — takums have no
+//!   infinities to absorb them).
+//! * **Negation/abs are exact bit operations** (two's complement), never
+//!   rounding.
+//! * Rounding is the takum rounding (RNE on the bit string, saturating).
+//!
+//! Implementation: operands decode *exactly* into f64 (every `n ≤ 57`
+//! linear takum is an f64), the operation runs in f64, and the result is
+//! re-encoded. For `n ≤ 25` this is provably the correctly rounded takum
+//! result (double rounding is innocuous when the intermediate precision
+//! carries ≥ 2p+2 bits — Figueroa); for wider takums it can differ from
+//! the infinitely precise result by one unit in the last place in rare
+//! double-rounding cases, which we document rather than hide. Logarithmic
+//! takum ×, ÷, √ and ⁻¹ bypass f64 entirely through the **exact ℓ-domain**
+//! fixed-point path.
+
+use super::takum;
+use super::takum_linear;
+use super::bitstring::{mask64, neg_bits, sign_extend};
+
+/// Arithmetic over `n`-bit **linear** takums (bit-pattern in, bit-pattern
+/// out).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LinearOps {
+    pub n: u32,
+}
+
+impl LinearOps {
+    pub fn new(n: u32) -> LinearOps {
+        assert!((2..=64).contains(&n));
+        LinearOps { n }
+    }
+
+    #[inline]
+    fn nar(&self) -> u64 {
+        takum_linear::nar(self.n)
+    }
+
+    #[inline]
+    pub fn is_nar(&self, a: u64) -> bool {
+        a & mask64(self.n) == self.nar()
+    }
+
+    #[inline]
+    fn lift2(&self, a: u64, b: u64, f: impl Fn(f64, f64) -> f64) -> u64 {
+        if self.is_nar(a) || self.is_nar(b) {
+            return self.nar();
+        }
+        let x = takum_linear::decode(a, self.n);
+        let y = takum_linear::decode(b, self.n);
+        takum_linear::encode(f(x, y), self.n)
+    }
+
+    pub fn add(&self, a: u64, b: u64) -> u64 {
+        self.lift2(a, b, |x, y| x + y)
+    }
+
+    pub fn sub(&self, a: u64, b: u64) -> u64 {
+        self.lift2(a, b, |x, y| x - y)
+    }
+
+    pub fn mul(&self, a: u64, b: u64) -> u64 {
+        self.lift2(a, b, |x, y| x * y)
+    }
+
+    /// Division; `x/0` is NaR (takums have no ±∞).
+    pub fn div(&self, a: u64, b: u64) -> u64 {
+        if self.is_nar(a) || self.is_nar(b) {
+            return self.nar();
+        }
+        let y = takum_linear::decode(b, self.n);
+        if y == 0.0 {
+            return self.nar();
+        }
+        let x = takum_linear::decode(a, self.n);
+        takum_linear::encode(x / y, self.n)
+    }
+
+    /// Fused multiply-add `a·b + c` with a single rounding.
+    pub fn fma(&self, a: u64, b: u64, c: u64) -> u64 {
+        if self.is_nar(a) || self.is_nar(b) || self.is_nar(c) {
+            return self.nar();
+        }
+        let x = takum_linear::decode(a, self.n);
+        let y = takum_linear::decode(b, self.n);
+        let z = takum_linear::decode(c, self.n);
+        takum_linear::encode(x.mul_add(y, z), self.n)
+    }
+
+    /// Square root; NaR for negative inputs.
+    pub fn sqrt(&self, a: u64) -> u64 {
+        if self.is_nar(a) {
+            return self.nar();
+        }
+        let x = takum_linear::decode(a, self.n);
+        if x < 0.0 {
+            return self.nar();
+        }
+        takum_linear::encode(x.sqrt(), self.n)
+    }
+
+    /// Exact negation: two's complement of the bit string.
+    #[inline]
+    pub fn neg(&self, a: u64) -> u64 {
+        if self.is_nar(a) {
+            return self.nar();
+        }
+        neg_bits(a, self.n)
+    }
+
+    /// Exact absolute value (conditional two's complement).
+    #[inline]
+    pub fn abs(&self, a: u64) -> u64 {
+        let a = a & mask64(self.n);
+        if a >> (self.n - 1) & 1 == 1 && !self.is_nar(a) {
+            neg_bits(a, self.n)
+        } else {
+            a
+        }
+    }
+
+    /// Total-order comparison = signed integer comparison of the
+    /// encodings (NaR smallest). This is *the* paper §IV-A property.
+    #[inline]
+    pub fn cmp(&self, a: u64, b: u64) -> std::cmp::Ordering {
+        sign_extend(a, self.n).cmp(&sign_extend(b, self.n))
+    }
+
+    /// Minimum by total order (NaR loses against any real, posit-style
+    /// `minNum` semantics).
+    pub fn min(&self, a: u64, b: u64) -> u64 {
+        match (self.is_nar(a), self.is_nar(b)) {
+            (true, true) => self.nar(),
+            (true, false) => b & mask64(self.n),
+            (false, true) => a & mask64(self.n),
+            (false, false) => {
+                if self.cmp(a, b).is_le() {
+                    a & mask64(self.n)
+                } else {
+                    b & mask64(self.n)
+                }
+            }
+        }
+    }
+
+    pub fn max(&self, a: u64, b: u64) -> u64 {
+        match (self.is_nar(a), self.is_nar(b)) {
+            (true, true) => self.nar(),
+            (true, false) => b & mask64(self.n),
+            (false, true) => a & mask64(self.n),
+            (false, false) => {
+                if self.cmp(a, b).is_ge() {
+                    a & mask64(self.n)
+                } else {
+                    b & mask64(self.n)
+                }
+            }
+        }
+    }
+
+    /// Round to nearest integer (ties to even), still a takum.
+    pub fn round_int(&self, a: u64) -> u64 {
+        if self.is_nar(a) {
+            return self.nar();
+        }
+        let x = takum_linear::decode(a, self.n);
+        let r = x.round_ties_even();
+        takum_linear::encode(r, self.n)
+    }
+
+    /// `1/x` (NaR for 0).
+    pub fn recip(&self, a: u64) -> u64 {
+        self.div(takum_linear::encode(1.0, self.n), a)
+    }
+}
+
+/// Arithmetic over `n`-bit **logarithmic** takums. Multiplicative
+/// operations run exactly in the ℓ-domain (`ℓ(x·y) = ℓ(x) + ℓ(y)`, one
+/// final rounding); additive operations go through f64.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LogOps {
+    pub n: u32,
+}
+
+impl LogOps {
+    pub fn new(n: u32) -> LogOps {
+        assert!((2..=64).contains(&n));
+        LogOps { n }
+    }
+
+    #[inline]
+    fn nar(&self) -> u64 {
+        takum::nar(self.n)
+    }
+
+    #[inline]
+    pub fn is_nar(&self, a: u64) -> bool {
+        a & mask64(self.n) == self.nar()
+    }
+
+    /// Exact ℓ-domain multiply: one addition of fixed-point logarithms,
+    /// one rounding. Zero handling: `0 · x = 0`.
+    pub fn mul(&self, a: u64, b: u64) -> u64 {
+        if self.is_nar(a) || self.is_nar(b) {
+            return self.nar();
+        }
+        match (takum::log_fixed(a, self.n), takum::log_fixed(b, self.n)) {
+            (Some((sa, la)), Some((sb, lb))) => {
+                takum::encode_from_log_fixed(sa ^ sb, la + lb, self.n)
+            }
+            _ => 0, // one side is zero
+        }
+    }
+
+    /// Exact ℓ-domain divide; `x/0` is NaR, `0/x` is 0.
+    pub fn div(&self, a: u64, b: u64) -> u64 {
+        if self.is_nar(a) || self.is_nar(b) {
+            return self.nar();
+        }
+        match (takum::log_fixed(a, self.n), takum::log_fixed(b, self.n)) {
+            (_, None) => self.nar(),
+            (None, Some(_)) => 0,
+            (Some((sa, la)), Some((sb, lb))) => {
+                takum::encode_from_log_fixed(sa ^ sb, la - lb, self.n)
+            }
+        }
+    }
+
+    /// Exact ℓ-domain square root (halving the logarithm); NaR for
+    /// negatives.
+    pub fn sqrt(&self, a: u64) -> u64 {
+        if self.is_nar(a) {
+            return self.nar();
+        }
+        match takum::log_fixed(a, self.n) {
+            None => 0,
+            Some((true, _)) => self.nar(),
+            Some((false, l)) => takum::encode_from_log_fixed(false, l / 2, self.n),
+        }
+    }
+
+    /// Exact ℓ-domain reciprocal (logarithm negation — in hardware this is
+    /// nearly free, one of takum's selling points).
+    pub fn recip(&self, a: u64) -> u64 {
+        if self.is_nar(a) {
+            return self.nar();
+        }
+        match takum::log_fixed(a, self.n) {
+            None => self.nar(), // 1/0
+            Some((s, l)) => takum::encode_from_log_fixed(s, -l, self.n),
+        }
+    }
+
+    /// Addition through f64 (Gaussian-log hardware would do this with a
+    /// table; the rounding target is the same).
+    pub fn add(&self, a: u64, b: u64) -> u64 {
+        if self.is_nar(a) || self.is_nar(b) {
+            return self.nar();
+        }
+        let x = takum::decode(a, self.n);
+        let y = takum::decode(b, self.n);
+        takum::encode(x + y, self.n)
+    }
+
+    pub fn sub(&self, a: u64, b: u64) -> u64 {
+        if self.is_nar(b) {
+            return self.nar();
+        }
+        self.add(a, neg_bits(b, self.n))
+    }
+
+    #[inline]
+    pub fn neg(&self, a: u64) -> u64 {
+        if self.is_nar(a) {
+            return self.nar();
+        }
+        neg_bits(a, self.n)
+    }
+
+    #[inline]
+    pub fn cmp(&self, a: u64, b: u64) -> std::cmp::Ordering {
+        sign_extend(a, self.n).cmp(&sign_extend(b, self.n))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn enc(x: f64, n: u32) -> u64 {
+        takum_linear::encode(x, n)
+    }
+    fn dec(b: u64, n: u32) -> f64 {
+        takum_linear::decode(b, n)
+    }
+
+    #[test]
+    fn basic_identities_linear() {
+        for n in [8u32, 16, 32] {
+            let ops = LinearOps::new(n);
+            let one = enc(1.0, n);
+            let two = enc(2.0, n);
+            assert_eq!(ops.add(one, one), two, "1+1 n={n}");
+            assert_eq!(ops.mul(two, two), enc(4.0, n));
+            assert_eq!(ops.sub(two, one), one);
+            assert_eq!(ops.div(two, two), one);
+            assert_eq!(ops.sqrt(enc(4.0, n)), two);
+            assert_eq!(ops.fma(two, two, one), enc(5.0, n));
+            assert_eq!(ops.recip(two), enc(0.5, n));
+            assert_eq!(ops.round_int(enc(2.5, n)), two); // ties to even
+        }
+    }
+
+    #[test]
+    fn nar_propagates_everywhere() {
+        let ops = LinearOps::new(16);
+        let nar = takum_linear::nar(16);
+        let one = enc(1.0, 16);
+        for r in [
+            ops.add(nar, one),
+            ops.sub(one, nar),
+            ops.mul(nar, nar),
+            ops.div(one, nar),
+            ops.fma(nar, one, one),
+            ops.sqrt(nar),
+            ops.neg(nar),
+        ] {
+            assert_eq!(r, nar);
+        }
+        // Undefined results are NaR too.
+        assert_eq!(ops.div(one, 0), nar); // 1/0
+        assert_eq!(ops.sqrt(enc(-4.0, 16)), nar);
+    }
+
+    #[test]
+    fn neg_abs_are_exact_bit_ops() {
+        let ops = LinearOps::new(12);
+        let mut r = Rng::new(0xA1);
+        for _ in 0..2000 {
+            let x = r.wide_f64(-100, 100);
+            let b = enc(x, 12);
+            assert_eq!(dec(ops.neg(b), 12), -dec(b, 12));
+            assert_eq!(dec(ops.abs(b), 12), dec(b, 12).abs());
+        }
+    }
+
+    #[test]
+    fn zero_is_additive_identity_and_annihilator() {
+        let ops = LinearOps::new(16);
+        let mut r = Rng::new(0xA2);
+        for _ in 0..1000 {
+            let b = enc(r.wide_f64(-50, 50), 16);
+            assert_eq!(ops.add(b, 0), b);
+            assert_eq!(ops.mul(b, 0), 0);
+        }
+    }
+
+    #[test]
+    fn min_max_follow_total_order() {
+        let ops = LinearOps::new(16);
+        let mut r = Rng::new(0xA3);
+        for _ in 0..2000 {
+            let a = enc(r.wide_f64(-50, 50), 16);
+            let b = enc(r.wide_f64(-50, 50), 16);
+            let (lo, hi) = (ops.min(a, b), ops.max(a, b));
+            assert!(dec(lo, 16) <= dec(hi, 16));
+            assert!(lo == a || lo == b);
+        }
+        // NaR loses.
+        let nar = takum_linear::nar(16);
+        let one = enc(1.0, 16);
+        assert_eq!(ops.min(nar, one), one);
+        assert_eq!(ops.max(nar, one), one);
+    }
+
+    #[test]
+    fn commutativity_and_rounding_sanity() {
+        let ops = LinearOps::new(16);
+        let mut r = Rng::new(0xA4);
+        for _ in 0..2000 {
+            let a = enc(r.wide_f64(-30, 30), 16);
+            let b = enc(r.wide_f64(-30, 30), 16);
+            assert_eq!(ops.add(a, b), ops.add(b, a));
+            assert_eq!(ops.mul(a, b), ops.mul(b, a));
+            // result must be the takum rounding of the f64 op
+            let want = enc(dec(a, 16) + dec(b, 16), 16);
+            assert_eq!(ops.add(a, b), want);
+        }
+    }
+
+    #[test]
+    fn log_mul_exact_in_l_domain() {
+        let ops = LogOps::new(16);
+        let mut r = Rng::new(0xA5);
+        for _ in 0..2000 {
+            let x = r.log_uniform(1e-8, 1e8);
+            let y = r.log_uniform(1e-8, 1e8);
+            let (a, b) = (takum::encode(x, 16), takum::encode(y, 16));
+            let prod = ops.mul(a, b);
+            // ℓ-domain result must be within one final rounding of the
+            // f64 product of the *decoded* operands.
+            let direct = takum::encode(takum::decode(a, 16) * takum::decode(b, 16), 16);
+            let diff = (sign_extend(prod, 16) - sign_extend(direct, 16)).abs();
+            assert!(diff <= 1, "x={x} y={y} prod={prod:#x} direct={direct:#x}");
+        }
+    }
+
+    #[test]
+    fn log_recip_and_sqrt_roundtrip() {
+        let ops = LogOps::new(16);
+        let mut r = Rng::new(0xA6);
+        for _ in 0..1000 {
+            let x = r.log_uniform(1e-6, 1e6);
+            let a = takum::encode(x, 16);
+            // 1/(1/x) = x exactly in the ℓ-domain (negation is exact).
+            assert_eq!(ops.recip(ops.recip(a)), a, "x={x}");
+            // sqrt(x)² ≈ x within one ulp.
+            let s = ops.sqrt(a);
+            let sq = ops.mul(s, s);
+            let diff = (sign_extend(sq, 16) - sign_extend(a, 16)).abs();
+            assert!(diff <= 1, "x={x}");
+        }
+    }
+
+    #[test]
+    fn log_mul_sign_rules() {
+        let ops = LogOps::new(12);
+        let p = takum::encode(3.0, 12);
+        let m = takum::encode(-3.0, 12);
+        assert_eq!(takum::decode(ops.mul(p, m), 12), -takum::decode(ops.mul(p, p), 12));
+        assert_eq!(ops.mul(m, m), ops.mul(p, p));
+        assert_eq!(ops.mul(p, 0), 0);
+        assert_eq!(ops.div(0, p), 0);
+        assert_eq!(ops.div(p, 0), takum::nar(12));
+    }
+
+    #[test]
+    fn saturating_behaviour_under_arithmetic() {
+        // Overflow saturates to maxpos instead of NaR/∞.
+        let ops = LinearOps::new(8);
+        let big = enc(1e60, 8);
+        assert_eq!(ops.mul(big, big), takum_linear::max_pos_bits(8));
+        let tiny = enc(1e-60, 8);
+        assert_eq!(ops.mul(tiny, tiny), 1); // minpos, never 0
+    }
+}

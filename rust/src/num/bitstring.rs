@@ -1,0 +1,190 @@
+//! Extended-bit-string helpers shared by all codecs.
+//!
+//! Encoders in this crate construct the positive magnitude of a value as an
+//! exact wide integer (`u128`) whose bit layout is the format's own
+//! encoding extended with extra fraction bits, then call [`round_rne`] /
+//! [`round_rne_saturating`] exactly once. Because all supported encodings
+//! are value-monotonic in their positive half, integer rounding here *is*
+//! round-to-nearest-even in value space.
+
+/// A mask of `n` low bits (`n` ≤ 64). `n == 64` yields all-ones.
+#[inline]
+pub const fn mask64(n: u32) -> u64 {
+    if n >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << n) - 1
+    }
+}
+
+/// A mask of `n` low bits of a `u128`.
+#[inline]
+pub const fn mask128(n: u32) -> u128 {
+    if n >= 128 {
+        u128::MAX
+    } else {
+        (1u128 << n) - 1
+    }
+}
+
+/// Round-to-nearest, ties-to-even: drop the low `drop` bits of `x`.
+/// `drop ≥ 128` rounds everything away (result 0 unless it rounds up to 1,
+/// which requires magnitude ≥ half an ulp — impossible to express then, so 0).
+#[inline]
+pub fn round_rne(x: u128, drop: u32) -> u128 {
+    if drop == 0 {
+        return x;
+    }
+    if drop >= 128 {
+        return 0;
+    }
+    let keep = x >> drop;
+    let rem = x & mask128(drop);
+    let half = 1u128 << (drop - 1);
+    if rem > half || (rem == half && (keep & 1) == 1) {
+        keep + 1
+    } else {
+        keep
+    }
+}
+
+/// Round a positive extended encoding down to an `n`-bit tapered encoding
+/// (takum/posit): RNE with **saturation** — the result is clamped to
+/// `[1, 2^(n-1) - 1]`, i.e. a nonzero value never becomes zero and never
+/// spills into the NaR / negative half.
+#[inline]
+pub fn round_rne_saturating(ext: u128, ext_bits: u32, n: u32) -> u64 {
+    debug_assert!(n >= 2 && n <= 64);
+    let max_pos = mask64(n - 1); // 0111…1
+    let rounded: u128 = if ext_bits <= n {
+        // Exactly representable — left-align into the n-bit string.
+        ext << (n - ext_bits)
+    } else {
+        round_rne(ext, ext_bits - n)
+    };
+    if rounded == 0 {
+        1 // saturate towards zero: smallest positive
+    } else if rounded > max_pos as u128 {
+        max_pos // saturate away from zero (also catches carry into NaR)
+    } else {
+        rounded as u64
+    }
+}
+
+/// Two's-complement negation within an `n`-bit string.
+#[inline]
+pub const fn neg_bits(bits: u64, n: u32) -> u64 {
+    bits.wrapping_neg() & mask64(n)
+}
+
+/// Sign-extend the low `n` bits of `bits` to a signed 64-bit integer.
+/// For takums and posits this yields the *total-order key*: comparing two
+/// encodings as signed integers compares their real values.
+#[inline]
+pub const fn sign_extend(bits: u64, n: u32) -> i64 {
+    let sh = 64 - n;
+    ((bits << sh) as i64) >> sh
+}
+
+/// Decompose a finite nonzero f64 into (sign, unbiased exponent, 52-bit
+/// fraction), normalizing subnormals so the implicit leading 1 convention
+/// holds for every input.
+#[inline]
+pub fn f64_parts(x: f64) -> (bool, i32, u64) {
+    debug_assert!(x.is_finite() && x != 0.0);
+    let bits = x.to_bits();
+    let sign = bits >> 63 == 1;
+    let raw_exp = ((bits >> 52) & 0x7FF) as i32;
+    let frac = bits & mask64(52);
+    if raw_exp == 0 {
+        // Subnormal: value = frac · 2^-1074 with leading bit at index j.
+        let j = 63 - frac.leading_zeros(); // frac != 0 since x != 0
+        let e = j as i32 - 1074;
+        let frac = (frac << (52 - j)) & mask64(52);
+        (sign, e, frac)
+    } else {
+        (sign, raw_exp - 1023, frac)
+    }
+}
+
+/// Rebuild an f64 from (sign, unbiased exponent, 52-bit fraction); exact
+/// whenever `-1022 ≤ e ≤ 1023` (always true for the formats in this crate).
+#[inline]
+pub fn f64_from_parts(sign: bool, e: i32, frac52: u64) -> f64 {
+    debug_assert!((-1022..=1023).contains(&e));
+    let bits = ((sign as u64) << 63) | (((e + 1023) as u64) << 52) | (frac52 & mask64(52));
+    f64::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn masks() {
+        assert_eq!(mask64(0), 0);
+        assert_eq!(mask64(8), 0xFF);
+        assert_eq!(mask64(64), u64::MAX);
+        assert_eq!(mask128(128), u128::MAX);
+    }
+
+    #[test]
+    fn rne_basic() {
+        // 0b1011 dropped 2 bits: keep=0b10, rem=0b11 > half → 0b11.
+        assert_eq!(round_rne(0b1011, 2), 0b11);
+        // tie 0b1010: keep=0b10 even → stays.
+        assert_eq!(round_rne(0b1010, 2), 0b10);
+        // tie 0b1110: keep=0b11 odd → rounds up to 0b100.
+        assert_eq!(round_rne(0b1110, 2), 0b100);
+        assert_eq!(round_rne(42, 0), 42);
+        assert_eq!(round_rne(u128::MAX, 200), 0);
+    }
+
+    #[test]
+    fn saturating_never_zero_never_nar() {
+        // A tiny remainder rounds to the smallest positive, not zero.
+        assert_eq!(round_rne_saturating(1, 40, 8), 1);
+        // All-ones rounds up but must not reach 2^(n-1).
+        assert_eq!(round_rne_saturating(mask128(40), 40, 8), 0x7F);
+    }
+
+    #[test]
+    fn exact_left_align() {
+        assert_eq!(round_rne_saturating(0b0101, 4, 8), 0b0101_0000);
+    }
+
+    #[test]
+    fn neg_bits_involution() {
+        for n in [8u32, 12, 16, 33, 64] {
+            for b in [1u64, 5, mask64(n - 1), mask64(n) - 3] {
+                assert_eq!(neg_bits(neg_bits(b, n), n), b & mask64(n));
+            }
+        }
+    }
+
+    #[test]
+    fn sign_extend_works() {
+        assert_eq!(sign_extend(0xFF, 8), -1);
+        assert_eq!(sign_extend(0x80, 8), -128);
+        assert_eq!(sign_extend(0x7F, 8), 127);
+        assert_eq!(sign_extend(u64::MAX, 64), -1);
+    }
+
+    #[test]
+    fn f64_parts_roundtrip() {
+        for x in [1.0, -2.5, 3.14159, 1e-300, -1e300, 4.9e-324, 1e-310] {
+            let (s, e, f) = f64_parts(x);
+            if e >= -1022 {
+                assert_eq!(f64_from_parts(s, e, f), x, "x={x}");
+            } else {
+                // Subnormal inputs: reconstruct in two exact steps
+                // (2f64.powi(-1074) alone would underflow to 0).
+                let v = (1.0 + f as f64 / (1u64 << 52) as f64)
+                    * ((e + 600) as f64).exp2()
+                    * (-600f64).exp2()
+                    * if s { -1.0 } else { 1.0 };
+                assert_eq!(v, x, "x={x} v={v}");
+            }
+        }
+    }
+}

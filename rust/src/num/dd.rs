@@ -1,0 +1,218 @@
+//! Double-double arithmetic (~106-bit significand) — the float128 stand-in
+//! used to measure conversion errors exactly enough for Figure 2.
+//!
+//! A value is represented as an unevaluated sum `hi + lo` with
+//! `|lo| ≤ ulp(hi)/2`. The classic error-free transformations (two-sum,
+//! two-product via FMA) give exact accumulation of f64 products, which is
+//! all the relative 2-norm computation needs: errors down to takum32's
+//! ~1e-11 are resolved with ~21 spare digits.
+
+/// Double-double number.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Dd {
+    pub hi: f64,
+    pub lo: f64,
+}
+
+/// Error-free sum: a + b = s + e exactly (Knuth two-sum).
+#[inline]
+fn two_sum(a: f64, b: f64) -> (f64, f64) {
+    let s = a + b;
+    let bb = s - a;
+    let e = (a - (s - bb)) + (b - bb);
+    (s, e)
+}
+
+/// Error-free sum assuming |a| ≥ |b| (fast two-sum).
+#[inline]
+fn quick_two_sum(a: f64, b: f64) -> (f64, f64) {
+    let s = a + b;
+    let e = b - (s - a);
+    (s, e)
+}
+
+/// Error-free product via FMA: a·b = p + e exactly.
+#[inline]
+fn two_prod(a: f64, b: f64) -> (f64, f64) {
+    let p = a * b;
+    let e = a.mul_add(b, -p);
+    (p, e)
+}
+
+impl Dd {
+    pub const ZERO: Dd = Dd { hi: 0.0, lo: 0.0 };
+    pub const ONE: Dd = Dd { hi: 1.0, lo: 0.0 };
+
+    #[inline]
+    pub fn from_f64(x: f64) -> Dd {
+        Dd { hi: x, lo: 0.0 }
+    }
+
+    /// Renormalise a raw (hi, lo) pair.
+    #[inline]
+    fn renorm(hi: f64, lo: f64) -> Dd {
+        let (s, e) = quick_two_sum(hi, lo);
+        Dd { hi: s, lo: e }
+    }
+
+    #[inline]
+    pub fn add(self, other: Dd) -> Dd {
+        let (s1, s2) = two_sum(self.hi, other.hi);
+        let (t1, t2) = two_sum(self.lo, other.lo);
+        let (s1, s2) = quick_two_sum(s1, s2 + t1);
+        Dd::renorm(s1, s2 + t2)
+    }
+
+    #[inline]
+    pub fn add_f64(self, x: f64) -> Dd {
+        let (s, e) = two_sum(self.hi, x);
+        Dd::renorm(s, e + self.lo)
+    }
+
+    #[inline]
+    pub fn sub(self, other: Dd) -> Dd {
+        self.add(other.neg())
+    }
+
+    #[inline]
+    pub fn neg(self) -> Dd {
+        Dd { hi: -self.hi, lo: -self.lo }
+    }
+
+    #[inline]
+    pub fn mul(self, other: Dd) -> Dd {
+        let (p, e) = two_prod(self.hi, other.hi);
+        let e = e + self.hi * other.lo + self.lo * other.hi;
+        Dd::renorm(p, e)
+    }
+
+    /// Exact square of an f64, accumulated: `self + x²`.
+    #[inline]
+    pub fn add_sq_f64(self, x: f64) -> Dd {
+        let (p, e) = two_prod(x, x);
+        self.add(Dd { hi: p, lo: e })
+    }
+
+    /// `self + x·y` with the product computed exactly.
+    #[inline]
+    pub fn add_prod_f64(self, x: f64, y: f64) -> Dd {
+        let (p, e) = two_prod(x, y);
+        self.add(Dd { hi: p, lo: e })
+    }
+
+    pub fn div(self, other: Dd) -> Dd {
+        // One Newton refinement over the f64 quotient.
+        let q1 = self.hi / other.hi;
+        let r = self.sub(other.mul(Dd::from_f64(q1)));
+        let q2 = r.hi / other.hi;
+        let r2 = r.sub(other.mul(Dd::from_f64(q2)));
+        let q3 = r2.hi / other.hi;
+        Dd::renorm(q1, q2).add_f64(q3)
+    }
+
+    pub fn sqrt(self) -> Dd {
+        if self.hi == 0.0 {
+            return Dd::ZERO;
+        }
+        debug_assert!(self.hi > 0.0, "sqrt of negative dd");
+        // Karp's trick: y ≈ 1/√x in f64, refine once in dd.
+        let y = 1.0 / self.hi.sqrt();
+        let s = self.hi * y;
+        let (p, e) = two_prod(s, s);
+        let d = self.sub(Dd { hi: p, lo: e });
+        let corr = d.hi * (y * 0.5);
+        Dd::renorm(s, corr)
+    }
+
+    #[inline]
+    pub fn to_f64(self) -> f64 {
+        self.hi + self.lo
+    }
+
+    #[inline]
+    pub fn is_finite(self) -> bool {
+        self.hi.is_finite()
+    }
+
+    #[inline]
+    pub fn abs(self) -> Dd {
+        if self.hi < 0.0 || (self.hi == 0.0 && self.lo < 0.0) {
+            self.neg()
+        } else {
+            self
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn exact_small_sums() {
+        // 0.1 + 0.2 in dd is closer to 0.3 than plain f64.
+        let s = Dd::from_f64(0.1).add_f64(0.2);
+        assert!((s.to_f64() - 0.3).abs() <= (0.1f64 + 0.2 - 0.3).abs());
+    }
+
+    #[test]
+    fn catastrophic_cancellation_resolved() {
+        // (1 + 2^-80) - 1 = 2^-80 is invisible to f64 but not to dd built
+        // from exact products: (2^-40)² = 2^-80.
+        let tiny = Dd::ZERO.add_sq_f64((-40f64).exp2());
+        let x = Dd::ONE.add(tiny);
+        let diff = x.sub(Dd::ONE);
+        assert_eq!(diff.to_f64(), (-80f64).exp2());
+    }
+
+    #[test]
+    fn mul_exactness() {
+        let a = Dd::from_f64(1.0 + (-30f64).exp2());
+        let sq = a.mul(a);
+        // (1+u)² = 1 + 2u + u²; u² = 2^-60 must be present.
+        let expected_lo = 2f64 * (-30f64).exp2() + (-60f64).exp2();
+        assert_eq!(sq.sub(Dd::ONE).to_f64(), expected_lo);
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        let mut r = Rng::new(0xDD);
+        for _ in 0..1000 {
+            let x = r.log_uniform(1e-15, 1e15);
+            let s = Dd::from_f64(x).sqrt();
+            let back = s.mul(s).to_f64();
+            assert!((back - x).abs() <= x * 1e-29, "x={x} back={back}");
+        }
+    }
+
+    #[test]
+    fn div_mul_roundtrip() {
+        let mut r = Rng::new(0xDD2);
+        for _ in 0..1000 {
+            let a = r.log_uniform(1e-10, 1e10);
+            let b = r.log_uniform(1e-10, 1e10);
+            let q = Dd::from_f64(a).div(Dd::from_f64(b));
+            let back = q.mul(Dd::from_f64(b)).to_f64();
+            assert!((back - a).abs() <= a * 1e-28, "a={a} b={b} back={back}");
+        }
+    }
+
+    #[test]
+    fn norm_accumulation_beats_f64() {
+        // Sum of squares of values spanning 12 orders of magnitude: dd keeps
+        // the small contributions that f64 drops.
+        let big = 1e6;
+        let small = 1e-6;
+        let mut dd = Dd::ZERO.add_sq_f64(big);
+        let mut plain = big * big;
+        for _ in 0..1000 {
+            dd = dd.add_sq_f64(small);
+            plain += small * small;
+        }
+        let exact_tail = 1000.0 * small * small;
+        assert_eq!(plain, big * big); // f64 lost everything
+        let dd_tail = dd.sub(Dd::ZERO.add_sq_f64(big)).to_f64();
+        assert!((dd_tail - exact_tail).abs() < exact_tail * 1e-10);
+    }
+}

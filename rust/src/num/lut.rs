@@ -1,0 +1,301 @@
+//! Lookup-table fast paths for the 8-bit formats.
+//!
+//! The matrix sweep round-trips hundreds of millions of values through the
+//! 8-bit codecs, so a 256-entry decode table plus a branch-light encode is
+//! the L3 hot-path optimisation recorded in EXPERIMENTS.md §Perf.
+//!
+//! Correctness: the encode path binary-searches over *decision boundaries
+//! extracted from the real codec by bisection* (in the monotone total-order
+//! coordinate of f64), so it reproduces the codec bit-for-bit — including
+//! encoding-space (rather than value-space) rounding at regime boundaries
+//! and RNE ties. For IEEE-style formats the table saturates where the
+//! codec would overflow to ±∞/NaN, i.e. it implements the `encode_sat`
+//! variant; callers that need the ∞ marker must consult
+//! [`Lut8::overflows`] first.
+
+use super::traits::NumberFormat;
+use std::sync::OnceLock;
+
+/// Map f64 to a monotone u64 key (total order, -∞ < … < -0 ≈ +0 < … < +∞).
+#[inline]
+fn f64_key(x: f64) -> u64 {
+    let b = x.to_bits();
+    if b >> 63 == 1 {
+        !b
+    } else {
+        b | 0x8000_0000_0000_0000
+    }
+}
+
+#[inline]
+fn key_f64(k: u64) -> f64 {
+    if k >> 63 == 1 {
+        f64::from_bits(k & 0x7FFF_FFFF_FFFF_FFFF)
+    } else {
+        f64::from_bits(!k)
+    }
+}
+
+/// A fully tabulated format (8- or 16-bit; table sizes are 2^n).
+pub struct Lut8 {
+    name: String,
+    /// decode[b] for every bit pattern b.
+    decode: Vec<f64>,
+    /// Finite representable values ascending, parallel to `sorted_bits`.
+    sorted_vals: Vec<f64>,
+    sorted_bits: Vec<u32>,
+    /// boundaries[i] = smallest f64 (as monotone key) that the codec
+    /// encodes to `sorted_bits[i+1]`.
+    boundaries: Vec<u64>,
+    /// Finite magnitude beyond which the codec leaves the finite table
+    /// (IEEE overflow); `None` for saturating formats.
+    overflow_abs: Option<f64>,
+}
+
+impl Lut8 {
+    /// Tabulate any 8- or 16-bit `NumberFormat`.
+    pub fn build(f: &dyn NumberFormat) -> Lut8 {
+        assert!(f.bits() == 8 || f.bits() == 16, "Lut supports 8/16-bit formats");
+        let size = 1usize << f.bits();
+        let mut decode = vec![0.0f64; size];
+        let mut pairs: Vec<(f64, u32)> = Vec::with_capacity(size);
+        for b in 0..size as u32 {
+            let v = f.decode(b as u64);
+            decode[b as usize] = v;
+            if f.is_special(b as u64) || !v.is_finite() {
+                continue;
+            }
+            // Skip the redundant -0.0 pattern (IEEE formats).
+            if v == 0.0 && b != 0 {
+                continue;
+            }
+            pairs.push((v, b));
+        }
+        pairs.sort_by(|a, b| a.0.total_cmp(&b.0));
+        let (sorted_vals, sorted_bits): (Vec<f64>, Vec<u32>) = pairs.into_iter().unzip();
+
+        // Normalised codec encode: -0/+0 fold onto pattern 0.
+        let enc = |x: f64| -> Option<u32> {
+            let bits = f.encode(x);
+            if f.is_special(bits) || !f.decode(bits).is_finite() {
+                return None; // overflowed out of the finite table
+            }
+            if f.decode(bits) == 0.0 {
+                return Some(0);
+            }
+            Some(bits as u32)
+        };
+
+        // Bisect each adjacent pair for the decision boundary.
+        let mut boundaries = Vec::with_capacity(sorted_vals.len().saturating_sub(1));
+        for i in 0..sorted_vals.len().saturating_sub(1) {
+            let (mut lo, mut hi) = (f64_key(sorted_vals[i]), f64_key(sorted_vals[i + 1]));
+            debug_assert_eq!(enc(key_f64(lo)), Some(sorted_bits[i]));
+            debug_assert_eq!(enc(key_f64(hi)), Some(sorted_bits[i + 1]));
+            while hi - lo > 1 {
+                let mid = lo + (hi - lo) / 2;
+                if enc(key_f64(mid)) == Some(sorted_bits[i]) {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            boundaries.push(hi);
+        }
+
+        // Overflow threshold (IEEE formats only): bisect past max finite.
+        let max_fin = *sorted_vals.last().unwrap();
+        let overflow_abs = if enc(max_fin * 2.0).is_none() {
+            let (mut lo, mut hi) = (f64_key(max_fin), f64_key(max_fin * 4.0));
+            while hi - lo > 1 {
+                let mid = lo + (hi - lo) / 2;
+                if enc(key_f64(mid)).is_some() {
+                    lo = mid;
+                } else {
+                    hi = mid;
+                }
+            }
+            Some(key_f64(hi))
+        } else {
+            None
+        };
+
+        Lut8 { name: f.name(), decode, sorted_vals, sorted_bits, boundaries, overflow_abs }
+    }
+
+    #[inline]
+    pub fn decode8(&self, bits: u8) -> f64 {
+        self.decode[bits as usize]
+    }
+
+    #[inline]
+    pub fn decode_bits(&self, bits: u64) -> f64 {
+        self.decode[bits as usize]
+    }
+
+    /// Bit pattern the codec would produce (saturating at the table edges
+    /// — see module docs for IEEE overflow).
+    #[inline]
+    pub fn encode8(&self, x: f64) -> u8 {
+        self.encode_bits(x) as u8
+    }
+
+    #[inline]
+    pub fn encode_bits(&self, x: f64) -> u64 {
+        debug_assert!(!x.is_nan());
+        let k = f64_key(x);
+        let idx = self.boundaries.partition_point(|&b| b <= k);
+        self.sorted_bits[idx] as u64
+    }
+
+    /// Round-trip through the format.
+    #[inline]
+    pub fn roundtrip(&self, x: f64) -> f64 {
+        self.sorted_vals[{
+            let k = f64_key(x);
+            self.boundaries.partition_point(|&b| b <= k)
+        }]
+    }
+
+    /// True if the codec would leave the finite value set (±∞/NaN) for
+    /// this finite input — the Figure 2 ∞ marker.
+    #[inline]
+    pub fn overflows(&self, x: f64) -> bool {
+        match self.overflow_abs {
+            Some(t) => x.abs() >= t,
+            None => false,
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+}
+
+/// Process-wide cached tables for the 8-bit Figure 2 formats.
+///
+/// §Perf note: 16-bit tables were tried (iteration 3) and *regressed* the
+/// sweep by ~45% — the 17-step binary search over a 512 KiB boundary
+/// array is cache-hostile compared to the arithmetic codec. The generic
+/// [`Lut8::build`] still supports 16-bit tables (used by tests and the
+/// simulator's future decode paths); only the sweep fast path is
+/// restricted to 8 bits.
+pub fn cached(name: &str) -> Option<&'static Lut8> {
+    static TABLES: OnceLock<Vec<Lut8>> = OnceLock::new();
+    let tables = TABLES.get_or_init(|| {
+        ["takum8", "takum_log8", "posit8", "e4m3", "e5m2"]
+            .iter()
+            .map(|n| Lut8::build(&*super::registry::format_by_name(n).unwrap()))
+            .collect()
+    });
+    tables.iter().find(|t| t.name() == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::registry::format_by_name;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn key_is_monotone() {
+        let xs = [-1e300, -1.0, -1e-300, -0.0, 0.0, 1e-300, 1.0, 1e300];
+        for w in xs.windows(2) {
+            assert!(f64_key(w[0]) <= f64_key(w[1]), "{} {}", w[0], w[1]);
+        }
+        assert_eq!(key_f64(f64_key(3.75)), 3.75);
+        assert_eq!(key_f64(f64_key(-2.5)), -2.5);
+    }
+
+    /// Exhaustive-ish agreement with the codec, including regime-boundary
+    /// rounding and ties.
+    #[test]
+    fn lut_matches_codec() {
+        for name in ["takum8", "takum_log8", "posit8", "e4m3", "e5m2"] {
+            let f = format_by_name(name).unwrap();
+            let lut = Lut8::build(&*f);
+            let mut r = Rng::new(0x107);
+            for _ in 0..50_000 {
+                let x = r.wide_f64(-40, 40);
+                let cb = f.encode(x);
+                if f.is_special(cb) || !f.decode(cb).is_finite() {
+                    // codec overflowed (IEEE): the LUT must flag it.
+                    assert!(lut.overflows(x), "{name} x={x}");
+                    continue;
+                }
+                assert!(!lut.overflows(x), "{name} x={x}");
+                let a = f.decode(cb);
+                let b = lut.decode8(lut.encode8(x));
+                assert_eq!(a, b, "{name} x={x} codec={cb:#x} lut={:#x}", lut.encode8(x));
+            }
+            // Every representable value maps to itself.
+            for b in 0u16..256 {
+                let v = f.decode(b as u64);
+                if !v.is_finite() {
+                    continue;
+                }
+                assert_eq!(lut.roundtrip(v), v, "{name} b={b:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn boundary_values_decided_like_codec() {
+        // Probe just below/above each boundary for takum8 and posit8.
+        for name in ["takum8", "posit8"] {
+            let f = format_by_name(name).unwrap();
+            let lut = Lut8::build(&*f);
+            for i in 0..lut.boundaries.len() {
+                let b = lut.boundaries[i];
+                for k in [b - 1, b] {
+                    let x = key_f64(k);
+                    assert_eq!(
+                        lut.decode8(lut.encode8(x)),
+                        f.decode(f.encode(x)),
+                        "{name} boundary {i} k={k:#x}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn overflow_thresholds() {
+        let e4 = cached("e4m3").unwrap();
+        assert!(e4.overflows(465.0));
+        assert!(!e4.overflows(463.0)); // rounds down to 448
+        let t8 = cached("takum8").unwrap();
+        assert!(!t8.overflows(1e300));
+    }
+
+    #[test]
+    fn cached_tables_exist() {
+        for n in ["takum8", "takum_log8", "posit8", "e4m3", "e5m2"] {
+            assert!(cached(n).is_some(), "{n}");
+        }
+        assert!(cached("float16").is_none());
+    }
+
+    #[test]
+    fn sixteen_bit_tables_match_codec() {
+        for name in ["takum16", "posit16", "float16", "bfloat16"] {
+            let f = format_by_name(name).unwrap();
+            let lut = Lut8::build(&*f);
+            let lut = &lut;
+            let mut r = Rng::new(0x1616);
+            for _ in 0..20_000 {
+                let x = r.wide_f64(-60, 60);
+                let cb = f.encode(x);
+                if f.is_special(cb) || !f.decode(cb).is_finite() {
+                    assert!(lut.overflows(x), "{name} x={x}");
+                    continue;
+                }
+                assert_eq!(
+                    lut.decode_bits(lut.encode_bits(x)),
+                    f.decode(cb),
+                    "{name} x={x}"
+                );
+            }
+        }
+    }
+}

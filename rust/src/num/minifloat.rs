@@ -1,0 +1,384 @@
+//! IEEE 754 floating-point and its derivative formats, parameterised.
+//!
+//! One spec covers every fixed-width format in AVX10.2: float16 (E5M10),
+//! bfloat16 (E8M7), OFP8 E4M3 and E5M2, float32 (E8M23) and float64
+//! (E11M52). The OCP OFP8 specification's two NaN conventions are both
+//! supported: E5M2 is IEEE-like (has infinities, a NaN space), E4M3 is
+//! "finite" — no infinities, NaN only at `S.1111.111`, which frees
+//! `S.1111.110` to encode the maximum magnitude 448.
+//!
+//! Encoding is RNE with gradual underflow (subnormals) and two overflow
+//! policies: the IEEE default (round to ±∞, or to NaN for infinity-free
+//! E4M3) used by Figure 2's dynamic-range-exceedance accounting, and a
+//! *saturating* mode modelling AVX10.2's `…S` conversion variants
+//! (e.g. `VCVTPH2BF8S`).
+
+use super::bitstring::{f64_parts, mask64, round_rne};
+
+/// How the all-ones exponent space is interpreted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NanStyle {
+    /// IEEE 754: exponent all ones ⇒ ±∞ (mantissa 0) or NaN (mantissa ≠ 0).
+    Ieee,
+    /// OFP8 E4M3 "finite": only `S.1111.111` is NaN; no infinities; the
+    /// rest of the top binade holds ordinary values.
+    Fn,
+}
+
+/// A fixed-width IEEE-style binary format.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MinifloatSpec {
+    pub name: &'static str,
+    pub exp_bits: u32,
+    pub man_bits: u32,
+    pub bias: i32,
+    pub nan: NanStyle,
+}
+
+/// float16 / binary16.
+pub const F16: MinifloatSpec =
+    MinifloatSpec { name: "float16", exp_bits: 5, man_bits: 10, bias: 15, nan: NanStyle::Ieee };
+/// bfloat16.
+pub const BF16: MinifloatSpec =
+    MinifloatSpec { name: "bfloat16", exp_bits: 8, man_bits: 7, bias: 127, nan: NanStyle::Ieee };
+/// OFP8 E4M3 (finite style, max 448).
+pub const E4M3: MinifloatSpec =
+    MinifloatSpec { name: "e4m3", exp_bits: 4, man_bits: 3, bias: 7, nan: NanStyle::Fn };
+/// OFP8 E5M2 (IEEE style, max 57344).
+pub const E5M2: MinifloatSpec =
+    MinifloatSpec { name: "e5m2", exp_bits: 5, man_bits: 2, bias: 15, nan: NanStyle::Ieee };
+/// float32 / binary32.
+pub const F32: MinifloatSpec =
+    MinifloatSpec { name: "float32", exp_bits: 8, man_bits: 23, bias: 127, nan: NanStyle::Ieee };
+/// float64 / binary64.
+pub const F64: MinifloatSpec =
+    MinifloatSpec { name: "float64", exp_bits: 11, man_bits: 52, bias: 1023, nan: NanStyle::Ieee };
+
+impl MinifloatSpec {
+    /// Total width in bits.
+    #[inline]
+    pub const fn bits(&self) -> u32 {
+        1 + self.exp_bits + self.man_bits
+    }
+
+    #[inline]
+    const fn exp_mask(&self) -> u64 {
+        mask64(self.exp_bits)
+    }
+
+    #[inline]
+    const fn man_mask(&self) -> u64 {
+        mask64(self.man_bits)
+    }
+
+    /// Positive bit pattern of the largest finite value.
+    pub const fn max_finite_bits(&self) -> u64 {
+        match self.nan {
+            // Exponent up to all-ones-minus-one, mantissa all ones.
+            NanStyle::Ieee => ((self.exp_mask() - 1) << self.man_bits) | self.man_mask(),
+            // Finite style: all-ones exponent, mantissa all-ones-minus-one.
+            NanStyle::Fn => (self.exp_mask() << self.man_bits) | (self.man_mask() - 1),
+        }
+    }
+
+    /// Canonical (quiet, positive) NaN pattern.
+    pub const fn nan_bits(&self) -> u64 {
+        match self.nan {
+            NanStyle::Ieee => (self.exp_mask() << self.man_bits) | (1 << (self.man_bits - 1)),
+            NanStyle::Fn => (self.exp_mask() << self.man_bits) | self.man_mask(),
+        }
+    }
+
+    /// Positive infinity pattern (IEEE style only).
+    pub const fn inf_bits(&self) -> u64 {
+        self.exp_mask() << self.man_bits
+    }
+
+    #[inline]
+    const fn sign_bit(&self) -> u64 {
+        1 << (self.exp_bits + self.man_bits)
+    }
+
+    /// Largest finite magnitude as f64.
+    pub fn max_finite(&self) -> f64 {
+        self.decode(self.max_finite_bits())
+    }
+
+    /// Smallest positive (subnormal) magnitude as f64.
+    pub fn min_positive(&self) -> f64 {
+        self.decode(1)
+    }
+
+    /// Smallest positive *normal* magnitude.
+    pub fn min_normal(&self) -> f64 {
+        self.decode(1 << self.man_bits)
+    }
+
+    /// True if the pattern is NaN.
+    pub fn is_nan(&self, bits: u64) -> bool {
+        let mag = bits & !self.sign_bit() & mask64(self.bits());
+        match self.nan {
+            NanStyle::Ieee => mag > self.inf_bits(),
+            NanStyle::Fn => mag == self.nan_bits(),
+        }
+    }
+
+    /// True if the pattern is ±∞.
+    pub fn is_inf(&self, bits: u64) -> bool {
+        match self.nan {
+            NanStyle::Ieee => bits & !self.sign_bit() & mask64(self.bits()) == self.inf_bits(),
+            NanStyle::Fn => false,
+        }
+    }
+
+    /// Encode with IEEE semantics: RNE, gradual underflow to ±0, overflow
+    /// to ±∞ (or NaN for `Fn` formats, matching OFP8 non-saturating
+    /// conversion).
+    pub fn encode(&self, x: f64) -> u64 {
+        self.encode_impl(x, false)
+    }
+
+    /// Encode with saturation on overflow (AVX10.2 `…S` conversion
+    /// variants): finite inputs clamp to ±max_finite instead of producing
+    /// ±∞/NaN.
+    pub fn encode_sat(&self, x: f64) -> u64 {
+        self.encode_impl(x, true)
+    }
+
+    fn encode_impl(&self, x: f64, saturate: bool) -> u64 {
+        if x.is_nan() {
+            return self.nan_bits();
+        }
+        let sign = x.is_sign_negative();
+        let sign_bits = if sign { self.sign_bit() } else { 0 };
+        if x == 0.0 {
+            return sign_bits;
+        }
+        if x.is_infinite() {
+            // OCP OFP8 saturation mode maps even ±∞ to ±max_norm; the
+            // non-saturating path keeps ∞ (IEEE) or yields NaN (E4M3-style,
+            // which has no infinities to keep).
+            return match (self.nan, saturate) {
+                (_, true) => sign_bits | self.max_finite_bits(),
+                (NanStyle::Ieee, false) => sign_bits | self.inf_bits(),
+                (NanStyle::Fn, false) => sign_bits | self.nan_bits(),
+            };
+        }
+
+        let (_, e, f52) = f64_parts(x.abs());
+        let e_b = e + self.bias;
+        // §Perf iteration 6: the normal-range case needs only u64 (the
+        // packed encoding is e_b·2^52 + f52 < 2^63 for every spec here).
+        if e_b >= 1 && (e_b as u64) < (1 << 11) {
+            let ext = ((e_b as u64) << 52) | f52;
+            let drop = 52 - self.man_bits;
+            let keep = if drop == 0 {
+                ext // float64: exact, nothing to round
+            } else {
+                let keep = ext >> drop;
+                let rem = ext & mask64(drop);
+                let half = 1u64 << (drop - 1);
+                keep + u64::from(rem > half || (rem == half && keep & 1 == 1))
+            };
+            return self.finish_encode(keep, sign_bits, saturate);
+        }
+        // Combined positive encoding with extended fraction, rounded once.
+        let (exp_field, frac_ext, frac_bits): (u128, u128, u32) = if e_b >= 1 {
+            (e_b as u128, f52 as u128, 52)
+        } else {
+            // Subnormal: significand (1.f52) shifted right by 1 - e_b.
+            let sh = (1 - e_b) as u32;
+            if sh > 64 {
+                // Below half the smallest subnormal for every spec here.
+                return sign_bits;
+            }
+            (0, (1u128 << 52) | f52 as u128, 52 + sh)
+        };
+        let ext = (exp_field << frac_bits) | frac_ext;
+        let keep = round_rne(ext, frac_bits - self.man_bits) as u64;
+        self.finish_encode(keep, sign_bits, saturate)
+    }
+
+    #[inline]
+    fn finish_encode(&self, keep: u64, sign_bits: u64, saturate: bool) -> u64 {
+        let overflow_at = match self.nan {
+            NanStyle::Ieee => self.inf_bits(),
+            NanStyle::Fn => self.nan_bits(),
+        };
+        if keep >= overflow_at {
+            if saturate {
+                sign_bits | self.max_finite_bits()
+            } else {
+                match self.nan {
+                    NanStyle::Ieee => sign_bits | self.inf_bits(),
+                    NanStyle::Fn => self.nan_bits(), // OFP8: overflow ⇒ NaN
+                }
+            }
+        } else {
+            sign_bits | keep
+        }
+    }
+
+    /// Decode to f64 (always exact: every format here fits inside f64).
+    pub fn decode(&self, bits: u64) -> f64 {
+        let bits = bits & mask64(self.bits());
+        let sign = bits & self.sign_bit() != 0;
+        let mag = bits & !self.sign_bit();
+        if self.is_nan(bits) {
+            return f64::NAN;
+        }
+        if self.is_inf(bits) {
+            return if sign { f64::NEG_INFINITY } else { f64::INFINITY };
+        }
+        let exp_field = (mag >> self.man_bits) & self.exp_mask();
+        let man = mag & self.man_mask();
+        let val = if exp_field == 0 {
+            // Subnormal: man · 2^(1 - bias - man_bits).
+            man as f64 * ((1 - self.bias - self.man_bits as i32) as f64).exp2()
+        } else {
+            let e = exp_field as i32 - self.bias;
+            (1.0 + man as f64 / (1u64 << self.man_bits) as f64) * (e as f64).exp2()
+        };
+        if sign {
+            -val
+        } else {
+            val
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_default;
+
+    #[test]
+    fn e4m3_ocp_spec_values() {
+        // OCP OFP8: E4M3 max = 448, min subnormal = 2^-9, min normal = 2^-6.
+        assert_eq!(E4M3.max_finite(), 448.0);
+        assert_eq!(E4M3.min_positive(), (-9f64).exp2());
+        assert_eq!(E4M3.min_normal(), (-6f64).exp2());
+        // S.1111.111 is the only NaN; no infinities.
+        assert!(E4M3.is_nan(0x7F));
+        assert!(E4M3.is_nan(0xFF));
+        assert!(!E4M3.is_nan(0x7E));
+        assert!(!E4M3.is_inf(0x78));
+        assert_eq!(E4M3.decode(0x7E), 448.0);
+    }
+
+    #[test]
+    fn e5m2_ocp_spec_values() {
+        assert_eq!(E5M2.max_finite(), 57344.0);
+        assert_eq!(E5M2.min_positive(), (-16f64).exp2());
+        assert_eq!(E5M2.min_normal(), (-14f64).exp2());
+        assert!(E5M2.is_inf(0x7C));
+        assert!(E5M2.is_nan(0x7D));
+        assert_eq!(E5M2.decode(0x7C), f64::INFINITY);
+        assert_eq!(E5M2.decode(0xFC), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn f16_bf16_spot_values() {
+        assert_eq!(F16.encode(1.0), 0x3C00);
+        assert_eq!(F16.decode(0x3C00), 1.0);
+        assert_eq!(F16.max_finite(), 65504.0);
+        assert_eq!(BF16.encode(1.0), 0x3F80);
+        // bfloat16 truncation of π: RNE(π) in E8M7 = 3.140625.
+        assert_eq!(BF16.decode(BF16.encode(std::f64::consts::PI)), 3.140625);
+        assert_eq!(BF16.max_finite(), f64::from_bits(0x47EFE00000000000) * 1.0);
+    }
+
+    #[test]
+    fn f32_matches_hardware_cast() {
+        let mut r = crate::util::rng::Rng::new(0xF32);
+        for _ in 0..20_000 {
+            let x = r.wide_f64(-300, 300);
+            let ours = F32.decode(F32.encode(x));
+            let hw = x as f32 as f64;
+            assert_eq!(ours, hw, "x={x}");
+        }
+        // Overflow → inf, like the hardware cast.
+        assert_eq!(F32.decode(F32.encode(1e300)), f64::INFINITY);
+        assert_eq!(F32.decode(F32.encode(-1e300)), f64::NEG_INFINITY);
+    }
+
+    #[test]
+    fn f64_is_identity() {
+        for x in [0.0, -0.0, 1.5, -3.25e-200, 7.1e250, f64::MIN_POSITIVE] {
+            let b = F64.encode(x);
+            assert_eq!(F64.decode(b).to_bits(), x.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn e4m3_overflow_to_nan_and_saturating_variant() {
+        // Non-saturating OFP8 conversion: |x| > 448 ⇒ NaN.
+        assert!(E4M3.is_nan(E4M3.encode(500.0)));
+        assert!(E4M3.is_nan(E4M3.encode(f64::INFINITY)));
+        // Saturating (`VCVT…S`) variant clamps.
+        assert_eq!(E4M3.decode(E4M3.encode_sat(500.0)), 448.0);
+        assert_eq!(E4M3.decode(E4M3.encode_sat(-1e30)), -448.0);
+        // Rounding boundary: values ≥ 464 = (448+480)/2 are "overflow" even
+        // under RNE; 460 rounds to 448.
+        assert_eq!(E4M3.decode(E4M3.encode(460.0)), 448.0);
+        assert!(E4M3.is_nan(E4M3.encode(465.0)));
+    }
+
+    #[test]
+    fn e5m2_overflow_to_inf() {
+        assert_eq!(E5M2.decode(E5M2.encode(1e6)), f64::INFINITY);
+        assert_eq!(E5M2.decode(E5M2.encode_sat(1e6)), 57344.0);
+    }
+
+    #[test]
+    fn underflow_to_zero() {
+        assert_eq!(E4M3.encode(1e-10), 0);
+        assert_eq!(E4M3.encode(-1e-10), E4M3.sign_bit());
+        // Half of min subnormal is the RNE boundary (tie → even → 0).
+        let half_min = E4M3.min_positive() * 0.5;
+        assert_eq!(E4M3.encode(half_min), 0);
+        assert_eq!(E4M3.encode(half_min * 1.01), 1);
+    }
+
+    #[test]
+    fn subnormal_roundtrip_exhaustive_e4m3_e5m2_f16() {
+        for spec in [E4M3, E5M2, F16] {
+            for bits in 0..(1u64 << spec.bits()) {
+                if spec.is_nan(bits) {
+                    continue;
+                }
+                let v = spec.decode(bits);
+                let b2 = spec.encode(v);
+                // -0.0 and +0.0 both map back to themselves.
+                assert_eq!(b2, bits, "{} bits={bits:#x} v={v}", spec.name);
+            }
+        }
+    }
+
+    #[test]
+    fn rne_ties_to_even_e4m3() {
+        // Between 1.0 (0x38) and 1.125 (0x39): tie 1.0625 → even (0x38).
+        assert_eq!(E4M3.encode(1.0625), 0x38);
+        // Between 1.125 and 1.25: tie 1.1875 → even (0x3A).
+        assert_eq!(E4M3.encode(1.1875), 0x3A);
+    }
+
+    #[test]
+    fn prop_f16_nearest() {
+        check_default(
+            "f16 rounds to nearest",
+            0xF16,
+            |r| r.wide_f64(-14, 15),
+            |&x| {
+                let b = F16.encode(x);
+                let v = F16.decode(b);
+                let ulp = (x.abs().log2().floor() as i32 - 10).max(-24);
+                if (v - x).abs() <= (ulp as f64).exp2() * 0.5 + 1e-300 {
+                    Ok(())
+                } else {
+                    Err(format!("x={x} v={v}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,30 @@
+//! Software implementations of every number format discussed by the paper.
+//!
+//! All codecs share one architecture: encoding builds an *exact extended
+//! bit string* of the positive magnitude (header fields + 52-bit f64
+//! fraction) and rounds **once**, in encoding space, round-to-nearest with
+//! ties-to-even. For every format here the positive encodings are
+//! value-monotonic integers, so encoding-space RNE equals value-space RNE
+//! within a binade and a rounding carry that crosses a field boundary lands
+//! on the correct next representable value.
+//!
+//! Tapered formats (takum, posit) saturate — they never round a nonzero
+//! finite value to zero or to NaR. IEEE-style formats underflow to zero and
+//! overflow to infinity (or NaN for the infinity-free OFP8 E4M3).
+
+pub mod arith;
+pub mod bitstring;
+pub mod takum;
+pub mod takum_linear;
+pub mod posit;
+pub mod minifloat;
+pub mod dd;
+pub mod traits;
+pub mod registry;
+pub mod lut;
+
+pub use arith::{LinearOps, LogOps};
+pub use dd::Dd;
+pub use minifloat::{MinifloatSpec, NanStyle, BF16, E4M3, E5M2, F16, F32, F64};
+pub use registry::{all_formats, format_by_name, formats_at_width, FormatRef};
+pub use traits::NumberFormat;

@@ -1,0 +1,218 @@
+//! Format registry: construct any format the paper discusses by name, and
+//! enumerate the per-width format sets used by Figure 2.
+
+use super::minifloat::{MinifloatSpec, BF16, E4M3, E5M2, F16, F32, F64};
+use super::traits::NumberFormat;
+use super::{posit, takum, takum_linear};
+
+/// A logarithmic takum of width n.
+#[derive(Debug, Clone, Copy)]
+pub struct TakumLog(pub u32);
+
+/// A linear takum of width n (the Figure 1/2 variant).
+#[derive(Debug, Clone, Copy)]
+pub struct TakumLinear(pub u32);
+
+/// A posit⟨n,2⟩ of width n.
+#[derive(Debug, Clone, Copy)]
+pub struct Posit(pub u32);
+
+/// A fixed IEEE-style format.
+#[derive(Debug, Clone, Copy)]
+pub struct Minifloat(pub MinifloatSpec);
+
+impl NumberFormat for TakumLog {
+    fn name(&self) -> String {
+        format!("takum_log{}", self.0)
+    }
+    fn bits(&self) -> u32 {
+        self.0
+    }
+    fn encode(&self, x: f64) -> u64 {
+        takum::encode(x, self.0)
+    }
+    fn decode(&self, bits: u64) -> f64 {
+        takum::decode(bits, self.0)
+    }
+    fn is_special(&self, bits: u64) -> bool {
+        bits & super::bitstring::mask64(self.0) == takum::nar(self.0)
+    }
+    fn min_positive(&self) -> f64 {
+        takum::decode(1, self.0)
+    }
+    fn max_finite(&self) -> f64 {
+        takum::decode(takum::max_pos_bits(self.0), self.0)
+    }
+}
+
+impl NumberFormat for TakumLinear {
+    fn name(&self) -> String {
+        format!("takum{}", self.0)
+    }
+    fn bits(&self) -> u32 {
+        self.0
+    }
+    fn encode(&self, x: f64) -> u64 {
+        takum_linear::encode(x, self.0)
+    }
+    fn decode(&self, bits: u64) -> f64 {
+        takum_linear::decode(bits, self.0)
+    }
+    fn is_special(&self, bits: u64) -> bool {
+        bits & super::bitstring::mask64(self.0) == takum_linear::nar(self.0)
+    }
+    fn min_positive(&self) -> f64 {
+        takum_linear::min_pos(self.0)
+    }
+    fn max_finite(&self) -> f64 {
+        takum_linear::max_pos(self.0)
+    }
+}
+
+impl NumberFormat for Posit {
+    fn name(&self) -> String {
+        format!("posit{}", self.0)
+    }
+    fn bits(&self) -> u32 {
+        self.0
+    }
+    fn encode(&self, x: f64) -> u64 {
+        posit::encode(x, self.0)
+    }
+    fn decode(&self, bits: u64) -> f64 {
+        posit::decode(bits, self.0)
+    }
+    fn is_special(&self, bits: u64) -> bool {
+        bits & super::bitstring::mask64(self.0) == posit::nar(self.0)
+    }
+    fn min_positive(&self) -> f64 {
+        posit::min_pos(self.0)
+    }
+    fn max_finite(&self) -> f64 {
+        posit::max_pos(self.0)
+    }
+}
+
+impl NumberFormat for Minifloat {
+    fn name(&self) -> String {
+        self.0.name.to_string()
+    }
+    fn bits(&self) -> u32 {
+        self.0.bits()
+    }
+    fn encode(&self, x: f64) -> u64 {
+        self.0.encode(x)
+    }
+    fn decode(&self, bits: u64) -> f64 {
+        self.0.decode(bits)
+    }
+    fn is_special(&self, bits: u64) -> bool {
+        self.0.is_nan(bits) || self.0.is_inf(bits)
+    }
+    fn min_positive(&self) -> f64 {
+        self.0.min_positive()
+    }
+    fn max_finite(&self) -> f64 {
+        self.0.max_finite()
+    }
+}
+
+/// Shared-ownership format handle.
+pub type FormatRef = std::sync::Arc<dyn NumberFormat>;
+
+/// Construct a format by name: `takum{n}`, `takum_log{n}`, `posit{n}`,
+/// `float16|float32|float64|bfloat16|e4m3|e5m2`.
+pub fn format_by_name(name: &str) -> Option<FormatRef> {
+    use std::sync::Arc;
+    let fixed: Option<MinifloatSpec> = match name {
+        "float16" | "f16" => Some(F16),
+        "bfloat16" | "bf16" => Some(BF16),
+        "e4m3" | "hf8" => Some(E4M3),
+        "e5m2" | "bf8" => Some(E5M2),
+        "float32" | "f32" => Some(F32),
+        "float64" | "f64" => Some(F64),
+        _ => None,
+    };
+    if let Some(spec) = fixed {
+        return Some(Arc::new(Minifloat(spec)));
+    }
+    if let Some(n) = name.strip_prefix("takum_log").and_then(|s| s.parse().ok()) {
+        if (2..=64).contains(&n) {
+            return Some(Arc::new(TakumLog(n)));
+        }
+    }
+    if let Some(n) = name.strip_prefix("takum").and_then(|s| s.parse::<u32>().ok()) {
+        if (2..=64).contains(&n) {
+            return Some(Arc::new(TakumLinear(n)));
+        }
+    }
+    if let Some(n) = name.strip_prefix("posit").and_then(|s| s.parse::<u32>().ok()) {
+        if (3..=64).contains(&n) {
+            return Some(Arc::new(Posit(n)));
+        }
+    }
+    None
+}
+
+/// The format line-up of one Figure 2 panel (a bit width), in the paper's
+/// plotting order.
+pub fn formats_at_width(bits: u32) -> Vec<FormatRef> {
+    let names: &[&str] = match bits {
+        8 => &["e4m3", "e5m2", "posit8", "takum8"],
+        16 => &["float16", "bfloat16", "posit16", "takum16"],
+        32 => &["float32", "posit32", "takum32"],
+        _ => return Vec::new(),
+    };
+    names.iter().map(|n| format_by_name(n).unwrap()).collect()
+}
+
+/// Every format referenced anywhere in the evaluation.
+pub fn all_formats() -> Vec<FormatRef> {
+    [
+        "e4m3", "e5m2", "posit8", "takum8", "takum_log8", "float16", "bfloat16", "posit16",
+        "takum16", "takum_log16", "float32", "posit32", "takum32", "takum_log32", "float64",
+        "posit64", "takum64", "takum_log64",
+    ]
+    .iter()
+    .map(|n| format_by_name(n).unwrap())
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        for name in ["takum8", "takum_log12", "posit32", "e4m3", "e5m2", "bfloat16", "float64"] {
+            let f = format_by_name(name).unwrap();
+            assert_eq!(f.name(), name.to_string());
+        }
+        assert!(format_by_name("takum1").is_none());
+        assert!(format_by_name("posit65").is_none());
+        assert!(format_by_name("fp4").is_none());
+    }
+
+    #[test]
+    fn widths_consistent() {
+        for f in all_formats() {
+            assert!(f.bits() >= 8 && f.bits() <= 64);
+            // Round-tripping 1.0 must be exact in every format.
+            assert_eq!(f.roundtrip(1.0), 1.0, "{}", f.name());
+        }
+    }
+
+    #[test]
+    fn figure2_panels() {
+        assert_eq!(formats_at_width(8).len(), 4);
+        assert_eq!(formats_at_width(16).len(), 4);
+        assert_eq!(formats_at_width(32).len(), 3);
+        assert!(formats_at_width(64).is_empty());
+    }
+
+    #[test]
+    fn aliases() {
+        assert_eq!(format_by_name("hf8").unwrap().name(), "e4m3");
+        assert_eq!(format_by_name("bf8").unwrap().name(), "e5m2");
+    }
+}

@@ -1,0 +1,425 @@
+//! Takum arithmetic — the logarithmic base format (Hunhold, CoNGA 2024)
+//! plus the shared takum *envelope* (bit-field layout) reused by the linear
+//! variant.
+//!
+//! An `n`-bit takum is the bit string `S | D | R(3) | C(r) | M(m)` with
+//!
+//! * `r = D ? R : 7 - R`,
+//! * characteristic `c = D ? 2^r - 1 + C : -2^(r+1) + 1 + C` (`c ∈ [-255, 254]`),
+//! * `m = n - 5 - r` mantissa bits, `f = M / 2^m ∈ [0, 1)`,
+//! * logarithmic value `(-1)^S · √e^ℓ` with `ℓ = (1 - 2S)(c + f)`.
+//!
+//! `00…0` is zero, `10…0` is NaR (Not a Real). Negation is two's
+//! complement of the bit string, and the total order over real values is
+//! exactly the signed-integer order of the encodings — the property the
+//! paper leverages to unify takum comparisons with integer comparisons
+//! (§IV-A). Bit strings shorter than 12 bits are defined by zero-padding
+//! on decode; rounding is RNE on the bit string with saturation (never to
+//! zero, never to NaR).
+//!
+//! The decoder deliberately mirrors the hardware claim of the takum codec
+//! paper: **every precision shares one decode path that inspects at most
+//! the 12 most significant bits** for the header; see [`decode_fields`].
+
+use super::bitstring::{mask64, neg_bits, round_rne, round_rne_saturating, sign_extend};
+
+/// Smallest / largest characteristic representable by the takum envelope.
+pub const C_MIN: i32 = -255;
+pub const C_MAX: i32 = 254;
+
+/// Fully decoded takum fields (positive magnitude form).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decoded {
+    Zero,
+    NaR,
+    /// A finite nonzero value: `(-1)^sign · base^(c + man/2^m)` where the
+    /// interpretation of the pair `(c, man)` is up to the variant
+    /// (logarithmic: exponent of √e; linear: binary exponent + significand).
+    Finite {
+        sign: bool,
+        /// Characteristic of the *magnitude* (after two's-complement
+        /// normalisation of negative encodings).
+        c: i32,
+        /// Mantissa field, `m` bits.
+        man: u64,
+        /// Number of mantissa bits (`0 ≤ m ≤ n - 5`, or up to 7 for n < 12
+        /// after padding).
+        m: u32,
+    },
+}
+
+/// NaR encoding for an `n`-bit takum.
+#[inline]
+pub const fn nar(n: u32) -> u64 {
+    1u64 << (n - 1)
+}
+
+/// Largest positive encoding (`0111…1`).
+#[inline]
+pub const fn max_pos_bits(n: u32) -> u64 {
+    mask64(n - 1)
+}
+
+/// Decode the takum envelope. This is the "common decoder": the header
+/// (S, D, R, C — at most 12 bits) is parsed identically for every `n`; only
+/// the mantissa width differs. Negative encodings are normalised by two's
+/// complement first, which is exact by the takum negation property.
+#[inline]
+pub fn decode_fields(bits: u64, n: u32) -> Decoded {
+    debug_assert!((2..=64).contains(&n));
+    let bits = bits & mask64(n);
+    if bits == 0 {
+        return Decoded::Zero;
+    }
+    if bits == nar(n) {
+        return Decoded::NaR;
+    }
+    let sign = (bits >> (n - 1)) & 1 == 1;
+    let pos = if sign { neg_bits(bits, n) } else { bits };
+
+    // Zero-pad to the canonical minimum length of 12 bits.
+    let p = n.max(12);
+    let b = pos << (p - n);
+
+    let d = (b >> (p - 2)) & 1;
+    let r_field = ((b >> (p - 5)) & 0b111) as u32;
+    let r = if d == 1 { r_field } else { 7 - r_field };
+    let m = p - 5 - r;
+    let c_field = ((b >> m) & mask64(r)) as i64;
+    let c = if d == 1 {
+        ((1i64 << r) - 1 + c_field) as i32
+    } else {
+        (-(1i64 << (r + 1)) + 1 + c_field) as i32
+    };
+    let man = b & mask64(m);
+    Decoded::Finite { sign, c, man, m }
+}
+
+/// Build the *extended* positive takum encoding for characteristic `c`
+/// (must be in `[C_MIN, C_MAX]`) and a 52-bit mantissa fraction, then round
+/// to `n` bits with saturation. Returns the positive bit string; the caller
+/// applies two's complement for negative values.
+#[inline]
+pub fn encode_pos_from_cf(c: i32, frac52: u64, n: u32) -> u64 {
+    debug_assert!((C_MIN..=C_MAX).contains(&c));
+    let (d, r, c_field) = if c >= 0 {
+        // c ∈ [2^r - 1, 2^(r+1) - 2]  ⇔  r = ⌊log2(c + 1)⌋
+        let r = 63 - ((c + 1) as u64).leading_zeros();
+        (1u64, r, (c as u64) - (mask64(r + 1) >> 1)) // c - (2^r - 1)
+    } else {
+        // c ∈ [-2^(r+1) + 1, -2^r]  ⇔  r = ⌊log2(-c)⌋
+        let r = 63 - ((-c) as u64).leading_zeros();
+        (0u64, r, (c + (1i64 << (r + 1)) as i32 - 1) as u64)
+    };
+    let r_field = if d == 1 { r } else { 7 - r };
+    // ext = [S=0 | D | RRR | C(r bits) | frac52], ext_bits = 5 + r + 52.
+    let header: u128 = ((d as u128) << 3) | (r_field as u128);
+    let ext: u128 = (header << (r + 52)) | ((c_field as u128) << 52) | (frac52 as u128);
+    let ext_bits = 5 + r + 52;
+    round_rne_saturating(ext, ext_bits, n)
+}
+
+/// Shared encode entry: handles specials/saturation, then defers the
+/// magnitude `(c, frac52)` extraction to the variant-specific closure.
+#[inline]
+pub fn encode_with(
+    x: f64,
+    n: u32,
+    to_cf: impl FnOnce(f64) -> (i32, u64),
+) -> u64 {
+    if x == 0.0 {
+        return 0;
+    }
+    if !x.is_finite() {
+        return nar(n);
+    }
+    let sign = x < 0.0;
+    let (mut c, mut frac52) = to_cf(x.abs());
+    // Saturate out-of-envelope characteristics before building the string.
+    if c > C_MAX {
+        c = C_MAX;
+        frac52 = mask64(52);
+    } else if c < C_MIN {
+        c = C_MIN;
+        frac52 = 0;
+    }
+    let pos = encode_pos_from_cf(c, frac52, n);
+    if sign {
+        neg_bits(pos, n)
+    } else {
+        pos
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Logarithmic takum
+// ---------------------------------------------------------------------------
+
+/// Encode a real value into an `n`-bit logarithmic takum,
+/// round-to-nearest-even on the bit string, saturating.
+///
+/// The logarithm `ℓ = 2·ln|x|` is computed in f64, which bounds the
+/// encode accuracy to ≈2⁻⁵² of ℓ — more than sufficient for every n ≤ 64
+/// mantissa the envelope can hold at |c| near 0 and dwarfed by the takum
+/// quantisation step everywhere else except exact ties.
+pub fn encode(x: f64, n: u32) -> u64 {
+    encode_with(x, n, |a| {
+        let l = 2.0 * a.ln();
+        let c = l.floor();
+        let f = l - c; // ∈ [0, 1)
+        let frac52 = ((f * (1u64 << 52) as f64) as u64).min(mask64(52));
+        (c as i32, frac52)
+    })
+}
+
+/// Decode an `n`-bit logarithmic takum to f64.
+pub fn decode(bits: u64, n: u32) -> f64 {
+    match decode_fields(bits, n) {
+        Decoded::Zero => 0.0,
+        Decoded::NaR => f64::NAN,
+        Decoded::Finite { sign, c, man, m } => {
+            let l = c as f64 + man as f64 / (1u64 << m) as f64;
+            let mag = (l * 0.5).exp();
+            if sign {
+                -mag
+            } else {
+                mag
+            }
+        }
+    }
+}
+
+/// Exact logarithm of the magnitude as fixed point: returns `ℓ·2^59` as
+/// `i128` (`ℓ = ±(c + f)`), or `None` for zero/NaR. Multiplication,
+/// division, square root and inversion of logarithmic takums are *exact*
+/// in this domain up to final rounding, which is how the simulator
+/// implements them.
+pub fn log_fixed(bits: u64, n: u32) -> Option<(bool, i128)> {
+    match decode_fields(bits, n) {
+        Decoded::Finite { sign, c, man, m } => {
+            let l = ((c as i128) << 59) + ((man as i128) << (59 - m));
+            Some((sign, l))
+        }
+        _ => None,
+    }
+}
+
+/// Re-encode from the fixed-point logarithm domain (`ℓ·2^59`), saturating.
+pub fn encode_from_log_fixed(sign: bool, l: i128, n: u32) -> u64 {
+    const ONE: i128 = 1 << 59;
+    let l = l.clamp((C_MIN as i128) * ONE, (C_MAX as i128 + 1) * ONE - 1);
+    let c = l.div_euclid(ONE) as i32;
+    let f = l.rem_euclid(ONE) as u64; // 59 fraction bits
+    let frac52 = round_rne(f as u128, 7) as u64; // 59 → 52 bits
+    // A carry out of the fraction bumps the characteristic.
+    let (c, frac52) = if frac52 > mask64(52) {
+        (c + 1, 0)
+    } else {
+        (c, frac52)
+    };
+    let c = c.clamp(C_MIN, C_MAX);
+    let pos = encode_pos_from_cf(c, frac52, n);
+    if sign {
+        neg_bits(pos, n)
+    } else {
+        pos
+    }
+}
+
+/// Signed-integer comparison key (total order over values; NaR sorts
+/// below every real, matching the takum/posit convention).
+#[inline]
+pub fn order_key(bits: u64, n: u32) -> i64 {
+    sign_extend(bits, n)
+}
+
+/// Number of representable values of an `n`-bit takum
+/// (2^n patterns − NaR; zero counts as a value).
+pub fn value_count(n: u32) -> u128 {
+    (1u128 << n) - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::check_default;
+
+    #[test]
+    fn zero_and_nar() {
+        for n in [8u32, 12, 16, 32, 64] {
+            assert_eq!(encode(0.0, n), 0);
+            assert_eq!(decode(0, n), 0.0);
+            assert_eq!(encode(f64::NAN, n), nar(n));
+            assert_eq!(encode(f64::INFINITY, n), nar(n));
+            assert_eq!(encode(f64::NEG_INFINITY, n), nar(n));
+            assert!(decode(nar(n), n).is_nan());
+        }
+    }
+
+    #[test]
+    fn one_is_power_zero() {
+        // 1.0 ⇒ ℓ = 0 ⇒ c = 0 ⇒ S=0, D=1, R=000, no C bits set, M = 0.
+        for n in [8u32, 12, 16, 32, 64] {
+            let b = encode(1.0, n);
+            assert_eq!(b, 0b01 << (n - 2), "n={n}");
+            assert_eq!(decode(b, n), 1.0);
+        }
+    }
+
+    #[test]
+    fn minus_one_is_twos_complement_of_one() {
+        for n in [8u32, 12, 16, 32] {
+            let one = encode(1.0, n);
+            let minus = encode(-1.0, n);
+            assert_eq!(minus, neg_bits(one, n));
+            assert_eq!(decode(minus, n), -1.0);
+        }
+    }
+
+    #[test]
+    fn twelve_bit_boundaries() {
+        // Smallest positive 12-bit takum: C-field = 1 ⇒ c = -254, no mantissa.
+        assert_eq!(decode(1, 12), (-254.0f64 * 0.5).exp());
+        // Largest positive: c = 254.
+        assert_eq!(decode(max_pos_bits(12), 12), (254.0f64 * 0.5).exp());
+    }
+
+    #[test]
+    fn eight_bit_range_nearly_full() {
+        // Figure 1's claim: takum8 already spans ≈ √e^±239.
+        let max = decode(max_pos_bits(8), 8);
+        let min = decode(1, 8);
+        assert!((max.ln() * 2.0 - 239.0).abs() < 1e-9, "max ℓ = {}", max.ln() * 2.0);
+        assert!((min.ln() * 2.0 + 239.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn saturation_not_nar_not_zero() {
+        for n in [8u32, 12, 16, 32] {
+            assert_eq!(encode(1e300, n), max_pos_bits(n), "n={n}");
+            assert_eq!(encode(1e-300, n), 1, "n={n}");
+            assert_eq!(encode(-1e300, n), nar(n) + 1, "n={n}"); // most negative real
+            assert_eq!(encode(-1e-300, n), mask64(n), "n={n}"); // -minpos = all ones
+        }
+    }
+
+    #[test]
+    fn negation_is_twos_complement_exhaustive_8bit() {
+        for bits in 0u64..256 {
+            if bits == nar(8) {
+                continue;
+            }
+            let v = decode(bits, 8);
+            let nv = decode(neg_bits(bits, 8), 8);
+            if bits == 0 {
+                assert_eq!(nv, 0.0);
+            } else {
+                assert_eq!(nv, -v, "bits={bits:#04x}");
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_exhaustive_8bit() {
+        // Signed-integer order of encodings == value order (NaR lowest).
+        let mut prev = f64::NEG_INFINITY;
+        for k in -127i64..=127 {
+            let bits = (k as u64) & 0xFF;
+            let v = decode(bits, 8);
+            assert!(v > prev, "k={k} v={v} prev={prev}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn decode_encode_idempotent_exhaustive_16bit() {
+        for bits in 0u64..(1 << 16) {
+            if bits == nar(16) {
+                continue;
+            }
+            let v = decode(bits, 16);
+            let back = encode(v, 16);
+            assert_eq!(back, bits, "bits={bits:#06x} v={v}");
+        }
+    }
+
+    #[test]
+    fn rounding_is_nearest_in_log_domain() {
+        // Halfway between two adjacent 8-bit takums must land on one of them,
+        // and any point strictly inside a gap must land on the nearer end.
+        for k in 1i64..126 {
+            let lo = decode(k as u64, 8);
+            let hi = decode((k + 1) as u64, 8);
+            let geo_mid = (lo * hi).sqrt(); // midpoint in ℓ space
+            let b = encode(geo_mid * 1.0001, 8);
+            assert_eq!(b, (k + 1) as u64, "k={k}");
+            let b = encode(geo_mid * 0.9999, 8);
+            assert_eq!(b, k as u64, "k={k}");
+        }
+    }
+
+    #[test]
+    fn log_fixed_roundtrip_is_exact() {
+        for n in [12u32, 16, 32] {
+            for pat in [1u64, 3, 17, 1000, max_pos_bits(n), nar(n) + 5] {
+                let pat = pat & mask64(n);
+                if pat == 0 || pat == nar(n) {
+                    continue;
+                }
+                let (s, l) = log_fixed(pat, n).unwrap();
+                assert_eq!(encode_from_log_fixed(s, l, n), pat, "n={n} pat={pat:#x}");
+            }
+        }
+    }
+
+    #[test]
+    fn log_fixed_multiplication_squares_exactly() {
+        // ℓ(x²) = 2ℓ(x): squaring in the log domain is exact (up to final
+        // rounding), the property the simulator exploits for VMULPT.
+        let n = 16;
+        for pat in [0x2000u64, 0x3123, 0x5fff, 0x0301] {
+            let (s, l) = log_fixed(pat, n).unwrap();
+            assert!(!s);
+            let sq_bits = encode_from_log_fixed(false, l * 2, n);
+            let expected = encode(decode(pat, n).powi(2), n);
+            assert_eq!(sq_bits, expected, "pat={pat:#x}");
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip_within_one_ulp_32bit() {
+        check_default(
+            "takum32 roundtrip re-encodes to same bits",
+            0xAB01,
+            |r| r.wide_f64(-120, 120),
+            |&x| {
+                let b = encode(x, 32);
+                let v = decode(b, 32);
+                let b2 = encode(v, 32);
+                if b2 == b {
+                    Ok(())
+                } else {
+                    Err(format!("x={x} b={b:#x} v={v} b2={b2:#x}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_order_preserved() {
+        check_default(
+            "takum16 order",
+            0xAB02,
+            |r| (r.wide_f64(-60, 60), r.wide_f64(-60, 60)),
+            |&(a, b)| {
+                let (ka, kb) = (order_key(encode(a, 16), 16), order_key(encode(b, 16), 16));
+                // Encoding is monotone: a < b ⇒ key(a) ≤ key(b).
+                if (a < b && ka <= kb) || (a > b && ka >= kb) || a == b {
+                    Ok(())
+                } else {
+                    Err(format!("a={a} b={b} ka={ka} kb={kb}"))
+                }
+            },
+        );
+    }
+}

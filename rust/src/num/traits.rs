@@ -1,0 +1,78 @@
+//! The uniform number-format interface used by the harness, the matrix
+//! sweep, the simulator and the figures.
+
+/// A fixed-width machine number format: encode/decode between f64 and the
+/// format's bit representation (stored in the low bits of a `u64`).
+pub trait NumberFormat: Send + Sync {
+    /// Short identifier, e.g. `"takum8"`, `"e4m3"`, `"posit16"`.
+    fn name(&self) -> String;
+
+    /// Bit-string length n.
+    fn bits(&self) -> u32;
+
+    /// Round an f64 into the format (the format's canonical rounding).
+    fn encode(&self, x: f64) -> u64;
+
+    /// Decode a bit pattern back to f64.
+    fn decode(&self, bits: u64) -> f64;
+
+    /// Round-trip an f64 through the format.
+    fn roundtrip(&self, x: f64) -> f64 {
+        self.decode(self.encode(x))
+    }
+
+    /// True if the pattern is a non-real (NaR / NaN / ±∞).
+    fn is_special(&self, bits: u64) -> bool;
+
+    /// True if a finite nonzero input `x` falls outside the format's
+    /// dynamic range *in the overflow direction* — i.e. conversion loses
+    /// the value entirely (±∞/NaN for IEEE-style formats). Tapered formats
+    /// saturate and therefore never exceed. Figure 2 uses this for its
+    /// ∞ bucket.
+    fn exceeds_range(&self, x: f64) -> bool {
+        if x == 0.0 || !x.is_finite() {
+            return false;
+        }
+        self.is_special(self.encode(x))
+    }
+
+    /// Smallest positive representable magnitude.
+    fn min_positive(&self) -> f64;
+
+    /// Largest finite representable magnitude.
+    fn max_finite(&self) -> f64;
+
+    /// Decimal orders of magnitude covered: `log10(max_finite / min_positive)`.
+    /// This is the y-axis of Figure 1.
+    fn dynamic_range_decades(&self) -> f64 {
+        self.max_finite().log10() - self.min_positive().log10()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::num::registry::format_by_name;
+
+    #[test]
+    fn exceeds_range_semantics() {
+        let e4m3 = format_by_name("e4m3").unwrap();
+        assert!(e4m3.exceeds_range(1e5));
+        assert!(!e4m3.exceeds_range(100.0));
+        // Underflow is not "exceeds": it rounds to zero, a real value.
+        assert!(!e4m3.exceeds_range(1e-30));
+
+        // Tapered formats saturate: never exceed.
+        let t8 = format_by_name("takum8").unwrap();
+        assert!(!t8.exceeds_range(1e300));
+        let p8 = format_by_name("posit8").unwrap();
+        assert!(!p8.exceeds_range(1e300));
+    }
+
+    #[test]
+    fn dynamic_range_decades_sane() {
+        let f32f = format_by_name("float32").unwrap();
+        // float32: ~2^(128+149) ≈ 83.4 decades including subnormals.
+        let d = f32f.dynamic_range_decades();
+        assert!((83.0..84.0).contains(&d), "d={d}");
+    }
+}

@@ -1,0 +1,275 @@
+//! PJRT runtime: loads the HLO-text artifacts produced by
+//! `python/compile/aot.py` (`make artifacts`) and executes them on the CPU
+//! PJRT client. Python never runs here — the artifacts are self-contained.
+//!
+//! The `xla` crate's client/executable types are not `Send`, so
+//! [`PjrtService`] owns them on a dedicated thread and serves requests
+//! over channels; any number of coordinator workers can share one service.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("TAKUM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// A loaded, compiled artifact collection. Not `Send` — wrap in
+/// [`PjrtService`] for multi-threaded use.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Shape+data of one f64 input.
+#[derive(Debug, Clone)]
+pub struct TensorF64 {
+    pub data: Vec<f64>,
+    pub dims: Vec<i64>,
+}
+
+impl TensorF64 {
+    pub fn vec(data: Vec<f64>) -> TensorF64 {
+        let dims = vec![data.len() as i64];
+        TensorF64 { data, dims }
+    }
+
+    pub fn matrix(data: Vec<f64>, rows: i64, cols: i64) -> TensorF64 {
+        assert_eq!(data.len() as i64, rows * cols);
+        TensorF64 { data, dims: vec![rows, cols] }
+    }
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client with no artifacts loaded.
+    pub fn new() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, executables: HashMap::new() })
+    }
+
+    /// Load and compile one HLO-text artifact under `name`.
+    pub fn load_file(&mut self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every `*.hlo.txt` in a directory; artifact name = file stem.
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let mut loaded = Vec::new();
+        let entries = std::fs::read_dir(dir)
+            .with_context(|| format!("artifact dir {} (run `make artifacts`)", dir.display()))?;
+        let mut paths: Vec<PathBuf> = entries
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.file_name().and_then(|s| s.to_str()).is_some_and(|s| s.ends_with(".hlo.txt")))
+            .collect();
+        paths.sort();
+        for p in paths {
+            let stem = p
+                .file_name()
+                .and_then(|s| s.to_str())
+                .unwrap()
+                .trim_end_matches(".hlo.txt")
+                .to_string();
+            self.load_file(&stem, &p)?;
+            loaded.push(stem);
+        }
+        Ok(loaded)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.executables.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute an artifact on f64 inputs, returning all tuple outputs as
+    /// flat f64 vectors.
+    pub fn run_f64(&self, name: &str, inputs: &[TensorF64]) -> Result<Vec<Vec<f64>>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not loaded (have: {:?})", self.names()))?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&t.dims)
+                .map_err(|e| anyhow!("reshape {:?}: {e:?}", t.dims))?;
+            lits.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let first = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output buffers from {name}"))?;
+        let literal = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the tuple.
+        let parts = literal.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in parts {
+            out.push(p.to_vec::<f64>().map_err(|e| anyhow!("to_vec<f64>: {e:?}"))?);
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Thread service
+// ---------------------------------------------------------------------------
+
+enum Request {
+    Run {
+        name: String,
+        inputs: Vec<TensorF64>,
+        reply: mpsc::Sender<Result<Vec<Vec<f64>>>>,
+    },
+    Names {
+        reply: mpsc::Sender<Vec<String>>,
+    },
+    Shutdown,
+}
+
+/// A `Send + Clone` handle to a runtime living on its own thread.
+#[derive(Clone)]
+pub struct PjrtHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+/// Owns the service thread; dropping shuts it down.
+pub struct PjrtService {
+    tx: mpsc::Sender<Request>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PjrtService {
+    /// Spawn the service and load all artifacts from `dir`.
+    pub fn start(dir: &Path) -> Result<PjrtService> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (init_tx, init_rx) = mpsc::channel::<Result<Vec<String>>>();
+        let dir = dir.to_path_buf();
+        let join = std::thread::Builder::new()
+            .name("pjrt-service".into())
+            .spawn(move || {
+                let mut rt = match Runtime::new() {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                };
+                match rt.load_dir(&dir) {
+                    Ok(names) => {
+                        let _ = init_tx.send(Ok(names));
+                    }
+                    Err(e) => {
+                        let _ = init_tx.send(Err(e));
+                        return;
+                    }
+                }
+                while let Ok(req) = rx.recv() {
+                    match req {
+                        Request::Run { name, inputs, reply } => {
+                            let _ = reply.send(rt.run_f64(&name, &inputs));
+                        }
+                        Request::Names { reply } => {
+                            let _ = reply.send(rt.names());
+                        }
+                        Request::Shutdown => break,
+                    }
+                }
+            })?;
+        let names = init_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt service died during init"))??;
+        if names.is_empty() {
+            bail!("no artifacts found — run `make artifacts` first");
+        }
+        Ok(PjrtService { tx, join: Some(join) })
+    }
+
+    pub fn handle(&self) -> PjrtHandle {
+        PjrtHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl PjrtHandle {
+    /// Execute an artifact (blocking RPC to the service thread).
+    pub fn run_f64(&self, name: &str, inputs: Vec<TensorF64>) -> Result<Vec<Vec<f64>>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Run { name: name.to_string(), inputs, reply })
+            .map_err(|_| anyhow!("pjrt service gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))?
+    }
+
+    pub fn names(&self) -> Result<Vec<String>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx.send(Request::Names { reply }).map_err(|_| anyhow!("pjrt service gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt service dropped reply"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Tests that need compiled artifacts are integration tests
+    /// (`rust/tests/`); here we only cover the error paths that work
+    /// without artifacts.
+    #[test]
+    fn missing_artifact_dir_errors() {
+        let mut rt = match Runtime::new() {
+            Ok(rt) => rt,
+            // PJRT may be unavailable in odd sandboxes; skip then.
+            Err(_) => return,
+        };
+        let err = rt.load_dir(Path::new("/nonexistent-dir-xyz")).unwrap_err();
+        assert!(format!("{err:#}").contains("artifact dir"));
+    }
+
+    #[test]
+    fn run_unknown_name_errors() {
+        let rt = match Runtime::new() {
+            Ok(rt) => rt,
+            Err(_) => return,
+        };
+        let err = rt.run_f64("nope", &[]).unwrap_err();
+        assert!(err.to_string().contains("not loaded"));
+    }
+
+    #[test]
+    fn tensor_constructors() {
+        let t = TensorF64::vec(vec![1.0, 2.0, 3.0]);
+        assert_eq!(t.dims, vec![3]);
+        let m = TensorF64::matrix(vec![0.0; 6], 2, 3);
+        assert_eq!(m.dims, vec![2, 3]);
+    }
+}

@@ -1,0 +1,175 @@
+//! Tiny assembler for the simulator: one instruction per line,
+//! AVX-512-style syntax.
+//!
+//! ```text
+//! ; takum vector add with zeroing mask
+//! KMOVB8     k1, k2
+//! VADDPT16   v2{k1}{z}, v0, v1
+//! VCMPPT16   k3, v0, v1, 1        ; predicate 1 = LT
+//! ```
+
+use super::program::{Instruction, Operand, Program};
+use anyhow::{anyhow, bail, Result};
+
+/// Parse one operand: `v12`, `k3`, or an integer immediate (decimal or
+/// 0x-hex).
+fn parse_operand(s: &str) -> Result<Operand> {
+    let s = s.trim();
+    if let Some(r) = s.strip_prefix('v').or(s.strip_prefix('V')) {
+        let n: u8 = r.parse().map_err(|_| anyhow!("bad vreg {s:?}"))?;
+        if n >= 32 {
+            bail!("vector register out of range: {s}");
+        }
+        return Ok(Operand::Vreg(n));
+    }
+    if let Some(r) = s.strip_prefix('k').or(s.strip_prefix('K')) {
+        if let Ok(n) = r.parse::<u8>() {
+            if n >= 8 {
+                bail!("mask register out of range: {s}");
+            }
+            return Ok(Operand::Kreg(n));
+        }
+    }
+    let v = if let Some(h) = s.strip_prefix("0x").or(s.strip_prefix("0X")) {
+        i64::from_str_radix(h, 16).map_err(|_| anyhow!("bad immediate {s:?}"))?
+    } else {
+        s.parse::<i64>().map_err(|_| anyhow!("bad operand {s:?}"))?
+    };
+    Ok(Operand::Imm(v))
+}
+
+/// Parse the destination field, which may carry `{k#}` and `{z}`.
+fn parse_dst(s: &str) -> Result<(Operand, Option<u8>, bool)> {
+    let s = s.trim();
+    let (base, rest) = match s.find('{') {
+        Some(i) => (&s[..i], &s[i..]),
+        None => (s, ""),
+    };
+    let dst = parse_operand(base)?;
+    let mut mask = None;
+    let mut zeroing = false;
+    let mut rest = rest;
+    while let Some(r) = rest.strip_prefix('{') {
+        let end = r.find('}').ok_or_else(|| anyhow!("unclosed {{ in {s:?}"))?;
+        let inner = &r[..end];
+        if inner == "z" || inner == "Z" {
+            zeroing = true;
+        } else if let Some(k) = inner.strip_prefix(['k', 'K']) {
+            let n: u8 = k.parse().map_err(|_| anyhow!("bad mask {inner:?}"))?;
+            if n >= 8 {
+                bail!("mask register out of range in {s:?}");
+            }
+            mask = Some(n);
+        } else {
+            bail!("bad modifier {{{inner}}} in {s:?}");
+        }
+        rest = &r[end + 1..];
+    }
+    if zeroing && mask.is_none() {
+        bail!("{{z}} without a mask register in {s:?}");
+    }
+    Ok((dst, mask, zeroing))
+}
+
+/// Parse one line; `None` for blank/comment lines.
+pub fn parse_line(line: &str) -> Result<Option<Instruction>> {
+    let line = line.split(';').next().unwrap_or("").trim();
+    if line.is_empty() {
+        return Ok(None);
+    }
+    let (mnemonic, rest) = match line.find(char::is_whitespace) {
+        Some(i) => (&line[..i], line[i..].trim()),
+        None => (line, ""),
+    };
+    let mut parts = rest.split(',').map(str::trim).filter(|p| !p.is_empty());
+    let dst_s = parts
+        .next()
+        .ok_or_else(|| anyhow!("instruction {mnemonic} needs a destination"))?;
+    let (dst, mask, zeroing) = parse_dst(dst_s)?;
+    let srcs = parts.map(parse_operand).collect::<Result<Vec<_>>>()?;
+    Ok(Some(Instruction {
+        mnemonic: mnemonic.to_uppercase(),
+        dst,
+        srcs,
+        mask,
+        zeroing,
+    }))
+}
+
+/// Assemble a whole program.
+pub fn assemble(src: &str) -> Result<Program> {
+    let mut p = Program::default();
+    for (no, line) in src.lines().enumerate() {
+        match parse_line(line) {
+            Ok(Some(i)) => p.push(i),
+            Ok(None) => {}
+            Err(e) => bail!("line {}: {e}", no + 1),
+        }
+    }
+    Ok(p)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::program::Operand::*;
+
+    #[test]
+    fn basic_program() {
+        let p = assemble(
+            "; GEMM inner step\n\
+             VADDPT16 v2, v0, v1\n\
+             \n\
+             VCMPPT16 k3, v0, v1, 1 ; lt\n\
+             KANDB8 k4, k3, k3\n",
+        )
+        .unwrap();
+        assert_eq!(p.len(), 3);
+        assert_eq!(p.instrs[0].mnemonic, "VADDPT16");
+        assert_eq!(p.instrs[0].dst, Vreg(2));
+        assert_eq!(p.instrs[0].srcs, vec![Vreg(0), Vreg(1)]);
+        assert_eq!(p.instrs[1].srcs[2], Imm(1));
+        assert_eq!(p.instrs[2].dst, Kreg(4));
+    }
+
+    #[test]
+    fn masking_syntax() {
+        let i = parse_line("VMULPT8 v5{k2}{z}, v1, v3").unwrap().unwrap();
+        assert_eq!(i.mask, Some(2));
+        assert!(i.zeroing);
+        let i = parse_line("VMULPT8 v5{k2}, v1, v3").unwrap().unwrap();
+        assert_eq!(i.mask, Some(2));
+        assert!(!i.zeroing);
+    }
+
+    #[test]
+    fn hex_immediates() {
+        let i = parse_line("KSHIFTLB64 k1, k2, 0x10").unwrap().unwrap();
+        assert_eq!(i.srcs[1], Imm(16));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_line("VADDPT16 v99, v0, v1").is_err());
+        assert!(parse_line("VADDPT16 v1{z}, v0, v1").is_err()); // z without mask
+        assert!(parse_line("VADDPT16 v1{k9}, v0, v1").is_err());
+        assert!(parse_line("VADDPT16 v1{k1, v0").is_err());
+    }
+
+    #[test]
+    fn assembled_program_runs() {
+        use crate::sim::exec::{LaneType, Machine};
+        let p = assemble(
+            "VMULPT16 v2, v0, v1\n\
+             VADDPT16 v3, v2, v0\n",
+        )
+        .unwrap();
+        let mut mach = Machine::new();
+        let t = LaneType::Takum(16);
+        mach.load_f64(0, t, &[2.0, 3.0]);
+        mach.load_f64(1, t, &[4.0, 5.0]);
+        mach.run(&p).unwrap();
+        let r = mach.read_f64(3, t);
+        assert_eq!(&r[..2], &[10.0, 18.0]);
+    }
+}

@@ -1,0 +1,1239 @@
+//! The execution engine: architectural state + semantics for the proposed
+//! takum instructions and the AVX10.2 baseline subset.
+//!
+//! Design notes:
+//!
+//! * `PT{n}`/`ST{n}` lanes are **linear takums** — the variant used by the
+//!   paper's Figures 1–2 and by the L1 Pallas kernels, so all three layers
+//!   agree bit-for-bit. (Logarithmic takums with exact ℓ-domain mul/div
+//!   live in [`crate::num::takum`].)
+//! * Floating ops decode lanes to f64, apply the op, and re-encode — i.e.
+//!   correctly rounded takum arithmetic, the hardware model the paper
+//!   assumes.
+//! * `VCMPPT*` compares the *encodings as signed integers* — the takum
+//!   property (§IV-A) that lets an implementation reuse integer
+//!   comparators. Tests cross-check it against value comparison.
+//! * Masking follows AVX-512: `{k}` merging, `{k}{z}` zeroing, `k0` = no
+//!   masking.
+
+use super::program::{Instruction, Operand, Program};
+use super::register::{RegisterFile, VecReg};
+use crate::num::bitstring::sign_extend;
+use crate::num::{takum_linear, MinifloatSpec, BF16, E4M3, E5M2, F16, F32, F64};
+use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
+
+/// Element interpretation of a vector lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneType {
+    Takum(u32),
+    Mini(MinifloatSpec),
+    /// IEEE-style format with saturating encode (the `VCVT…S` conversion
+    /// semantics; used when storing into range-limited OFP8 lanes).
+    MiniSat(MinifloatSpec),
+    /// Unsigned / signed integer lanes.
+    UInt(u32),
+    SInt(u32),
+}
+
+impl LaneType {
+    pub fn width(&self) -> u32 {
+        match self {
+            LaneType::Takum(n) => *n,
+            LaneType::Mini(s) | LaneType::MiniSat(s) => s.bits(),
+            LaneType::UInt(w) | LaneType::SInt(w) => *w,
+        }
+    }
+
+    pub fn decode(&self, bits: u64) -> f64 {
+        match self {
+            LaneType::Takum(n) => takum_linear::decode(bits, *n),
+            LaneType::Mini(s) | LaneType::MiniSat(s) => s.decode(bits),
+            LaneType::UInt(w) => (bits & crate::num::bitstring::mask64(*w)) as f64,
+            LaneType::SInt(w) => sign_extend(bits, *w) as f64,
+        }
+    }
+
+    pub fn encode(&self, x: f64) -> u64 {
+        match self {
+            LaneType::Takum(n) => takum_linear::encode(x, *n),
+            LaneType::Mini(s) => s.encode(x),
+            LaneType::MiniSat(s) => s.encode_sat(x),
+            LaneType::UInt(w) => {
+                let m = crate::num::bitstring::mask64(*w);
+                if x <= 0.0 {
+                    0
+                } else if x >= m as f64 {
+                    m
+                } else {
+                    x as u64
+                }
+            }
+            LaneType::SInt(w) => {
+                // Bounds via f64 exp2 (1i64 << 63 would overflow for w=64);
+                // the `as i64` cast saturates at the type limits.
+                let half = ((*w - 1) as f64).exp2();
+                (x.clamp(-half, half - 1.0) as i64 as u64)
+                    & crate::num::bitstring::mask64(*w)
+            }
+        }
+    }
+
+    /// Parse a floating-point suffix: `PT8..PT64`, `ST8..`, `PH/PS/PD`,
+    /// `SH/SS/SD`, `NEPBF16/PBF16`, `BF8/HF8`. Returns (type, packed?).
+    pub fn parse_fp(suffix: &str) -> Option<(LaneType, bool)> {
+        let t = |n: &str| n.parse::<u32>().ok().filter(|n| [8, 16, 32, 64].contains(n));
+        if let Some(n) = suffix.strip_prefix("PT").and_then(t) {
+            return Some((LaneType::Takum(n), true));
+        }
+        if let Some(n) = suffix.strip_prefix("ST").and_then(t) {
+            return Some((LaneType::Takum(n), false));
+        }
+        Some(match suffix {
+            "PH" => (LaneType::Mini(F16), true),
+            "PS" => (LaneType::Mini(F32), true),
+            "PD" => (LaneType::Mini(F64), true),
+            "SH" => (LaneType::Mini(F16), false),
+            "SS" => (LaneType::Mini(F32), false),
+            "SD" => (LaneType::Mini(F64), false),
+            "NEPBF16" | "PBF16" => (LaneType::Mini(BF16), true),
+            "BF8" => (LaneType::Mini(E5M2), true),
+            "HF8" => (LaneType::Mini(E4M3), true),
+            _ => return None,
+        })
+    }
+}
+
+/// The simulator.
+#[derive(Debug, Clone, Default)]
+pub struct Machine {
+    pub regs: RegisterFile,
+    /// Executed-instruction histogram.
+    pub counts: BTreeMap<String, u64>,
+    /// Total executed instructions.
+    pub executed: u64,
+}
+
+impl Machine {
+    pub fn new() -> Machine {
+        Machine::default()
+    }
+
+    // ------------------------------------------------------------- data I/O
+
+    /// Encode `values` into vector register lanes of type `ty`.
+    pub fn load_f64(&mut self, vreg: u8, ty: LaneType, values: &[f64]) {
+        let w = ty.width();
+        assert!(values.len() <= VecReg::lanes(w));
+        let mut r = VecReg::ZERO;
+        for (i, v) in values.iter().enumerate() {
+            r.set(w, i, ty.encode(*v));
+        }
+        self.regs.v[vreg as usize] = r;
+    }
+
+    /// Decode all lanes of a vector register.
+    pub fn read_f64(&self, vreg: u8, ty: LaneType) -> Vec<f64> {
+        let w = ty.width();
+        self.regs.v[vreg as usize]
+            .lanes_vec(w)
+            .into_iter()
+            .map(|b| ty.decode(b))
+            .collect()
+    }
+
+    pub fn set_mask(&mut self, k: u8, bits: u64) {
+        self.regs.k[k as usize] = bits;
+    }
+
+    pub fn get_mask(&self, k: u8) -> u64 {
+        self.regs.k[k as usize]
+    }
+
+    // ------------------------------------------------------------ execution
+
+    pub fn run(&mut self, prog: &Program) -> Result<()> {
+        for i in &prog.instrs {
+            self.step(i)?;
+        }
+        Ok(())
+    }
+
+    pub fn step(&mut self, ins: &Instruction) -> Result<()> {
+        *self.counts.entry(ins.mnemonic.clone()).or_default() += 1;
+        self.executed += 1;
+        let m = ins.mnemonic.as_str();
+
+        // Mask-register ops (incl. the proposed VKUNPCK spelling).
+        if m.starts_with('K') || m.starts_with("VKUNPCK") {
+            return self.exec_mask_op(ins);
+        }
+        // Dot products.
+        if let Some(rest) = m.strip_prefix("VDP") {
+            return self.exec_dot(ins, rest);
+        }
+        // Conversions.
+        if let Some(rest) = m.strip_prefix("VCVT") {
+            return self.exec_convert(ins, rest);
+        }
+        // Compares (write a mask register).
+        if let Some(suffix) = m.strip_prefix("VCMP") {
+            return self.exec_compare(ins, suffix);
+        }
+        // Bitwise 512-bit ops (legacy D/Q width suffixes are semantically
+        // identical for lane-wise boolean logic).
+        for (op, f) in [
+            ("VPAND", (|a, b| a & b) as fn(u64, u64) -> u64),
+            ("VPANDN", |a, b| !a & b),
+            ("VPOR", |a, b| a | b),
+            ("VPXOR", |a, b| a ^ b),
+        ] {
+            if m == op
+                || (m.len() == op.len() + 1 && m.starts_with(op) && m.ends_with(['D', 'Q']))
+            {
+                return self.exec_bitwise(ins, f);
+            }
+        }
+        // Broadcasts (proposed B04-11 naming: VBROADCASTB{8..256}).
+        if let Some(w) = m.strip_prefix("VBROADCASTB").and_then(|s| s.parse::<u32>().ok()) {
+            return self.exec_broadcast(ins, w);
+        }
+        // Vector↔mask moves (proposed + legacy spellings).
+        if let Some(rest) = m.strip_prefix("VPMOV") {
+            if let Some(w) = rest.strip_suffix("2M").and_then(parse_b_width) {
+                return self.exec_v2m(ins, w);
+            }
+            if let Some(w) = rest.strip_prefix("M2").and_then(parse_b_width) {
+                return self.exec_m2v(ins, w);
+            }
+        }
+        // Lane shifts by immediate (proposed VPSLLB{w} / legacy VPSLLW…).
+        if let Some((op, w)) = parse_shift(m) {
+            return self.exec_shift(ins, op, w);
+        }
+        // Integer lane arithmetic.
+        if let Some(parsed) = parse_int_op(m) {
+            return self.exec_int(ins, parsed);
+        }
+        // Floating arithmetic (incl. FMA family and unary/imm ops).
+        if let Some((op, ty, packed)) = parse_fp_arith(m) {
+            return self.exec_fp(ins, op, ty, packed);
+        }
+        bail!("unimplemented mnemonic {m}")
+    }
+
+    fn vreg(&self, o: &Operand) -> Result<usize> {
+        match o {
+            Operand::Vreg(r) => Ok(*r as usize),
+            _ => bail!("expected vector register, got {o:?}"),
+        }
+    }
+
+    fn kreg(o: &Operand) -> Result<usize> {
+        match o {
+            Operand::Kreg(r) => Ok(*r as usize),
+            _ => bail!("expected mask register, got {o:?}"),
+        }
+    }
+
+    fn imm(o: &Operand) -> Result<i64> {
+        match o {
+            Operand::Imm(v) => Ok(*v),
+            _ => bail!("expected immediate, got {o:?}"),
+        }
+    }
+
+    /// Apply write-masking and store lane results.
+    fn write_lanes(
+        &mut self,
+        ins: &Instruction,
+        width: u32,
+        lanes: usize,
+        f: impl Fn(usize) -> u64,
+    ) -> Result<()> {
+        let dst = self.vreg(&ins.dst)?;
+        let mask = self.regs.write_mask(ins.mask, lanes);
+        let mut out = self.regs.v[dst];
+        for i in 0..lanes {
+            if mask >> i & 1 == 1 {
+                out.set(width, i, f(i));
+            } else if ins.zeroing {
+                out.set(width, i, 0);
+            }
+        }
+        self.regs.v[dst] = out;
+        Ok(())
+    }
+
+    fn exec_mask_op(&mut self, ins: &Instruction) -> Result<()> {
+        let m = &ins.mnemonic;
+        // KUNPCK: concatenate the low halves (KUNPCKBW dst = a[7:0]:b[7:0];
+        // proposed VKUNPCKB8B16 is the same op with explicit widths).
+        if let Some(rest) = m.strip_prefix("KUNPCK").or(m.strip_prefix("VKUNPCKB")) {
+            let half: u32 = match rest {
+                "BW" | "8B16" => 8,
+                "WD" | "16B32" => 16,
+                "DQ" | "32B64" => 32,
+                _ => bail!("bad KUNPCK form {m}"),
+            };
+            let dst = Self::kreg(&ins.dst)?;
+            let a = self.regs.k[Self::kreg(&ins.srcs[0])?];
+            let b = self.regs.k[Self::kreg(&ins.srcs[1])?];
+            let hm = crate::num::bitstring::mask64(half);
+            self.regs.k[dst] = ((a & hm) << half) | (b & hm);
+            return Ok(());
+        }
+        // Strip the width suffix: proposed B8/B16/B32/B64 or legacy B/W/D/Q.
+        let (op, width) = split_mask_suffix(m)?;
+        let dst = Self::kreg(&ins.dst)?;
+        let lane_mask = if width >= 64 { u64::MAX } else { (1u64 << width) - 1 };
+        let src0 = ins
+            .srcs
+            .first()
+            .ok_or_else(|| anyhow!("{op}: missing source"))
+            .and_then(Self::kreg)?;
+        let av = self.regs.k[src0];
+        // Second operand: a mask register for the boolean ops, an
+        // immediate for the shifts, absent for the unary ops.
+        let out = match op {
+            "KNOT" => !av,
+            "KMOV" => av,
+            "KSHIFTL" => av << Self::imm(ins.srcs.get(1).ok_or_else(|| anyhow!("KSHIFTL imm"))?)?,
+            "KSHIFTR" => av >> Self::imm(ins.srcs.get(1).ok_or_else(|| anyhow!("KSHIFTR imm"))?)?,
+            _ => {
+                let bv = self.regs.k[ins
+                    .srcs
+                    .get(1)
+                    .ok_or_else(|| anyhow!("{op}: missing second source"))
+                    .and_then(Self::kreg)?];
+                match op {
+                    "KAND" => av & bv,
+                    "KANDN" => !av & bv,
+                    "KOR" => av | bv,
+                    "KXOR" => av ^ bv,
+                    "KXNOR" => !(av ^ bv),
+                    "KADD" => av.wrapping_add(bv),
+                    _ => bail!("unimplemented mask op {op}"),
+                }
+            }
+        };
+        self.regs.k[dst] = out & lane_mask;
+        Ok(())
+    }
+
+    fn exec_bitwise(&mut self, ins: &Instruction, f: fn(u64, u64) -> u64) -> Result<()> {
+        let a = self.regs.v[self.vreg(&ins.srcs[0])?];
+        let b = self.regs.v[self.vreg(&ins.srcs[1])?];
+        // Bitwise ops are lane-width-agnostic; mask at 64-bit granularity
+        // like the legacy D/Q forms would at their widths.
+        self.write_lanes(ins, 64, 8, |i| f(a.get(64, i), b.get(64, i)))
+    }
+
+    fn exec_int(&mut self, ins: &Instruction, p: IntOp) -> Result<()> {
+        let a = self.regs.v[self.vreg(&ins.srcs[0])?];
+        let b = self.regs.v[self.vreg(&ins.srcs[1])?];
+        let w = p.width;
+        let lanes = VecReg::lanes(w);
+        let mask = crate::num::bitstring::mask64(w);
+        self.write_lanes(ins, w, lanes, |i| {
+            let (x, y) = (a.get(w, i), b.get(w, i));
+            match p.kind {
+                IntKind::Add => x.wrapping_add(y) & mask,
+                IntKind::Sub => x.wrapping_sub(y) & mask,
+                IntKind::MulLo => x.wrapping_mul(y) & mask,
+                IntKind::MinU => x.min(y),
+                IntKind::MaxU => x.max(y),
+                IntKind::MinS => {
+                    if sign_extend(x, w) <= sign_extend(y, w) { x } else { y }
+                }
+                IntKind::MaxS => {
+                    if sign_extend(x, w) >= sign_extend(y, w) { x } else { y }
+                }
+                IntKind::AbsS => {
+                    let v = sign_extend(x, w);
+                    (v.unsigned_abs()) & mask
+                }
+                IntKind::AddSatS => {
+                    let (lo, hi) = (-(1i128 << (w - 1)), (1i128 << (w - 1)) - 1);
+                    let s = sign_extend(x, w) as i128 + sign_extend(y, w) as i128;
+                    (s.clamp(lo, hi) as u64) & mask
+                }
+                IntKind::SubSatS => {
+                    let (lo, hi) = (-(1i128 << (w - 1)), (1i128 << (w - 1)) - 1);
+                    let s = sign_extend(x, w) as i128 - sign_extend(y, w) as i128;
+                    (s.clamp(lo, hi) as u64) & mask
+                }
+                IntKind::AddSatU => {
+                    let s = x as u128 + y as u128;
+                    s.min(mask as u128) as u64
+                }
+                IntKind::SubSatU => x.saturating_sub(y),
+                // Rounded-up average, the PAVG semantics (u128 avoids the
+                // w=64 carry overflow in debug builds).
+                IntKind::AvgU => ((x as u128 + y as u128 + 1) >> 1) as u64,
+            }
+        })
+    }
+
+    fn exec_fp(&mut self, ins: &Instruction, op: FpOp, ty: LaneType, packed: bool) -> Result<()> {
+        let w = ty.width();
+        let lanes = if packed { VecReg::lanes(w) } else { 1 };
+        let a = self.regs.v[self.vreg(&ins.srcs[0])?];
+        let b = ins
+            .srcs
+            .get(1)
+            .and_then(|o| match o {
+                Operand::Vreg(_) => Some(self.vreg(o)),
+                _ => None,
+            })
+            .transpose()?
+            .map(|r| self.regs.v[r]);
+        // Trailing immediate (MINMAX / RNDSCALE / CLASS selector).
+        let imm = ins.srcs.iter().rev().find_map(|o| match o {
+            Operand::Imm(v) => Some(*v),
+            _ => None,
+        });
+
+        // VCLASS writes a mask register, not lanes.
+        if matches!(op, FpOp::Class) {
+            let dst = Self::kreg(&ins.dst)?;
+            let sel = imm.unwrap_or(0b111);
+            let mut out = 0u64;
+            for i in 0..lanes {
+                let x = ty.decode(a.get(w, i));
+                let hit = (sel & 1 != 0 && x.is_nan())
+                    || (sel & 2 != 0 && x == 0.0)
+                    || (sel & 4 != 0 && x < 0.0);
+                if hit {
+                    out |= 1 << i;
+                }
+            }
+            self.regs.k[dst] = out;
+            return Ok(());
+        }
+
+        // The FMA family reads the destination as its third operand.
+        let acc = self.regs.v[self.vreg(&ins.dst)?];
+        self.write_lanes(ins, w, lanes, |i| {
+            let x = ty.decode(a.get(w, i));
+            let y = b.map(|r| ty.decode(r.get(w, i))).unwrap_or(0.0);
+            let z = ty.decode(acc.get(w, i));
+            let r = match op {
+                FpOp::Add => x + y,
+                FpOp::Sub => x - y,
+                FpOp::Mul => x * y,
+                FpOp::Div => x / y,
+                FpOp::Sqrt => x.sqrt(),
+                FpOp::Min => x.min(y),
+                FpOp::Max => x.max(y),
+                // Intel operand orders: 132 ⇒ dst·src2 + src1? The SDM
+                // convention with (dst, a, b): 132: dst = dst·b + a;
+                // 213: dst = a·dst + b; 231: dst = a·b + dst.
+                FpOp::Fma(kind, order) => {
+                    let (p1, p2, addend) = match order {
+                        FmaOrder::O132 => (z, y, x),
+                        FmaOrder::O213 => (x, z, y),
+                        FmaOrder::O231 => (x, y, z),
+                    };
+                    match kind {
+                        FmaKind::Madd => p1.mul_add(p2, addend),
+                        FmaKind::Msub => p1.mul_add(p2, -addend),
+                        FmaKind::Nmadd => (-p1).mul_add(p2, addend),
+                        FmaKind::Nmsub => (-p1).mul_add(p2, -addend),
+                    }
+                }
+                FpOp::Rcp => 1.0 / x,
+                FpOp::Rsqrt => 1.0 / x.sqrt(),
+                // VEXP / VMANT: exponent and significand extraction
+                // (VGETEXP/VGETMANT semantics).
+                FpOp::Exp => {
+                    if x == 0.0 || x.is_nan() {
+                        f64::NAN
+                    } else {
+                        x.abs().log2().floor()
+                    }
+                }
+                FpOp::Mant => {
+                    if x == 0.0 || x.is_nan() {
+                        x
+                    } else {
+                        let e = x.abs().log2().floor();
+                        x.abs() / e.exp2()
+                    }
+                }
+                // VRNDSCALE: round to 2^-M fixed point, M = imm[7:4]
+                // (simplified: low nibble rounding-mode ignored → RNE).
+                FpOp::RndScale => {
+                    let mscale = ((imm.unwrap_or(0) >> 4) & 0xF) as i32;
+                    let s = (mscale as f64).exp2();
+                    (x * s).round_ties_even() / s
+                }
+                FpOp::Reduce => {
+                    let mscale = ((imm.unwrap_or(0) >> 4) & 0xF) as i32;
+                    let s = (mscale as f64).exp2();
+                    x - (x * s).round_ties_even() / s
+                }
+                FpOp::Scalef => x * y.floor().exp2(),
+                // VMINMAX: imm bit 0 selects min (0) or max (1).
+                FpOp::MinMax => {
+                    if imm.unwrap_or(0) & 1 == 0 {
+                        x.min(y)
+                    } else {
+                        x.max(y)
+                    }
+                }
+                FpOp::Class => unreachable!(),
+            };
+            ty.encode(r)
+        })
+    }
+
+    fn exec_broadcast(&mut self, ins: &Instruction, w: u32) -> Result<()> {
+        let a = self.regs.v[self.vreg(&ins.srcs[0])?];
+        match w {
+            8 | 16 | 32 | 64 => {
+                let lanes = VecReg::lanes(w);
+                let v = a.get(w, 0);
+                self.write_lanes(ins, w, lanes, |_| v)
+            }
+            128 | 256 => {
+                // Block broadcast in 64-bit words.
+                let words = (w / 64) as usize;
+                let lanes = VecReg::lanes(64);
+                self.write_lanes(ins, 64, lanes, |i| a.get(64, i % words))
+            }
+            _ => bail!("bad broadcast width {w}"),
+        }
+    }
+
+    fn exec_v2m(&mut self, ins: &Instruction, w: u32) -> Result<()> {
+        // VPMOVB{w}2M: mask ← sign bit of every lane.
+        let dst = Self::kreg(&ins.dst)?;
+        let a = self.regs.v[self.vreg(&ins.srcs[0])?];
+        let lanes = VecReg::lanes(w);
+        let mut out = 0u64;
+        for i in 0..lanes {
+            if a.get(w, i) >> (w - 1) & 1 == 1 {
+                out |= 1 << i;
+            }
+        }
+        self.regs.k[dst] = out;
+        Ok(())
+    }
+
+    fn exec_m2v(&mut self, ins: &Instruction, w: u32) -> Result<()> {
+        // VPMOVM2B{w}: lanes ← all-ones where the mask bit is set.
+        let k = self.regs.k[Self::kreg(&ins.srcs[0])?];
+        let lanes = VecReg::lanes(w);
+        let ones = crate::num::bitstring::mask64(w);
+        self.write_lanes(ins, w, lanes, |i| if k >> i & 1 == 1 { ones } else { 0 })
+    }
+
+    fn exec_shift(&mut self, ins: &Instruction, op: ShiftOp, w: u32) -> Result<()> {
+        let a = self.regs.v[self.vreg(&ins.srcs[0])?];
+        let count = Self::imm(&ins.srcs[1])? as u32;
+        let lanes = VecReg::lanes(w);
+        self.write_lanes(ins, w, lanes, |i| {
+            let x = a.get(w, i);
+            if count >= w {
+                return match op {
+                    ShiftOp::Sra => {
+                        if sign_extend(x, w) < 0 {
+                            crate::num::bitstring::mask64(w)
+                        } else {
+                            0
+                        }
+                    }
+                    _ => 0,
+                };
+            }
+            match op {
+                ShiftOp::Sll => (x << count) & crate::num::bitstring::mask64(w),
+                ShiftOp::Srl => x >> count,
+                ShiftOp::Sra => {
+                    ((sign_extend(x, w) >> count) as u64) & crate::num::bitstring::mask64(w)
+                }
+            }
+        })
+    }
+
+    fn exec_compare(&mut self, ins: &Instruction, suffix: &str) -> Result<()> {
+        let (ty, packed) = LaneType::parse_fp(suffix)
+            .ok_or_else(|| anyhow!("bad compare suffix {suffix}"))?;
+        let w = ty.width();
+        let lanes = if packed { VecReg::lanes(w) } else { 1 };
+        let dst = Self::kreg(&ins.dst)?;
+        let a = self.regs.v[self.vreg(&ins.srcs[0])?];
+        let b = self.regs.v[self.vreg(&ins.srcs[1])?];
+        let pred = Self::imm(&ins.srcs[2])?;
+        let rmask = self.regs.write_mask(ins.mask, lanes);
+        let mut out = 0u64;
+        for i in 0..lanes {
+            if rmask >> i & 1 == 0 {
+                continue;
+            }
+            let (xb, yb) = (a.get(w, i), b.get(w, i));
+            let hit = match ty {
+                // The takum fast path: total order == signed-integer order
+                // on the encodings. NaR (most-negative) sorts below
+                // everything, matching the takum standard.
+                LaneType::Takum(n) => {
+                    let (kx, ky) = (sign_extend(xb, n), sign_extend(yb, n));
+                    match pred {
+                        0 => kx == ky,
+                        1 => kx < ky,
+                        2 => kx <= ky,
+                        4 => kx != ky,
+                        5 => kx >= ky,
+                        6 => kx > ky,
+                        _ => false,
+                    }
+                }
+                // IEEE formats need real comparisons (NaN-unordered).
+                _ => {
+                    let (x, y) = (ty.decode(xb), ty.decode(yb));
+                    match pred {
+                        0 => x == y,
+                        1 => x < y,
+                        2 => x <= y,
+                        4 => x != y,
+                        5 => x >= y,
+                        6 => x > y,
+                        _ => false,
+                    }
+                }
+            };
+            if hit {
+                out |= 1 << i;
+            }
+        }
+        self.regs.k[dst] = out;
+        Ok(())
+    }
+
+    fn exec_convert(&mut self, ins: &Instruction, rest: &str) -> Result<()> {
+        // Legacy two-source bf16 convert: VCVTNE2PS2BF16 packs two PS regs.
+        if rest == "NE2PS2BF16" {
+            let a = self.regs.v[self.vreg(&ins.srcs[0])?];
+            let b = self.regs.v[self.vreg(&ins.srcs[1])?];
+            return self.write_lanes(ins, 16, 32, |i| {
+                let src = if i < 16 { &b } else { &a };
+                let x = F32.decode(src.get(32, i % 16));
+                BF16.encode(x)
+            });
+        }
+        // Normalise legacy spellings: VCVTNEPS2BF16 → PS2BF16 parse.
+        let rest = rest.strip_prefix("NE").unwrap_or(rest);
+        let parse_any = |s: &str| -> Option<(LaneType, bool)> {
+            if let Some(t) = LaneType::parse_fp(s) {
+                return Some(t);
+            }
+            // Integer lane suffixes of the proposed matrix: PS8/PU32/…
+            let t = |n: &str| n.parse::<u32>().ok().filter(|n| [8u32, 16, 32, 64].contains(n));
+            if let Some(n) = s.strip_prefix("PS").and_then(t) {
+                return Some((LaneType::SInt(n), true));
+            }
+            if let Some(n) = s.strip_prefix("PU").and_then(t) {
+                return Some((LaneType::UInt(n), true));
+            }
+            // Legacy spellings used by the baseline programs.
+            match s {
+                "BF16" => Some((LaneType::Mini(BF16), true)),
+                "HF8" => Some((LaneType::Mini(E4M3), true)),
+                "BF8" => Some((LaneType::Mini(E5M2), true)),
+                _ => None,
+            }
+        };
+        // The '2' separator is ambiguous when widths contain a 2
+        // (VCVTPT322PS32): try every split position until both sides parse.
+        let mut split = None;
+        for (pos, _) in rest.match_indices('2') {
+            if let (Some(s), Some(d)) = (parse_any(&rest[..pos]), parse_any(&rest[pos + 1..])) {
+                split = Some((s, d));
+                break;
+            }
+        }
+        let ((src_ty, _), (dst_ty, _)) =
+            split.ok_or_else(|| anyhow!("bad convert VCVT{rest}"))?;
+        let a = self.regs.v[self.vreg(&ins.srcs[0])?];
+        let (ws, wd) = (src_ty.width(), dst_ty.width());
+        // Width-changing packed converts operate on min(lanes_src, lanes_dst).
+        let lanes = VecReg::lanes(ws.max(wd));
+        self.write_lanes(ins, wd, lanes, |i| dst_ty.encode(src_ty.decode(a.get(ws, i))))
+    }
+
+    /// Widening dot products: `VDPPT8PT16`-style (pairs of src lanes fused
+    /// into one dst lane, accumulated onto dst) plus the legacy
+    /// `VDPBF16PS` / `VDPPHPS`.
+    fn exec_dot(&mut self, ins: &Instruction, rest: &str) -> Result<()> {
+        let (src_ty, dst_ty): (LaneType, LaneType) = match rest {
+            "PT8PT16" => (LaneType::Takum(8), LaneType::Takum(16)),
+            "PT16PT32" => (LaneType::Takum(16), LaneType::Takum(32)),
+            "PT32PT64" => (LaneType::Takum(32), LaneType::Takum(64)),
+            "BF16PS" => (LaneType::Mini(BF16), LaneType::Mini(F32)),
+            "PHPS" => (LaneType::Mini(F16), LaneType::Mini(F32)),
+            _ => bail!("unimplemented dot product VDP{rest}"),
+        };
+        let (ws, wd) = (src_ty.width(), dst_ty.width());
+        debug_assert_eq!(wd, ws * 2);
+        let a = self.regs.v[self.vreg(&ins.srcs[0])?];
+        let b = self.regs.v[self.vreg(&ins.srcs[1])?];
+        let acc = self.regs.v[self.vreg(&ins.dst)?];
+        let lanes = VecReg::lanes(wd);
+        self.write_lanes(ins, wd, lanes, |i| {
+            let mut sum = dst_ty.decode(acc.get(wd, i));
+            for j in 0..2 {
+                let x = src_ty.decode(a.get(ws, 2 * i + j));
+                let y = src_ty.decode(b.get(ws, 2 * i + j));
+                sum += x * y;
+            }
+            dst_ty.encode(sum)
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mnemonic parsing helpers
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+enum FmaKind {
+    Madd,
+    Msub,
+    Nmadd,
+    Nmsub,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum FmaOrder {
+    O132,
+    O213,
+    O231,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum FpOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Sqrt,
+    Min,
+    Max,
+    MinMax,
+    Fma(FmaKind, FmaOrder),
+    Rcp,
+    Rsqrt,
+    Exp,
+    Mant,
+    Class,
+    RndScale,
+    Reduce,
+    Scalef,
+}
+
+#[derive(Debug, Clone, Copy)]
+enum ShiftOp {
+    Sll,
+    Srl,
+    Sra,
+}
+
+fn parse_shift(m: &str) -> Option<(ShiftOp, u32)> {
+    for (pre, op) in [("VPSLL", ShiftOp::Sll), ("VPSRL", ShiftOp::Srl), ("VPSRA", ShiftOp::Sra)] {
+        if let Some(rest) = m.strip_prefix(pre) {
+            // proposed: B{8..64}; legacy: W/D/Q.
+            if let Some(w) = rest.strip_prefix('B').and_then(|s| s.parse::<u32>().ok()) {
+                if [8, 16, 32, 64].contains(&w) {
+                    return Some((op, w));
+                }
+            }
+            let w = match rest {
+                "W" => 16,
+                "D" => 32,
+                "Q" => 64,
+                _ => return None,
+            };
+            return Some((op, w));
+        }
+    }
+    None
+}
+
+fn parse_b_width(s: &str) -> Option<u32> {
+    // "B8".."B64" (proposed) or single legacy letter.
+    if let Some(w) = s.strip_prefix('B').and_then(|r| r.parse::<u32>().ok()) {
+        if [8, 16, 32, 64].contains(&w) {
+            return Some(w);
+        }
+        return None;
+    }
+    match s {
+        "B" => Some(8),
+        "W" => Some(16),
+        "D" => Some(32),
+        "Q" => Some(64),
+        _ => None,
+    }
+}
+
+fn parse_fp_arith(m: &str) -> Option<(FpOp, LaneType, bool)> {
+    // FMA family first (longest prefixes).
+    for (name, kind) in [
+        ("VFMADD", FmaKind::Madd),
+        ("VFMSUB", FmaKind::Msub),
+        ("VFNMADD", FmaKind::Nmadd),
+        ("VFNMSUB", FmaKind::Nmsub),
+    ] {
+        if let Some(rest) = m.strip_prefix(name) {
+            for (o, order) in
+                [("132", FmaOrder::O132), ("213", FmaOrder::O213), ("231", FmaOrder::O231)]
+            {
+                if let Some(suffix) = rest.strip_prefix(o) {
+                    if let Some((ty, packed)) = LaneType::parse_fp(suffix) {
+                        return Some((FpOp::Fma(kind, order), ty, packed));
+                    }
+                }
+            }
+        }
+    }
+    let table: [(&str, FpOp); 16] = [
+        ("VADD", FpOp::Add),
+        ("VSUB", FpOp::Sub),
+        ("VMULTISHIFT", FpOp::Add), // guard: never matches an fp suffix
+        ("VMUL", FpOp::Mul),
+        ("VDIV", FpOp::Div),
+        ("VSQRT", FpOp::Sqrt),
+        ("VMINMAX", FpOp::MinMax),
+        ("VMIN", FpOp::Min),
+        ("VMAX", FpOp::Max),
+        ("VRCP", FpOp::Rcp),
+        ("VRSQRT", FpOp::Rsqrt),
+        ("VEXP", FpOp::Exp),
+        ("VMANT", FpOp::Mant),
+        ("VCLASS", FpOp::Class),
+        ("VRNDSCALE", FpOp::RndScale),
+        ("VSCALEF", FpOp::Scalef),
+    ];
+    for (prefix, op) in table {
+        if let Some(suffix) = m.strip_prefix(prefix) {
+            if let Some((ty, packed)) = LaneType::parse_fp(suffix) {
+                return Some((op, ty, packed));
+            }
+        }
+    }
+    if let Some(suffix) = m.strip_prefix("VREDUCE") {
+        if let Some((ty, packed)) = LaneType::parse_fp(suffix) {
+            return Some((FpOp::Reduce, ty, packed));
+        }
+    }
+    None
+}
+
+#[derive(Debug, Clone, Copy)]
+enum IntKind {
+    Add,
+    Sub,
+    MulLo,
+    MinU,
+    MaxU,
+    MinS,
+    MaxS,
+    AbsS,
+    AddSatS,
+    AddSatU,
+    SubSatS,
+    SubSatU,
+    AvgU,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct IntOp {
+    kind: IntKind,
+    width: u32,
+}
+
+/// Parse integer lane ops, both proposed (`VPADDU8`, `VPMAXS32`,
+/// `VPMULLU16`, `VPABSS64`) and legacy (`VPADDB`, `VPMAXSD`) spellings.
+fn parse_int_op(m: &str) -> Option<IntOp> {
+    let rest = m.strip_prefix("VP")?;
+    let num_width = |s: &str| -> Option<u32> {
+        s.parse::<u32>().ok().filter(|n| [8u32, 16, 32, 64].contains(n))
+    };
+    let legacy_width = |s: &str| -> Option<u32> {
+        match s {
+            "B" => Some(8),
+            "W" => Some(16),
+            "D" => Some(32),
+            "Q" => Some(64),
+            _ => None,
+        }
+    };
+    // Ordered longest-prefix-first so ADDSS/ADDUS win over ADDU/ADD.
+    let specs: [(&str, IntKind); 18] = [
+        ("ADDSS", IntKind::AddSatS),
+        ("ADDUS", IntKind::AddSatU),
+        ("ADDS", IntKind::AddSatS), // legacy VPADDSB/W
+        ("ADDU", IntKind::Add),
+        ("ADD", IntKind::Add),
+        ("SUBSS", IntKind::SubSatS),
+        ("SUBUS", IntKind::SubSatU),
+        ("SUBS", IntKind::SubSatS), // legacy VPSUBSB/W
+        ("SUBU", IntKind::Sub),
+        ("SUB", IntKind::Sub),
+        ("AVGU", IntKind::AvgU),
+        ("AVG", IntKind::AvgU), // legacy VPAVGB/W
+        ("MULLU", IntKind::MulLo),
+        ("MULL", IntKind::MulLo),
+        ("MINU", IntKind::MinU),
+        ("MAXU", IntKind::MaxU),
+        ("MINS", IntKind::MinS),
+        ("MAXS", IntKind::MaxS),
+    ];
+    for (name, kind) in specs {
+        if let Some(w) = rest.strip_prefix(name) {
+            if let Some(width) = num_width(w).or_else(|| legacy_width(w)) {
+                return Some(IntOp { kind, width });
+            }
+        }
+    }
+    if let Some(w) = rest.strip_prefix("ABSS").and_then(num_width) {
+        return Some(IntOp { kind: IntKind::AbsS, width: w });
+    }
+    if let Some(w) = rest.strip_prefix("ABS").and_then(legacy_width) {
+        return Some(IntOp { kind: IntKind::AbsS, width: w });
+    }
+    None
+}
+
+/// Split a mask mnemonic into (op, lane-count-width).
+fn split_mask_suffix(m: &str) -> Result<(&str, u32)> {
+    // Proposed: …B8/B16/B32/B64.
+    for (suf, w) in [("B8", 8u32), ("B16", 16), ("B32", 32), ("B64", 64)] {
+        if let Some(op) = m.strip_suffix(suf) {
+            return Ok((op, w));
+        }
+    }
+    // Legacy: …B/W/D/Q.
+    for (suf, w) in [("B", 8u32), ("W", 16), ("D", 32), ("Q", 64)] {
+        if let Some(op) = m.strip_suffix(suf) {
+            return Ok((op, w));
+        }
+    }
+    bail!("bad mask mnemonic {m}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::program::{Instruction as I, Operand::*};
+
+    fn add(m: &str, dst: u8, a: u8, b: u8) -> I {
+        I::new(m, Vreg(dst), vec![Vreg(a), Vreg(b)])
+    }
+
+    #[test]
+    fn takum16_vector_add() {
+        let mut mach = Machine::new();
+        let t = LaneType::Takum(16);
+        mach.load_f64(0, t, &[1.0, 2.0, -3.5, 0.0]);
+        mach.load_f64(1, t, &[0.5, 0.25, 3.5, 7.0]);
+        mach.step(&add("VADDPT16", 2, 0, 1)).unwrap();
+        let r = mach.read_f64(2, t);
+        assert_eq!(&r[..4], &[1.5, 2.25, 0.0, 7.0]);
+        assert_eq!(mach.executed, 1);
+    }
+
+    #[test]
+    fn nar_propagates() {
+        let mut mach = Machine::new();
+        let t = LaneType::Takum(8);
+        mach.load_f64(0, t, &[f64::NAN, 1.0]);
+        mach.load_f64(1, t, &[2.0, 2.0]);
+        mach.step(&add("VMULPT8", 2, 0, 1)).unwrap();
+        let r = mach.read_f64(2, t);
+        assert!(r[0].is_nan());
+        assert_eq!(r[1], 2.0);
+    }
+
+    #[test]
+    fn masking_merging_and_zeroing() {
+        let mut mach = Machine::new();
+        let t = LaneType::Takum(32);
+        mach.load_f64(0, t, &[1.0; 16]);
+        mach.load_f64(1, t, &[2.0; 16]);
+        mach.load_f64(2, t, &[9.0; 16]);
+        mach.set_mask(1, 0b0101);
+        // Merging: unset lanes keep 9.0.
+        let i = add("VADDPT32", 2, 0, 1).with_mask(1, false);
+        mach.step(&i).unwrap();
+        let r = mach.read_f64(2, t);
+        assert_eq!(r[0], 3.0);
+        assert_eq!(r[1], 9.0);
+        assert_eq!(r[2], 3.0);
+        // Zeroing: unset lanes become 0.
+        let i = add("VADDPT32", 2, 0, 1).with_mask(1, true);
+        mach.step(&i).unwrap();
+        let r = mach.read_f64(2, t);
+        assert_eq!(r[1], 0.0);
+    }
+
+    #[test]
+    fn takum_compare_is_integer_compare() {
+        let mut mach = Machine::new();
+        let t = LaneType::Takum(16);
+        let xs = [-3.0, 0.0, 1.5, 7.0, -0.001, 2.0, f64::NAN, 5.5];
+        let ys = [1.0, 0.0, 1.5, -7.0, -0.002, 8.0, 1.0, 5.5];
+        mach.load_f64(0, t, &xs);
+        mach.load_f64(1, t, &ys);
+        // pred 1 = LT.
+        let i = I::new("VCMPPT16", Kreg(2), vec![Vreg(0), Vreg(1), Imm(1)]);
+        mach.step(&i).unwrap();
+        let k = mach.get_mask(2);
+        for (i, (x, y)) in xs.iter().zip(&ys).enumerate() {
+            let want = if x.is_nan() {
+                true // NaR sorts below every real in takum order
+            } else {
+                x < y
+            };
+            assert_eq!(k >> i & 1 == 1, want, "lane {i}: {x} < {y}");
+        }
+    }
+
+    #[test]
+    fn scalar_ops_touch_lane0_only() {
+        let mut mach = Machine::new();
+        let t = LaneType::Takum(32);
+        mach.load_f64(0, t, &[4.0, 100.0]);
+        mach.load_f64(2, t, &[7.0, 7.0]);
+        mach.step(&I::new("VSQRTST32", Vreg(2), vec![Vreg(0)])).unwrap();
+        let r = mach.read_f64(2, t);
+        assert_eq!(r[0], 2.0);
+        assert_eq!(r[1], 7.0); // untouched
+    }
+
+    #[test]
+    fn dot_product_widening_matches_reference() {
+        let mut mach = Machine::new();
+        let t8 = LaneType::Takum(8);
+        let t16 = LaneType::Takum(16);
+        let a: Vec<f64> = (0..64).map(|i| ((i % 7) as f64 - 3.0) * 0.5).collect();
+        let b: Vec<f64> = (0..64).map(|i| ((i % 5) as f64 - 2.0) * 0.25).collect();
+        mach.load_f64(0, t8, &a);
+        mach.load_f64(1, t8, &b);
+        mach.load_f64(2, t16, &vec![0.0; 32]);
+        mach.step(&add("VDPPT8PT16", 2, 0, 1)).unwrap();
+        let r = mach.read_f64(2, t16);
+        for i in 0..32 {
+            // Reference: decode the *takum8-quantised* values, multiply,
+            // accumulate, takum16-quantise.
+            let aq = |v: f64| t8.decode(t8.encode(v));
+            let want = t16.decode(t16.encode(aq(a[2 * i]) * aq(b[2 * i]) + aq(a[2 * i + 1]) * aq(b[2 * i + 1])));
+            assert_eq!(r[i], want, "lane {i}");
+        }
+    }
+
+    #[test]
+    fn legacy_bf16_ops_work() {
+        let mut mach = Machine::new();
+        let bf = LaneType::Mini(BF16);
+        mach.load_f64(0, bf, &[1.5, 2.5]);
+        mach.load_f64(1, bf, &[0.5, 0.5]);
+        mach.step(&add("VADDNEPBF16", 2, 0, 1)).unwrap();
+        let r = mach.read_f64(2, bf);
+        assert_eq!(&r[..2], &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn conversion_roundtrip_through_int_lanes() {
+        let mut mach = Machine::new();
+        let t16 = LaneType::Takum(16);
+        mach.load_f64(0, t16, &[1.0, 2.0, 3.0, 250.0, -3.0]);
+        // takum16 → signed 16-bit ints
+        mach.step(&I::new("VCVTPT162PS16", Vreg(1), vec![Vreg(0)])).unwrap();
+        let ints = mach.read_f64(1, LaneType::SInt(16));
+        assert_eq!(&ints[..5], &[1.0, 2.0, 3.0, 250.0, -3.0]);
+        // and back
+        mach.step(&I::new("VCVTPS162PT16", Vreg(2), vec![Vreg(1)])).unwrap();
+        let back = mach.read_f64(2, t16);
+        assert_eq!(&back[..5], &[1.0, 2.0, 3.0, 250.0, -3.0]);
+    }
+
+    #[test]
+    fn integer_and_mask_and_bitwise_ops() {
+        let mut mach = Machine::new();
+        mach.load_f64(0, LaneType::UInt(8), &[250.0, 3.0, 17.0]);
+        mach.load_f64(1, LaneType::UInt(8), &[10.0, 200.0, 17.0]);
+        mach.step(&add("VPADDU8", 2, 0, 1)).unwrap();
+        let r = mach.read_f64(2, LaneType::UInt(8));
+        assert_eq!(&r[..3], &[4.0, 203.0, 34.0]); // 260 wraps to 4
+        // Legacy spelling executes identically.
+        mach.step(&add("VPADDB", 3, 0, 1)).unwrap();
+        assert_eq!(mach.regs.v[3], mach.regs.v[2]);
+        // Mask ops, proposed naming.
+        mach.set_mask(1, 0b1100);
+        mach.set_mask(2, 0b1010);
+        mach.step(&I::new("KANDB8", Kreg(3), vec![Kreg(1), Kreg(2)])).unwrap();
+        assert_eq!(mach.get_mask(3), 0b1000);
+        mach.step(&I::new("KXNORB8", Kreg(4), vec![Kreg(1), Kreg(2)])).unwrap();
+        assert_eq!(mach.get_mask(4) & 0xFF, 0b1111_1001);
+        // Bitwise.
+        mach.step(&add("VPXORQ", 4, 0, 0)).unwrap();
+        assert_eq!(mach.regs.v[4], VecReg::ZERO);
+    }
+
+    #[test]
+    fn fmadd_accumulates_into_dst() {
+        let mut mach = Machine::new();
+        let t = LaneType::Takum(32);
+        mach.load_f64(0, t, &[2.0, 3.0]);
+        mach.load_f64(1, t, &[4.0, 5.0]);
+        mach.load_f64(2, t, &[1.0, 1.0]);
+        mach.step(&add("VFMADD231PT32", 2, 0, 1)).unwrap();
+        let r = mach.read_f64(2, t);
+        assert_eq!(&r[..2], &[9.0, 16.0]);
+    }
+
+    #[test]
+    fn fma_variants_and_orders() {
+        let mut mach = Machine::new();
+        let t = LaneType::Takum(32);
+        // dst=z=1, a=x=2, b=y=4
+        let set = |mach: &mut Machine| {
+            mach.load_f64(2, t, &[1.0]);
+            mach.load_f64(0, t, &[2.0]);
+            mach.load_f64(1, t, &[4.0]);
+        };
+        let run = |mach: &mut Machine, mn: &str| {
+            set(mach);
+            mach.step(&add(mn, 2, 0, 1)).unwrap();
+            mach.read_f64(2, t)[0]
+        };
+        // 132: dst = dst·b + a = 1·4+2 = 6
+        assert_eq!(run(&mut mach, "VFMADD132PT32"), 6.0);
+        // 213: dst = a·dst + b = 2·1+4 = 6
+        assert_eq!(run(&mut mach, "VFMADD213PT32"), 6.0);
+        // 231: dst = a·b + dst = 2·4+1 = 9
+        assert_eq!(run(&mut mach, "VFMADD231PT32"), 9.0);
+        // FMSUB231: 2·4−1 = 7; FNMADD231: −8+1 = −7; FNMSUB231: −8−1 = −9
+        assert_eq!(run(&mut mach, "VFMSUB231PT32"), 7.0);
+        assert_eq!(run(&mut mach, "VFNMADD231PT32"), -7.0);
+        assert_eq!(run(&mut mach, "VFNMSUB231PT32"), -9.0);
+    }
+
+    #[test]
+    fn unary_and_imm_fp_ops() {
+        let mut mach = Machine::new();
+        let t = LaneType::Takum(32);
+        mach.load_f64(0, t, &[4.0, 0.25, -6.5, 12.0]);
+        mach.step(&I::new("VRCPPT32", Vreg(1), vec![Vreg(0)])).unwrap();
+        assert_eq!(&mach.read_f64(1, t)[..2], &[0.25, 4.0]);
+        mach.step(&I::new("VRSQRTPT32", Vreg(1), vec![Vreg(0)])).unwrap();
+        assert_eq!(mach.read_f64(1, t)[0], 0.5);
+        // VEXP = floor(log2|x|), VMANT = significand in [1,2).
+        mach.step(&I::new("VEXPPT32", Vreg(1), vec![Vreg(0)])).unwrap();
+        assert_eq!(&mach.read_f64(1, t)[..4], &[2.0, -2.0, 2.0, 3.0]);
+        mach.step(&I::new("VMANTPT32", Vreg(1), vec![Vreg(0)])).unwrap();
+        assert_eq!(&mach.read_f64(1, t)[..4], &[1.0, 1.0, 1.625, 1.5]);
+        // VRNDSCALE with M=0 rounds to integers (ties even).
+        mach.load_f64(0, t, &[2.5, -1.25, 0.5]);
+        mach.step(&I::new("VRNDSCALEPT32", Vreg(1), vec![Vreg(0), Imm(0)])).unwrap();
+        assert_eq!(&mach.read_f64(1, t)[..3], &[2.0, -1.0, 0.0]);
+        // M=1 (imm 0x10) rounds to halves.
+        mach.load_f64(0, t, &[1.26]);
+        mach.step(&I::new("VRNDSCALEPT32", Vreg(1), vec![Vreg(0), Imm(0x10)])).unwrap();
+        assert_eq!(mach.read_f64(1, t)[0], 1.5);
+        // VSCALEF: x·2^floor(y).
+        mach.load_f64(0, t, &[3.0]);
+        mach.load_f64(1, t, &[2.5]);
+        mach.step(&I::new("VSCALEFPT32", Vreg(2), vec![Vreg(0), Vreg(1)])).unwrap();
+        assert_eq!(mach.read_f64(2, t)[0], 12.0);
+        // VMINMAX with imm 0 = min, 1 = max.
+        mach.load_f64(0, t, &[3.0, -1.0]);
+        mach.load_f64(1, t, &[2.0, 5.0]);
+        mach.step(&I::new("VMINMAXPT32", Vreg(2), vec![Vreg(0), Vreg(1), Imm(0)])).unwrap();
+        assert_eq!(&mach.read_f64(2, t)[..2], &[2.0, -1.0]);
+        mach.step(&I::new("VMINMAXPT32", Vreg(2), vec![Vreg(0), Vreg(1), Imm(1)])).unwrap();
+        assert_eq!(&mach.read_f64(2, t)[..2], &[3.0, 5.0]);
+        // VCLASS writes a mask: bit0 NaR, bit1 zero, bit2 negative.
+        mach.load_f64(0, t, &[f64::NAN, 0.0, -2.0, 7.0]);
+        mach.step(&I::new("VCLASSPT32", Kreg(3), vec![Vreg(0), Imm(0b111)])).unwrap();
+        assert_eq!(mach.get_mask(3) & 0xF, 0b0111);
+    }
+
+    #[test]
+    fn saturating_integer_ops() {
+        let mut mach = Machine::new();
+        let u8t = LaneType::UInt(8);
+        mach.load_f64(0, u8t, &[250.0, 3.0, 200.0]);
+        mach.load_f64(1, u8t, &[10.0, 4.0, 100.0]);
+        // proposed saturating-unsigned add: clamps at 255.
+        mach.step(&add("VPADDUS8", 2, 0, 1)).unwrap();
+        assert_eq!(&mach.read_f64(2, u8t)[..3], &[255.0, 7.0, 255.0]);
+        // legacy spelling agrees.
+        mach.step(&add("VPADDUSB", 3, 0, 1)).unwrap();
+        assert_eq!(mach.regs.v[3], mach.regs.v[2]);
+        // unsigned saturating sub floors at 0.
+        mach.step(&add("VPSUBUS8", 2, 1, 0)).unwrap();
+        assert_eq!(&mach.read_f64(2, u8t)[..3], &[0.0, 1.0, 0.0]);
+        // rounded-up average.
+        mach.step(&add("VPAVGU8", 2, 0, 1)).unwrap();
+        assert_eq!(&mach.read_f64(2, u8t)[..3], &[130.0, 4.0, 150.0]);
+        // signed saturation at ±127/−128.
+        let s8 = LaneType::SInt(8);
+        mach.load_f64(0, s8, &[100.0, -100.0]);
+        mach.load_f64(1, s8, &[100.0, -100.0]);
+        mach.step(&add("VPADDSS8", 2, 0, 1)).unwrap();
+        assert_eq!(&mach.read_f64(2, s8)[..2], &[127.0, -128.0]);
+    }
+
+    #[test]
+    fn broadcast_shift_and_mask_moves() {
+        let mut mach = Machine::new();
+        let u16t = LaneType::UInt(16);
+        mach.load_f64(0, u16t, &[7.0, 9.0, 11.0]);
+        mach.step(&I::new("VBROADCASTB16", Vreg(1), vec![Vreg(0)])).unwrap();
+        assert!(mach.read_f64(1, u16t).iter().all(|&v| v == 7.0));
+        // shifts (proposed + legacy spelling).
+        mach.step(&I::new("VPSLLB16", Vreg(2), vec![Vreg(0), Imm(3)])).unwrap();
+        assert_eq!(&mach.read_f64(2, u16t)[..3], &[56.0, 72.0, 88.0]);
+        mach.step(&I::new("VPSRLW", Vreg(2), vec![Vreg(2), Imm(3)])).unwrap();
+        assert_eq!(&mach.read_f64(2, u16t)[..3], &[7.0, 9.0, 11.0]);
+        // arithmetic shift sign-fills.
+        let s16 = LaneType::SInt(16);
+        mach.load_f64(0, s16, &[-64.0]);
+        mach.step(&I::new("VPSRAB16", Vreg(2), vec![Vreg(0), Imm(2)])).unwrap();
+        assert_eq!(mach.read_f64(2, s16)[0], -16.0);
+        // mask ↔ vector round trip.
+        mach.set_mask(1, 0b1010);
+        mach.step(&I::new("VPMOVM2B16", Vreg(3), vec![Kreg(1)])).unwrap();
+        mach.step(&I::new("VPMOVB162M", Kreg(2), vec![Vreg(3)])).unwrap();
+        assert_eq!(mach.get_mask(2), 0b1010);
+        // KUNPCK concatenates low halves.
+        mach.set_mask(1, 0xAB);
+        mach.set_mask(2, 0xCD);
+        mach.step(&I::new("KUNPCKBW", Kreg(3), vec![Kreg(1), Kreg(2)])).unwrap();
+        assert_eq!(mach.get_mask(3), 0xABCD);
+        mach.step(&I::new("VKUNPCKB8B16", Kreg(4), vec![Kreg(1), Kreg(2)])).unwrap();
+        assert_eq!(mach.get_mask(4), 0xABCD);
+    }
+
+    #[test]
+    fn unknown_mnemonic_errors() {
+        let mut mach = Machine::new();
+        assert!(mach.step(&add("VFROBNICATE", 0, 1, 2)).is_err());
+    }
+
+    #[test]
+    fn counts_histogram() {
+        let mut mach = Machine::new();
+        let t = LaneType::Takum(8);
+        mach.load_f64(0, t, &[1.0]);
+        mach.load_f64(1, t, &[1.0]);
+        for _ in 0..3 {
+            mach.step(&add("VADDPT8", 2, 0, 1)).unwrap();
+        }
+        assert_eq!(mach.counts["VADDPT8"], 3);
+        assert_eq!(mach.executed, 3);
+    }
+}

@@ -1,0 +1,13 @@
+//! Executable SIMD simulator for the proposed takum ISA and an AVX10.2
+//! baseline subset (OFP8/BF16), with 512-bit vector registers, mask
+//! registers, an assembler and an execution engine.
+
+pub mod register;
+pub mod program;
+pub mod exec;
+pub mod assemble;
+
+pub use assemble::assemble;
+pub use exec::{LaneType, Machine};
+pub use program::{Instruction, Operand, Program};
+pub use register::{MaskReg, VecReg, VLEN_BITS};

@@ -1,0 +1,90 @@
+//! Program representation for the simulator.
+
+/// An instruction operand.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Operand {
+    /// Vector register v0–v31.
+    Vreg(u8),
+    /// Mask register k0–k7.
+    Kreg(u8),
+    /// Immediate (comparison predicates, shift counts, …).
+    Imm(i64),
+}
+
+/// One decoded instruction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Instruction {
+    /// Upper-case mnemonic, e.g. `VADDPT16`.
+    pub mnemonic: String,
+    /// Destination (vector or mask register, depending on the op).
+    pub dst: Operand,
+    /// Sources in order.
+    pub srcs: Vec<Operand>,
+    /// Optional write mask `{k#}`.
+    pub mask: Option<u8>,
+    /// Zeroing-masking `{z}` (otherwise merging).
+    pub zeroing: bool,
+}
+
+impl Instruction {
+    pub fn new(mnemonic: &str, dst: Operand, srcs: Vec<Operand>) -> Instruction {
+        Instruction { mnemonic: mnemonic.to_string(), dst, srcs, mask: None, zeroing: false }
+    }
+
+    pub fn with_mask(mut self, k: u8, zeroing: bool) -> Instruction {
+        self.mask = Some(k);
+        self.zeroing = zeroing;
+        self
+    }
+}
+
+/// A straight-line program.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Program {
+    pub instrs: Vec<Instruction>,
+}
+
+impl Program {
+    pub fn push(&mut self, i: Instruction) {
+        self.instrs.push(i);
+    }
+
+    pub fn len(&self) -> usize {
+        self.instrs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.instrs.is_empty()
+    }
+
+    /// Histogram of mnemonics (the "instruction mix" metric used when
+    /// comparing the proposed ISA against the AVX10.2 baseline).
+    pub fn histogram(&self) -> std::collections::BTreeMap<String, usize> {
+        let mut h = std::collections::BTreeMap::new();
+        for i in &self.instrs {
+            *h.entry(i.mnemonic.clone()).or_default() += 1;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_and_histogram() {
+        let mut p = Program::default();
+        p.push(Instruction::new("VADDPT8", Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]));
+        p.push(Instruction::new("VADDPT8", Operand::Vreg(3), vec![Operand::Vreg(2), Operand::Vreg(1)]));
+        p.push(
+            Instruction::new("VMULPT8", Operand::Vreg(4), vec![Operand::Vreg(3), Operand::Vreg(0)])
+                .with_mask(1, true),
+        );
+        assert_eq!(p.len(), 3);
+        let h = p.histogram();
+        assert_eq!(h["VADDPT8"], 2);
+        assert_eq!(h["VMULPT8"], 1);
+        assert!(p.instrs[2].zeroing);
+    }
+}

@@ -1,0 +1,149 @@
+//! Register file: 32 × 512-bit vector registers and 8 mask registers,
+//! AVX10.2's 512-bit maximum vector length.
+
+/// Vector length in bits.
+pub const VLEN_BITS: u32 = 512;
+/// Vector length in bytes.
+pub const VLEN_BYTES: usize = (VLEN_BITS / 8) as usize;
+/// Number of vector registers (%zmm0–%zmm31).
+pub const NUM_VREGS: usize = 32;
+/// Number of mask registers (%k0–%k7).
+pub const NUM_MASKS: usize = 8;
+
+/// One 512-bit register, stored as 8 little-endian u64 words.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct VecReg {
+    pub words: [u64; 8],
+}
+
+impl VecReg {
+    pub const ZERO: VecReg = VecReg { words: [0; 8] };
+
+    /// Number of lanes at an element width (8/16/32/64 bits).
+    #[inline]
+    pub const fn lanes(width: u32) -> usize {
+        (VLEN_BITS / width) as usize
+    }
+
+    /// Read lane `i` at element width `width` (result in the low bits).
+    #[inline]
+    pub fn get(&self, width: u32, i: usize) -> u64 {
+        debug_assert!(matches!(width, 8 | 16 | 32 | 64));
+        debug_assert!(i < Self::lanes(width));
+        let bit = i as u32 * width;
+        let word = (bit / 64) as usize;
+        let off = bit % 64;
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        (self.words[word] >> off) & mask
+    }
+
+    /// Write lane `i` at element width `width`.
+    #[inline]
+    pub fn set(&mut self, width: u32, i: usize, value: u64) {
+        debug_assert!(matches!(width, 8 | 16 | 32 | 64));
+        debug_assert!(i < Self::lanes(width));
+        let bit = i as u32 * width;
+        let word = (bit / 64) as usize;
+        let off = bit % 64;
+        let mask = if width == 64 { u64::MAX } else { (1u64 << width) - 1 };
+        self.words[word] = (self.words[word] & !(mask << off)) | ((value & mask) << off);
+    }
+
+    /// All lanes at a width.
+    pub fn lanes_vec(&self, width: u32) -> Vec<u64> {
+        (0..Self::lanes(width)).map(|i| self.get(width, i)).collect()
+    }
+
+    /// Build from lane values (missing lanes zero).
+    pub fn from_lanes(width: u32, vals: &[u64]) -> VecReg {
+        assert!(vals.len() <= Self::lanes(width));
+        let mut r = VecReg::ZERO;
+        for (i, v) in vals.iter().enumerate() {
+            r.set(width, i, *v);
+        }
+        r
+    }
+}
+
+/// A mask register: one bit per lane (up to 64 lanes at width 8).
+pub type MaskReg = u64;
+
+/// The architectural register file.
+#[derive(Debug, Clone)]
+pub struct RegisterFile {
+    pub v: [VecReg; NUM_VREGS],
+    pub k: [MaskReg; NUM_MASKS],
+}
+
+impl Default for RegisterFile {
+    fn default() -> Self {
+        RegisterFile { v: [VecReg::ZERO; NUM_VREGS], k: [0; NUM_MASKS] }
+    }
+}
+
+impl RegisterFile {
+    /// Effective write mask for an op with `lanes` lanes: `None` mask (or
+    /// k0) means all lanes, matching the AVX-512 convention that %k0
+    /// cannot be a write mask.
+    pub fn write_mask(&self, mask: Option<u8>, lanes: usize) -> u64 {
+        let all = if lanes >= 64 { u64::MAX } else { (1u64 << lanes) - 1 };
+        match mask {
+            None | Some(0) => all,
+            Some(k) => self.k[k as usize] & all,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_roundtrip_all_widths() {
+        for width in [8u32, 16, 32, 64] {
+            let mut r = VecReg::ZERO;
+            let n = VecReg::lanes(width);
+            for i in 0..n {
+                r.set(width, i, (i as u64).wrapping_mul(0x9E37_79B9) & ((1u64 << (width.min(63))) - 1));
+            }
+            for i in 0..n {
+                let want = (i as u64).wrapping_mul(0x9E37_79B9) & ((1u64 << (width.min(63))) - 1);
+                assert_eq!(r.get(width, i), want, "w={width} i={i}");
+            }
+        }
+    }
+
+    #[test]
+    fn lanes_counts() {
+        assert_eq!(VecReg::lanes(8), 64);
+        assert_eq!(VecReg::lanes(16), 32);
+        assert_eq!(VecReg::lanes(32), 16);
+        assert_eq!(VecReg::lanes(64), 8);
+    }
+
+    #[test]
+    fn setting_one_lane_leaves_others() {
+        let mut r = VecReg::from_lanes(16, &vec![0xFFFF; 32]);
+        r.set(16, 7, 0x1234);
+        assert_eq!(r.get(16, 6), 0xFFFF);
+        assert_eq!(r.get(16, 7), 0x1234);
+        assert_eq!(r.get(16, 8), 0xFFFF);
+    }
+
+    #[test]
+    fn sixty_four_bit_lanes() {
+        let mut r = VecReg::ZERO;
+        r.set(64, 3, u64::MAX);
+        assert_eq!(r.get(64, 3), u64::MAX);
+        assert_eq!(r.get(64, 2), 0);
+        assert_eq!(r.words[3], u64::MAX);
+    }
+
+    #[test]
+    fn write_mask_k0_means_all() {
+        let rf = RegisterFile::default();
+        assert_eq!(rf.write_mask(None, 16), 0xFFFF);
+        assert_eq!(rf.write_mask(Some(0), 16), 0xFFFF);
+        assert_eq!(rf.write_mask(None, 64), u64::MAX);
+    }
+}

@@ -1,0 +1,178 @@
+//! Micro-benchmark harness used by the `benches/` targets (the offline
+//! build has no `criterion`). Methodology: warm-up, then adaptive batching
+//! until a minimum measurement time is reached, reporting median /
+//! mean ± stddev of per-iteration wall time over several samples.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+/// One benchmark measurement.
+#[derive(Debug, Clone)]
+pub struct Measurement {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    /// Optional throughput denominator (elements per iteration).
+    pub elements: Option<u64>,
+}
+
+impl Measurement {
+    /// Pretty per-iteration time with an adaptive unit.
+    pub fn human_time(&self) -> String {
+        fmt_ns(self.median_ns)
+    }
+
+    /// Throughput in elements/second if `elements` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / (self.median_ns * 1e-9))
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with criterion-like ergonomics.
+pub struct Bencher {
+    warmup: Duration,
+    measure: Duration,
+    samples: usize,
+    results: Vec<Measurement>,
+    group: String,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // Fast mode for CI / `cargo bench -- --quick`.
+        let quick = std::env::args().any(|a| a == "--quick")
+            || std::env::var("TAKUM_BENCH_QUICK").is_ok();
+        Bencher {
+            warmup: if quick { Duration::from_millis(20) } else { Duration::from_millis(150) },
+            measure: if quick { Duration::from_millis(60) } else { Duration::from_millis(400) },
+            samples: if quick { 3 } else { 7 },
+            results: Vec::new(),
+            group: String::new(),
+        }
+    }
+
+    /// Start a named group (purely cosmetic, printed as a header).
+    pub fn group(&mut self, name: &str) {
+        self.group = name.to_string();
+        println!("\n== {name} ==");
+    }
+
+    /// Benchmark `f`, which performs ONE logical iteration per call.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &Measurement {
+        self.bench_elements(name, None, move || {
+            black_box(f());
+        })
+    }
+
+    /// Benchmark with a throughput denominator (`elements` per iteration).
+    pub fn bench_with_elements<R>(
+        &mut self,
+        name: &str,
+        elements: u64,
+        mut f: impl FnMut() -> R,
+    ) -> &Measurement {
+        self.bench_elements(name, Some(elements), move || {
+            black_box(f());
+        })
+    }
+
+    fn bench_elements(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        mut f: impl FnMut(),
+    ) -> &Measurement {
+        // Warm-up and per-call cost estimate.
+        let start = Instant::now();
+        let mut calls = 0u64;
+        while start.elapsed() < self.warmup {
+            f();
+            calls += 1;
+        }
+        let est_ns = (self.warmup.as_nanos() as f64 / calls.max(1) as f64).max(1.0);
+        let per_sample_ns = self.measure.as_nanos() as f64 / self.samples as f64;
+        let batch = (per_sample_ns / est_ns).ceil().max(1.0) as u64;
+
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            per_iter.push(t.elapsed().as_nanos() as f64 / batch as f64);
+        }
+        per_iter.sort_by(|a, b| a.total_cmp(b));
+        let median = per_iter[per_iter.len() / 2];
+        let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+        let var = per_iter.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+            / per_iter.len() as f64;
+        let m = Measurement {
+            name: name.to_string(),
+            iters: batch * self.samples as u64,
+            median_ns: median,
+            mean_ns: mean,
+            stddev_ns: var.sqrt(),
+            elements,
+        };
+        let tp = m
+            .throughput()
+            .map(|t| format!("  ({:.2} Melem/s)", t / 1e6))
+            .unwrap_or_default();
+        println!(
+            "{:<48} {:>12}  ±{:>10}{}",
+            m.name,
+            m.human_time(),
+            fmt_ns(m.stddev_ns),
+            tp
+        );
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// All measurements taken so far.
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("TAKUM_BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        let m = b.bench("noop-ish", || std::hint::black_box(3u64).wrapping_mul(5));
+        assert!(m.median_ns > 0.0);
+        assert!(m.iters > 0);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_ns(10.0).contains("ns"));
+        assert!(fmt_ns(10_000.0).contains("µs"));
+        assert!(fmt_ns(10_000_000.0).contains("ms"));
+        assert!(fmt_ns(10_000_000_000.0).contains(" s"));
+    }
+}

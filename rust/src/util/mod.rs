@@ -1,0 +1,7 @@
+//! Small self-contained utilities: a deterministic PRNG (the offline build
+//! has no `rand` crate), a property-testing helper, and a micro-bench timer
+//! shared by the `benches/` targets.
+
+pub mod rng;
+pub mod proptest;
+pub mod bench;

@@ -1,0 +1,84 @@
+//! Minimal property-testing helper (the offline build has no `proptest`
+//! crate). A property is a closure over a [`Rng`]-generated case; on failure
+//! we report the case index and seed so it can be replayed exactly.
+
+use super::rng::Rng;
+
+/// Default number of cases per property, overridable via the
+/// `TAKUM_PROPTEST_CASES` environment variable.
+pub fn default_cases() -> usize {
+    std::env::var("TAKUM_PROPTEST_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(512)
+}
+
+/// Run `prop` over `cases` generated inputs. `gen` draws one case from the
+/// PRNG; `prop` returns `Err(message)` on violation. Panics with a replay
+/// seed on the first failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property `{name}` failed at case {i}/{cases} (seed {seed}):\n  case: {case:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Convenience wrapper using the default case count.
+pub fn check_default<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    gen: impl FnMut(&mut Rng) -> T,
+    prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    check(name, seed, default_cases(), gen, prop);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(
+            "count",
+            1,
+            100,
+            |r| r.next_u64(),
+            |_| {
+                n += 1;
+                Ok(())
+            },
+        );
+        assert_eq!(n, 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `fails`")]
+    fn failing_property_panics_with_context() {
+        check(
+            "fails",
+            1,
+            100,
+            |r| r.below(10),
+            |x| {
+                if *x < 9 {
+                    Ok(())
+                } else {
+                    Err("nine".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,162 @@
+//! Integration over the ISA model: database ↔ transform ↔ proposed set ↔
+//! simulator. Checks the E5–E10 invariants end to end.
+
+use takum_avx10::isa::database::{self, Category};
+use takum_avx10::isa::pattern::Pattern;
+use takum_avx10::isa::proposed::{evaluate, table_rows};
+use takum_avx10::isa::transform::{map_instruction, Mapping};
+use takum_avx10::sim::{LaneType, Machine, Instruction, Operand};
+
+#[test]
+fn e10_headline_counts() {
+    // The paper's §IV split; integer carries the documented +13 delta.
+    assert_eq!(database::category_count(Category::Bitwise), 220);
+    assert_eq!(database::category_count(Category::Mask), 59);
+    assert_eq!(database::category_count(Category::Integer), 120);
+    assert_eq!(database::category_count(Category::FloatingPoint), 363);
+    assert_eq!(database::category_count(Category::Cryptographic), 7);
+}
+
+#[test]
+fn every_avx_instruction_matches_its_own_group_pattern() {
+    for g in database::groups() {
+        let pats: Vec<Pattern> = g
+            .spec
+            .avx_patterns
+            .iter()
+            .map(|p| Pattern::parse(p).unwrap())
+            .collect();
+        for m in &g.avx_instructions {
+            assert!(
+                pats.iter().any(|p| p.matches(m)),
+                "{m} not matched by {} patterns",
+                g.spec.id
+            );
+        }
+    }
+}
+
+#[test]
+fn proposed_takum_arithmetic_is_executable() {
+    // The generalisation is not just names: the proposed packed/scalar
+    // takum mnemonics of the unified F01-06 group actually run on the
+    // simulator. Coverage: all binary/unary arithmetic, the full
+    // 12-member FMA family, the immediate-operand ops, and VCLASS/VCMP.
+    let rows = table_rows();
+    let fp = rows.iter().find(|r| r.merged_id == "F01-06").unwrap();
+    let all: Vec<String> = fp
+        .proposed_patterns
+        .iter()
+        .flat_map(|p| Pattern::parse(p).unwrap().expand())
+        .collect();
+    assert_eq!(all.len(), 46 * 8);
+
+    let mut mach = Machine::new();
+    let mut ran = 0;
+    let mut skipped = 0;
+    for m in &all {
+        // Work out the lane type from the trailing suffix.
+        let Some(pos) = m.find("PT").or(m.find("ST")) else { continue };
+        let Some((ty, _)) = LaneType::parse_fp(&m[pos..]) else { continue };
+        if !matches!(ty, LaneType::Takum(_)) {
+            continue;
+        }
+        mach.load_f64(0, ty, &[4.0, 1.0]);
+        mach.load_f64(1, ty, &[2.0, 1.0]);
+        mach.load_f64(2, ty, &[1.0, 1.0]);
+        // CLASS writes a mask; everything else a vector. Immediate ops
+        // get a trailing imm (harmless for the others? no — only pass
+        // imm to the ops that parse it).
+        let ins = if m.starts_with("VCLASS") {
+            Instruction::new(m, Operand::Kreg(1), vec![Operand::Vreg(0), Operand::Imm(7)])
+        } else if m.starts_with("VCMP") {
+            Instruction::new(
+                m,
+                Operand::Kreg(1),
+                vec![Operand::Vreg(0), Operand::Vreg(1), Operand::Imm(1)],
+            )
+        } else if m.starts_with("VMINMAX") || m.starts_with("VRNDSCALE")
+            || m.starts_with("VREDUCE")
+        {
+            Instruction::new(
+                m,
+                Operand::Vreg(2),
+                vec![Operand::Vreg(0), Operand::Vreg(1), Operand::Imm(0)],
+            )
+        } else {
+            Instruction::new(m, Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)])
+        };
+        match mach.step(&ins) {
+            Ok(()) => ran += 1,
+            Err(e) => {
+                let msg = e.to_string();
+                assert!(
+                    msg.contains("unimplemented"),
+                    "{m}: unexpected failure {msg}"
+                );
+                skipped += 1;
+            }
+        }
+    }
+    // Executable today: 15 value ops + 12 FMA + CLASS + CMP = 29 of the
+    // 46 families, × {P,S} × 4 widths; the rest (FIXUPIMM, RANGE, complex
+    // FC?MADD/MULC, COMI/COMX, UCMP) are counted as skipped.
+    assert_eq!(ran + skipped, 46 * 8);
+    assert!(ran >= 29 * 8, "executable coverage regressed: ran={ran}");
+}
+
+#[test]
+fn conversion_matrix_is_closed_and_executable() {
+    // Every proposed packed int↔takum conversion executes.
+    let rows = table_rows();
+    let f7 = rows.iter().find(|r| r.merged_id == "F07").unwrap();
+    let mut mach = Machine::new();
+    mach.load_f64(0, LaneType::Takum(16), &[1.0, 2.0]);
+    mach.load_f64(1, LaneType::SInt(32), &[3.0, 4.0]);
+    let mut ran = 0;
+    for m in f7
+        .proposed_patterns
+        .iter()
+        .flat_map(|p| Pattern::parse(p).unwrap().expand())
+    {
+        if !m.starts_with("VCVTP") && !m.contains("2P") {
+            continue; // scalar forms share the packed path; exercise packed
+        }
+        if m.starts_with("VCVTS") || m.contains("2S") {
+            continue;
+        }
+        let src = if m.contains("PT") && m.find("PT") == Some(4) { 0u8 } else { 1u8 };
+        mach.step(&Instruction::new(&m, Operand::Vreg(5), vec![Operand::Vreg(src)]))
+            .unwrap_or_else(|e| panic!("{m}: {e}"));
+        ran += 1;
+    }
+    // packed directions: PS/PU×4 → PT×4 and PT×4 → PS/PU×4 = 64.
+    assert_eq!(ran, 64);
+}
+
+#[test]
+fn rename_is_deterministic_and_total() {
+    // map_instruction is total over the database and stable.
+    for g in database::groups() {
+        for m in &g.avx_instructions {
+            let a = map_instruction(m, g.spec.id);
+            let b = map_instruction(m, g.spec.id);
+            assert_eq!(a, b, "{m}");
+            if let Mapping::To(t) = a {
+                assert!(t.chars().all(|c| c.is_ascii_uppercase() || c.is_ascii_digit()), "{t}");
+            }
+        }
+    }
+}
+
+#[test]
+fn evaluation_is_consistent_with_rows() {
+    let e = evaluate();
+    let rows = table_rows();
+    let avx_total: usize = rows.iter().map(|r| r.avx_count).sum();
+    let prop_total: usize = rows.iter().map(|r| r.proposed_count).sum();
+    let eval_avx: usize = e.per_category.iter().map(|(_, _, ours, _)| ours).sum();
+    let eval_prop: usize = e.per_category.iter().map(|(_, _, _, p)| p).sum();
+    assert_eq!(avx_total, eval_avx);
+    assert_eq!(prop_total, eval_prop);
+}

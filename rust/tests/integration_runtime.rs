@@ -1,0 +1,138 @@
+//! Integration: the AOT-compiled Pallas kernels (HLO text artifacts)
+//! executed through the PJRT runtime must agree **bit for bit** with the
+//! native rust codecs — the L1 ↔ L3 contract of the three-layer design.
+//!
+//! Requires `make artifacts` (skipped with a loud message otherwise).
+
+use takum_avx10::num::takum_linear;
+use takum_avx10::runtime::{PjrtService, TensorF64};
+use takum_avx10::util::rng::Rng;
+use std::path::Path;
+
+fn service() -> Option<PjrtService> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    match PjrtService::start(&dir) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            eprintln!("SKIPPING runtime integration tests: {e:#} (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+const BATCH: usize = 1 << 16;
+
+#[test]
+fn artifacts_present() {
+    let Some(s) = service() else { return };
+    let names = s.handle().names().unwrap();
+    for want in ["takum8_roundtrip", "takum16_roundtrip", "takum32_roundtrip", "quant_gemm_t8"] {
+        assert!(names.iter().any(|n| n == want), "missing artifact {want} in {names:?}");
+    }
+}
+
+#[test]
+fn pjrt_roundtrip_matches_native_codec_bit_for_bit() {
+    let Some(s) = service() else { return };
+    let h = s.handle();
+    let mut rng = Rng::new(0x7357);
+    for n in [8u32, 16, 32] {
+        let mut vals: Vec<f64> = (0..BATCH - 16).map(|_| rng.wide_f64(-260, 260)).collect();
+        // specials and exact values
+        vals.extend_from_slice(&[
+            0.0, 1.0, -1.0, 1.5, -0.75, 448.0, 2.0_f64.powi(100), -(2.0_f64.powi(-100)),
+            1e300, -1e-300, 3.75, -123.25, f64::MIN_POSITIVE, 2.0, 0.5, -2.0,
+        ]);
+        assert_eq!(vals.len(), BATCH);
+        let out = h
+            .run_f64(&format!("takum{n}_roundtrip"), vec![TensorF64::vec(vals.clone())])
+            .unwrap();
+        let rt = &out[0];
+        assert_eq!(rt.len(), BATCH);
+        for (i, (&x, &y)) in vals.iter().zip(rt).enumerate() {
+            let want = takum_linear::decode(takum_linear::encode(x, n), n);
+            assert!(
+                y == want || (y.is_nan() && want.is_nan()),
+                "n={n} i={i} x={x}: pjrt={y} native={want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_nan_maps_to_nar() {
+    let Some(s) = service() else { return };
+    let h = s.handle();
+    let mut vals = vec![0.0f64; BATCH];
+    vals[0] = f64::NAN;
+    vals[1] = f64::INFINITY;
+    vals[2] = f64::NEG_INFINITY;
+    let out = h.run_f64("takum16_roundtrip", vec![TensorF64::vec(vals)]).unwrap();
+    assert!(out[0][0].is_nan());
+    assert!(out[0][1].is_nan());
+    assert!(out[0][2].is_nan());
+    assert_eq!(out[0][3], 0.0);
+}
+
+#[test]
+fn quant_gemm_artifact_runs_and_is_plausible() {
+    let Some(s) = service() else { return };
+    let h = s.handle();
+    let dim = 128usize;
+    let mut rng = Rng::new(0xD07);
+    let a: Vec<f64> = (0..dim * dim).map(|_| rng.log_normal(0.0, 1.0)).collect();
+    let b: Vec<f64> = (0..dim * dim).map(|_| rng.log_normal(0.0, 1.0)).collect();
+    let out = h
+        .run_f64(
+            "quant_gemm_t8",
+            vec![
+                TensorF64::matrix(a.clone(), dim as i64, dim as i64),
+                TensorF64::matrix(b.clone(), dim as i64, dim as i64),
+            ],
+        )
+        .unwrap();
+    let c = &out[0];
+    assert_eq!(c.len(), dim * dim);
+    // f64 reference
+    let mut c_ref = vec![0.0f64; dim * dim];
+    for i in 0..dim {
+        for k in 0..dim {
+            let aik = a[i * dim + k];
+            for j in 0..dim {
+                c_ref[i * dim + j] += aik * b[k * dim + j];
+            }
+        }
+    }
+    let (mut num, mut den) = (0.0, 0.0);
+    for (x, y) in c.iter().zip(&c_ref) {
+        num += (x - y) * (x - y);
+        den += y * y;
+    }
+    let rel = (num / den).sqrt();
+    // takum8 inputs, takum16 accumulators: a few percent, not garbage.
+    assert!(rel > 1e-4 && rel < 0.2, "rel={rel}");
+
+    // Every output lane must be exactly takum16-representable (the kernel
+    // re-quantises its accumulator).
+    for (i, &y) in c.iter().enumerate().take(512) {
+        let q = takum_linear::decode(takum_linear::encode(y, 16), 16);
+        assert_eq!(q, y, "lane {i} not takum16-representable: {y}");
+    }
+}
+
+#[test]
+fn service_is_shareable_across_threads() {
+    let Some(s) = service() else { return };
+    let h = s.handle();
+    std::thread::scope(|scope| {
+        for t in 0..4 {
+            let h = h.clone();
+            scope.spawn(move || {
+                let mut vals = vec![1.5f64; BATCH];
+                vals[0] = t as f64;
+                let out = h.run_f64("takum8_roundtrip", vec![TensorF64::vec(vals)]).unwrap();
+                assert_eq!(out[0][1], 1.5);
+            });
+        }
+    });
+}
