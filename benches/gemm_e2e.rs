@@ -2,14 +2,18 @@
 //! AVX10.2 baselines, and — when artifacts are present — the AOT-compiled
 //! Pallas quantised-GEMM kernel through PJRT.
 
-use takum_avx10::harness::gemm::gemm;
+use takum_avx10::harness::gemm::{gemm, gemm_with_mode};
 use takum_avx10::runtime::{default_artifact_dir, PjrtService, TensorF64};
+use takum_avx10::sim::CodecMode;
 use takum_avx10::util::bench::Bencher;
 use takum_avx10::util::rng::Rng;
 
 fn main() {
     let mut b = Bencher::new();
     let n = 32usize;
+
+    // Warm the LUTs outside the measured region.
+    takum_avx10::num::lut::warm();
 
     b.group(&format!("simulated quantised GEMM, n={n} (instruction-accurate)"));
     for f in ["t8", "t16", "bf16", "f16", "e4m3", "e5m2"] {
@@ -21,6 +25,31 @@ fn main() {
         b.bench_with_elements(&format!("gemm {f}"), (n * n) as u64, || {
             gemm(n, f, 1, 1.0).unwrap()
         });
+    }
+
+    b.group(&format!(
+        "lane engine vs per-lane arithmetic path (end-to-end GEMM, n={n})"
+    ));
+    let mut ratios: Vec<(&str, f64)> = Vec::new();
+    for f in ["t8", "t16", "bf16", "e4m3"] {
+        // Results are bit-identical across modes (asserted by the
+        // `lut_lane_engine_identical_to_per_lane_path` test); only the
+        // wall time differs.
+        let fast = b
+            .bench_with_elements(&format!("gemm {f} [lut]"), (n * n) as u64, || {
+                gemm_with_mode(n, f, 1, 1.0, CodecMode::Lut).unwrap()
+            })
+            .median_ns;
+        let slow = b
+            .bench_with_elements(&format!("gemm {f} [arith]"), (n * n) as u64, || {
+                gemm_with_mode(n, f, 1, 1.0, CodecMode::Arith).unwrap()
+            })
+            .median_ns;
+        ratios.push((f, slow / fast));
+    }
+    println!("\n-- end-to-end GEMM speedup (arith / lut) --");
+    for (f, ratio) in &ratios {
+        println!("gemm {f:<6} {ratio:>6.2}x");
     }
 
     match PjrtService::start(&default_artifact_dir()) {

@@ -1,17 +1,77 @@
 //! Simulator dispatch/throughput bench (the L3 component behind E11):
 //! lanes-per-second for the core proposed instructions and the legacy
 //! baseline equivalents.
+//!
+//! The headline comparison is **lane engine (plan cache + LUT codecs) vs
+//! the pre-refactor per-lane arithmetic path** (`CodecMode::Arith`): the
+//! acceptance target is ≥2× throughput on 8/16-bit packed FP ops with
+//! bit-identical results (the equivalence is property-tested in
+//! `sim/lanes.rs` and `harness/gemm.rs`; this bench asserts nothing and
+//! just reports the ratio).
 
-use takum_avx10::sim::{Instruction, LaneType, Machine, Operand, VecReg};
+use takum_avx10::sim::{CodecMode, Instruction, LaneType, Machine, Operand, VecReg};
 use takum_avx10::util::bench::Bencher;
 use takum_avx10::util::rng::Rng;
 
 fn main() {
     let mut b = Bencher::new();
-    let mut m = Machine::new();
     let mut r = Rng::new(7);
 
+    // Warm the LUTs outside the measured region.
+    takum_avx10::num::lut::warm();
+
+    b.group("8/16-bit packed FP: LUT lane engine vs per-lane arithmetic codecs");
+    let mut ratios: Vec<(String, f64)> = Vec::new();
+    for (mn, ty) in [
+        ("VADDPT8", LaneType::Takum(8)),
+        ("VMULPT8", LaneType::Takum(8)),
+        ("VADDPT16", LaneType::Takum(16)),
+        ("VMULPT16", LaneType::Takum(16)),
+        ("VFMADD231PT16", LaneType::Takum(16)),
+        ("VADDNEPBF16", LaneType::Mini(takum_avx10::num::BF16)),
+        ("VADDPH", LaneType::Mini(takum_avx10::num::F16)),
+        ("VMULHF8", LaneType::Mini(takum_avx10::num::E4M3)),
+        ("VMULBF8", LaneType::Mini(takum_avx10::num::E5M2)),
+        ("VDPPT8PT16", LaneType::Takum(8)),
+        ("VDPBF16PS", LaneType::Mini(takum_avx10::num::BF16)),
+    ] {
+        let lanes = VecReg::lanes(ty.width());
+        let vals: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-10, 10)).collect();
+        let ins = Instruction::new(mn, Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]);
+        let mut times = [0.0f64; 2];
+        for (slot, mode) in [(0usize, CodecMode::Lut), (1usize, CodecMode::Arith)] {
+            let mut m = Machine::with_mode(mode);
+            m.load_f64(0, ty, &vals);
+            m.load_f64(1, ty, &vals);
+            if mn.starts_with("VDP") {
+                // accumulator plane at double width
+                let wide = match ty {
+                    LaneType::Takum(8) => LaneType::Takum(16),
+                    _ => LaneType::Mini(takum_avx10::num::F32),
+                };
+                m.load_f64(2, wide, &vec![0.0; VecReg::lanes(wide.width())]);
+            }
+            let tag = if slot == 0 { "lut" } else { "arith" };
+            // Reset the destination every iteration: accumulating ops
+            // (FMA, dot products) would otherwise saturate after a few
+            // hundred steps and the two modes would measure divergent,
+            // unrepresentative operand streams.
+            let init = m.regs.v[2];
+            let meas = b.bench_with_elements(&format!("{mn} [{tag}]"), lanes as u64, || {
+                m.regs.v[2] = init;
+                m.step(&ins).unwrap()
+            });
+            times[slot] = meas.median_ns;
+        }
+        ratios.push((mn.to_string(), times[1] / times[0]));
+    }
+    println!("\n-- speedup (per-lane arithmetic path / LUT lane engine) --");
+    for (mn, ratio) in &ratios {
+        println!("{mn:<20} {ratio:>6.2}x");
+    }
+
     b.group("vector instruction throughput (lanes/s as elem/s)");
+    let mut m = Machine::new();
     for (mn, ty) in [
         ("VADDPT8", LaneType::Takum(8)),
         ("VADDPT16", LaneType::Takum(16)),

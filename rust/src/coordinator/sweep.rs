@@ -69,6 +69,14 @@ pub fn sweep(cfg: &SweepConfig, pjrt: Option<&PjrtHandle>) -> Result<(PanelResul
         anyhow::ensure!(pjrt.is_some(), "PJRT engine requested but no service handle given");
     }
 
+    // Build the shared 8-bit LUT codecs once, before the fan-out: the
+    // workers' hot path (`relative_error` → `lut::cached`) shares the
+    // simulator lane engine's process-wide tables, and warming them here
+    // keeps N workers from all blocking on the first OnceLock init. (The
+    // 16-bit tables stay lazy — the sweep round-trip deliberately does
+    // not use them; see the §Perf note on `lut::cached`.)
+    crate::num::lut::warm8();
+
     let start = Instant::now();
     let next = AtomicUsize::new(0);
     let pjrt_calls = std::sync::atomic::AtomicU64::new(0);

@@ -16,7 +16,7 @@
 //! Loads/permutes are applied identically for all formats (the simulator
 //! models compute, not memory).
 
-use crate::sim::{Instruction, LaneType, Machine, Operand, VecReg};
+use crate::sim::{CodecMode, Instruction, LaneType, Machine, Operand, VecReg};
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 
@@ -104,6 +104,31 @@ pub fn gemm_scaled(
     spread_decades: f64,
     scale: f64,
 ) -> Result<GemmResult> {
+    gemm_scaled_with_mode(n, format, seed, spread_decades, scale, CodecMode::default())
+}
+
+/// [`gemm`] with an explicit simulator [`CodecMode`] — the hook the
+/// equivalence tests and `benches/gemm_e2e.rs` use to compare the
+/// LUT-backed lane engine against the pre-refactor arithmetic path.
+pub fn gemm_with_mode(
+    n: usize,
+    format: &str,
+    seed: u64,
+    spread_decades: f64,
+    mode: CodecMode,
+) -> Result<GemmResult> {
+    gemm_scaled_with_mode(n, format, seed, spread_decades, 1.0, mode)
+}
+
+/// [`gemm_scaled`] with an explicit simulator [`CodecMode`].
+pub fn gemm_scaled_with_mode(
+    n: usize,
+    format: &str,
+    seed: u64,
+    spread_decades: f64,
+    scale: f64,
+    mode: CodecMode,
+) -> Result<GemmResult> {
     anyhow::ensure!(n >= 2 && n % 2 == 0, "n must be even and ≥ 2");
     let p = pipeline(format)?;
     let wide_w = p.wide.width();
@@ -130,7 +155,7 @@ pub fn gemm_scaled(
         }
     }
 
-    let mut m = Machine::new();
+    let mut m = Machine::with_mode(mode);
     let mut c_out = vec![0.0f64; n * n];
     let (va, vb, vc, vat, vbt) = (0u8, 1u8, 2u8, 3u8, 4u8);
 
@@ -269,5 +294,39 @@ mod tests {
         let b = gemm(16, "t8", 3, 1.0).unwrap();
         assert_eq!(a.rel_error, b.rel_error);
         assert_eq!(a.executed, b.executed);
+    }
+
+    /// The lane-engine acceptance gate: the LUT-backed engine must be
+    /// **identical** to the pre-refactor per-lane arithmetic path — same
+    /// relative error bit for bit, same instruction counts — for every
+    /// pipeline the paper compares, at n ∈ {16, 32}.
+    #[test]
+    fn lut_lane_engine_identical_to_per_lane_path() {
+        for f in ["t8", "t16", "bf16", "e4m3"] {
+            for n in [16usize, 32] {
+                let fast = gemm_with_mode(n, f, 7, 1.0, CodecMode::Lut).unwrap();
+                let slow = gemm_with_mode(n, f, 7, 1.0, CodecMode::Arith).unwrap();
+                assert_eq!(
+                    fast.rel_error.to_bits(),
+                    slow.rel_error.to_bits(),
+                    "{f} n={n}: rel_error {} vs {}",
+                    fast.rel_error,
+                    slow.rel_error
+                );
+                assert_eq!(fast.executed, slow.executed, "{f} n={n}: executed");
+                assert_eq!(fast.dp_instructions, slow.dp_instructions, "{f} n={n}: dp");
+                assert_eq!(
+                    fast.convert_instructions, slow.convert_instructions,
+                    "{f} n={n}: convert"
+                );
+                // The default-mode entry point is the LUT path.
+                let default = gemm(n, f, 7, 1.0).unwrap();
+                assert_eq!(default.rel_error.to_bits(), fast.rel_error.to_bits());
+            }
+        }
+        // And under the badly-scaled FEM regime, where OFP8 saturates.
+        let fast = gemm_scaled_with_mode(32, "e4m3", 11, 0.3, 1e5, CodecMode::Lut).unwrap();
+        let slow = gemm_scaled_with_mode(32, "e4m3", 11, 0.3, 1e5, CodecMode::Arith).unwrap();
+        assert_eq!(fast.rel_error.to_bits(), slow.rel_error.to_bits());
     }
 }

@@ -28,6 +28,11 @@
 //! the [`coordinator`] drives the 1,401-matrix conversion sweep across a
 //! worker pool. Python never runs at request time.
 
+// The seed idiom predates the clippy CI gate: eagerly-evaluated
+// `Option::or(strip_prefix(..))` chains on cheap operands are pervasive
+// and intentional in the mnemonic parsers.
+#![allow(clippy::or_fun_call)]
+
 pub mod util;
 pub mod num;
 pub mod isa;

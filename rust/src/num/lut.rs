@@ -1,8 +1,11 @@
-//! Lookup-table fast paths for the 8-bit formats.
+//! Lookup-table fast paths for the 8- and 16-bit formats.
 //!
 //! The matrix sweep round-trips hundreds of millions of values through the
 //! 8-bit codecs, so a 256-entry decode table plus a branch-light encode is
-//! the L3 hot-path optimisation recorded in EXPERIMENTS.md §Perf.
+//! the L3 hot-path optimisation recorded in EXPERIMENTS.md §Perf. The
+//! simulator's lane engine ([`crate::sim::lanes`]) additionally routes
+//! 16-bit lane traffic through [`cached16`] tables and the vectorised
+//! [`Lut8::decode_slice`]/[`Lut8::encode_slice`] APIs.
 //!
 //! Correctness: the encode path binary-searches over *decision boundaries
 //! extracted from the real codec by bisection* (in the monotone total-order
@@ -86,12 +89,30 @@ impl Lut8 {
             Some(bits as u32)
         };
 
-        // Bisect each adjacent pair for the decision boundary.
+        // Bisect each adjacent pair for the decision boundary. The
+        // endpoint checks are real asserts (not debug_assert): table
+        // construction is one-time, and a codec/LUT divergence here would
+        // otherwise silently corrupt every downstream sweep and simulator
+        // run in release builds.
         let mut boundaries = Vec::with_capacity(sorted_vals.len().saturating_sub(1));
         for i in 0..sorted_vals.len().saturating_sub(1) {
             let (mut lo, mut hi) = (f64_key(sorted_vals[i]), f64_key(sorted_vals[i + 1]));
-            debug_assert_eq!(enc(key_f64(lo)), Some(sorted_bits[i]));
-            debug_assert_eq!(enc(key_f64(hi)), Some(sorted_bits[i + 1]));
+            assert_eq!(
+                enc(key_f64(lo)),
+                Some(sorted_bits[i]),
+                "{}: codec does not re-encode representable value {} (bits {:#x})",
+                f.name(),
+                sorted_vals[i],
+                sorted_bits[i]
+            );
+            assert_eq!(
+                enc(key_f64(hi)),
+                Some(sorted_bits[i + 1]),
+                "{}: codec does not re-encode representable value {} (bits {:#x})",
+                f.name(),
+                sorted_vals[i + 1],
+                sorted_bits[i + 1]
+            );
             while hi - lo > 1 {
                 let mid = lo + (hi - lo) / 2;
                 if enc(key_f64(mid)) == Some(sorted_bits[i]) {
@@ -157,6 +178,38 @@ impl Lut8 {
         }]
     }
 
+    /// Decode a slice of bit patterns (low `n` bits each) into `out`.
+    /// This is the vectorised form used by the simulator's lane engine:
+    /// a pure table hit per element, no per-element dispatch.
+    #[inline]
+    pub fn decode_slice(&self, bits: &[u64], out: &mut [f64]) {
+        assert_eq!(bits.len(), out.len());
+        for (o, &b) in out.iter_mut().zip(bits) {
+            *o = self.decode[b as usize];
+        }
+    }
+
+    /// Encode a slice of finite values into `out` (same contract as
+    /// [`Lut8::encode_bits`]: the caller handles NaN and, for
+    /// non-saturating IEEE formats, checks [`Lut8::overflows`] first).
+    #[inline]
+    pub fn encode_slice(&self, xs: &[f64], out: &mut [u64]) {
+        assert_eq!(xs.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(xs) {
+            *o = self.encode_bits(x);
+        }
+    }
+
+    /// Round-trip a slice of finite values into `out` (caller handles
+    /// NaN, like [`Lut8::encode_slice`]).
+    #[inline]
+    pub fn roundtrip_slice(&self, xs: &[f64], out: &mut [f64]) {
+        assert_eq!(xs.len(), out.len());
+        for (o, &x) in out.iter_mut().zip(xs) {
+            *o = self.roundtrip(x);
+        }
+    }
+
     /// True if the codec would leave the finite value set (±∞/NaN) for
     /// this finite input — the Figure 2 ∞ marker.
     #[inline]
@@ -174,21 +227,73 @@ impl Lut8 {
 
 /// Process-wide cached tables for the 8-bit Figure 2 formats.
 ///
-/// §Perf note: 16-bit tables were tried (iteration 3) and *regressed* the
-/// sweep by ~45% — the 17-step binary search over a 512 KiB boundary
-/// array is cache-hostile compared to the arithmetic codec. The generic
-/// [`Lut8::build`] still supports 16-bit tables (used by tests and the
-/// simulator's future decode paths); only the sweep fast path is
-/// restricted to 8 bits.
+/// §Perf note: the sweep's round-trip fast path stays 8-bit-only — 16-bit
+/// round-trips through the boundary search were tried (iteration 3) and
+/// *regressed* the sweep by ~45%, because a 17-step binary search over a
+/// 512 KiB boundary array is cache-hostile compared to the arithmetic
+/// codec. The simulator's lane engine is different: its hot operation is
+/// *decode* (three decodes per FMA lane vs one encode), and decode through
+/// [`Lut8::decode_slice`] is a pure table hit, so the 16-bit tables below
+/// ([`cached16`]) pay for themselves there.
 pub fn cached(name: &str) -> Option<&'static Lut8> {
     static TABLES: OnceLock<Vec<Lut8>> = OnceLock::new();
     let tables = TABLES.get_or_init(|| {
-        ["takum8", "takum_log8", "posit8", "e4m3", "e5m2"]
+        super::registry::LUT8_FORMATS
             .iter()
             .map(|n| Lut8::build(&*super::registry::format_by_name(n).unwrap()))
             .collect()
     });
     tables.iter().find(|t| t.name() == name)
+}
+
+/// Process-wide cached tables for the 16-bit formats (the simulator lane
+/// engine's PT16/PH/PBF16 fast path; see the §Perf note on [`cached`] for
+/// why the matrix sweep does not use these).
+pub fn cached16(name: &str) -> Option<&'static Lut8> {
+    static TABLES: OnceLock<Vec<Lut8>> = OnceLock::new();
+    let tables = TABLES.get_or_init(|| {
+        super::registry::LUT16_FORMATS
+            .iter()
+            .map(|n| Lut8::build(&*super::registry::format_by_name(n).unwrap()))
+            .collect()
+    });
+    tables.iter().find(|t| t.name() == name)
+}
+
+/// Cached table for an `n`-bit *linear* takum lane (the simulator's PT/ST
+/// lane type). `None` for widths without a table (32/64).
+#[inline]
+pub fn cached_takum(n: u32) -> Option<&'static Lut8> {
+    match n {
+        8 => cached("takum8"),
+        16 => cached16("takum16"),
+        _ => None,
+    }
+}
+
+/// Cached table for an IEEE-style lane format by registry name (`e4m3`,
+/// `e5m2`, `float16`, `bfloat16`). `None` for wider formats.
+#[inline]
+pub fn cached_mini(name: &str) -> Option<&'static Lut8> {
+    match name {
+        "e4m3" | "e5m2" => cached(name),
+        "float16" | "bfloat16" => cached16(name),
+        _ => None,
+    }
+}
+
+/// Eagerly build the 8-bit tables. Called once before fan-out work
+/// (e.g. the sweep's worker pool) so N workers don't all block on the
+/// first `OnceLock` initialisation.
+pub fn warm8() {
+    let _ = cached(super::registry::LUT8_FORMATS[0]);
+}
+
+/// Eagerly build every cached table (8- and 16-bit) — what the simulator
+/// lane engine touches.
+pub fn warm() {
+    warm8();
+    let _ = cached16(super::registry::LUT16_FORMATS[0]);
 }
 
 #[cfg(test)]
@@ -274,6 +379,68 @@ mod tests {
             assert!(cached(n).is_some(), "{n}");
         }
         assert!(cached("float16").is_none());
+    }
+
+    #[test]
+    fn cached16_tables_exist() {
+        for n in crate::num::registry::LUT16_FORMATS {
+            assert!(cached16(n).is_some(), "{n}");
+        }
+        assert!(cached16("takum8").is_none());
+        assert!(cached16("posit16").is_none()); // deliberately untabulated
+        assert!(cached_takum(8).is_some());
+        assert!(cached_takum(16).is_some());
+        assert!(cached_takum(32).is_none());
+        assert!(cached_mini("bfloat16").is_some());
+        assert!(cached_mini("float32").is_none());
+        warm();
+    }
+
+    /// Exhaustive 16-bit equivalence of the cached takum16 table with the
+    /// linear-takum codec: every bit pattern decodes identically, and
+    /// re-encoding the decoded value reproduces the pattern through both
+    /// paths (mirrors `decode_encode_idempotent_exhaustive_16bit` in
+    /// `num/takum.rs`, but through the LUT).
+    #[test]
+    fn takum16_lut_exhaustive_roundtrip() {
+        use crate::num::takum_linear;
+        let lut = cached_takum(16).unwrap();
+        for bits in 0u64..(1 << 16) {
+            let via_codec = takum_linear::decode(bits, 16);
+            let via_lut = lut.decode_bits(bits);
+            assert!(
+                via_lut == via_codec || (via_lut.is_nan() && via_codec.is_nan()),
+                "decode bits={bits:#06x}: lut={via_lut} codec={via_codec}"
+            );
+            if via_codec.is_nan() {
+                continue;
+            }
+            assert_eq!(
+                lut.encode_bits(via_codec),
+                takum_linear::encode(via_codec, 16),
+                "re-encode bits={bits:#06x} v={via_codec}"
+            );
+            assert_eq!(lut.encode_bits(via_codec), bits, "idempotence bits={bits:#06x}");
+        }
+    }
+
+    #[test]
+    fn slice_apis_match_scalar() {
+        let lut = cached("takum8").unwrap();
+        let mut r = Rng::new(0x51CE);
+        let xs: Vec<f64> = (0..257).map(|_| r.wide_f64(-50, 50)).collect();
+        let mut enc = vec![0u64; xs.len()];
+        lut.encode_slice(&xs, &mut enc);
+        let mut dec = vec![0.0f64; xs.len()];
+        lut.decode_slice(&enc, &mut dec);
+        let mut rt = vec![0.0f64; xs.len()];
+        lut.roundtrip_slice(&xs, &mut rt);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(enc[i], lut.encode_bits(x), "i={i}");
+            assert_eq!(dec[i], lut.decode_bits(enc[i]), "i={i}");
+            assert_eq!(rt[i], lut.roundtrip(x), "i={i}");
+            assert_eq!(rt[i], dec[i], "i={i}");
+        }
     }
 
     #[test]

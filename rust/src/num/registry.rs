@@ -120,6 +120,19 @@ impl NumberFormat for Minifloat {
 /// Shared-ownership format handle.
 pub type FormatRef = std::sync::Arc<dyn NumberFormat>;
 
+/// Formats with a process-wide cached 8-bit lookup table
+/// ([`super::lut::cached`]): the Figure 2 8-bit panel plus the simulator's
+/// 8-bit lane formats.
+pub const LUT8_FORMATS: [&str; 5] = ["takum8", "takum_log8", "posit8", "e4m3", "e5m2"];
+
+/// Formats with a process-wide cached 16-bit lookup table
+/// ([`super::lut::cached16`]): exactly the simulator's 16-bit lane
+/// format set (takum16, float16, bfloat16). posit16 is deliberately
+/// absent — no simulator lane uses it and the sweep round-trips 16-bit
+/// formats through the arithmetic codecs, so tabulating it would be
+/// pure build-time/memory dead weight.
+pub const LUT16_FORMATS: [&str; 3] = ["takum16", "float16", "bfloat16"];
+
 /// Construct a format by name: `takum{n}`, `takum_log{n}`, `posit{n}`,
 /// `float16|float32|float64|bfloat16|e4m3|e5m2`.
 pub fn format_by_name(name: &str) -> Option<FormatRef> {

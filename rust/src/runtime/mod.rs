@@ -20,9 +20,21 @@ pub fn default_artifact_dir() -> PathBuf {
 
 /// A loaded, compiled artifact collection. Not `Send` — wrap in
 /// [`PjrtService`] for multi-threaded use.
+///
+/// Requires the `pjrt` cargo feature (and the external `xla` crate);
+/// without it this compiles as a stub whose constructor returns an error,
+/// so every PJRT-dependent test/bench skips gracefully.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+/// Stub runtime for builds without the `pjrt` feature (the offline image
+/// has no `xla` crate). Mirrors the real API; construction fails.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    _executables: HashMap<String, ()>,
 }
 
 /// Shape+data of one f64 input.
@@ -44,6 +56,39 @@ impl TensorF64 {
     }
 }
 
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Stub: always errors — the offline build carries no PJRT backend.
+    pub fn new() -> Result<Runtime> {
+        bail!(
+            "PJRT support not compiled in: enable the `pjrt` cargo feature \
+             (requires the external `xla` crate)"
+        )
+    }
+
+    pub fn load_file(&mut self, _name: &str, path: &Path) -> Result<()> {
+        bail!("PJRT support not compiled in (artifact {})", path.display())
+    }
+
+    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        Err(anyhow!("PJRT support not compiled in"))
+            .with_context(|| format!("artifact dir {} (run `make artifacts`)", dir.display()))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        Vec::new()
+    }
+
+    pub fn has(&self, _name: &str) -> bool {
+        false
+    }
+
+    pub fn run_f64(&self, name: &str, _inputs: &[TensorF64]) -> Result<Vec<Vec<f64>>> {
+        bail!("artifact {name:?} not loaded (PJRT support not compiled in)")
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Create a CPU PJRT client with no artifacts loaded.
     pub fn new() -> Result<Runtime> {

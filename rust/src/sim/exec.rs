@@ -1,6 +1,25 @@
 //! The execution engine: architectural state + semantics for the proposed
 //! takum instructions and the AVX10.2 baseline subset.
 //!
+//! ## Lane-engine architecture
+//!
+//! Execution is **plan-driven** (see [`crate::sim::lanes`]): `step`
+//! resolves each mnemonic once into a [`LanePlan`] through a per-machine
+//! memoized cache, so tight GEMM loops never re-parse instruction strings.
+//! Each executor then runs over whole register planes with a single
+//! dispatch: source planes are decoded up front through a [`LaneCodec`]
+//! (8/16-bit formats hit the cached `Lut8` tables of [`crate::num::lut`];
+//! wider formats use the arithmetic codecs), the operation is applied per
+//! active lane, and results are encoded through the shared masked plane
+//! writer. [`CodecMode::Arith`] preserves the pre-refactor per-lane
+//! arithmetic path for equivalence tests and benches.
+//!
+//! A future SIMD backend (e.g. AVX-512 intrinsics or a GPU lane kernel)
+//! plugs in at the [`LaneCodec`] plane boundary: `decode_plane` /
+//! `encode` already see whole-register slices, so a backend only needs to
+//! provide vectorised implementations of those two hooks plus the FMA
+//! plane loop — the plan cache and mask policy stay unchanged.
+//!
 //! Design notes:
 //!
 //! * `PT{n}`/`ST{n}` lanes are **linear takums** — the variant used by the
@@ -15,94 +34,21 @@
 //!   comparators. Tests cross-check it against value comparison.
 //! * Masking follows AVX-512: `{k}` merging, `{k}{z}` zeroing, `k0` = no
 //!   masking.
+//! * Integer lanes convert with `VCVT…2DQ` semantics: round to nearest
+//!   (ties to even), then clamp.
 
+use super::lanes::{
+    CodecMode, FmaKind, FmaOrder, FpOp, IntKind, IntOp, LaneCodec, LanePlan, MaskOp, MaskPlan,
+    ShiftOp,
+};
 use super::program::{Instruction, Operand, Program};
 use super::register::{RegisterFile, VecReg};
 use crate::num::bitstring::sign_extend;
-use crate::num::{takum_linear, MinifloatSpec, BF16, E4M3, E5M2, F16, F32, F64};
+use crate::num::{BF16, F32};
 use anyhow::{anyhow, bail, Result};
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, HashMap};
 
-/// Element interpretation of a vector lane.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum LaneType {
-    Takum(u32),
-    Mini(MinifloatSpec),
-    /// IEEE-style format with saturating encode (the `VCVT…S` conversion
-    /// semantics; used when storing into range-limited OFP8 lanes).
-    MiniSat(MinifloatSpec),
-    /// Unsigned / signed integer lanes.
-    UInt(u32),
-    SInt(u32),
-}
-
-impl LaneType {
-    pub fn width(&self) -> u32 {
-        match self {
-            LaneType::Takum(n) => *n,
-            LaneType::Mini(s) | LaneType::MiniSat(s) => s.bits(),
-            LaneType::UInt(w) | LaneType::SInt(w) => *w,
-        }
-    }
-
-    pub fn decode(&self, bits: u64) -> f64 {
-        match self {
-            LaneType::Takum(n) => takum_linear::decode(bits, *n),
-            LaneType::Mini(s) | LaneType::MiniSat(s) => s.decode(bits),
-            LaneType::UInt(w) => (bits & crate::num::bitstring::mask64(*w)) as f64,
-            LaneType::SInt(w) => sign_extend(bits, *w) as f64,
-        }
-    }
-
-    pub fn encode(&self, x: f64) -> u64 {
-        match self {
-            LaneType::Takum(n) => takum_linear::encode(x, *n),
-            LaneType::Mini(s) => s.encode(x),
-            LaneType::MiniSat(s) => s.encode_sat(x),
-            LaneType::UInt(w) => {
-                let m = crate::num::bitstring::mask64(*w);
-                if x <= 0.0 {
-                    0
-                } else if x >= m as f64 {
-                    m
-                } else {
-                    x as u64
-                }
-            }
-            LaneType::SInt(w) => {
-                // Bounds via f64 exp2 (1i64 << 63 would overflow for w=64);
-                // the `as i64` cast saturates at the type limits.
-                let half = ((*w - 1) as f64).exp2();
-                (x.clamp(-half, half - 1.0) as i64 as u64)
-                    & crate::num::bitstring::mask64(*w)
-            }
-        }
-    }
-
-    /// Parse a floating-point suffix: `PT8..PT64`, `ST8..`, `PH/PS/PD`,
-    /// `SH/SS/SD`, `NEPBF16/PBF16`, `BF8/HF8`. Returns (type, packed?).
-    pub fn parse_fp(suffix: &str) -> Option<(LaneType, bool)> {
-        let t = |n: &str| n.parse::<u32>().ok().filter(|n| [8, 16, 32, 64].contains(n));
-        if let Some(n) = suffix.strip_prefix("PT").and_then(t) {
-            return Some((LaneType::Takum(n), true));
-        }
-        if let Some(n) = suffix.strip_prefix("ST").and_then(t) {
-            return Some((LaneType::Takum(n), false));
-        }
-        Some(match suffix {
-            "PH" => (LaneType::Mini(F16), true),
-            "PS" => (LaneType::Mini(F32), true),
-            "PD" => (LaneType::Mini(F64), true),
-            "SH" => (LaneType::Mini(F16), false),
-            "SS" => (LaneType::Mini(F32), false),
-            "SD" => (LaneType::Mini(F64), false),
-            "NEPBF16" | "PBF16" => (LaneType::Mini(BF16), true),
-            "BF8" => (LaneType::Mini(E5M2), true),
-            "HF8" => (LaneType::Mini(E4M3), true),
-            _ => return None,
-        })
-    }
-}
+pub use super::lanes::LaneType;
 
 /// The simulator.
 #[derive(Debug, Clone, Default)]
@@ -112,6 +58,11 @@ pub struct Machine {
     pub counts: BTreeMap<String, u64>,
     /// Total executed instructions.
     pub executed: u64,
+    /// How lanes translate between bits and f64 (LUT-backed by default).
+    mode: CodecMode,
+    /// Memoized mnemonic → plan cache: each distinct mnemonic is parsed
+    /// exactly once per machine.
+    plan_cache: HashMap<String, LanePlan>,
 }
 
 impl Machine {
@@ -119,27 +70,32 @@ impl Machine {
         Machine::default()
     }
 
+    /// A machine with an explicit [`CodecMode`] (the default is
+    /// [`CodecMode::Lut`]).
+    pub fn with_mode(mode: CodecMode) -> Machine {
+        Machine { mode, ..Machine::default() }
+    }
+
+    pub fn mode(&self) -> CodecMode {
+        self.mode
+    }
+
     // ------------------------------------------------------------- data I/O
 
     /// Encode `values` into vector register lanes of type `ty`.
     pub fn load_f64(&mut self, vreg: u8, ty: LaneType, values: &[f64]) {
-        let w = ty.width();
-        assert!(values.len() <= VecReg::lanes(w));
-        let mut r = VecReg::ZERO;
-        for (i, v) in values.iter().enumerate() {
-            r.set(w, i, ty.encode(*v));
-        }
-        self.regs.v[vreg as usize] = r;
+        let codec = LaneCodec::resolve(ty, self.mode);
+        self.regs.v[vreg as usize] = codec.encode_plane(ty.width(), values);
     }
 
     /// Decode all lanes of a vector register.
     pub fn read_f64(&self, vreg: u8, ty: LaneType) -> Vec<f64> {
         let w = ty.width();
-        self.regs.v[vreg as usize]
-            .lanes_vec(w)
-            .into_iter()
-            .map(|b| ty.decode(b))
-            .collect()
+        let lanes = VecReg::lanes(w);
+        let codec = LaneCodec::resolve(ty, self.mode);
+        let mut out = vec![0.0f64; lanes];
+        codec.decode_plane(&self.regs.v[vreg as usize], w, lanes, &mut out);
+        out
     }
 
     pub fn set_mask(&mut self, k: u8, bits: u64) {
@@ -160,66 +116,41 @@ impl Machine {
     }
 
     pub fn step(&mut self, ins: &Instruction) -> Result<()> {
-        *self.counts.entry(ins.mnemonic.clone()).or_default() += 1;
+        // Count without cloning the mnemonic on the hot path (the String
+        // is only cloned the first time a mnemonic is seen, like the plan
+        // cache below).
+        if let Some(c) = self.counts.get_mut(ins.mnemonic.as_str()) {
+            *c += 1;
+        } else {
+            self.counts.insert(ins.mnemonic.clone(), 1);
+        }
         self.executed += 1;
-        let m = ins.mnemonic.as_str();
+        let plan = match self.plan_cache.get(ins.mnemonic.as_str()) {
+            Some(p) => *p,
+            None => {
+                let p = LanePlan::resolve(&ins.mnemonic)?;
+                self.plan_cache.insert(ins.mnemonic.clone(), p);
+                p
+            }
+        };
+        self.exec_plan(ins, plan)
+    }
 
-        // Mask-register ops (incl. the proposed VKUNPCK spelling).
-        if m.starts_with('K') || m.starts_with("VKUNPCK") {
-            return self.exec_mask_op(ins);
+    fn exec_plan(&mut self, ins: &Instruction, plan: LanePlan) -> Result<()> {
+        match plan {
+            LanePlan::Mask(p) => self.exec_mask_op(ins, p),
+            LanePlan::Dot { src, dst } => self.exec_dot(ins, src, dst),
+            LanePlan::ConvertNe2PsBf16 => self.exec_convert_ne2(ins),
+            LanePlan::Convert { src, dst } => self.exec_convert(ins, src, dst),
+            LanePlan::Compare { ty, packed } => self.exec_compare(ins, ty, packed),
+            LanePlan::Bitwise(f) => self.exec_bitwise(ins, f),
+            LanePlan::Broadcast(w) => self.exec_broadcast(ins, w),
+            LanePlan::VecToMask(w) => self.exec_v2m(ins, w),
+            LanePlan::MaskToVec(w) => self.exec_m2v(ins, w),
+            LanePlan::Shift(op, w) => self.exec_shift(ins, op, w),
+            LanePlan::Int(p) => self.exec_int(ins, p),
+            LanePlan::Fp { op, ty, packed } => self.exec_fp(ins, op, ty, packed),
         }
-        // Dot products.
-        if let Some(rest) = m.strip_prefix("VDP") {
-            return self.exec_dot(ins, rest);
-        }
-        // Conversions.
-        if let Some(rest) = m.strip_prefix("VCVT") {
-            return self.exec_convert(ins, rest);
-        }
-        // Compares (write a mask register).
-        if let Some(suffix) = m.strip_prefix("VCMP") {
-            return self.exec_compare(ins, suffix);
-        }
-        // Bitwise 512-bit ops (legacy D/Q width suffixes are semantically
-        // identical for lane-wise boolean logic).
-        for (op, f) in [
-            ("VPAND", (|a, b| a & b) as fn(u64, u64) -> u64),
-            ("VPANDN", |a, b| !a & b),
-            ("VPOR", |a, b| a | b),
-            ("VPXOR", |a, b| a ^ b),
-        ] {
-            if m == op
-                || (m.len() == op.len() + 1 && m.starts_with(op) && m.ends_with(['D', 'Q']))
-            {
-                return self.exec_bitwise(ins, f);
-            }
-        }
-        // Broadcasts (proposed B04-11 naming: VBROADCASTB{8..256}).
-        if let Some(w) = m.strip_prefix("VBROADCASTB").and_then(|s| s.parse::<u32>().ok()) {
-            return self.exec_broadcast(ins, w);
-        }
-        // Vector↔mask moves (proposed + legacy spellings).
-        if let Some(rest) = m.strip_prefix("VPMOV") {
-            if let Some(w) = rest.strip_suffix("2M").and_then(parse_b_width) {
-                return self.exec_v2m(ins, w);
-            }
-            if let Some(w) = rest.strip_prefix("M2").and_then(parse_b_width) {
-                return self.exec_m2v(ins, w);
-            }
-        }
-        // Lane shifts by immediate (proposed VPSLLB{w} / legacy VPSLLW…).
-        if let Some((op, w)) = parse_shift(m) {
-            return self.exec_shift(ins, op, w);
-        }
-        // Integer lane arithmetic.
-        if let Some(parsed) = parse_int_op(m) {
-            return self.exec_int(ins, parsed);
-        }
-        // Floating arithmetic (incl. FMA family and unary/imm ops).
-        if let Some((op, ty, packed)) = parse_fp_arith(m) {
-            return self.exec_fp(ins, op, ty, packed);
-        }
-        bail!("unimplemented mnemonic {m}")
     }
 
     fn vreg(&self, o: &Operand) -> Result<usize> {
@@ -265,55 +196,55 @@ impl Machine {
         Ok(())
     }
 
-    fn exec_mask_op(&mut self, ins: &Instruction) -> Result<()> {
+    fn exec_mask_op(&mut self, ins: &Instruction, plan: MaskPlan) -> Result<()> {
         let m = &ins.mnemonic;
-        // KUNPCK: concatenate the low halves (KUNPCKBW dst = a[7:0]:b[7:0];
-        // proposed VKUNPCKB8B16 is the same op with explicit widths).
-        if let Some(rest) = m.strip_prefix("KUNPCK").or(m.strip_prefix("VKUNPCKB")) {
-            let half: u32 = match rest {
-                "BW" | "8B16" => 8,
-                "WD" | "16B32" => 16,
-                "DQ" | "32B64" => 32,
-                _ => bail!("bad KUNPCK form {m}"),
-            };
-            let dst = Self::kreg(&ins.dst)?;
-            let a = self.regs.k[Self::kreg(&ins.srcs[0])?];
-            let b = self.regs.k[Self::kreg(&ins.srcs[1])?];
-            let hm = crate::num::bitstring::mask64(half);
-            self.regs.k[dst] = ((a & hm) << half) | (b & hm);
-            return Ok(());
-        }
-        // Strip the width suffix: proposed B8/B16/B32/B64 or legacy B/W/D/Q.
-        let (op, width) = split_mask_suffix(m)?;
+        let (op, width) = match plan {
+            MaskPlan::Unpack { half } => {
+                // KUNPCK: concatenate the low halves (KUNPCKBW dst =
+                // a[7:0]:b[7:0]; VKUNPCKB8B16 is the same op with
+                // explicit widths).
+                let dst = Self::kreg(&ins.dst)?;
+                let a = self.regs.k[Self::kreg(&ins.srcs[0])?];
+                let b = self.regs.k[Self::kreg(&ins.srcs[1])?];
+                let hm = crate::num::bitstring::mask64(half);
+                self.regs.k[dst] = ((a & hm) << half) | (b & hm);
+                return Ok(());
+            }
+            MaskPlan::Op { op, width } => (op, width),
+        };
         let dst = Self::kreg(&ins.dst)?;
         let lane_mask = if width >= 64 { u64::MAX } else { (1u64 << width) - 1 };
         let src0 = ins
             .srcs
             .first()
-            .ok_or_else(|| anyhow!("{op}: missing source"))
+            .ok_or_else(|| anyhow!("{m}: missing source"))
             .and_then(Self::kreg)?;
         let av = self.regs.k[src0];
         // Second operand: a mask register for the boolean ops, an
         // immediate for the shifts, absent for the unary ops.
         let out = match op {
-            "KNOT" => !av,
-            "KMOV" => av,
-            "KSHIFTL" => av << Self::imm(ins.srcs.get(1).ok_or_else(|| anyhow!("KSHIFTL imm"))?)?,
-            "KSHIFTR" => av >> Self::imm(ins.srcs.get(1).ok_or_else(|| anyhow!("KSHIFTR imm"))?)?,
+            MaskOp::Not => !av,
+            MaskOp::Mov => av,
+            MaskOp::ShiftL => {
+                av << Self::imm(ins.srcs.get(1).ok_or_else(|| anyhow!("{m}: missing imm"))?)?
+            }
+            MaskOp::ShiftR => {
+                av >> Self::imm(ins.srcs.get(1).ok_or_else(|| anyhow!("{m}: missing imm"))?)?
+            }
             _ => {
                 let bv = self.regs.k[ins
                     .srcs
                     .get(1)
-                    .ok_or_else(|| anyhow!("{op}: missing second source"))
+                    .ok_or_else(|| anyhow!("{m}: missing second source"))
                     .and_then(Self::kreg)?];
                 match op {
-                    "KAND" => av & bv,
-                    "KANDN" => !av & bv,
-                    "KOR" => av | bv,
-                    "KXOR" => av ^ bv,
-                    "KXNOR" => !(av ^ bv),
-                    "KADD" => av.wrapping_add(bv),
-                    _ => bail!("unimplemented mask op {op}"),
+                    MaskOp::And => av & bv,
+                    MaskOp::Andn => !av & bv,
+                    MaskOp::Or => av | bv,
+                    MaskOp::Xor => av ^ bv,
+                    MaskOp::Xnor => !(av ^ bv),
+                    MaskOp::Add => av.wrapping_add(bv),
+                    _ => unreachable!(),
                 }
             }
         };
@@ -378,6 +309,7 @@ impl Machine {
     fn exec_fp(&mut self, ins: &Instruction, op: FpOp, ty: LaneType, packed: bool) -> Result<()> {
         let w = ty.width();
         let lanes = if packed { VecReg::lanes(w) } else { 1 };
+        let codec = LaneCodec::resolve(ty, self.mode);
         let a = self.regs.v[self.vreg(&ins.srcs[0])?];
         let b = ins
             .srcs
@@ -394,13 +326,20 @@ impl Machine {
             _ => None,
         });
 
+        // Source planes are decoded once, up front.
+        let mut xa = [0.0f64; 64];
+        codec.decode_plane(&a, w, lanes, &mut xa);
+        let mut xb = [0.0f64; 64];
+        if let Some(rb) = b.as_ref() {
+            codec.decode_plane(rb, w, lanes, &mut xb);
+        }
+
         // VCLASS writes a mask register, not lanes.
         if matches!(op, FpOp::Class) {
             let dst = Self::kreg(&ins.dst)?;
             let sel = imm.unwrap_or(0b111);
             let mut out = 0u64;
-            for i in 0..lanes {
-                let x = ty.decode(a.get(w, i));
+            for (i, &x) in xa.iter().enumerate().take(lanes) {
                 let hit = (sel & 1 != 0 && x.is_nan())
                     || (sel & 2 != 0 && x == 0.0)
                     || (sel & 4 != 0 && x < 0.0);
@@ -412,12 +351,16 @@ impl Machine {
             return Ok(());
         }
 
-        // The FMA family reads the destination as its third operand.
-        let acc = self.regs.v[self.vreg(&ins.dst)?];
+        // Only the FMA family reads the destination as its third operand;
+        // skip the accumulator plane decode for everything else.
+        let mut xz = [0.0f64; 64];
+        if matches!(op, FpOp::Fma(..)) {
+            let acc = self.regs.v[self.vreg(&ins.dst)?];
+            codec.decode_plane(&acc, w, lanes, &mut xz);
+        }
+
         self.write_lanes(ins, w, lanes, |i| {
-            let x = ty.decode(a.get(w, i));
-            let y = b.map(|r| ty.decode(r.get(w, i))).unwrap_or(0.0);
-            let z = ty.decode(acc.get(w, i));
+            let (x, y, z) = (xa[i], xb[i], xz[i]);
             let r = match op {
                 FpOp::Add => x + y,
                 FpOp::Sub => x - y,
@@ -484,7 +427,7 @@ impl Machine {
                 }
                 FpOp::Class => unreachable!(),
             };
-            ty.encode(r)
+            codec.encode(r)
         })
     }
 
@@ -557,9 +500,7 @@ impl Machine {
         })
     }
 
-    fn exec_compare(&mut self, ins: &Instruction, suffix: &str) -> Result<()> {
-        let (ty, packed) = LaneType::parse_fp(suffix)
-            .ok_or_else(|| anyhow!("bad compare suffix {suffix}"))?;
+    fn exec_compare(&mut self, ins: &Instruction, ty: LaneType, packed: bool) -> Result<()> {
         let w = ty.width();
         let lanes = if packed { VecReg::lanes(w) } else { 1 };
         let dst = Self::kreg(&ins.dst)?;
@@ -568,18 +509,17 @@ impl Machine {
         let pred = Self::imm(&ins.srcs[2])?;
         let rmask = self.regs.write_mask(ins.mask, lanes);
         let mut out = 0u64;
-        for i in 0..lanes {
-            if rmask >> i & 1 == 0 {
-                continue;
-            }
-            let (xb, yb) = (a.get(w, i), b.get(w, i));
-            let hit = match ty {
-                // The takum fast path: total order == signed-integer order
-                // on the encodings. NaR (most-negative) sorts below
-                // everything, matching the takum standard.
-                LaneType::Takum(n) => {
-                    let (kx, ky) = (sign_extend(xb, n), sign_extend(yb, n));
-                    match pred {
+        match ty {
+            // The takum fast path: total order == signed-integer order on
+            // the encodings — no decode at all. NaR (most-negative) sorts
+            // below everything, matching the takum standard.
+            LaneType::Takum(n) => {
+                for i in 0..lanes {
+                    if rmask >> i & 1 == 0 {
+                        continue;
+                    }
+                    let (kx, ky) = (sign_extend(a.get(w, i), n), sign_extend(b.get(w, i), n));
+                    let hit = match pred {
                         0 => kx == ky,
                         1 => kx < ky,
                         2 => kx <= ky,
@@ -587,12 +527,26 @@ impl Machine {
                         5 => kx >= ky,
                         6 => kx > ky,
                         _ => false,
+                    };
+                    if hit {
+                        out |= 1 << i;
                     }
                 }
-                // IEEE formats need real comparisons (NaN-unordered).
-                _ => {
-                    let (x, y) = (ty.decode(xb), ty.decode(yb));
-                    match pred {
+            }
+            // IEEE formats need real comparisons (NaN-unordered): decode
+            // both planes once, then compare values.
+            _ => {
+                let codec = LaneCodec::resolve(ty, self.mode);
+                let mut xa = [0.0f64; 64];
+                codec.decode_plane(&a, w, lanes, &mut xa);
+                let mut xb = [0.0f64; 64];
+                codec.decode_plane(&b, w, lanes, &mut xb);
+                for i in 0..lanes {
+                    if rmask >> i & 1 == 0 {
+                        continue;
+                    }
+                    let (x, y) = (xa[i], xb[i]);
+                    let hit = match pred {
                         0 => x == y,
                         1 => x < y,
                         2 => x <= y,
@@ -600,327 +554,66 @@ impl Machine {
                         5 => x >= y,
                         6 => x > y,
                         _ => false,
+                    };
+                    if hit {
+                        out |= 1 << i;
                     }
                 }
-            };
-            if hit {
-                out |= 1 << i;
             }
         }
         self.regs.k[dst] = out;
         Ok(())
     }
 
-    fn exec_convert(&mut self, ins: &Instruction, rest: &str) -> Result<()> {
-        // Legacy two-source bf16 convert: VCVTNE2PS2BF16 packs two PS regs.
-        if rest == "NE2PS2BF16" {
-            let a = self.regs.v[self.vreg(&ins.srcs[0])?];
-            let b = self.regs.v[self.vreg(&ins.srcs[1])?];
-            return self.write_lanes(ins, 16, 32, |i| {
-                let src = if i < 16 { &b } else { &a };
-                let x = F32.decode(src.get(32, i % 16));
-                BF16.encode(x)
-            });
-        }
-        // Normalise legacy spellings: VCVTNEPS2BF16 → PS2BF16 parse.
-        let rest = rest.strip_prefix("NE").unwrap_or(rest);
-        let parse_any = |s: &str| -> Option<(LaneType, bool)> {
-            if let Some(t) = LaneType::parse_fp(s) {
-                return Some(t);
-            }
-            // Integer lane suffixes of the proposed matrix: PS8/PU32/…
-            let t = |n: &str| n.parse::<u32>().ok().filter(|n| [8u32, 16, 32, 64].contains(n));
-            if let Some(n) = s.strip_prefix("PS").and_then(t) {
-                return Some((LaneType::SInt(n), true));
-            }
-            if let Some(n) = s.strip_prefix("PU").and_then(t) {
-                return Some((LaneType::UInt(n), true));
-            }
-            // Legacy spellings used by the baseline programs.
-            match s {
-                "BF16" => Some((LaneType::Mini(BF16), true)),
-                "HF8" => Some((LaneType::Mini(E4M3), true)),
-                "BF8" => Some((LaneType::Mini(E5M2), true)),
-                _ => None,
-            }
-        };
-        // The '2' separator is ambiguous when widths contain a 2
-        // (VCVTPT322PS32): try every split position until both sides parse.
-        let mut split = None;
-        for (pos, _) in rest.match_indices('2') {
-            if let (Some(s), Some(d)) = (parse_any(&rest[..pos]), parse_any(&rest[pos + 1..])) {
-                split = Some((s, d));
-                break;
-            }
-        }
-        let ((src_ty, _), (dst_ty, _)) =
-            split.ok_or_else(|| anyhow!("bad convert VCVT{rest}"))?;
+    /// Legacy two-source bf16 convert: VCVTNE2PS2BF16 packs two PS regs.
+    fn exec_convert_ne2(&mut self, ins: &Instruction) -> Result<()> {
+        let a = self.regs.v[self.vreg(&ins.srcs[0])?];
+        let b = self.regs.v[self.vreg(&ins.srcs[1])?];
+        let bc = LaneCodec::resolve(LaneType::Mini(BF16), self.mode);
+        self.write_lanes(ins, 16, 32, |i| {
+            let src = if i < 16 { &b } else { &a };
+            bc.encode(F32.decode(src.get(32, i % 16)))
+        })
+    }
+
+    fn exec_convert(&mut self, ins: &Instruction, src_ty: LaneType, dst_ty: LaneType) -> Result<()> {
         let a = self.regs.v[self.vreg(&ins.srcs[0])?];
         let (ws, wd) = (src_ty.width(), dst_ty.width());
         // Width-changing packed converts operate on min(lanes_src, lanes_dst).
         let lanes = VecReg::lanes(ws.max(wd));
-        self.write_lanes(ins, wd, lanes, |i| dst_ty.encode(src_ty.decode(a.get(ws, i))))
+        let sc = LaneCodec::resolve(src_ty, self.mode);
+        let dc = LaneCodec::resolve(dst_ty, self.mode);
+        let mut xs = [0.0f64; 64];
+        sc.decode_plane(&a, ws, lanes, &mut xs);
+        self.write_lanes(ins, wd, lanes, |i| dc.encode(xs[i]))
     }
 
     /// Widening dot products: `VDPPT8PT16`-style (pairs of src lanes fused
     /// into one dst lane, accumulated onto dst) plus the legacy
     /// `VDPBF16PS` / `VDPPHPS`.
-    fn exec_dot(&mut self, ins: &Instruction, rest: &str) -> Result<()> {
-        let (src_ty, dst_ty): (LaneType, LaneType) = match rest {
-            "PT8PT16" => (LaneType::Takum(8), LaneType::Takum(16)),
-            "PT16PT32" => (LaneType::Takum(16), LaneType::Takum(32)),
-            "PT32PT64" => (LaneType::Takum(32), LaneType::Takum(64)),
-            "BF16PS" => (LaneType::Mini(BF16), LaneType::Mini(F32)),
-            "PHPS" => (LaneType::Mini(F16), LaneType::Mini(F32)),
-            _ => bail!("unimplemented dot product VDP{rest}"),
-        };
+    fn exec_dot(&mut self, ins: &Instruction, src_ty: LaneType, dst_ty: LaneType) -> Result<()> {
         let (ws, wd) = (src_ty.width(), dst_ty.width());
         debug_assert_eq!(wd, ws * 2);
         let a = self.regs.v[self.vreg(&ins.srcs[0])?];
         let b = self.regs.v[self.vreg(&ins.srcs[1])?];
         let acc = self.regs.v[self.vreg(&ins.dst)?];
         let lanes = VecReg::lanes(wd);
+        let nlanes = VecReg::lanes(ws);
+        let sc = LaneCodec::resolve(src_ty, self.mode);
+        let dc = LaneCodec::resolve(dst_ty, self.mode);
+        let mut xa = [0.0f64; 64];
+        sc.decode_plane(&a, ws, nlanes, &mut xa);
+        let mut xb = [0.0f64; 64];
+        sc.decode_plane(&b, ws, nlanes, &mut xb);
+        let mut xz = [0.0f64; 64];
+        dc.decode_plane(&acc, wd, lanes, &mut xz);
         self.write_lanes(ins, wd, lanes, |i| {
-            let mut sum = dst_ty.decode(acc.get(wd, i));
-            for j in 0..2 {
-                let x = src_ty.decode(a.get(ws, 2 * i + j));
-                let y = src_ty.decode(b.get(ws, 2 * i + j));
-                sum += x * y;
-            }
-            dst_ty.encode(sum)
+            let mut sum = xz[i];
+            sum += xa[2 * i] * xb[2 * i];
+            sum += xa[2 * i + 1] * xb[2 * i + 1];
+            dc.encode(sum)
         })
     }
-}
-
-// ---------------------------------------------------------------------------
-// Mnemonic parsing helpers
-// ---------------------------------------------------------------------------
-
-#[derive(Debug, Clone, Copy)]
-enum FmaKind {
-    Madd,
-    Msub,
-    Nmadd,
-    Nmsub,
-}
-
-#[derive(Debug, Clone, Copy)]
-enum FmaOrder {
-    O132,
-    O213,
-    O231,
-}
-
-#[derive(Debug, Clone, Copy)]
-enum FpOp {
-    Add,
-    Sub,
-    Mul,
-    Div,
-    Sqrt,
-    Min,
-    Max,
-    MinMax,
-    Fma(FmaKind, FmaOrder),
-    Rcp,
-    Rsqrt,
-    Exp,
-    Mant,
-    Class,
-    RndScale,
-    Reduce,
-    Scalef,
-}
-
-#[derive(Debug, Clone, Copy)]
-enum ShiftOp {
-    Sll,
-    Srl,
-    Sra,
-}
-
-fn parse_shift(m: &str) -> Option<(ShiftOp, u32)> {
-    for (pre, op) in [("VPSLL", ShiftOp::Sll), ("VPSRL", ShiftOp::Srl), ("VPSRA", ShiftOp::Sra)] {
-        if let Some(rest) = m.strip_prefix(pre) {
-            // proposed: B{8..64}; legacy: W/D/Q.
-            if let Some(w) = rest.strip_prefix('B').and_then(|s| s.parse::<u32>().ok()) {
-                if [8, 16, 32, 64].contains(&w) {
-                    return Some((op, w));
-                }
-            }
-            let w = match rest {
-                "W" => 16,
-                "D" => 32,
-                "Q" => 64,
-                _ => return None,
-            };
-            return Some((op, w));
-        }
-    }
-    None
-}
-
-fn parse_b_width(s: &str) -> Option<u32> {
-    // "B8".."B64" (proposed) or single legacy letter.
-    if let Some(w) = s.strip_prefix('B').and_then(|r| r.parse::<u32>().ok()) {
-        if [8, 16, 32, 64].contains(&w) {
-            return Some(w);
-        }
-        return None;
-    }
-    match s {
-        "B" => Some(8),
-        "W" => Some(16),
-        "D" => Some(32),
-        "Q" => Some(64),
-        _ => None,
-    }
-}
-
-fn parse_fp_arith(m: &str) -> Option<(FpOp, LaneType, bool)> {
-    // FMA family first (longest prefixes).
-    for (name, kind) in [
-        ("VFMADD", FmaKind::Madd),
-        ("VFMSUB", FmaKind::Msub),
-        ("VFNMADD", FmaKind::Nmadd),
-        ("VFNMSUB", FmaKind::Nmsub),
-    ] {
-        if let Some(rest) = m.strip_prefix(name) {
-            for (o, order) in
-                [("132", FmaOrder::O132), ("213", FmaOrder::O213), ("231", FmaOrder::O231)]
-            {
-                if let Some(suffix) = rest.strip_prefix(o) {
-                    if let Some((ty, packed)) = LaneType::parse_fp(suffix) {
-                        return Some((FpOp::Fma(kind, order), ty, packed));
-                    }
-                }
-            }
-        }
-    }
-    let table: [(&str, FpOp); 16] = [
-        ("VADD", FpOp::Add),
-        ("VSUB", FpOp::Sub),
-        ("VMULTISHIFT", FpOp::Add), // guard: never matches an fp suffix
-        ("VMUL", FpOp::Mul),
-        ("VDIV", FpOp::Div),
-        ("VSQRT", FpOp::Sqrt),
-        ("VMINMAX", FpOp::MinMax),
-        ("VMIN", FpOp::Min),
-        ("VMAX", FpOp::Max),
-        ("VRCP", FpOp::Rcp),
-        ("VRSQRT", FpOp::Rsqrt),
-        ("VEXP", FpOp::Exp),
-        ("VMANT", FpOp::Mant),
-        ("VCLASS", FpOp::Class),
-        ("VRNDSCALE", FpOp::RndScale),
-        ("VSCALEF", FpOp::Scalef),
-    ];
-    for (prefix, op) in table {
-        if let Some(suffix) = m.strip_prefix(prefix) {
-            if let Some((ty, packed)) = LaneType::parse_fp(suffix) {
-                return Some((op, ty, packed));
-            }
-        }
-    }
-    if let Some(suffix) = m.strip_prefix("VREDUCE") {
-        if let Some((ty, packed)) = LaneType::parse_fp(suffix) {
-            return Some((FpOp::Reduce, ty, packed));
-        }
-    }
-    None
-}
-
-#[derive(Debug, Clone, Copy)]
-enum IntKind {
-    Add,
-    Sub,
-    MulLo,
-    MinU,
-    MaxU,
-    MinS,
-    MaxS,
-    AbsS,
-    AddSatS,
-    AddSatU,
-    SubSatS,
-    SubSatU,
-    AvgU,
-}
-
-#[derive(Debug, Clone, Copy)]
-struct IntOp {
-    kind: IntKind,
-    width: u32,
-}
-
-/// Parse integer lane ops, both proposed (`VPADDU8`, `VPMAXS32`,
-/// `VPMULLU16`, `VPABSS64`) and legacy (`VPADDB`, `VPMAXSD`) spellings.
-fn parse_int_op(m: &str) -> Option<IntOp> {
-    let rest = m.strip_prefix("VP")?;
-    let num_width = |s: &str| -> Option<u32> {
-        s.parse::<u32>().ok().filter(|n| [8u32, 16, 32, 64].contains(n))
-    };
-    let legacy_width = |s: &str| -> Option<u32> {
-        match s {
-            "B" => Some(8),
-            "W" => Some(16),
-            "D" => Some(32),
-            "Q" => Some(64),
-            _ => None,
-        }
-    };
-    // Ordered longest-prefix-first so ADDSS/ADDUS win over ADDU/ADD.
-    let specs: [(&str, IntKind); 18] = [
-        ("ADDSS", IntKind::AddSatS),
-        ("ADDUS", IntKind::AddSatU),
-        ("ADDS", IntKind::AddSatS), // legacy VPADDSB/W
-        ("ADDU", IntKind::Add),
-        ("ADD", IntKind::Add),
-        ("SUBSS", IntKind::SubSatS),
-        ("SUBUS", IntKind::SubSatU),
-        ("SUBS", IntKind::SubSatS), // legacy VPSUBSB/W
-        ("SUBU", IntKind::Sub),
-        ("SUB", IntKind::Sub),
-        ("AVGU", IntKind::AvgU),
-        ("AVG", IntKind::AvgU), // legacy VPAVGB/W
-        ("MULLU", IntKind::MulLo),
-        ("MULL", IntKind::MulLo),
-        ("MINU", IntKind::MinU),
-        ("MAXU", IntKind::MaxU),
-        ("MINS", IntKind::MinS),
-        ("MAXS", IntKind::MaxS),
-    ];
-    for (name, kind) in specs {
-        if let Some(w) = rest.strip_prefix(name) {
-            if let Some(width) = num_width(w).or_else(|| legacy_width(w)) {
-                return Some(IntOp { kind, width });
-            }
-        }
-    }
-    if let Some(w) = rest.strip_prefix("ABSS").and_then(num_width) {
-        return Some(IntOp { kind: IntKind::AbsS, width: w });
-    }
-    if let Some(w) = rest.strip_prefix("ABS").and_then(legacy_width) {
-        return Some(IntOp { kind: IntKind::AbsS, width: w });
-    }
-    None
-}
-
-/// Split a mask mnemonic into (op, lane-count-width).
-fn split_mask_suffix(m: &str) -> Result<(&str, u32)> {
-    // Proposed: …B8/B16/B32/B64.
-    for (suf, w) in [("B8", 8u32), ("B16", 16), ("B32", 32), ("B64", 64)] {
-        if let Some(op) = m.strip_suffix(suf) {
-            return Ok((op, w));
-        }
-    }
-    // Legacy: …B/W/D/Q.
-    for (suf, w) in [("B", 8u32), ("W", 16), ("D", 32), ("Q", 64)] {
-        if let Some(op) = m.strip_suffix(suf) {
-            return Ok((op, w));
-        }
-    }
-    bail!("bad mask mnemonic {m}")
 }
 
 #[cfg(test)]
@@ -1057,6 +750,22 @@ mod tests {
         mach.step(&I::new("VCVTPS162PT16", Vreg(2), vec![Vreg(1)])).unwrap();
         let back = mach.read_f64(2, t16);
         assert_eq!(&back[..5], &[1.0, 2.0, 3.0, 250.0, -3.0]);
+    }
+
+    #[test]
+    fn int_lane_conversion_rounds_ties_to_even() {
+        // Regression: VCVT…2DQ-style conversions round to nearest even,
+        // they do not truncate (2.5 → 2, 3.5 → 4, -2.5 → -2).
+        let mut mach = Machine::new();
+        let t16 = LaneType::Takum(16);
+        mach.load_f64(0, t16, &[2.5, 3.5, -2.5, -0.75, 0.5]);
+        mach.step(&I::new("VCVTPT162PS16", Vreg(1), vec![Vreg(0)])).unwrap();
+        let ints = mach.read_f64(1, LaneType::SInt(16));
+        assert_eq!(&ints[..5], &[2.0, 4.0, -2.0, -1.0, 0.0]);
+        // Unsigned destination clamps negatives at zero after rounding.
+        mach.step(&I::new("VCVTPT162PU16", Vreg(2), vec![Vreg(0)])).unwrap();
+        let uints = mach.read_f64(2, LaneType::UInt(16));
+        assert_eq!(&uints[..5], &[2.0, 4.0, 0.0, 0.0, 0.0]);
     }
 
     #[test]
@@ -1222,6 +931,9 @@ mod tests {
     fn unknown_mnemonic_errors() {
         let mut mach = Machine::new();
         assert!(mach.step(&add("VFROBNICATE", 0, 1, 2)).is_err());
+        // Failed resolutions are not cached; the error is stable.
+        let e = mach.step(&add("VFROBNICATE", 0, 1, 2)).unwrap_err();
+        assert!(e.to_string().contains("unimplemented"));
     }
 
     #[test]
@@ -1235,5 +947,68 @@ mod tests {
         }
         assert_eq!(mach.counts["VADDPT8"], 3);
         assert_eq!(mach.executed, 3);
+    }
+
+    /// The machine-level equivalence gate: a program executed in LUT mode
+    /// must leave **bit-identical** architectural state to the
+    /// pre-refactor arithmetic path, across every 8/16-bit format and op
+    /// family the GEMM pipelines touch.
+    #[test]
+    fn lut_and_arith_machines_agree_bit_for_bit() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(0xBEEF);
+        let cases: Vec<(&str, LaneType)> = vec![
+            ("VADDPT8", LaneType::Takum(8)),
+            ("VMULPT8", LaneType::Takum(8)),
+            ("VADDPT16", LaneType::Takum(16)),
+            ("VDIVPT16", LaneType::Takum(16)),
+            ("VFMADD231PT16", LaneType::Takum(16)),
+            ("VADDNEPBF16", LaneType::Mini(BF16)),
+            ("VADDPH", LaneType::Mini(crate::num::F16)),
+            ("VMULBF8", LaneType::Mini(crate::num::E5M2)),
+            ("VMULHF8", LaneType::Mini(crate::num::E4M3)),
+        ];
+        for (mn, ty) in cases {
+            let mut fast = Machine::with_mode(CodecMode::Lut);
+            let mut slow = Machine::with_mode(CodecMode::Arith);
+            let lanes = VecReg::lanes(ty.width());
+            let a: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-20, 20)).collect();
+            let b: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-20, 20)).collect();
+            for m in [&mut fast, &mut slow] {
+                m.load_f64(0, ty, &a);
+                m.load_f64(1, ty, &b);
+                m.load_f64(2, ty, &a);
+                m.step(&add(mn, 2, 0, 1)).unwrap();
+            }
+            assert_eq!(fast.regs.v[0], slow.regs.v[0], "{mn}: src a");
+            assert_eq!(fast.regs.v[1], slow.regs.v[1], "{mn}: src b");
+            assert_eq!(fast.regs.v[2], slow.regs.v[2], "{mn}: result");
+        }
+        // Widening dot product with both codec widths in play.
+        let mut fast = Machine::with_mode(CodecMode::Lut);
+        let mut slow = Machine::with_mode(CodecMode::Arith);
+        let a: Vec<f64> = (0..64).map(|_| r.wide_f64(-8, 8)).collect();
+        let b: Vec<f64> = (0..64).map(|_| r.wide_f64(-8, 8)).collect();
+        for m in [&mut fast, &mut slow] {
+            m.load_f64(0, LaneType::Takum(8), &a);
+            m.load_f64(1, LaneType::Takum(8), &b);
+            m.load_f64(2, LaneType::Takum(16), &vec![0.25; 32]);
+            m.step(&add("VDPPT8PT16", 2, 0, 1)).unwrap();
+        }
+        assert_eq!(fast.regs.v[2], slow.regs.v[2], "VDPPT8PT16");
+    }
+
+    #[test]
+    fn plan_cache_fills_once_per_mnemonic() {
+        let mut mach = Machine::new();
+        let t = LaneType::Takum(16);
+        mach.load_f64(0, t, &[1.0]);
+        mach.load_f64(1, t, &[2.0]);
+        for _ in 0..10 {
+            mach.step(&add("VADDPT16", 2, 0, 1)).unwrap();
+            mach.step(&add("VMULPT16", 3, 0, 1)).unwrap();
+        }
+        assert_eq!(mach.plan_cache.len(), 2);
+        assert_eq!(mach.executed, 20);
     }
 }

@@ -1,0 +1,823 @@
+//! The batched lane engine: per-mnemonic execution **plans** and
+//! LUT-backed lane **codecs**.
+//!
+//! The paper's central claim (§IV) is that takum's shared envelope lets
+//! one decode path serve every precision. This module is the software
+//! mirror of that claim: each [`crate::sim::Instruction`] is resolved
+//! **once** into a [`LanePlan`] (lane type, width, op kind), memoized per
+//! [`crate::sim::Machine`], and then executed over whole register planes
+//! with a single dispatch — no per-lane, per-instruction mnemonic
+//! re-parsing. Mask policy (`{k}` merging / `{k}{z}` zeroing) is carried
+//! by the instruction itself and applied by the shared plane writer.
+//!
+//! Lane decode/encode goes through [`LaneCodec`]: for the 8- and 16-bit
+//! formats (PT8/PT16, BF8/HF8, PH, PBF16) all traffic is routed through
+//! the process-wide cached [`Lut8`] tables of [`crate::num::lut`], whose
+//! bisection-derived decision boundaries are **bit-identical** to the
+//! arithmetic codecs (property-tested below, and exhaustively for the
+//! 16-bit takum). [`CodecMode::Arith`] keeps the pre-refactor per-lane
+//! arithmetic path alive as the reference implementation — equivalence
+//! tests and the `benches/simulator.rs` speedup comparison run both.
+
+use super::register::VecReg;
+use crate::num::bitstring::{mask64, sign_extend};
+use crate::num::lut::{self, Lut8};
+use crate::num::{takum_linear, MinifloatSpec, BF16, E4M3, E5M2, F16, F32, F64};
+use anyhow::{anyhow, bail, Result};
+
+/// Element interpretation of a vector lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneType {
+    Takum(u32),
+    Mini(MinifloatSpec),
+    /// IEEE-style format with saturating encode (the `VCVT…S` conversion
+    /// semantics; used when storing into range-limited OFP8 lanes).
+    MiniSat(MinifloatSpec),
+    /// Unsigned / signed integer lanes.
+    UInt(u32),
+    SInt(u32),
+}
+
+impl LaneType {
+    pub fn width(&self) -> u32 {
+        match self {
+            LaneType::Takum(n) => *n,
+            LaneType::Mini(s) | LaneType::MiniSat(s) => s.bits(),
+            LaneType::UInt(w) | LaneType::SInt(w) => *w,
+        }
+    }
+
+    /// Scalar reference decode through the arithmetic codecs (the
+    /// pre-refactor per-lane path; [`LaneCodec`] is the batched front end).
+    pub fn decode(&self, bits: u64) -> f64 {
+        match self {
+            LaneType::Takum(n) => takum_linear::decode(bits, *n),
+            LaneType::Mini(s) | LaneType::MiniSat(s) => s.decode(bits),
+            LaneType::UInt(w) => (bits & mask64(*w)) as f64,
+            LaneType::SInt(w) => sign_extend(bits, *w) as f64,
+        }
+    }
+
+    /// Scalar reference encode through the arithmetic codecs.
+    ///
+    /// Integer lanes follow `VCVT…2DQ` semantics: round to nearest (ties
+    /// to even) **before** clamping — not truncation.
+    pub fn encode(&self, x: f64) -> u64 {
+        match self {
+            LaneType::Takum(n) => takum_linear::encode(x, *n),
+            LaneType::Mini(s) => s.encode(x),
+            LaneType::MiniSat(s) => s.encode_sat(x),
+            LaneType::UInt(w) => {
+                let m = mask64(*w);
+                let r = x.round_ties_even();
+                if r <= 0.0 {
+                    0
+                } else if r >= m as f64 {
+                    m
+                } else {
+                    r as u64
+                }
+            }
+            LaneType::SInt(w) => {
+                // Bounds via f64 exp2 (1i64 << 63 would overflow for w=64);
+                // the `as i64` cast saturates at the type limits.
+                let half = ((*w - 1) as f64).exp2();
+                (x.round_ties_even().clamp(-half, half - 1.0) as i64 as u64) & mask64(*w)
+            }
+        }
+    }
+
+    /// Parse a floating-point suffix: `PT8..PT64`, `ST8..`, `PH/PS/PD`,
+    /// `SH/SS/SD`, `NEPBF16/PBF16`, `BF8/HF8`. Returns (type, packed?).
+    pub fn parse_fp(suffix: &str) -> Option<(LaneType, bool)> {
+        let t = |n: &str| n.parse::<u32>().ok().filter(|n| [8, 16, 32, 64].contains(n));
+        if let Some(n) = suffix.strip_prefix("PT").and_then(t) {
+            return Some((LaneType::Takum(n), true));
+        }
+        if let Some(n) = suffix.strip_prefix("ST").and_then(t) {
+            return Some((LaneType::Takum(n), false));
+        }
+        Some(match suffix {
+            "PH" => (LaneType::Mini(F16), true),
+            "PS" => (LaneType::Mini(F32), true),
+            "PD" => (LaneType::Mini(F64), true),
+            "SH" => (LaneType::Mini(F16), false),
+            "SS" => (LaneType::Mini(F32), false),
+            "SD" => (LaneType::Mini(F64), false),
+            "NEPBF16" | "PBF16" => (LaneType::Mini(BF16), true),
+            "BF8" => (LaneType::Mini(E5M2), true),
+            "HF8" => (LaneType::Mini(E4M3), true),
+            _ => return None,
+        })
+    }
+}
+
+/// How a [`LaneCodec`] translates between lane bits and f64.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum CodecMode {
+    /// Route 8/16-bit formats through the cached [`Lut8`] tables
+    /// (bit-identical to the arithmetic codecs; the default).
+    #[default]
+    Lut,
+    /// Per-lane arithmetic codecs only — the pre-refactor reference path,
+    /// kept for equivalence tests and the bench comparison.
+    Arith,
+}
+
+/// A lane type resolved against the codec tables: the per-plane
+/// decode/encode engine. Resolution happens once per executed
+/// instruction (not per lane).
+#[derive(Clone, Copy)]
+pub enum LaneCodec {
+    Takum { n: u32, lut: Option<&'static Lut8> },
+    Mini { spec: MinifloatSpec, sat: bool, lut: Option<&'static Lut8> },
+    Int(LaneType),
+}
+
+impl LaneCodec {
+    pub fn resolve(ty: LaneType, mode: CodecMode) -> LaneCodec {
+        let use_lut = mode == CodecMode::Lut;
+        match ty {
+            LaneType::Takum(n) => LaneCodec::Takum {
+                n,
+                lut: if use_lut { lut::cached_takum(n) } else { None },
+            },
+            LaneType::Mini(s) => LaneCodec::Mini {
+                spec: s,
+                sat: false,
+                lut: if use_lut { lut::cached_mini(s.name) } else { None },
+            },
+            LaneType::MiniSat(s) => LaneCodec::Mini {
+                spec: s,
+                sat: true,
+                lut: if use_lut { lut::cached_mini(s.name) } else { None },
+            },
+            LaneType::UInt(_) | LaneType::SInt(_) => LaneCodec::Int(ty),
+        }
+    }
+
+    /// Decode one lane's bits.
+    #[inline]
+    pub fn decode(&self, bits: u64) -> f64 {
+        match self {
+            LaneCodec::Takum { n, lut } => match lut {
+                Some(t) => t.decode_bits(bits),
+                None => takum_linear::decode(bits, *n),
+            },
+            LaneCodec::Mini { spec, lut, .. } => match lut {
+                Some(t) => t.decode_bits(bits),
+                None => spec.decode(bits),
+            },
+            LaneCodec::Int(ty) => ty.decode(bits),
+        }
+    }
+
+    /// Encode one value, bit-identical to the arithmetic codec of the
+    /// lane type (the LUT fast path falls back to the codec exactly where
+    /// the table cannot represent the codec's answer: non-finite inputs,
+    /// signed zeros, and IEEE overflow in non-saturating mode).
+    #[inline]
+    pub fn encode(&self, x: f64) -> u64 {
+        match self {
+            LaneCodec::Takum { n, lut } => match lut {
+                Some(t) if x.is_finite() => t.encode_bits(x),
+                _ => takum_linear::encode(x, *n),
+            },
+            LaneCodec::Mini { spec, sat, lut } => {
+                if let Some(t) = lut {
+                    if x.is_nan() {
+                        return spec.nan_bits();
+                    }
+                    if x != 0.0 && x.is_finite() && (*sat || !t.overflows(x)) {
+                        let b = t.encode_bits(x);
+                        // The table folds ±0 onto pattern 0; the codec
+                        // keeps the sign of a negative underflow.
+                        if b != 0 || x > 0.0 {
+                            return b;
+                        }
+                    }
+                }
+                if *sat {
+                    spec.encode_sat(x)
+                } else {
+                    spec.encode(x)
+                }
+            }
+            LaneCodec::Int(ty) => ty.encode(x),
+        }
+    }
+
+    /// Decode the first `lanes` lanes of `reg` at `width` into
+    /// `out[..lanes]` — the whole-plane form: one bit-extraction pass,
+    /// then a single [`Lut8::decode_slice`] table sweep when a LUT is
+    /// attached.
+    #[inline]
+    pub fn decode_plane(&self, reg: &VecReg, width: u32, lanes: usize, out: &mut [f64]) {
+        debug_assert!(lanes <= out.len() && lanes <= VecReg::lanes(width));
+        match self {
+            LaneCodec::Takum { lut: Some(t), .. } | LaneCodec::Mini { lut: Some(t), .. } => {
+                let mut bits = [0u64; 64];
+                reg.lanes_into(width, lanes, &mut bits);
+                t.decode_slice(&bits[..lanes], &mut out[..lanes]);
+            }
+            _ => {
+                for (i, o) in out.iter_mut().enumerate().take(lanes) {
+                    *o = self.decode(reg.get(width, i));
+                }
+            }
+        }
+    }
+
+    /// Encode `values` into the first lanes of a fresh register
+    /// (remaining lanes zero).
+    pub fn encode_plane(&self, width: u32, values: &[f64]) -> VecReg {
+        assert!(values.len() <= VecReg::lanes(width));
+        let mut r = VecReg::ZERO;
+        for (i, v) in values.iter().enumerate() {
+            r.set(width, i, self.encode(*v));
+        }
+        r
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Execution plans
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy)]
+pub enum FmaKind {
+    Madd,
+    Msub,
+    Nmadd,
+    Nmsub,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum FmaOrder {
+    O132,
+    O213,
+    O231,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum FpOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Sqrt,
+    Min,
+    Max,
+    MinMax,
+    Fma(FmaKind, FmaOrder),
+    Rcp,
+    Rsqrt,
+    Exp,
+    Mant,
+    Class,
+    RndScale,
+    Reduce,
+    Scalef,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum ShiftOp {
+    Sll,
+    Srl,
+    Sra,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum IntKind {
+    Add,
+    Sub,
+    MulLo,
+    MinU,
+    MaxU,
+    MinS,
+    MaxS,
+    AbsS,
+    AddSatS,
+    AddSatU,
+    SubSatS,
+    SubSatU,
+    AvgU,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct IntOp {
+    pub kind: IntKind,
+    pub width: u32,
+}
+
+/// Mask-register op kinds (`K…`/`VKUNPCK…` mnemonics).
+#[derive(Debug, Clone, Copy)]
+pub enum MaskOp {
+    Not,
+    Mov,
+    ShiftL,
+    ShiftR,
+    And,
+    Andn,
+    Or,
+    Xor,
+    Xnor,
+    Add,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub enum MaskPlan {
+    /// KUNPCK: concatenate the low `half` bits of two mask registers.
+    Unpack { half: u32 },
+    Op { op: MaskOp, width: u32 },
+}
+
+/// A fully resolved execution plan for one mnemonic. Resolution happens
+/// once per distinct mnemonic per machine ([`crate::sim::Machine`] keeps
+/// a memoized mnemonic → plan cache), so tight GEMM loops stop re-parsing
+/// strings on every instruction.
+#[derive(Debug, Clone, Copy)]
+pub enum LanePlan {
+    Mask(MaskPlan),
+    /// Widening dot product: pairs of `src` lanes fused into one `dst`
+    /// lane, accumulated onto the destination.
+    Dot { src: LaneType, dst: LaneType },
+    /// Legacy two-source `VCVTNE2PS2BF16`.
+    ConvertNe2PsBf16,
+    Convert { src: LaneType, dst: LaneType },
+    Compare { ty: LaneType, packed: bool },
+    Bitwise(fn(u64, u64) -> u64),
+    Broadcast(u32),
+    VecToMask(u32),
+    MaskToVec(u32),
+    Shift(ShiftOp, u32),
+    Int(IntOp),
+    Fp { op: FpOp, ty: LaneType, packed: bool },
+}
+
+impl LanePlan {
+    /// Resolve a mnemonic into its plan. Dispatch order mirrors the
+    /// original per-step parser exactly (mask ops, dot products,
+    /// conversions, compares, bitwise, broadcasts, vector↔mask moves,
+    /// shifts, integer lane ops, floating arithmetic).
+    pub fn resolve(m: &str) -> Result<LanePlan> {
+        if m.starts_with('K') || m.starts_with("VKUNPCK") {
+            return resolve_mask(m).map(LanePlan::Mask);
+        }
+        if let Some(rest) = m.strip_prefix("VDP") {
+            let (src, dst) = match rest {
+                "PT8PT16" => (LaneType::Takum(8), LaneType::Takum(16)),
+                "PT16PT32" => (LaneType::Takum(16), LaneType::Takum(32)),
+                "PT32PT64" => (LaneType::Takum(32), LaneType::Takum(64)),
+                "BF16PS" => (LaneType::Mini(BF16), LaneType::Mini(F32)),
+                "PHPS" => (LaneType::Mini(F16), LaneType::Mini(F32)),
+                _ => bail!("unimplemented dot product VDP{rest}"),
+            };
+            return Ok(LanePlan::Dot { src, dst });
+        }
+        if let Some(rest) = m.strip_prefix("VCVT") {
+            return resolve_convert(rest);
+        }
+        if let Some(suffix) = m.strip_prefix("VCMP") {
+            let (ty, packed) = LaneType::parse_fp(suffix)
+                .ok_or_else(|| anyhow!("bad compare suffix {suffix}"))?;
+            return Ok(LanePlan::Compare { ty, packed });
+        }
+        // Bitwise 512-bit ops (legacy D/Q width suffixes are semantically
+        // identical for lane-wise boolean logic).
+        for (op, f) in [
+            ("VPAND", (|a, b| a & b) as fn(u64, u64) -> u64),
+            ("VPANDN", |a, b| !a & b),
+            ("VPOR", |a, b| a | b),
+            ("VPXOR", |a, b| a ^ b),
+        ] {
+            if m == op
+                || (m.len() == op.len() + 1 && m.starts_with(op) && m.ends_with(['D', 'Q']))
+            {
+                return Ok(LanePlan::Bitwise(f));
+            }
+        }
+        // Broadcasts (proposed B04-11 naming: VBROADCASTB{8..256}).
+        if let Some(w) = m.strip_prefix("VBROADCASTB").and_then(|s| s.parse::<u32>().ok()) {
+            return Ok(LanePlan::Broadcast(w));
+        }
+        // Vector↔mask moves (proposed + legacy spellings).
+        if let Some(rest) = m.strip_prefix("VPMOV") {
+            if let Some(w) = rest.strip_suffix("2M").and_then(parse_b_width) {
+                return Ok(LanePlan::VecToMask(w));
+            }
+            if let Some(w) = rest.strip_prefix("M2").and_then(parse_b_width) {
+                return Ok(LanePlan::MaskToVec(w));
+            }
+        }
+        if let Some((op, w)) = parse_shift(m) {
+            return Ok(LanePlan::Shift(op, w));
+        }
+        if let Some(parsed) = parse_int_op(m) {
+            return Ok(LanePlan::Int(parsed));
+        }
+        if let Some((op, ty, packed)) = parse_fp_arith(m) {
+            return Ok(LanePlan::Fp { op, ty, packed });
+        }
+        bail!("unimplemented mnemonic {m}")
+    }
+}
+
+fn resolve_mask(m: &str) -> Result<MaskPlan> {
+    // KUNPCK: concatenate the low halves (KUNPCKBW dst = a[7:0]:b[7:0];
+    // proposed VKUNPCKB8B16 is the same op with explicit widths).
+    if let Some(rest) = m.strip_prefix("KUNPCK").or(m.strip_prefix("VKUNPCKB")) {
+        let half: u32 = match rest {
+            "BW" | "8B16" => 8,
+            "WD" | "16B32" => 16,
+            "DQ" | "32B64" => 32,
+            _ => bail!("bad KUNPCK form {m}"),
+        };
+        return Ok(MaskPlan::Unpack { half });
+    }
+    // Strip the width suffix: proposed B8/B16/B32/B64 or legacy B/W/D/Q.
+    let (op, width) = split_mask_suffix(m)?;
+    let op = match op {
+        "KNOT" => MaskOp::Not,
+        "KMOV" => MaskOp::Mov,
+        "KSHIFTL" => MaskOp::ShiftL,
+        "KSHIFTR" => MaskOp::ShiftR,
+        "KAND" => MaskOp::And,
+        "KANDN" => MaskOp::Andn,
+        "KOR" => MaskOp::Or,
+        "KXOR" => MaskOp::Xor,
+        "KXNOR" => MaskOp::Xnor,
+        "KADD" => MaskOp::Add,
+        _ => bail!("unimplemented mask op {op}"),
+    };
+    Ok(MaskPlan::Op { op, width })
+}
+
+fn resolve_convert(rest: &str) -> Result<LanePlan> {
+    // Legacy two-source bf16 convert: VCVTNE2PS2BF16 packs two PS regs.
+    if rest == "NE2PS2BF16" {
+        return Ok(LanePlan::ConvertNe2PsBf16);
+    }
+    // Normalise legacy spellings: VCVTNEPS2BF16 → PS2BF16 parse.
+    let rest = rest.strip_prefix("NE").unwrap_or(rest);
+    let parse_any = |s: &str| -> Option<(LaneType, bool)> {
+        if let Some(t) = LaneType::parse_fp(s) {
+            return Some(t);
+        }
+        // Integer lane suffixes of the proposed matrix: PS8/PU32/…
+        let t = |n: &str| n.parse::<u32>().ok().filter(|n| [8u32, 16, 32, 64].contains(n));
+        if let Some(n) = s.strip_prefix("PS").and_then(t) {
+            return Some((LaneType::SInt(n), true));
+        }
+        if let Some(n) = s.strip_prefix("PU").and_then(t) {
+            return Some((LaneType::UInt(n), true));
+        }
+        // Legacy spellings used by the baseline programs.
+        match s {
+            "BF16" => Some((LaneType::Mini(BF16), true)),
+            "HF8" => Some((LaneType::Mini(E4M3), true)),
+            "BF8" => Some((LaneType::Mini(E5M2), true)),
+            _ => None,
+        }
+    };
+    // The '2' separator is ambiguous when widths contain a 2
+    // (VCVTPT322PS32): try every split position until both sides parse.
+    for (pos, _) in rest.match_indices('2') {
+        if let (Some((src, _)), Some((dst, _))) =
+            (parse_any(&rest[..pos]), parse_any(&rest[pos + 1..]))
+        {
+            return Ok(LanePlan::Convert { src, dst });
+        }
+    }
+    bail!("bad convert VCVT{rest}")
+}
+
+fn parse_shift(m: &str) -> Option<(ShiftOp, u32)> {
+    for (pre, op) in [("VPSLL", ShiftOp::Sll), ("VPSRL", ShiftOp::Srl), ("VPSRA", ShiftOp::Sra)] {
+        if let Some(rest) = m.strip_prefix(pre) {
+            // proposed: B{8..64}; legacy: W/D/Q.
+            if let Some(w) = rest.strip_prefix('B').and_then(|s| s.parse::<u32>().ok()) {
+                if [8, 16, 32, 64].contains(&w) {
+                    return Some((op, w));
+                }
+            }
+            let w = match rest {
+                "W" => 16,
+                "D" => 32,
+                "Q" => 64,
+                _ => return None,
+            };
+            return Some((op, w));
+        }
+    }
+    None
+}
+
+fn parse_b_width(s: &str) -> Option<u32> {
+    // "B8".."B64" (proposed) or single legacy letter.
+    if let Some(w) = s.strip_prefix('B').and_then(|r| r.parse::<u32>().ok()) {
+        if [8, 16, 32, 64].contains(&w) {
+            return Some(w);
+        }
+        return None;
+    }
+    match s {
+        "B" => Some(8),
+        "W" => Some(16),
+        "D" => Some(32),
+        "Q" => Some(64),
+        _ => None,
+    }
+}
+
+fn parse_fp_arith(m: &str) -> Option<(FpOp, LaneType, bool)> {
+    // FMA family first (longest prefixes).
+    for (name, kind) in [
+        ("VFMADD", FmaKind::Madd),
+        ("VFMSUB", FmaKind::Msub),
+        ("VFNMADD", FmaKind::Nmadd),
+        ("VFNMSUB", FmaKind::Nmsub),
+    ] {
+        if let Some(rest) = m.strip_prefix(name) {
+            for (o, order) in
+                [("132", FmaOrder::O132), ("213", FmaOrder::O213), ("231", FmaOrder::O231)]
+            {
+                if let Some(suffix) = rest.strip_prefix(o) {
+                    if let Some((ty, packed)) = LaneType::parse_fp(suffix) {
+                        return Some((FpOp::Fma(kind, order), ty, packed));
+                    }
+                }
+            }
+        }
+    }
+    let table: [(&str, FpOp); 16] = [
+        ("VADD", FpOp::Add),
+        ("VSUB", FpOp::Sub),
+        ("VMULTISHIFT", FpOp::Add), // guard: never matches an fp suffix
+        ("VMUL", FpOp::Mul),
+        ("VDIV", FpOp::Div),
+        ("VSQRT", FpOp::Sqrt),
+        ("VMINMAX", FpOp::MinMax),
+        ("VMIN", FpOp::Min),
+        ("VMAX", FpOp::Max),
+        ("VRCP", FpOp::Rcp),
+        ("VRSQRT", FpOp::Rsqrt),
+        ("VEXP", FpOp::Exp),
+        ("VMANT", FpOp::Mant),
+        ("VCLASS", FpOp::Class),
+        ("VRNDSCALE", FpOp::RndScale),
+        ("VSCALEF", FpOp::Scalef),
+    ];
+    for (prefix, op) in table {
+        if let Some(suffix) = m.strip_prefix(prefix) {
+            if let Some((ty, packed)) = LaneType::parse_fp(suffix) {
+                return Some((op, ty, packed));
+            }
+        }
+    }
+    if let Some(suffix) = m.strip_prefix("VREDUCE") {
+        if let Some((ty, packed)) = LaneType::parse_fp(suffix) {
+            return Some((FpOp::Reduce, ty, packed));
+        }
+    }
+    None
+}
+
+/// Parse integer lane ops, both proposed (`VPADDU8`, `VPMAXS32`,
+/// `VPMULLU16`, `VPABSS64`) and legacy (`VPADDB`, `VPMAXSD`) spellings.
+fn parse_int_op(m: &str) -> Option<IntOp> {
+    let rest = m.strip_prefix("VP")?;
+    let num_width = |s: &str| -> Option<u32> {
+        s.parse::<u32>().ok().filter(|n| [8u32, 16, 32, 64].contains(n))
+    };
+    let legacy_width = |s: &str| -> Option<u32> {
+        match s {
+            "B" => Some(8),
+            "W" => Some(16),
+            "D" => Some(32),
+            "Q" => Some(64),
+            _ => None,
+        }
+    };
+    // Ordered longest-prefix-first so ADDSS/ADDUS win over ADDU/ADD.
+    let specs: [(&str, IntKind); 18] = [
+        ("ADDSS", IntKind::AddSatS),
+        ("ADDUS", IntKind::AddSatU),
+        ("ADDS", IntKind::AddSatS), // legacy VPADDSB/W
+        ("ADDU", IntKind::Add),
+        ("ADD", IntKind::Add),
+        ("SUBSS", IntKind::SubSatS),
+        ("SUBUS", IntKind::SubSatU),
+        ("SUBS", IntKind::SubSatS), // legacy VPSUBSB/W
+        ("SUBU", IntKind::Sub),
+        ("SUB", IntKind::Sub),
+        ("AVGU", IntKind::AvgU),
+        ("AVG", IntKind::AvgU), // legacy VPAVGB/W
+        ("MULLU", IntKind::MulLo),
+        ("MULL", IntKind::MulLo),
+        ("MINU", IntKind::MinU),
+        ("MAXU", IntKind::MaxU),
+        ("MINS", IntKind::MinS),
+        ("MAXS", IntKind::MaxS),
+    ];
+    for (name, kind) in specs {
+        if let Some(w) = rest.strip_prefix(name) {
+            if let Some(width) = num_width(w).or_else(|| legacy_width(w)) {
+                return Some(IntOp { kind, width });
+            }
+        }
+    }
+    if let Some(w) = rest.strip_prefix("ABSS").and_then(num_width) {
+        return Some(IntOp { kind: IntKind::AbsS, width: w });
+    }
+    if let Some(w) = rest.strip_prefix("ABS").and_then(legacy_width) {
+        return Some(IntOp { kind: IntKind::AbsS, width: w });
+    }
+    None
+}
+
+/// Split a mask mnemonic into (op, lane-count-width).
+fn split_mask_suffix(m: &str) -> Result<(&str, u32)> {
+    // Proposed: …B8/B16/B32/B64.
+    for (suf, w) in [("B8", 8u32), ("B16", 16), ("B32", 32), ("B64", 64)] {
+        if let Some(op) = m.strip_suffix(suf) {
+            return Ok((op, w));
+        }
+    }
+    // Legacy: …B/W/D/Q.
+    for (suf, w) in [("B", 8u32), ("W", 16), ("D", 32), ("Q", 64)] {
+        if let Some(op) = m.strip_suffix(suf) {
+            return Ok((op, w));
+        }
+    }
+    bail!("bad mask mnemonic {m}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Every 8/16-bit lane format the simulator exposes, by the paper's
+    /// suffix names.
+    fn lut_lane_types() -> Vec<(&'static str, LaneType)> {
+        vec![
+            ("PT8", LaneType::Takum(8)),
+            ("PT16", LaneType::Takum(16)),
+            ("BF8", LaneType::Mini(E5M2)),
+            ("HF8", LaneType::Mini(E4M3)),
+            ("BF8S", LaneType::MiniSat(E5M2)),
+            ("HF8S", LaneType::MiniSat(E4M3)),
+            ("PBF16", LaneType::Mini(BF16)),
+            ("PH", LaneType::Mini(F16)),
+        ]
+    }
+
+    #[test]
+    fn lut_codecs_resolve_for_all_narrow_formats() {
+        for (name, ty) in lut_lane_types() {
+            match LaneCodec::resolve(ty, CodecMode::Lut) {
+                LaneCodec::Takum { lut, .. } | LaneCodec::Mini { lut, .. } => {
+                    assert!(lut.is_some(), "{name}: no LUT attached");
+                }
+                LaneCodec::Int(_) => panic!("{name}: resolved to int codec"),
+            }
+            match LaneCodec::resolve(ty, CodecMode::Arith) {
+                LaneCodec::Takum { lut, .. } | LaneCodec::Mini { lut, .. } => {
+                    assert!(lut.is_none(), "{name}: Arith mode must not attach a LUT");
+                }
+                LaneCodec::Int(_) => panic!("{name}"),
+            }
+        }
+        // 32/64-bit formats never get a table, in either mode.
+        for ty in [LaneType::Takum(32), LaneType::Takum(64), LaneType::Mini(F32)] {
+            match LaneCodec::resolve(ty, CodecMode::Lut) {
+                LaneCodec::Takum { lut, .. } | LaneCodec::Mini { lut, .. } => {
+                    assert!(lut.is_none());
+                }
+                LaneCodec::Int(_) => panic!(),
+            }
+        }
+    }
+
+    /// The tentpole property test: for PT8/PT16/BF8/HF8/PBF16/PH (and the
+    /// saturating OFP8 variants) the LUT path must be **bit-identical** to
+    /// the arithmetic codec on decode of every pattern and on encode of a
+    /// wide input distribution including specials and boundary probes.
+    #[test]
+    fn lut_path_bit_identical_to_arithmetic_codec() {
+        let mut r = Rng::new(0x1A7E);
+        for (name, ty) in lut_lane_types() {
+            let fast = LaneCodec::resolve(ty, CodecMode::Lut);
+            let slow = LaneCodec::resolve(ty, CodecMode::Arith);
+            let w = ty.width();
+
+            // Decode: exhaustive over every bit pattern.
+            for bits in 0..(1u64 << w) {
+                let (a, b) = (fast.decode(bits), slow.decode(bits));
+                assert!(
+                    a == b || (a.is_nan() && b.is_nan()),
+                    "{name} decode bits={bits:#x}: lut={a} codec={b}"
+                );
+                // sign of zero must survive the table
+                if b == 0.0 {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{name} zero sign bits={bits:#x}");
+                }
+            }
+
+            // Encode: exhaustive re-encode of every representable value…
+            for bits in 0..(1u64 << w) {
+                let v = slow.decode(bits);
+                if v.is_nan() {
+                    continue;
+                }
+                assert_eq!(fast.encode(v), slow.encode(v), "{name} re-encode bits={bits:#x}");
+            }
+            // …specials…
+            for x in [
+                0.0,
+                -0.0,
+                f64::NAN,
+                f64::INFINITY,
+                f64::NEG_INFINITY,
+                f64::MIN_POSITIVE,
+                -f64::MIN_POSITIVE,
+                1e300,
+                -1e300,
+                1e-300,
+                -1e-300,
+            ] {
+                assert_eq!(fast.encode(x), slow.encode(x), "{name} special x={x}");
+            }
+            // …and random wide-range values with midpoint probes. Case
+            // count honours TAKUM_PROPTEST_CASES (×16: this is the
+            // heaviest property loop; CI dials it down).
+            let cases = crate::util::proptest::default_cases() * 16;
+            for _ in 0..cases {
+                let x = r.wide_f64(-60, 60);
+                assert_eq!(fast.encode(x), slow.encode(x), "{name} x={x}");
+                let rt = slow.decode(slow.encode(x));
+                if rt.is_finite() && rt != 0.0 {
+                    // probe just around the representable value
+                    for eps in [0.999_999_9, 1.000_000_1] {
+                        let p = rt * eps;
+                        assert_eq!(fast.encode(p), slow.encode(p), "{name} probe p={p}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn plan_cacheability_and_errors() {
+        // Every mnemonic family resolves; unknown ones keep the
+        // "unimplemented" marker the ISA integration test greps for.
+        for m in [
+            "VADDPT16", "VSQRTST32", "VFMADD231PT32", "VDPPT8PT16", "VCVTPT162PS16",
+            "VCMPPT16", "VPXORQ", "VBROADCASTB16", "VPMOVB162M", "VPMOVM2B16", "VPSLLB16",
+            "VPADDU8", "KANDB8", "KUNPCKBW", "VKUNPCKB8B16", "VADDNEPBF16", "VCVTNE2PS2BF16",
+            "VRNDSCALEPT32", "VCLASSPT32",
+        ] {
+            LanePlan::resolve(m).unwrap_or_else(|e| panic!("{m}: {e}"));
+        }
+        for m in ["VFROBNICATE", "VFIXUPIMMPT16", "VRANGEPT8"] {
+            let e = LanePlan::resolve(m).unwrap_err();
+            assert!(e.to_string().contains("unimplemented"), "{m}: {e}");
+        }
+    }
+
+    #[test]
+    fn integer_lane_encode_rounds_to_nearest_even() {
+        // VCVT…2DQ semantics: round-to-nearest-even before the clamp, not
+        // truncation (regression test for the former `as u64` truncation).
+        let s16 = LaneType::SInt(16);
+        assert_eq!(s16.encode(2.5), 2);
+        assert_eq!(s16.encode(3.5), 4);
+        assert_eq!(s16.encode(-2.5) as i64 as i16, -2);
+        assert_eq!(s16.encode(-0.7) as i16, -1);
+        assert_eq!(s16.encode(0.5), 0);
+        assert_eq!(s16.encode(1.5), 2);
+        let u8t = LaneType::UInt(8);
+        assert_eq!(u8t.encode(2.5), 2);
+        assert_eq!(u8t.encode(3.5), 4);
+        assert_eq!(u8t.encode(254.7), 255);
+        assert_eq!(u8t.encode(255.5), 255); // clamps after rounding
+        assert_eq!(u8t.encode(-0.4), 0);
+        // saturation unchanged
+        assert_eq!(s16.encode(1e9), 0x7FFF);
+        assert_eq!(s16.encode(-1e9), 0x8000);
+    }
+
+    #[test]
+    fn encode_plane_matches_scalar() {
+        let ty = LaneType::Takum(16);
+        let codec = LaneCodec::resolve(ty, CodecMode::Lut);
+        let vals: Vec<f64> = (0..32).map(|i| (i as f64 - 16.0) * 0.75).collect();
+        let reg = codec.encode_plane(16, &vals);
+        let mut out = [0.0f64; 64];
+        codec.decode_plane(&reg, 16, 32, &mut out);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(out[i], ty.decode(ty.encode(v)), "lane {i}");
+        }
+    }
+}

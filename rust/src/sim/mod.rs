@@ -1,13 +1,20 @@
 //! Executable SIMD simulator for the proposed takum ISA and an AVX10.2
 //! baseline subset (OFP8/BF16), with 512-bit vector registers, mask
 //! registers, an assembler and an execution engine.
+//!
+//! Execution is plan-driven: [`lanes`] resolves each mnemonic once into a
+//! [`LanePlan`] (memoized per [`Machine`]) and routes all 8/16-bit lane
+//! decode/encode traffic through the cached LUTs of [`crate::num::lut`] —
+//! bit-identical to the arithmetic codecs, selectable via [`CodecMode`].
 
 pub mod register;
 pub mod program;
+pub mod lanes;
 pub mod exec;
 pub mod assemble;
 
 pub use assemble::assemble;
-pub use exec::{LaneType, Machine};
+pub use exec::Machine;
+pub use lanes::{CodecMode, LaneCodec, LanePlan, LaneType};
 pub use program::{Instruction, Operand, Program};
 pub use register::{MaskReg, VecReg, VLEN_BITS};

@@ -54,6 +54,16 @@ impl VecReg {
         (0..Self::lanes(width)).map(|i| self.get(width, i)).collect()
     }
 
+    /// Copy the first `n` lanes at `width` into `out[..n]` — the
+    /// allocation-free form used by the lane engine's plane decode.
+    #[inline]
+    pub fn lanes_into(&self, width: u32, n: usize, out: &mut [u64]) {
+        debug_assert!(n <= Self::lanes(width) && n <= out.len());
+        for (i, o) in out.iter_mut().enumerate().take(n) {
+            *o = self.get(width, i);
+        }
+    }
+
     /// Build from lane values (missing lanes zero).
     pub fn from_lanes(width: u32, vals: &[u64]) -> VecReg {
         assert!(vals.len() <= Self::lanes(width));
@@ -111,6 +121,22 @@ mod tests {
                 assert_eq!(r.get(width, i), want, "w={width} i={i}");
             }
         }
+    }
+
+    #[test]
+    fn lanes_into_matches_lanes_vec() {
+        let mut r = VecReg::ZERO;
+        for i in 0..VecReg::lanes(16) {
+            r.set(16, i, (i as u64 * 0x1234) & 0xFFFF);
+        }
+        let mut buf = [0u64; 64];
+        r.lanes_into(16, 32, &mut buf);
+        assert_eq!(&buf[..32], r.lanes_vec(16).as_slice());
+        // Partial copy leaves the tail untouched.
+        let mut buf = [u64::MAX; 64];
+        r.lanes_into(16, 4, &mut buf);
+        assert_eq!(&buf[..4], &r.lanes_vec(16)[..4]);
+        assert_eq!(buf[4], u64::MAX);
     }
 
     #[test]

@@ -1,9 +1,9 @@
 //! Integration over the simulator: assembled programs, GEMM pipelines and
 //! cross-checks against the numeric library.
 
-use takum_avx10::harness::gemm::{gemm, gemm_scaled};
+use takum_avx10::harness::gemm::{gemm, gemm_scaled, gemm_with_mode};
 use takum_avx10::num::takum_linear;
-use takum_avx10::sim::{assemble, LaneType, Machine};
+use takum_avx10::sim::{assemble, CodecMode, LaneType, Machine};
 use takum_avx10::util::rng::Rng;
 
 #[test]
@@ -89,6 +89,47 @@ fn simulator_quantisation_matches_library_roundtrip() {
         for (i, (&x, &y)) in vals.iter().zip(&back).enumerate() {
             assert_eq!(y, f.roundtrip(x), "n={n} lane={i}");
         }
+    }
+}
+
+#[test]
+fn lane_engine_program_equivalence_via_public_api() {
+    // The same assembled program, run on a LUT-mode and an arithmetic-mode
+    // machine, must leave bit-identical register state — the public-API
+    // form of the lane-engine equivalence gate.
+    let prog = assemble(
+        "
+        VMULPT16  v2, v0, v1
+        VADDPT16  v3, v2, v0
+        VCMPPT16  k1, v3, v2, 6
+        VADDPT16  v4{k1}{z}, v3, v1
+        VCVTPT162PS16 v5, v3
+        ",
+    )
+    .unwrap();
+    let mut rng = Rng::new(0x1A7E5);
+    let t = LaneType::Takum(16);
+    let vals_a: Vec<f64> = (0..32).map(|_| rng.wide_f64(-30, 30)).collect();
+    let vals_b: Vec<f64> = (0..32).map(|_| rng.wide_f64(-30, 30)).collect();
+    let mut fast = Machine::with_mode(CodecMode::Lut);
+    let mut slow = Machine::with_mode(CodecMode::Arith);
+    for m in [&mut fast, &mut slow] {
+        m.load_f64(0, t, &vals_a);
+        m.load_f64(1, t, &vals_b);
+        m.run(&prog).unwrap();
+    }
+    for r in 0..6 {
+        assert_eq!(fast.regs.v[r], slow.regs.v[r], "v{r}");
+    }
+    assert_eq!(fast.get_mask(1), slow.get_mask(1));
+    assert_eq!(fast.executed, slow.executed);
+
+    // End-to-end GEMM: identical error and instruction stream.
+    for f in ["t8", "bf16"] {
+        let a = gemm_with_mode(16, f, 4, 1.0, CodecMode::Lut).unwrap();
+        let b = gemm_with_mode(16, f, 4, 1.0, CodecMode::Arith).unwrap();
+        assert_eq!(a.rel_error.to_bits(), b.rel_error.to_bits(), "{f}");
+        assert_eq!(a.executed, b.executed, "{f}");
     }
 }
 
