@@ -1,0 +1,61 @@
+//! Kernel-suite bench: per-kernel, per-format simulator throughput on
+//! both ISAs, the LUT-vs-arithmetic lane-engine ratio on the heaviest
+//! kernel, and the parallel-sweep scaling of the coordinator.
+
+use takum_avx10::coordinator::{kernel_sweep, KernelSweepConfig};
+use takum_avx10::kernels::{Kernel, KernelSpec, Pipeline};
+use takum_avx10::sim::CodecMode;
+use takum_avx10::util::bench::Bencher;
+
+fn main() {
+    let mut b = Bencher::new();
+    let n = 128usize;
+
+    // Warm the LUTs outside the measured region.
+    takum_avx10::num::lut::warm();
+
+    for kernel in Kernel::ALL {
+        b.group(&format!("kernel {} (n={n}, instruction-accurate)", kernel.name()));
+        for format in Pipeline::ALL_FORMATS {
+            let spec = KernelSpec { kernel, format, n, seed: 1 };
+            let r = spec.run(CodecMode::default()).unwrap();
+            println!(
+                "  {format:<6} rel.err={:.3e}  instructions={} (dp={}, cvt={})",
+                r.rel_error, r.executed, r.dp_instructions, r.convert_instructions
+            );
+            b.bench_with_elements(&format!("{} {format}", kernel.name()), n as u64, || {
+                spec.run(CodecMode::default()).unwrap()
+            });
+        }
+    }
+
+    b.group(&format!("softmax lane engine: LUT vs per-lane arithmetic (n={n})"));
+    let mut ratios: Vec<(&str, f64)> = Vec::new();
+    for format in ["t8", "t16", "bf16", "e4m3"] {
+        let spec = KernelSpec { kernel: Kernel::Softmax, format, n, seed: 1 };
+        let fast = b
+            .bench_with_elements(&format!("softmax {format} [lut]"), n as u64, || {
+                spec.run(CodecMode::Lut).unwrap()
+            })
+            .median_ns;
+        let slow = b
+            .bench_with_elements(&format!("softmax {format} [arith]"), n as u64, || {
+                spec.run(CodecMode::Arith).unwrap()
+            })
+            .median_ns;
+        ratios.push((format, slow / fast));
+    }
+    println!("\n-- softmax speedup (arith / lut) --");
+    for (f, ratio) in &ratios {
+        println!("softmax {f:<6} {ratio:>6.2}x");
+    }
+
+    b.group("parallel kernel sweep (full suite, sizes 64+128)");
+    for workers in [1usize, 2, 4] {
+        let cfg = KernelSweepConfig { workers, ..Default::default() };
+        let tasks = cfg.kernels.len() * cfg.formats.len() * cfg.sizes.len();
+        b.bench_with_elements(&format!("sweep workers={workers}"), tasks as u64, || {
+            kernel_sweep(&cfg).unwrap()
+        });
+    }
+}

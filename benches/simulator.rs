@@ -95,7 +95,11 @@ fn main() {
     for (mn, ty, wide) in [
         ("VDPPT8PT16", LaneType::Takum(8), LaneType::Takum(16)),
         ("VDPPT16PT32", LaneType::Takum(16), LaneType::Takum(32)),
-        ("VDPBF16PS", LaneType::Mini(takum_avx10::num::BF16), LaneType::Mini(takum_avx10::num::F32)),
+        (
+            "VDPBF16PS",
+            LaneType::Mini(takum_avx10::num::BF16),
+            LaneType::Mini(takum_avx10::num::F32),
+        ),
     ] {
         let lanes = VecReg::lanes(ty.width());
         let vals: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-4, 4)).collect();
@@ -130,7 +134,8 @@ fn main() {
     m.load_f64(0, t, &vals);
     m.load_f64(1, t, &vals);
     m.set_mask(1, 0x5555_5555);
-    let plain = Instruction::new("VADDPT16", Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]);
+    let plain =
+        Instruction::new("VADDPT16", Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]);
     let masked = plain.clone().with_mask(1, true);
     b.bench_with_elements("VADDPT16 unmasked", lanes as u64, || m.step(&plain).unwrap());
     b.bench_with_elements("VADDPT16 {k1}{z}", lanes as u64, || m.step(&masked).unwrap());

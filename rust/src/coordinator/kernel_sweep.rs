@@ -1,0 +1,222 @@
+//! Parallel kernel-suite sweep: kernels × formats × sizes fanned out
+//! across a worker pool, in the style of the Figure 2 sweep
+//! ([`super::sweep`]).
+//!
+//! Work distribution: the cross-product task list is materialised up
+//! front; an atomic index counter hands out task indices; each worker
+//! runs its [`crate::kernels::KernelSpec`] (every task regenerates its
+//! inputs from the spec seed, so nothing crosses a thread boundary) and
+//! streams `(index, result)` records to the merger through a bounded
+//! channel. The merger slots results back by index, so the output order —
+//! and every number in it — is **independent of the worker count**: each
+//! task is a pure function of its spec.
+
+use crate::kernels::{Kernel, KernelResult, KernelSpec, Pipeline};
+use crate::sim::CodecMode;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Sweep configuration: the cross product of kernels × formats × sizes.
+#[derive(Debug, Clone)]
+pub struct KernelSweepConfig {
+    pub kernels: Vec<Kernel>,
+    pub formats: Vec<&'static str>,
+    pub sizes: Vec<usize>,
+    pub seed: u64,
+    pub workers: usize,
+    pub mode: CodecMode,
+}
+
+impl Default for KernelSweepConfig {
+    fn default() -> Self {
+        KernelSweepConfig {
+            kernels: Kernel::ALL.to_vec(),
+            formats: Pipeline::ALL_FORMATS.to_vec(),
+            sizes: vec![64, 128],
+            seed: 0xBEEF,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            mode: CodecMode::default(),
+        }
+    }
+}
+
+/// Throughput + load-balance metrics of one kernel sweep.
+#[derive(Debug, Clone, Default)]
+pub struct KernelSweepMetrics {
+    pub tasks: usize,
+    pub instructions: u64,
+    pub wall: Duration,
+    /// Tasks completed per worker (load-balance check).
+    pub per_worker: Vec<usize>,
+}
+
+impl KernelSweepMetrics {
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "kernel sweep: {} tasks, {} simulated instructions in {:.2?}\n",
+            self.tasks, self.instructions, self.wall
+        );
+        if !self.per_worker.is_empty() {
+            let min = self.per_worker.iter().min().unwrap();
+            let max = self.per_worker.iter().max().unwrap();
+            s.push_str(&format!(
+                "workers: {} (per-worker tasks min {min} / max {max})\n",
+                self.per_worker.len()
+            ));
+        }
+        s
+    }
+}
+
+/// Run the sweep. Results come back in task order (kernel-major, then
+/// format, then size), deterministically for a given config.
+pub fn kernel_sweep(cfg: &KernelSweepConfig) -> Result<(Vec<KernelResult>, KernelSweepMetrics)> {
+    let specs: Vec<KernelSpec> = cfg
+        .kernels
+        .iter()
+        .flat_map(|&kernel| {
+            cfg.formats.iter().flat_map(move |&format| {
+                cfg.sizes
+                    .iter()
+                    .map(move |&n| KernelSpec { kernel, format, n, seed: cfg.seed })
+            })
+        })
+        .collect();
+    anyhow::ensure!(!specs.is_empty(), "empty kernel sweep (no kernels/formats/sizes)");
+
+    // The workers' hot path routes all 8/16-bit lane traffic through the
+    // process-wide LUTs; warm them here so N workers don't all block on
+    // the first OnceLock initialisation.
+    if cfg.mode == CodecMode::Lut {
+        crate::num::lut::warm();
+    }
+
+    let start = Instant::now();
+    let next = AtomicUsize::new(0);
+    let workers = cfg.workers.max(1);
+    // Bounded fan-in, same backpressure policy as the Figure 2 sweep.
+    let (tx, rx) = mpsc::sync_channel::<(usize, Result<KernelResult>)>(1024);
+
+    let mut slots: Vec<Option<KernelResult>> = (0..specs.len()).map(|_| None).collect();
+    let mut per_worker = vec![0usize; workers];
+    let mut first_err: Option<anyhow::Error> = None;
+
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let next = &next;
+            let specs = &specs;
+            let mode = cfg.mode;
+            handles.push(s.spawn(move || {
+                let mut local = 0usize;
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= specs.len() {
+                        break;
+                    }
+                    if tx.send((i, specs[i].run(mode))).is_err() {
+                        return local;
+                    }
+                    local += 1;
+                }
+                local
+            }));
+        }
+        drop(tx);
+
+        while let Ok((i, res)) = rx.recv() {
+            match res {
+                Ok(r) => slots[i] = Some(r),
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+            }
+        }
+        for (w, h) in handles.into_iter().enumerate() {
+            per_worker[w] = h.join().expect("kernel sweep worker panicked");
+        }
+    });
+
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let results: Vec<KernelResult> =
+        slots.into_iter().map(|s| s.expect("missing sweep slot")).collect();
+    let metrics = KernelSweepMetrics {
+        tasks: results.len(),
+        instructions: results.iter().map(|r| r.executed).sum(),
+        wall: start.elapsed(),
+        per_worker,
+    };
+    Ok((results, metrics))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(workers: usize) -> KernelSweepConfig {
+        KernelSweepConfig {
+            kernels: vec![Kernel::Dot, Kernel::Softmax, Kernel::Reduce],
+            formats: vec!["t8", "t16", "bf16", "e4m3"],
+            sizes: vec![64],
+            seed: 0x5EED,
+            workers,
+            mode: CodecMode::default(),
+        }
+    }
+
+    #[test]
+    fn deterministic_across_worker_counts() {
+        let (one, m1) = kernel_sweep(&small_cfg(1)).unwrap();
+        let (four, m4) = kernel_sweep(&small_cfg(4)).unwrap();
+        assert_eq!(one.len(), 12);
+        assert_eq!(one.len(), four.len());
+        for (a, b) in one.iter().zip(&four) {
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.format, b.format);
+            assert_eq!(a.n, b.n);
+            assert_eq!(a.rel_error.to_bits(), b.rel_error.to_bits(), "{}/{}", a.kernel, a.format);
+            assert_eq!(a.executed, b.executed, "{}/{}", a.kernel, a.format);
+            assert_eq!(a.counts, b.counts, "{}/{}", a.kernel, a.format);
+        }
+        assert_eq!(m1.tasks, 12);
+        assert_eq!(m1.instructions, m4.instructions);
+        assert_eq!(m1.per_worker.iter().sum::<usize>(), 12);
+        assert_eq!(m4.per_worker.iter().sum::<usize>(), 12);
+    }
+
+    #[test]
+    fn matches_sequential_suite() {
+        let cfg = KernelSweepConfig {
+            kernels: Kernel::ALL.to_vec(),
+            formats: Pipeline::ALL_FORMATS.to_vec(),
+            sizes: vec![64],
+            seed: 11,
+            workers: 3,
+            mode: CodecMode::default(),
+        };
+        let (par, _) = kernel_sweep(&cfg).unwrap();
+        let seq = crate::kernels::run_suite(64, 11, CodecMode::default()).unwrap();
+        assert_eq!(par.len(), seq.len());
+        for (a, b) in par.iter().zip(&seq) {
+            assert_eq!(a.kernel, b.kernel);
+            assert_eq!(a.format, b.format);
+            assert_eq!(a.rel_error.to_bits(), b.rel_error.to_bits(), "{}/{}", a.kernel, a.format);
+            assert_eq!(a.executed, b.executed);
+        }
+    }
+
+    #[test]
+    fn bad_size_propagates_error() {
+        let cfg = KernelSweepConfig { sizes: vec![63], workers: 2, ..Default::default() };
+        assert!(kernel_sweep(&cfg).is_err());
+        let empty = KernelSweepConfig { sizes: vec![], ..Default::default() };
+        assert!(kernel_sweep(&empty).is_err());
+    }
+}

@@ -1,15 +1,19 @@
 //! The L3 coordinator: drives the 1,401-matrix conversion sweep across a
 //! worker pool with bounded work queues, merges per-format error
 //! distributions, and (optionally) routes the takum round-trips through
-//! the AOT-compiled PJRT kernels instead of the native codecs.
+//! the AOT-compiled PJRT kernels instead of the native codecs. The same
+//! pool architecture fans the kernel suite (kernels × formats × sizes)
+//! out in [`kernel_sweep`].
 //!
 //! The offline image carries no `tokio`, so the pool is built on scoped
 //! std threads and `mpsc` channels — same architecture (leader distributes
 //! index ranges, workers stream results back, a merger folds them) without
 //! the async runtime.
 
+pub mod kernel_sweep;
 pub mod metrics;
 pub mod sweep;
 
+pub use kernel_sweep::{kernel_sweep, KernelSweepConfig, KernelSweepMetrics};
 pub use metrics::SweepMetrics;
 pub use sweep::{sweep, Engine, SweepConfig};

@@ -69,13 +69,19 @@ pub fn sweep(cfg: &SweepConfig, pjrt: Option<&PjrtHandle>) -> Result<(PanelResul
         anyhow::ensure!(pjrt.is_some(), "PJRT engine requested but no service handle given");
     }
 
-    // Build the shared 8-bit LUT codecs once, before the fan-out: the
-    // workers' hot path (`relative_error` → `lut::cached`) shares the
+    // Build the shared LUT codecs once, before the fan-out: the workers'
+    // hot path (`relative_error` → `lut::cached`/`cached16`) shares the
     // simulator lane engine's process-wide tables, and warming them here
-    // keeps N workers from all blocking on the first OnceLock init. (The
-    // 16-bit tables stay lazy — the sweep round-trip deliberately does
-    // not use them; see the §Perf note on `lut::cached`.)
-    crate::num::lut::warm8();
+    // keeps N workers from all blocking on the first OnceLock init. The
+    // 16-bit panel round-trips through the branch-free boundary search
+    // (`Lut8::roundtrip_branchless`) since the PR-1 follow-up, so its
+    // tables are warmed too; the 32-bit panel stays on the arithmetic
+    // codecs.
+    if cfg.bits == 16 {
+        crate::num::lut::warm();
+    } else {
+        crate::num::lut::warm8();
+    }
 
     let start = Instant::now();
     let next = AtomicUsize::new(0);

@@ -158,7 +158,11 @@ pub fn render_ascii_plot(p: &PanelResult, width: usize, height: usize) -> String
     let mut out = String::new();
     out.push_str(&format!(
         "CDF (x: rel. 2-norm error 1e-6 → ~3, log scale; y: fraction of matrices)  [{}]\n",
-        p.curves.iter().map(|c| format!("{}={}", mark_of(&c.format) as char, c.format)).collect::<Vec<_>>().join(", ")
+        p.curves
+            .iter()
+            .map(|c| format!("{}={}", mark_of(&c.format) as char, c.format))
+            .collect::<Vec<_>>()
+            .join(", ")
     ));
     for row in grid {
         out.push('|');

@@ -15,10 +15,18 @@
 //! instruction advances every column of the tile by two k steps.
 //! Loads/permutes are applied identically for all formats (the simulator
 //! models compute, not memory).
+//!
+//! Since the kernel-suite refactor, tiles are emitted through the shared
+//! [`crate::kernels::KernelBuilder`] against the per-format
+//! [`crate::kernels::Pipeline`] table — the same lowering path as every
+//! workload in [`crate::kernels::suite`] — with instruction streams (and
+//! therefore all counts and errors) identical to the previous inline
+//! `Instruction::new` sequences.
 
-use crate::sim::{CodecMode, Instruction, LaneType, Machine, Operand, VecReg};
+use crate::kernels::{KernelBuilder, Pipeline};
+use crate::sim::{CodecMode, VecReg};
 use crate::util::rng::Rng;
-use anyhow::{bail, Result};
+use anyhow::Result;
 
 /// Result of one simulated GEMM.
 #[derive(Debug, Clone)]
@@ -29,60 +37,6 @@ pub struct GemmResult {
     pub executed: u64,
     pub dp_instructions: u64,
     pub convert_instructions: u64,
-}
-
-/// Pipeline selector.
-struct Pipeline {
-    /// Narrow storage type of A/B.
-    narrow: LaneType,
-    /// Accumulator type.
-    wide: LaneType,
-    dp: &'static str,
-    /// Convert mnemonic if narrow ≠ compute.
-    convert: Option<&'static str>,
-}
-
-fn pipeline(format: &str) -> Result<Pipeline> {
-    use LaneType::*;
-    Ok(match format {
-        "t8" => Pipeline {
-            narrow: Takum(8),
-            wide: Takum(16),
-            dp: "VDPPT8PT16",
-            convert: None,
-        },
-        "t16" => Pipeline {
-            narrow: Takum(16),
-            wide: Takum(32),
-            dp: "VDPPT16PT32",
-            convert: None,
-        },
-        "bf16" => Pipeline {
-            narrow: Mini(crate::num::BF16),
-            wide: Mini(crate::num::F32),
-            dp: "VDPBF16PS",
-            convert: None,
-        },
-        "f16" => Pipeline {
-            narrow: Mini(crate::num::F16),
-            wide: Mini(crate::num::F32),
-            dp: "VDPPHPS",
-            convert: None,
-        },
-        "e4m3" => Pipeline {
-            narrow: MiniSat(crate::num::E4M3),
-            wide: Mini(crate::num::F32),
-            dp: "VDPPHPS",
-            convert: Some("VCVTHF82PH"),
-        },
-        "e5m2" => Pipeline {
-            narrow: MiniSat(crate::num::E5M2),
-            wide: Mini(crate::num::F32),
-            dp: "VDPPHPS",
-            convert: Some("VCVTBF82PH"),
-        },
-        other => bail!("unknown gemm format {other:?} (t8|t16|bf16|f16|e4m3|e5m2)"),
-    })
 }
 
 /// Run the simulated GEMM and compare against the f64 reference.
@@ -130,9 +84,8 @@ pub fn gemm_scaled_with_mode(
     mode: CodecMode,
 ) -> Result<GemmResult> {
     anyhow::ensure!(n >= 2 && n % 2 == 0, "n must be even and ≥ 2");
-    let p = pipeline(format)?;
-    let wide_w = p.wide.width();
-    let cols_per_tile = VecReg::lanes(wide_w); // one C lane per column
+    let p = Pipeline::for_format(format)?;
+    let cols_per_tile = VecReg::lanes(p.wide.width()); // one C lane per column
     let mut rng = Rng::new(seed);
 
     let sigma = spread_decades * std::f64::consts::LN_10;
@@ -155,7 +108,11 @@ pub fn gemm_scaled_with_mode(
         }
     }
 
-    let mut m = Machine::with_mode(mode);
+    // Tiles are emitted through the shared kernel builder, so the GEMM
+    // uses the exact same per-format lowering (storage loads, OFP8
+    // promote, widening dp) as every kernel of the suite. Untraced: the
+    // O(n³) instruction stream is counted, not kept.
+    let mut kb = KernelBuilder::new_untraced(p, mode);
     let mut c_out = vec![0.0f64; n * n];
     let (va, vb, vc, vat, vbt) = (0u8, 1u8, 2u8, 3u8, 4u8);
 
@@ -163,7 +120,7 @@ pub fn gemm_scaled_with_mode(
         for j0 in (0..n).step_by(cols_per_tile) {
             let tile = cols_per_tile.min(n - j0);
             // reset accumulator
-            m.load_f64(vc, p.wide, &vec![0.0; tile]);
+            kb.load_wide(vc, &vec![0.0; tile]);
             for k in (0..n).step_by(2) {
                 // A pair broadcast: lanes (2t, 2t+1) = (A[i,k], A[i,k+1]).
                 let mut av = Vec::with_capacity(2 * tile);
@@ -175,37 +132,31 @@ pub fn gemm_scaled_with_mode(
                     bv.push(b[k * n + j0 + t]);
                     bv.push(b[(k + 1) * n + j0 + t]);
                 }
-                m.load_f64(va, p.narrow, &av);
-                m.load_f64(vb, p.narrow, &bv);
-                let (sa, sb) = if let Some(cvt) = p.convert {
-                    m.step(&Instruction::new(cvt, Operand::Vreg(vat), vec![Operand::Vreg(va)]))?;
-                    m.step(&Instruction::new(cvt, Operand::Vreg(vbt), vec![Operand::Vreg(vb)]))?;
-                    (vat, vbt)
-                } else {
-                    (va, vb)
-                };
-                m.step(&Instruction::new(
-                    p.dp,
-                    Operand::Vreg(vc),
-                    vec![Operand::Vreg(sa), Operand::Vreg(sb)],
-                ))?;
+                kb.load_narrow(va, &av);
+                kb.load_narrow(vb, &bv);
+                let sa = kb.to_compute(vat, va)?;
+                let sb = kb.to_compute(vbt, vb)?;
+                kb.dot_acc(vc, sa, sb)?;
             }
-            let lanes = m.read_f64(vc, p.wide);
-            c_out[i * n + j0..i * n + j0 + tile].copy_from_slice(&lanes[..tile]);
+            let lanes = kb.read_wide(vc, tile);
+            c_out[i * n + j0..i * n + j0 + tile].copy_from_slice(&lanes);
         }
     }
+    let (m, _program) = kb.finish();
 
-    // Relative Frobenius error.
-    let (mut num, mut den) = (0.0f64, 0.0f64);
-    for (x, y) in c_out.iter().zip(&c_ref) {
-        num += (x - y) * (x - y);
-        den += y * y;
-    }
-    let rel_error = (num / den).sqrt();
+    // Relative Frobenius error (shared metric of the kernel suite).
+    let rel_error = crate::kernels::workloads::frobenius(&c_out, &c_ref);
 
     let dp_instructions = m.counts.get(p.dp).copied().unwrap_or(0);
-    let convert_instructions =
-        p.convert.map(|c| m.counts.get(c).copied().unwrap_or(0)).unwrap_or(0);
+    // Same definition as `KernelResult`: the full storage↔compute tax
+    // (cvt_out is zero for the GEMM today, but the metric stays
+    // comparable with the suite if that ever changes).
+    let convert_instructions = p
+        .cvt_in
+        .iter()
+        .chain(p.cvt_out.iter())
+        .map(|c| m.counts.get(*c).copied().unwrap_or(0))
+        .sum();
     Ok(GemmResult {
         format: format.to_string(),
         n,

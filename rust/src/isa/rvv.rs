@@ -80,7 +80,8 @@ pub fn map_proposed_to_rvv(m: &str) -> Option<RvvMapping> {
                 || m[prefix.len()..].starts_with("ST")
                 || m[prefix.len()..].starts_with(|c: char| c.is_ascii_digit()))
         {
-            let mut name = format!("{rvv} ({}, takum{})", sew(m), if scalar { ", vl=1" } else { "" });
+            let vl = if scalar { ", vl=1" } else { "" };
+            let mut name = format!("{rvv} ({}, takum{vl})", sew(m));
             name = name.replace(", )", ")");
             return Some(Existing(name));
         }

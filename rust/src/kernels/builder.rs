@@ -1,0 +1,331 @@
+//! The kernel program builder: a typed instruction emitter bound to one
+//! [`Machine`] and one [`Pipeline`].
+//!
+//! Every kernel lowering goes through this builder, so both ISAs share one
+//! code path: a kernel asks for *roles* (load storage, promote to compute,
+//! widening dot, packed FMA, horizontal reduction) and the pipeline
+//! decides which mnemonics — if any — each role costs. On the proposed
+//! takum ISA `to_compute`/`store_narrow` are free (storage *is* the
+//! compute format); on the AVX10.2 baseline the OFP8 pipelines pay one
+//! `VCVT…` per register each way, and the executed-instruction histogram
+//! exposes exactly that difference.
+//!
+//! The builder records every emitted [`Instruction`] into a
+//! [`Program`] (the instruction trace) while stepping the machine, so a
+//! lowering simultaneously *is* an executable run and an inspectable
+//! `sim::Program`. Data movement (`load_*`/`read_*`) goes straight to the
+//! register file — the simulator models compute, not memory — and
+//! read-then-reload round trips are bit-exact (encode∘decode is the
+//! identity on representable lane values), so harness-side shuffles never
+//! perturb the numerics.
+
+use super::pipeline::Pipeline;
+use crate::sim::{CodecMode, Instruction, Machine, Operand, Program};
+use anyhow::Result;
+
+/// Register the builder reserves as an all-zero constant (never written;
+/// bit pattern 0 decodes to 0.0 in every lane format).
+pub const ZERO_REG: u8 = 31;
+
+/// Typed emitter over one machine + pipeline.
+pub struct KernelBuilder {
+    m: Machine,
+    pipe: Pipeline,
+    trace: Program,
+    tracing: bool,
+}
+
+impl KernelBuilder {
+    pub fn new(pipe: Pipeline, mode: CodecMode) -> KernelBuilder {
+        let m = Machine::with_mode(mode);
+        KernelBuilder { m, pipe, trace: Program::default(), tracing: true }
+    }
+
+    /// A builder that does not record the instruction trace — for hot
+    /// loops whose callers only want the machine (the GEMM harness emits
+    /// O(n³) instructions; keeping them all would turn an O(1)-memory
+    /// loop into gigabytes). [`KernelBuilder::finish`] returns an empty
+    /// [`Program`].
+    pub fn new_untraced(pipe: Pipeline, mode: CodecMode) -> KernelBuilder {
+        KernelBuilder { tracing: false, ..KernelBuilder::new(pipe, mode) }
+    }
+
+    pub fn pipeline(&self) -> &Pipeline {
+        &self.pipe
+    }
+
+    pub fn machine(&self) -> &Machine {
+        &self.m
+    }
+
+    /// The instruction trace emitted so far.
+    pub fn program(&self) -> &Program {
+        &self.trace
+    }
+
+    /// Tear down into the executed machine and the emitted program.
+    pub fn finish(self) -> (Machine, Program) {
+        (self.m, self.trace)
+    }
+
+    /// Execute one instruction, then record it (no clone on the hot
+    /// path: the trace takes ownership after the step).
+    fn emit(&mut self, ins: Instruction) -> Result<()> {
+        self.m.step(&ins)?;
+        if self.tracing {
+            self.trace.push(ins);
+        }
+        Ok(())
+    }
+
+    // -------------------------------------------------------------- data I/O
+
+    pub fn load_narrow(&mut self, v: u8, xs: &[f64]) {
+        self.m.load_f64(v, self.pipe.narrow, xs);
+    }
+
+    pub fn load_compute(&mut self, v: u8, xs: &[f64]) {
+        self.m.load_f64(v, self.pipe.compute, xs);
+    }
+
+    pub fn load_wide(&mut self, v: u8, xs: &[f64]) {
+        self.m.load_f64(v, self.pipe.wide, xs);
+    }
+
+    pub fn read_compute(&self, v: u8, n: usize) -> Vec<f64> {
+        let mut out = self.m.read_f64(v, self.pipe.compute);
+        out.truncate(n);
+        out
+    }
+
+    pub fn read_wide(&self, v: u8, n: usize) -> Vec<f64> {
+        let mut out = self.m.read_f64(v, self.pipe.wide);
+        out.truncate(n);
+        out
+    }
+
+    pub fn read_narrow(&self, v: u8, n: usize) -> Vec<f64> {
+        let mut out = self.m.read_f64(v, self.pipe.narrow);
+        out.truncate(n);
+        out
+    }
+
+    // ----------------------------------------------------------- conversions
+
+    /// Promote a storage register to the compute format. Emits the
+    /// pipeline's `cvt_in` into `scratch` and returns it; free (returns
+    /// `src`) when storage computes directly.
+    pub fn to_compute(&mut self, scratch: u8, src: u8) -> Result<u8> {
+        match self.pipe.cvt_in {
+            Some(cvt) => {
+                self.emit(Instruction::new(cvt, Operand::Vreg(scratch), vec![Operand::Vreg(src)]))?;
+                Ok(scratch)
+            }
+            None => Ok(src),
+        }
+    }
+
+    /// Demote a compute register to the storage format (the store tax).
+    /// Emits the pipeline's saturating `cvt_out` into `scratch` and
+    /// returns it; free when storage computes directly.
+    pub fn store_narrow(&mut self, scratch: u8, src: u8) -> Result<u8> {
+        match self.pipe.cvt_out {
+            Some(cvt) => {
+                self.emit(Instruction::new(cvt, Operand::Vreg(scratch), vec![Operand::Vreg(src)]))?;
+                Ok(scratch)
+            }
+            None => Ok(src),
+        }
+    }
+
+    /// Narrow an accumulator register into the compute format (softmax
+    /// normalisation brings the dp sum back into elementwise arithmetic).
+    pub fn wide_to_compute(&mut self, dst: u8, src: u8) -> Result<()> {
+        self.emit(Instruction::new(
+            self.pipe.cvt_wide_to_compute,
+            Operand::Vreg(dst),
+            vec![Operand::Vreg(src)],
+        ))
+    }
+
+    // ------------------------------------------------------------ arithmetic
+
+    /// Widening dot product: `acc[i] += a[2i]·b[2i] + a[2i+1]·b[2i+1]`
+    /// with `a`/`b` in the compute format and `acc` in the wide format.
+    pub fn dot_acc(&mut self, acc: u8, a: u8, b: u8) -> Result<()> {
+        self.emit(Instruction::new(
+            self.pipe.dp,
+            Operand::Vreg(acc),
+            vec![Operand::Vreg(a), Operand::Vreg(b)],
+        ))
+    }
+
+    /// Two-source packed op in the compute format (`op` is the mnemonic
+    /// stem: `VADD`, `VSUB`, `VMUL`, `VDIV`, `VMAX`, `VSCALEF`, …).
+    pub fn fp2(&mut self, op: &str, dst: u8, a: u8, b: u8) -> Result<()> {
+        let m = format!("{op}{}", self.pipe.sfx);
+        let srcs = vec![Operand::Vreg(a), Operand::Vreg(b)];
+        self.emit(Instruction::new(&m, Operand::Vreg(dst), srcs))
+    }
+
+    /// Two-source packed op in the accumulator format.
+    pub fn fp2_wide(&mut self, op: &str, dst: u8, a: u8, b: u8) -> Result<()> {
+        let m = format!("{op}{}", self.pipe.wide_sfx);
+        let srcs = vec![Operand::Vreg(a), Operand::Vreg(b)];
+        self.emit(Instruction::new(&m, Operand::Vreg(dst), srcs))
+    }
+
+    /// `dst = a·b + dst` in the compute format.
+    pub fn fma231(&mut self, dst: u8, a: u8, b: u8) -> Result<()> {
+        self.fp2("VFMADD231", dst, a, b)
+    }
+
+    /// `dst = a·dst + b` in the compute format (the Horner step).
+    pub fn fma213(&mut self, dst: u8, a: u8, b: u8) -> Result<()> {
+        self.fp2("VFMADD213", dst, a, b)
+    }
+
+    /// `dst = −(a·b) + dst` in the compute format.
+    pub fn fnmadd231(&mut self, dst: u8, a: u8, b: u8) -> Result<()> {
+        self.fp2("VFNMADD231", dst, a, b)
+    }
+
+    /// Round every lane to the nearest integer (RNE), `VRNDSCALE` imm 0.
+    pub fn round_int(&mut self, dst: u8, src: u8) -> Result<()> {
+        let m = format!("VRNDSCALE{}", self.pipe.sfx);
+        let srcs = vec![Operand::Vreg(src), Operand::Imm(0)];
+        self.emit(Instruction::new(&m, Operand::Vreg(dst), srcs))
+    }
+
+    /// Broadcast lane 0 across the register at the compute width.
+    pub fn broadcast(&mut self, dst: u8, src: u8) -> Result<()> {
+        let m = format!("VBROADCASTB{}", self.pipe.compute.width());
+        self.emit(Instruction::new(&m, Operand::Vreg(dst), vec![Operand::Vreg(src)]))
+    }
+
+    /// Copy a compute register (`dst = src + 0`, via the reserved
+    /// [`ZERO_REG`]; exact for every representable lane value).
+    pub fn copy(&mut self, dst: u8, src: u8) -> Result<()> {
+        self.fp2("VADD", dst, src, ZERO_REG)
+    }
+
+    // ------------------------------------------------- horizontal reductions
+
+    /// Shared log₂ horizontal-reduction tree over register `v`: packed
+    /// `op` per level in either the wide or the compute format, with the
+    /// harness shuffling halves between steps (bit-exact data movement).
+    /// Returns the scalar and leaves it in lane 0 of `s1`.
+    fn htree(&mut self, op: &str, wide: bool, v: u8, lanes: usize, s1: u8, s2: u8) -> Result<f64> {
+        // Real check, not debug_assert: a non-power-of-two tree would
+        // silently drop elements in release builds.
+        anyhow::ensure!(lanes.is_power_of_two(), "{op} tree needs 2^k lanes, got {lanes}");
+        let mut vals =
+            if wide { self.read_wide(v, lanes) } else { self.read_compute(v, lanes) };
+        while vals.len() > 1 {
+            let half = vals.len() / 2;
+            let hi = vals.split_off(half);
+            if wide {
+                self.load_wide(s1, &vals);
+                self.load_wide(s2, &hi);
+                self.fp2_wide(op, s1, s1, s2)?;
+                vals = self.read_wide(s1, half);
+            } else {
+                self.load_compute(s1, &vals);
+                self.load_compute(s2, &hi);
+                self.fp2(op, s1, s1, s2)?;
+                vals = self.read_compute(s1, half);
+            }
+        }
+        Ok(vals[0])
+    }
+
+    /// Horizontal sum of the first `lanes` lanes of accumulator register
+    /// `v` (lanes must be a power of two).
+    pub fn hsum_wide(&mut self, v: u8, lanes: usize, s1: u8, s2: u8) -> Result<f64> {
+        self.htree("VADD", true, v, lanes, s1, s2)
+    }
+
+    /// Horizontal max of the first `lanes` lanes of compute register `v`
+    /// (power-of-two `lanes`), leaving the scalar in lane 0 of `s1`.
+    pub fn hmax(&mut self, v: u8, lanes: usize, s1: u8, s2: u8) -> Result<f64> {
+        self.htree("VMAX", false, v, lanes, s1, s2)
+    }
+
+    /// Load a scalar constant into lane 0 of `scratch` (storage format),
+    /// promote it to the compute format and broadcast it into `dst`.
+    /// Models a broadcast load of an in-memory constant; costs the same
+    /// instruction count on both ISAs except for the OFP8 promote.
+    pub fn broadcast_const(&mut self, dst: u8, scratch: u8, c: f64) -> Result<()> {
+        self.load_narrow(scratch, &[c]);
+        let src = self.to_compute(scratch, scratch)?;
+        self.broadcast(dst, src)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_traces_what_it_executes() {
+        let pipe = Pipeline::for_format("t16").unwrap();
+        let mut kb = KernelBuilder::new(pipe, CodecMode::default());
+        kb.load_compute(0, &[1.0, 2.0, 3.0, 4.0]);
+        kb.load_compute(1, &[0.5; 4]);
+        kb.fp2("VMUL", 2, 0, 1).unwrap();
+        kb.fma231(2, 0, 1).unwrap();
+        let out = kb.read_compute(2, 4);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0]); // x·½ + x·½ = x
+        let (m, prog) = kb.finish();
+        assert_eq!(m.executed, 2);
+        assert_eq!(prog.len(), 2);
+        let h = prog.histogram();
+        assert_eq!(h["VMULPT16"], 1);
+        assert_eq!(h["VFMADD231PT16"], 1);
+    }
+
+    #[test]
+    fn convert_roles_are_free_for_takum_and_taxed_for_ofp8() {
+        for (fmt, cost) in [("t8", 0u64), ("e4m3", 2)] {
+            let pipe = Pipeline::for_format(fmt).unwrap();
+            let mut kb = KernelBuilder::new(pipe, CodecMode::default());
+            kb.load_narrow(0, &[1.0, 2.0]);
+            let c = kb.to_compute(1, 0).unwrap();
+            let s = kb.store_narrow(2, c).unwrap();
+            let back = kb.read_narrow(s, 2);
+            assert_eq!(back, vec![1.0, 2.0], "{fmt}");
+            assert_eq!(kb.machine().executed, cost, "{fmt}");
+        }
+    }
+
+    #[test]
+    fn hsum_and_hmax_reduce_exactly() {
+        for fmt in ["t8", "t16", "bf16", "e4m3"] {
+            let pipe = Pipeline::for_format(fmt).unwrap();
+            let wl = pipe.wide_lanes();
+            let cl = pipe.compute_lanes();
+            let mut kb = KernelBuilder::new(pipe, CodecMode::default());
+            // Small integers are exact in every wide format.
+            let xs: Vec<f64> = (0..wl).map(|i| (i % 4) as f64).collect();
+            kb.load_wide(3, &xs);
+            let s = kb.hsum_wide(3, wl, 4, 5).unwrap();
+            assert_eq!(s, xs.iter().sum::<f64>(), "{fmt} sum");
+            let ys: Vec<f64> = (0..cl).map(|i| ((i * 7) % 13) as f64).collect();
+            kb.load_compute(6, &ys);
+            let m = kb.hmax(6, cl, 4, 5).unwrap();
+            assert_eq!(m, 12.0, "{fmt} max");
+        }
+    }
+
+    #[test]
+    fn broadcast_const_fills_all_lanes() {
+        let pipe = Pipeline::for_format("e4m3").unwrap();
+        let cl = pipe.compute_lanes();
+        let mut kb = KernelBuilder::new(pipe, CodecMode::default());
+        kb.broadcast_const(7, 8, 1.5).unwrap();
+        let lanes = kb.read_compute(7, cl);
+        assert!(lanes.iter().all(|&v| v == 1.5));
+        // load + cvt_in + broadcast for OFP8 ⇒ 2 instructions executed.
+        assert_eq!(kb.machine().executed, 2);
+    }
+}

@@ -1,0 +1,46 @@
+//! # The workload suite: kernels on both ISAs through one builder
+//!
+//! The paper's claim that a uniform takum basis *streamlines* the SIMD
+//! ISA (§IV) is only testable across a family of workloads, not a single
+//! GEMM. This subsystem provides that family:
+//!
+//! * [`pipeline`] — the per-format lowering table: storage/compute/
+//!   accumulator lane types, packed-arithmetic suffixes, the widening dot
+//!   product, and the OFP8 conversion tax (`VCVTHF82PH`/`VCVTBF82PH` in,
+//!   saturating `VCVTPH2HF8S`/`VCVTPH2BF8S` out). Takum pipelines compute
+//!   directly in their storage format; that asymmetry **is** the
+//!   measurement.
+//! * [`builder`] — [`KernelBuilder`], the typed emitter every kernel (and
+//!   the E11 GEMM harness) lowers through. It steps a [`crate::sim::Machine`]
+//!   while recording the emitted [`crate::sim::Program`], so each lowering
+//!   is simultaneously an executable run and an inspectable instruction
+//!   stream.
+//! * [`workloads`] — the kernels: dot product, AXPY, cubic-Horner
+//!   activation, numerically-stable softmax (range-reduced exp via
+//!   `VRNDSCALE`/`VSCALEF`), 5-tap 1-D convolution, and sum/max
+//!   reduction.
+//! * [`suite`] — [`KernelSpec`]/[`KernelResult`] and [`run_suite`]: per
+//!   kernel × format, the end-to-end relative error against an f64
+//!   reference plus the executed/dp/convert instruction decomposition.
+//!
+//! The parallel kernels × formats × sizes fan-out lives in
+//! [`crate::coordinator::kernel_sweep`]; the CLI front end is the
+//! `kernels` subcommand.
+//!
+//! ## Adding a kernel
+//!
+//! Write a `run_<name>` lowering in [`workloads`] that draws inputs from
+//! its seed, emits **only** through [`KernelBuilder`] role methods (so
+//! both ISAs stay in lock-step), and returns a `KernelRun`; then add a
+//! variant to [`Kernel`] and wire it into `Kernel::ALL`/`run_raw`. Keep
+//! sizes multiples of [`workloads::TILE_ALIGN`] so instruction counts
+//! stay exact functions of `(kernel, format, n)`.
+
+pub mod builder;
+pub mod pipeline;
+pub mod suite;
+pub mod workloads;
+
+pub use builder::KernelBuilder;
+pub use pipeline::{Isa, Pipeline};
+pub use suite::{render, run_suite, Kernel, KernelResult, KernelSpec};

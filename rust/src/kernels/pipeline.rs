@@ -1,0 +1,250 @@
+//! Format → pipeline lowering table shared by every kernel (and by the
+//! E11 GEMM harness).
+//!
+//! A [`Pipeline`] captures how one storage format maps onto one of the two
+//! instruction sets the paper compares:
+//!
+//! * **proposed takum ISA** — the storage format *is* the compute format
+//!   (takums are general-purpose at every width, §IV), and the widening
+//!   dot products (`VDPPT8PT16`, `VDPPT16PT32`) accumulate pairs into the
+//!   double-width takum;
+//! * **AVX10.2 baseline** — bf16/fp16 compute directly (`…NEPBF16`/`…PH`)
+//!   with `VDPBF16PS`/`VDPPHPS` accumulating into PS, while the OFP8
+//!   formats have **no** compute instructions at all and must be converted
+//!   lane-for-lane to PH first (`VCVTHF82PH`/`VCVTBF82PH`) and back on
+//!   store (`VCVTPH2HF8S`/`VCVTPH2BF8S`) — the conversion tax the
+//!   instruction counts expose.
+//!
+//! Only the mnemonics named here are emitted by the kernel builder, so a
+//! pipeline is also the complete per-format instruction vocabulary.
+
+use crate::sim::LaneType;
+use anyhow::{bail, Result};
+
+/// Which of the two compared instruction sets a pipeline belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Isa {
+    /// The paper's streamlined takum ISA.
+    Proposed,
+    /// The AVX10.2 bf16/fp16/OFP8 baseline.
+    Baseline,
+}
+
+impl Isa {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Isa::Proposed => "proposed-takum",
+            Isa::Baseline => "avx10.2",
+        }
+    }
+}
+
+/// How one storage format lowers onto its ISA: lane types for the three
+/// roles (storage / elementwise compute / widening accumulator), the
+/// mnemonic suffixes for packed arithmetic in the compute and accumulator
+/// formats, the widening dot product, and the conversion instructions the
+/// format needs (if any).
+#[derive(Debug, Clone, Copy)]
+pub struct Pipeline {
+    /// Format key (`t8`, `t16`, `bf16`, `f16`, `e4m3`, `e5m2`).
+    pub format: &'static str,
+    pub isa: Isa,
+    /// Narrow storage type of vectors in memory.
+    pub narrow: LaneType,
+    /// Type elementwise arithmetic runs in (== `narrow` except for OFP8,
+    /// which computes in PH).
+    pub compute: LaneType,
+    /// Widening dot-product accumulator type.
+    pub wide: LaneType,
+    /// Packed-arithmetic mnemonic suffix in the compute format
+    /// (`VADD{sfx}`, `VFMADD231{sfx}`, …).
+    pub sfx: &'static str,
+    /// Packed-arithmetic mnemonic suffix in the accumulator format.
+    pub wide_sfx: &'static str,
+    /// Widening dot product: pairs of compute-format lanes fused into one
+    /// `wide` lane, accumulated onto the destination.
+    pub dp: &'static str,
+    /// Storage → compute conversion (the OFP8 load tax); `None` when the
+    /// storage format computes directly.
+    pub cvt_in: Option<&'static str>,
+    /// Compute → storage conversion (the OFP8 store tax, saturating like
+    /// the hardware's `…S` variants).
+    pub cvt_out: Option<&'static str>,
+    /// Accumulator → compute narrowing (used when a reduction result
+    /// re-enters elementwise arithmetic, e.g. softmax normalisation).
+    pub cvt_wide_to_compute: &'static str,
+}
+
+impl Pipeline {
+    /// Look up the pipeline for a format key.
+    pub fn for_format(format: &str) -> Result<Pipeline> {
+        use LaneType::*;
+        Ok(match format {
+            "t8" => Pipeline {
+                format: "t8",
+                isa: Isa::Proposed,
+                narrow: Takum(8),
+                compute: Takum(8),
+                wide: Takum(16),
+                sfx: "PT8",
+                wide_sfx: "PT16",
+                dp: "VDPPT8PT16",
+                cvt_in: None,
+                cvt_out: None,
+                cvt_wide_to_compute: "VCVTPT162PT8",
+            },
+            "t16" => Pipeline {
+                format: "t16",
+                isa: Isa::Proposed,
+                narrow: Takum(16),
+                compute: Takum(16),
+                wide: Takum(32),
+                sfx: "PT16",
+                wide_sfx: "PT32",
+                dp: "VDPPT16PT32",
+                cvt_in: None,
+                cvt_out: None,
+                cvt_wide_to_compute: "VCVTPT322PT16",
+            },
+            "bf16" => Pipeline {
+                format: "bf16",
+                isa: Isa::Baseline,
+                narrow: Mini(crate::num::BF16),
+                compute: Mini(crate::num::BF16),
+                wide: Mini(crate::num::F32),
+                sfx: "NEPBF16",
+                wide_sfx: "PS",
+                dp: "VDPBF16PS",
+                cvt_in: None,
+                cvt_out: None,
+                cvt_wide_to_compute: "VCVTNEPS2BF16",
+            },
+            "f16" => Pipeline {
+                format: "f16",
+                isa: Isa::Baseline,
+                narrow: Mini(crate::num::F16),
+                compute: Mini(crate::num::F16),
+                wide: Mini(crate::num::F32),
+                sfx: "PH",
+                wide_sfx: "PS",
+                dp: "VDPPHPS",
+                cvt_in: None,
+                cvt_out: None,
+                cvt_wide_to_compute: "VCVTPS2PH",
+            },
+            "e4m3" => Pipeline {
+                format: "e4m3",
+                isa: Isa::Baseline,
+                narrow: MiniSat(crate::num::E4M3),
+                compute: Mini(crate::num::F16),
+                wide: Mini(crate::num::F32),
+                sfx: "PH",
+                wide_sfx: "PS",
+                dp: "VDPPHPS",
+                cvt_in: Some("VCVTHF82PH"),
+                cvt_out: Some("VCVTPH2HF8S"),
+                cvt_wide_to_compute: "VCVTPS2PH",
+            },
+            "e5m2" => Pipeline {
+                format: "e5m2",
+                isa: Isa::Baseline,
+                narrow: MiniSat(crate::num::E5M2),
+                compute: Mini(crate::num::F16),
+                wide: Mini(crate::num::F32),
+                sfx: "PH",
+                wide_sfx: "PS",
+                dp: "VDPPHPS",
+                cvt_in: Some("VCVTBF82PH"),
+                cvt_out: Some("VCVTPH2BF8S"),
+                cvt_wide_to_compute: "VCVTPS2PH",
+            },
+            other => bail!("unknown kernel format {other:?} (t8|t16|bf16|f16|e4m3|e5m2)"),
+        })
+    }
+
+    /// Every format of the suite, takum pipelines first (the paper's
+    /// comparison order).
+    pub const ALL_FORMATS: [&'static str; 6] = ["t8", "t16", "bf16", "f16", "e4m3", "e5m2"];
+
+    /// Lanes per register in the compute format (the elementwise tile
+    /// size).
+    pub fn compute_lanes(&self) -> usize {
+        crate::sim::VecReg::lanes(self.compute.width())
+    }
+
+    /// Lanes per register in the accumulator format.
+    pub fn wide_lanes(&self) -> usize {
+        crate::sim::VecReg::lanes(self.wide.width())
+    }
+
+    /// True if this pipeline pays the storage↔compute conversion tax.
+    pub fn needs_convert(&self) -> bool {
+        self.cvt_in.is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::LanePlan;
+
+    #[test]
+    fn all_formats_resolve() {
+        for f in Pipeline::ALL_FORMATS {
+            let p = Pipeline::for_format(f).unwrap();
+            assert_eq!(p.format, f);
+            assert_eq!(p.wide.width(), 2 * p.compute.width(), "{f}");
+            match p.isa {
+                Isa::Proposed => {
+                    assert!(p.cvt_in.is_none() && p.cvt_out.is_none(), "{f}");
+                }
+                Isa::Baseline => {}
+            }
+        }
+        assert!(Pipeline::for_format("fp4").is_err());
+    }
+
+    #[test]
+    fn every_pipeline_mnemonic_resolves_to_a_plan() {
+        // The pipeline table is the builder's whole vocabulary; each
+        // mnemonic (with the compute/wide suffixes applied) must resolve
+        // in the lane engine.
+        for f in Pipeline::ALL_FORMATS {
+            let p = Pipeline::for_format(f).unwrap();
+            let mut mnemonics: Vec<String> = vec![p.dp.into(), p.cvt_wide_to_compute.into()];
+            for op in ["VADD", "VSUB", "VMUL", "VDIV", "VMAX", "VRNDSCALE", "VSCALEF"] {
+                mnemonics.push(format!("{op}{}", p.sfx));
+            }
+            for op in ["VFMADD231", "VFMADD213", "VFNMADD231"] {
+                mnemonics.push(format!("{op}{}", p.sfx));
+            }
+            for op in ["VADD", "VMAX"] {
+                mnemonics.push(format!("{op}{}", p.wide_sfx));
+            }
+            mnemonics.push(format!("VBROADCASTB{}", p.compute.width()));
+            if let Some(c) = p.cvt_in {
+                mnemonics.push(c.into());
+            }
+            if let Some(c) = p.cvt_out {
+                mnemonics.push(c.into());
+            }
+            for m in &mnemonics {
+                LanePlan::resolve(m).unwrap_or_else(|e| panic!("{f}: {m}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn proposed_covers_takum_baseline_covers_ieee() {
+        assert_eq!(Pipeline::for_format("t8").unwrap().isa, Isa::Proposed);
+        assert_eq!(Pipeline::for_format("t16").unwrap().isa, Isa::Proposed);
+        for f in ["bf16", "f16", "e4m3", "e5m2"] {
+            assert_eq!(Pipeline::for_format(f).unwrap().isa, Isa::Baseline);
+        }
+        // Only the OFP8 formats pay the conversion tax.
+        assert!(Pipeline::for_format("e4m3").unwrap().needs_convert());
+        assert!(Pipeline::for_format("e5m2").unwrap().needs_convert());
+        assert!(!Pipeline::for_format("bf16").unwrap().needs_convert());
+        assert!(!Pipeline::for_format("t8").unwrap().needs_convert());
+    }
+}

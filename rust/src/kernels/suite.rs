@@ -1,0 +1,196 @@
+//! The kernel registry: every workload × format combination as a
+//! [`KernelSpec`], executed into a [`KernelResult`] (the generalisation of
+//! the GEMM harness's `GemmResult` to arbitrary kernels).
+
+use super::pipeline::{Isa, Pipeline};
+use super::workloads::{self, KernelRun};
+use crate::sim::CodecMode;
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// One workload of the suite.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Kernel {
+    Dot,
+    Axpy,
+    Poly,
+    Softmax,
+    Conv1d,
+    Reduce,
+}
+
+impl Kernel {
+    /// Every kernel, in suite order.
+    pub const ALL: [Kernel; 6] = [
+        Kernel::Dot,
+        Kernel::Axpy,
+        Kernel::Poly,
+        Kernel::Softmax,
+        Kernel::Conv1d,
+        Kernel::Reduce,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kernel::Dot => "dot",
+            Kernel::Axpy => "axpy",
+            Kernel::Poly => "poly",
+            Kernel::Softmax => "softmax",
+            Kernel::Conv1d => "conv1d",
+            Kernel::Reduce => "reduce",
+        }
+    }
+
+    pub fn parse(name: &str) -> Result<Kernel> {
+        for k in Kernel::ALL {
+            if k.name() == name {
+                return Ok(k);
+            }
+        }
+        bail!("unknown kernel {name:?} (dot|axpy|poly|softmax|conv1d|reduce)")
+    }
+
+    fn run_raw(&self, pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<KernelRun> {
+        match self {
+            Kernel::Dot => workloads::run_dot(pipe, n, seed, mode),
+            Kernel::Axpy => workloads::run_axpy(pipe, n, seed, mode),
+            Kernel::Poly => workloads::run_poly(pipe, n, seed, mode),
+            Kernel::Softmax => workloads::run_softmax(pipe, n, seed, mode),
+            Kernel::Conv1d => workloads::run_conv1d(pipe, n, seed, mode),
+            Kernel::Reduce => workloads::run_reduce(pipe, n, seed, mode),
+        }
+    }
+}
+
+/// One (kernel, format, size) cell of the suite.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelSpec {
+    pub kernel: Kernel,
+    pub format: &'static str,
+    pub n: usize,
+    pub seed: u64,
+}
+
+impl KernelSpec {
+    /// Execute the spec: lower through the shared builder, run on the
+    /// simulator, extract the metrics.
+    pub fn run(&self, mode: CodecMode) -> Result<KernelResult> {
+        let pipe = Pipeline::for_format(self.format)?;
+        let run = self.kernel.run_raw(&pipe, self.n, self.seed, mode)?;
+        Ok(KernelResult::from_run(self, &pipe, run))
+    }
+}
+
+/// Per-kernel, per-format metrics (the suite's generalisation of
+/// `GemmResult`): end-to-end relative error plus the instruction-count
+/// decomposition the paper's ISA comparison rests on.
+#[derive(Debug, Clone)]
+pub struct KernelResult {
+    pub kernel: String,
+    pub format: String,
+    pub isa: Isa,
+    pub n: usize,
+    pub rel_error: f64,
+    /// Total instructions executed.
+    pub executed: u64,
+    /// Widening dot products executed.
+    pub dp_instructions: u64,
+    /// Storage↔compute conversions executed — the OFP8 tax
+    /// (`cvt_in`/`cvt_out` only; symmetric width narrowing after a
+    /// reduction is excluded because both ISAs pay exactly one).
+    pub convert_instructions: u64,
+    /// Full executed-mnemonic histogram.
+    pub counts: BTreeMap<String, u64>,
+}
+
+impl KernelResult {
+    fn from_run(spec: &KernelSpec, pipe: &Pipeline, run: KernelRun) -> KernelResult {
+        let dp_instructions = run.machine.counts.get(pipe.dp).copied().unwrap_or(0);
+        let convert_instructions = pipe
+            .cvt_in
+            .iter()
+            .chain(pipe.cvt_out.iter())
+            .map(|m| run.machine.counts.get(*m).copied().unwrap_or(0))
+            .sum();
+        KernelResult {
+            kernel: spec.kernel.name().to_string(),
+            format: spec.format.to_string(),
+            isa: pipe.isa,
+            n: spec.n,
+            rel_error: run.rel_error,
+            executed: run.machine.executed,
+            dp_instructions,
+            convert_instructions,
+            // The machine is owned and dropped here; move the histogram
+            // out instead of cloning it.
+            counts: run.machine.counts,
+        }
+    }
+}
+
+/// Run the whole suite (every kernel × every format) at one size, in
+/// suite order. The parallel fan-out lives in
+/// [`crate::coordinator::kernel_sweep`]; this sequential form is the
+/// reference the sweep's determinism test compares against.
+pub fn run_suite(n: usize, seed: u64, mode: CodecMode) -> Result<Vec<KernelResult>> {
+    let mut out = Vec::with_capacity(Kernel::ALL.len() * Pipeline::ALL_FORMATS.len());
+    for kernel in Kernel::ALL {
+        for format in Pipeline::ALL_FORMATS {
+            out.push(KernelSpec { kernel, format, n, seed }.run(mode)?);
+        }
+    }
+    Ok(out)
+}
+
+/// Render results as the suite's comparison table.
+pub fn render(results: &[KernelResult]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<9} {:<6} {:<15} {:>6} {:>12} {:>8} {:>6} {:>8}\n",
+        "kernel", "format", "isa", "n", "rel. error", "instrs", "dp", "convert"
+    ));
+    for r in results {
+        out.push_str(&format!(
+            "{:<9} {:<6} {:<15} {:>6} {:>12.3e} {:>8} {:>6} {:>8}\n",
+            r.kernel,
+            r.format,
+            r.isa.name(),
+            r.n,
+            r.rel_error,
+            r.executed,
+            r.dp_instructions,
+            r.convert_instructions
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_covers_kernels_times_formats() {
+        let results = run_suite(64, 11, CodecMode::default()).unwrap();
+        assert_eq!(results.len(), Kernel::ALL.len() * Pipeline::ALL_FORMATS.len());
+        // ≥5 kernels × ≥4 formats through both ISAs (the acceptance bar).
+        assert!(Kernel::ALL.len() >= 5);
+        assert!(Pipeline::ALL_FORMATS.len() >= 4);
+        assert!(results.iter().any(|r| r.isa == Isa::Proposed));
+        assert!(results.iter().any(|r| r.isa == Isa::Baseline));
+        for r in &results {
+            assert!(r.rel_error.is_finite(), "{}/{}: {}", r.kernel, r.format, r.rel_error);
+            assert!(r.executed > 0);
+        }
+        let txt = render(&results);
+        assert!(txt.contains("softmax") && txt.contains("e4m3") && txt.contains("avx10.2"));
+    }
+
+    #[test]
+    fn kernel_parse_round_trips() {
+        for k in Kernel::ALL {
+            assert_eq!(Kernel::parse(k.name()).unwrap(), k);
+        }
+        assert!(Kernel::parse("gemm3000").is_err());
+    }
+}

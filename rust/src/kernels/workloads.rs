@@ -1,0 +1,388 @@
+//! The kernel library: six workloads, each lowered through the shared
+//! [`KernelBuilder`] so the proposed-takum and AVX10.2-baseline programs
+//! differ **only** in what the pipeline table says they must (compute
+//! suffixes, widening dp, and the OFP8 conversion tax).
+//!
+//! Every kernel draws its inputs deterministically from a seed, runs the
+//! lowered program on the simulator, and reports the end-to-end relative
+//! error against an f64 reference computed on the *original* (unquantised)
+//! inputs — quantisation error is part of what the suite measures, exactly
+//! like the paper's Figure 2.
+//!
+//! Tile discipline: every kernel processes whole compute-format registers,
+//! so problem sizes must be multiples of [`TILE_ALIGN`] (= 64, the lane
+//! count of the widest register / narrowest format). That keeps
+//! instruction counts exact functions of `(kernel, format, n)` — the
+//! golden-count tests rely on it.
+
+use super::builder::KernelBuilder;
+use super::pipeline::Pipeline;
+use crate::sim::{CodecMode, Machine, Program};
+use crate::util::rng::Rng;
+use anyhow::Result;
+
+/// All kernels operate on whole tiles for every format: the 8-bit formats
+/// pack 64 lanes per register, so sizes must be multiples of 64.
+pub const TILE_ALIGN: usize = 64;
+
+/// Taps of the 1-D convolution kernel (exactly representable in every
+/// format of the suite, so the filter itself adds no quantisation noise).
+pub const CONV_TAPS: [f64; 5] = [0.25, -0.5, 1.0, -0.5, 0.25];
+
+/// Horner coefficients of the activation-polynomial kernel
+/// (`p(x) = ((c₃·x + c₂)·x + c₁)·x + c₀`; all powers of two).
+pub const POLY_COEFFS: [f64; 4] = [0.125, -0.5, 1.0, 0.25];
+
+/// AXPY scale (exactly representable everywhere).
+pub const AXPY_ALPHA: f64 = 1.5;
+
+/// Outcome of one kernel lowering + execution.
+pub struct KernelRun {
+    pub rel_error: f64,
+    pub machine: Machine,
+    pub program: Program,
+}
+
+fn check_size(n: usize) -> Result<()> {
+    anyhow::ensure!(
+        n >= TILE_ALIGN && n % TILE_ALIGN == 0,
+        "kernel size must be a positive multiple of {TILE_ALIGN}, got {n}"
+    );
+    Ok(())
+}
+
+/// Relative Frobenius error of `out` against `reference` (shared with
+/// the GEMM harness so every workload reports the same metric).
+pub fn frobenius(out: &[f64], reference: &[f64]) -> f64 {
+    let (mut num, mut den) = (0.0f64, 0.0f64);
+    for (o, r) in out.iter().zip(reference) {
+        num += (o - r) * (o - r);
+        den += r * r;
+    }
+    (num / den).sqrt()
+}
+
+/// Positive log-normal draw (well-conditioned reductions: no sign
+/// cancellation in the reference sum).
+fn draw_positive(rng: &mut Rng, count: usize, spread_decades: f64) -> Vec<f64> {
+    let sigma = spread_decades * std::f64::consts::LN_10;
+    (0..count).map(|_| rng.log_normal(0.0, sigma)).collect()
+}
+
+/// Sign-symmetric log-normal draw (elementwise kernels).
+fn draw_signed(rng: &mut Rng, count: usize, spread_decades: f64) -> Vec<f64> {
+    let sigma = spread_decades * std::f64::consts::LN_10;
+    (0..count)
+        .map(|_| rng.log_normal(0.0, sigma) * if rng.chance(0.5) { -1.0 } else { 1.0 })
+        .collect()
+}
+
+// Register conventions shared by the lowerings below (31 is the builder's
+// reserved zero register).
+const VA: u8 = 0; // storage tile a
+const VB: u8 = 1; // storage tile b / store scratch
+const VCA: u8 = 2; // compute scratch a (cvt_in destination)
+const VCB: u8 = 3; // compute scratch b
+const VACC: u8 = 4; // elementwise / max accumulator (compute format)
+const WACC: u8 = 5; // widening dp accumulator (wide format)
+const S1: u8 = 6; // reduction shuffle scratch
+const S2: u8 = 7; // reduction shuffle scratch
+const C0: u8 = 8; // broadcast constants C0..C0+k
+const CSCRATCH: u8 = 15; // broadcast-load lane-0 scratch
+const VE: u8 = 16; // softmax exp tile
+const VT: u8 = 17; // softmax t = r₀·log₂e
+const VK: u8 = 18; // softmax k = rne(t)
+const VU: u8 = 19; // softmax u = 1 + r/2
+const VP: u8 = 20; // softmax p = 1 + r + r²/2
+
+/// Dot product `Σ aᵢ·bᵢ` through the widening dot-product pipeline: one
+/// dp per compute-width tile, then a log₂ tree sum of the wide
+/// accumulator. The kernel the paper's E11 GEMM repeats per output tile,
+/// isolated.
+pub fn run_dot(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<KernelRun> {
+    check_size(n)?;
+    let cl = pipe.compute_lanes();
+    let wl = pipe.wide_lanes();
+    let mut rng = Rng::new(seed ^ 0xD07);
+    let a = draw_positive(&mut rng, n, 0.5);
+    let b = draw_positive(&mut rng, n, 0.5);
+    let reference: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+
+    let mut kb = KernelBuilder::new(*pipe, mode);
+    kb.load_wide(WACC, &vec![0.0; wl]);
+    for t in (0..n).step_by(cl) {
+        kb.load_narrow(VA, &a[t..t + cl]);
+        kb.load_narrow(VB, &b[t..t + cl]);
+        let sa = kb.to_compute(VCA, VA)?;
+        let sb = kb.to_compute(VCB, VB)?;
+        kb.dot_acc(WACC, sa, sb)?;
+    }
+    let sum = kb.hsum_wide(WACC, wl, S1, S2)?;
+    let rel_error = ((sum - reference) / reference).abs();
+    let (machine, program) = kb.finish();
+    Ok(KernelRun { rel_error, machine, program })
+}
+
+/// AXPY `y ← α·x + y`: broadcast constant + one packed FMA per tile, with
+/// the result demoted back to storage (the OFP8 store tax).
+pub fn run_axpy(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<KernelRun> {
+    check_size(n)?;
+    let cl = pipe.compute_lanes();
+    let mut rng = Rng::new(seed ^ 0xA897);
+    let x = draw_signed(&mut rng, n, 0.5);
+    let y = draw_signed(&mut rng, n, 0.5);
+    let reference: Vec<f64> = x.iter().zip(&y).map(|(xi, yi)| AXPY_ALPHA * xi + yi).collect();
+
+    let mut kb = KernelBuilder::new(*pipe, mode);
+    kb.broadcast_const(C0, CSCRATCH, AXPY_ALPHA)?;
+    let mut out = Vec::with_capacity(n);
+    for t in (0..n).step_by(cl) {
+        kb.load_narrow(VA, &x[t..t + cl]);
+        kb.load_narrow(VB, &y[t..t + cl]);
+        let xc = kb.to_compute(VCA, VA)?;
+        let yc = kb.to_compute(VCB, VB)?;
+        kb.fma231(yc, C0, xc)?; // y += α·x
+        let s = kb.store_narrow(VA, yc)?;
+        out.extend(kb.read_narrow(s, cl));
+    }
+    let rel_error = frobenius(&out, &reference);
+    let (machine, program) = kb.finish();
+    Ok(KernelRun { rel_error, machine, program })
+}
+
+/// Elementwise activation via a cubic Horner polynomial: three dependent
+/// packed FMAs per tile — the latency-chain shape of softmax/GELU tails.
+pub fn run_poly(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<KernelRun> {
+    check_size(n)?;
+    let cl = pipe.compute_lanes();
+    let mut rng = Rng::new(seed ^ 0x9017);
+    let x = draw_signed(&mut rng, n, 0.5);
+    let [c3, c2, c1, c0] = POLY_COEFFS;
+    let reference: Vec<f64> =
+        x.iter().map(|&v| ((c3 * v + c2) * v + c1) * v + c0).collect();
+
+    let mut kb = KernelBuilder::new(*pipe, mode);
+    for (i, c) in POLY_COEFFS.iter().enumerate() {
+        kb.broadcast_const(C0 + i as u8, CSCRATCH, *c)?;
+    }
+    let mut out = Vec::with_capacity(n);
+    for t in (0..n).step_by(cl) {
+        kb.load_narrow(VA, &x[t..t + cl]);
+        let xc = kb.to_compute(VCA, VA)?;
+        kb.copy(VACC, C0)?; // p = c₃
+        for i in 1..POLY_COEFFS.len() {
+            kb.fma213(VACC, xc, C0 + i as u8)?; // p = x·p + cᵢ
+        }
+        let s = kb.store_narrow(VB, VACC)?;
+        out.extend(kb.read_narrow(s, cl));
+    }
+    let rel_error = frobenius(&out, &reference);
+    let (machine, program) = kb.finish();
+    Ok(KernelRun { rel_error, machine, program })
+}
+
+/// Numerically-stable softmax: global max (packed + horizontal tree),
+/// `exp` via range reduction (`VRNDSCALE`/`VFNMADD231`), a degree-2
+/// polynomial and `VSCALEF`, the exp-sum through the widening dot product
+/// against broadcast ones, and a packed divide for normalisation. The
+/// only kernel whose reduction result re-enters elementwise arithmetic
+/// (`cvt_wide_to_compute`).
+pub fn run_softmax(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<KernelRun> {
+    check_size(n)?;
+    let cl = pipe.compute_lanes();
+    let wl = pipe.wide_lanes();
+    let mut rng = Rng::new(seed ^ 0x50F7);
+    let x = draw_positive(&mut rng, n, 0.35);
+    let mx = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = x.iter().map(|&v| (v - mx).exp()).collect();
+    let total: f64 = exps.iter().sum();
+    let reference: Vec<f64> = exps.iter().map(|e| e / total).collect();
+
+    let (clog2e, cln2, chalf, cone, cmax, csum) =
+        (C0, C0 + 1, C0 + 2, C0 + 3, C0 + 4, C0 + 5);
+    let mut kb = KernelBuilder::new(*pipe, mode);
+    kb.broadcast_const(clog2e, CSCRATCH, std::f64::consts::LOG2_E)?;
+    kb.broadcast_const(cln2, CSCRATCH, std::f64::consts::LN_2)?;
+    kb.broadcast_const(chalf, CSCRATCH, 0.5)?;
+    kb.broadcast_const(cone, CSCRATCH, 1.0)?;
+
+    // Phase 1: global max.
+    for (ti, t) in (0..n).step_by(cl).enumerate() {
+        kb.load_narrow(VA, &x[t..t + cl]);
+        let xc = kb.to_compute(VCA, VA)?;
+        if ti == 0 {
+            kb.copy(VACC, xc)?;
+        } else {
+            kb.fp2("VMAX", VACC, VACC, xc)?;
+        }
+    }
+    kb.hmax(VACC, cl, S1, S2)?; // scalar max in lane 0 of S1
+    kb.broadcast(cmax, S1)?;
+
+    // Phase 2: e^(x−m) per tile and the exp-sum.
+    kb.load_wide(WACC, &vec![0.0; wl]);
+    let mut tiles: Vec<Vec<f64>> = Vec::with_capacity(n / cl);
+    for t in (0..n).step_by(cl) {
+        kb.load_narrow(VA, &x[t..t + cl]);
+        let xc = kb.to_compute(VCA, VA)?;
+        kb.fp2("VSUB", VE, xc, cmax)?; // r₀ = x − m ≤ 0
+        kb.fp2("VMUL", VT, VE, clog2e)?; // t = r₀·log₂e
+        kb.round_int(VK, VT)?; // k = rne(t)
+        kb.fnmadd231(VE, VK, cln2)?; // r = r₀ − k·ln2
+        kb.fp2("VMUL", VU, VE, chalf)?; // u = r/2
+        kb.fp2("VADD", VU, VU, cone)?; // u = 1 + r/2
+        kb.copy(VP, cone)?; // p = 1
+        kb.fma231(VP, VU, VE)?; // p = 1 + r + r²/2
+        kb.fp2("VSCALEF", VE, VP, VK)?; // e = p·2^⌊k⌋
+        kb.dot_acc(WACC, VE, cone)?; // Σ pairs of e·1
+        tiles.push(kb.read_compute(VE, cl));
+    }
+    kb.hsum_wide(WACC, wl, S1, S2)?; // scalar sum in lane 0 of S1 (wide)
+    kb.wide_to_compute(S2, S1)?;
+    kb.broadcast(csum, S2)?;
+
+    // Phase 3: normalise and store.
+    let mut out = Vec::with_capacity(n);
+    for tile in &tiles {
+        kb.load_compute(VE, tile);
+        kb.fp2("VDIV", VE, VE, csum)?;
+        let s = kb.store_narrow(VB, VE)?;
+        out.extend(kb.read_narrow(s, cl));
+    }
+    let rel_error = frobenius(&out, &reference);
+    let (machine, program) = kb.finish();
+    Ok(KernelRun { rel_error, machine, program })
+}
+
+/// 1-D convolution with the 5-tap filter [`CONV_TAPS`]: per output tile,
+/// one packed multiply for tap 0 then one packed FMA per remaining tap,
+/// reading shifted input windows (the simulator models compute, so the
+/// unaligned loads are harness-side).
+pub fn run_conv1d(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<KernelRun> {
+    check_size(n)?;
+    let cl = pipe.compute_lanes();
+    let taps = CONV_TAPS.len();
+    let mut rng = Rng::new(seed ^ 0xC01D);
+    let x = draw_signed(&mut rng, n + taps - 1, 0.5);
+    let reference: Vec<f64> = (0..n)
+        .map(|i| CONV_TAPS.iter().enumerate().map(|(k, w)| w * x[i + k]).sum())
+        .collect();
+
+    let mut kb = KernelBuilder::new(*pipe, mode);
+    for (k, w) in CONV_TAPS.iter().enumerate() {
+        kb.broadcast_const(C0 + k as u8, CSCRATCH, *w)?;
+    }
+    let mut out = Vec::with_capacity(n);
+    for t in (0..n).step_by(cl) {
+        kb.load_narrow(VA, &x[t..t + cl]);
+        let xc = kb.to_compute(VCA, VA)?;
+        kb.fp2("VMUL", VACC, xc, C0)?; // tap 0
+        for k in 1..taps {
+            kb.load_narrow(VA, &x[t + k..t + k + cl]);
+            let xc = kb.to_compute(VCA, VA)?;
+            kb.fma231(VACC, xc, C0 + k as u8)?; // += wₖ·x[i+k]
+        }
+        let s = kb.store_narrow(VB, VACC)?;
+        out.extend(kb.read_narrow(s, cl));
+    }
+    let rel_error = frobenius(&out, &reference);
+    let (machine, program) = kb.finish();
+    Ok(KernelRun { rel_error, machine, program })
+}
+
+/// Sum + max reduction: the sum runs through the widening dot product
+/// against broadcast ones (so OFP8 pays the convert tax even for a plain
+/// reduction), the max through packed `VMAX` with a horizontal tree.
+/// Reports the RMS of the two scalar relative errors.
+pub fn run_reduce(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<KernelRun> {
+    check_size(n)?;
+    let cl = pipe.compute_lanes();
+    let wl = pipe.wide_lanes();
+    let mut rng = Rng::new(seed ^ 0x5ED);
+    let x = draw_positive(&mut rng, n, 0.5);
+    let ref_sum: f64 = x.iter().sum();
+    let ref_max = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+
+    let mut kb = KernelBuilder::new(*pipe, mode);
+    kb.broadcast_const(C0, CSCRATCH, 1.0)?;
+    kb.load_wide(WACC, &vec![0.0; wl]);
+    for (ti, t) in (0..n).step_by(cl).enumerate() {
+        kb.load_narrow(VA, &x[t..t + cl]);
+        let xc = kb.to_compute(VCA, VA)?;
+        kb.dot_acc(WACC, xc, C0)?;
+        if ti == 0 {
+            kb.copy(VACC, xc)?;
+        } else {
+            kb.fp2("VMAX", VACC, VACC, xc)?;
+        }
+    }
+    let sum = kb.hsum_wide(WACC, wl, S1, S2)?;
+    let mx = kb.hmax(VACC, cl, S1, S2)?;
+    let es = ((sum - ref_sum) / ref_sum).abs();
+    let em = ((mx - ref_max) / ref_max).abs();
+    let rel_error = ((es * es + em * em) / 2.0).sqrt();
+    let (machine, program) = kb.finish();
+    Ok(KernelRun { rel_error, machine, program })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sizes_must_tile() {
+        let pipe = Pipeline::for_format("t8").unwrap();
+        assert!(run_dot(&pipe, 63, 1, CodecMode::default()).is_err());
+        assert!(run_dot(&pipe, 0, 1, CodecMode::default()).is_err());
+        assert!(run_dot(&pipe, 128, 1, CodecMode::default()).is_ok());
+    }
+
+    #[test]
+    fn dot_instruction_counts_are_exact() {
+        // n=128: tiles = n / compute_lanes, one dp each (+2 converts for
+        // OFP8), then log₂(wide_lanes) tree adds.
+        for (fmt, dp, cvt, hadd) in
+            [("t8", 2u64, 0u64, 5u64), ("t16", 4, 0, 4), ("bf16", 4, 0, 4), ("e4m3", 4, 8, 4)]
+        {
+            let pipe = Pipeline::for_format(fmt).unwrap();
+            let r = run_dot(&pipe, 128, 3, CodecMode::default()).unwrap();
+            let counts = &r.machine.counts;
+            assert_eq!(counts.get(pipe.dp).copied().unwrap_or(0), dp, "{fmt} dp");
+            let cvt_seen: u64 = pipe
+                .cvt_in
+                .iter()
+                .chain(pipe.cvt_out.iter())
+                .map(|m| counts.get(*m).copied().unwrap_or(0))
+                .sum();
+            assert_eq!(cvt_seen, cvt, "{fmt} cvt");
+            assert_eq!(r.machine.executed, dp + cvt + hadd, "{fmt} total");
+            assert_eq!(r.program.len() as u64, r.machine.executed, "{fmt} trace");
+        }
+    }
+
+    #[test]
+    fn every_kernel_runs_on_every_format() {
+        type KernelFn = fn(&Pipeline, usize, u64, CodecMode) -> Result<KernelRun>;
+        let kernels: [(&str, KernelFn); 6] = [
+            ("dot", run_dot),
+            ("axpy", run_axpy),
+            ("poly", run_poly),
+            ("softmax", run_softmax),
+            ("conv1d", run_conv1d),
+            ("reduce", run_reduce),
+        ];
+        for (kname, k) in kernels {
+            for fmt in Pipeline::ALL_FORMATS {
+                let pipe = Pipeline::for_format(fmt).unwrap();
+                let r = k(&pipe, 64, 7, CodecMode::default()).unwrap();
+                assert!(
+                    r.rel_error.is_finite() && r.rel_error >= 0.0,
+                    "{kname}/{fmt}: {}",
+                    r.rel_error
+                );
+                assert!(r.machine.executed > 0, "{kname}/{fmt}");
+                assert_eq!(r.program.len() as u64, r.machine.executed, "{kname}/{fmt}");
+            }
+        }
+    }
+}

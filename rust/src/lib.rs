@@ -37,6 +37,7 @@ pub mod util;
 pub mod num;
 pub mod isa;
 pub mod sim;
+pub mod kernels;
 pub mod matrix;
 pub mod harness;
 pub mod runtime;

@@ -7,13 +7,15 @@
 //! takum-avx10 tables  [--category b|m|i|f|c] [--summary] [--tsv]
 //! takum-avx10 simulate <program.s> [--dump vN:TYPE ...]
 //! takum-avx10 gemm    [--n 64] [--format t8|bf16|e4m3|e5m2]
+//! takum-avx10 kernels [--sizes 64,128] [--kernels dot,...] [--formats t8,...]
 //! takum-avx10 artifacts
 //! ```
 //!
 //! (No `clap` in the offline image — a small hand-rolled parser below.)
 
 use anyhow::{anyhow, bail, Context, Result};
-use takum_avx10::coordinator::{sweep, Engine, SweepConfig};
+use takum_avx10::coordinator::{kernel_sweep, sweep, Engine, KernelSweepConfig, SweepConfig};
+use takum_avx10::kernels::{Kernel, Pipeline};
 use takum_avx10::harness::{figure1, figure2, tables};
 use takum_avx10::isa::database::Category;
 use takum_avx10::matrix::generator::CollectionSpec;
@@ -78,6 +80,7 @@ fn run(raw: &[String]) -> Result<()> {
         "tables" => cmd_tables(&args),
         "simulate" => cmd_simulate(&args),
         "gemm" => cmd_gemm(&args),
+        "kernels" => cmd_kernels(&args),
         "artifacts" => cmd_artifacts(),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -98,6 +101,8 @@ commands:
           [--summary] [--tsv] [--rvv]
   simulate FILE [--dump vN:TYPE]  run an assembly program on the simulator
   gemm    [--n 64] [--format t8|t16|bf16|f16]  quantised GEMM on the simulator
+  kernels [--sizes 64,128] [--kernels dot,softmax,...] [--formats t8,e4m3,...]
+          [--seed S] [--workers W]  workload suite on both ISAs (parallel sweep)
   artifacts                       list AOT artifacts loadable by the runtime
 ";
 
@@ -223,6 +228,44 @@ fn cmd_gemm(args: &Args) -> Result<()> {
     let fname = args.get("format").unwrap_or("t8");
     let out = takum_avx10::harness::gemm::run_sim_gemm(n, fname, 0xBEEF)?;
     print!("{out}");
+    Ok(())
+}
+
+/// Kernel suite: every requested kernel × format × size on both ISAs,
+/// fanned out across the worker pool.
+fn cmd_kernels(args: &Args) -> Result<()> {
+    let defaults = KernelSweepConfig::default();
+    let mut cfg = KernelSweepConfig {
+        seed: args.get_parse("seed", defaults.seed)?,
+        workers: args.get_parse("workers", defaults.workers)?,
+        ..defaults
+    };
+    if let Some(sizes) = args.get("sizes") {
+        cfg.sizes = sizes
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().map_err(|_| anyhow!("bad size {s:?}")))
+            .collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(kernels) = args.get("kernels") {
+        cfg.kernels =
+            kernels.split(',').map(|s| Kernel::parse(s.trim())).collect::<Result<Vec<_>>>()?;
+    }
+    if let Some(formats) = args.get("formats") {
+        cfg.formats = formats
+            .split(',')
+            .map(|s| {
+                let s = s.trim();
+                Pipeline::ALL_FORMATS
+                    .iter()
+                    .copied()
+                    .find(|&f| f == s)
+                    .ok_or_else(|| anyhow!("unknown format {s:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+    }
+    let (results, metrics) = kernel_sweep(&cfg)?;
+    print!("{}", takum_avx10::kernels::render(&results));
+    eprint!("{}", metrics.render());
     Ok(())
 }
 

@@ -33,16 +33,28 @@ impl ConversionError {
 
 /// Relative 2-norm error of round-tripping `values` through `format`.
 ///
-/// Hot path of the Figure 2 sweep. 8-bit formats take the
-/// [`crate::num::lut`] fast path (bisection-derived decision boundaries,
-/// bit-identical to the codec — §Perf iteration 2); everything else runs
-/// the codec directly.
+/// Hot path of the Figure 2 sweep. Formats with a process-wide cached
+/// table take the [`crate::num::lut`] fast path — the 8-bit panel since
+/// §Perf iteration 2, and, since the branch-free boundary search
+/// ([`crate::num::lut::Lut8::roundtrip_branchless`]), the 16-bit panel
+/// too. Both are bit-identical to the codec (bisection-derived decision
+/// boundaries); everything else runs [`relative_error_arith`].
 pub fn relative_error(values: &[f64], format: &dyn NumberFormat) -> ConversionError {
-    if format.bits() == 8 {
-        if let Some(table) = crate::num::lut::cached(&format.name()) {
-            return relative_error_lut(values, table);
-        }
+    let table = match format.bits() {
+        8 => crate::num::lut::cached(&format.name()),
+        16 => crate::num::lut::cached16(&format.name()),
+        _ => None,
+    };
+    match table {
+        Some(table) => relative_error_lut(values, table),
+        None => relative_error_arith(values, format),
     }
+}
+
+/// The arithmetic-codec reference path (no lookup tables) — kept public
+/// so the LUT-vs-codec equivalence tests and benches can pin the fast
+/// path against it.
+pub fn relative_error_arith(values: &[f64], format: &dyn NumberFormat) -> ConversionError {
     let mut num = Dd::ZERO;
     let mut den = Dd::ZERO;
     for &v in values {
@@ -67,7 +79,7 @@ fn relative_error_lut(values: &[f64], table: &crate::num::lut::Lut8) -> Conversi
         if table.overflows(v) {
             return ConversionError::Exceeded;
         }
-        let rt = if v.is_nan() { f64::NAN } else { table.roundtrip(v) };
+        let rt = if v.is_nan() { f64::NAN } else { table.roundtrip_branchless(v) };
         if !rt.is_finite() && v.is_finite() {
             return ConversionError::Exceeded;
         }
@@ -180,6 +192,34 @@ mod tests {
                 assert!((e - expect).abs() < 1e-15, "e={e} expect={expect}");
             }
             _ => panic!(),
+        }
+    }
+
+    /// The LUT fast path (8- and 16-bit panels) must agree with the kept
+    /// arithmetic-codec path exactly, including the ∞ marker. posit16 has
+    /// no cached table, so both names hit the same code — a sanity anchor.
+    #[test]
+    fn lut_path_equals_arith_path() {
+        let mut r = crate::util::rng::Rng::new(0xE0);
+        for name in ["takum8", "e4m3", "e5m2", "takum16", "float16", "bfloat16", "posit16"] {
+            let f = format_by_name(name).unwrap();
+            // Narrow range: finite for every 16-bit format (exercises the
+            // error accumulation); wide range: exercises the ∞ marker.
+            for (emin, emax) in [(-10i32, 8i32), (-45, 45)] {
+                for trial in 0..20 {
+                    let vals: Vec<f64> = (0..300).map(|_| r.wide_f64(emin, emax)).collect();
+                    let fast = relative_error(&vals, &*f);
+                    let slow = relative_error_arith(&vals, &*f);
+                    match (fast, slow) {
+                        (ConversionError::Finite(a), ConversionError::Finite(b)) => {
+                            assert_eq!(a.to_bits(), b.to_bits(), "{name} trial={trial}")
+                        }
+                        (a, b) => {
+                            assert_eq!(a.is_exceeded(), b.is_exceeded(), "{name}: {a:?} {b:?}")
+                        }
+                    }
+                }
+            }
         }
     }
 

@@ -178,6 +178,34 @@ impl Lut8 {
         }]
     }
 
+    /// Count of decision boundaries ≤ `k`, via a **branch-free** binary
+    /// search: the loop body is a compare + conditional add (cmov-
+    /// friendly, no data-dependent branch), so random probe keys pay no
+    /// misprediction penalty. On the 16-bit tables (64 Ki boundaries, 17
+    /// probe levels) the mispredicted-branch cost of `partition_point`
+    /// was what made the sweep's earlier LUT attempt *slower* than the
+    /// arithmetic codecs — see the §Perf note on [`cached`].
+    #[inline]
+    fn partition_branchless(&self, k: u64) -> usize {
+        let b = &self.boundaries;
+        let mut base = 0usize;
+        let mut len = b.len();
+        // Invariant: the answer lies in [base, base + len].
+        while len > 1 {
+            let half = len / 2;
+            base += usize::from(b[base + half - 1] <= k) * half;
+            len -= half;
+        }
+        base + usize::from(len == 1 && b[base] <= k)
+    }
+
+    /// Branch-free form of [`Lut8::roundtrip`] (identical result) — the
+    /// sweep's 16-bit round-trip fast path.
+    #[inline]
+    pub fn roundtrip_branchless(&self, x: f64) -> f64 {
+        self.sorted_vals[self.partition_branchless(f64_key(x))]
+    }
+
     /// Decode a slice of bit patterns (low `n` bits each) into `out`.
     /// This is the vectorised form used by the simulator's lane engine:
     /// a pure table hit per element, no per-element dispatch.
@@ -227,14 +255,17 @@ impl Lut8 {
 
 /// Process-wide cached tables for the 8-bit Figure 2 formats.
 ///
-/// §Perf note: the sweep's round-trip fast path stays 8-bit-only — 16-bit
-/// round-trips through the boundary search were tried (iteration 3) and
-/// *regressed* the sweep by ~45%, because a 17-step binary search over a
-/// 512 KiB boundary array is cache-hostile compared to the arithmetic
-/// codec. The simulator's lane engine is different: its hot operation is
-/// *decode* (three decodes per FMA lane vs one encode), and decode through
-/// [`Lut8::decode_slice`] is a pure table hit, so the 16-bit tables below
-/// ([`cached16`]) pay for themselves there.
+/// §Perf note: an earlier attempt (iteration 3) to route the sweep's
+/// 16-bit round-trips through the boundary search *regressed* the sweep
+/// by ~45% — a 17-step `partition_point` over a 512 KiB boundary array
+/// mispredicts nearly every probe on random keys. The branch-free search
+/// ([`Lut8::roundtrip_branchless`]) removes exactly that cost (compare +
+/// cmov per level), so the 16-bit panel now takes the LUT path too (see
+/// `matrix::norms::relative_error`), with the arithmetic codecs kept as
+/// the reference (`relative_error_arith`) for equivalence tests. The
+/// simulator's lane engine was never affected: its hot operation is
+/// *decode* (three decodes per FMA lane vs one encode), a pure table hit
+/// through [`Lut8::decode_slice`].
 pub fn cached(name: &str) -> Option<&'static Lut8> {
     static TABLES: OnceLock<Vec<Lut8>> = OnceLock::new();
     let tables = TABLES.get_or_init(|| {
@@ -246,9 +277,10 @@ pub fn cached(name: &str) -> Option<&'static Lut8> {
     tables.iter().find(|t| t.name() == name)
 }
 
-/// Process-wide cached tables for the 16-bit formats (the simulator lane
-/// engine's PT16/PH/PBF16 fast path; see the §Perf note on [`cached`] for
-/// why the matrix sweep does not use these).
+/// Process-wide cached tables for the 16-bit formats: the simulator lane
+/// engine's PT16/PH/PBF16 fast path, and — since the branch-free search
+/// ([`Lut8::roundtrip_branchless`], see the §Perf note on [`cached`]) —
+/// the matrix sweep's 16-bit panel round-trip too.
 pub fn cached16(name: &str) -> Option<&'static Lut8> {
     static TABLES: OnceLock<Vec<Lut8>> = OnceLock::new();
     let tables = TABLES.get_or_init(|| {
@@ -421,6 +453,48 @@ mod tests {
                 "re-encode bits={bits:#06x} v={via_codec}"
             );
             assert_eq!(lut.encode_bits(via_codec), bits, "idempotence bits={bits:#06x}");
+        }
+    }
+
+    /// The branch-free search must agree with `partition_point` on every
+    /// table: random wide-range probes, every representable value, and
+    /// probes just below/at every decision boundary.
+    #[test]
+    fn branchless_roundtrip_matches_partition_point() {
+        let names: Vec<&str> = crate::num::registry::LUT8_FORMATS
+            .iter()
+            .chain(crate::num::registry::LUT16_FORMATS.iter())
+            .copied()
+            .collect();
+        for name in names {
+            let f = format_by_name(name).unwrap();
+            let lut = Lut8::build(&*f);
+            let mut r = Rng::new(0xB1A5);
+            for _ in 0..20_000 {
+                let x = r.wide_f64(-60, 60);
+                assert_eq!(
+                    lut.roundtrip_branchless(x),
+                    lut.roundtrip(x),
+                    "{name} x={x}"
+                );
+            }
+            for &v in &lut.sorted_vals {
+                assert_eq!(lut.roundtrip_branchless(v), v, "{name} v={v}");
+            }
+            // Boundary probes (8-bit tables are small enough to sweep
+            // exhaustively; sample the 16-bit ones).
+            let stride = (lut.boundaries.len() / 4096).max(1);
+            for i in (0..lut.boundaries.len()).step_by(stride) {
+                let b = lut.boundaries[i];
+                for k in [b - 1, b] {
+                    let x = key_f64(k);
+                    assert_eq!(
+                        lut.roundtrip_branchless(x),
+                        lut.roundtrip(x),
+                        "{name} boundary {i} k={k:#x}"
+                    );
+                }
+            }
         }
     }
 

@@ -117,7 +117,9 @@ impl Runtime {
         let mut paths: Vec<PathBuf> = entries
             .filter_map(|e| e.ok())
             .map(|e| e.path())
-            .filter(|p| p.file_name().and_then(|s| s.to_str()).is_some_and(|s| s.ends_with(".hlo.txt")))
+            .filter(|p| {
+                p.file_name().and_then(|s| s.to_str()).is_some_and(|s| s.ends_with(".hlo.txt"))
+            })
             .collect();
         paths.sort();
         for p in paths {

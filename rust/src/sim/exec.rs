@@ -9,16 +9,18 @@
 //! Each executor then runs over whole register planes with a single
 //! dispatch: source planes are decoded up front through a [`LaneCodec`]
 //! (8/16-bit formats hit the cached `Lut8` tables of [`crate::num::lut`];
-//! wider formats use the arithmetic codecs), the operation is applied per
-//! active lane, and results are encoded through the shared masked plane
-//! writer. [`CodecMode::Arith`] preserves the pre-refactor per-lane
-//! arithmetic path for equivalence tests and benches.
+//! wider formats use the arithmetic codecs), the operation is applied
+//! over the whole plane, and results are **batch-encoded** through
+//! [`LaneCodec::encode_slice`] (one `Lut8` table sweep for all-finite
+//! takum planes) before the masked plane writer stores the active lanes.
+//! [`CodecMode::Arith`] preserves the pre-refactor per-lane arithmetic
+//! path for equivalence tests and benches.
 //!
 //! A future SIMD backend (e.g. AVX-512 intrinsics or a GPU lane kernel)
 //! plugs in at the [`LaneCodec`] plane boundary: `decode_plane` /
-//! `encode` already see whole-register slices, so a backend only needs to
-//! provide vectorised implementations of those two hooks plus the FMA
-//! plane loop — the plan cache and mask policy stay unchanged.
+//! `encode_slice` already see whole-register slices, so a backend only
+//! needs to provide vectorised implementations of those two hooks plus
+//! the FMA plane loop — the plan cache and mask policy stay unchanged.
 //!
 //! Design notes:
 //!
@@ -172,6 +174,31 @@ impl Machine {
             Operand::Imm(v) => Ok(*v),
             _ => bail!("expected immediate, got {o:?}"),
         }
+    }
+
+    /// Encode a whole plane of f64 lane results through the codec's
+    /// batched encoder ([`LaneCodec::encode_slice`] — a single `Lut8`
+    /// table sweep for all-finite takum planes), then store under the
+    /// instruction's write mask. Counterpart of the batched
+    /// `decode_plane` on the read side: encode used to run per active
+    /// lane inside the masked writer.
+    fn write_lanes_f64(
+        &mut self,
+        ins: &Instruction,
+        codec: &LaneCodec,
+        width: u32,
+        lanes: usize,
+        vals: &[f64],
+    ) -> Result<()> {
+        // Masked stores keep the per-active-lane encode: batch-encoding a
+        // sparse plane would pay up to 64 boundary searches for lanes the
+        // mask then discards.
+        if matches!(ins.mask, Some(k) if k != 0) {
+            return self.write_lanes(ins, width, lanes, |i| codec.encode(vals[i]));
+        }
+        let mut bits = [0u64; 64];
+        codec.encode_slice(&vals[..lanes], &mut bits[..lanes]);
+        self.write_lanes(ins, width, lanes, |i| bits[i])
     }
 
     /// Apply write-masking and store lane results.
@@ -359,9 +386,10 @@ impl Machine {
             codec.decode_plane(&acc, w, lanes, &mut xz);
         }
 
-        self.write_lanes(ins, w, lanes, |i| {
+        let mut vals = [0.0f64; 64];
+        for (i, v) in vals.iter_mut().enumerate().take(lanes) {
             let (x, y, z) = (xa[i], xb[i], xz[i]);
-            let r = match op {
+            *v = match op {
                 FpOp::Add => x + y,
                 FpOp::Sub => x - y,
                 FpOp::Mul => x * y,
@@ -427,8 +455,8 @@ impl Machine {
                 }
                 FpOp::Class => unreachable!(),
             };
-            codec.encode(r)
-        })
+        }
+        self.write_lanes_f64(ins, &codec, w, lanes, &vals)
     }
 
     fn exec_broadcast(&mut self, ins: &Instruction, w: u32) -> Result<()> {
@@ -570,13 +598,20 @@ impl Machine {
         let a = self.regs.v[self.vreg(&ins.srcs[0])?];
         let b = self.regs.v[self.vreg(&ins.srcs[1])?];
         let bc = LaneCodec::resolve(LaneType::Mini(BF16), self.mode);
-        self.write_lanes(ins, 16, 32, |i| {
+        let mut vals = [0.0f64; 64];
+        for (i, v) in vals.iter_mut().enumerate().take(32) {
             let src = if i < 16 { &b } else { &a };
-            bc.encode(F32.decode(src.get(32, i % 16)))
-        })
+            *v = F32.decode(src.get(32, i % 16));
+        }
+        self.write_lanes_f64(ins, &bc, 16, 32, &vals)
     }
 
-    fn exec_convert(&mut self, ins: &Instruction, src_ty: LaneType, dst_ty: LaneType) -> Result<()> {
+    fn exec_convert(
+        &mut self,
+        ins: &Instruction,
+        src_ty: LaneType,
+        dst_ty: LaneType,
+    ) -> Result<()> {
         let a = self.regs.v[self.vreg(&ins.srcs[0])?];
         let (ws, wd) = (src_ty.width(), dst_ty.width());
         // Width-changing packed converts operate on min(lanes_src, lanes_dst).
@@ -585,7 +620,7 @@ impl Machine {
         let dc = LaneCodec::resolve(dst_ty, self.mode);
         let mut xs = [0.0f64; 64];
         sc.decode_plane(&a, ws, lanes, &mut xs);
-        self.write_lanes(ins, wd, lanes, |i| dc.encode(xs[i]))
+        self.write_lanes_f64(ins, &dc, wd, lanes, &xs)
     }
 
     /// Widening dot products: `VDPPT8PT16`-style (pairs of src lanes fused
@@ -607,12 +642,14 @@ impl Machine {
         sc.decode_plane(&b, ws, nlanes, &mut xb);
         let mut xz = [0.0f64; 64];
         dc.decode_plane(&acc, wd, lanes, &mut xz);
-        self.write_lanes(ins, wd, lanes, |i| {
+        let mut vals = [0.0f64; 64];
+        for (i, v) in vals.iter_mut().enumerate().take(lanes) {
             let mut sum = xz[i];
             sum += xa[2 * i] * xb[2 * i];
             sum += xa[2 * i + 1] * xb[2 * i + 1];
-            dc.encode(sum)
-        })
+            *v = sum;
+        }
+        self.write_lanes_f64(ins, &dc, wd, lanes, &vals)
     }
 }
 
@@ -721,7 +758,8 @@ mod tests {
             // Reference: decode the *takum8-quantised* values, multiply,
             // accumulate, takum16-quantise.
             let aq = |v: f64| t8.decode(t8.encode(v));
-            let want = t16.decode(t16.encode(aq(a[2 * i]) * aq(b[2 * i]) + aq(a[2 * i + 1]) * aq(b[2 * i + 1])));
+            let pair = aq(a[2 * i]) * aq(b[2 * i]) + aq(a[2 * i + 1]) * aq(b[2 * i + 1]);
+            let want = t16.decode(t16.encode(pair));
             assert_eq!(r[i], want, "lane {i}");
         }
     }

@@ -107,6 +107,10 @@ impl LaneType {
             "NEPBF16" | "PBF16" => (LaneType::Mini(BF16), true),
             "BF8" => (LaneType::Mini(E5M2), true),
             "HF8" => (LaneType::Mini(E4M3), true),
+            // Saturating OFP8 stores (the AVX10.2 `VCVTPH2HF8S`-style
+            // conversion targets: clamp at max finite instead of ±∞).
+            "BF8S" => (LaneType::MiniSat(E5M2), true),
+            "HF8S" => (LaneType::MiniSat(E4M3), true),
             _ => return None,
         })
     }
@@ -228,13 +232,35 @@ impl LaneCodec {
         }
     }
 
+    /// Batched [`LaneCodec::encode`] — bit-identical to the scalar path.
+    /// All-finite takum planes take the [`Lut8::encode_slice`] table sweep
+    /// (the common case: takum encodes every finite value, and arithmetic
+    /// results are NaN-free outside deliberate NaR tests); IEEE minifloat
+    /// planes stay per-value because their encode has value-dependent
+    /// fallbacks (NaN, signed zero, non-saturating overflow) that a
+    /// straight table sweep cannot reproduce.
+    pub fn encode_slice(&self, xs: &[f64], out: &mut [u64]) {
+        assert_eq!(xs.len(), out.len());
+        if let LaneCodec::Takum { lut: Some(t), .. } = self {
+            if xs.iter().all(|x| x.is_finite()) {
+                t.encode_slice(xs, out);
+                return;
+            }
+        }
+        for (o, &x) in out.iter_mut().zip(xs) {
+            *o = self.encode(x);
+        }
+    }
+
     /// Encode `values` into the first lanes of a fresh register
-    /// (remaining lanes zero).
+    /// (remaining lanes zero), through [`LaneCodec::encode_slice`].
     pub fn encode_plane(&self, width: u32, values: &[f64]) -> VecReg {
         assert!(values.len() <= VecReg::lanes(width));
+        let mut bits = [0u64; 64];
+        self.encode_slice(values, &mut bits[..values.len()]);
         let mut r = VecReg::ZERO;
-        for (i, v) in values.iter().enumerate() {
-            r.set(width, i, self.encode(*v));
+        for (i, &b) in bits.iter().enumerate().take(values.len()) {
+            r.set(width, i, b);
         }
         r
     }
@@ -776,7 +802,8 @@ mod tests {
             "VADDPT16", "VSQRTST32", "VFMADD231PT32", "VDPPT8PT16", "VCVTPT162PS16",
             "VCMPPT16", "VPXORQ", "VBROADCASTB16", "VPMOVB162M", "VPMOVM2B16", "VPSLLB16",
             "VPADDU8", "KANDB8", "KUNPCKBW", "VKUNPCKB8B16", "VADDNEPBF16", "VCVTNE2PS2BF16",
-            "VRNDSCALEPT32", "VCLASSPT32",
+            "VRNDSCALEPT32", "VCLASSPT32", "VCVTPH2HF8S", "VCVTPH2BF8S", "VCVTPT162PT8",
+            "VCVTPT322PT16", "VCVTNEPS2BF16", "VSCALEFPT8", "VDIVNEPBF16",
         ] {
             LanePlan::resolve(m).unwrap_or_else(|e| panic!("{m}: {e}"));
         }
@@ -806,6 +833,54 @@ mod tests {
         // saturation unchanged
         assert_eq!(s16.encode(1e9), 0x7FFF);
         assert_eq!(s16.encode(-1e9), 0x8000);
+    }
+
+    /// The plane-writer batching gate: `encode_slice` must equal the
+    /// scalar encoder element-for-element on every narrow format, in both
+    /// codec modes, including specials (which force the per-value
+    /// fallback path).
+    #[test]
+    fn encode_slice_matches_scalar_encode() {
+        let mut r = Rng::new(0xBA7C);
+        for (name, ty) in lut_lane_types() {
+            for mode in [CodecMode::Lut, CodecMode::Arith] {
+                let codec = LaneCodec::resolve(ty, mode);
+                let mut xs: Vec<f64> = (0..64).map(|_| r.wide_f64(-40, 40)).collect();
+                // Splice in specials so the takum fast path is exercised
+                // both with and without its all-finite precondition.
+                xs[7] = 0.0;
+                xs[11] = -0.0;
+                let mut out = vec![0u64; xs.len()];
+                codec.encode_slice(&xs, &mut out);
+                for (i, &x) in xs.iter().enumerate() {
+                    assert_eq!(out[i], codec.encode(x), "{name} {mode:?} finite i={i}");
+                }
+                xs[3] = f64::NAN;
+                xs[5] = f64::INFINITY;
+                xs[9] = f64::NEG_INFINITY;
+                codec.encode_slice(&xs, &mut out);
+                for (i, &x) in xs.iter().enumerate() {
+                    assert_eq!(out[i], codec.encode(x), "{name} {mode:?} special i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn saturating_ofp8_store_suffixes_parse() {
+        assert_eq!(
+            LaneType::parse_fp("HF8S"),
+            Some((LaneType::MiniSat(E4M3), true))
+        );
+        assert_eq!(
+            LaneType::parse_fp("BF8S"),
+            Some((LaneType::MiniSat(E5M2), true))
+        );
+        // The store conversion saturates at max finite instead of ±∞.
+        let sat = LaneType::MiniSat(E4M3);
+        let e4_max = crate::num::E4M3.max_finite();
+        assert_eq!(sat.decode(sat.encode(1e6)), e4_max);
+        assert_eq!(sat.decode(sat.encode(-1e6)), -e4_max);
     }
 
     #[test]

@@ -75,8 +75,16 @@ mod tests {
     #[test]
     fn build_and_histogram() {
         let mut p = Program::default();
-        p.push(Instruction::new("VADDPT8", Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]));
-        p.push(Instruction::new("VADDPT8", Operand::Vreg(3), vec![Operand::Vreg(2), Operand::Vreg(1)]));
+        p.push(Instruction::new(
+            "VADDPT8",
+            Operand::Vreg(2),
+            vec![Operand::Vreg(0), Operand::Vreg(1)],
+        ));
+        p.push(Instruction::new(
+            "VADDPT8",
+            Operand::Vreg(3),
+            vec![Operand::Vreg(2), Operand::Vreg(1)],
+        ));
         p.push(
             Instruction::new("VMULPT8", Operand::Vreg(4), vec![Operand::Vreg(3), Operand::Vreg(0)])
                 .with_mask(1, true),

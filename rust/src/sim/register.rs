@@ -114,7 +114,8 @@ mod tests {
             let mut r = VecReg::ZERO;
             let n = VecReg::lanes(width);
             for i in 0..n {
-                r.set(width, i, (i as u64).wrapping_mul(0x9E37_79B9) & ((1u64 << (width.min(63))) - 1));
+                let v = (i as u64).wrapping_mul(0x9E37_79B9) & ((1u64 << (width.min(63))) - 1);
+                r.set(width, i, v);
             }
             for i in 0..n {
                 let want = (i as u64).wrapping_mul(0x9E37_79B9) & ((1u64 << (width.min(63))) - 1);

@@ -1,0 +1,170 @@
+//! Integration over the kernel-builder subsystem: cross-ISA equivalence
+//! of the suite, golden instruction counts, codec-mode bit-identity, and
+//! determinism of the parallel kernel sweep.
+
+use takum_avx10::coordinator::{kernel_sweep, KernelSweepConfig};
+use takum_avx10::kernels::{run_suite, Isa, Kernel, KernelSpec, Pipeline};
+use takum_avx10::sim::CodecMode;
+
+/// Both ISAs produce finite, comparable relative errors on shared inputs
+/// for every kernel. The bounds are deliberately loose sanity gates
+/// (order of magnitude, not accuracy targets): 16-bit formats compute
+/// with ≥8 significand bits and land far below them; the 8-bit softmax
+/// runs its whole range-reduced exp in takum8 arithmetic, which is
+/// exactly the "8-bit general-purpose arithmetic" stress the paper
+/// claims takum survives — coarse, but finite and normalised.
+#[test]
+fn cross_isa_equivalence_finite_and_comparable() {
+    let results = run_suite(128, 0xE0_11, CodecMode::default()).unwrap();
+    assert_eq!(results.len(), 36); // 6 kernels × 6 formats
+    for r in &results {
+        assert!(
+            r.rel_error.is_finite() && r.rel_error >= 0.0,
+            "{}/{}: rel_error={}",
+            r.kernel,
+            r.format,
+            r.rel_error
+        );
+        let bound = match (r.format.as_str(), r.kernel.as_str()) {
+            // 16-bit storage (and the OFP8 pipelines, which compute in PH).
+            ("t16" | "bf16" | "f16", _) => 0.5,
+            (_, "softmax") => 6.0,
+            _ => 1.5,
+        };
+        assert!(r.rel_error < bound, "{}/{}: rel_error={}", r.kernel, r.format, r.rel_error);
+    }
+    // Every kernel ran on both ISAs.
+    for k in Kernel::ALL {
+        let of_kernel: Vec<_> = results.iter().filter(|r| r.kernel == k.name()).collect();
+        assert!(of_kernel.iter().any(|r| r.isa == Isa::Proposed), "{}", k.name());
+        assert!(of_kernel.iter().any(|r| r.isa == Isa::Baseline), "{}", k.name());
+    }
+    // The wider takum is strictly more accurate on the dot product (a
+    // ~100× expected gap; the assertion has orders of magnitude of
+    // slack).
+    let err = |kernel: &str, format: &str| {
+        results
+            .iter()
+            .find(|r| r.kernel == kernel && r.format == format)
+            .unwrap()
+            .rel_error
+    };
+    assert!(err("dot", "t16") < err("dot", "t8"));
+}
+
+/// Golden instruction-count shape per kernel/format: the OFP8 pipelines
+/// must pay nonzero storage↔compute conversions, the takum (and native
+/// bf16/fp16) pipelines none — on every kernel of the suite.
+#[test]
+fn golden_convert_counts_ofp8_pays_takum_does_not() {
+    let results = run_suite(64, 3, CodecMode::default()).unwrap();
+    for r in &results {
+        match r.format.as_str() {
+            "e4m3" | "e5m2" => assert!(
+                r.convert_instructions > 0,
+                "{}/{} should pay the OFP8 convert tax",
+                r.kernel,
+                r.format
+            ),
+            _ => assert_eq!(
+                r.convert_instructions, 0,
+                "{}/{} must not convert",
+                r.kernel, r.format
+            ),
+        }
+        // dp-pipeline kernels actually use the widening dot product.
+        if matches!(r.kernel.as_str(), "dot" | "reduce" | "softmax") {
+            assert!(r.dp_instructions > 0, "{}/{}", r.kernel, r.format);
+        }
+        // Proposed-ISA programs never emit a baseline mnemonic and vice
+        // versa: the dp mnemonic is format-specific.
+        let pipe = Pipeline::for_format(&r.format).unwrap();
+        assert_eq!(r.counts.get(pipe.dp).copied().unwrap_or(0), r.dp_instructions);
+    }
+}
+
+/// Exact golden counts for AXPY at n=128 (1 broadcast-constant setup +
+/// one FMA per tile; OFP8 adds 2 promotes + 1 demote per tile and 1
+/// promote for the constant). Derived from the lowering, independent of
+/// data.
+#[test]
+fn golden_axpy_instruction_counts() {
+    for (fmt, executed, converts) in [("t8", 3u64, 0u64), ("bf16", 5, 0), ("e4m3", 18, 13)] {
+        let spec = KernelSpec { kernel: Kernel::Axpy, format: fmt, n: 128, seed: 1 };
+        let r = spec.run(CodecMode::default()).unwrap();
+        assert_eq!(r.executed, executed, "{fmt} executed");
+        assert_eq!(r.convert_instructions, converts, "{fmt} converts");
+    }
+}
+
+/// `CodecMode::Arith` vs the default LUT engine, routed through the
+/// heaviest kernel (softmax: converts, FMA chains, both reduction trees,
+/// `VRNDSCALE`/`VSCALEF`): bit-identical error and identical instruction
+/// streams.
+#[test]
+fn softmax_arith_vs_lut_bit_identity() {
+    for fmt in ["t8", "t16", "bf16", "e4m3"] {
+        let spec = KernelSpec { kernel: Kernel::Softmax, format: fmt, n: 64, seed: 7 };
+        let fast = spec.run(CodecMode::Lut).unwrap();
+        let slow = spec.run(CodecMode::Arith).unwrap();
+        assert_eq!(
+            fast.rel_error.to_bits(),
+            slow.rel_error.to_bits(),
+            "{fmt}: lut={} arith={}",
+            fast.rel_error,
+            slow.rel_error
+        );
+        assert_eq!(fast.executed, slow.executed, "{fmt}");
+        assert_eq!(fast.counts, slow.counts, "{fmt}");
+    }
+}
+
+/// The parallel kernel sweep is a pure function of its config: identical
+/// results for 1, 2 and 5 workers, matching the sequential suite.
+#[test]
+fn kernel_sweep_deterministic_and_matches_suite() {
+    let cfg = |workers: usize| KernelSweepConfig {
+        kernels: Kernel::ALL.to_vec(),
+        formats: vec!["t8", "t16", "bf16", "e4m3"],
+        sizes: vec![64, 128],
+        seed: 0xD15C,
+        workers,
+        mode: CodecMode::default(),
+    };
+    let (base, metrics) = kernel_sweep(&cfg(1)).unwrap();
+    assert_eq!(base.len(), 6 * 4 * 2);
+    assert_eq!(metrics.per_worker.iter().sum::<usize>(), base.len());
+    for workers in [2usize, 5] {
+        let (par, m) = kernel_sweep(&cfg(workers)).unwrap();
+        assert_eq!(par.len(), base.len());
+        for (a, b) in par.iter().zip(&base) {
+            assert_eq!((&a.kernel, &a.format, a.n), (&b.kernel, &b.format, b.n));
+            assert_eq!(
+                a.rel_error.to_bits(),
+                b.rel_error.to_bits(),
+                "{}/{} n={} workers={workers}",
+                a.kernel,
+                a.format,
+                a.n
+            );
+            assert_eq!(a.executed, b.executed);
+            assert_eq!(a.counts, b.counts);
+        }
+        assert_eq!(m.per_worker.iter().sum::<usize>(), base.len());
+    }
+}
+
+/// The refactored GEMM emits through the same builder: its instruction
+/// mix must stay exactly the dp + convert vocabulary of its pipeline (no
+/// stray mnemonics), with the t8-vs-OFP8 count relationships the E11
+/// tests already pin.
+#[test]
+fn gemm_emits_through_the_shared_pipeline_vocabulary() {
+    use takum_avx10::harness::gemm::gemm;
+    let t8 = gemm(32, "t8", 2, 1.0).unwrap();
+    assert_eq!(t8.executed, t8.dp_instructions);
+    assert_eq!(t8.convert_instructions, 0);
+    let e4 = gemm(32, "e4m3", 2, 1.0).unwrap();
+    assert_eq!(e4.executed, e4.dp_instructions + e4.convert_instructions);
+    assert!(e4.convert_instructions == 2 * e4.dp_instructions);
+}
