@@ -4,7 +4,7 @@
 
 use takum_avx10::coordinator::{kernel_sweep, KernelSweepConfig};
 use takum_avx10::kernels::{Kernel, KernelSpec, Pipeline};
-use takum_avx10::sim::CodecMode;
+use takum_avx10::sim::{Backend, CodecMode};
 use takum_avx10::util::bench::Bencher;
 
 fn main() {
@@ -48,6 +48,34 @@ fn main() {
     println!("\n-- softmax speedup (arith / lut) --");
     for (f, ratio) in &ratios {
         println!("softmax {f:<6} {ratio:>6.2}x");
+    }
+
+    // PlaneBackend comparison on the FMA-plane-heavy kernels: poly is a
+    // pure packed-FMA latency chain, axpy one FMA + store per tile,
+    // softmax mixes FMA chains with both reductions. Same seeds and
+    // specs, bit-identical results (pinned by the cross-backend suite);
+    // only the plane kernels differ.
+    b.group(&format!("kernel plane backends: Vector vs Scalar (n={n})"));
+    let mut bratios: Vec<(String, f64)> = Vec::new();
+    for kernel in [Kernel::Poly, Kernel::Axpy, Kernel::Softmax] {
+        for format in ["t8", "t16", "bf16", "e4m3"] {
+            let spec = KernelSpec { kernel, format, n, seed: 1 };
+            let vec_ns = b
+                .bench_with_elements(&format!("{} {format} [vector]", kernel.name()), n as u64, || {
+                    spec.run_with(CodecMode::Lut, Backend::Vector).unwrap()
+                })
+                .median_ns;
+            let sc_ns = b
+                .bench_with_elements(&format!("{} {format} [scalar]", kernel.name()), n as u64, || {
+                    spec.run_with(CodecMode::Lut, Backend::Scalar).unwrap()
+                })
+                .median_ns;
+            bratios.push((format!("{} {format}", kernel.name()), sc_ns / vec_ns));
+        }
+    }
+    println!("\n-- kernel speedup (scalar backend / vector backend) --");
+    for (k, ratio) in &bratios {
+        println!("{k:<16} {ratio:>6.2}x");
     }
 
     b.group("parallel kernel sweep (full suite, sizes 64+128)");

@@ -9,7 +9,7 @@
 //! `sim/lanes.rs` and `harness/gemm.rs`; this bench asserts nothing and
 //! just reports the ratio).
 
-use takum_avx10::sim::{CodecMode, Instruction, LaneType, Machine, Operand, VecReg};
+use takum_avx10::sim::{Backend, CodecMode, Instruction, LaneType, Machine, Operand, VecReg};
 use takum_avx10::util::bench::Bencher;
 use takum_avx10::util::rng::Rng;
 
@@ -67,6 +67,50 @@ fn main() {
     }
     println!("\n-- speedup (per-lane arithmetic path / LUT lane engine) --");
     for (mn, ratio) in &ratios {
+        println!("{mn:<20} {ratio:>6.2}x");
+    }
+
+    // The PlaneBackend comparison: chunked/vectorised plane kernels
+    // (AVX2 gather-decode + lockstep boundary search where the CPU has
+    // them) vs the per-element scalar loops, on the packed 8/16-bit FMA
+    // planes every GEMM tile and kernel chain is made of. Bit-identity is
+    // enforced by the cross-backend tests; this reports the ratio.
+    b.group("plane backends: Vector vs Scalar (packed 8/16-bit FMA planes)");
+    let mut backend_ratios: Vec<(String, f64)> = Vec::new();
+    for (mn, ty) in [
+        ("VFMADD231PT8", LaneType::Takum(8)),
+        ("VFMADD231PT16", LaneType::Takum(16)),
+        ("VFMADD231PH", LaneType::Mini(takum_avx10::num::F16)),
+        ("VFMADD231NEPBF16", LaneType::Mini(takum_avx10::num::BF16)),
+        ("VFMADD231HF8", LaneType::Mini(takum_avx10::num::E4M3)),
+        ("VFMADD231BF8", LaneType::Mini(takum_avx10::num::E5M2)),
+        ("VDPPT8PT16", LaneType::Takum(8)),
+    ] {
+        let lanes = VecReg::lanes(ty.width());
+        let vals: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-10, 10)).collect();
+        let ins = Instruction::new(mn, Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]);
+        let mut times = [0.0f64; 2];
+        for (slot, backend) in [(0usize, Backend::Vector), (1usize, Backend::Scalar)] {
+            let mut m = Machine::with_config(CodecMode::Lut, backend);
+            m.load_f64(0, ty, &vals);
+            m.load_f64(1, ty, &vals);
+            if mn.starts_with("VDP") {
+                m.load_f64(2, LaneType::Takum(16), &vec![0.0; 32]);
+            } else {
+                m.load_f64(2, ty, &vals);
+            }
+            let init = m.regs.v[2];
+            let tag = backend.name();
+            let meas = b.bench_with_elements(&format!("{mn} [{tag}]"), lanes as u64, || {
+                m.regs.v[2] = init;
+                m.step(&ins).unwrap()
+            });
+            times[slot] = meas.median_ns;
+        }
+        backend_ratios.push((mn.to_string(), times[1] / times[0]));
+    }
+    println!("\n-- speedup (scalar backend / vector backend) --");
+    for (mn, ratio) in &backend_ratios {
         println!("{mn:<20} {ratio:>6.2}x");
     }
 

@@ -16,7 +16,7 @@ fn main() -> anyhow::Result<()> {
     let n = 64usize;
 
     println!("=== well-scaled inputs (1 decade spread) ===");
-    print!("{}", run_sim_gemm(n, "t8", 0xBEEF)?);
+    print!("{}", run_sim_gemm(n, "t8", 0xBEEF, takum_avx10::sim::Backend::from_env())?);
 
     println!("\n=== badly-scaled inputs (entries ~1e5, the FEM regime) ===");
     println!("{:<8} {:>12} {:>12}", "format", "rel. error", "instructions");

@@ -12,7 +12,7 @@
 //! task is a pure function of its spec.
 
 use crate::kernels::{Kernel, KernelResult, KernelSpec, Pipeline};
-use crate::sim::CodecMode;
+use crate::sim::{Backend, CodecMode};
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
@@ -27,6 +27,9 @@ pub struct KernelSweepConfig {
     pub seed: u64,
     pub workers: usize,
     pub mode: CodecMode,
+    /// Plane backend every worker's machines run on (the default honours
+    /// `TAKUM_BACKEND`; the CLI exposes `--backend`).
+    pub backend: Backend,
 }
 
 impl Default for KernelSweepConfig {
@@ -38,6 +41,7 @@ impl Default for KernelSweepConfig {
             seed: 0xBEEF,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             mode: CodecMode::default(),
+            backend: Backend::from_env(),
         }
     }
 }
@@ -110,6 +114,7 @@ pub fn kernel_sweep(cfg: &KernelSweepConfig) -> Result<(Vec<KernelResult>, Kerne
             let next = &next;
             let specs = &specs;
             let mode = cfg.mode;
+            let backend = cfg.backend;
             handles.push(s.spawn(move || {
                 let mut local = 0usize;
                 loop {
@@ -117,7 +122,7 @@ pub fn kernel_sweep(cfg: &KernelSweepConfig) -> Result<(Vec<KernelResult>, Kerne
                     if i >= specs.len() {
                         break;
                     }
-                    if tx.send((i, specs[i].run(mode))).is_err() {
+                    if tx.send((i, specs[i].run_with(mode, backend))).is_err() {
                         return local;
                     }
                     local += 1;
@@ -167,7 +172,7 @@ mod tests {
             sizes: vec![64],
             seed: 0x5EED,
             workers,
-            mode: CodecMode::default(),
+            ..Default::default()
         }
     }
 
@@ -199,7 +204,7 @@ mod tests {
             sizes: vec![64],
             seed: 11,
             workers: 3,
-            mode: CodecMode::default(),
+            ..Default::default()
         };
         let (par, _) = kernel_sweep(&cfg).unwrap();
         let seq = crate::kernels::run_suite(64, 11, CodecMode::default()).unwrap();
@@ -218,5 +223,28 @@ mod tests {
         assert!(kernel_sweep(&cfg).is_err());
         let empty = KernelSweepConfig { sizes: vec![], ..Default::default() };
         assert!(kernel_sweep(&empty).is_err());
+    }
+
+    /// The backend axis must not change a single bit of the sweep output:
+    /// same errors, same instruction counts, scalar vs vector.
+    #[test]
+    fn sweep_backend_invariant() {
+        let cfg = |backend| KernelSweepConfig {
+            kernels: vec![Kernel::Dot, Kernel::Softmax],
+            formats: vec!["t8", "t16", "e4m3"],
+            sizes: vec![64],
+            seed: 0xBACC,
+            workers: 2,
+            mode: CodecMode::default(),
+            backend,
+        };
+        let (s, _) = kernel_sweep(&cfg(Backend::Scalar)).unwrap();
+        let (v, _) = kernel_sweep(&cfg(Backend::Vector)).unwrap();
+        assert_eq!(s.len(), v.len());
+        for (a, b) in s.iter().zip(&v) {
+            assert_eq!(a.rel_error.to_bits(), b.rel_error.to_bits(), "{}/{}", a.kernel, a.format);
+            assert_eq!(a.executed, b.executed, "{}/{}", a.kernel, a.format);
+            assert_eq!(a.counts, b.counts, "{}/{}", a.kernel, a.format);
+        }
     }
 }

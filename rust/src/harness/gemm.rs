@@ -24,7 +24,7 @@
 //! `Instruction::new` sequences.
 
 use crate::kernels::{KernelBuilder, Pipeline};
-use crate::sim::{CodecMode, VecReg};
+use crate::sim::{Backend, CodecMode, VecReg};
 use crate::util::rng::Rng;
 use anyhow::Result;
 
@@ -74,7 +74,22 @@ pub fn gemm_with_mode(
     gemm_scaled_with_mode(n, format, seed, spread_decades, 1.0, mode)
 }
 
-/// [`gemm_scaled`] with an explicit simulator [`CodecMode`].
+/// [`gemm`] with both simulator axes pinned (codec mode × plane
+/// [`Backend`]) — the hook of the cross-backend equivalence tests and
+/// the Scalar-vs-Vector bench columns.
+pub fn gemm_with_config(
+    n: usize,
+    format: &str,
+    seed: u64,
+    spread_decades: f64,
+    mode: CodecMode,
+    backend: Backend,
+) -> Result<GemmResult> {
+    gemm_scaled_with_config(n, format, seed, spread_decades, 1.0, mode, backend)
+}
+
+/// [`gemm_scaled`] with an explicit simulator [`CodecMode`] (plane
+/// backend from `TAKUM_BACKEND`).
 pub fn gemm_scaled_with_mode(
     n: usize,
     format: &str,
@@ -82,6 +97,20 @@ pub fn gemm_scaled_with_mode(
     spread_decades: f64,
     scale: f64,
     mode: CodecMode,
+) -> Result<GemmResult> {
+    gemm_scaled_with_config(n, format, seed, spread_decades, scale, mode, Backend::from_env())
+}
+
+/// [`gemm_scaled`] with both simulator axes pinned.
+#[allow(clippy::too_many_arguments)]
+pub fn gemm_scaled_with_config(
+    n: usize,
+    format: &str,
+    seed: u64,
+    spread_decades: f64,
+    scale: f64,
+    mode: CodecMode,
+    backend: Backend,
 ) -> Result<GemmResult> {
     anyhow::ensure!(n >= 2 && n % 2 == 0, "n must be even and ≥ 2");
     let p = Pipeline::for_format(format)?;
@@ -112,7 +141,7 @@ pub fn gemm_scaled_with_mode(
     // uses the exact same per-format lowering (storage loads, OFP8
     // promote, widening dp) as every kernel of the suite. Untraced: the
     // O(n³) instruction stream is counted, not kept.
-    let mut kb = KernelBuilder::new_untraced(p, mode);
+    let mut kb = KernelBuilder::new_untraced_with(p, mode, backend);
     let mut c_out = vec![0.0f64; n * n];
     let (va, vb, vc, vat, vbt) = (0u8, 1u8, 2u8, 3u8, 4u8);
 
@@ -169,19 +198,20 @@ pub fn gemm_scaled_with_mode(
 
 /// CLI wrapper: run one format and render a comparison against the
 /// remaining pipelines.
-pub fn run_sim_gemm(n: usize, format: &str, seed: u64) -> Result<String> {
+pub fn run_sim_gemm(n: usize, format: &str, seed: u64, backend: Backend) -> Result<String> {
     let formats = ["t8", "t16", "bf16", "f16", "e4m3", "e5m2"];
     anyhow::ensure!(formats.contains(&format), "unknown format {format}");
     let mut out = String::new();
     out.push_str(&format!(
-        "simulated quantised GEMM, n={n} (C = A·B, inputs quantised; f64 reference)\n"
+        "simulated quantised GEMM, n={n}, {} backend (C = A·B, inputs quantised; f64 reference)\n",
+        backend.name()
     ));
     out.push_str(&format!(
         "{:<8} {:>12} {:>12} {:>10} {:>10}\n",
         "format", "rel. error", "instructions", "dp", "convert"
     ));
     for f in formats {
-        let r = gemm(n, f, seed, 1.0)?;
+        let r = gemm_with_config(n, f, seed, 1.0, CodecMode::default(), backend)?;
         let marker = if f == format { " *" } else { "" };
         out.push_str(&format!(
             "{:<8} {:>12.3e} {:>12} {:>10} {:>10}{}\n",
@@ -279,5 +309,37 @@ mod tests {
         let fast = gemm_scaled_with_mode(32, "e4m3", 11, 0.3, 1e5, CodecMode::Lut).unwrap();
         let slow = gemm_scaled_with_mode(32, "e4m3", 11, 0.3, 1e5, CodecMode::Arith).unwrap();
         assert_eq!(fast.rel_error.to_bits(), slow.rel_error.to_bits());
+    }
+
+    /// The backend acceptance gate, mirrored from the codec-mode gate:
+    /// `Backend::Vector` must reproduce `Backend::Scalar` exactly — same
+    /// relative error bit for bit, same instruction counts — for every
+    /// pipeline the paper compares.
+    #[test]
+    fn vector_backend_identical_to_scalar_gemm() {
+        for f in ["t8", "t16", "bf16", "e4m3"] {
+            for n in [16usize, 32] {
+                let s = gemm_with_config(n, f, 7, 1.0, CodecMode::Lut, Backend::Scalar).unwrap();
+                let v = gemm_with_config(n, f, 7, 1.0, CodecMode::Lut, Backend::Vector).unwrap();
+                assert_eq!(
+                    s.rel_error.to_bits(),
+                    v.rel_error.to_bits(),
+                    "{f} n={n}: rel_error {} vs {}",
+                    s.rel_error,
+                    v.rel_error
+                );
+                assert_eq!(s.executed, v.executed, "{f} n={n}: executed");
+                assert_eq!(s.dp_instructions, v.dp_instructions, "{f} n={n}: dp");
+                assert_eq!(s.convert_instructions, v.convert_instructions, "{f} n={n}");
+            }
+        }
+        // And under the badly-scaled FEM regime, where OFP8 saturates.
+        let s =
+            gemm_scaled_with_config(32, "e4m3", 11, 0.3, 1e5, CodecMode::Lut, Backend::Scalar)
+                .unwrap();
+        let v =
+            gemm_scaled_with_config(32, "e4m3", 11, 0.3, 1e5, CodecMode::Lut, Backend::Vector)
+                .unwrap();
+        assert_eq!(s.rel_error.to_bits(), v.rel_error.to_bits());
     }
 }

@@ -20,7 +20,7 @@
 //! perturb the numerics.
 
 use super::pipeline::Pipeline;
-use crate::sim::{CodecMode, Instruction, Machine, Operand, Program};
+use crate::sim::{Backend, CodecMode, Instruction, Machine, Operand, Program};
 use anyhow::Result;
 
 /// Register the builder reserves as an all-zero constant (never written;
@@ -37,7 +37,13 @@ pub struct KernelBuilder {
 
 impl KernelBuilder {
     pub fn new(pipe: Pipeline, mode: CodecMode) -> KernelBuilder {
-        let m = Machine::with_mode(mode);
+        Self::new_with(pipe, mode, Backend::from_env())
+    }
+
+    /// A builder with both simulator axes pinned: codec mode × plane
+    /// backend ([`KernelBuilder::new`] honours `TAKUM_BACKEND`).
+    pub fn new_with(pipe: Pipeline, mode: CodecMode, backend: Backend) -> KernelBuilder {
+        let m = Machine::with_config(mode, backend);
         KernelBuilder { m, pipe, trace: Program::default(), tracing: true }
     }
 
@@ -48,6 +54,11 @@ impl KernelBuilder {
     /// [`Program`].
     pub fn new_untraced(pipe: Pipeline, mode: CodecMode) -> KernelBuilder {
         KernelBuilder { tracing: false, ..KernelBuilder::new(pipe, mode) }
+    }
+
+    /// Untraced builder with an explicit plane backend.
+    pub fn new_untraced_with(pipe: Pipeline, mode: CodecMode, backend: Backend) -> KernelBuilder {
+        KernelBuilder { tracing: false, ..KernelBuilder::new_with(pipe, mode, backend) }
     }
 
     pub fn pipeline(&self) -> &Pipeline {

@@ -43,4 +43,4 @@ pub mod workloads;
 
 pub use builder::KernelBuilder;
 pub use pipeline::{Isa, Pipeline};
-pub use suite::{render, run_suite, Kernel, KernelResult, KernelSpec};
+pub use suite::{render, run_suite, run_suite_with, Kernel, KernelResult, KernelSpec};

@@ -4,7 +4,7 @@
 
 use super::pipeline::{Isa, Pipeline};
 use super::workloads::{self, KernelRun};
-use crate::sim::CodecMode;
+use crate::sim::{Backend, CodecMode};
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
@@ -50,14 +50,21 @@ impl Kernel {
         bail!("unknown kernel {name:?} (dot|axpy|poly|softmax|conv1d|reduce)")
     }
 
-    fn run_raw(&self, pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<KernelRun> {
+    fn run_raw(
+        &self,
+        pipe: &Pipeline,
+        n: usize,
+        seed: u64,
+        mode: CodecMode,
+        backend: Backend,
+    ) -> Result<KernelRun> {
         match self {
-            Kernel::Dot => workloads::run_dot(pipe, n, seed, mode),
-            Kernel::Axpy => workloads::run_axpy(pipe, n, seed, mode),
-            Kernel::Poly => workloads::run_poly(pipe, n, seed, mode),
-            Kernel::Softmax => workloads::run_softmax(pipe, n, seed, mode),
-            Kernel::Conv1d => workloads::run_conv1d(pipe, n, seed, mode),
-            Kernel::Reduce => workloads::run_reduce(pipe, n, seed, mode),
+            Kernel::Dot => workloads::run_dot(pipe, n, seed, mode, backend),
+            Kernel::Axpy => workloads::run_axpy(pipe, n, seed, mode, backend),
+            Kernel::Poly => workloads::run_poly(pipe, n, seed, mode, backend),
+            Kernel::Softmax => workloads::run_softmax(pipe, n, seed, mode, backend),
+            Kernel::Conv1d => workloads::run_conv1d(pipe, n, seed, mode, backend),
+            Kernel::Reduce => workloads::run_reduce(pipe, n, seed, mode, backend),
         }
     }
 }
@@ -73,10 +80,19 @@ pub struct KernelSpec {
 
 impl KernelSpec {
     /// Execute the spec: lower through the shared builder, run on the
-    /// simulator, extract the metrics.
+    /// simulator, extract the metrics. The plane backend honours
+    /// `TAKUM_BACKEND` (see [`KernelSpec::run_with`] for explicit
+    /// selection).
     pub fn run(&self, mode: CodecMode) -> Result<KernelResult> {
+        self.run_with(mode, Backend::from_env())
+    }
+
+    /// Execute with both simulator axes pinned: codec mode × plane
+    /// backend — the hook of the cross-backend equivalence tests and the
+    /// bench comparison columns.
+    pub fn run_with(&self, mode: CodecMode, backend: Backend) -> Result<KernelResult> {
         let pipe = Pipeline::for_format(self.format)?;
-        let run = self.kernel.run_raw(&pipe, self.n, self.seed, mode)?;
+        let run = self.kernel.run_raw(&pipe, self.n, self.seed, mode, backend)?;
         Ok(KernelResult::from_run(self, &pipe, run))
     }
 }
@@ -133,10 +149,20 @@ impl KernelResult {
 /// [`crate::coordinator::kernel_sweep`]; this sequential form is the
 /// reference the sweep's determinism test compares against.
 pub fn run_suite(n: usize, seed: u64, mode: CodecMode) -> Result<Vec<KernelResult>> {
+    run_suite_with(n, seed, mode, Backend::from_env())
+}
+
+/// [`run_suite`] with an explicit plane backend.
+pub fn run_suite_with(
+    n: usize,
+    seed: u64,
+    mode: CodecMode,
+    backend: Backend,
+) -> Result<Vec<KernelResult>> {
     let mut out = Vec::with_capacity(Kernel::ALL.len() * Pipeline::ALL_FORMATS.len());
     for kernel in Kernel::ALL {
         for format in Pipeline::ALL_FORMATS {
-            out.push(KernelSpec { kernel, format, n, seed }.run(mode)?);
+            out.push(KernelSpec { kernel, format, n, seed }.run_with(mode, backend)?);
         }
     }
     Ok(out)

@@ -17,7 +17,7 @@
 
 use super::builder::KernelBuilder;
 use super::pipeline::Pipeline;
-use crate::sim::{CodecMode, Machine, Program};
+use crate::sim::{Backend, CodecMode, Machine, Program};
 use crate::util::rng::Rng;
 use anyhow::Result;
 
@@ -99,7 +99,13 @@ const VP: u8 = 20; // softmax p = 1 + r + r²/2
 /// dp per compute-width tile, then a log₂ tree sum of the wide
 /// accumulator. The kernel the paper's E11 GEMM repeats per output tile,
 /// isolated.
-pub fn run_dot(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<KernelRun> {
+pub fn run_dot(
+    pipe: &Pipeline,
+    n: usize,
+    seed: u64,
+    mode: CodecMode,
+    backend: Backend,
+) -> Result<KernelRun> {
     check_size(n)?;
     let cl = pipe.compute_lanes();
     let wl = pipe.wide_lanes();
@@ -108,7 +114,7 @@ pub fn run_dot(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<
     let b = draw_positive(&mut rng, n, 0.5);
     let reference: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
 
-    let mut kb = KernelBuilder::new(*pipe, mode);
+    let mut kb = KernelBuilder::new_with(*pipe, mode, backend);
     kb.load_wide(WACC, &vec![0.0; wl]);
     for t in (0..n).step_by(cl) {
         kb.load_narrow(VA, &a[t..t + cl]);
@@ -125,7 +131,13 @@ pub fn run_dot(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<
 
 /// AXPY `y ← α·x + y`: broadcast constant + one packed FMA per tile, with
 /// the result demoted back to storage (the OFP8 store tax).
-pub fn run_axpy(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<KernelRun> {
+pub fn run_axpy(
+    pipe: &Pipeline,
+    n: usize,
+    seed: u64,
+    mode: CodecMode,
+    backend: Backend,
+) -> Result<KernelRun> {
     check_size(n)?;
     let cl = pipe.compute_lanes();
     let mut rng = Rng::new(seed ^ 0xA897);
@@ -133,7 +145,7 @@ pub fn run_axpy(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result
     let y = draw_signed(&mut rng, n, 0.5);
     let reference: Vec<f64> = x.iter().zip(&y).map(|(xi, yi)| AXPY_ALPHA * xi + yi).collect();
 
-    let mut kb = KernelBuilder::new(*pipe, mode);
+    let mut kb = KernelBuilder::new_with(*pipe, mode, backend);
     kb.broadcast_const(C0, CSCRATCH, AXPY_ALPHA)?;
     let mut out = Vec::with_capacity(n);
     for t in (0..n).step_by(cl) {
@@ -152,7 +164,13 @@ pub fn run_axpy(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result
 
 /// Elementwise activation via a cubic Horner polynomial: three dependent
 /// packed FMAs per tile — the latency-chain shape of softmax/GELU tails.
-pub fn run_poly(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<KernelRun> {
+pub fn run_poly(
+    pipe: &Pipeline,
+    n: usize,
+    seed: u64,
+    mode: CodecMode,
+    backend: Backend,
+) -> Result<KernelRun> {
     check_size(n)?;
     let cl = pipe.compute_lanes();
     let mut rng = Rng::new(seed ^ 0x9017);
@@ -161,7 +179,7 @@ pub fn run_poly(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result
     let reference: Vec<f64> =
         x.iter().map(|&v| ((c3 * v + c2) * v + c1) * v + c0).collect();
 
-    let mut kb = KernelBuilder::new(*pipe, mode);
+    let mut kb = KernelBuilder::new_with(*pipe, mode, backend);
     for (i, c) in POLY_COEFFS.iter().enumerate() {
         kb.broadcast_const(C0 + i as u8, CSCRATCH, *c)?;
     }
@@ -187,7 +205,13 @@ pub fn run_poly(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result
 /// against broadcast ones, and a packed divide for normalisation. The
 /// only kernel whose reduction result re-enters elementwise arithmetic
 /// (`cvt_wide_to_compute`).
-pub fn run_softmax(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<KernelRun> {
+pub fn run_softmax(
+    pipe: &Pipeline,
+    n: usize,
+    seed: u64,
+    mode: CodecMode,
+    backend: Backend,
+) -> Result<KernelRun> {
     check_size(n)?;
     let cl = pipe.compute_lanes();
     let wl = pipe.wide_lanes();
@@ -200,7 +224,7 @@ pub fn run_softmax(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Res
 
     let (clog2e, cln2, chalf, cone, cmax, csum) =
         (C0, C0 + 1, C0 + 2, C0 + 3, C0 + 4, C0 + 5);
-    let mut kb = KernelBuilder::new(*pipe, mode);
+    let mut kb = KernelBuilder::new_with(*pipe, mode, backend);
     kb.broadcast_const(clog2e, CSCRATCH, std::f64::consts::LOG2_E)?;
     kb.broadcast_const(cln2, CSCRATCH, std::f64::consts::LN_2)?;
     kb.broadcast_const(chalf, CSCRATCH, 0.5)?;
@@ -258,7 +282,13 @@ pub fn run_softmax(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Res
 /// one packed multiply for tap 0 then one packed FMA per remaining tap,
 /// reading shifted input windows (the simulator models compute, so the
 /// unaligned loads are harness-side).
-pub fn run_conv1d(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<KernelRun> {
+pub fn run_conv1d(
+    pipe: &Pipeline,
+    n: usize,
+    seed: u64,
+    mode: CodecMode,
+    backend: Backend,
+) -> Result<KernelRun> {
     check_size(n)?;
     let cl = pipe.compute_lanes();
     let taps = CONV_TAPS.len();
@@ -268,7 +298,7 @@ pub fn run_conv1d(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Resu
         .map(|i| CONV_TAPS.iter().enumerate().map(|(k, w)| w * x[i + k]).sum())
         .collect();
 
-    let mut kb = KernelBuilder::new(*pipe, mode);
+    let mut kb = KernelBuilder::new_with(*pipe, mode, backend);
     for (k, w) in CONV_TAPS.iter().enumerate() {
         kb.broadcast_const(C0 + k as u8, CSCRATCH, *w)?;
     }
@@ -294,7 +324,13 @@ pub fn run_conv1d(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Resu
 /// against broadcast ones (so OFP8 pays the convert tax even for a plain
 /// reduction), the max through packed `VMAX` with a horizontal tree.
 /// Reports the RMS of the two scalar relative errors.
-pub fn run_reduce(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Result<KernelRun> {
+pub fn run_reduce(
+    pipe: &Pipeline,
+    n: usize,
+    seed: u64,
+    mode: CodecMode,
+    backend: Backend,
+) -> Result<KernelRun> {
     check_size(n)?;
     let cl = pipe.compute_lanes();
     let wl = pipe.wide_lanes();
@@ -303,7 +339,7 @@ pub fn run_reduce(pipe: &Pipeline, n: usize, seed: u64, mode: CodecMode) -> Resu
     let ref_sum: f64 = x.iter().sum();
     let ref_max = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
 
-    let mut kb = KernelBuilder::new(*pipe, mode);
+    let mut kb = KernelBuilder::new_with(*pipe, mode, backend);
     kb.broadcast_const(C0, CSCRATCH, 1.0)?;
     kb.load_wide(WACC, &vec![0.0; wl]);
     for (ti, t) in (0..n).step_by(cl).enumerate() {
@@ -332,9 +368,10 @@ mod tests {
     #[test]
     fn sizes_must_tile() {
         let pipe = Pipeline::for_format("t8").unwrap();
-        assert!(run_dot(&pipe, 63, 1, CodecMode::default()).is_err());
-        assert!(run_dot(&pipe, 0, 1, CodecMode::default()).is_err());
-        assert!(run_dot(&pipe, 128, 1, CodecMode::default()).is_ok());
+        let (m, b) = (CodecMode::default(), Backend::from_env());
+        assert!(run_dot(&pipe, 63, 1, m, b).is_err());
+        assert!(run_dot(&pipe, 0, 1, m, b).is_err());
+        assert!(run_dot(&pipe, 128, 1, m, b).is_ok());
     }
 
     #[test]
@@ -345,7 +382,7 @@ mod tests {
             [("t8", 2u64, 0u64, 5u64), ("t16", 4, 0, 4), ("bf16", 4, 0, 4), ("e4m3", 4, 8, 4)]
         {
             let pipe = Pipeline::for_format(fmt).unwrap();
-            let r = run_dot(&pipe, 128, 3, CodecMode::default()).unwrap();
+            let r = run_dot(&pipe, 128, 3, CodecMode::default(), Backend::from_env()).unwrap();
             let counts = &r.machine.counts;
             assert_eq!(counts.get(pipe.dp).copied().unwrap_or(0), dp, "{fmt} dp");
             let cvt_seen: u64 = pipe
@@ -362,7 +399,7 @@ mod tests {
 
     #[test]
     fn every_kernel_runs_on_every_format() {
-        type KernelFn = fn(&Pipeline, usize, u64, CodecMode) -> Result<KernelRun>;
+        type KernelFn = fn(&Pipeline, usize, u64, CodecMode, Backend) -> Result<KernelRun>;
         let kernels: [(&str, KernelFn); 6] = [
             ("dot", run_dot),
             ("axpy", run_axpy),
@@ -374,7 +411,7 @@ mod tests {
         for (kname, k) in kernels {
             for fmt in Pipeline::ALL_FORMATS {
                 let pipe = Pipeline::for_format(fmt).unwrap();
-                let r = k(&pipe, 64, 7, CodecMode::default()).unwrap();
+                let r = k(&pipe, 64, 7, CodecMode::default(), Backend::from_env()).unwrap();
                 assert!(
                     r.rel_error.is_finite() && r.rel_error >= 0.0,
                     "{kname}/{fmt}: {}",

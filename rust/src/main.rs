@@ -15,12 +15,12 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 use takum_avx10::coordinator::{kernel_sweep, sweep, Engine, KernelSweepConfig, SweepConfig};
-use takum_avx10::kernels::{Kernel, Pipeline};
+use takum_avx10::kernels::{workloads::TILE_ALIGN, Kernel, Pipeline};
 use takum_avx10::harness::{figure1, figure2, tables};
 use takum_avx10::isa::database::Category;
 use takum_avx10::matrix::generator::CollectionSpec;
 use takum_avx10::runtime::{default_artifact_dir, PjrtService};
-use takum_avx10::sim::{assemble, LaneType, Machine};
+use takum_avx10::sim::{assemble, Backend, LaneType, Machine};
 
 /// Minimal flag parser: `--key value` and bare flags.
 struct Args {
@@ -100,10 +100,15 @@ commands:
   tables  [--category b|m|i|f|c]  AVX10.2 → takum instruction tables (I–V)
           [--summary] [--tsv] [--rvv]
   simulate FILE [--dump vN:TYPE]  run an assembly program on the simulator
-  gemm    [--n 64] [--format t8|t16|bf16|f16]  quantised GEMM on the simulator
+  gemm    [--n 64] [--format t8|t16|bf16|f16] [--backend scalar|vector]
+          quantised GEMM on the simulator
   kernels [--sizes 64,128] [--kernels dot,softmax,...] [--formats t8,e4m3,...]
-          [--seed S] [--workers W]  workload suite on both ISAs (parallel sweep)
+          [--seed S] [--workers W] [--backend scalar|vector]
+          workload suite on both ISAs (parallel sweep)
   artifacts                       list AOT artifacts loadable by the runtime
+
+sizes must be positive multiples of 64 (whole compute tiles); workers ≥ 1.
+The default backend honours TAKUM_BACKEND (scalar if unset).
 ";
 
 fn cmd_figure1() -> Result<()> {
@@ -226,25 +231,51 @@ fn parse_lane_type(s: &str) -> Result<LaneType> {
 fn cmd_gemm(args: &Args) -> Result<()> {
     let n: usize = args.get_parse("n", 64)?;
     let fname = args.get("format").unwrap_or("t8");
-    let out = takum_avx10::harness::gemm::run_sim_gemm(n, fname, 0xBEEF)?;
+    let backend = parse_backend(args)?;
+    let out = takum_avx10::harness::gemm::run_sim_gemm(n, fname, 0xBEEF, backend)?;
     print!("{out}");
     Ok(())
 }
 
-/// Kernel suite: every requested kernel × format × size on both ISAs,
-/// fanned out across the worker pool.
-fn cmd_kernels(args: &Args) -> Result<()> {
+/// `--backend scalar|vector`, defaulting to the `TAKUM_BACKEND`-aware
+/// process default.
+fn parse_backend(args: &Args) -> Result<Backend> {
+    match args.get("backend") {
+        Some(b) => Backend::parse(b),
+        None => Ok(Backend::from_env()),
+    }
+}
+
+/// Build (and validate) the kernel-sweep config from CLI flags. All
+/// contract violations — sizes off the 64-lane tile grid, a zero worker
+/// count — are rejected *here*, with actionable messages, instead of
+/// surfacing as a deep assertion failure inside a worker thread.
+fn parse_kernel_cfg(args: &Args) -> Result<KernelSweepConfig> {
     let defaults = KernelSweepConfig::default();
     let mut cfg = KernelSweepConfig {
         seed: args.get_parse("seed", defaults.seed)?,
         workers: args.get_parse("workers", defaults.workers)?,
+        backend: parse_backend(args)?,
         ..defaults
     };
+    anyhow::ensure!(
+        cfg.workers >= 1,
+        "--workers must be at least 1, got {}",
+        cfg.workers
+    );
     if let Some(sizes) = args.get("sizes") {
         cfg.sizes = sizes
             .split(',')
             .map(|s| s.trim().parse::<usize>().map_err(|_| anyhow!("bad size {s:?}")))
             .collect::<Result<Vec<_>>>()?;
+    }
+    anyhow::ensure!(!cfg.sizes.is_empty(), "--sizes must name at least one size");
+    for &n in &cfg.sizes {
+        anyhow::ensure!(
+            n >= TILE_ALIGN && n % TILE_ALIGN == 0,
+            "size {n} is not a positive multiple of {TILE_ALIGN}: every kernel processes whole \
+             compute-format registers (64 8-bit lanes), so --sizes must be 64, 128, 192, …"
+        );
     }
     if let Some(kernels) = args.get("kernels") {
         cfg.kernels =
@@ -263,6 +294,13 @@ fn cmd_kernels(args: &Args) -> Result<()> {
             })
             .collect::<Result<Vec<_>>>()?;
     }
+    Ok(cfg)
+}
+
+/// Kernel suite: every requested kernel × format × size on both ISAs,
+/// fanned out across the worker pool.
+fn cmd_kernels(args: &Args) -> Result<()> {
+    let cfg = parse_kernel_cfg(args)?;
     let (results, metrics) = kernel_sweep(&cfg)?;
     print!("{}", takum_avx10::kernels::render(&results));
     eprint!("{}", metrics.render());
@@ -276,4 +314,50 @@ fn cmd_artifacts() -> Result<()> {
         println!("{n}");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(raw: &[&str]) -> Args {
+        Args::parse(&raw.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    /// The `kernels` CLI rejects contract violations at parse time with
+    /// actionable messages — no deep worker-thread panics.
+    #[test]
+    fn kernels_cli_rejects_untiled_sizes() {
+        for bad in ["63", "100", "0", "64,65"] {
+            let e = parse_kernel_cfg(&args(&["--sizes", bad])).unwrap_err().to_string();
+            assert!(
+                e.contains("multiple of 64") && e.contains("--sizes"),
+                "--sizes {bad}: unhelpful message {e:?}"
+            );
+        }
+        let e = parse_kernel_cfg(&args(&["--sizes", "banana"])).unwrap_err().to_string();
+        assert!(e.contains("bad size"), "{e:?}");
+    }
+
+    #[test]
+    fn kernels_cli_rejects_zero_workers() {
+        let e = parse_kernel_cfg(&args(&["--workers", "0"])).unwrap_err().to_string();
+        assert!(e.contains("--workers must be at least 1"), "{e:?}");
+    }
+
+    #[test]
+    fn kernels_cli_accepts_valid_configs() {
+        let cfg = parse_kernel_cfg(&args(&[
+            "--sizes", "64,192", "--workers", "2", "--kernels", "dot,softmax", "--formats",
+            "t8,e4m3", "--backend", "vector",
+        ]))
+        .unwrap();
+        assert_eq!(cfg.sizes, vec![64, 192]);
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.kernels.len(), 2);
+        assert_eq!(cfg.formats, vec!["t8", "e4m3"]);
+        assert_eq!(cfg.backend, Backend::Vector);
+        let e = parse_kernel_cfg(&args(&["--backend", "gpu"])).unwrap_err().to_string();
+        assert!(e.contains("unknown backend"), "{e:?}");
+    }
 }

@@ -15,13 +15,22 @@
 //! codec would overflow to ±∞/NaN, i.e. it implements the `encode_sat`
 //! variant; callers that need the ∞ marker must consult
 //! [`Lut8::overflows`] first.
+//!
+//! **NaN contract:** every encode entry point ([`Lut8::encode_bits`],
+//! [`Lut8::encode_slice`], [`Lut8::encode_slice_lockstep`], and the
+//! round-trip forms) handles NaN *itself*, returning the pattern the
+//! underlying codec produces for NaN input — takum/posit NaR (`1000…0`),
+//! the canonical NaN encoding for IEEE-style formats. The former
+//! "callers handle NaN" caveat (a `debug_assert` that vanished in release
+//! builds and let a NaN lane silently encode as an extreme *finite*
+//! pattern) is gone.
 
 use super::traits::NumberFormat;
 use std::sync::OnceLock;
 
 /// Map f64 to a monotone u64 key (total order, -∞ < … < -0 ≈ +0 < … < +∞).
 #[inline]
-fn f64_key(x: f64) -> u64 {
+pub(crate) fn f64_key(x: f64) -> u64 {
     let b = x.to_bits();
     if b >> 63 == 1 {
         !b
@@ -53,6 +62,10 @@ pub struct Lut8 {
     /// Finite magnitude beyond which the codec leaves the finite table
     /// (IEEE overflow); `None` for saturating formats.
     overflow_abs: Option<f64>,
+    /// The pattern the codec produces for NaN input: NaR for takum/posit,
+    /// the canonical NaN encoding for IEEE-style formats. Captured at
+    /// build time so every encode entry point can handle NaN itself.
+    nan_bits: u64,
 }
 
 impl Lut8 {
@@ -141,7 +154,8 @@ impl Lut8 {
             None
         };
 
-        Lut8 { name: f.name(), decode, sorted_vals, sorted_bits, boundaries, overflow_abs }
+        let nan_bits = f.encode(f64::NAN);
+        Lut8 { name: f.name(), decode, sorted_vals, sorted_bits, boundaries, overflow_abs, nan_bits }
     }
 
     #[inline]
@@ -161,17 +175,26 @@ impl Lut8 {
         self.encode_bits(x) as u8
     }
 
+    /// Encode one value. NaN returns the format's NaN/NaR pattern
+    /// ([`Lut8::nan_pattern`]) — a hard guarantee in release builds, not a
+    /// `debug_assert` (the old assert let a release-mode NaN lane encode
+    /// as the extreme finite pattern its huge sort key lands on).
     #[inline]
     pub fn encode_bits(&self, x: f64) -> u64 {
-        debug_assert!(!x.is_nan());
+        if x.is_nan() {
+            return self.nan_bits;
+        }
         let k = f64_key(x);
         let idx = self.boundaries.partition_point(|&b| b <= k);
         self.sorted_bits[idx] as u64
     }
 
-    /// Round-trip through the format.
+    /// Round-trip through the format (NaN stays NaN, like the codec).
     #[inline]
     pub fn roundtrip(&self, x: f64) -> f64 {
+        if x.is_nan() {
+            return f64::NAN;
+        }
         self.sorted_vals[{
             let k = f64_key(x);
             self.boundaries.partition_point(|&b| b <= k)
@@ -203,6 +226,9 @@ impl Lut8 {
     /// sweep's 16-bit round-trip fast path.
     #[inline]
     pub fn roundtrip_branchless(&self, x: f64) -> f64 {
+        if x.is_nan() {
+            return f64::NAN;
+        }
         self.sorted_vals[self.partition_branchless(f64_key(x))]
     }
 
@@ -217,9 +243,10 @@ impl Lut8 {
         }
     }
 
-    /// Encode a slice of finite values into `out` (same contract as
-    /// [`Lut8::encode_bits`]: the caller handles NaN and, for
-    /// non-saturating IEEE formats, checks [`Lut8::overflows`] first).
+    /// Encode a slice of values into `out` (same contract as
+    /// [`Lut8::encode_bits`]: NaN encodes to the NaN/NaR pattern; for
+    /// non-saturating IEEE formats the caller still checks
+    /// [`Lut8::overflows`] first if it needs the ∞ marker).
     #[inline]
     pub fn encode_slice(&self, xs: &[f64], out: &mut [u64]) {
         assert_eq!(xs.len(), out.len());
@@ -228,8 +255,56 @@ impl Lut8 {
         }
     }
 
-    /// Round-trip a slice of finite values into `out` (caller handles
-    /// NaN, like [`Lut8::encode_slice`]).
+    /// Chunked lockstep form of [`Lut8::encode_slice`] (bit-identical):
+    /// eight keys advance through the same branch-free boundary search
+    /// *level by level* — every probe level is one compare + conditional
+    /// add per element with no data-dependent branch and a constant trip
+    /// count across the chunk, exactly the shape the autovectoriser turns
+    /// into masked SIMD adds. The vector plane backend
+    /// ([`crate::sim::plane`]) routes whole-register encodes through this.
+    pub fn encode_slice_lockstep(&self, xs: &[f64], out: &mut [u64]) {
+        assert_eq!(xs.len(), out.len());
+        let head = xs.len() & !7;
+        let (xc, xr) = xs.split_at(head);
+        let (oc, or) = out.split_at_mut(head);
+        for (x8, o8) in xc.chunks_exact(8).zip(oc.chunks_exact_mut(8)) {
+            self.encode_chunk8(x8.try_into().unwrap(), o8.try_into().unwrap());
+        }
+        for (o, &x) in or.iter_mut().zip(xr) {
+            *o = self.encode_bits(x);
+        }
+    }
+
+    /// Eight-wide lockstep boundary search (see
+    /// [`Lut8::encode_slice_lockstep`]). Mirrors
+    /// [`Lut8::partition_branchless`] level for level so the result is
+    /// bit-identical to eight scalar [`Lut8::encode_bits`] calls,
+    /// including the NaN → NaN/NaR fix-up (a select, not a branch).
+    #[inline]
+    fn encode_chunk8(&self, xs: &[f64; 8], out: &mut [u64; 8]) {
+        let b = &self.boundaries;
+        let mut keys = [0u64; 8];
+        for i in 0..8 {
+            keys[i] = f64_key(xs[i]);
+        }
+        let mut base = [0usize; 8];
+        let mut len = b.len();
+        while len > 1 {
+            let half = len / 2;
+            for i in 0..8 {
+                base[i] += usize::from(b[base[i] + half - 1] <= keys[i]) * half;
+            }
+            len -= half;
+        }
+        for i in 0..8 {
+            let idx = base[i] + usize::from(len == 1 && b[base[i]] <= keys[i]);
+            let bits = self.sorted_bits[idx] as u64;
+            out[i] = if xs[i].is_nan() { self.nan_bits } else { bits };
+        }
+    }
+
+    /// Round-trip a slice of values into `out` (NaN stays NaN, like
+    /// [`Lut8::encode_slice`]).
     #[inline]
     pub fn roundtrip_slice(&self, xs: &[f64], out: &mut [f64]) {
         assert_eq!(xs.len(), out.len());
@@ -250,6 +325,32 @@ impl Lut8 {
 
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// The pattern the codec produces for NaN input (NaR `1000…0` for
+    /// takum/posit, the canonical NaN encoding for IEEE-style formats).
+    #[inline]
+    pub fn nan_pattern(&self) -> u64 {
+        self.nan_bits
+    }
+
+    /// The raw decode table (one f64 per bit pattern) — the gather source
+    /// of the vector plane backend ([`crate::sim::plane`]).
+    #[inline]
+    pub(crate) fn decode_table(&self) -> &[f64] {
+        &self.decode
+    }
+
+    /// Decision-boundary keys ascending (monotone [`f64_key`] space).
+    #[inline]
+    pub(crate) fn boundary_keys(&self) -> &[u64] {
+        &self.boundaries
+    }
+
+    /// Bit patterns parallel to the boundary intervals.
+    #[inline]
+    pub(crate) fn interval_bits(&self) -> &[u32] {
+        &self.sorted_bits
     }
 }
 
@@ -494,6 +595,78 @@ mod tests {
                         "{name} boundary {i} k={k:#x}"
                     );
                 }
+            }
+        }
+    }
+
+    /// The release-mode NaN hardening: every table encodes NaN to the
+    /// pattern its codec produces (NaR for takum/posit, canonical NaN for
+    /// the IEEE-style formats), through every encode entry point.
+    #[test]
+    fn nan_encodes_to_the_formats_nan_pattern() {
+        let names: Vec<&str> = crate::num::registry::LUT8_FORMATS
+            .iter()
+            .chain(crate::num::registry::LUT16_FORMATS.iter())
+            .copied()
+            .collect();
+        for name in names {
+            let f = format_by_name(name).unwrap();
+            let lut = Lut8::build(&*f);
+            let want = f.encode(f64::NAN);
+            assert_eq!(lut.nan_pattern(), want, "{name}");
+            assert_eq!(lut.encode_bits(f64::NAN), want, "{name} encode_bits");
+            assert!(f.decode(want).is_nan(), "{name}: NaN pattern must decode to NaN");
+            assert!(lut.roundtrip(f64::NAN).is_nan(), "{name} roundtrip");
+            assert!(lut.roundtrip_branchless(f64::NAN).is_nan(), "{name} branchless");
+            // Slice forms, with NaNs interleaved among ordinary values.
+            let xs = [1.5, f64::NAN, -0.25, f64::NAN, 0.0, 2.0e3, f64::NAN, -7.0, 0.125];
+            let mut enc = [0u64; 9];
+            lut.encode_slice(&xs, &mut enc);
+            let mut lock = [0u64; 9];
+            lut.encode_slice_lockstep(&xs, &mut lock);
+            let mut rt = [0.0f64; 9];
+            lut.roundtrip_slice(&xs, &mut rt);
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(enc[i], lut.encode_bits(x), "{name} slice i={i}");
+                assert_eq!(lock[i], enc[i], "{name} lockstep i={i}");
+                if x.is_nan() {
+                    assert_eq!(enc[i], want, "{name} NaN lane i={i}");
+                    assert!(rt[i].is_nan(), "{name} roundtrip lane i={i}");
+                }
+            }
+        }
+    }
+
+    /// The lockstep chunk search must agree with the scalar boundary
+    /// search on every table: random wide-range probes, every
+    /// representable value, and probes just below/at decision boundaries.
+    #[test]
+    fn lockstep_encode_matches_scalar_search() {
+        let names: Vec<&str> = crate::num::registry::LUT8_FORMATS
+            .iter()
+            .chain(crate::num::registry::LUT16_FORMATS.iter())
+            .copied()
+            .collect();
+        for name in names {
+            let f = format_by_name(name).unwrap();
+            let lut = Lut8::build(&*f);
+            let mut r = Rng::new(0x10C5);
+            let mut xs: Vec<f64> = (0..4096).map(|_| r.wide_f64(-60, 60)).collect();
+            // Representable values and boundary probes (sampled for the
+            // 16-bit tables), plus a ragged tail to hit the remainder
+            // path.
+            let stride = (lut.sorted_vals.len() / 512).max(1);
+            xs.extend(lut.sorted_vals.iter().step_by(stride));
+            let bstride = (lut.boundaries.len() / 512).max(1);
+            for i in (0..lut.boundaries.len()).step_by(bstride) {
+                xs.push(key_f64(lut.boundaries[i]));
+                xs.push(key_f64(lut.boundaries[i] - 1));
+            }
+            xs.push(0.0);
+            let mut lock = vec![0u64; xs.len()];
+            lut.encode_slice_lockstep(&xs, &mut lock);
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(lock[i], lut.encode_bits(x), "{name} i={i} x={x}");
             }
         }
     }

@@ -11,16 +11,27 @@
 //! (8/16-bit formats hit the cached `Lut8` tables of [`crate::num::lut`];
 //! wider formats use the arithmetic codecs), the operation is applied
 //! over the whole plane, and results are **batch-encoded** through
-//! [`LaneCodec::encode_slice`] (one `Lut8` table sweep for all-finite
+//! [`LaneCodec::encode_slice`] (one `Lut8` table sweep for infinity-free
 //! takum planes) before the masked plane writer stores the active lanes.
 //! [`CodecMode::Arith`] preserves the pre-refactor per-lane arithmetic
 //! path for equivalence tests and benches.
 //!
-//! A future SIMD backend (e.g. AVX-512 intrinsics or a GPU lane kernel)
-//! plugs in at the [`LaneCodec`] plane boundary: `decode_plane` /
-//! `encode_slice` already see whole-register slices, so a backend only
-//! needs to provide vectorised implementations of those two hooks plus
-//! the FMA plane loop — the plan cache and mask policy stay unchanged.
+//! Behind the codec sits a plane [`Backend`] (see [`crate::sim::plane`]):
+//! [`Backend::Scalar`] keeps the per-element loops, [`Backend::Vector`]
+//! dispatches decode/encode/FMA/dot to chunked, branch-free plane kernels
+//! (with runtime-detected AVX2 specialisations on x86-64) — bit-identical
+//! by construction and by test. Source-plane decodes additionally go
+//! through a **decoded-shadow plane cache**: each register slot memoizes
+//! the f64 plane of its last decode, keyed by the register's *content*
+//! (plus lane type), so chained FMA/add/mul steps skip re-decoding
+//! operands the previous step just produced. Content keying makes the
+//! cache immune to direct `regs.v` writes — a stale shadow simply fails
+//! the 512-bit compare and re-decodes.
+//!
+//! The next backend (GPU lane kernel, HLO interpreter) plugs in at the
+//! same boundary: a third [`Backend`] variant implementing `decode_plane`
+//! / `encode_slice` plus the FMA/dot plane loops — the plan cache, shadow
+//! cache and mask policy stay unchanged.
 //!
 //! Design notes:
 //!
@@ -43,8 +54,9 @@ use super::lanes::{
     CodecMode, FmaKind, FmaOrder, FpOp, IntKind, IntOp, LaneCodec, LanePlan, MaskOp, MaskPlan,
     ShiftOp,
 };
+use super::plane::{self, Backend};
 use super::program::{Instruction, Operand, Program};
-use super::register::{RegisterFile, VecReg};
+use super::register::{RegisterFile, VecReg, NUM_VREGS};
 use crate::num::bitstring::sign_extend;
 use crate::num::{BF16, F32};
 use anyhow::{anyhow, bail, Result};
@@ -52,8 +64,46 @@ use std::collections::{BTreeMap, HashMap};
 
 pub use super::lanes::LaneType;
 
-/// The simulator.
+/// One slot of the decoded-shadow plane cache: the f64 plane of the last
+/// decode of a register, keyed by the register's full 512-bit content and
+/// the lane type it was decoded as. Pure memoization — decode is a
+/// function of (bits, lane type), so a hit is correct by construction and
+/// no write-path invalidation is needed (any write changes the content
+/// key; a coincidentally identical content decodes identically).
+#[derive(Debug, Clone)]
+struct ShadowPlane {
+    ty: LaneType,
+    /// Number of leading lanes `vals` is valid for.
+    lanes: u8,
+    bits: VecReg,
+    vals: [f64; 64],
+}
+
+/// Per-register decoded-shadow cache (see [`ShadowPlane`]). Lazily sized
+/// on first install so `Machine::default()` stays allocation-free.
 #[derive(Debug, Clone, Default)]
+struct ShadowCache {
+    planes: Vec<Option<ShadowPlane>>,
+}
+
+impl ShadowCache {
+    #[inline]
+    fn lookup(&self, r: usize, bits: &VecReg, ty: LaneType, lanes: usize) -> Option<&[f64; 64]> {
+        let p = self.planes.get(r)?.as_ref()?;
+        (p.ty == ty && usize::from(p.lanes) >= lanes && p.bits == *bits).then_some(&p.vals)
+    }
+
+    #[inline]
+    fn install(&mut self, r: usize, bits: VecReg, ty: LaneType, lanes: usize, vals: &[f64; 64]) {
+        if self.planes.is_empty() {
+            self.planes.resize_with(NUM_VREGS, || None);
+        }
+        self.planes[r] = Some(ShadowPlane { ty, lanes: lanes as u8, bits, vals: *vals });
+    }
+}
+
+/// The simulator.
+#[derive(Debug, Clone)]
 pub struct Machine {
     pub regs: RegisterFile,
     /// Executed-instruction histogram.
@@ -62,9 +112,29 @@ pub struct Machine {
     pub executed: u64,
     /// How lanes translate between bits and f64 (LUT-backed by default).
     mode: CodecMode,
+    /// Which plane backend executes decode/encode/FMA plane loops.
+    backend: Backend,
     /// Memoized mnemonic → plan cache: each distinct mnemonic is parsed
     /// exactly once per machine.
     plan_cache: HashMap<String, LanePlan>,
+    /// Decoded-shadow plane cache (content-keyed; see [`ShadowPlane`]).
+    shadow: ShadowCache,
+}
+
+impl Default for Machine {
+    fn default() -> Machine {
+        Machine {
+            regs: RegisterFile::default(),
+            counts: BTreeMap::new(),
+            executed: 0,
+            mode: CodecMode::default(),
+            // Honours TAKUM_BACKEND so CI can force the vector backend
+            // through every default-constructed machine.
+            backend: Backend::from_env(),
+            plan_cache: HashMap::new(),
+            shadow: ShadowCache::default(),
+        }
+    }
 }
 
 impl Machine {
@@ -78,26 +148,80 @@ impl Machine {
         Machine { mode, ..Machine::default() }
     }
 
+    /// A machine with an explicit plane [`Backend`] (the default honours
+    /// the `TAKUM_BACKEND` environment variable, else scalar).
+    pub fn with_backend(backend: Backend) -> Machine {
+        Machine { backend, ..Machine::default() }
+    }
+
+    /// A machine with both axes pinned: codec mode × plane backend.
+    pub fn with_config(mode: CodecMode, backend: Backend) -> Machine {
+        Machine { mode, backend, ..Machine::default() }
+    }
+
     pub fn mode(&self) -> CodecMode {
         self.mode
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Resolve a codec against this machine's mode and backend.
+    #[inline]
+    fn codec(&self, ty: LaneType) -> LaneCodec {
+        LaneCodec::resolve_with(ty, self.mode, self.backend)
     }
 
     // ------------------------------------------------------------- data I/O
 
     /// Encode `values` into vector register lanes of type `ty`.
     pub fn load_f64(&mut self, vreg: u8, ty: LaneType, values: &[f64]) {
-        let codec = LaneCodec::resolve(ty, self.mode);
-        self.regs.v[vreg as usize] = codec.encode_plane(ty.width(), values);
+        let codec = self.codec(ty);
+        let w = ty.width();
+        let reg = codec.encode_plane(w, values);
+        self.regs.v[vreg as usize] = reg;
+        // Pre-seed the decoded shadow while the decode is a pure table
+        // hit: loaded tiles are consumed by the very next plane op.
+        if codec.has_lut() {
+            let lanes = VecReg::lanes(w);
+            let mut dec = [0.0f64; 64];
+            codec.decode_plane(&reg, w, lanes, &mut dec);
+            self.shadow.install(vreg as usize, reg, ty, lanes, &dec);
+        }
     }
 
     /// Decode all lanes of a vector register.
     pub fn read_f64(&self, vreg: u8, ty: LaneType) -> Vec<f64> {
         let w = ty.width();
         let lanes = VecReg::lanes(w);
-        let codec = LaneCodec::resolve(ty, self.mode);
+        let codec = self.codec(ty);
         let mut out = vec![0.0f64; lanes];
-        codec.decode_plane(&self.regs.v[vreg as usize], w, lanes, &mut out);
+        match self.shadow.lookup(vreg as usize, &self.regs.v[vreg as usize], ty, lanes) {
+            Some(vals) => out.copy_from_slice(&vals[..lanes]),
+            None => codec.decode_plane(&self.regs.v[vreg as usize], w, lanes, &mut out),
+        }
         out
+    }
+
+    /// Decode a source-register plane through the decoded-shadow cache:
+    /// a hit is a 512-byte copy instead of a bit-extraction + table (or
+    /// arithmetic-codec) sweep; a miss decodes and installs.
+    fn decode_plane_cached(
+        &mut self,
+        r: usize,
+        codec: &LaneCodec,
+        ty: LaneType,
+        lanes: usize,
+        out: &mut [f64; 64],
+    ) {
+        let reg = self.regs.v[r];
+        if let Some(vals) = self.shadow.lookup(r, &reg, ty, lanes) {
+            out[..lanes].copy_from_slice(&vals[..lanes]);
+            return;
+        }
+        codec.decode_plane(&reg, ty.width(), lanes, out);
+        self.shadow.install(r, reg, ty, lanes, out);
     }
 
     pub fn set_mask(&mut self, k: u8, bits: u64) {
@@ -177,28 +301,65 @@ impl Machine {
     }
 
     /// Encode a whole plane of f64 lane results through the codec's
-    /// batched encoder ([`LaneCodec::encode_slice`] — a single `Lut8`
-    /// table sweep for all-finite takum planes), then store under the
-    /// instruction's write mask. Counterpart of the batched
-    /// `decode_plane` on the read side: encode used to run per active
-    /// lane inside the masked writer.
+    /// batched encoder ([`LaneCodec::encode_slice`] — one table sweep for
+    /// infinity-free takum planes), then store under the instruction's
+    /// write mask. Counterpart of the batched `decode_plane` on the read
+    /// side: encode used to run per active lane inside the masked writer.
+    ///
+    /// Mask policy is a popcount heuristic, not "any mask ⇒ slow path":
+    /// a mask covering at least half the lanes (dense merging masks, and
+    /// in particular the common all-active `{k}` case) batch-encodes the
+    /// whole plane — the handful of discarded boundary searches costs
+    /// less than losing the sweep. Genuinely sparse masks keep the
+    /// per-active-lane encode.
     fn write_lanes_f64(
         &mut self,
         ins: &Instruction,
         codec: &LaneCodec,
-        width: u32,
+        ty: LaneType,
         lanes: usize,
         vals: &[f64],
     ) -> Result<()> {
-        // Masked stores keep the per-active-lane encode: batch-encoding a
-        // sparse plane would pay up to 64 boundary searches for lanes the
-        // mask then discards.
-        if matches!(ins.mask, Some(k) if k != 0) {
-            return self.write_lanes(ins, width, lanes, |i| codec.encode(vals[i]));
+        let width = ty.width();
+        // Destination and effective mask are resolved exactly once (this
+        // is the store path of every fp/convert/dot instruction).
+        let dst = self.vreg(&ins.dst)?;
+        let mask = self.regs.write_mask(ins.mask, lanes);
+        let active = mask.count_ones() as usize;
+        let mut out = self.regs.v[dst];
+        if active * 2 < lanes {
+            for i in 0..lanes {
+                if mask >> i & 1 == 1 {
+                    out.set(width, i, codec.encode(vals[i]));
+                } else if ins.zeroing {
+                    out.set(width, i, 0);
+                }
+            }
+            self.regs.v[dst] = out;
+            return Ok(());
         }
         let mut bits = [0u64; 64];
         codec.encode_slice(&vals[..lanes], &mut bits[..lanes]);
-        self.write_lanes(ins, width, lanes, |i| bits[i])
+        for i in 0..lanes {
+            if mask >> i & 1 == 1 {
+                out.set(width, i, bits[i]);
+            } else if ins.zeroing {
+                out.set(width, i, 0);
+            }
+        }
+        self.regs.v[dst] = out;
+        // Fully-overwritten whole-register planes install their decoded
+        // shadow with one table sweep over the just-encoded bits, so the
+        // next step of a chained FMA/add/mul sequence skips decoding this
+        // register entirely.
+        if active == lanes && lanes == VecReg::lanes(width) {
+            if let Some(lut) = codec.attached_lut() {
+                let mut dec = [0.0f64; 64];
+                lut.decode_slice(&bits[..lanes], &mut dec[..lanes]);
+                self.shadow.install(dst, out, ty, lanes, &dec);
+            }
+        }
+        Ok(())
     }
 
     /// Apply write-masking and store lane results.
@@ -336,29 +497,30 @@ impl Machine {
     fn exec_fp(&mut self, ins: &Instruction, op: FpOp, ty: LaneType, packed: bool) -> Result<()> {
         let w = ty.width();
         let lanes = if packed { VecReg::lanes(w) } else { 1 };
-        let codec = LaneCodec::resolve(ty, self.mode);
-        let a = self.regs.v[self.vreg(&ins.srcs[0])?];
-        let b = ins
+        let codec = self.codec(ty);
+        let ra = self.vreg(&ins.srcs[0])?;
+        let rb = ins
             .srcs
             .get(1)
             .and_then(|o| match o {
                 Operand::Vreg(_) => Some(self.vreg(o)),
                 _ => None,
             })
-            .transpose()?
-            .map(|r| self.regs.v[r]);
+            .transpose()?;
         // Trailing immediate (MINMAX / RNDSCALE / CLASS selector).
         let imm = ins.srcs.iter().rev().find_map(|o| match o {
             Operand::Imm(v) => Some(*v),
             _ => None,
         });
 
-        // Source planes are decoded once, up front.
+        // Source planes are decoded once, up front, through the
+        // decoded-shadow cache (chained steps re-reading a plane the
+        // previous step produced skip the decode entirely).
         let mut xa = [0.0f64; 64];
-        codec.decode_plane(&a, w, lanes, &mut xa);
+        self.decode_plane_cached(ra, &codec, ty, lanes, &mut xa);
         let mut xb = [0.0f64; 64];
-        if let Some(rb) = b.as_ref() {
-            codec.decode_plane(rb, w, lanes, &mut xb);
+        if let Some(rb) = rb {
+            self.decode_plane_cached(rb, &codec, ty, lanes, &mut xb);
         }
 
         // VCLASS writes a mask register, not lanes.
@@ -382,11 +544,17 @@ impl Machine {
         // skip the accumulator plane decode for everything else.
         let mut xz = [0.0f64; 64];
         if matches!(op, FpOp::Fma(..)) {
-            let acc = self.regs.v[self.vreg(&ins.dst)?];
-            codec.decode_plane(&acc, w, lanes, &mut xz);
+            let rd = self.vreg(&ins.dst)?;
+            self.decode_plane_cached(rd, &codec, ty, lanes, &mut xz);
         }
 
         let mut vals = [0.0f64; 64];
+        // The vector backend runs the FMA chain as a fused plane kernel
+        // (constant trip count, dispatch hoisted out of the lane loop).
+        if let (Backend::Vector, FpOp::Fma(kind, order)) = (self.backend, op) {
+            plane::fma_plane(kind, order, &xa, &xb, &xz, &mut vals);
+            return self.write_lanes_f64(ins, &codec, ty, lanes, &vals);
+        }
         for (i, v) in vals.iter_mut().enumerate().take(lanes) {
             let (x, y, z) = (xa[i], xb[i], xz[i]);
             *v = match op {
@@ -456,7 +624,7 @@ impl Machine {
                 FpOp::Class => unreachable!(),
             };
         }
-        self.write_lanes_f64(ins, &codec, w, lanes, &vals)
+        self.write_lanes_f64(ins, &codec, ty, lanes, &vals)
     }
 
     fn exec_broadcast(&mut self, ins: &Instruction, w: u32) -> Result<()> {
@@ -564,11 +732,13 @@ impl Machine {
             // IEEE formats need real comparisons (NaN-unordered): decode
             // both planes once, then compare values.
             _ => {
-                let codec = LaneCodec::resolve(ty, self.mode);
+                let codec = self.codec(ty);
+                let ra = self.vreg(&ins.srcs[0])?;
+                let rbi = self.vreg(&ins.srcs[1])?;
                 let mut xa = [0.0f64; 64];
-                codec.decode_plane(&a, w, lanes, &mut xa);
+                self.decode_plane_cached(ra, &codec, ty, lanes, &mut xa);
                 let mut xb = [0.0f64; 64];
-                codec.decode_plane(&b, w, lanes, &mut xb);
+                self.decode_plane_cached(rbi, &codec, ty, lanes, &mut xb);
                 for i in 0..lanes {
                     if rmask >> i & 1 == 0 {
                         continue;
@@ -597,13 +767,14 @@ impl Machine {
     fn exec_convert_ne2(&mut self, ins: &Instruction) -> Result<()> {
         let a = self.regs.v[self.vreg(&ins.srcs[0])?];
         let b = self.regs.v[self.vreg(&ins.srcs[1])?];
-        let bc = LaneCodec::resolve(LaneType::Mini(BF16), self.mode);
+        let bf = LaneType::Mini(BF16);
+        let bc = self.codec(bf);
         let mut vals = [0.0f64; 64];
         for (i, v) in vals.iter_mut().enumerate().take(32) {
             let src = if i < 16 { &b } else { &a };
             *v = F32.decode(src.get(32, i % 16));
         }
-        self.write_lanes_f64(ins, &bc, 16, 32, &vals)
+        self.write_lanes_f64(ins, &bc, bf, 32, &vals)
     }
 
     fn exec_convert(
@@ -612,15 +783,15 @@ impl Machine {
         src_ty: LaneType,
         dst_ty: LaneType,
     ) -> Result<()> {
-        let a = self.regs.v[self.vreg(&ins.srcs[0])?];
+        let ra = self.vreg(&ins.srcs[0])?;
         let (ws, wd) = (src_ty.width(), dst_ty.width());
         // Width-changing packed converts operate on min(lanes_src, lanes_dst).
         let lanes = VecReg::lanes(ws.max(wd));
-        let sc = LaneCodec::resolve(src_ty, self.mode);
-        let dc = LaneCodec::resolve(dst_ty, self.mode);
+        let sc = self.codec(src_ty);
+        let dc = self.codec(dst_ty);
         let mut xs = [0.0f64; 64];
-        sc.decode_plane(&a, ws, lanes, &mut xs);
-        self.write_lanes_f64(ins, &dc, wd, lanes, &xs)
+        self.decode_plane_cached(ra, &sc, src_ty, lanes, &mut xs);
+        self.write_lanes_f64(ins, &dc, dst_ty, lanes, &xs)
     }
 
     /// Widening dot products: `VDPPT8PT16`-style (pairs of src lanes fused
@@ -629,27 +800,33 @@ impl Machine {
     fn exec_dot(&mut self, ins: &Instruction, src_ty: LaneType, dst_ty: LaneType) -> Result<()> {
         let (ws, wd) = (src_ty.width(), dst_ty.width());
         debug_assert_eq!(wd, ws * 2);
-        let a = self.regs.v[self.vreg(&ins.srcs[0])?];
-        let b = self.regs.v[self.vreg(&ins.srcs[1])?];
-        let acc = self.regs.v[self.vreg(&ins.dst)?];
+        let ra = self.vreg(&ins.srcs[0])?;
+        let rb = self.vreg(&ins.srcs[1])?;
+        let rd = self.vreg(&ins.dst)?;
         let lanes = VecReg::lanes(wd);
         let nlanes = VecReg::lanes(ws);
-        let sc = LaneCodec::resolve(src_ty, self.mode);
-        let dc = LaneCodec::resolve(dst_ty, self.mode);
+        let sc = self.codec(src_ty);
+        let dc = self.codec(dst_ty);
         let mut xa = [0.0f64; 64];
-        sc.decode_plane(&a, ws, nlanes, &mut xa);
+        self.decode_plane_cached(ra, &sc, src_ty, nlanes, &mut xa);
         let mut xb = [0.0f64; 64];
-        sc.decode_plane(&b, ws, nlanes, &mut xb);
+        self.decode_plane_cached(rb, &sc, src_ty, nlanes, &mut xb);
         let mut xz = [0.0f64; 64];
-        dc.decode_plane(&acc, wd, lanes, &mut xz);
+        self.decode_plane_cached(rd, &dc, dst_ty, lanes, &mut xz);
         let mut vals = [0.0f64; 64];
-        for (i, v) in vals.iter_mut().enumerate().take(lanes) {
-            let mut sum = xz[i];
-            sum += xa[2 * i] * xb[2 * i];
-            sum += xa[2 * i + 1] * xb[2 * i + 1];
-            *v = sum;
+        if self.backend == Backend::Vector {
+            // Fused widening-reduce plane (constant trip count; computes
+            // the full 32-lane plane, the writer takes `lanes`).
+            plane::dot_plane(&xa, &xb, &xz, &mut vals);
+        } else {
+            for (i, v) in vals.iter_mut().enumerate().take(lanes) {
+                let mut sum = xz[i];
+                sum += xa[2 * i] * xb[2 * i];
+                sum += xa[2 * i + 1] * xb[2 * i + 1];
+                *v = sum;
+            }
         }
-        self.write_lanes_f64(ins, &dc, wd, lanes, &vals)
+        self.write_lanes_f64(ins, &dc, dst_ty, lanes, &vals)
     }
 }
 
@@ -1048,5 +1225,239 @@ mod tests {
         }
         assert_eq!(mach.plan_cache.len(), 2);
         assert_eq!(mach.executed, 20);
+    }
+
+    /// The headline release-mode bugfix: a NaN produced *inside* the
+    /// datapath (0/0, inf − inf) must store as the format's error marker
+    /// — takum NaR `1000…0`, the IEEE formats' NaN pattern — and
+    /// propagate through subsequent arithmetic, in both codec modes and
+    /// both backends. Before the hardening, a release build would
+    /// silently store the extreme finite pattern the NaN's huge sort key
+    /// lands on.
+    #[test]
+    fn nan_results_store_as_nar_and_propagate() {
+        use crate::num::takum_linear::nar;
+        for mode in [CodecMode::Lut, CodecMode::Arith] {
+            for backend in [Backend::Scalar, Backend::Vector] {
+                // takum: 0/0 in a packed divide → NaR in every lane width.
+                for (n, mn) in [(8u32, "VDIVPT8"), (16, "VDIVPT16")] {
+                    let t = LaneType::Takum(n);
+                    let lanes = VecReg::lanes(n);
+                    let mut m = Machine::with_config(mode, backend);
+                    m.load_f64(0, t, &vec![0.0; lanes]);
+                    m.load_f64(1, t, &vec![0.0; lanes]);
+                    m.step(&add(mn, 2, 0, 1)).unwrap();
+                    for i in 0..lanes {
+                        assert_eq!(
+                            m.regs.v[2].get(n, i),
+                            nar(n),
+                            "{mode:?}/{backend:?} t{n} lane {i}: stored bits"
+                        );
+                    }
+                    // …and NaR propagates through an FMA chain.
+                    m.load_f64(3, t, &vec![1.0; lanes]);
+                    let fma = format!("VFMADD231PT{n}");
+                    m.step(&add(&fma, 3, 2, 3)).unwrap();
+                    for i in 0..lanes {
+                        assert_eq!(m.regs.v[3].get(n, i), nar(n), "t{n} propagate lane {i}");
+                    }
+                }
+                // IEEE minis: inf − inf in the dot-style accumulator
+                // chain → the canonical NaN pattern.
+                for (spec, mn, sub) in [
+                    (crate::num::E5M2, "bf8", "VSUBBF8"),
+                    (BF16, "bf16", "VSUBNEPBF16"),
+                    (crate::num::F16, "f16", "VSUBPH"),
+                ] {
+                    let ty = LaneType::Mini(spec);
+                    let w = spec.bits();
+                    let lanes = VecReg::lanes(w);
+                    let mut m = Machine::with_config(mode, backend);
+                    m.load_f64(0, ty, &vec![f64::INFINITY; lanes]);
+                    m.load_f64(1, ty, &vec![f64::INFINITY; lanes]);
+                    m.step(&add(sub, 2, 0, 1)).unwrap();
+                    for i in 0..lanes {
+                        assert_eq!(
+                            m.regs.v[2].get(w, i),
+                            spec.nan_bits(),
+                            "{mode:?}/{backend:?} {mn} lane {i}: stored bits"
+                        );
+                        assert!(m.read_f64(2, ty)[i].is_nan(), "{mn} lane {i}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Softmax-shaped NaN regression: normalising an all-`-inf` row
+    /// (max-subtract gives inf − inf → NaN) must flow NaR/NaN all the way
+    /// through the divide, never an extreme finite value.
+    #[test]
+    fn softmax_of_all_neg_inf_row_yields_error_marker_not_finite() {
+        for mode in [CodecMode::Lut, CodecMode::Arith] {
+            for backend in [Backend::Scalar, Backend::Vector] {
+                let bf = LaneType::Mini(BF16);
+                let lanes = VecReg::lanes(16);
+                let mut m = Machine::with_config(mode, backend);
+                // x = -inf row; m = max(x) = -inf; r = x - m = NaN.
+                m.load_f64(0, bf, &vec![f64::NEG_INFINITY; lanes]);
+                m.step(&add("VMAXNEPBF16", 1, 0, 0)).unwrap();
+                m.step(&add("VSUBNEPBF16", 2, 0, 1)).unwrap();
+                for i in 0..lanes {
+                    assert_eq!(m.regs.v[2].get(16, i), BF16.nan_bits(), "sub lane {i}");
+                }
+                // The normalising divide keeps the marker (NaN/NaN).
+                m.step(&add("VDIVNEPBF16", 3, 2, 2)).unwrap();
+                let probs = m.read_f64(3, bf);
+                for (i, p) in probs.iter().enumerate() {
+                    assert!(p.is_nan(), "{mode:?}/{backend:?} lane {i}: {p}");
+                }
+            }
+        }
+    }
+
+    /// The popcount store heuristic: dense, sparse, zeroing and unmasked
+    /// stores must be bit-identical to per-lane encode regardless of
+    /// which path (batched vs per-active-lane) the mask density selects.
+    #[test]
+    fn masked_store_paths_bit_identical() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(0x3A5C);
+        let cases: [(&str, LaneType); 3] = [
+            ("VADDPT8", LaneType::Takum(8)),
+            ("VMULPT16", LaneType::Takum(16)),
+            ("VMULHF8", LaneType::Mini(crate::num::E4M3)),
+        ];
+        for (mn, ty) in cases {
+            let w = ty.width();
+            let lanes = VecReg::lanes(w);
+            let a: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-10, 10)).collect();
+            let b: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-10, 10)).collect();
+            let old: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-10, 10)).collect();
+            // Mask densities straddling the popcount threshold, plus the
+            // all-active and nearly-empty extremes.
+            let masks: [u64; 5] = [
+                u64::MAX,
+                0x1,
+                0x5555_5555_5555_5555,
+                (1u64 << (lanes / 2)) - 1,
+                (1u64 << (lanes / 2 + 1)) - 1,
+            ];
+            for mask in masks {
+                for zeroing in [false, true] {
+                    for backend in [Backend::Scalar, Backend::Vector] {
+                        let mut m = Machine::with_config(CodecMode::Lut, backend);
+                        m.load_f64(0, ty, &a);
+                        m.load_f64(1, ty, &b);
+                        m.load_f64(2, ty, &old);
+                        m.set_mask(1, mask);
+                        m.step(&add(mn, 2, 0, 1).with_mask(1, zeroing)).unwrap();
+                        // Reference: scalar per-lane semantics.
+                        let codec = LaneCodec::resolve(ty, CodecMode::Lut);
+                        let aq: Vec<f64> = a.iter().map(|&x| codec.decode(codec.encode(x))).collect();
+                        let bq: Vec<f64> = b.iter().map(|&x| codec.decode(codec.encode(x))).collect();
+                        for i in 0..lanes {
+                            let want = if mask >> i & 1 == 1 {
+                                let v = match mn {
+                                    "VADDPT8" => aq[i] + bq[i],
+                                    _ => aq[i] * bq[i],
+                                };
+                                codec.encode(v)
+                            } else if zeroing {
+                                0
+                            } else {
+                                codec.encode(old[i])
+                            };
+                            assert_eq!(
+                                m.regs.v[2].get(w, i),
+                                want,
+                                "{mn} {backend:?} mask={mask:#x} z={zeroing} lane {i}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Machine-level cross-backend gate: the vector backend must leave
+    /// bit-identical architectural state to the scalar backend across the
+    /// op families the kernels touch, including masked and chained steps.
+    #[test]
+    fn vector_and_scalar_machines_agree_bit_for_bit() {
+        use crate::util::rng::Rng;
+        let mut r = Rng::new(0xFEED);
+        let cases: Vec<(&str, LaneType)> = vec![
+            ("VADDPT8", LaneType::Takum(8)),
+            ("VMULPT8", LaneType::Takum(8)),
+            ("VDIVPT16", LaneType::Takum(16)),
+            ("VFMADD231PT16", LaneType::Takum(16)),
+            ("VFNMSUB213PT8", LaneType::Takum(8)),
+            ("VADDNEPBF16", LaneType::Mini(BF16)),
+            ("VFMADD231PH", LaneType::Mini(crate::num::F16)),
+            ("VMULHF8", LaneType::Mini(crate::num::E4M3)),
+            ("VMULBF8", LaneType::Mini(crate::num::E5M2)),
+        ];
+        for (mn, ty) in cases {
+            let lanes = VecReg::lanes(ty.width());
+            let a: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-20, 20)).collect();
+            let b: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-20, 20)).collect();
+            let mut scalar = Machine::with_config(CodecMode::Lut, Backend::Scalar);
+            let mut vector = Machine::with_config(CodecMode::Lut, Backend::Vector);
+            for m in [&mut scalar, &mut vector] {
+                m.load_f64(0, ty, &a);
+                m.load_f64(1, ty, &b);
+                m.load_f64(2, ty, &a);
+                m.set_mask(1, 0xAAAA_AAAA_AAAA_AAAA);
+                // Chained steps so the decoded-shadow cache is exercised
+                // (step 2 consumes step 1's plane), plus a masked write.
+                m.step(&add(mn, 2, 0, 1)).unwrap();
+                m.step(&add(mn, 2, 2, 1)).unwrap();
+                m.step(&add(mn, 3, 2, 0).with_mask(1, true)).unwrap();
+            }
+            for reg in [0usize, 1, 2, 3] {
+                assert_eq!(scalar.regs.v[reg], vector.regs.v[reg], "{mn}: v{reg}");
+            }
+        }
+        // Widening dot product with both codec widths in play.
+        let a: Vec<f64> = (0..64).map(|_| r.wide_f64(-8, 8)).collect();
+        let b: Vec<f64> = (0..64).map(|_| r.wide_f64(-8, 8)).collect();
+        let mut scalar = Machine::with_config(CodecMode::Lut, Backend::Scalar);
+        let mut vector = Machine::with_config(CodecMode::Lut, Backend::Vector);
+        for m in [&mut scalar, &mut vector] {
+            m.load_f64(0, LaneType::Takum(8), &a);
+            m.load_f64(1, LaneType::Takum(8), &b);
+            m.load_f64(2, LaneType::Takum(16), &vec![0.25; 32]);
+            m.step(&add("VDPPT8PT16", 2, 0, 1)).unwrap();
+            m.step(&add("VDPPT8PT16", 2, 0, 1)).unwrap();
+        }
+        assert_eq!(scalar.regs.v[2], vector.regs.v[2], "VDPPT8PT16");
+    }
+
+    /// The decoded-shadow cache is content-keyed: a direct write to the
+    /// public register file (no Machine API involved) must not serve
+    /// stale planes.
+    #[test]
+    fn shadow_cache_survives_direct_register_writes() {
+        let t = LaneType::Takum(16);
+        let lanes = VecReg::lanes(16);
+        let mut m = Machine::new();
+        m.load_f64(0, t, &vec![2.0; lanes]);
+        m.load_f64(1, t, &vec![3.0; lanes]);
+        m.step(&add("VMULPT16", 2, 0, 1)).unwrap();
+        assert_eq!(m.read_f64(2, t)[0], 6.0);
+        // Clobber v0 behind the machine's back, as benches do.
+        let replacement = {
+            let mut probe = Machine::new();
+            probe.load_f64(0, t, &vec![10.0; lanes]);
+            probe.regs.v[0]
+        };
+        m.regs.v[0] = replacement;
+        m.step(&add("VMULPT16", 2, 0, 1)).unwrap();
+        assert_eq!(m.read_f64(2, t)[0], 30.0);
+        // Same content re-read through a different lane type also misses
+        // (type is part of the key) and decodes correctly.
+        let as_u16 = m.read_f64(0, LaneType::UInt(16));
+        assert_eq!(as_u16[0], crate::num::takum_linear::encode(10.0, 16) as f64);
     }
 }

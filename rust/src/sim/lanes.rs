@@ -18,7 +18,23 @@
 //! 16-bit takum). [`CodecMode::Arith`] keeps the pre-refactor per-lane
 //! arithmetic path alive as the reference implementation — equivalence
 //! tests and the `benches/simulator.rs` speedup comparison run both.
+//!
+//! Orthogonally to the codec mode, a [`LaneCodec`] carries a plane
+//! [`Backend`]: [`Backend::Scalar`] runs the per-element loops below,
+//! [`Backend::Vector`] dispatches the whole-plane hooks
+//! ([`LaneCodec::decode_plane`] / [`LaneCodec::encode_slice`]) to the
+//! chunked/vectorised kernels of [`crate::sim::plane`] — bit-identical by
+//! construction and by test, so the backend is a pure performance knob.
+//!
+//! **NaN/NaR encode contract:** every encode entry point here and in the
+//! LUT layer maps NaN to the format's error marker itself — takum NaR
+//! (`1000…0`), the canonical NaN pattern for IEEE-style minifloats — in
+//! release builds as well as debug. There is no "callers handle NaN"
+//! caveat anymore; a NaN lane produced inside a kernel (softmax of an
+//! all-`-inf` row, `inf − inf` in an accumulator) stores as the error
+//! marker and propagates, never as an extreme finite value.
 
+use super::plane::{self, Backend};
 use super::register::VecReg;
 use crate::num::bitstring::{mask64, sign_extend};
 use crate::num::lut::{self, Lut8};
@@ -128,66 +144,109 @@ pub enum CodecMode {
     Arith,
 }
 
-/// A lane type resolved against the codec tables: the per-plane
-/// decode/encode engine. Resolution happens once per executed
-/// instruction (not per lane).
+/// A lane type resolved against the codec tables **and a plane
+/// [`Backend`]**: the per-plane decode/encode engine. Resolution happens
+/// once per executed instruction (not per lane).
 #[derive(Clone, Copy)]
-pub enum LaneCodec {
+pub struct LaneCodec {
+    kind: CodecKind,
+    backend: Backend,
+}
+
+#[derive(Clone, Copy)]
+enum CodecKind {
     Takum { n: u32, lut: Option<&'static Lut8> },
     Mini { spec: MinifloatSpec, sat: bool, lut: Option<&'static Lut8> },
     Int(LaneType),
 }
 
 impl LaneCodec {
+    /// Resolve with the default (scalar) plane backend.
     pub fn resolve(ty: LaneType, mode: CodecMode) -> LaneCodec {
+        Self::resolve_with(ty, mode, Backend::Scalar)
+    }
+
+    /// Resolve against an explicit plane backend (what
+    /// [`crate::sim::Machine`] does with its own selector).
+    pub fn resolve_with(ty: LaneType, mode: CodecMode, backend: Backend) -> LaneCodec {
         let use_lut = mode == CodecMode::Lut;
-        match ty {
-            LaneType::Takum(n) => LaneCodec::Takum {
+        let kind = match ty {
+            LaneType::Takum(n) => CodecKind::Takum {
                 n,
                 lut: if use_lut { lut::cached_takum(n) } else { None },
             },
-            LaneType::Mini(s) => LaneCodec::Mini {
+            LaneType::Mini(s) => CodecKind::Mini {
                 spec: s,
                 sat: false,
                 lut: if use_lut { lut::cached_mini(s.name) } else { None },
             },
-            LaneType::MiniSat(s) => LaneCodec::Mini {
+            LaneType::MiniSat(s) => CodecKind::Mini {
                 spec: s,
                 sat: true,
                 lut: if use_lut { lut::cached_mini(s.name) } else { None },
             },
-            LaneType::UInt(_) | LaneType::SInt(_) => LaneCodec::Int(ty),
+            LaneType::UInt(_) | LaneType::SInt(_) => CodecKind::Int(ty),
+        };
+        LaneCodec { kind, backend }
+    }
+
+    /// The plane backend this codec dispatches to.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// The attached LUT, if the (mode, width) combination has one.
+    #[inline]
+    pub(crate) fn attached_lut(&self) -> Option<&'static Lut8> {
+        match self.kind {
+            CodecKind::Takum { lut, .. } | CodecKind::Mini { lut, .. } => lut,
+            CodecKind::Int(_) => None,
         }
+    }
+
+    /// True when lane decode is a pure table hit (the gate for the
+    /// decoded-shadow install on the write side).
+    #[inline]
+    pub(crate) fn has_lut(&self) -> bool {
+        self.attached_lut().is_some()
+    }
+
+    #[cfg(test)]
+    fn is_int(&self) -> bool {
+        matches!(self.kind, CodecKind::Int(_))
     }
 
     /// Decode one lane's bits.
     #[inline]
     pub fn decode(&self, bits: u64) -> f64 {
-        match self {
-            LaneCodec::Takum { n, lut } => match lut {
+        match &self.kind {
+            CodecKind::Takum { n, lut } => match lut {
                 Some(t) => t.decode_bits(bits),
                 None => takum_linear::decode(bits, *n),
             },
-            LaneCodec::Mini { spec, lut, .. } => match lut {
+            CodecKind::Mini { spec, lut, .. } => match lut {
                 Some(t) => t.decode_bits(bits),
                 None => spec.decode(bits),
             },
-            LaneCodec::Int(ty) => ty.decode(bits),
+            CodecKind::Int(ty) => ty.decode(bits),
         }
     }
 
     /// Encode one value, bit-identical to the arithmetic codec of the
     /// lane type (the LUT fast path falls back to the codec exactly where
-    /// the table cannot represent the codec's answer: non-finite inputs,
-    /// signed zeros, and IEEE overflow in non-saturating mode).
+    /// the table cannot represent the codec's answer: infinities, signed
+    /// zeros, and IEEE overflow in non-saturating mode; NaN is handled by
+    /// the table itself — see the module-level NaN/NaR contract).
     #[inline]
     pub fn encode(&self, x: f64) -> u64 {
-        match self {
-            LaneCodec::Takum { n, lut } => match lut {
-                Some(t) if x.is_finite() => t.encode_bits(x),
+        match &self.kind {
+            CodecKind::Takum { n, lut } => match lut {
+                // NaN takes the table too (→ NaR); only ±∞ needs the
+                // arithmetic codec (the table would saturate it finite).
+                Some(t) if !x.is_infinite() => t.encode_bits(x),
                 _ => takum_linear::encode(x, *n),
             },
-            LaneCodec::Mini { spec, sat, lut } => {
+            CodecKind::Mini { spec, sat, lut } => {
                 if let Some(t) = lut {
                     if x.is_nan() {
                         return spec.nan_bits();
@@ -207,24 +266,29 @@ impl LaneCodec {
                     spec.encode(x)
                 }
             }
-            LaneCodec::Int(ty) => ty.encode(x),
+            CodecKind::Int(ty) => ty.encode(x),
         }
     }
 
     /// Decode the first `lanes` lanes of `reg` at `width` into
-    /// `out[..lanes]` — the whole-plane form: one bit-extraction pass,
-    /// then a single [`Lut8::decode_slice`] table sweep when a LUT is
-    /// attached.
+    /// `out[..lanes]` — the whole-plane form. With a LUT attached,
+    /// [`Backend::Scalar`] runs one bit-extraction pass plus a
+    /// [`Lut8::decode_slice`] sweep; [`Backend::Vector`] dispatches to the
+    /// chunked word-walk (AVX2 gather where available) of
+    /// [`crate::sim::plane`].
     #[inline]
     pub fn decode_plane(&self, reg: &VecReg, width: u32, lanes: usize, out: &mut [f64]) {
         debug_assert!(lanes <= out.len() && lanes <= VecReg::lanes(width));
-        match self {
-            LaneCodec::Takum { lut: Some(t), .. } | LaneCodec::Mini { lut: Some(t), .. } => {
+        match self.attached_lut() {
+            Some(t) if self.backend == Backend::Vector => {
+                plane::decode_plane_lut(t, reg, width, lanes, out);
+            }
+            Some(t) => {
                 let mut bits = [0u64; 64];
                 reg.lanes_into(width, lanes, &mut bits);
                 t.decode_slice(&bits[..lanes], &mut out[..lanes]);
             }
-            _ => {
+            None => {
                 for (i, o) in out.iter_mut().enumerate().take(lanes) {
                     *o = self.decode(reg.get(width, i));
                 }
@@ -233,17 +297,21 @@ impl LaneCodec {
     }
 
     /// Batched [`LaneCodec::encode`] — bit-identical to the scalar path.
-    /// All-finite takum planes take the [`Lut8::encode_slice`] table sweep
-    /// (the common case: takum encodes every finite value, and arithmetic
-    /// results are NaN-free outside deliberate NaR tests); IEEE minifloat
+    /// Infinity-free takum planes take the table sweep (NaN lanes encode
+    /// to NaR in the table itself now): [`Backend::Scalar`] runs the
+    /// per-element boundary search, [`Backend::Vector`] the lockstep
+    /// chunk search (AVX2 compares where available). IEEE minifloat
     /// planes stay per-value because their encode has value-dependent
-    /// fallbacks (NaN, signed zero, non-saturating overflow) that a
-    /// straight table sweep cannot reproduce.
+    /// fallbacks (signed zero, non-saturating overflow) that a straight
+    /// table sweep cannot reproduce.
     pub fn encode_slice(&self, xs: &[f64], out: &mut [u64]) {
         assert_eq!(xs.len(), out.len());
-        if let LaneCodec::Takum { lut: Some(t), .. } = self {
-            if xs.iter().all(|x| x.is_finite()) {
-                t.encode_slice(xs, out);
+        if let CodecKind::Takum { lut: Some(t), .. } = self.kind {
+            if xs.iter().all(|x| !x.is_infinite()) {
+                match self.backend {
+                    Backend::Vector => plane::encode_slice_lut(t, xs, out),
+                    Backend::Scalar => t.encode_slice(xs, out),
+                }
                 return;
             }
         }
@@ -702,27 +770,21 @@ mod tests {
     #[test]
     fn lut_codecs_resolve_for_all_narrow_formats() {
         for (name, ty) in lut_lane_types() {
-            match LaneCodec::resolve(ty, CodecMode::Lut) {
-                LaneCodec::Takum { lut, .. } | LaneCodec::Mini { lut, .. } => {
-                    assert!(lut.is_some(), "{name}: no LUT attached");
-                }
-                LaneCodec::Int(_) => panic!("{name}: resolved to int codec"),
-            }
-            match LaneCodec::resolve(ty, CodecMode::Arith) {
-                LaneCodec::Takum { lut, .. } | LaneCodec::Mini { lut, .. } => {
-                    assert!(lut.is_none(), "{name}: Arith mode must not attach a LUT");
-                }
-                LaneCodec::Int(_) => panic!("{name}"),
-            }
+            let fast = LaneCodec::resolve(ty, CodecMode::Lut);
+            assert!(!fast.is_int(), "{name}: resolved to int codec");
+            assert!(fast.has_lut(), "{name}: no LUT attached");
+            let slow = LaneCodec::resolve(ty, CodecMode::Arith);
+            assert!(!slow.is_int(), "{name}");
+            assert!(!slow.has_lut(), "{name}: Arith mode must not attach a LUT");
+            // The backend rides along with resolution.
+            let v = LaneCodec::resolve_with(ty, CodecMode::Lut, Backend::Vector);
+            assert_eq!(v.backend(), Backend::Vector, "{name}");
+            assert_eq!(fast.backend(), Backend::Scalar, "{name}");
         }
         // 32/64-bit formats never get a table, in either mode.
         for ty in [LaneType::Takum(32), LaneType::Takum(64), LaneType::Mini(F32)] {
-            match LaneCodec::resolve(ty, CodecMode::Lut) {
-                LaneCodec::Takum { lut, .. } | LaneCodec::Mini { lut, .. } => {
-                    assert!(lut.is_none());
-                }
-                LaneCodec::Int(_) => panic!(),
-            }
+            let c = LaneCodec::resolve(ty, CodecMode::Lut);
+            assert!(!c.is_int() && !c.has_lut());
         }
     }
 
@@ -837,31 +899,104 @@ mod tests {
 
     /// The plane-writer batching gate: `encode_slice` must equal the
     /// scalar encoder element-for-element on every narrow format, in both
-    /// codec modes, including specials (which force the per-value
-    /// fallback path).
+    /// codec modes and both plane backends, including specials (which
+    /// force the per-value fallback path).
     #[test]
     fn encode_slice_matches_scalar_encode() {
         let mut r = Rng::new(0xBA7C);
         for (name, ty) in lut_lane_types() {
             for mode in [CodecMode::Lut, CodecMode::Arith] {
-                let codec = LaneCodec::resolve(ty, mode);
-                let mut xs: Vec<f64> = (0..64).map(|_| r.wide_f64(-40, 40)).collect();
-                // Splice in specials so the takum fast path is exercised
-                // both with and without its all-finite precondition.
-                xs[7] = 0.0;
-                xs[11] = -0.0;
-                let mut out = vec![0u64; xs.len()];
-                codec.encode_slice(&xs, &mut out);
-                for (i, &x) in xs.iter().enumerate() {
-                    assert_eq!(out[i], codec.encode(x), "{name} {mode:?} finite i={i}");
+                for backend in [Backend::Scalar, Backend::Vector] {
+                    let codec = LaneCodec::resolve_with(ty, mode, backend);
+                    let mut xs: Vec<f64> = (0..64).map(|_| r.wide_f64(-40, 40)).collect();
+                    // Splice in specials so the takum fast path is
+                    // exercised with and without its precondition.
+                    xs[7] = 0.0;
+                    xs[11] = -0.0;
+                    let mut out = vec![0u64; xs.len()];
+                    codec.encode_slice(&xs, &mut out);
+                    for (i, &x) in xs.iter().enumerate() {
+                        assert_eq!(out[i], codec.encode(x), "{name} {mode:?} {backend:?} i={i}");
+                    }
+                    // NaN stays on the batched takum path now (→ NaR);
+                    // infinities force the per-value fallback.
+                    xs[3] = f64::NAN;
+                    xs[5] = f64::INFINITY;
+                    xs[9] = f64::NEG_INFINITY;
+                    codec.encode_slice(&xs, &mut out);
+                    for (i, &x) in xs.iter().enumerate() {
+                        assert_eq!(
+                            out[i],
+                            codec.encode(x),
+                            "{name} {mode:?} {backend:?} special i={i}"
+                        );
+                    }
                 }
-                xs[3] = f64::NAN;
-                xs[5] = f64::INFINITY;
-                xs[9] = f64::NEG_INFINITY;
-                codec.encode_slice(&xs, &mut out);
-                for (i, &x) in xs.iter().enumerate() {
-                    assert_eq!(out[i], codec.encode(x), "{name} {mode:?} special i={i}");
+            }
+        }
+    }
+
+    /// Cross-backend bit-identity of the plane hooks over every 8/16-bit
+    /// format: decode of **every bit pattern** (exhaustive, i.e. the full
+    /// 65536-pattern takum16/PH/PBF16 space plane by plane) and encode of
+    /// a wide value distribution must agree between `Backend::Scalar`,
+    /// `Backend::Vector` and the arithmetic reference.
+    #[test]
+    fn vector_backend_planes_bit_identical_to_scalar() {
+        let mut r = Rng::new(0x7EC7);
+        for (name, ty) in lut_lane_types() {
+            let w = ty.width();
+            let lanes = VecReg::lanes(w);
+            let scalar = LaneCodec::resolve_with(ty, CodecMode::Lut, Backend::Scalar);
+            let vector = LaneCodec::resolve_with(ty, CodecMode::Lut, Backend::Vector);
+            let arith = LaneCodec::resolve(ty, CodecMode::Arith);
+
+            // Exhaustive decode: pack consecutive bit patterns into
+            // register planes until the whole pattern space is covered.
+            let mut pattern = 0u64;
+            while pattern < (1u64 << w) {
+                let mut reg = VecReg::ZERO;
+                for i in 0..lanes {
+                    reg.set(w, i, (pattern + i as u64) & mask64(w));
                 }
+                let mut s = [0.0f64; 64];
+                scalar.decode_plane(&reg, w, lanes, &mut s);
+                let mut v = [0.0f64; 64];
+                vector.decode_plane(&reg, w, lanes, &mut v);
+                let mut a = [0.0f64; 64];
+                arith.decode_plane(&reg, w, lanes, &mut a);
+                for i in 0..lanes {
+                    assert_eq!(
+                        s[i].to_bits(),
+                        v[i].to_bits(),
+                        "{name} decode pattern {:#x}",
+                        pattern + i as u64
+                    );
+                    assert!(
+                        s[i] == a[i] || (s[i].is_nan() && a[i].is_nan()),
+                        "{name} arith decode pattern {:#x}",
+                        pattern + i as u64
+                    );
+                }
+                pattern += lanes as u64;
+            }
+
+            // Encode: random wide-range planes with specials spliced in.
+            for round in 0..32 {
+                let mut xs: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-50, 50)).collect();
+                if round % 2 == 0 {
+                    xs[0] = f64::NAN;
+                    xs[lanes / 2] = 0.0;
+                    xs[lanes - 1] = -0.0;
+                }
+                let mut es = vec![0u64; lanes];
+                scalar.encode_slice(&xs, &mut es);
+                let mut ev = vec![0u64; lanes];
+                vector.encode_slice(&xs, &mut ev);
+                let mut ea = vec![0u64; lanes];
+                arith.encode_slice(&xs, &mut ea);
+                assert_eq!(es, ev, "{name} encode round {round}");
+                assert_eq!(es, ea, "{name} arith encode round {round}");
             }
         }
     }

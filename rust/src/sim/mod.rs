@@ -6,15 +6,20 @@
 //! [`LanePlan`] (memoized per [`Machine`]) and routes all 8/16-bit lane
 //! decode/encode traffic through the cached LUTs of [`crate::num::lut`] —
 //! bit-identical to the arithmetic codecs, selectable via [`CodecMode`].
+//! Orthogonally, a plane [`Backend`] ([`plane`]) selects between the
+//! per-element loops and the chunked/vectorised plane kernels (with
+//! runtime-detected AVX2 specialisations) — also bit-identical.
 
 pub mod register;
 pub mod program;
 pub mod lanes;
+pub mod plane;
 pub mod exec;
 pub mod assemble;
 
 pub use assemble::assemble;
 pub use exec::Machine;
 pub use lanes::{CodecMode, LaneCodec, LanePlan, LaneType};
+pub use plane::Backend;
 pub use program::{Instruction, Operand, Program};
 pub use register::{MaskReg, VecReg, VLEN_BITS};

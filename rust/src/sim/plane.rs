@@ -1,0 +1,475 @@
+//! Plane backends: the vectorised decode/encode/FMA plane kernels behind
+//! the lane engine.
+//!
+//! The paper's streamlining claim (§IV) is that one takum envelope decode
+//! serves every precision through a single datapath. [`crate::sim::lanes`]
+//! established the *plane boundary* for that datapath —
+//! `LaneCodec::decode_plane` / `LaneCodec::encode_slice` see whole
+//! 512-bit register planes — and this module supplies the first native
+//! backend behind it:
+//!
+//! * [`Backend::Scalar`] — the original per-element LUT path: one
+//!   `VecReg::get` bit extraction and one table probe per lane.
+//! * [`Backend::Vector`] — fixed-width chunked plane loops. Decode walks
+//!   the register **word by word** (8×8 bytes or 8×4 halfwords, constant
+//!   trip counts, mask-and-shift only — no per-lane `div`/`mod` address
+//!   arithmetic, no bounds checks after the one-time table-size proof),
+//!   encode runs the boundary search in **lockstep chunks** (every probe
+//!   level is a compare + conditional add across the whole chunk; see
+//!   [`Lut8::encode_slice_lockstep`]), and the FMA/dot plane loops are
+//!   emitted as constant-trip-count kernels the autovectoriser can turn
+//!   into straight SIMD. On x86-64 with AVX2 (runtime-detected, scalar
+//!   fallback elsewhere) the 8-bit decode becomes a real
+//!   `vgatherdpd` table gather and the encode search runs four lanes per
+//!   step on SIMD compares — the software shape of the paper's proposed
+//!   hardware codec (Hunhold 2024, arXiv:2408.10594).
+//!
+//! Every kernel here is **bit-identical** to its scalar counterpart (the
+//! cross-backend property tests in [`crate::sim::lanes`] and the
+//! machine-level suites enforce it, exhaustively for the 16-bit takum
+//! decode); `Backend` selection is therefore a pure performance knob, the
+//! same contract [`crate::sim::CodecMode`] established for the LUT-vs-
+//! arithmetic axis. A future GPU/HLO backend plugs in as a third variant
+//! implementing the same three hooks.
+
+use super::lanes::{FmaKind, FmaOrder};
+use super::register::VecReg;
+use crate::num::lut::Lut8;
+use anyhow::{bail, Result};
+
+/// Which plane implementation the lane engine dispatches to. Selected per
+/// [`crate::sim::Machine`] (alongside [`crate::sim::CodecMode`]); the
+/// default honours the `TAKUM_BACKEND` environment variable so CI can
+/// force the whole test suite through either backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Backend {
+    /// Per-element LUT path (the pre-refactor lane engine).
+    #[default]
+    Scalar,
+    /// Chunked/vectorised plane kernels (this module), with `std::arch`
+    /// x86 specialisations where the CPU supports them.
+    Vector,
+}
+
+impl Backend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Vector => "vector",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Backend> {
+        match s {
+            "scalar" => Ok(Backend::Scalar),
+            "vector" => Ok(Backend::Vector),
+            _ => bail!("unknown backend {s:?} (scalar|vector)"),
+        }
+    }
+
+    /// Process-wide default: `TAKUM_BACKEND=scalar|vector` if set (the CI
+    /// backend-matrix hook), [`Backend::Scalar`] otherwise. Read once; a
+    /// malformed value warns and falls back to scalar rather than failing
+    /// inside `Machine::default`.
+    pub fn from_env() -> Backend {
+        use std::sync::OnceLock;
+        static CACHE: OnceLock<Backend> = OnceLock::new();
+        *CACHE.get_or_init(|| match std::env::var("TAKUM_BACKEND") {
+            Ok(v) => Backend::parse(&v).unwrap_or_else(|e| {
+                eprintln!("warning: TAKUM_BACKEND: {e}; using scalar");
+                Backend::Scalar
+            }),
+            Err(_) => Backend::Scalar,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decode planes
+// ---------------------------------------------------------------------------
+
+/// Whole-register chunked table decode: the vector backend's
+/// `decode_plane`. Only reachable with a table attached, i.e. at lane
+/// widths 8 and 16 (the only tabulated widths).
+pub(crate) fn decode_plane_lut(
+    lut: &Lut8,
+    reg: &VecReg,
+    width: u32,
+    lanes: usize,
+    out: &mut [f64],
+) {
+    debug_assert!(lanes <= out.len() && lanes <= VecReg::lanes(width));
+    match width {
+        8 => {
+            let mut full = [0.0f64; 64];
+            decode64_w8(lut, &reg.words, &mut full);
+            out[..lanes].copy_from_slice(&full[..lanes]);
+        }
+        16 => {
+            let mut full = [0.0f64; 32];
+            decode32_w16(lut, &reg.words, &mut full);
+            out[..lanes].copy_from_slice(&full[..lanes]);
+        }
+        _ => unreachable!("LUTs only exist at widths 8/16, got {width}"),
+    }
+}
+
+/// 64 byte lanes decoded word-at-a-time. The full register is always
+/// decoded (constant trip count); callers take the prefix they need.
+fn decode64_w8(lut: &Lut8, words: &[u64; 8], out: &mut [f64; 64]) {
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        // SAFETY: dispatch is gated on runtime AVX2 detection.
+        unsafe { x86::decode64_w8_avx2(lut.decode_table(), words, out) };
+        return;
+    }
+    decode64_w8_portable(lut, words, out);
+}
+
+fn decode64_w8_portable(lut: &Lut8, words: &[u64; 8], out: &mut [f64; 64]) {
+    // The array proof (table.len() == 256) hoists every bounds check out
+    // of the loop: a masked byte indexes [f64; 256] infallibly.
+    let table: &[f64; 256] = lut.decode_table().try_into().expect("8-bit table");
+    for (w, &word) in words.iter().enumerate() {
+        for k in 0..8 {
+            out[w * 8 + k] = table[((word >> (8 * k)) & 0xFF) as usize];
+        }
+    }
+}
+
+/// 32 halfword lanes decoded word-at-a-time (16-bit tables).
+fn decode32_w16(lut: &Lut8, words: &[u64; 8], out: &mut [f64; 32]) {
+    let table: &[f64; 65536] = lut.decode_table().try_into().expect("16-bit table");
+    for (w, &word) in words.iter().enumerate() {
+        for k in 0..4 {
+            out[w * 4 + k] = table[((word >> (16 * k)) & 0xFFFF) as usize];
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Encode planes
+// ---------------------------------------------------------------------------
+
+/// Chunked boundary-search encode: the vector backend's takum-plane
+/// `encode_slice`. Bit-identical to per-element [`Lut8::encode_bits`],
+/// including the NaN → NaR fix-up.
+pub(crate) fn encode_slice_lut(lut: &Lut8, xs: &[f64], out: &mut [u64]) {
+    assert_eq!(xs.len(), out.len());
+    #[cfg(target_arch = "x86_64")]
+    if avx2_available() {
+        let head = xs.len() & !3;
+        for i in (0..head).step_by(4) {
+            // SAFETY: dispatch is gated on runtime AVX2 detection; the
+            // slice windows are exactly four elements.
+            unsafe {
+                x86::encode_chunk4_avx2(
+                    lut,
+                    xs[i..i + 4].try_into().unwrap(),
+                    (&mut out[i..i + 4]).try_into().unwrap(),
+                )
+            };
+        }
+        for i in head..xs.len() {
+            out[i] = lut.encode_bits(xs[i]);
+        }
+        return;
+    }
+    lut.encode_slice_lockstep(xs, out);
+}
+
+// ---------------------------------------------------------------------------
+// Arithmetic planes
+// ---------------------------------------------------------------------------
+
+/// Fused-multiply-add over a whole plane: the (kind, order) dispatch is
+/// hoisted out of the lane loop, which then runs a constant 64 iterations
+/// of pure `mul_add` — the autovectorisable inner kernel of every GEMM
+/// tile and softmax chain. Bit-identical to the scalar per-lane match.
+pub(crate) fn fma_plane(
+    kind: FmaKind,
+    order: FmaOrder,
+    xa: &[f64; 64],
+    xb: &[f64; 64],
+    xz: &[f64; 64],
+    out: &mut [f64; 64],
+) {
+    // Intel operand orders with (a, b, dst) = (xa, xb, xz):
+    // 132: dst = dst·b + a; 213: dst = a·dst + b; 231: dst = a·b + dst.
+    let (p1, p2, add): (&[f64; 64], &[f64; 64], &[f64; 64]) = match order {
+        FmaOrder::O132 => (xz, xb, xa),
+        FmaOrder::O213 => (xa, xz, xb),
+        FmaOrder::O231 => (xa, xb, xz),
+    };
+    match kind {
+        FmaKind::Madd => {
+            for i in 0..64 {
+                out[i] = p1[i].mul_add(p2[i], add[i]);
+            }
+        }
+        FmaKind::Msub => {
+            for i in 0..64 {
+                out[i] = p1[i].mul_add(p2[i], -add[i]);
+            }
+        }
+        FmaKind::Nmadd => {
+            for i in 0..64 {
+                out[i] = (-p1[i]).mul_add(p2[i], add[i]);
+            }
+        }
+        FmaKind::Nmsub => {
+            for i in 0..64 {
+                out[i] = (-p1[i]).mul_add(p2[i], -add[i]);
+            }
+        }
+    }
+}
+
+/// Widening-dot reduce plane: `out[i] = xz[i] + xa[2i]·xb[2i] +
+/// xa[2i+1]·xb[2i+1]` for the full 32 destination lanes (constant trip
+/// count; callers consume the prefix they need). The expression tree
+/// matches the scalar executor exactly — separate mul then add, left to
+/// right — so results are bit-identical.
+pub(crate) fn dot_plane(xa: &[f64; 64], xb: &[f64; 64], xz: &[f64; 64], out: &mut [f64; 64]) {
+    for i in 0..32 {
+        out[i] = xz[i] + xa[2 * i] * xb[2 * i] + xa[2 * i + 1] * xb[2 * i + 1];
+    }
+}
+
+// ---------------------------------------------------------------------------
+// x86-64 specialisations
+// ---------------------------------------------------------------------------
+
+/// Runtime AVX2 capability, detected once.
+#[cfg(target_arch = "x86_64")]
+pub(crate) fn avx2_available() -> bool {
+    use std::sync::OnceLock;
+    static AVX2: OnceLock<bool> = OnceLock::new();
+    *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use crate::num::lut::{f64_key, Lut8};
+    use std::arch::x86_64::*;
+
+    /// 8-bit table decode as four-lane `vgatherdpd` gathers: two gathers
+    /// per 64-bit register word.
+    ///
+    /// # Safety
+    /// Requires AVX2 (the caller dispatches on runtime detection).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn decode64_w8_avx2(table: &[f64], words: &[u64; 8], out: &mut [f64; 64]) {
+        debug_assert_eq!(table.len(), 256);
+        let base = table.as_ptr();
+        for (w, &word) in words.iter().enumerate() {
+            let lo = _mm_set_epi32(
+                ((word >> 24) & 0xFF) as i32,
+                ((word >> 16) & 0xFF) as i32,
+                ((word >> 8) & 0xFF) as i32,
+                (word & 0xFF) as i32,
+            );
+            let hi = _mm_set_epi32(
+                ((word >> 56) & 0xFF) as i32,
+                ((word >> 48) & 0xFF) as i32,
+                ((word >> 40) & 0xFF) as i32,
+                ((word >> 32) & 0xFF) as i32,
+            );
+            let v0 = _mm256_i32gather_pd::<8>(base, lo);
+            let v1 = _mm256_i32gather_pd::<8>(base, hi);
+            _mm256_storeu_pd(out.as_mut_ptr().add(w * 8), v0);
+            _mm256_storeu_pd(out.as_mut_ptr().add(w * 8 + 4), v1);
+        }
+    }
+
+    /// Four-lane lockstep boundary search on SIMD compares: the same
+    /// level-by-level walk as `Lut8::partition_branchless`, with the
+    /// boundary probes gathered per level and the `≤` decided by a signed
+    /// `vpcmpgtq` after the usual unsigned→signed bias (XOR the sign
+    /// bit). NaN lanes are fixed up to the format's NaN/NaR pattern, same
+    /// as the scalar path.
+    ///
+    /// # Safety
+    /// Requires AVX2 (the caller dispatches on runtime detection).
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn encode_chunk4_avx2(lut: &Lut8, xs: &[f64; 4], out: &mut [u64; 4]) {
+        let b = lut.boundary_keys();
+        let mut keys = [0u64; 4];
+        for i in 0..4 {
+            keys[i] = f64_key(xs[i]);
+        }
+        let bias = _mm256_set1_epi64x(i64::MIN);
+        let kv = _mm256_xor_si256(_mm256_loadu_si256(keys.as_ptr() as *const __m256i), bias);
+        let ones = _mm256_set1_epi64x(-1);
+        let mut base = _mm256_setzero_si256();
+        let mut len = b.len();
+        // Invariant (as in the scalar search): every lane's answer lies in
+        // [base, base + len], and base + len ≤ b.len(), so each gather
+        // index base + half − 1 stays in bounds.
+        while len > 1 {
+            let half = len / 2;
+            let idx = _mm256_add_epi64(base, _mm256_set1_epi64x((half - 1) as i64));
+            let bv = _mm256_i64gather_epi64::<8>(b.as_ptr() as *const i64, idx);
+            let gt = _mm256_cmpgt_epi64(_mm256_xor_si256(bv, bias), kv); // b > k
+            let le = _mm256_andnot_si256(gt, ones); // b ≤ k
+            base = _mm256_add_epi64(base, _mm256_and_si256(le, _mm256_set1_epi64x(half as i64)));
+            len -= half;
+        }
+        if len == 1 {
+            let bv = _mm256_i64gather_epi64::<8>(b.as_ptr() as *const i64, base);
+            let gt = _mm256_cmpgt_epi64(_mm256_xor_si256(bv, bias), kv);
+            let le = _mm256_andnot_si256(gt, ones);
+            base = _mm256_add_epi64(base, _mm256_and_si256(le, _mm256_set1_epi64x(1)));
+        }
+        let mut idx = [0u64; 4];
+        _mm256_storeu_si256(idx.as_mut_ptr() as *mut __m256i, base);
+        let bits_of = lut.interval_bits();
+        for i in 0..4 {
+            let bits = bits_of[idx[i] as usize] as u64;
+            out[i] = if xs[i].is_nan() { lut.nan_pattern() } else { bits };
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::lut;
+    use crate::util::rng::Rng;
+
+    fn tables() -> Vec<&'static Lut8> {
+        ["takum8", "e4m3", "e5m2"]
+            .iter()
+            .filter_map(|n| lut::cached(n))
+            .chain(["takum16", "float16", "bfloat16"].iter().filter_map(|n| lut::cached16(n)))
+            .collect()
+    }
+
+    /// The portable 8-bit word-walk is the only decode path on non-AVX2
+    /// hosts but is shadowed by the gather dispatch on CI runners — test
+    /// it directly against per-lane table probes so a regression cannot
+    /// hide behind the AVX2 path.
+    #[test]
+    fn portable_byte_decode_matches_per_lane() {
+        let mut r = Rng::new(0x8B17);
+        for name in ["takum8", "e4m3", "e5m2"] {
+            let lut = lut::cached(name).unwrap();
+            for _ in 0..64 {
+                let mut words = [0u64; 8];
+                for w in words.iter_mut() {
+                    *w = r.next_u64();
+                }
+                let mut got = [0.0f64; 64];
+                decode64_w8_portable(lut, &words, &mut got);
+                let reg = VecReg { words };
+                for i in 0..64 {
+                    let want = lut.decode_bits(reg.get(8, i));
+                    assert!(
+                        got[i] == want || (got[i].is_nan() && want.is_nan()),
+                        "{name} lane {i}: {} vs {}",
+                        got[i],
+                        want
+                    );
+                }
+            }
+        }
+    }
+
+    /// The chunked word-walk decode must equal per-lane `VecReg::get` +
+    /// table probe for every register content, at both tabulated widths.
+    #[test]
+    fn chunked_decode_matches_per_lane() {
+        let mut r = Rng::new(0xD0DE);
+        for lut in tables() {
+            let width = if lut.decode_table().len() == 256 { 8 } else { 16 };
+            let lanes = VecReg::lanes(width);
+            for _ in 0..64 {
+                let mut reg = VecReg::ZERO;
+                for w in 0..8 {
+                    reg.words[w] = r.next_u64();
+                }
+                let mut got = [0.0f64; 64];
+                decode_plane_lut(lut, &reg, width, lanes, &mut got);
+                for i in 0..lanes {
+                    let want = lut.decode_bits(reg.get(width, i));
+                    assert!(
+                        got[i] == want || (got[i].is_nan() && want.is_nan()),
+                        "{} w={width} lane {i}: {} vs {}",
+                        lut.name(),
+                        got[i],
+                        want
+                    );
+                }
+            }
+        }
+    }
+
+    /// The chunked encode (AVX2 or lockstep, whatever this host runs)
+    /// must equal the scalar boundary search, NaN included.
+    #[test]
+    fn chunked_encode_matches_scalar() {
+        let mut r = Rng::new(0xE2C0);
+        for lut in tables() {
+            let mut xs: Vec<f64> = (0..1025).map(|_| r.wide_f64(-60, 60)).collect();
+            xs[17] = f64::NAN;
+            xs[101] = 0.0;
+            xs[1024] = f64::NAN; // in the remainder tail
+            let mut out = vec![0u64; xs.len()];
+            encode_slice_lut(lut, &xs, &mut out);
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(out[i], lut.encode_bits(x), "{} i={i} x={x}", lut.name());
+            }
+        }
+    }
+
+    #[test]
+    fn fma_and_dot_planes_match_scalar_expressions() {
+        let mut r = Rng::new(0xF3A);
+        let mut xa = [0.0f64; 64];
+        let mut xb = [0.0f64; 64];
+        let mut xz = [0.0f64; 64];
+        for i in 0..64 {
+            xa[i] = r.wide_f64(-10, 10);
+            xb[i] = r.wide_f64(-10, 10);
+            xz[i] = r.wide_f64(-10, 10);
+        }
+        for order in [FmaOrder::O132, FmaOrder::O213, FmaOrder::O231] {
+            for kind in [FmaKind::Madd, FmaKind::Msub, FmaKind::Nmadd, FmaKind::Nmsub] {
+                let mut got = [0.0f64; 64];
+                fma_plane(kind, order, &xa, &xb, &xz, &mut got);
+                for i in 0..64 {
+                    let (x, y, z) = (xa[i], xb[i], xz[i]);
+                    let (p1, p2, add) = match order {
+                        FmaOrder::O132 => (z, y, x),
+                        FmaOrder::O213 => (x, z, y),
+                        FmaOrder::O231 => (x, y, z),
+                    };
+                    let want = match kind {
+                        FmaKind::Madd => p1.mul_add(p2, add),
+                        FmaKind::Msub => p1.mul_add(p2, -add),
+                        FmaKind::Nmadd => (-p1).mul_add(p2, add),
+                        FmaKind::Nmsub => (-p1).mul_add(p2, -add),
+                    };
+                    assert_eq!(got[i].to_bits(), want.to_bits(), "{kind:?}/{order:?} lane {i}");
+                }
+            }
+        }
+        let mut got = [0.0f64; 64];
+        dot_plane(&xa, &xb, &xz, &mut got);
+        for i in 0..32 {
+            let mut want = xz[i];
+            want += xa[2 * i] * xb[2 * i];
+            want += xa[2 * i + 1] * xb[2 * i + 1];
+            assert_eq!(got[i].to_bits(), want.to_bits(), "dot lane {i}");
+        }
+    }
+
+    #[test]
+    fn backend_parse_and_names() {
+        assert_eq!(Backend::parse("scalar").unwrap(), Backend::Scalar);
+        assert_eq!(Backend::parse("vector").unwrap(), Backend::Vector);
+        assert!(Backend::parse("gpu").is_err());
+        assert_eq!(Backend::Vector.name(), "vector");
+        assert_eq!(Backend::default(), Backend::Scalar);
+    }
+}

@@ -3,8 +3,8 @@
 //! determinism of the parallel kernel sweep.
 
 use takum_avx10::coordinator::{kernel_sweep, KernelSweepConfig};
-use takum_avx10::kernels::{run_suite, Isa, Kernel, KernelSpec, Pipeline};
-use takum_avx10::sim::CodecMode;
+use takum_avx10::kernels::{run_suite, run_suite_with, Isa, Kernel, KernelSpec, Pipeline};
+use takum_avx10::sim::{Backend, CodecMode};
 
 /// Both ISAs produce finite, comparable relative errors on shared inputs
 /// for every kernel. The bounds are deliberately loose sanity gates
@@ -129,7 +129,7 @@ fn kernel_sweep_deterministic_and_matches_suite() {
         sizes: vec![64, 128],
         seed: 0xD15C,
         workers,
-        mode: CodecMode::default(),
+        ..Default::default()
     };
     let (base, metrics) = kernel_sweep(&cfg(1)).unwrap();
     assert_eq!(base.len(), 6 * 4 * 2);
@@ -151,6 +151,77 @@ fn kernel_sweep_deterministic_and_matches_suite() {
             assert_eq!(a.counts, b.counts);
         }
         assert_eq!(m.per_worker.iter().sum::<usize>(), base.len());
+    }
+}
+
+/// The plane-backend acceptance pin: the whole suite — every kernel ×
+/// every format, both ISAs — must be **byte-identical** across
+/// `Backend::Scalar` and `Backend::Vector` at n ∈ {64, 128}: same
+/// `rel_error` bit patterns, same executed/dp/convert counts, same
+/// per-mnemonic histograms. In combination with `CodecMode::Arith`
+/// (pinned against the LUT engine by the earlier tests), this closes the
+/// triangle Vector ≡ Scalar ≡ Arith.
+#[test]
+fn suite_byte_identical_across_backends() {
+    for n in [64usize, 128] {
+        let scalar = run_suite_with(n, 0xBAC0, CodecMode::default(), Backend::Scalar).unwrap();
+        let vector = run_suite_with(n, 0xBAC0, CodecMode::default(), Backend::Vector).unwrap();
+        assert_eq!(scalar.len(), vector.len());
+        for (s, v) in scalar.iter().zip(&vector) {
+            assert_eq!((&s.kernel, &s.format, s.n), (&v.kernel, &v.format, v.n));
+            assert_eq!(
+                s.rel_error.to_bits(),
+                v.rel_error.to_bits(),
+                "{}/{} n={n}: rel_error {} vs {}",
+                s.kernel,
+                s.format,
+                s.rel_error,
+                v.rel_error
+            );
+            assert_eq!(s.executed, v.executed, "{}/{} n={n}", s.kernel, s.format);
+            assert_eq!(s.dp_instructions, v.dp_instructions, "{}/{} n={n}", s.kernel, s.format);
+            assert_eq!(
+                s.convert_instructions, v.convert_instructions,
+                "{}/{} n={n}",
+                s.kernel, s.format
+            );
+            assert_eq!(s.counts, v.counts, "{}/{} n={n}", s.kernel, s.format);
+        }
+    }
+    // GEMM through the same gate (both codec modes on the vector backend).
+    use takum_avx10::harness::gemm::gemm_with_config;
+    for f in ["t8", "t16", "bf16", "e4m3"] {
+        for n in [64usize, 128] {
+            let s = gemm_with_config(n, f, 7, 1.0, CodecMode::default(), Backend::Scalar).unwrap();
+            let v = gemm_with_config(n, f, 7, 1.0, CodecMode::default(), Backend::Vector).unwrap();
+            let a = gemm_with_config(n, f, 7, 1.0, CodecMode::Arith, Backend::Vector).unwrap();
+            assert_eq!(s.rel_error.to_bits(), v.rel_error.to_bits(), "{f} n={n}");
+            assert_eq!(s.rel_error.to_bits(), a.rel_error.to_bits(), "{f} n={n} arith");
+            assert_eq!(s.executed, v.executed, "{f} n={n}");
+            assert_eq!(s.executed, a.executed, "{f} n={n} arith");
+        }
+    }
+}
+
+/// Softmax with the vector backend forced, against the arithmetic
+/// reference — the deep-chain stress (converts, FMA chains, both
+/// reduction trees, `VRNDSCALE`/`VSCALEF`) for the chunked plane kernels
+/// and the decoded-shadow cache.
+#[test]
+fn softmax_vector_backend_vs_arith_bit_identity() {
+    for fmt in ["t8", "t16", "bf16", "e4m3"] {
+        let spec = KernelSpec { kernel: Kernel::Softmax, format: fmt, n: 64, seed: 7 };
+        let fast = spec.run_with(CodecMode::Lut, Backend::Vector).unwrap();
+        let slow = spec.run_with(CodecMode::Arith, Backend::Scalar).unwrap();
+        assert_eq!(
+            fast.rel_error.to_bits(),
+            slow.rel_error.to_bits(),
+            "{fmt}: vector-lut={} scalar-arith={}",
+            fast.rel_error,
+            slow.rel_error
+        );
+        assert_eq!(fast.executed, slow.executed, "{fmt}");
+        assert_eq!(fast.counts, slow.counts, "{fmt}");
     }
 }
 

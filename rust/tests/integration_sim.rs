@@ -137,6 +137,12 @@ fn lane_engine_program_equivalence_via_public_api() {
 fn scaled_gemm_report_renders() {
     let r = gemm_scaled(32, "t8", 9, 0.5, 1e4).unwrap();
     assert!(r.rel_error.is_finite());
-    let txt = takum_avx10::harness::gemm::run_sim_gemm(16, "t8", 9).unwrap();
+    let txt = takum_avx10::harness::gemm::run_sim_gemm(
+        16,
+        "t8",
+        9,
+        takum_avx10::sim::Backend::from_env(),
+    )
+    .unwrap();
     assert!(txt.contains("t8") && txt.contains("e4m3") && txt.contains("bf16"));
 }
