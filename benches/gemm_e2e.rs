@@ -54,7 +54,9 @@ fn main() {
 
     match PjrtService::start(&default_artifact_dir()) {
         Ok(service) => {
-            b.group("PJRT quant_gemm_t8 artifact (128×128, AOT Pallas)");
+            // AOT Pallas via PJRT when the `pjrt` feature is on; the
+            // in-tree graph-interpreter fallback otherwise.
+            b.group("runtime quant_gemm_t8 artifact (128×128)");
             let h = service.handle();
             let dim = 128usize;
             let mut rng = Rng::new(2);
@@ -70,7 +72,7 @@ fn main() {
                 )
                 .unwrap()
             });
-            b.group("PJRT takum round-trip artifacts (65536 values)");
+            b.group("runtime takum round-trip artifacts (65536 values)");
             let vals: Vec<f64> = (0..1 << 16).map(|_| rng.wide_f64(-40, 40)).collect();
             for nbits in [8, 16, 32] {
                 let name = format!("takum{nbits}_roundtrip");

@@ -53,29 +53,31 @@ fn main() {
     // PlaneBackend comparison on the FMA-plane-heavy kernels: poly is a
     // pure packed-FMA latency chain, axpy one FMA + store per tile,
     // softmax mixes FMA chains with both reductions. Same seeds and
-    // specs, bit-identical results (pinned by the cross-backend suite);
-    // only the plane kernels differ.
-    b.group(&format!("kernel plane backends: Vector vs Scalar (n={n})"));
-    let mut bratios: Vec<(String, f64)> = Vec::new();
+    // specs, bit-identical results (pinned by the cross-backend suite and
+    // the differential fuzz tests); only the plane engines differ. All
+    // three backends are timed so BENCH_kernels.json carries the full
+    // per-backend trajectory.
+    b.group(&format!("kernel plane backends: per-backend timings (n={n})"));
+    let mut backend_ns: Vec<(String, [f64; 3])> = Vec::new();
     for kernel in [Kernel::Poly, Kernel::Axpy, Kernel::Softmax] {
         for format in ["t8", "t16", "bf16", "e4m3"] {
             let spec = KernelSpec { kernel, format, n, seed: 1 };
-            let vec_ns = b
-                .bench_with_elements(&format!("{} {format} [vector]", kernel.name()), n as u64, || {
-                    spec.run_with(CodecMode::Lut, Backend::Vector).unwrap()
-                })
-                .median_ns;
-            let sc_ns = b
-                .bench_with_elements(&format!("{} {format} [scalar]", kernel.name()), n as u64, || {
-                    spec.run_with(CodecMode::Lut, Backend::Scalar).unwrap()
-                })
-                .median_ns;
-            bratios.push((format!("{} {format}", kernel.name()), sc_ns / vec_ns));
+            let mut times = [0.0f64; 3];
+            for (slot, backend) in Backend::ALL.iter().enumerate() {
+                times[slot] = b
+                    .bench_with_elements(
+                        &format!("{} {format} [{}]", kernel.name(), backend.name()),
+                        n as u64,
+                        || spec.run_with(CodecMode::Lut, *backend).unwrap(),
+                    )
+                    .median_ns;
+            }
+            backend_ns.push((format!("{} {format}", kernel.name()), times));
         }
     }
-    println!("\n-- kernel speedup (scalar backend / vector backend) --");
-    for (k, ratio) in &bratios {
-        println!("{k:<16} {ratio:>6.2}x");
+    println!("\n-- kernel speedup vs scalar backend (scalar / vector, scalar / graph) --");
+    for (k, [sc, vec, gr]) in &backend_ns {
+        println!("{k:<16} vector {:>6.2}x  graph {:>6.2}x", sc / vec, sc / gr);
     }
 
     b.group("parallel kernel sweep (full suite, sizes 64+128)");
@@ -86,4 +88,9 @@ fn main() {
             kernel_sweep(&cfg).unwrap()
         });
     }
+
+    // Machine-readable perf trajectory: every measurement above —
+    // including the per-backend kernel timings — lands in
+    // BENCH_kernels.json so CI archives can diff runs over time.
+    b.write_json("kernels", "BENCH_kernels.json").expect("writing BENCH_kernels.json");
 }

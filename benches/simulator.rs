@@ -72,11 +72,13 @@ fn main() {
 
     // The PlaneBackend comparison: chunked/vectorised plane kernels
     // (AVX2 gather-decode + lockstep boundary search where the CPU has
-    // them) vs the per-element scalar loops, on the packed 8/16-bit FMA
-    // planes every GEMM tile and kernel chain is made of. Bit-identity is
-    // enforced by the cross-backend tests; this reports the ratio.
-    b.group("plane backends: Vector vs Scalar (packed 8/16-bit FMA planes)");
-    let mut backend_ratios: Vec<(String, f64)> = Vec::new();
+    // them) and the graph backend's node evaluators vs the per-element
+    // scalar loops, on the packed 8/16-bit FMA planes every GEMM tile and
+    // kernel chain is made of. Bit-identity is enforced by the
+    // cross-backend tests and the differential fuzz suite; this reports
+    // the ratios and feeds the per-backend JSON trajectory.
+    b.group("plane backends: Scalar vs Vector vs Graph (packed 8/16-bit FMA planes)");
+    let mut backend_ratios: Vec<(String, [f64; 3])> = Vec::new();
     for (mn, ty) in [
         ("VFMADD231PT8", LaneType::Takum(8)),
         ("VFMADD231PT16", LaneType::Takum(16)),
@@ -89,9 +91,9 @@ fn main() {
         let lanes = VecReg::lanes(ty.width());
         let vals: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-10, 10)).collect();
         let ins = Instruction::new(mn, Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]);
-        let mut times = [0.0f64; 2];
-        for (slot, backend) in [(0usize, Backend::Vector), (1usize, Backend::Scalar)] {
-            let mut m = Machine::with_config(CodecMode::Lut, backend);
+        let mut times = [0.0f64; 3];
+        for (slot, backend) in Backend::ALL.iter().enumerate() {
+            let mut m = Machine::with_config(CodecMode::Lut, *backend);
             m.load_f64(0, ty, &vals);
             m.load_f64(1, ty, &vals);
             if mn.starts_with("VDP") {
@@ -107,11 +109,11 @@ fn main() {
             });
             times[slot] = meas.median_ns;
         }
-        backend_ratios.push((mn.to_string(), times[1] / times[0]));
+        backend_ratios.push((mn.to_string(), times));
     }
-    println!("\n-- speedup (scalar backend / vector backend) --");
-    for (mn, ratio) in &backend_ratios {
-        println!("{mn:<20} {ratio:>6.2}x");
+    println!("\n-- speedup vs scalar backend (scalar / vector, scalar / graph) --");
+    for (mn, [sc, vec, gr]) in &backend_ratios {
+        println!("{mn:<20} vector {:>6.2}x  graph {:>6.2}x", sc / vec, sc / gr);
     }
 
     b.group("vector instruction throughput (lanes/s as elem/s)");
@@ -183,4 +185,7 @@ fn main() {
     let masked = plain.clone().with_mask(1, true);
     b.bench_with_elements("VADDPT16 unmasked", lanes as u64, || m.step(&plain).unwrap());
     b.bench_with_elements("VADDPT16 {k1}{z}", lanes as u64, || m.step(&masked).unwrap());
+
+    // Machine-readable perf trajectory (per-backend timings included).
+    b.write_json("simulator", "BENCH_simulator.json").expect("writing BENCH_simulator.json");
 }

@@ -226,7 +226,8 @@ mod tests {
     }
 
     /// The backend axis must not change a single bit of the sweep output:
-    /// same errors, same instruction counts, scalar vs vector.
+    /// same errors, same instruction counts, across every backend
+    /// (scalar, vector, graph).
     #[test]
     fn sweep_backend_invariant() {
         let cfg = |backend| KernelSweepConfig {
@@ -239,12 +240,20 @@ mod tests {
             backend,
         };
         let (s, _) = kernel_sweep(&cfg(Backend::Scalar)).unwrap();
-        let (v, _) = kernel_sweep(&cfg(Backend::Vector)).unwrap();
-        assert_eq!(s.len(), v.len());
-        for (a, b) in s.iter().zip(&v) {
-            assert_eq!(a.rel_error.to_bits(), b.rel_error.to_bits(), "{}/{}", a.kernel, a.format);
-            assert_eq!(a.executed, b.executed, "{}/{}", a.kernel, a.format);
-            assert_eq!(a.counts, b.counts, "{}/{}", a.kernel, a.format);
+        for backend in [Backend::Vector, Backend::Graph] {
+            let (v, _) = kernel_sweep(&cfg(backend)).unwrap();
+            assert_eq!(s.len(), v.len());
+            for (a, b) in s.iter().zip(&v) {
+                assert_eq!(
+                    a.rel_error.to_bits(),
+                    b.rel_error.to_bits(),
+                    "{}/{} {backend:?}",
+                    a.kernel,
+                    a.format
+                );
+                assert_eq!(a.executed, b.executed, "{}/{} {backend:?}", a.kernel, a.format);
+                assert_eq!(a.counts, b.counts, "{}/{} {backend:?}", a.kernel, a.format);
+            }
         }
     }
 }

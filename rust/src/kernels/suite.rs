@@ -88,8 +88,9 @@ impl KernelSpec {
     }
 
     /// Execute with both simulator axes pinned: codec mode × plane
-    /// backend — the hook of the cross-backend equivalence tests and the
-    /// bench comparison columns.
+    /// backend (scalar / vector / graph) — the hook of the cross-backend
+    /// equivalence tests, the differential fuzz suite's metrics gate and
+    /// the per-backend bench columns.
     pub fn run_with(&self, mode: CodecMode, backend: Backend) -> Result<KernelResult> {
         let pipe = Pipeline::for_format(self.format)?;
         let run = self.kernel.run_raw(&pipe, self.n, self.seed, mode, backend)?;

@@ -100,12 +100,13 @@ commands:
   tables  [--category b|m|i|f|c]  AVX10.2 → takum instruction tables (I–V)
           [--summary] [--tsv] [--rvv]
   simulate FILE [--dump vN:TYPE]  run an assembly program on the simulator
-  gemm    [--n 64] [--format t8|t16|bf16|f16] [--backend scalar|vector]
+  gemm    [--n 64] [--format t8|t16|bf16|f16] [--backend scalar|vector|graph]
           quantised GEMM on the simulator
   kernels [--sizes 64,128] [--kernels dot,softmax,...] [--formats t8,e4m3,...]
-          [--seed S] [--workers W] [--backend scalar|vector]
+          [--seed S] [--workers W] [--backend scalar|vector|graph]
           workload suite on both ISAs (parallel sweep)
-  artifacts                       list AOT artifacts loadable by the runtime
+  artifacts                       list artifacts loadable by the runtime
+          (built-in graph-interpreter set without the pjrt feature)
 
 sizes must be positive multiples of 64 (whole compute tiles); workers ≥ 1.
 The default backend honours TAKUM_BACKEND (scalar if unset).
@@ -237,8 +238,8 @@ fn cmd_gemm(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `--backend scalar|vector`, defaulting to the `TAKUM_BACKEND`-aware
-/// process default.
+/// `--backend scalar|vector|graph`, defaulting to the
+/// `TAKUM_BACKEND`-aware process default.
 fn parse_backend(args: &Args) -> Result<Backend> {
     match args.get("backend") {
         Some(b) => Backend::parse(b),
@@ -357,7 +358,13 @@ mod tests {
         assert_eq!(cfg.kernels.len(), 2);
         assert_eq!(cfg.formats, vec!["t8", "e4m3"]);
         assert_eq!(cfg.backend, Backend::Vector);
+        let g = parse_kernel_cfg(&args(&["--backend", "graph"])).unwrap();
+        assert_eq!(g.backend, Backend::Graph);
         let e = parse_kernel_cfg(&args(&["--backend", "gpu"])).unwrap_err().to_string();
         assert!(e.contains("unknown backend"), "{e:?}");
+        // The rejection enumerates every valid backend name.
+        for b in Backend::ALL {
+            assert!(e.contains(b.name()), "{e:?} missing {}", b.name());
+        }
     }
 }

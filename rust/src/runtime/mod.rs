@@ -5,8 +5,24 @@
 //! The `xla` crate's client/executable types are not `Send`, so
 //! [`PjrtService`] owns them on a dedicated thread and serves requests
 //! over channels; any number of coordinator workers can share one service.
+//!
+//! **Graph-interpreter fallback (no `pjrt` feature):** the offline image
+//! has no `xla` crate, so the PJRT client is feature-gated — but the
+//! runtime no longer errors without it. The known artifact set
+//! (`takum{8,16,32}_roundtrip`, `quant_gemm_t8`) is served by the in-tree
+//! HLO-lite graph interpreter ([`crate::sim::graph`]) instead: each
+//! artifact is a small dataflow graph (`Param → Convert` for the
+//! round-trips; a fused `Fma → Convert` accumulator tile for the
+//! quantised GEMM) evaluated plane by plane through the same codecs the
+//! simulator uses, so results are bit-identical to the native codec path
+//! (the `integration_runtime` suite, which used to skip without
+//! artifacts, now pins exactly that). [`Runtime::load_dir`] registers the
+//! builtin graphs regardless of whether the artifact directory exists;
+//! compiling real HLO text still requires the `pjrt` feature.
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::Context;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::mpsc;
@@ -22,19 +38,20 @@ pub fn default_artifact_dir() -> PathBuf {
 /// [`PjrtService`] for multi-threaded use.
 ///
 /// Requires the `pjrt` cargo feature (and the external `xla` crate);
-/// without it this compiles as a stub whose constructor returns an error,
-/// so every PJRT-dependent test/bench skips gracefully.
+/// without it the graph-interpreter fallback below serves the builtin
+/// artifact set instead (see the module docs).
 #[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
-/// Stub runtime for builds without the `pjrt` feature (the offline image
-/// has no `xla` crate). Mirrors the real API; construction fails.
+/// Fallback runtime for builds without the `pjrt` feature (the offline
+/// image has no `xla` crate): serves the known artifact set through the
+/// in-tree graph interpreter. Mirrors the real API.
 #[cfg(not(feature = "pjrt"))]
 pub struct Runtime {
-    _executables: HashMap<String, ()>,
+    artifacts: HashMap<String, fallback::GraphArtifact>,
 }
 
 /// Shape+data of one f64 input.
@@ -56,35 +73,182 @@ impl TensorF64 {
     }
 }
 
+/// The graph-interpreter artifact implementations behind the non-`pjrt`
+/// [`Runtime`] (see the module docs). Each artifact is a [`Graph`] built
+/// once at load time and evaluated plane by plane at request time.
+#[cfg(not(feature = "pjrt"))]
+mod fallback {
+    use super::*;
+    use crate::sim::graph::{Graph, Plane};
+    use crate::sim::lanes::{FmaKind, FmaOrder};
+    use crate::sim::{CodecMode, LaneType};
+
+    /// One builtin artifact: the graph(s) implementing it.
+    pub(super) enum GraphArtifact {
+        /// `takum{n}_roundtrip`: `Param(0) → Convert(takum n)`.
+        Roundtrip(Graph),
+        /// `quant_gemm_t8`: takum8-quantised inputs, takum16-quantised
+        /// accumulation. `quant` is the input round-trip graph, `tile`
+        /// the fused per-step accumulator graph
+        /// (`Convert₁₆(Fma₂₃₁(a, b, acc))`).
+        QuantGemm { quant: Graph, tile: Graph },
+    }
+
+    /// `Param(0) → Convert(ty)` (with the passes run, for form's sake —
+    /// there is nothing to fold in a two-node graph).
+    fn roundtrip_graph(ty: LaneType) -> Graph {
+        let mut g = Graph::new();
+        let p = g.param(0);
+        let q = g.convert(p, ty);
+        g.ret(q);
+        g.optimize();
+        g
+    }
+
+    /// The GEMM accumulator step: params are (broadcast a·, b tile,
+    /// accumulator tile), already storage-quantised; one fused
+    /// multiply-add then a takum16 re-quantisation — the accumulator
+    /// never holds a value takum16 cannot represent, which is exactly
+    /// the Pallas kernel's contract the integration suite checks.
+    fn gemm_tile_graph() -> Graph {
+        let mut g = Graph::new();
+        let a = g.param(0);
+        let b = g.param(1);
+        let z = g.param(2);
+        let f = g.fma(FmaKind::Madd, FmaOrder::O231, a, b, z); // a·b + z
+        let q = g.convert(f, LaneType::Takum(16));
+        g.ret(q);
+        g.optimize();
+        g
+    }
+
+    pub(super) fn builtin_artifacts() -> HashMap<String, GraphArtifact> {
+        let mut m = HashMap::new();
+        for n in [8u32, 16, 32] {
+            m.insert(
+                format!("takum{n}_roundtrip"),
+                GraphArtifact::Roundtrip(roundtrip_graph(LaneType::Takum(n))),
+            );
+        }
+        m.insert(
+            "quant_gemm_t8".to_string(),
+            GraphArtifact::QuantGemm {
+                quant: roundtrip_graph(LaneType::Takum(8)),
+                tile: gemm_tile_graph(),
+            },
+        );
+        m
+    }
+
+    /// Evaluate an elementwise one-param graph over a value vector in
+    /// 64-lane plane chunks (scratch reused; no per-chunk allocation).
+    pub(super) fn eval_elementwise(g: &Graph, values: &[f64]) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(values.len());
+        let mut scratch: Vec<Plane> = Vec::new();
+        let mut plane = [0.0f64; 64];
+        let mut res = [0.0f64; 64];
+        for chunk in values.chunks(64) {
+            plane[..chunk.len()].copy_from_slice(chunk);
+            g.eval_into(&[plane], CodecMode::Lut, &mut scratch, &mut res)?;
+            out.extend_from_slice(&res[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    /// The quantised GEMM: tile the columns into planes, then drive the
+    /// fused accumulator graph once per (row, inner index, column tile).
+    pub(super) fn eval_quant_gemm(
+        quant: &Graph,
+        tile: &Graph,
+        a: &TensorF64,
+        b: &TensorF64,
+    ) -> Result<Vec<f64>> {
+        anyhow::ensure!(
+            a.dims.len() == 2 && b.dims.len() == 2 && a.dims[1] == b.dims[0],
+            "quant_gemm_t8 wants [r,k]·[k,c] matrices, got {:?}·{:?}",
+            a.dims,
+            b.dims
+        );
+        let (r, k, c) = (a.dims[0] as usize, a.dims[1] as usize, b.dims[1] as usize);
+        let aq = eval_elementwise(quant, &a.data)?;
+        let bq = eval_elementwise(quant, &b.data)?;
+        let mut out = vec![0.0f64; r * c];
+        let mut scratch: Vec<Plane> = Vec::new();
+        let mut bt = [0.0f64; 64];
+        for jt in (0..c).step_by(64) {
+            let width = (c - jt).min(64);
+            for i in 0..r {
+                let mut acc = [0.0f64; 64];
+                for kk in 0..k {
+                    bt[..width].copy_from_slice(&bq[kk * c + jt..kk * c + jt + width]);
+                    bt[width..].fill(0.0);
+                    // `acc` is both param 2 (copied into `params` here)
+                    // and the eval output — allocation-free per step.
+                    let params = [[aq[i * k + kk]; 64], bt, acc];
+                    tile.eval_into(&params, CodecMode::Lut, &mut scratch, &mut acc)?;
+                }
+                out[i * c + jt..i * c + jt + width].copy_from_slice(&acc[..width]);
+            }
+        }
+        Ok(out)
+    }
+}
+
 #[cfg(not(feature = "pjrt"))]
 impl Runtime {
-    /// Stub: always errors — the offline build carries no PJRT backend.
+    /// A runtime with no artifacts registered yet; [`Runtime::load_dir`]
+    /// installs the builtin graph-interpreter set.
     pub fn new() -> Result<Runtime> {
+        Ok(Runtime { artifacts: HashMap::new() })
+    }
+
+    /// Compiling HLO text needs the real PJRT client — only the builtin
+    /// graph artifacts are available without the `pjrt` feature.
+    pub fn load_file(&mut self, _name: &str, path: &Path) -> Result<()> {
         bail!(
-            "PJRT support not compiled in: enable the `pjrt` cargo feature \
-             (requires the external `xla` crate)"
+            "cannot compile HLO artifact {} without the `pjrt` cargo feature \
+             (the builtin graph-interpreter artifacts are available via load_dir)",
+            path.display()
         )
     }
 
-    pub fn load_file(&mut self, _name: &str, path: &Path) -> Result<()> {
-        bail!("PJRT support not compiled in (artifact {})", path.display())
-    }
-
-    pub fn load_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
-        Err(anyhow!("PJRT support not compiled in"))
-            .with_context(|| format!("artifact dir {} (run `make artifacts`)", dir.display()))
+    /// Register the builtin graph-interpreter artifacts. The directory is
+    /// intentionally ignored (it need not exist): without `xla` there is
+    /// nothing to compile from it, and the builtins are the complete
+    /// artifact set `aot.py` produces.
+    pub fn load_dir(&mut self, _dir: &Path) -> Result<Vec<String>> {
+        self.artifacts = fallback::builtin_artifacts();
+        Ok(self.names())
     }
 
     pub fn names(&self) -> Vec<String> {
-        Vec::new()
+        let mut v: Vec<String> = self.artifacts.keys().cloned().collect();
+        v.sort();
+        v
     }
 
-    pub fn has(&self, _name: &str) -> bool {
-        false
+    pub fn has(&self, name: &str) -> bool {
+        self.artifacts.contains_key(name)
     }
 
-    pub fn run_f64(&self, name: &str, _inputs: &[TensorF64]) -> Result<Vec<Vec<f64>>> {
-        bail!("artifact {name:?} not loaded (PJRT support not compiled in)")
+    /// Execute a builtin artifact through the graph interpreter.
+    pub fn run_f64(&self, name: &str, inputs: &[TensorF64]) -> Result<Vec<Vec<f64>>> {
+        let art = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not loaded (have: {:?})", self.names()))?;
+        match art {
+            fallback::GraphArtifact::Roundtrip(g) => {
+                let t = inputs
+                    .first()
+                    .ok_or_else(|| anyhow!("{name} wants one input tensor"))?;
+                Ok(vec![fallback::eval_elementwise(g, &t.data)?])
+            }
+            fallback::GraphArtifact::QuantGemm { quant, tile } => {
+                anyhow::ensure!(inputs.len() == 2, "{name} wants two input matrices");
+                Ok(vec![fallback::eval_quant_gemm(quant, tile, &inputs[0], &inputs[1])?])
+            }
+        }
     }
 }
 
@@ -289,17 +453,29 @@ mod tests {
     use super::*;
 
     /// Tests that need compiled artifacts are integration tests
-    /// (`rust/tests/`); here we only cover the error paths that work
-    /// without artifacts.
+    /// (`rust/tests/`); here we cover the paths that work without them.
+    /// With the real PJRT client a missing artifact directory is an
+    /// error; the graph-interpreter fallback instead registers its
+    /// builtin artifact set regardless of the directory.
     #[test]
-    fn missing_artifact_dir_errors() {
+    fn load_dir_missing_directory_behaviour() {
         let mut rt = match Runtime::new() {
             Ok(rt) => rt,
             // PJRT may be unavailable in odd sandboxes; skip then.
             Err(_) => return,
         };
-        let err = rt.load_dir(Path::new("/nonexistent-dir-xyz")).unwrap_err();
-        assert!(format!("{err:#}").contains("artifact dir"));
+        let res = rt.load_dir(Path::new("/nonexistent-dir-xyz"));
+        if cfg!(feature = "pjrt") {
+            assert!(format!("{:#}", res.unwrap_err()).contains("artifact dir"));
+        } else {
+            let names = res.unwrap();
+            for want in
+                ["takum8_roundtrip", "takum16_roundtrip", "takum32_roundtrip", "quant_gemm_t8"]
+            {
+                assert!(names.iter().any(|n| n == want), "missing builtin {want}");
+                assert!(rt.has(want), "{want}");
+            }
+        }
     }
 
     #[test]
@@ -318,5 +494,84 @@ mod tests {
         assert_eq!(t.dims, vec![3]);
         let m = TensorF64::matrix(vec![0.0; 6], 2, 3);
         assert_eq!(m.dims, vec![2, 3]);
+    }
+
+    /// The fallback's round-trip artifact must be bit-identical to the
+    /// native codec, specials included — the same contract the
+    /// `integration_runtime` suite pins at full batch sizes.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn fallback_roundtrip_matches_native_codec() {
+        use crate::num::takum_linear;
+        use crate::util::rng::Rng;
+        let mut rt = Runtime::new().unwrap();
+        rt.load_dir(Path::new("unused")).unwrap();
+        let mut rng = Rng::new(0xFA11);
+        let mut vals: Vec<f64> = (0..200).map(|_| rng.wide_f64(-260, 260)).collect();
+        vals.extend_from_slice(&[0.0, -0.0, f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 1e300]);
+        for n in [8u32, 16, 32] {
+            let out = rt
+                .run_f64(&format!("takum{n}_roundtrip"), &[TensorF64::vec(vals.clone())])
+                .unwrap();
+            assert_eq!(out[0].len(), vals.len());
+            for (i, (&x, &y)) in vals.iter().zip(&out[0]).enumerate() {
+                let want = takum_linear::decode(takum_linear::encode(x, n), n);
+                assert!(
+                    y == want || (y.is_nan() && want.is_nan()),
+                    "n={n} i={i} x={x}: graph={y} native={want}"
+                );
+            }
+        }
+    }
+
+    /// The fallback GEMM handles non-tile-aligned shapes (column padding)
+    /// and re-quantises every accumulator step to takum16.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn fallback_quant_gemm_small_odd_shape() {
+        use crate::num::takum_linear;
+        let mut rt = Runtime::new().unwrap();
+        rt.load_dir(Path::new("unused")).unwrap();
+        let (r, k, c) = (3usize, 4, 5);
+        let a: Vec<f64> = (0..r * k).map(|i| (i % 3) as f64 + 0.5).collect();
+        let b: Vec<f64> = (0..k * c).map(|i| (i % 5) as f64 - 2.0).collect();
+        let out = rt
+            .run_f64(
+                "quant_gemm_t8",
+                &[
+                    TensorF64::matrix(a.clone(), r as i64, k as i64),
+                    TensorF64::matrix(b.clone(), k as i64, c as i64),
+                ],
+            )
+            .unwrap();
+        let cmat = &out[0];
+        assert_eq!(cmat.len(), r * c);
+        // Reference: takum8-quantise inputs, takum16-quantise each step.
+        let q8 = |x: f64| takum_linear::decode(takum_linear::encode(x, 8), 8);
+        let q16 = |x: f64| takum_linear::decode(takum_linear::encode(x, 16), 16);
+        for i in 0..r {
+            for j in 0..c {
+                let mut acc = 0.0f64;
+                for kk in 0..k {
+                    acc = q16(q8(a[i * k + kk]).mul_add(q8(b[kk * c + j]), acc));
+                }
+                assert_eq!(cmat[i * c + j], acc, "c[{i},{j}]");
+            }
+        }
+        // Shape errors are descriptive.
+        let e = rt
+            .run_f64("quant_gemm_t8", &[TensorF64::vec(vec![1.0]), TensorF64::vec(vec![1.0])])
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("matrices"), "{e:?}");
+    }
+
+    /// HLO text still needs the real PJRT client.
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn fallback_load_file_errors() {
+        let mut rt = Runtime::new().unwrap();
+        let e = rt.load_file("x", Path::new("x.hlo.txt")).unwrap_err().to_string();
+        assert!(e.contains("pjrt"), "{e:?}");
     }
 }

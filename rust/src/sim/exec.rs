@@ -28,9 +28,12 @@
 //! cache immune to direct `regs.v` writes — a stale shadow simply fails
 //! the 512-bit compare and re-decodes.
 //!
-//! The next backend (GPU lane kernel, HLO interpreter) plugs in at the
-//! same boundary: a third [`Backend`] variant implementing `decode_plane`
-//! / `encode_slice` plus the FMA/dot plane loops — the plan cache, shadow
+//! [`Backend::Graph`] fills the slot that boundary reserved: the HLO-lite
+//! graph interpreter ([`crate::sim::graph`]) implements `decode_plane` /
+//! `encode_slice` plus the FMA/dot plane loops as its node-evaluation
+//! primitives, and additionally lifts whole recorded programs into an
+//! optimised dataflow graph. The next backend (a GPU lane kernel) plugs
+//! in at the same boundary as a fourth variant — the plan cache, shadow
 //! cache and mask policy stay unchanged.
 //!
 //! Design notes:
@@ -549,11 +552,16 @@ impl Machine {
         }
 
         let mut vals = [0.0f64; 64];
-        // The vector backend runs the FMA chain as a fused plane kernel
-        // (constant trip count, dispatch hoisted out of the lane loop).
-        if let (Backend::Vector, FpOp::Fma(kind, order)) = (self.backend, op) {
-            plane::fma_plane(kind, order, &xa, &xb, &xz, &mut vals);
-            return self.write_lanes_f64(ins, &codec, ty, lanes, &vals);
+        // The vector and graph backends run the FMA chain as the fused
+        // plane kernel (dispatch hoisted out of the lane loop) — one
+        // shared implementation, which is also the graph interpreter's
+        // Fma-node evaluator (`sim::graph` re-exports it); bit-identical
+        // to the scalar loop below.
+        if let FpOp::Fma(kind, order) = op {
+            if self.backend != Backend::Scalar {
+                plane::fma_plane(kind, order, &xa, &xb, &xz, &mut vals);
+                return self.write_lanes_f64(ins, &codec, ty, lanes, &vals);
+            }
         }
         for (i, v) in vals.iter_mut().enumerate().take(lanes) {
             let (x, y, z) = (xa[i], xb[i], xz[i]);
@@ -814,16 +822,19 @@ impl Machine {
         let mut xz = [0.0f64; 64];
         self.decode_plane_cached(rd, &dc, dst_ty, lanes, &mut xz);
         let mut vals = [0.0f64; 64];
-        if self.backend == Backend::Vector {
+        match self.backend {
             // Fused widening-reduce plane (constant trip count; computes
-            // the full 32-lane plane, the writer takes `lanes`).
-            plane::dot_plane(&xa, &xb, &xz, &mut vals);
-        } else {
-            for (i, v) in vals.iter_mut().enumerate().take(lanes) {
-                let mut sum = xz[i];
-                sum += xa[2 * i] * xb[2 * i];
-                sum += xa[2 * i + 1] * xb[2 * i + 1];
-                *v = sum;
+            // the full 32-lane plane, the writer takes `lanes`) — shared
+            // by the vector and graph backends, and doubling as the
+            // graph interpreter's Dot-node evaluator.
+            Backend::Vector | Backend::Graph => plane::dot_plane(&xa, &xb, &xz, &mut vals),
+            Backend::Scalar => {
+                for (i, v) in vals.iter_mut().enumerate().take(lanes) {
+                    let mut sum = xz[i];
+                    sum += xa[2 * i] * xb[2 * i];
+                    sum += xa[2 * i + 1] * xb[2 * i + 1];
+                    *v = sum;
+                }
             }
         }
         self.write_lanes_f64(ins, &dc, dst_ty, lanes, &vals)
@@ -1231,14 +1242,14 @@ mod tests {
     /// datapath (0/0, inf − inf) must store as the format's error marker
     /// — takum NaR `1000…0`, the IEEE formats' NaN pattern — and
     /// propagate through subsequent arithmetic, in both codec modes and
-    /// both backends. Before the hardening, a release build would
-    /// silently store the extreme finite pattern the NaN's huge sort key
-    /// lands on.
+    /// every backend (scalar, vector, graph). Before the hardening, a
+    /// release build would silently store the extreme finite pattern the
+    /// NaN's huge sort key lands on.
     #[test]
     fn nan_results_store_as_nar_and_propagate() {
         use crate::num::takum_linear::nar;
         for mode in [CodecMode::Lut, CodecMode::Arith] {
-            for backend in [Backend::Scalar, Backend::Vector] {
+            for backend in Backend::ALL {
                 // takum: 0/0 in a packed divide → NaR in every lane width.
                 for (n, mn) in [(8u32, "VDIVPT8"), (16, "VDIVPT16")] {
                     let t = LaneType::Takum(n);
@@ -1295,7 +1306,7 @@ mod tests {
     #[test]
     fn softmax_of_all_neg_inf_row_yields_error_marker_not_finite() {
         for mode in [CodecMode::Lut, CodecMode::Arith] {
-            for backend in [Backend::Scalar, Backend::Vector] {
+            for backend in Backend::ALL {
                 let bf = LaneType::Mini(BF16);
                 let lanes = VecReg::lanes(16);
                 let mut m = Machine::with_config(mode, backend);
@@ -1345,7 +1356,7 @@ mod tests {
             ];
             for mask in masks {
                 for zeroing in [false, true] {
-                    for backend in [Backend::Scalar, Backend::Vector] {
+                    for backend in Backend::ALL {
                         let mut m = Machine::with_config(CodecMode::Lut, backend);
                         m.load_f64(0, ty, &a);
                         m.load_f64(1, ty, &b);
@@ -1404,7 +1415,8 @@ mod tests {
             let b: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-20, 20)).collect();
             let mut scalar = Machine::with_config(CodecMode::Lut, Backend::Scalar);
             let mut vector = Machine::with_config(CodecMode::Lut, Backend::Vector);
-            for m in [&mut scalar, &mut vector] {
+            let mut graphm = Machine::with_config(CodecMode::Lut, Backend::Graph);
+            for m in [&mut scalar, &mut vector, &mut graphm] {
                 m.load_f64(0, ty, &a);
                 m.load_f64(1, ty, &b);
                 m.load_f64(2, ty, &a);
@@ -1417,6 +1429,7 @@ mod tests {
             }
             for reg in [0usize, 1, 2, 3] {
                 assert_eq!(scalar.regs.v[reg], vector.regs.v[reg], "{mn}: v{reg}");
+                assert_eq!(scalar.regs.v[reg], graphm.regs.v[reg], "{mn}: graph v{reg}");
             }
         }
         // Widening dot product with both codec widths in play.
@@ -1424,7 +1437,8 @@ mod tests {
         let b: Vec<f64> = (0..64).map(|_| r.wide_f64(-8, 8)).collect();
         let mut scalar = Machine::with_config(CodecMode::Lut, Backend::Scalar);
         let mut vector = Machine::with_config(CodecMode::Lut, Backend::Vector);
-        for m in [&mut scalar, &mut vector] {
+        let mut graphm = Machine::with_config(CodecMode::Lut, Backend::Graph);
+        for m in [&mut scalar, &mut vector, &mut graphm] {
             m.load_f64(0, LaneType::Takum(8), &a);
             m.load_f64(1, LaneType::Takum(8), &b);
             m.load_f64(2, LaneType::Takum(16), &vec![0.25; 32]);
@@ -1432,6 +1446,7 @@ mod tests {
             m.step(&add("VDPPT8PT16", 2, 0, 1)).unwrap();
         }
         assert_eq!(scalar.regs.v[2], vector.regs.v[2], "VDPPT8PT16");
+        assert_eq!(scalar.regs.v[2], graphm.regs.v[2], "VDPPT8PT16 graph");
     }
 
     /// The decoded-shadow cache is content-keyed: a direct write to the

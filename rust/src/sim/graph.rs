@@ -1,0 +1,1009 @@
+//! The HLO-lite graph interpreter: the third plane [`Backend`], filling
+//! the named backend slot the lane engine reserved for an in-tree HLO
+//! interpreter (the PJRT runtime stays feature-gated because the offline
+//! image has no `xla` crate — see [`crate::runtime`], which now falls
+//! back to this module).
+//!
+//! ## Node set
+//!
+//! A [`Graph`] is a straight-line dataflow program over **f64 register
+//! planes** (64 lanes, the widest register shape; narrower lane counts
+//! use a prefix). The node set is deliberately HLO-lite:
+//!
+//! * [`Node::Const`] — a constant plane.
+//! * [`Node::Param`] — a runtime-bound input plane (the runtime
+//!   fallback's artifact inputs).
+//! * [`Node::Load`] — decode a vector register's *initial* contents as a
+//!   lane type.
+//! * [`Node::Convert`] — quantise a plane through a lane type
+//!   (`decode ∘ encode`, the simulator's store-then-reload semantics).
+//! * [`Node::Bin`] / [`Node::Fma`] — elementwise arithmetic, the same
+//!   expression trees as the scalar executor.
+//! * [`Node::Dot`] — the widening pairwise dot-reduce of `VDP…`.
+//! * [`Node::Reduce`] — horizontal sum/max of a lane prefix, broadcast
+//!   back across the plane.
+//! * [`Node::Select`] — lane select under a mask (masked/zeroing stores).
+//! * [`Node::Broadcast`] — lane 0 across the plane (`VBROADCASTB…`).
+//!
+//! ## Passes
+//!
+//! [`Graph::optimize`] runs two cheap passes before evaluation:
+//!
+//! * **convert-pair folding** — `Convert(Convert(x, T), T)` →
+//!   `Convert(x, T)` and `Convert(Load{ty: T}, T)` → `Load{ty: T}`.
+//!   Sound because quantisation is idempotent: re-encoding a
+//!   representable value reproduces its bits exactly (property-tested
+//!   exhaustively per format in [`crate::sim::lanes`]). This removes the
+//!   redundant re-quantisation the lifter inserts at every
+//!   register-read boundary.
+//! * **dead-plane elimination** — nodes unreachable from any output are
+//!   dropped (masked stores and scalar ops leave partially-dead chains).
+//!
+//! ## Bit-identity contract
+//!
+//! Everything here is pinned to the scalar lane engine **bit for bit**:
+//!
+//! * The node evaluators reuse the very same primitives as the scalar
+//!   backend (LUT [`Lut8::decode_slice`] table hits, per-element
+//!   boundary-search encode, `mul_add` FMA chains, the left-to-right
+//!   dot expression tree), so [`Backend::Graph`]'s three plane hooks
+//!   ([`decode_plane_lut`], [`encode_slice_lut`], [`fma_plane`] /
+//!   [`dot_plane`]) are bit-identical to `Backend::Scalar` by
+//!   construction.
+//! * [`Graph::lift`] + [`Graph::run_on`] must leave bit-identical
+//!   architectural state to replaying the same [`Program`] on a
+//!   [`crate::sim::Machine`] from the same (canonically encoded) initial
+//!   register file — see the [`Graph::run_on`] proviso — the
+//!   cross-backend differential fuzz suite
+//!   (`rust/tests/differential_fuzz.rs`) holds all of this to randomized
+//!   mixed-format programs, masked/zeroing stores and NaN/inf payload
+//!   lanes included, across both [`CodecMode`]s.
+//!
+//! Selection is the usual axis: `Machine::with_config(mode,
+//! Backend::Graph)`, `--backend graph` on the `kernels`/`gemm` CLI, or
+//! `TAKUM_BACKEND=graph` for whole-suite forcing (the CI graph leg).
+
+use super::lanes::{CodecMode, FmaKind, FmaOrder, FpOp, LaneCodec, LanePlan, LaneType};
+use super::program::{Instruction, Operand, Program};
+use super::register::{RegisterFile, VecReg, NUM_VREGS};
+use crate::num::lut::Lut8;
+use anyhow::{anyhow, bail, Result};
+
+/// One f64 register plane (64 lanes; narrower lane counts use a prefix).
+pub type Plane = [f64; 64];
+
+/// Index of a node within its [`Graph`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeId(u32);
+
+impl NodeId {
+    #[inline]
+    fn idx(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// Elementwise binary ops (the same value semantics as the scalar
+/// executor's [`FpOp`] arms).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Min,
+    Max,
+    /// `VSCALEF`: `a · 2^⌊b⌋`.
+    Scalef,
+}
+
+/// Horizontal reductions over a lane prefix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceOp {
+    Sum,
+    Max,
+}
+
+/// One dataflow node. Operand [`NodeId`]s always precede the node itself
+/// (the graph is topologically ordered by construction).
+#[derive(Debug, Clone)]
+pub enum Node {
+    /// Constant plane.
+    Const(Box<Plane>),
+    /// Runtime-bound input plane (index into the evaluation's params).
+    Param(usize),
+    /// Decode vector register `reg` of the *initial* register file as
+    /// lane type `ty`.
+    Load { reg: u8, ty: LaneType },
+    /// Quantise through `ty`: `decode(encode(x))` per lane — exactly what
+    /// a store-then-reload through the machine does to a plane.
+    Convert { src: NodeId, ty: LaneType },
+    /// Elementwise binary arithmetic.
+    Bin { op: BinOp, a: NodeId, b: NodeId },
+    /// Unary `VRNDSCALE` (round to 2^-m fixed point, RNE).
+    RndScale { src: NodeId, m: i32 },
+    /// Fused multiply-add with the Intel operand orders.
+    Fma { kind: FmaKind, order: FmaOrder, a: NodeId, b: NodeId, z: NodeId },
+    /// Widening pairwise dot-reduce:
+    /// `out[i] = z[i] + a[2i]·b[2i] + a[2i+1]·b[2i+1]` (32 dst lanes).
+    Dot { a: NodeId, b: NodeId, z: NodeId },
+    /// Horizontal reduce of the first `lanes` lanes, broadcast across the
+    /// plane (sequential left-to-right fold — deterministic).
+    Reduce { op: ReduceOp, src: NodeId, lanes: usize },
+    /// Lane select: bit `i` of `mask` set → `a[i]`, else `b[i]`.
+    Select { mask: u64, a: NodeId, b: NodeId },
+    /// Lane 0 of `src` across the whole plane.
+    Broadcast { src: NodeId },
+}
+
+impl Node {
+    /// Operand ids, for the passes.
+    fn operands(&self) -> [Option<NodeId>; 3] {
+        match *self {
+            Node::Const(_) | Node::Param(_) | Node::Load { .. } => [None; 3],
+            Node::Convert { src, .. }
+            | Node::RndScale { src, .. }
+            | Node::Reduce { src, .. }
+            | Node::Broadcast { src } => [Some(src), None, None],
+            Node::Bin { a, b, .. } | Node::Select { a, b, .. } => [Some(a), Some(b), None],
+            Node::Fma { a, b, z, .. } | Node::Dot { a, b, z } => [Some(a), Some(b), Some(z)],
+        }
+    }
+
+    fn operands_mut(&mut self) -> [Option<&mut NodeId>; 3] {
+        match self {
+            Node::Const(_) | Node::Param(_) | Node::Load { .. } => [None, None, None],
+            Node::Convert { src, .. }
+            | Node::RndScale { src, .. }
+            | Node::Reduce { src, .. }
+            | Node::Broadcast { src } => [Some(src), None, None],
+            Node::Bin { a, b, .. } | Node::Select { a, b, .. } => {
+                [Some(a), Some(b), None]
+            }
+            Node::Fma { a, b, z, .. } | Node::Dot { a, b, z } => [Some(a), Some(b), Some(z)],
+        }
+    }
+}
+
+/// A final register write of a lifted program: `node`'s plane, encoded at
+/// `ty`, becomes the full contents of `reg`.
+#[derive(Debug, Clone, Copy)]
+pub struct RegOutput {
+    pub reg: u8,
+    pub ty: LaneType,
+    pub node: NodeId,
+}
+
+/// Statistics of one [`Graph::optimize`] run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PassStats {
+    /// Redundant `Convert` nodes folded away.
+    pub converts_folded: usize,
+    /// Dead nodes eliminated.
+    pub dead_removed: usize,
+}
+
+/// The dataflow graph (see module docs for the node set and contract).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    nodes: Vec<Node>,
+    /// Register writes (lifted programs).
+    outputs: Vec<RegOutput>,
+    /// Plane returns (hand-built artifact graphs).
+    returns: Vec<NodeId>,
+}
+
+impl Graph {
+    pub fn new() -> Graph {
+        Graph::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn outputs(&self) -> &[RegOutput] {
+        &self.outputs
+    }
+
+    fn push(&mut self, n: Node) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(n);
+        id
+    }
+
+    // ------------------------------------------------------------- builders
+
+    pub fn konst(&mut self, plane: Plane) -> NodeId {
+        self.push(Node::Const(Box::new(plane)))
+    }
+
+    /// A constant plane with every lane set to `v`.
+    pub fn splat(&mut self, v: f64) -> NodeId {
+        self.konst([v; 64])
+    }
+
+    pub fn param(&mut self, index: usize) -> NodeId {
+        self.push(Node::Param(index))
+    }
+
+    pub fn load(&mut self, reg: u8, ty: LaneType) -> NodeId {
+        self.push(Node::Load { reg, ty })
+    }
+
+    pub fn convert(&mut self, src: NodeId, ty: LaneType) -> NodeId {
+        self.push(Node::Convert { src, ty })
+    }
+
+    pub fn bin(&mut self, op: BinOp, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Node::Bin { op, a, b })
+    }
+
+    pub fn rndscale(&mut self, src: NodeId, m: i32) -> NodeId {
+        self.push(Node::RndScale { src, m })
+    }
+
+    pub fn fma(
+        &mut self,
+        kind: FmaKind,
+        order: FmaOrder,
+        a: NodeId,
+        b: NodeId,
+        z: NodeId,
+    ) -> NodeId {
+        self.push(Node::Fma { kind, order, a, b, z })
+    }
+
+    pub fn dot(&mut self, a: NodeId, b: NodeId, z: NodeId) -> NodeId {
+        self.push(Node::Dot { a, b, z })
+    }
+
+    pub fn reduce(&mut self, op: ReduceOp, src: NodeId, lanes: usize) -> NodeId {
+        assert!((1..=64).contains(&lanes));
+        self.push(Node::Reduce { op, src, lanes })
+    }
+
+    pub fn select(&mut self, mask: u64, a: NodeId, b: NodeId) -> NodeId {
+        self.push(Node::Select { mask, a, b })
+    }
+
+    pub fn broadcast(&mut self, src: NodeId) -> NodeId {
+        self.push(Node::Broadcast { src })
+    }
+
+    /// Mark a node as a plane return (artifact graphs).
+    pub fn ret(&mut self, node: NodeId) {
+        self.returns.push(node);
+    }
+
+    /// Mark a node as the final contents of a register (lifted programs).
+    pub fn output(&mut self, reg: u8, ty: LaneType, node: NodeId) {
+        self.outputs.retain(|o| o.reg != reg);
+        self.outputs.push(RegOutput { reg, ty, node });
+    }
+
+    // ------------------------------------------------------------- passes
+
+    /// Run the cheap graph passes: convert-pair folding, then dead-plane
+    /// elimination. Purely structural — evaluation results are
+    /// bit-identical before and after (tested).
+    pub fn optimize(&mut self) -> PassStats {
+        let converts_folded = self.fold_convert_pairs();
+        let dead_removed = self.eliminate_dead();
+        PassStats { converts_folded, dead_removed }
+    }
+
+    /// `Convert(x, T)` where `x` already produces a `T`-quantised plane
+    /// (another `Convert` to `T`, or a `Load` decoded as `T`) is the
+    /// identity bitwise — alias it to `x`.
+    fn fold_convert_pairs(&mut self) -> usize {
+        let mut alias: Vec<NodeId> = (0..self.nodes.len() as u32).map(NodeId).collect();
+        let mut folded = 0usize;
+        for i in 0..self.nodes.len() {
+            // Resolve operands through earlier aliases first so chains of
+            // converts collapse in one pass.
+            let resolved: Vec<NodeId> = self.nodes[i]
+                .operands_mut()
+                .into_iter()
+                .flatten()
+                .map(|op| {
+                    *op = alias[op.idx()];
+                    *op
+                })
+                .collect();
+            if let Node::Convert { ty, .. } = self.nodes[i] {
+                let src = resolved[0];
+                let src_ty = match &self.nodes[src.idx()] {
+                    Node::Convert { ty, .. } => Some(*ty),
+                    Node::Load { ty, .. } => Some(*ty),
+                    _ => None,
+                };
+                if src_ty == Some(ty) {
+                    alias[i] = src;
+                    folded += 1;
+                }
+            }
+        }
+        for o in &mut self.outputs {
+            o.node = alias[o.node.idx()];
+        }
+        for r in &mut self.returns {
+            *r = alias[r.idx()];
+        }
+        folded
+    }
+
+    /// Drop every node unreachable from an output or return, compacting
+    /// ids (operands always precede their users, so one reverse mark
+    /// sweep suffices).
+    fn eliminate_dead(&mut self) -> usize {
+        let mut live = vec![false; self.nodes.len()];
+        for o in &self.outputs {
+            live[o.node.idx()] = true;
+        }
+        for r in &self.returns {
+            live[r.idx()] = true;
+        }
+        for i in (0..self.nodes.len()).rev() {
+            if !live[i] {
+                continue;
+            }
+            for op in self.nodes[i].operands().into_iter().flatten() {
+                live[op.idx()] = true;
+            }
+        }
+        let mut remap = vec![NodeId(0); self.nodes.len()];
+        let mut kept = 0u32;
+        let old = std::mem::take(&mut self.nodes);
+        let removed = old.len();
+        for (i, mut n) in old.into_iter().enumerate() {
+            if !live[i] {
+                continue;
+            }
+            for op in n.operands_mut().into_iter().flatten() {
+                *op = remap[op.idx()];
+            }
+            remap[i] = NodeId(kept);
+            self.nodes.push(n);
+            kept += 1;
+        }
+        for o in &mut self.outputs {
+            o.node = remap[o.node.idx()];
+        }
+        for r in &mut self.returns {
+            *r = remap[r.idx()];
+        }
+        removed - kept as usize
+    }
+
+    // ------------------------------------------------------------- lifting
+
+    /// Lift a recorded straight-line [`Program`] into a graph, resolving
+    /// register reads/writes into dataflow edges. Mask registers are
+    /// taken from `regs` (the initial architectural state) and must not
+    /// be written by the program itself; instructions outside the
+    /// HLO-lite fp dataflow subset (integer/bitwise/mask ops, compares,
+    /// the two-source bf16 convert) are rejected with a descriptive
+    /// error — exactly the vocabulary the kernel builder emits is
+    /// covered.
+    pub fn lift(prog: &Program, regs: &RegisterFile) -> Result<Graph> {
+        let mut l = Lifter {
+            g: Graph::new(),
+            env: [None; NUM_VREGS],
+            written: [false; NUM_VREGS],
+        };
+        for ins in &prog.instrs {
+            l.lift_instruction(ins, regs)?;
+        }
+        // Only registers the program wrote become outputs; registers
+        // that were merely read keep their initial contents.
+        for r in 0..NUM_VREGS {
+            if l.written[r] {
+                let (node, ty) = l.env[r].expect("written register has an env entry");
+                l.g.output(r as u8, ty, node);
+            }
+        }
+        Ok(l.g)
+    }
+
+    // ---------------------------------------------------------- evaluation
+
+    /// Evaluate every node into `vals` (one plane per node). `regs` backs
+    /// [`Node::Load`]; `params` backs [`Node::Param`].
+    fn eval_nodes(
+        &self,
+        mode: CodecMode,
+        regs: Option<&RegisterFile>,
+        params: &[Plane],
+        vals: &mut Vec<Plane>,
+    ) -> Result<()> {
+        vals.clear();
+        vals.resize(self.nodes.len(), [0.0; 64]);
+        for (i, n) in self.nodes.iter().enumerate() {
+            // Split so operand planes (indices < i) and the destination
+            // plane (index i) can be borrowed simultaneously.
+            let (done, rest) = vals.split_at_mut(i);
+            let out = &mut rest[0];
+            match n {
+                Node::Const(p) => *out = **p,
+                Node::Param(k) => {
+                    *out = *params
+                        .get(*k)
+                        .ok_or_else(|| anyhow!("graph param {k} not bound"))?;
+                }
+                Node::Load { reg, ty } => {
+                    let regs =
+                        regs.ok_or_else(|| anyhow!("graph has Load nodes but no register file"))?;
+                    let codec = LaneCodec::resolve(*ty, mode);
+                    let lanes = VecReg::lanes(ty.width());
+                    codec.decode_plane(&regs.v[*reg as usize], ty.width(), lanes, out);
+                }
+                Node::Convert { src, ty } => {
+                    let codec = LaneCodec::resolve(*ty, mode);
+                    convert_plane(&codec, &done[src.idx()], out);
+                }
+                Node::Bin { op, a, b } => {
+                    let (xa, xb) = (&done[a.idx()], &done[b.idx()]);
+                    for i in 0..64 {
+                        let (x, y) = (xa[i], xb[i]);
+                        out[i] = match op {
+                            BinOp::Add => x + y,
+                            BinOp::Sub => x - y,
+                            BinOp::Mul => x * y,
+                            BinOp::Div => x / y,
+                            BinOp::Min => x.min(y),
+                            BinOp::Max => x.max(y),
+                            BinOp::Scalef => x * y.floor().exp2(),
+                        };
+                    }
+                }
+                Node::RndScale { src, m } => {
+                    let s = (*m as f64).exp2();
+                    let xa = &done[src.idx()];
+                    for i in 0..64 {
+                        out[i] = (xa[i] * s).round_ties_even() / s;
+                    }
+                }
+                Node::Fma { kind, order, a, b, z } => {
+                    fma_plane(*kind, *order, &done[a.idx()], &done[b.idx()], &done[z.idx()], out);
+                }
+                Node::Dot { a, b, z } => {
+                    dot_plane(&done[a.idx()], &done[b.idx()], &done[z.idx()], out);
+                }
+                Node::Reduce { op, src, lanes } => {
+                    let xa = &done[src.idx()];
+                    let mut acc = xa[0];
+                    for &x in xa.iter().take(*lanes).skip(1) {
+                        acc = match op {
+                            ReduceOp::Sum => acc + x,
+                            ReduceOp::Max => acc.max(x),
+                        };
+                    }
+                    *out = [acc; 64];
+                }
+                Node::Select { mask, a, b } => {
+                    let (xa, xb) = (&done[a.idx()], &done[b.idx()]);
+                    for i in 0..64 {
+                        out[i] = if mask >> i & 1 == 1 { xa[i] } else { xb[i] };
+                    }
+                }
+                Node::Broadcast { src } => {
+                    *out = [done[src.idx()][0]; 64];
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Evaluate a lifted graph against an initial register file, encoding
+    /// every [`RegOutput`] plane back into a copy of it. Bit-identical to
+    /// replaying the lifted [`Program`] on a [`crate::sim::Machine`] with
+    /// the same initial state (the fuzz suite's contract) — **provided
+    /// the initial contents are canonical encodings** (anything
+    /// `Machine::load_f64` or a machine store produces). Preserved lanes
+    /// of partially-written registers round-trip through decode∘encode
+    /// here, where the machine keeps their raw bits: exact for every
+    /// canonical pattern (re-encode exactness is property-tested per
+    /// format), but a hand-crafted non-canonical NaN payload written
+    /// straight into `regs.v` would be canonicalised.
+    pub fn run_on(&self, regs: &RegisterFile, mode: CodecMode) -> Result<RegisterFile> {
+        let mut vals = Vec::new();
+        self.eval_nodes(mode, Some(regs), &[], &mut vals)?;
+        let mut out = regs.clone();
+        for o in &self.outputs {
+            let codec = LaneCodec::resolve(o.ty, mode);
+            let w = o.ty.width();
+            let lanes = VecReg::lanes(w);
+            let mut bits = [0u64; 64];
+            codec.encode_slice(&vals[o.node.idx()][..lanes], &mut bits[..lanes]);
+            let mut reg = VecReg::ZERO;
+            for (i, &b) in bits.iter().enumerate().take(lanes) {
+                reg.set(w, i, b);
+            }
+            out.v[o.reg as usize] = reg;
+        }
+        Ok(out)
+    }
+
+    /// Evaluate an artifact graph: bind `params`, return the [`ret`]
+    /// planes (allocates the result vector; see [`Graph::eval_into`] for
+    /// the hot-loop form).
+    ///
+    /// [`ret`]: Graph::ret
+    pub fn eval_planes(
+        &self,
+        params: &[Plane],
+        mode: CodecMode,
+        scratch: &mut Vec<Plane>,
+    ) -> Result<Vec<Plane>> {
+        self.eval_nodes(mode, None, params, scratch)?;
+        Ok(self.returns.iter().map(|r| scratch[r.idx()]).collect())
+    }
+
+    /// Evaluate a single-return artifact graph straight into `out` —
+    /// with `scratch` reused across calls this is fully allocation-free,
+    /// the form the runtime's per-tile GEMM loop drives tens of
+    /// thousands of times per request.
+    pub fn eval_into(
+        &self,
+        params: &[Plane],
+        mode: CodecMode,
+        scratch: &mut Vec<Plane>,
+        out: &mut Plane,
+    ) -> Result<()> {
+        anyhow::ensure!(
+            self.returns.len() == 1,
+            "eval_into wants exactly one return plane, graph has {}",
+            self.returns.len()
+        );
+        self.eval_nodes(mode, None, params, scratch)?;
+        *out = scratch[self.returns[0].idx()];
+        Ok(())
+    }
+}
+
+/// Lift-time state: the node currently holding each register's plane
+/// (with the lane type it carries) and whether the program has written
+/// the register.
+struct Lifter {
+    g: Graph,
+    /// Per register: the node for its current plane and the lane type it
+    /// represents. Reads are **memoized** here — each re-read of a
+    /// register wraps the previous read's node in a fresh quantising
+    /// `Convert`, which is exactly the redundant-pair shape
+    /// [`Graph::optimize`]'s convert folding collapses.
+    env: [Option<(NodeId, LaneType)>; NUM_VREGS],
+    written: [bool; NUM_VREGS],
+}
+
+impl Lifter {
+    /// Read register `r` as `ty`: a quantising `Convert` over whatever
+    /// produced it (memoized; folded away later), or a `Load` of the
+    /// initial state. Re-interpreting a *written* register's bits as a
+    /// different lane type is rejected — that is a bit-level operation
+    /// outside the f64 plane model. Re-typing a register the program has
+    /// only read is fine: `Load` decodes the initial contents afresh.
+    fn read(&mut self, r: usize, ty: LaneType) -> Result<NodeId> {
+        match self.env[r] {
+            Some((node, t)) if t == ty => {
+                let c = self.g.convert(node, ty);
+                self.env[r] = Some((c, ty));
+                Ok(c)
+            }
+            Some((_, t)) => {
+                if self.written[r] {
+                    bail!(
+                        "not liftable: v{r} written as {t:?} but read as {ty:?} \
+                         (bit re-interpretation)"
+                    )
+                }
+                Ok(self.g.load(r as u8, ty))
+            }
+            None => {
+                let l = self.g.load(r as u8, ty);
+                self.env[r] = Some((l, ty));
+                Ok(l)
+            }
+        }
+    }
+
+    /// Store `node` into `dst` under the instruction's write mask. Mask
+    /// state is read from the *initial* register file (`regs`) — the
+    /// lifted subset cannot write mask registers, so that is exact.
+    fn write(
+        &mut self,
+        ins: &Instruction,
+        regs: &RegisterFile,
+        dst: usize,
+        ty: LaneType,
+        lanes: usize,
+        node: NodeId,
+    ) -> Result<()> {
+        let full = VecReg::lanes(ty.width());
+        let wm = regs.write_mask(ins.mask, lanes);
+        let all = if lanes >= 64 { u64::MAX } else { (1u64 << lanes) - 1 };
+        let merged = if wm == all && lanes == full {
+            node // dense full-plane store
+        } else {
+            let old = self.read(dst, ty)?;
+            let base = if ins.zeroing {
+                // Zeroing clears inactive lanes *within* the op's lane
+                // range; lanes beyond it keep old contents.
+                let zero = self.g.splat(0.0);
+                self.g.select(all & !wm, zero, old)
+            } else {
+                old
+            };
+            self.g.select(wm, node, base)
+        };
+        self.env[dst] = Some((merged, ty));
+        self.written[dst] = true;
+        Ok(())
+    }
+
+    fn vreg(o: &Operand) -> Result<usize> {
+        match o {
+            Operand::Vreg(r) => Ok(*r as usize),
+            other => bail!("not liftable: expected vector register, got {other:?}"),
+        }
+    }
+
+    fn lift_instruction(&mut self, ins: &Instruction, regs: &RegisterFile) -> Result<()> {
+        let plan = LanePlan::resolve(&ins.mnemonic)?;
+        match plan {
+            LanePlan::Fp { op, ty, packed } => {
+                let lanes = if packed { VecReg::lanes(ty.width()) } else { 1 };
+                let dst = Self::vreg(&ins.dst)?;
+                let ra = Self::vreg(&ins.srcs[0])?;
+                let rb = ins.srcs.get(1).and_then(|o| match o {
+                    Operand::Vreg(r) => Some(*r as usize),
+                    _ => None,
+                });
+                let imm = ins.srcs.iter().rev().find_map(|o| match o {
+                    Operand::Imm(v) => Some(*v),
+                    _ => None,
+                });
+                let a = self.read(ra, ty)?;
+                let node = match op {
+                    FpOp::Add | FpOp::Sub | FpOp::Mul | FpOp::Div | FpOp::Min | FpOp::Max
+                    | FpOp::Scalef => {
+                        let bop = match op {
+                            FpOp::Add => BinOp::Add,
+                            FpOp::Sub => BinOp::Sub,
+                            FpOp::Mul => BinOp::Mul,
+                            FpOp::Div => BinOp::Div,
+                            FpOp::Min => BinOp::Min,
+                            FpOp::Max => BinOp::Max,
+                            _ => BinOp::Scalef,
+                        };
+                        let rb = rb.ok_or_else(|| {
+                            anyhow!("not liftable: {} missing second source", ins.mnemonic)
+                        })?;
+                        let b = self.read(rb, ty)?;
+                        self.g.bin(bop, a, b)
+                    }
+                    FpOp::Fma(kind, order) => {
+                        let rb = rb.ok_or_else(|| {
+                            anyhow!("not liftable: {} missing second source", ins.mnemonic)
+                        })?;
+                        let b = self.read(rb, ty)?;
+                        let z = self.read(dst, ty)?;
+                        self.g.fma(kind, order, a, b, z)
+                    }
+                    FpOp::RndScale => {
+                        let m = ((imm.unwrap_or(0) >> 4) & 0xF) as i32;
+                        self.g.rndscale(a, m)
+                    }
+                    other => bail!(
+                        "not liftable: {} ({other:?} is outside the HLO-lite fp subset)",
+                        ins.mnemonic
+                    ),
+                };
+                self.write(ins, regs, dst, ty, lanes, node)
+            }
+            LanePlan::Convert { src, dst: dty } => {
+                let lanes = VecReg::lanes(src.width().max(dty.width()));
+                let dst = Self::vreg(&ins.dst)?;
+                let ra = Self::vreg(&ins.srcs[0])?;
+                let a = self.read(ra, src)?;
+                self.write(ins, regs, dst, dty, lanes, a)
+            }
+            LanePlan::Dot { src, dst: dty } => {
+                let dst = Self::vreg(&ins.dst)?;
+                let ra = Self::vreg(&ins.srcs[0])?;
+                let rb = Self::vreg(&ins.srcs[1])?;
+                let lanes = VecReg::lanes(dty.width());
+                let a = self.read(ra, src)?;
+                let b = self.read(rb, src)?;
+                let z = self.read(dst, dty)?;
+                let node = self.g.dot(a, b, z);
+                self.write(ins, regs, dst, dty, lanes, node)
+            }
+            LanePlan::Broadcast(w) => {
+                let dst = Self::vreg(&ins.dst)?;
+                let ra = Self::vreg(&ins.srcs[0])?;
+                // The machine broadcasts *bits* of lane 0 at width w; in
+                // plane terms that is the quantised lane-0 value, which
+                // requires knowing what type the source carries (and
+                // that its width matches).
+                let (_, sty) = self.env[ra].ok_or_else(|| {
+                    anyhow!("not liftable: broadcast of uninitialised v{ra}")
+                })?;
+                anyhow::ensure!(
+                    sty.width() == w,
+                    "not liftable: broadcast width {w} over v{ra} carrying {sty:?}"
+                );
+                let lanes = VecReg::lanes(w);
+                let a = self.read(ra, sty)?;
+                let node = self.g.broadcast(a);
+                self.write(ins, regs, dst, sty, lanes, node)
+            }
+            other => bail!(
+                "not liftable: {} ({other:?} is outside the HLO-lite fp subset)",
+                ins.mnemonic
+            ),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plane-hook primitives (shared by the node evaluators above and the
+// Backend::Graph dispatch in lanes.rs / exec.rs)
+// ---------------------------------------------------------------------------
+
+/// Quantise a plane through a codec: `decode(encode(x))` per lane, the
+/// [`Node::Convert`] evaluator. Uses the codec's own scalar entry points,
+/// so it is bit-identical to a machine store + reload by definition.
+fn convert_plane(codec: &LaneCodec, xs: &Plane, out: &mut Plane) {
+    for i in 0..64 {
+        out[i] = codec.decode(codec.encode(xs[i]));
+    }
+}
+
+/// `Backend::Graph`'s `decode_plane` hook: the [`Node::Load`] primitive —
+/// one bit-extraction pass and a [`Lut8::decode_slice`] table sweep,
+/// exactly the scalar backend's shape (bit-identical by construction).
+pub(crate) fn decode_plane_lut(
+    lut: &Lut8,
+    reg: &VecReg,
+    width: u32,
+    lanes: usize,
+    out: &mut [f64],
+) {
+    debug_assert!(lanes <= out.len() && lanes <= VecReg::lanes(width));
+    let mut bits = [0u64; 64];
+    reg.lanes_into(width, lanes, &mut bits);
+    lut.decode_slice(&bits[..lanes], &mut out[..lanes]);
+}
+
+/// `Backend::Graph`'s takum-plane `encode_slice` hook: the interpreter's
+/// store primitive — delegates to [`Lut8::encode_slice`], the
+/// per-element boundary search every other encode path is pinned
+/// against (no second copy of the search to drift).
+pub(crate) fn encode_slice_lut(lut: &Lut8, xs: &[f64], out: &mut [u64]) {
+    lut.encode_slice(xs, out);
+}
+
+// The [`Node::Fma`] / [`Node::Dot`] evaluators (and therefore
+// `Backend::Graph`'s FMA/dot plane hooks) are the *same single
+// implementation* the vector backend dispatches to — one copy of the
+// bit-identity-critical expression trees, not a re-implementation that
+// could silently diverge.
+pub(crate) use super::plane::{dot_plane, fma_plane};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::program::Instruction as I;
+    use crate::sim::{Backend, Machine};
+    use crate::util::rng::Rng;
+
+    fn add(m: &str, dst: u8, a: u8, b: u8) -> I {
+        I::new(m, Operand::Vreg(dst), vec![Operand::Vreg(a), Operand::Vreg(b)])
+    }
+
+    /// Build a program + initial machine state for lifting tests: a
+    /// softmax-tile-shaped chain (sub, mul, rndscale, fnmadd, fma,
+    /// scalef, div) over takum16 planes.
+    fn tile_chain() -> (Machine, Program) {
+        let mut m = Machine::with_backend(Backend::Scalar);
+        let t = LaneType::Takum(16);
+        let mut r = Rng::new(0x11F7);
+        let lanes = VecReg::lanes(16);
+        for reg in 0..4u8 {
+            let xs: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-6, 6)).collect();
+            m.load_f64(reg, t, &xs);
+        }
+        let mut p = Program::default();
+        p.push(add("VSUBPT16", 4, 0, 1));
+        p.push(add("VMULPT16", 5, 4, 2));
+        p.push(I::new("VRNDSCALEPT16", Operand::Vreg(6), vec![Operand::Vreg(5), Operand::Imm(0)]));
+        p.push(add("VFNMADD231PT16", 4, 6, 3));
+        p.push(add("VFMADD231PT16", 5, 4, 2));
+        p.push(add("VSCALEFPT16", 7, 5, 6));
+        p.push(add("VDIVPT16", 7, 7, 2));
+        (m, p)
+    }
+
+    /// Lift ≡ machine replay, bit for bit, from the same initial state —
+    /// the core interpreter contract (the fuzz suite widens this to
+    /// randomized programs).
+    #[test]
+    fn lifted_chain_matches_machine_replay() {
+        for mode in [CodecMode::Lut, CodecMode::Arith] {
+            let (m0, prog) = tile_chain();
+            let init = m0.regs.clone();
+            let mut mach = Machine::with_config(mode, Backend::Scalar);
+            mach.regs = init.clone();
+            mach.run(&prog).unwrap();
+
+            let mut g = Graph::lift(&prog, &init).unwrap();
+            let unopt = g.run_on(&init, mode).unwrap();
+            let stats = g.optimize();
+            assert!(stats.converts_folded > 0, "chained ops must fold converts");
+            let opt = g.run_on(&init, mode).unwrap();
+            for r in 0..NUM_VREGS {
+                assert_eq!(mach.regs.v[r], unopt.v[r], "{mode:?} v{r} (unoptimised)");
+                assert_eq!(mach.regs.v[r], opt.v[r], "{mode:?} v{r} (optimised)");
+            }
+        }
+    }
+
+    /// Masked + zeroing stores lift into Select nodes that reproduce the
+    /// machine's merge/zero semantics exactly.
+    #[test]
+    fn lifted_masked_stores_match_machine() {
+        let t = LaneType::Takum(8);
+        let lanes = VecReg::lanes(8);
+        let mut r = Rng::new(0x3E1E);
+        for zeroing in [false, true] {
+            let mut m0 = Machine::with_backend(Backend::Scalar);
+            let a: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-8, 8)).collect();
+            let b: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-8, 8)).collect();
+            m0.load_f64(0, t, &a);
+            m0.load_f64(1, t, &b);
+            m0.load_f64(2, t, &a);
+            m0.set_mask(1, 0xDEAD_BEEF_0F0F_3355);
+            let mut p = Program::default();
+            p.push(add("VMULPT8", 2, 0, 1).with_mask(1, zeroing));
+            p.push(add("VADDPT8", 3, 2, 0));
+            let init = m0.regs.clone();
+            let mut mach = Machine::with_backend(Backend::Scalar);
+            mach.regs = init.clone();
+            mach.run(&p).unwrap();
+            let mut g = Graph::lift(&p, &init).unwrap();
+            g.optimize();
+            let got = g.run_on(&init, CodecMode::Lut).unwrap();
+            for reg in [2usize, 3] {
+                assert_eq!(mach.regs.v[reg], got.v[reg], "z={zeroing} v{reg}");
+            }
+        }
+    }
+
+    /// A lifted widening dot (t8 pairs → t16 accumulator) with a
+    /// format-convert epilogue replays bit-identically, and the passes
+    /// both fire.
+    #[test]
+    fn lifted_dot_and_convert_match_machine() {
+        let t8 = LaneType::Takum(8);
+        let t16 = LaneType::Takum(16);
+        let mut r = Rng::new(0xD07A);
+        let mut m0 = Machine::with_backend(Backend::Scalar);
+        let a: Vec<f64> = (0..64).map(|_| r.wide_f64(-4, 4)).collect();
+        let b: Vec<f64> = (0..64).map(|_| r.wide_f64(-4, 4)).collect();
+        m0.load_f64(0, t8, &a);
+        m0.load_f64(1, t8, &b);
+        m0.load_f64(2, t16, &vec![0.25; 32]);
+        let mut p = Program::default();
+        p.push(add("VDPPT8PT16", 2, 0, 1));
+        p.push(add("VDPPT8PT16", 2, 0, 1));
+        p.push(I::new("VCVTPT162PT8", Operand::Vreg(3), vec![Operand::Vreg(2)]));
+        let init = m0.regs.clone();
+        let mut mach = Machine::with_backend(Backend::Scalar);
+        mach.regs = init.clone();
+        mach.run(&p).unwrap();
+        let mut g = Graph::lift(&p, &init).unwrap();
+        let before = g.len();
+        let stats = g.optimize();
+        assert!(stats.converts_folded > 0);
+        assert!(g.len() <= before);
+        let got = g.run_on(&init, CodecMode::Lut).unwrap();
+        for reg in [2usize, 3] {
+            assert_eq!(mach.regs.v[reg], got.v[reg], "v{reg}");
+        }
+    }
+
+    /// Programs outside the HLO-lite subset are rejected with a
+    /// descriptive error, not silently mis-lifted.
+    #[test]
+    fn unliftable_programs_error_descriptively() {
+        let regs = RegisterFile::default();
+        for (mn, srcs) in [
+            ("VPADDU8", vec![Operand::Vreg(0), Operand::Vreg(1)]),
+            ("VPXORQ", vec![Operand::Vreg(0), Operand::Vreg(1)]),
+            ("VRCPPT16", vec![Operand::Vreg(0)]),
+        ] {
+            let mut p = Program::default();
+            p.push(I::new(mn, Operand::Vreg(2), srcs));
+            let e = Graph::lift(&p, &regs).unwrap_err().to_string();
+            assert!(e.contains("not liftable"), "{mn}: {e:?}");
+        }
+        // Bit re-interpretation (t16 plane read back as u16 lanes).
+        let mut p = Program::default();
+        p.push(add("VADDPT16", 2, 0, 1));
+        p.push(I::new("VCVTPU162PT16", Operand::Vreg(3), vec![Operand::Vreg(2)]));
+        let e = Graph::lift(&p, &regs).unwrap_err().to_string();
+        assert!(e.contains("re-interpretation"), "{e:?}");
+    }
+
+    /// Dead-plane elimination drops unreachable chains; convert folding
+    /// never changes evaluation results (spot check on a hand graph).
+    #[test]
+    fn passes_preserve_results_and_drop_dead_planes() {
+        let t = LaneType::Takum(16);
+        let mut g = Graph::new();
+        let p0 = g.param(0);
+        let q = g.convert(p0, t);
+        let q2 = g.convert(q, t); // redundant
+        let s = g.bin(BinOp::Add, q2, q2);
+        // Dead chain: never returned.
+        let d = g.bin(BinOp::Mul, q, q);
+        let _dead = g.rndscale(d, 2);
+        let r = g.reduce(ReduceOp::Sum, s, 32);
+        g.ret(r);
+
+        let mut plane = [0.0f64; 64];
+        let mut rng = Rng::new(0x9A55);
+        for v in plane.iter_mut() {
+            *v = rng.wide_f64(-10, 10);
+        }
+        let mut scratch = Vec::new();
+        let before = g.eval_planes(&[plane], CodecMode::Lut, &mut scratch).unwrap();
+        let stats = g.optimize();
+        assert_eq!(stats.converts_folded, 1);
+        assert!(stats.dead_removed >= 2, "{stats:?}");
+        let after = g.eval_planes(&[plane], CodecMode::Lut, &mut scratch).unwrap();
+        assert_eq!(before.len(), 1);
+        for (x, y) in before[0].iter().zip(&after[0]) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // The reduce broadcast a single scalar across the plane.
+        assert!(after[0].iter().all(|v| v.to_bits() == after[0][0].to_bits()));
+    }
+
+    /// The graph hook primitives are bit-identical to the scalar lane
+    /// engine's plane forms, NaN/NaR included (the same gate the vector
+    /// backend passes in `sim/plane.rs`).
+    #[test]
+    fn hook_primitives_match_scalar_paths() {
+        use crate::num::lut;
+        let mut r = Rng::new(0x6A7);
+        for name in ["takum8", "e4m3", "e5m2"] {
+            let lut = lut::cached(name).unwrap();
+            let mut reg = VecReg::ZERO;
+            for w in 0..8 {
+                reg.words[w] = r.next_u64();
+            }
+            let mut got = [0.0f64; 64];
+            decode_plane_lut(lut, &reg, 8, 64, &mut got);
+            for i in 0..64 {
+                let want = lut.decode_bits(reg.get(8, i));
+                assert!(
+                    got[i] == want || (got[i].is_nan() && want.is_nan()),
+                    "{name} lane {i}"
+                );
+            }
+            let mut xs: Vec<f64> = (0..64).map(|_| r.wide_f64(-30, 30)).collect();
+            xs[5] = f64::NAN;
+            let mut out = vec![0u64; 64];
+            encode_slice_lut(lut, &xs, &mut out);
+            for (i, &x) in xs.iter().enumerate() {
+                assert_eq!(out[i], lut.encode_bits(x), "{name} i={i}");
+            }
+        }
+    }
+}

@@ -23,8 +23,10 @@
 //! [`Backend`]: [`Backend::Scalar`] runs the per-element loops below,
 //! [`Backend::Vector`] dispatches the whole-plane hooks
 //! ([`LaneCodec::decode_plane`] / [`LaneCodec::encode_slice`]) to the
-//! chunked/vectorised kernels of [`crate::sim::plane`] — bit-identical by
-//! construction and by test, so the backend is a pure performance knob.
+//! chunked/vectorised kernels of [`crate::sim::plane`], and
+//! [`Backend::Graph`] to the HLO-lite graph interpreter's node
+//! primitives ([`crate::sim::graph`]) — all bit-identical by construction
+//! and by test, so the backend is a pure performance/engine knob.
 //!
 //! **NaN/NaR encode contract:** every encode entry point here and in the
 //! LUT layer maps NaN to the format's error marker itself — takum NaR
@@ -34,6 +36,7 @@
 //! all-`-inf` row, `inf − inf` in an accumulator) stores as the error
 //! marker and propagates, never as an extreme finite value.
 
+use super::graph;
 use super::plane::{self, Backend};
 use super::register::VecReg;
 use crate::num::bitstring::{mask64, sign_extend};
@@ -283,6 +286,9 @@ impl LaneCodec {
             Some(t) if self.backend == Backend::Vector => {
                 plane::decode_plane_lut(t, reg, width, lanes, out);
             }
+            Some(t) if self.backend == Backend::Graph => {
+                graph::decode_plane_lut(t, reg, width, lanes, out);
+            }
             Some(t) => {
                 let mut bits = [0u64; 64];
                 reg.lanes_into(width, lanes, &mut bits);
@@ -310,6 +316,7 @@ impl LaneCodec {
             if xs.iter().all(|x| !x.is_infinite()) {
                 match self.backend {
                     Backend::Vector => plane::encode_slice_lut(t, xs, out),
+                    Backend::Graph => graph::encode_slice_lut(t, xs, out),
                     Backend::Scalar => t.encode_slice(xs, out),
                 }
                 return;
@@ -906,7 +913,7 @@ mod tests {
         let mut r = Rng::new(0xBA7C);
         for (name, ty) in lut_lane_types() {
             for mode in [CodecMode::Lut, CodecMode::Arith] {
-                for backend in [Backend::Scalar, Backend::Vector] {
+                for backend in Backend::ALL {
                     let codec = LaneCodec::resolve_with(ty, mode, backend);
                     let mut xs: Vec<f64> = (0..64).map(|_| r.wide_f64(-40, 40)).collect();
                     // Splice in specials so the takum fast path is
@@ -940,7 +947,7 @@ mod tests {
     /// format: decode of **every bit pattern** (exhaustive, i.e. the full
     /// 65536-pattern takum16/PH/PBF16 space plane by plane) and encode of
     /// a wide value distribution must agree between `Backend::Scalar`,
-    /// `Backend::Vector` and the arithmetic reference.
+    /// `Backend::Vector`, `Backend::Graph` and the arithmetic reference.
     #[test]
     fn vector_backend_planes_bit_identical_to_scalar() {
         let mut r = Rng::new(0x7EC7);
@@ -949,6 +956,7 @@ mod tests {
             let lanes = VecReg::lanes(w);
             let scalar = LaneCodec::resolve_with(ty, CodecMode::Lut, Backend::Scalar);
             let vector = LaneCodec::resolve_with(ty, CodecMode::Lut, Backend::Vector);
+            let graph = LaneCodec::resolve_with(ty, CodecMode::Lut, Backend::Graph);
             let arith = LaneCodec::resolve(ty, CodecMode::Arith);
 
             // Exhaustive decode: pack consecutive bit patterns into
@@ -963,6 +971,8 @@ mod tests {
                 scalar.decode_plane(&reg, w, lanes, &mut s);
                 let mut v = [0.0f64; 64];
                 vector.decode_plane(&reg, w, lanes, &mut v);
+                let mut g = [0.0f64; 64];
+                graph.decode_plane(&reg, w, lanes, &mut g);
                 let mut a = [0.0f64; 64];
                 arith.decode_plane(&reg, w, lanes, &mut a);
                 for i in 0..lanes {
@@ -970,6 +980,12 @@ mod tests {
                         s[i].to_bits(),
                         v[i].to_bits(),
                         "{name} decode pattern {:#x}",
+                        pattern + i as u64
+                    );
+                    assert_eq!(
+                        s[i].to_bits(),
+                        g[i].to_bits(),
+                        "{name} graph decode pattern {:#x}",
                         pattern + i as u64
                     );
                     assert!(
@@ -993,9 +1009,12 @@ mod tests {
                 scalar.encode_slice(&xs, &mut es);
                 let mut ev = vec![0u64; lanes];
                 vector.encode_slice(&xs, &mut ev);
+                let mut eg = vec![0u64; lanes];
+                graph.encode_slice(&xs, &mut eg);
                 let mut ea = vec![0u64; lanes];
                 arith.encode_slice(&xs, &mut ea);
                 assert_eq!(es, ev, "{name} encode round {round}");
+                assert_eq!(es, eg, "{name} graph encode round {round}");
                 assert_eq!(es, ea, "{name} arith encode round {round}");
             }
         }

@@ -7,18 +7,22 @@
 //! decode/encode traffic through the cached LUTs of [`crate::num::lut`] —
 //! bit-identical to the arithmetic codecs, selectable via [`CodecMode`].
 //! Orthogonally, a plane [`Backend`] ([`plane`]) selects between the
-//! per-element loops and the chunked/vectorised plane kernels (with
-//! runtime-detected AVX2 specialisations) — also bit-identical.
+//! per-element loops, the chunked/vectorised plane kernels (with
+//! runtime-detected AVX2 specialisations), and the HLO-lite graph
+//! interpreter ([`graph`], which can also lift whole recorded programs
+//! into an optimised dataflow graph) — all bit-identical.
 
 pub mod register;
 pub mod program;
 pub mod lanes;
 pub mod plane;
+pub mod graph;
 pub mod exec;
 pub mod assemble;
 
 pub use assemble::assemble;
 pub use exec::Machine;
+pub use graph::Graph;
 pub use lanes::{CodecMode, LaneCodec, LanePlan, LaneType};
 pub use plane::Backend;
 pub use program::{Instruction, Operand, Program};

@@ -29,8 +29,9 @@
 //! machine-level suites enforce it, exhaustively for the 16-bit takum
 //! decode); `Backend` selection is therefore a pure performance knob, the
 //! same contract [`crate::sim::CodecMode`] established for the LUT-vs-
-//! arithmetic axis. A future GPU/HLO backend plugs in as a third variant
-//! implementing the same three hooks.
+//! arithmetic axis. [`Backend::Graph`] (the HLO-lite graph interpreter,
+//! [`crate::sim::graph`]) fills the named third slot with the same three
+//! hooks; a future GPU backend plugs in as a fourth variant the same way.
 
 use super::lanes::{FmaKind, FmaOrder};
 use super::register::VecReg;
@@ -40,7 +41,7 @@ use anyhow::{bail, Result};
 /// Which plane implementation the lane engine dispatches to. Selected per
 /// [`crate::sim::Machine`] (alongside [`crate::sim::CodecMode`]); the
 /// default honours the `TAKUM_BACKEND` environment variable so CI can
-/// force the whole test suite through either backend.
+/// force the whole test suite through any backend.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum Backend {
     /// Per-element LUT path (the pre-refactor lane engine).
@@ -49,38 +50,58 @@ pub enum Backend {
     /// Chunked/vectorised plane kernels (this module), with `std::arch`
     /// x86 specialisations where the CPU supports them.
     Vector,
+    /// The HLO-lite graph-interpreter backend ([`crate::sim::graph`]):
+    /// plane ops execute as graph-node evaluations, and whole recorded
+    /// programs can be lifted into an optimised dataflow graph.
+    Graph,
 }
 
 impl Backend {
+    /// Every backend, in the order the CLI/CI matrix enumerates them.
+    pub const ALL: [Backend; 3] = [Backend::Scalar, Backend::Vector, Backend::Graph];
+
     pub fn name(&self) -> &'static str {
         match self {
             Backend::Scalar => "scalar",
             Backend::Vector => "vector",
+            Backend::Graph => "graph",
         }
     }
 
     pub fn parse(s: &str) -> Result<Backend> {
-        match s {
-            "scalar" => Ok(Backend::Scalar),
-            "vector" => Ok(Backend::Vector),
-            _ => bail!("unknown backend {s:?} (scalar|vector)"),
+        for b in Backend::ALL {
+            if b.name() == s {
+                return Ok(b);
+            }
         }
+        // The error enumerates every valid name from Backend::ALL, so it
+        // can never go stale when a backend is added.
+        let names: Vec<&str> = Backend::ALL.iter().map(|b| b.name()).collect();
+        bail!("unknown backend {s:?} (expected one of: {})", names.join("|"))
     }
 
-    /// Process-wide default: `TAKUM_BACKEND=scalar|vector` if set (the CI
-    /// backend-matrix hook), [`Backend::Scalar`] otherwise. Read once; a
-    /// malformed value warns and falls back to scalar rather than failing
-    /// inside `Machine::default`.
-    pub fn from_env() -> Backend {
-        use std::sync::OnceLock;
-        static CACHE: OnceLock<Backend> = OnceLock::new();
-        *CACHE.get_or_init(|| match std::env::var("TAKUM_BACKEND") {
-            Ok(v) => Backend::parse(&v).unwrap_or_else(|e| {
+    /// Resolve the value of the `TAKUM_BACKEND` environment variable
+    /// (`None` = unset): a malformed value warns and falls back to scalar
+    /// rather than failing inside `Machine::default`. Split out of
+    /// [`Backend::from_env`] so the fallback path is unit-testable
+    /// without mutating process state.
+    pub fn parse_env(var: Option<&str>) -> Backend {
+        match var {
+            Some(v) => Backend::parse(v).unwrap_or_else(|e| {
                 eprintln!("warning: TAKUM_BACKEND: {e}; using scalar");
                 Backend::Scalar
             }),
-            Err(_) => Backend::Scalar,
-        })
+            None => Backend::Scalar,
+        }
+    }
+
+    /// Process-wide default: `TAKUM_BACKEND=scalar|vector|graph` if set
+    /// (the CI backend-matrix hook), [`Backend::Scalar`] otherwise. Read
+    /// once, through [`Backend::parse_env`].
+    pub fn from_env() -> Backend {
+        use std::sync::OnceLock;
+        static CACHE: OnceLock<Backend> = OnceLock::new();
+        *CACHE.get_or_init(|| Backend::parse_env(std::env::var("TAKUM_BACKEND").ok().as_deref()))
     }
 }
 
@@ -468,8 +489,37 @@ mod tests {
     fn backend_parse_and_names() {
         assert_eq!(Backend::parse("scalar").unwrap(), Backend::Scalar);
         assert_eq!(Backend::parse("vector").unwrap(), Backend::Vector);
-        assert!(Backend::parse("gpu").is_err());
+        assert_eq!(Backend::parse("graph").unwrap(), Backend::Graph);
         assert_eq!(Backend::Vector.name(), "vector");
         assert_eq!(Backend::default(), Backend::Scalar);
+        // Round trip through name() for every variant (keeps ALL honest).
+        for b in Backend::ALL {
+            assert_eq!(Backend::parse(b.name()).unwrap(), b);
+        }
+    }
+
+    /// The parse error must enumerate every valid backend name — a stale
+    /// two-option message would send users of `--backend`/`TAKUM_BACKEND`
+    /// hunting through source for the spelling of the graph backend.
+    #[test]
+    fn backend_parse_error_enumerates_all_names() {
+        let e = Backend::parse("gpu").unwrap_err().to_string();
+        for b in Backend::ALL {
+            assert!(e.contains(b.name()), "error {e:?} does not mention {}", b.name());
+        }
+        assert!(e.contains("unknown backend \"gpu\""), "{e:?}");
+    }
+
+    /// The `TAKUM_BACKEND` fallback path: an invalid value must warn and
+    /// fall back to scalar (not panic inside `Machine::default`), unset
+    /// must default to scalar, and valid values must select their backend.
+    #[test]
+    fn backend_env_invalid_value_falls_back_to_scalar() {
+        assert_eq!(Backend::parse_env(None), Backend::Scalar);
+        assert_eq!(Backend::parse_env(Some("banana")), Backend::Scalar);
+        assert_eq!(Backend::parse_env(Some("")), Backend::Scalar);
+        for b in Backend::ALL {
+            assert_eq!(Backend::parse_env(Some(b.name())), b);
+        }
     }
 }

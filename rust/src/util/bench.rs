@@ -10,6 +10,9 @@ use std::time::{Duration, Instant};
 #[derive(Debug, Clone)]
 pub struct Measurement {
     pub name: String,
+    /// The group header active when the measurement was taken (the JSON
+    /// emitter keys per-backend comparisons on it).
+    pub group: String,
     pub iters: u64,
     pub median_ns: f64,
     pub mean_ns: f64,
@@ -128,6 +131,7 @@ impl Bencher {
             / per_iter.len() as f64;
         let m = Measurement {
             name: name.to_string(),
+            group: self.group.clone(),
             iters: batch * self.samples as u64,
             median_ns: median,
             mean_ns: mean,
@@ -153,6 +157,55 @@ impl Bencher {
     pub fn results(&self) -> &[Measurement] {
         &self.results
     }
+
+    /// Serialise every measurement as a machine-readable JSON document
+    /// (hand-rolled — the offline image has no `serde`). The schema is
+    /// flat and stable so perf-trajectory tooling can diff runs:
+    /// `{bench, results: [{group, name, median_ns, mean_ns, stddev_ns,
+    /// iters, elements, throughput_elem_per_s}]}`.
+    pub fn json(&self, bench: &str) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"bench\": \"{}\",\n", esc(bench)));
+        out.push_str("  \"results\": [\n");
+        for (i, m) in self.results.iter().enumerate() {
+            let elements = m
+                .elements
+                .map(|e| e.to_string())
+                .unwrap_or_else(|| "null".to_string());
+            let throughput = m
+                .throughput()
+                .map(|t| format!("{t:.1}"))
+                .unwrap_or_else(|| "null".to_string());
+            out.push_str(&format!(
+                "    {{\"group\": \"{}\", \"name\": \"{}\", \"median_ns\": {:.1}, \
+                 \"mean_ns\": {:.1}, \"stddev_ns\": {:.1}, \"iters\": {}, \
+                 \"elements\": {}, \"throughput_elem_per_s\": {}}}{}\n",
+                esc(&m.group),
+                esc(&m.name),
+                m.median_ns,
+                m.mean_ns,
+                m.stddev_ns,
+                m.iters,
+                elements,
+                throughput,
+                if i + 1 < self.results.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write [`Bencher::json`] to `path`, reporting where it went (the
+    /// benches call this last so the file reflects the full run).
+    pub fn write_json(&self, bench: &str, path: &str) -> std::io::Result<()> {
+        std::fs::write(path, self.json(bench))?;
+        println!("\nwrote {} measurements to {path}", self.results.len());
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -174,5 +227,27 @@ mod tests {
         assert!(fmt_ns(10_000.0).contains("µs"));
         assert!(fmt_ns(10_000_000.0).contains("ms"));
         assert!(fmt_ns(10_000_000_000.0).contains(" s"));
+    }
+
+    /// The JSON emitter produces one record per measurement with the
+    /// group header attached, quotes escaped, and null throughput when
+    /// no element count was given.
+    #[test]
+    fn json_schema_is_stable() {
+        std::env::set_var("TAKUM_BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        b.group("g \"one\"");
+        b.bench_with_elements("with-elems", 64, || std::hint::black_box(1u64 + 1));
+        b.bench("no-elems", || std::hint::black_box(2u64 * 3));
+        let j = b.json("unit");
+        assert!(j.contains("\"bench\": \"unit\""), "{j}");
+        assert!(j.contains("\"group\": \"g \\\"one\\\"\""), "{j}");
+        assert!(j.contains("\"name\": \"with-elems\""), "{j}");
+        assert!(j.contains("\"elements\": 64"), "{j}");
+        assert!(j.contains("\"elements\": null"), "{j}");
+        assert!(j.contains("\"throughput_elem_per_s\": null"), "{j}");
+        // Two records, comma-separated (valid JSON shape).
+        assert_eq!(j.matches("\"median_ns\"").count(), 2);
+        assert!(j.trim_end().ends_with('}'));
     }
 }

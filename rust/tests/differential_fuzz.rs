@@ -1,0 +1,411 @@
+//! Cross-backend differential fuzz suite: seeded random mixed-format
+//! kernel programs executed across `Backend::{Scalar, Vector, Graph}` ×
+//! `CodecMode::{Lut, Arith}` must leave **bit-identical** architectural
+//! state (all 32 vector registers and all 8 mask registers), and the
+//! HLO-lite graph interpreter (`Graph::lift` → `optimize` → `run_on`)
+//! must reproduce the machine replay of every liftable program exactly.
+//!
+//! The program generator is a plain LCG (no external deps, no shared
+//! `Rng` state): every test derives everything — instruction sequence,
+//! operand registers, lane values (including NaN/±inf payload lanes),
+//! write masks, zeroing flags — from one `u64` seed. The seed set is
+//! fixed, so CI failures are reproducible by construction; on mismatch
+//! the failing seed is printed so it can be pinned into `SEEDS` as a
+//! regression.
+
+use takum_avx10::kernels::run_suite_with;
+use takum_avx10::num::{BF16, E4M3, E5M2, F16, F32};
+use takum_avx10::sim::{
+    Backend, CodecMode, Graph, Instruction, LaneType, Machine, Operand, Program, VecReg,
+};
+
+/// The fixed fuzz corpus: 32 seeds for each tier (the acceptance floor).
+/// To reproduce a CI failure locally, the failing seed is printed in the
+/// panic message — add it here to pin it.
+const SEEDS: [u64; 32] = [
+    0x0001, 0x0002, 0x0003, 0x0004, 0x0005, 0x0006, 0x0007, 0x0008, 0x1009, 0x100A, 0x100B,
+    0x100C, 0x100D, 0x100E, 0x100F, 0x1010, 0x2BAD, 0x2BEE, 0x2C0D, 0x2CAB, 0x3D05, 0x3E11,
+    0x3F22, 0x4A40, 0x5B55, 0x6C66, 0x7D77, 0x8E88, 0x9F99, 0xAAAA, 0xBEEF, 0xCAFE,
+];
+
+// ---------------------------------------------------------------------------
+// LCG + generator
+// ---------------------------------------------------------------------------
+
+/// Knuth's MMIX LCG; draws use the high 32 bits (the low bits of an LCG
+/// cycle with short periods).
+struct Lcg(u64);
+
+impl Lcg {
+    fn new(seed: u64) -> Lcg {
+        // One warm-up step so small seeds diverge immediately.
+        let mut l = Lcg(seed ^ 0x5DEE_CE66_D1CE_4E5B);
+        l.next32();
+        l
+    }
+
+    fn next32(&mut self) -> u32 {
+        self.0 = self
+            .0
+            .wrapping_mul(6_364_136_223_846_793_005)
+            .wrapping_add(1_442_695_040_888_963_407);
+        (self.0 >> 32) as u32
+    }
+
+    /// Uniform in `[0, n)`.
+    fn below(&mut self, n: u32) -> u32 {
+        ((self.next32() as u64 * n as u64) >> 32) as u32
+    }
+
+    fn coin(&mut self, num: u32, den: u32) -> bool {
+        self.below(den) < num
+    }
+
+    /// A lane value: mostly finite (mantissa in [1,2) × 2^e, e ∈
+    /// [-20, 20], sign-symmetric), with occasional NaN/±inf/±0 payloads.
+    fn lane(&mut self) -> f64 {
+        if self.coin(1, 12) {
+            return match self.below(5) {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                2 => f64::NEG_INFINITY,
+                3 => 0.0,
+                _ => -0.0,
+            };
+        }
+        let mant = 1.0 + self.next32() as f64 / (1u64 << 32) as f64;
+        let e = self.below(41) as i32 - 20;
+        let sign = if self.coin(1, 2) { -1.0 } else { 1.0 };
+        sign * mant * (e as f64).exp2()
+    }
+}
+
+/// The 6 lane formats of the suite, by arithmetic-mnemonic suffix.
+const FORMATS: [(&str, LaneType); 6] = [
+    ("PT8", LaneType::Takum(8)),
+    ("PT16", LaneType::Takum(16)),
+    ("HF8", LaneType::Mini(E4M3)),
+    ("BF8", LaneType::Mini(E5M2)),
+    ("PH", LaneType::Mini(F16)),
+    ("NEPBF16", LaneType::Mini(BF16)),
+];
+
+/// A generated test case: initial loads + mask values + the program.
+struct Case {
+    loads: Vec<(u8, LaneType, Vec<f64>)>,
+    masks: [(u8, u64); 3],
+    prog: Program,
+}
+
+impl Case {
+    /// Build a fresh machine in the given config with the case's initial
+    /// state installed.
+    fn machine(&self, mode: CodecMode, backend: Backend) -> Machine {
+        let mut m = Machine::with_config(mode, backend);
+        for (reg, ty, vals) in &self.loads {
+            m.load_f64(*reg, *ty, vals);
+        }
+        for (k, bits) in self.masks {
+            m.set_mask(k, bits);
+        }
+        m
+    }
+}
+
+/// Generate a random mixed-format program. `liftable_only` restricts the
+/// vocabulary to the HLO-lite fp dataflow subset (`Graph::lift`'s
+/// domain): no compares (they write mask registers) and type-consistent
+/// register reuse; the full tier additionally emits compares and
+/// type-punning reads to stress the raw decode paths.
+fn generate(seed: u64, liftable_only: bool) -> Case {
+    let mut r = Lcg::new(seed);
+    let (sfx, ty) = FORMATS[r.below(6) as usize];
+    let lanes = VecReg::lanes(ty.width());
+
+    // Initial state: registers 0..6 hold random planes of the primary
+    // format (NaN/inf lanes included).
+    let mut loads = Vec::new();
+    let mut reg_ty: [Option<LaneType>; 16] = [None; 16];
+    for reg in 0u8..6 {
+        let vals: Vec<f64> = (0..lanes).map(|_| r.lane()).collect();
+        loads.push((reg, ty, vals));
+        reg_ty[reg as usize] = Some(ty);
+    }
+    let masks = [
+        (1u8, ((r.next32() as u64) << 32) | r.next32() as u64),
+        (2u8, ((r.next32() as u64) << 32) | r.next32() as u64),
+        (3u8, u64::MAX), // one dense mask so merging stays exercised
+    ];
+
+    // Register picks: `pick` returns a register safe for the lifter
+    // (holds `want` or is untouched). Type-introducing arms must check
+    // `has_slot` first: with 16 registers and up to 8 live types, a
+    // freshly drawn destination type can otherwise have no candidate
+    // left (seed 0xBEEF used to reach exactly that and panic).
+    let has_slot = |reg_ty: &[Option<LaneType>; 16], want: LaneType| -> bool {
+        reg_ty.iter().any(|t| t.is_none() || *t == Some(want))
+    };
+    let pick = |r: &mut Lcg, reg_ty: &[Option<LaneType>; 16], want: LaneType| -> u8 {
+        let candidates: Vec<u8> = (0u8..16)
+            .filter(|&i| reg_ty[i as usize].is_none() || reg_ty[i as usize] == Some(want))
+            .collect();
+        assert!(!candidates.is_empty(), "no register slot for {want:?}");
+        candidates[r.below(candidates.len() as u32) as usize]
+    };
+
+    let mut prog = Program::default();
+    let n_ins = 8 + r.below(17);
+    for _ in 0..n_ins {
+        let masked = r.coin(1, 3);
+        let mask = if masked { 1 + r.below(3) as u8 } else { 0 };
+        let zeroing = masked && r.coin(1, 2);
+        let with_mask = |ins: Instruction| -> Instruction {
+            if masked {
+                ins.with_mask(mask, zeroing)
+            } else {
+                ins
+            }
+        };
+        // Liftable tier: arms 0..=8 (arithmetic, converts, dots). Full
+        // tier adds arm 9 (compares + type-punned reads).
+        let kind_space = if liftable_only { 9 } else { 10 };
+        match r.below(kind_space) {
+            // Packed binary arithmetic in the primary format.
+            0..=3 => {
+                let op = ["VADD", "VSUB", "VMUL", "VDIV", "VMIN", "VMAX"]
+                    [r.below(6) as usize];
+                let (a, b) = (pick(&mut r, &reg_ty, ty), pick(&mut r, &reg_ty, ty));
+                let dst = pick(&mut r, &reg_ty, ty);
+                prog.push(with_mask(Instruction::new(
+                    &format!("{op}{sfx}"),
+                    Operand::Vreg(dst),
+                    vec![Operand::Vreg(a), Operand::Vreg(b)],
+                )));
+                reg_ty[dst as usize] = Some(ty);
+            }
+            // FMA family (reads dst as the third operand).
+            4..=5 => {
+                let mn = ["VFMADD", "VFMSUB", "VFNMADD", "VFNMSUB"][r.below(4) as usize];
+                let ord = ["132", "213", "231"][r.below(3) as usize];
+                let (a, b) = (pick(&mut r, &reg_ty, ty), pick(&mut r, &reg_ty, ty));
+                let dst = pick(&mut r, &reg_ty, ty);
+                prog.push(with_mask(Instruction::new(
+                    &format!("{mn}{ord}{sfx}"),
+                    Operand::Vreg(dst),
+                    vec![Operand::Vreg(a), Operand::Vreg(b)],
+                )));
+                reg_ty[dst as usize] = Some(ty);
+            }
+            // VRNDSCALE with a random fixed-point scale.
+            6 => {
+                let a = pick(&mut r, &reg_ty, ty);
+                let dst = pick(&mut r, &reg_ty, ty);
+                prog.push(with_mask(Instruction::new(
+                    &format!("VRNDSCALE{sfx}"),
+                    Operand::Vreg(dst),
+                    vec![Operand::Vreg(a), Operand::Imm((r.below(4) as i64) << 4)],
+                )));
+                reg_ty[dst as usize] = Some(ty);
+            }
+            // Cross-format convert (the mixed-format requirement). Falls
+            // back to a same-type convert when no register slot is left
+            // for the drawn destination type (the primary type always
+            // has slots: its six initial registers never retype).
+            7 => {
+                let (mut dsfx, mut dty) = FORMATS[r.below(6) as usize];
+                if !has_slot(&reg_ty, dty) {
+                    (dsfx, dty) = (sfx, ty);
+                }
+                let a = pick(&mut r, &reg_ty, ty);
+                let dst = pick(&mut r, &reg_ty, dty);
+                prog.push(with_mask(Instruction::new(
+                    &format!("VCVT{sfx}2{dsfx}"),
+                    Operand::Vreg(dst),
+                    vec![Operand::Vreg(a)],
+                )));
+                reg_ty[dst as usize] = Some(dty);
+            }
+            // Widening dot product into a dedicated wide accumulator.
+            8 => {
+                let dp_wide: Option<(&str, LaneType)> = match ty {
+                    LaneType::Takum(8) => Some(("VDPPT8PT16", LaneType::Takum(16))),
+                    LaneType::Takum(16) => Some(("VDPPT16PT32", LaneType::Takum(32))),
+                    LaneType::Mini(s) if s == BF16 => Some(("VDPBF16PS", LaneType::Mini(F32))),
+                    LaneType::Mini(s) if s == F16 => Some(("VDPPHPS", LaneType::Mini(F32))),
+                    // OFP8 has no dp.
+                    _ => None,
+                };
+                match dp_wide {
+                    // Only when a register slot remains for the wide
+                    // accumulator type (see `has_slot`).
+                    Some((dp, wide)) if has_slot(&reg_ty, wide) => {
+                        let (a, b) = (pick(&mut r, &reg_ty, ty), pick(&mut r, &reg_ty, ty));
+                        let dst = pick(&mut r, &reg_ty, wide);
+                        prog.push(with_mask(Instruction::new(
+                            dp,
+                            Operand::Vreg(dst),
+                            vec![Operand::Vreg(a), Operand::Vreg(b)],
+                        )));
+                        reg_ty[dst as usize] = Some(wide);
+                    }
+                    // Fall back to a compare-free binary in the primary
+                    // format.
+                    _ => {
+                        let (a, b) = (pick(&mut r, &reg_ty, ty), pick(&mut r, &reg_ty, ty));
+                        let dst = pick(&mut r, &reg_ty, ty);
+                        prog.push(with_mask(Instruction::new(
+                            &format!("VMUL{sfx}"),
+                            Operand::Vreg(dst),
+                            vec![Operand::Vreg(a), Operand::Vreg(b)],
+                        )));
+                        reg_ty[dst as usize] = Some(ty);
+                    }
+                }
+            }
+            // Full tier only: compares (write k4..k7) and a type-punned
+            // read (decode arbitrary bit patterns as the primary format).
+            9 => {
+                if r.coin(1, 2) {
+                    let pred = [0i64, 1, 2, 4, 5, 6][r.below(6) as usize];
+                    let (a, b) = (r.below(16) as u8, r.below(16) as u8);
+                    prog.push(Instruction::new(
+                        &format!("VCMP{sfx}"),
+                        Operand::Kreg(4 + r.below(4) as u8),
+                        vec![Operand::Vreg(a), Operand::Vreg(b), Operand::Imm(pred)],
+                    ));
+                } else {
+                    // Read whatever bits happen to live in any register.
+                    let (a, b) = (r.below(16) as u8, r.below(16) as u8);
+                    let dst = r.below(16) as u8;
+                    prog.push(with_mask(Instruction::new(
+                        &format!("VADD{sfx}"),
+                        Operand::Vreg(dst),
+                        vec![Operand::Vreg(a), Operand::Vreg(b)],
+                    )));
+                    reg_ty[dst as usize] = Some(ty);
+                }
+            }
+            _ => unreachable!(),
+        }
+    }
+    Case { loads, masks, prog }
+}
+
+/// Every (mode, backend) config the suite crosses.
+const CONFIGS: [(CodecMode, Backend); 6] = [
+    (CodecMode::Lut, Backend::Scalar),
+    (CodecMode::Lut, Backend::Vector),
+    (CodecMode::Lut, Backend::Graph),
+    (CodecMode::Arith, Backend::Scalar),
+    (CodecMode::Arith, Backend::Vector),
+    (CodecMode::Arith, Backend::Graph),
+];
+
+// ---------------------------------------------------------------------------
+// Tests
+// ---------------------------------------------------------------------------
+
+/// The headline differential gate: for every seed, every backend × codec
+/// mode leaves bit-identical register planes and mask registers.
+#[test]
+fn cross_backend_bit_identity_on_random_programs() {
+    for &seed in &SEEDS {
+        let case = generate(seed, false);
+        let mut reference = case.machine(CodecMode::Lut, Backend::Scalar);
+        reference
+            .run(&case.prog)
+            .unwrap_or_else(|e| panic!("seed={seed:#x}: reference run failed: {e}"));
+        for (mode, backend) in CONFIGS {
+            let mut m = case.machine(mode, backend);
+            m.run(&case.prog)
+                .unwrap_or_else(|e| panic!("seed={seed:#x} {mode:?}/{backend:?}: {e}"));
+            for reg in 0..32 {
+                assert_eq!(
+                    reference.regs.v[reg], m.regs.v[reg],
+                    "DIFFERENTIAL MISMATCH seed={seed:#x} {mode:?}/{backend:?} v{reg} \
+                     (pin this seed in SEEDS to reproduce)"
+                );
+            }
+            for k in 0..8 {
+                assert_eq!(
+                    reference.regs.k[k], m.regs.k[k],
+                    "DIFFERENTIAL MISMATCH seed={seed:#x} {mode:?}/{backend:?} k{k}"
+                );
+            }
+            assert_eq!(reference.executed, m.executed, "seed={seed:#x}");
+        }
+    }
+}
+
+/// The graph-interpreter gate: lifting a liftable program and evaluating
+/// the optimised graph must equal the machine replay bit for bit, in
+/// both codec modes (and the passes must actually fire over the corpus).
+#[test]
+fn lifted_interpreter_matches_machine_replay() {
+    let mut total_folded = 0usize;
+    let mut total_dead = 0usize;
+    for &seed in &SEEDS {
+        let case = generate(seed, true);
+        let init = case.machine(CodecMode::Lut, Backend::Scalar).regs.clone();
+        let mut graph = Graph::lift(&case.prog, &init)
+            .unwrap_or_else(|e| panic!("seed={seed:#x}: lift failed: {e}"));
+        let stats = graph.optimize();
+        total_folded += stats.converts_folded;
+        total_dead += stats.dead_removed;
+        for mode in [CodecMode::Lut, CodecMode::Arith] {
+            let mut mach = Machine::with_config(mode, Backend::Scalar);
+            mach.regs = init.clone();
+            mach.run(&case.prog)
+                .unwrap_or_else(|e| panic!("seed={seed:#x} {mode:?}: replay failed: {e}"));
+            let got = graph
+                .run_on(&init, mode)
+                .unwrap_or_else(|e| panic!("seed={seed:#x} {mode:?}: graph eval failed: {e}"));
+            for reg in 0..32 {
+                assert_eq!(
+                    mach.regs.v[reg], got.v[reg],
+                    "GRAPH MISMATCH seed={seed:#x} {mode:?} v{reg} \
+                     (pin this seed in SEEDS to reproduce)"
+                );
+            }
+        }
+    }
+    // The corpus must exercise the passes, not tiptoe around them.
+    assert!(total_folded > 0, "no convert pairs folded across the corpus");
+    assert!(total_dead > 0, "no dead planes eliminated across the corpus");
+}
+
+/// Suite-metrics differential: the kernel suite's metrics (relative
+/// error bit patterns, executed/dp/convert counts, full mnemonic
+/// histograms) are byte-identical across all three backends × both codec
+/// modes at n = 64.
+#[test]
+fn suite_metrics_byte_identical_across_backends_and_modes() {
+    const SUITE_SEED: u64 = 0xF077;
+    let reference = run_suite_with(64, SUITE_SEED, CodecMode::Lut, Backend::Scalar).unwrap();
+    for (mode, backend) in CONFIGS {
+        let got = run_suite_with(64, SUITE_SEED, mode, backend).unwrap();
+        assert_eq!(reference.len(), got.len());
+        for (a, b) in reference.iter().zip(&got) {
+            assert_eq!((&a.kernel, &a.format, a.n), (&b.kernel, &b.format, b.n));
+            assert_eq!(
+                a.rel_error.to_bits(),
+                b.rel_error.to_bits(),
+                "{}/{} {mode:?}/{backend:?}",
+                a.kernel,
+                a.format
+            );
+            assert_eq!(a.executed, b.executed, "{}/{} {mode:?}/{backend:?}", a.kernel, a.format);
+            assert_eq!(
+                a.dp_instructions, b.dp_instructions,
+                "{}/{} {mode:?}/{backend:?}",
+                a.kernel, a.format
+            );
+            assert_eq!(
+                a.convert_instructions, b.convert_instructions,
+                "{}/{} {mode:?}/{backend:?}",
+                a.kernel, a.format
+            );
+            assert_eq!(a.counts, b.counts, "{}/{} {mode:?}/{backend:?}", a.kernel, a.format);
+        }
+    }
+}

@@ -156,49 +156,63 @@ fn kernel_sweep_deterministic_and_matches_suite() {
 
 /// The plane-backend acceptance pin: the whole suite — every kernel ×
 /// every format, both ISAs — must be **byte-identical** across
-/// `Backend::Scalar` and `Backend::Vector` at n ∈ {64, 128}: same
-/// `rel_error` bit patterns, same executed/dp/convert counts, same
-/// per-mnemonic histograms. In combination with `CodecMode::Arith`
-/// (pinned against the LUT engine by the earlier tests), this closes the
-/// triangle Vector ≡ Scalar ≡ Arith.
+/// `Backend::Scalar`, `Backend::Vector` and `Backend::Graph` at
+/// n ∈ {64, 128}: same `rel_error` bit patterns, same
+/// executed/dp/convert counts, same per-mnemonic histograms. In
+/// combination with `CodecMode::Arith` (pinned against the LUT engine by
+/// the earlier tests), this closes the square
+/// Graph ≡ Vector ≡ Scalar ≡ Arith.
 #[test]
 fn suite_byte_identical_across_backends() {
     for n in [64usize, 128] {
         let scalar = run_suite_with(n, 0xBAC0, CodecMode::default(), Backend::Scalar).unwrap();
-        let vector = run_suite_with(n, 0xBAC0, CodecMode::default(), Backend::Vector).unwrap();
-        assert_eq!(scalar.len(), vector.len());
-        for (s, v) in scalar.iter().zip(&vector) {
-            assert_eq!((&s.kernel, &s.format, s.n), (&v.kernel, &v.format, v.n));
-            assert_eq!(
-                s.rel_error.to_bits(),
-                v.rel_error.to_bits(),
-                "{}/{} n={n}: rel_error {} vs {}",
-                s.kernel,
-                s.format,
-                s.rel_error,
-                v.rel_error
-            );
-            assert_eq!(s.executed, v.executed, "{}/{} n={n}", s.kernel, s.format);
-            assert_eq!(s.dp_instructions, v.dp_instructions, "{}/{} n={n}", s.kernel, s.format);
-            assert_eq!(
-                s.convert_instructions, v.convert_instructions,
-                "{}/{} n={n}",
-                s.kernel, s.format
-            );
-            assert_eq!(s.counts, v.counts, "{}/{} n={n}", s.kernel, s.format);
+        for backend in [Backend::Vector, Backend::Graph] {
+            let other = run_suite_with(n, 0xBAC0, CodecMode::default(), backend).unwrap();
+            assert_eq!(scalar.len(), other.len());
+            for (s, v) in scalar.iter().zip(&other) {
+                assert_eq!((&s.kernel, &s.format, s.n), (&v.kernel, &v.format, v.n));
+                assert_eq!(
+                    s.rel_error.to_bits(),
+                    v.rel_error.to_bits(),
+                    "{}/{} n={n} {backend:?}: rel_error {} vs {}",
+                    s.kernel,
+                    s.format,
+                    s.rel_error,
+                    v.rel_error
+                );
+                assert_eq!(s.executed, v.executed, "{}/{} n={n} {backend:?}", s.kernel, s.format);
+                assert_eq!(
+                    s.dp_instructions, v.dp_instructions,
+                    "{}/{} n={n} {backend:?}",
+                    s.kernel, s.format
+                );
+                assert_eq!(
+                    s.convert_instructions, v.convert_instructions,
+                    "{}/{} n={n} {backend:?}",
+                    s.kernel, s.format
+                );
+                assert_eq!(s.counts, v.counts, "{}/{} n={n} {backend:?}", s.kernel, s.format);
+            }
         }
     }
-    // GEMM through the same gate (both codec modes on the vector backend).
+    // GEMM through the same gate (both codec modes on the non-scalar
+    // backends).
     use takum_avx10::harness::gemm::gemm_with_config;
     for f in ["t8", "t16", "bf16", "e4m3"] {
         for n in [64usize, 128] {
             let s = gemm_with_config(n, f, 7, 1.0, CodecMode::default(), Backend::Scalar).unwrap();
-            let v = gemm_with_config(n, f, 7, 1.0, CodecMode::default(), Backend::Vector).unwrap();
-            let a = gemm_with_config(n, f, 7, 1.0, CodecMode::Arith, Backend::Vector).unwrap();
-            assert_eq!(s.rel_error.to_bits(), v.rel_error.to_bits(), "{f} n={n}");
-            assert_eq!(s.rel_error.to_bits(), a.rel_error.to_bits(), "{f} n={n} arith");
-            assert_eq!(s.executed, v.executed, "{f} n={n}");
-            assert_eq!(s.executed, a.executed, "{f} n={n} arith");
+            for backend in [Backend::Vector, Backend::Graph] {
+                let v = gemm_with_config(n, f, 7, 1.0, CodecMode::default(), backend).unwrap();
+                let a = gemm_with_config(n, f, 7, 1.0, CodecMode::Arith, backend).unwrap();
+                assert_eq!(s.rel_error.to_bits(), v.rel_error.to_bits(), "{f} n={n} {backend:?}");
+                assert_eq!(
+                    s.rel_error.to_bits(),
+                    a.rel_error.to_bits(),
+                    "{f} n={n} {backend:?} arith"
+                );
+                assert_eq!(s.executed, v.executed, "{f} n={n} {backend:?}");
+                assert_eq!(s.executed, a.executed, "{f} n={n} {backend:?} arith");
+            }
         }
     }
 }
