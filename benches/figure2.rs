@@ -6,6 +6,7 @@
 //! (default uses a 300-matrix slice to keep bench wall time sane).
 
 use takum_avx10::coordinator::{sweep, SweepConfig};
+use takum_avx10::engine::EngineConfig;
 use takum_avx10::harness::figure2::{render_panel, run_panel};
 use takum_avx10::matrix::generator::CollectionSpec;
 use takum_avx10::util::bench::Bencher;
@@ -27,13 +28,17 @@ fn main() {
             run_panel(spec, bits)
         });
     }
-    let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+    let eng = EngineConfig::from_env().build().expect("engine");
+    let workers = eng.workers();
     for bits in [8u32, 16, 32] {
-        let cfg = SweepConfig { spec, bits, workers, ..Default::default() };
+        let cfg = SweepConfig { spec, bits, ..Default::default() };
         b.bench_with_elements(
             &format!("coordinator panel, {bits}-bit, {workers} workers"),
             count as u64,
-            || sweep(&cfg, None).unwrap(),
+            || sweep(&cfg, &eng, None).unwrap(),
         );
     }
+
+    b.write_json("figure2", &eng.tag(), "BENCH_figure2.json")
+        .expect("writing BENCH_figure2.json");
 }

@@ -2,8 +2,9 @@
 //! AVX10.2 baselines, and — when artifacts are present — the AOT-compiled
 //! Pallas quantised-GEMM kernel through PJRT.
 
-use takum_avx10::harness::gemm::{gemm, gemm_with_mode};
-use takum_avx10::runtime::{default_artifact_dir, PjrtService, TensorF64};
+use takum_avx10::engine::EngineConfig;
+use takum_avx10::harness::gemm::gemm;
+use takum_avx10::runtime::TensorF64;
 use takum_avx10::sim::CodecMode;
 use takum_avx10::util::bench::Bencher;
 use takum_avx10::util::rng::Rng;
@@ -12,24 +13,27 @@ fn main() {
     let mut b = Bencher::new();
     let n = 32usize;
 
-    // Warm the LUTs outside the measured region.
-    takum_avx10::num::lut::warm();
+    // The env-default execution context (building it warms the LUTs
+    // outside the measured region).
+    let eng = EngineConfig::from_env().build().expect("engine");
 
     b.group(&format!("simulated quantised GEMM, n={n} (instruction-accurate)"));
     for f in ["t8", "t16", "bf16", "f16", "e4m3", "e5m2"] {
-        let r = gemm(n, f, 1, 1.0).unwrap();
+        let r = gemm(&eng, n, f, 1, 1.0).unwrap();
         println!(
             "  {f:<6} rel.err={:.3e}  instructions={} (dp={}, cvt={})",
             r.rel_error, r.executed, r.dp_instructions, r.convert_instructions
         );
         b.bench_with_elements(&format!("gemm {f}"), (n * n) as u64, || {
-            gemm(n, f, 1, 1.0).unwrap()
+            gemm(&eng, n, f, 1, 1.0).unwrap()
         });
     }
 
     b.group(&format!(
         "lane engine vs per-lane arithmetic path (end-to-end GEMM, n={n})"
     ));
+    let lut_eng = EngineConfig::from_env().codec(CodecMode::Lut).build().expect("engine");
+    let arith_eng = EngineConfig::from_env().codec(CodecMode::Arith).build().expect("engine");
     let mut ratios: Vec<(&str, f64)> = Vec::new();
     for f in ["t8", "t16", "bf16", "e4m3"] {
         // Results are bit-identical across modes (asserted by the
@@ -37,12 +41,12 @@ fn main() {
         // wall time differs.
         let fast = b
             .bench_with_elements(&format!("gemm {f} [lut]"), (n * n) as u64, || {
-                gemm_with_mode(n, f, 1, 1.0, CodecMode::Lut).unwrap()
+                gemm(&lut_eng, n, f, 1, 1.0).unwrap()
             })
             .median_ns;
         let slow = b
             .bench_with_elements(&format!("gemm {f} [arith]"), (n * n) as u64, || {
-                gemm_with_mode(n, f, 1, 1.0, CodecMode::Arith).unwrap()
+                gemm(&arith_eng, n, f, 1, 1.0).unwrap()
             })
             .median_ns;
         ratios.push((f, slow / fast));
@@ -52,12 +56,12 @@ fn main() {
         println!("gemm {f:<6} {ratio:>6.2}x");
     }
 
-    match PjrtService::start(&default_artifact_dir()) {
-        Ok(service) => {
+    match eng.pjrt() {
+        Ok(h) => {
             // AOT Pallas via PJRT when the `pjrt` feature is on; the
-            // in-tree graph-interpreter fallback otherwise.
+            // in-tree graph-interpreter fallback otherwise — served by
+            // the engine-owned runtime either way.
             b.group("runtime quant_gemm_t8 artifact (128×128)");
-            let h = service.handle();
             let dim = 128usize;
             let mut rng = Rng::new(2);
             let a: Vec<f64> = (0..dim * dim).map(|_| rng.log_normal(0.0, 1.0)).collect();
@@ -83,4 +87,7 @@ fn main() {
         }
         Err(e) => eprintln!("(skipping PJRT benches: {e:#})"),
     }
+
+    b.write_json("gemm_e2e", &eng.tag(), "BENCH_gemm_e2e.json")
+        .expect("writing BENCH_gemm_e2e.json");
 }

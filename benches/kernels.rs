@@ -2,7 +2,8 @@
 //! both ISAs, the LUT-vs-arithmetic lane-engine ratio on the heaviest
 //! kernel, and the parallel-sweep scaling of the coordinator.
 
-use takum_avx10::coordinator::{kernel_sweep, KernelSweepConfig};
+use takum_avx10::coordinator::KernelSweep;
+use takum_avx10::engine::{EngineConfig, Job};
 use takum_avx10::kernels::{Kernel, KernelSpec, Pipeline};
 use takum_avx10::sim::{Backend, CodecMode};
 use takum_avx10::util::bench::Bencher;
@@ -11,36 +12,39 @@ fn main() {
     let mut b = Bencher::new();
     let n = 128usize;
 
-    // Warm the LUTs outside the measured region.
-    takum_avx10::num::lut::warm();
+    // The env-default execution context: building it warms the LUTs
+    // outside the measured region, and its tag is stamped into the JSON.
+    let eng = EngineConfig::from_env().build().expect("engine");
 
     for kernel in Kernel::ALL {
         b.group(&format!("kernel {} (n={n}, instruction-accurate)", kernel.name()));
         for format in Pipeline::ALL_FORMATS {
             let spec = KernelSpec { kernel, format, n, seed: 1 };
-            let r = spec.run(CodecMode::default()).unwrap();
+            let r = spec.run(&eng).unwrap();
             println!(
                 "  {format:<6} rel.err={:.3e}  instructions={} (dp={}, cvt={})",
                 r.rel_error, r.executed, r.dp_instructions, r.convert_instructions
             );
             b.bench_with_elements(&format!("{} {format}", kernel.name()), n as u64, || {
-                spec.run(CodecMode::default()).unwrap()
+                spec.run(&eng).unwrap()
             });
         }
     }
 
     b.group(&format!("softmax lane engine: LUT vs per-lane arithmetic (n={n})"));
+    let lut_eng = EngineConfig::from_env().codec(CodecMode::Lut).build().expect("engine");
+    let arith_eng = EngineConfig::from_env().codec(CodecMode::Arith).build().expect("engine");
     let mut ratios: Vec<(&str, f64)> = Vec::new();
     for format in ["t8", "t16", "bf16", "e4m3"] {
         let spec = KernelSpec { kernel: Kernel::Softmax, format, n, seed: 1 };
         let fast = b
             .bench_with_elements(&format!("softmax {format} [lut]"), n as u64, || {
-                spec.run(CodecMode::Lut).unwrap()
+                spec.run(&lut_eng).unwrap()
             })
             .median_ns;
         let slow = b
             .bench_with_elements(&format!("softmax {format} [arith]"), n as u64, || {
-                spec.run(CodecMode::Arith).unwrap()
+                spec.run(&arith_eng).unwrap()
             })
             .median_ns;
         ratios.push((format, slow / fast));
@@ -58,17 +62,24 @@ fn main() {
     // three backends are timed so BENCH_kernels.json carries the full
     // per-backend trajectory.
     b.group(&format!("kernel plane backends: per-backend timings (n={n})"));
+    let backend_engines: Vec<_> = Backend::ALL
+        .iter()
+        .map(|&backend| {
+            EngineConfig::new().codec(CodecMode::Lut).backend(backend).build().expect("engine")
+        })
+        .collect();
     let mut backend_ns: Vec<(String, [f64; 3])> = Vec::new();
     for kernel in [Kernel::Poly, Kernel::Axpy, Kernel::Softmax] {
         for format in ["t8", "t16", "bf16", "e4m3"] {
             let spec = KernelSpec { kernel, format, n, seed: 1 };
             let mut times = [0.0f64; 3];
             for (slot, backend) in Backend::ALL.iter().enumerate() {
+                let be = &backend_engines[slot];
                 times[slot] = b
                     .bench_with_elements(
                         &format!("{} {format} [{}]", kernel.name(), backend.name()),
                         n as u64,
-                        || spec.run_with(CodecMode::Lut, *backend).unwrap(),
+                        || spec.run(be).unwrap(),
                     )
                     .median_ns;
             }
@@ -82,15 +93,19 @@ fn main() {
 
     b.group("parallel kernel sweep (full suite, sizes 64+128)");
     for workers in [1usize, 2, 4] {
-        let cfg = KernelSweepConfig { workers, ..Default::default() };
-        let tasks = cfg.kernels.len() * cfg.formats.len() * cfg.sizes.len();
+        let weng = EngineConfig::from_env().workers(workers).build().expect("engine");
+        let spec = KernelSweep::default();
+        let tasks = spec.kernels.len() * spec.formats.len() * spec.sizes.len();
         b.bench_with_elements(&format!("sweep workers={workers}"), tasks as u64, || {
-            kernel_sweep(&cfg).unwrap()
+            weng.submit(Job::Sweep(spec.clone())).unwrap().sweep()
         });
     }
 
     // Machine-readable perf trajectory: every measurement above —
     // including the per-backend kernel timings — lands in
-    // BENCH_kernels.json so CI archives can diff runs over time.
-    b.write_json("kernels", "BENCH_kernels.json").expect("writing BENCH_kernels.json");
+    // BENCH_kernels.json so CI archives can diff runs over time. The
+    // file-level tag is the process-default engine; rows that pinned a
+    // different config carry it in their measurement name.
+    b.write_json("kernels", &eng.tag(), "BENCH_kernels.json")
+        .expect("writing BENCH_kernels.json");
 }

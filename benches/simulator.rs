@@ -9,7 +9,8 @@
 //! `sim/lanes.rs` and `harness/gemm.rs`; this bench asserts nothing and
 //! just reports the ratio).
 
-use takum_avx10::sim::{Backend, CodecMode, Instruction, LaneType, Machine, Operand, VecReg};
+use takum_avx10::engine::EngineConfig;
+use takum_avx10::sim::{Backend, CodecMode, Instruction, LaneType, Operand, VecReg};
 use takum_avx10::util::bench::Bencher;
 use takum_avx10::util::rng::Rng;
 
@@ -17,8 +18,9 @@ fn main() {
     let mut b = Bencher::new();
     let mut r = Rng::new(7);
 
-    // Warm the LUTs outside the measured region.
-    takum_avx10::num::lut::warm();
+    // The env-default execution context: building it warms the LUTs
+    // outside the measured region, and its tag is stamped into the JSON.
+    let eng = EngineConfig::from_env().build().expect("engine");
 
     b.group("8/16-bit packed FP: LUT lane engine vs per-lane arithmetic codecs");
     let mut ratios: Vec<(String, f64)> = Vec::new();
@@ -40,7 +42,7 @@ fn main() {
         let ins = Instruction::new(mn, Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]);
         let mut times = [0.0f64; 2];
         for (slot, mode) in [(0usize, CodecMode::Lut), (1usize, CodecMode::Arith)] {
-            let mut m = Machine::with_mode(mode);
+            let mut m = EngineConfig::from_env().codec(mode).build().expect("engine").machine();
             m.load_f64(0, ty, &vals);
             m.load_f64(1, ty, &vals);
             if mn.starts_with("VDP") {
@@ -93,7 +95,12 @@ fn main() {
         let ins = Instruction::new(mn, Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]);
         let mut times = [0.0f64; 3];
         for (slot, backend) in Backend::ALL.iter().enumerate() {
-            let mut m = Machine::with_config(CodecMode::Lut, *backend);
+            let mut m = EngineConfig::new()
+                .codec(CodecMode::Lut)
+                .backend(*backend)
+                .build()
+                .expect("engine")
+                .machine();
             m.load_f64(0, ty, &vals);
             m.load_f64(1, ty, &vals);
             if mn.starts_with("VDP") {
@@ -117,7 +124,7 @@ fn main() {
     }
 
     b.group("vector instruction throughput (lanes/s as elem/s)");
-    let mut m = Machine::new();
+    let mut m = eng.machine();
     for (mn, ty) in [
         ("VADDPT8", LaneType::Takum(8)),
         ("VADDPT16", LaneType::Takum(16)),
@@ -187,5 +194,8 @@ fn main() {
     b.bench_with_elements("VADDPT16 {k1}{z}", lanes as u64, || m.step(&masked).unwrap());
 
     // Machine-readable perf trajectory (per-backend timings included).
-    b.write_json("simulator", "BENCH_simulator.json").expect("writing BENCH_simulator.json");
+    // The file-level tag is the process-default engine; rows that pinned
+    // a different config carry it in their measurement name.
+    b.write_json("simulator", &eng.tag(), "BENCH_simulator.json")
+        .expect("writing BENCH_simulator.json");
 }

@@ -7,16 +7,20 @@
 //! cargo run --example kernel_suite
 //! ```
 
-use takum_avx10::coordinator::{kernel_sweep, KernelSweepConfig};
+use takum_avx10::coordinator::KernelSweep;
+use takum_avx10::engine::{EngineConfig, Job};
 use takum_avx10::kernels::{render, Kernel, KernelSpec, Pipeline};
-use takum_avx10::sim::CodecMode;
 
 fn main() -> anyhow::Result<()> {
+    // The single front door: one engine (backend/codec/workers from env
+    // or defaults) runs everything below.
+    let eng = EngineConfig::from_env().build()?;
+
     // 1. The full suite — every kernel × format × two sizes, fanned out
-    //    across the worker pool. Results are deterministic regardless of
-    //    the worker count.
-    let cfg = KernelSweepConfig { sizes: vec![64, 128], ..Default::default() };
-    let (results, metrics) = kernel_sweep(&cfg)?;
+    //    across the engine's worker pool. Results are deterministic
+    //    regardless of the worker count.
+    let spec = KernelSweep { sizes: vec![64, 128], ..Default::default() };
+    let (results, metrics) = eng.submit(Job::Sweep(spec))?.sweep();
     print!("{}", render(&results));
     eprint!("{}", metrics.render());
 
@@ -27,7 +31,7 @@ fn main() -> anyhow::Result<()> {
     for format in ["t8", "e4m3"] {
         let pipe = Pipeline::for_format(format)?;
         let spec = KernelSpec { kernel: Kernel::Softmax, format, n: 64, seed: 42 };
-        let r = spec.run(CodecMode::default())?;
+        let r = spec.run(&eng)?;
         println!(
             "\nsoftmax n=64 in {format} ({}): rel.err={:.3e}, {} instructions",
             pipe.isa.name(),

@@ -13,27 +13,30 @@
 //! metrics, and the headline §II comparison against the paper's numbers.
 //! Recorded in EXPERIMENTS.md.
 
-use takum_avx10::coordinator::{sweep, Engine, SweepConfig};
+use takum_avx10::coordinator::{sweep, ConvertEngine, SweepConfig};
+use takum_avx10::engine::EngineConfig;
 use takum_avx10::harness::figure2::{render_ascii_plot, render_panel};
-use takum_avx10::runtime::{default_artifact_dir, PjrtService};
 
 fn main() -> anyhow::Result<()> {
     let quick = std::env::args().any(|a| a == "--quick");
     let count = if quick { 200 } else { 1401 };
 
+    // One execution context for the whole run (worker pool + the
+    // engine-owned PJRT artifact service).
+    let eng = EngineConfig::from_env().build()?;
+
     // Try the full three-layer path first.
-    let service = match PjrtService::start(&default_artifact_dir()) {
-        Ok(s) => {
+    let handle = match eng.pjrt() {
+        Ok(h) => {
             println!("PJRT service up; takum conversions run through the AOT Pallas kernels");
-            println!("artifacts: {:?}\n", s.handle().names()?);
-            Some(s)
+            println!("artifacts: {:?}\n", h.names()?);
+            Some(h)
         }
         Err(e) => {
             eprintln!("NOTE: no artifacts ({e:#}); falling back to native codecs\n");
             None
         }
     };
-    let handle = service.as_ref().map(|s| s.handle());
 
     let mut headline = Vec::new();
     for bits in [8u32, 16, 32] {
@@ -43,10 +46,10 @@ fn main() -> anyhow::Result<()> {
                 ..Default::default()
             },
             bits,
-            engine: if handle.is_some() { Engine::Pjrt } else { Engine::Native },
+            convert: if handle.is_some() { ConvertEngine::Pjrt } else { ConvertEngine::Native },
             ..Default::default()
         };
-        let (panel, metrics) = sweep(&cfg, handle.as_ref())?;
+        let (panel, metrics) = sweep(&cfg, &eng, handle.as_ref())?;
         println!("{}", render_panel(&panel));
         println!("{}", render_ascii_plot(&panel, 72, 18));
         println!("{}", metrics.render());

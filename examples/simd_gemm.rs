@@ -7,30 +7,35 @@
 //! cargo run --release --example simd_gemm [-- --n 64]
 //! ```
 
+use takum_avx10::engine::EngineConfig;
 use takum_avx10::harness::gemm::{gemm_scaled, run_sim_gemm};
 use takum_avx10::num::takum_linear;
-use takum_avx10::runtime::{default_artifact_dir, PjrtService, TensorF64};
+use takum_avx10::runtime::TensorF64;
 use takum_avx10::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
     let n = 64usize;
 
+    // One execution context: backend/codec from the environment
+    // (TAKUM_BACKEND/TAKUM_CODEC), and the engine-owned PJRT service for
+    // the artifact cross-check below.
+    let eng = EngineConfig::from_env().build()?;
+
     println!("=== well-scaled inputs (1 decade spread) ===");
-    print!("{}", run_sim_gemm(n, "t8", 0xBEEF, takum_avx10::sim::Backend::from_env())?);
+    print!("{}", run_sim_gemm(&eng, n, "t8", 0xBEEF)?);
 
     println!("\n=== badly-scaled inputs (entries ~1e5, the FEM regime) ===");
     println!("{:<8} {:>12} {:>12}", "format", "rel. error", "instructions");
     for f in ["t8", "t16", "bf16", "f16", "e4m3", "e5m2"] {
-        let r = gemm_scaled(n, f, 0xBEEF, 0.3, 1e5)?;
+        let r = gemm_scaled(&eng, n, f, 0xBEEF, 0.3, 1e5)?;
         println!("{:<8} {:>12.3e} {:>12}", r.format, r.rel_error, r.executed);
     }
 
     // Cross-check: the simulator's takum quantisation matches the Pallas
     // kernel artifact lane for lane.
-    match PjrtService::start(&default_artifact_dir()) {
-        Ok(service) => {
+    match eng.pjrt() {
+        Ok(h) => {
             println!("\n=== PJRT cross-check (quant_gemm_t8 artifact, 128×128) ===");
-            let h = service.handle();
             let dim = 128usize;
             let mut rng = Rng::new(0xF00D);
             let a: Vec<f64> = (0..dim * dim).map(|_| rng.log_normal(0.0, 1.0)).collect();

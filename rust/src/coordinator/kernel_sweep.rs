@@ -1,47 +1,40 @@
 //! Parallel kernel-suite sweep: kernels × formats × sizes fanned out
-//! across a worker pool, in the style of the Figure 2 sweep
+//! across the engine's worker pool, in the style of the Figure 2 sweep
 //! ([`super::sweep`]).
 //!
-//! Work distribution: the cross-product task list is materialised up
-//! front; an atomic index counter hands out task indices; each worker
-//! runs its [`crate::kernels::KernelSpec`] (every task regenerates its
-//! inputs from the spec seed, so nothing crosses a thread boundary) and
-//! streams `(index, result)` records to the merger through a bounded
-//! channel. The merger slots results back by index, so the output order —
-//! and every number in it — is **independent of the worker count**: each
-//! task is a pure function of its spec.
+//! Work distribution lives in [`crate::engine::Engine::run_tasks`] (the
+//! one slot-merged fan-out both sweeps share): the cross-product task
+//! list is materialised up front, workers run each
+//! [`crate::kernels::KernelSpec`] on engine-built machines (every task
+//! regenerates its inputs from the spec seed, so nothing crosses a thread
+//! boundary), and results are slotted back by task index — output order,
+//! and every number in it, is **independent of the worker count**. LUT
+//! warm-up happens once, in `Engine::build`, before any worker exists.
 
+use crate::engine::Engine;
 use crate::kernels::{Kernel, KernelResult, KernelSpec, Pipeline};
-use crate::sim::{Backend, CodecMode};
 use anyhow::Result;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-/// Sweep configuration: the cross product of kernels × formats × sizes.
+/// The work spec of one kernel sweep: the cross product of kernels ×
+/// formats × sizes. Execution axes (backend, codec mode, worker count)
+/// live in the engine config, not here.
 #[derive(Debug, Clone)]
-pub struct KernelSweepConfig {
+pub struct KernelSweep {
     pub kernels: Vec<Kernel>,
     pub formats: Vec<&'static str>,
     pub sizes: Vec<usize>,
-    pub seed: u64,
-    pub workers: usize,
-    pub mode: CodecMode,
-    /// Plane backend every worker's machines run on (the default honours
-    /// `TAKUM_BACKEND`; the CLI exposes `--backend`).
-    pub backend: Backend,
+    /// `None` inherits the engine's configured default seed.
+    pub seed: Option<u64>,
 }
 
-impl Default for KernelSweepConfig {
+impl Default for KernelSweep {
     fn default() -> Self {
-        KernelSweepConfig {
+        KernelSweep {
             kernels: Kernel::ALL.to_vec(),
             formats: Pipeline::ALL_FORMATS.to_vec(),
             sizes: vec![64, 128],
-            seed: 0xBEEF,
-            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
-            mode: CodecMode::default(),
-            backend: Backend::from_env(),
+            seed: None,
         }
     }
 }
@@ -74,84 +67,28 @@ impl KernelSweepMetrics {
     }
 }
 
-/// Run the sweep. Results come back in task order (kernel-major, then
-/// format, then size), deterministically for a given config.
-pub fn kernel_sweep(cfg: &KernelSweepConfig) -> Result<(Vec<KernelResult>, KernelSweepMetrics)> {
-    let specs: Vec<KernelSpec> = cfg
+/// Run the sweep on `engine`'s pool. Results come back in task order
+/// (kernel-major, then format, then size), deterministically for a given
+/// (engine config, spec) pair. Also reachable as
+/// `engine.submit(Job::Sweep(spec))`.
+pub fn kernel_sweep(
+    engine: &Engine,
+    sweep: &KernelSweep,
+) -> Result<(Vec<KernelResult>, KernelSweepMetrics)> {
+    let seed = sweep.seed.unwrap_or(engine.seed());
+    let specs: Vec<KernelSpec> = sweep
         .kernels
         .iter()
         .flat_map(|&kernel| {
-            cfg.formats.iter().flat_map(move |&format| {
-                cfg.sizes
-                    .iter()
-                    .map(move |&n| KernelSpec { kernel, format, n, seed: cfg.seed })
+            sweep.formats.iter().flat_map(move |&format| {
+                sweep.sizes.iter().map(move |&n| KernelSpec { kernel, format, n, seed })
             })
         })
         .collect();
     anyhow::ensure!(!specs.is_empty(), "empty kernel sweep (no kernels/formats/sizes)");
 
-    // The workers' hot path routes all 8/16-bit lane traffic through the
-    // process-wide LUTs; warm them here so N workers don't all block on
-    // the first OnceLock initialisation.
-    if cfg.mode == CodecMode::Lut {
-        crate::num::lut::warm();
-    }
-
     let start = Instant::now();
-    let next = AtomicUsize::new(0);
-    let workers = cfg.workers.max(1);
-    // Bounded fan-in, same backpressure policy as the Figure 2 sweep.
-    let (tx, rx) = mpsc::sync_channel::<(usize, Result<KernelResult>)>(1024);
-
-    let mut slots: Vec<Option<KernelResult>> = (0..specs.len()).map(|_| None).collect();
-    let mut per_worker = vec![0usize; workers];
-    let mut first_err: Option<anyhow::Error> = None;
-
-    std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(workers);
-        for _ in 0..workers {
-            let tx = tx.clone();
-            let next = &next;
-            let specs = &specs;
-            let mode = cfg.mode;
-            let backend = cfg.backend;
-            handles.push(s.spawn(move || {
-                let mut local = 0usize;
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= specs.len() {
-                        break;
-                    }
-                    if tx.send((i, specs[i].run_with(mode, backend))).is_err() {
-                        return local;
-                    }
-                    local += 1;
-                }
-                local
-            }));
-        }
-        drop(tx);
-
-        while let Ok((i, res)) = rx.recv() {
-            match res {
-                Ok(r) => slots[i] = Some(r),
-                Err(e) => {
-                    if first_err.is_none() {
-                        first_err = Some(e);
-                    }
-                }
-            }
-        }
-        for (w, h) in handles.into_iter().enumerate() {
-            per_worker[w] = h.join().expect("kernel sweep worker panicked");
-        }
-    });
-
-    if let Some(e) = first_err {
-        return Err(e);
-    }
-    let results: Vec<KernelResult> =
-        slots.into_iter().map(|s| s.expect("missing sweep slot")).collect();
+    let (results, per_worker) = engine.run_tasks(specs.len(), |i| specs[i].run(engine))?;
     let metrics = KernelSweepMetrics {
         tasks: results.len(),
         instructions: results.iter().map(|r| r.executed).sum(),
@@ -164,22 +101,26 @@ pub fn kernel_sweep(cfg: &KernelSweepConfig) -> Result<(Vec<KernelResult>, Kerne
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::EngineConfig;
+    use crate::sim::{Backend, CodecMode};
 
-    fn small_cfg(workers: usize) -> KernelSweepConfig {
-        KernelSweepConfig {
+    fn small_spec() -> KernelSweep {
+        KernelSweep {
             kernels: vec![Kernel::Dot, Kernel::Softmax, Kernel::Reduce],
             formats: vec!["t8", "t16", "bf16", "e4m3"],
             sizes: vec![64],
-            seed: 0x5EED,
-            workers,
-            ..Default::default()
+            seed: Some(0x5EED),
         }
+    }
+
+    fn engine(workers: usize) -> Engine {
+        EngineConfig::from_env().workers(workers).build().unwrap()
     }
 
     #[test]
     fn deterministic_across_worker_counts() {
-        let (one, m1) = kernel_sweep(&small_cfg(1)).unwrap();
-        let (four, m4) = kernel_sweep(&small_cfg(4)).unwrap();
+        let (one, m1) = kernel_sweep(&engine(1), &small_spec()).unwrap();
+        let (four, m4) = kernel_sweep(&engine(4), &small_spec()).unwrap();
         assert_eq!(one.len(), 12);
         assert_eq!(one.len(), four.len());
         for (a, b) in one.iter().zip(&four) {
@@ -198,16 +139,10 @@ mod tests {
 
     #[test]
     fn matches_sequential_suite() {
-        let cfg = KernelSweepConfig {
-            kernels: Kernel::ALL.to_vec(),
-            formats: Pipeline::ALL_FORMATS.to_vec(),
-            sizes: vec![64],
-            seed: 11,
-            workers: 3,
-            ..Default::default()
-        };
-        let (par, _) = kernel_sweep(&cfg).unwrap();
-        let seq = crate::kernels::run_suite(64, 11, CodecMode::default()).unwrap();
+        let eng = engine(3);
+        let spec = KernelSweep { sizes: vec![64], seed: Some(11), ..Default::default() };
+        let (par, _) = kernel_sweep(&eng, &spec).unwrap();
+        let seq = crate::kernels::run_suite(&eng, 64, 11).unwrap();
         assert_eq!(par.len(), seq.len());
         for (a, b) in par.iter().zip(&seq) {
             assert_eq!(a.kernel, b.kernel);
@@ -219,29 +154,35 @@ mod tests {
 
     #[test]
     fn bad_size_propagates_error() {
-        let cfg = KernelSweepConfig { sizes: vec![63], workers: 2, ..Default::default() };
-        assert!(kernel_sweep(&cfg).is_err());
-        let empty = KernelSweepConfig { sizes: vec![], ..Default::default() };
-        assert!(kernel_sweep(&empty).is_err());
+        let eng = engine(2);
+        let bad = KernelSweep { sizes: vec![63], ..Default::default() };
+        assert!(kernel_sweep(&eng, &bad).is_err());
+        let empty = KernelSweep { sizes: vec![], ..Default::default() };
+        assert!(kernel_sweep(&eng, &empty).is_err());
     }
 
-    /// The backend axis must not change a single bit of the sweep output:
-    /// same errors, same instruction counts, across every backend
-    /// (scalar, vector, graph).
+    /// The engine's backend axis must not change a single bit of the
+    /// sweep output: same errors, same instruction counts, across every
+    /// backend (scalar, vector, graph).
     #[test]
     fn sweep_backend_invariant() {
-        let cfg = |backend| KernelSweepConfig {
+        let spec = KernelSweep {
             kernels: vec![Kernel::Dot, Kernel::Softmax],
             formats: vec!["t8", "t16", "e4m3"],
             sizes: vec![64],
-            seed: 0xBACC,
-            workers: 2,
-            mode: CodecMode::default(),
-            backend,
+            seed: Some(0xBACC),
         };
-        let (s, _) = kernel_sweep(&cfg(Backend::Scalar)).unwrap();
+        let eng = |backend| {
+            EngineConfig::new()
+                .codec(CodecMode::Lut)
+                .backend(backend)
+                .workers(2)
+                .build()
+                .unwrap()
+        };
+        let (s, _) = kernel_sweep(&eng(Backend::Scalar), &spec).unwrap();
         for backend in [Backend::Vector, Backend::Graph] {
-            let (v, _) = kernel_sweep(&cfg(backend)).unwrap();
+            let (v, _) = kernel_sweep(&eng(backend), &spec).unwrap();
             assert_eq!(s.len(), v.len());
             for (a, b) in s.iter().zip(&v) {
                 assert_eq!(

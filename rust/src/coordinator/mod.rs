@@ -8,12 +8,15 @@
 //! The offline image carries no `tokio`, so the pool is built on scoped
 //! std threads and `mpsc` channels — same architecture (leader distributes
 //! index ranges, workers stream results back, a merger folds them) without
-//! the async runtime.
+//! the async runtime. Since the engine redesign the pool itself lives in
+//! [`crate::engine::Engine::run_tasks`] (one slot-merged implementation,
+//! worker count from the engine config); both sweeps here are thin,
+//! deterministic task lists over it.
 
 pub mod kernel_sweep;
 pub mod metrics;
 pub mod sweep;
 
-pub use kernel_sweep::{kernel_sweep, KernelSweepConfig, KernelSweepMetrics};
+pub use kernel_sweep::{kernel_sweep, KernelSweep, KernelSweepMetrics};
 pub use metrics::SweepMetrics;
-pub use sweep::{sweep, Engine, SweepConfig};
+pub use sweep::{sweep, ConvertEngine, SweepConfig};

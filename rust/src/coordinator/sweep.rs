@@ -1,44 +1,49 @@
 //! Parallel Figure 2 sweep.
 //!
-//! Work distribution: an atomic index counter hands out matrix indices;
-//! each worker regenerates its matrices locally from the collection seed
-//! (no matrix ever crosses a thread boundary), converts the value vector
-//! through every panel format, and streams `(format, error)` records to
-//! the merger through a bounded channel (backpressure: workers block when
-//! the merger lags).
+//! Work distribution lives in [`crate::engine::Engine::run_tasks`] (the
+//! slot-merged fan-out shared with the kernel sweep): each task is one
+//! matrix index, regenerated locally from the collection seed (no matrix
+//! ever crosses a thread boundary) and converted through every panel
+//! format; the merger slots the per-matrix error records back by index,
+//! so the panel is deterministic for any worker count. LUT warm-up
+//! happens once, in `Engine::build`, before any worker exists.
 //!
-//! Engines:
-//! * [`Engine::Native`] — rust codecs ([`crate::num`]) for every format.
-//! * [`Engine::Pjrt`] — takum round-trips go through the AOT-compiled
-//!   Pallas kernel artifacts via [`crate::runtime::PjrtService`] in
-//!   fixed-size batches; other formats stay native. Numerically identical
-//!   to Native (asserted by integration tests).
+//! Conversion engines (the takum-round-trip axis, orthogonal to the
+//! execution context):
+//! * [`ConvertEngine::Native`] — rust codecs ([`crate::num`]) for every
+//!   format.
+//! * [`ConvertEngine::Pjrt`] — takum round-trips go through the
+//!   AOT-compiled Pallas kernel artifacts via
+//!   [`crate::runtime::PjrtService`] in fixed-size batches; other formats
+//!   stay native. Numerically identical to Native (asserted by
+//!   integration tests).
 
 use super::metrics::SweepMetrics;
+use crate::engine::Engine;
 use crate::harness::figure2::{FormatCdf, PanelResult};
 use crate::matrix::generator::{self, CollectionSpec};
 use crate::matrix::norms::{relative_error, relative_error_from_roundtrip, ConversionError};
 use crate::num::{formats_at_width, FormatRef};
 use crate::runtime::{PjrtHandle, TensorF64};
 use anyhow::Result;
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
 /// Conversion engine for the takum formats of the panel.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum Engine {
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ConvertEngine {
+    #[default]
     Native,
     Pjrt,
 }
 
-/// Sweep configuration.
+/// Sweep configuration (the *what*; the worker pool and execution axes
+/// are the engine's).
 #[derive(Debug, Clone)]
 pub struct SweepConfig {
     pub spec: CollectionSpec,
     pub bits: u32,
-    pub workers: usize,
-    pub engine: Engine,
+    pub convert: ConvertEngine,
     /// Batch size (values) per PJRT call; must match the artifact's
     /// static input shape.
     pub pjrt_batch: usize,
@@ -49,96 +54,64 @@ impl Default for SweepConfig {
         SweepConfig {
             spec: CollectionSpec::default(),
             bits: 8,
-            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
-            engine: Engine::Native,
+            convert: ConvertEngine::Native,
             pjrt_batch: 1 << 16,
         }
     }
 }
 
-struct Record {
-    format_idx: usize,
-    error: ConversionError,
-}
-
-/// Run the sweep; returns the panel plus metrics.
-pub fn sweep(cfg: &SweepConfig, pjrt: Option<&PjrtHandle>) -> Result<(PanelResult, SweepMetrics)> {
+/// Run the sweep on `engine`'s worker pool; returns the panel plus
+/// metrics.
+pub fn sweep(
+    cfg: &SweepConfig,
+    engine: &Engine,
+    pjrt: Option<&PjrtHandle>,
+) -> Result<(PanelResult, SweepMetrics)> {
     let formats = formats_at_width(cfg.bits);
     anyhow::ensure!(!formats.is_empty(), "no Figure 2 panel at {} bits", cfg.bits);
-    if cfg.engine == Engine::Pjrt {
+    if cfg.convert == ConvertEngine::Pjrt {
         anyhow::ensure!(pjrt.is_some(), "PJRT engine requested but no service handle given");
     }
 
-    // Build the shared LUT codecs once, before the fan-out: the workers'
-    // hot path (`relative_error` → `lut::cached`/`cached16`) shares the
-    // simulator lane engine's process-wide tables, and warming them here
-    // keeps N workers from all blocking on the first OnceLock init. The
-    // 16-bit panel round-trips through the branch-free boundary search
-    // (`Lut8::roundtrip_branchless`) since the PR-1 follow-up, so its
-    // tables are warmed too; the 32-bit panel stays on the arithmetic
-    // codecs.
-    if cfg.bits == 16 {
-        crate::num::lut::warm();
+    // The workers' hot path (`relative_error` → `lut::cached`/`cached16`)
+    // reads the tables regardless of the engine's codec mode, so request
+    // the panel's table set explicitly (idempotent; a no-op when the
+    // engine's own policy already built them) — N workers must never
+    // serialise on a cold `OnceLock` build. Only the 16-bit panel
+    // round-trips through the 16-bit tables.
+    engine.warm_tables(if cfg.bits == 16 {
+        crate::engine::WarmPolicy::Full
     } else {
-        crate::num::lut::warm8();
-    }
+        crate::engine::WarmPolicy::Tables8
+    });
 
     let start = Instant::now();
-    let next = AtomicUsize::new(0);
-    let pjrt_calls = std::sync::atomic::AtomicU64::new(0);
-    let values_total = std::sync::atomic::AtomicU64::new(0);
-    // Bounded fan-in: keep the merger at most ~4k records behind.
-    let (tx, rx) = mpsc::sync_channel::<Record>(4096);
+    let pjrt_calls = AtomicU64::new(0);
 
-    let workers = cfg.workers.max(1);
+    // One task per matrix: regenerate, convert through every format,
+    // return the per-format records (slot-merged by matrix index).
+    let (per_matrix, per_worker) = engine.run_tasks(cfg.spec.count, |i| {
+        let g = generator::generate(cfg.spec.seed, i);
+        let values = &g.coo.values;
+        let mut records = Vec::with_capacity(formats.len());
+        for f in &formats {
+            records.push(convert_one(cfg, f, values, pjrt, &pjrt_calls));
+        }
+        Ok((values.len() as u64, records))
+    })?;
+
     let mut errs: Vec<Vec<f64>> = vec![Vec::with_capacity(cfg.spec.count); formats.len()];
     let mut exceeded = vec![0usize; formats.len()];
-    let mut per_worker = vec![0usize; workers];
-
-    std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(workers);
-        for _ in 0..workers {
-            let tx = tx.clone();
-            let formats = formats.clone();
-            let next = &next;
-            let cfg2 = cfg.clone();
-            let pjrt = pjrt.cloned();
-            let pjrt_calls = &pjrt_calls;
-            let values_total = &values_total;
-            handles.push(s.spawn(move || {
-                let mut local = 0usize;
-                loop {
-                    let i = next.fetch_add(1, Ordering::Relaxed);
-                    if i >= cfg2.spec.count {
-                        break;
-                    }
-                    let g = generator::generate(cfg2.spec.seed, i);
-                    values_total.fetch_add(g.coo.values.len() as u64, Ordering::Relaxed);
-                    for (fi, f) in formats.iter().enumerate() {
-                        let err = convert_one(&cfg2, f, &g.coo.values, pjrt.as_ref(), pjrt_calls);
-                        if tx.send(Record { format_idx: fi, error: err }).is_err() {
-                            return local;
-                        }
-                    }
-                    local += 1;
-                }
-                local
-            }));
-        }
-        drop(tx);
-
-        // Merge on this thread while workers stream (bounded channel ⇒
-        // backpressure if we lag).
-        while let Ok(rec) = rx.recv() {
-            match rec.error {
-                ConversionError::Finite(e) => errs[rec.format_idx].push(e),
-                ConversionError::Exceeded => exceeded[rec.format_idx] += 1,
+    let mut values_total = 0u64;
+    for (vlen, records) in per_matrix {
+        values_total += vlen;
+        for (fi, rec) in records.into_iter().enumerate() {
+            match rec {
+                ConversionError::Finite(e) => errs[fi].push(e),
+                ConversionError::Exceeded => exceeded[fi] += 1,
             }
         }
-        for (w, h) in handles.into_iter().enumerate() {
-            per_worker[w] = h.join().expect("worker panicked");
-        }
-    });
+    }
 
     let curves: Vec<FormatCdf> = formats
         .iter()
@@ -156,8 +129,8 @@ pub fn sweep(cfg: &SweepConfig, pjrt: Option<&PjrtHandle>) -> Result<(PanelResul
 
     let metrics = SweepMetrics {
         matrices: cfg.spec.count,
-        values: values_total.load(Ordering::Relaxed),
-        conversions: values_total.load(Ordering::Relaxed) * formats.len() as u64,
+        values: values_total,
+        conversions: values_total * formats.len() as u64,
         wall: start.elapsed(),
         per_worker,
         pjrt_calls: pjrt_calls.load(Ordering::Relaxed),
@@ -165,17 +138,18 @@ pub fn sweep(cfg: &SweepConfig, pjrt: Option<&PjrtHandle>) -> Result<(PanelResul
     Ok((PanelResult { bits: cfg.bits, spec: cfg.spec, curves }, metrics))
 }
 
-/// Convert one value vector through one format under the configured engine.
+/// Convert one value vector through one format under the configured
+/// conversion engine.
 fn convert_one(
     cfg: &SweepConfig,
     format: &FormatRef,
     values: &[f64],
     pjrt: Option<&PjrtHandle>,
-    pjrt_calls: &std::sync::atomic::AtomicU64,
+    pjrt_calls: &AtomicU64,
 ) -> ConversionError {
     let name = format.name();
     let is_takum = name.starts_with("takum") && !name.starts_with("takum_log");
-    if cfg.engine == Engine::Pjrt && is_takum {
+    if cfg.convert == ConvertEngine::Pjrt && is_takum {
         if let Some(h) = pjrt {
             match pjrt_roundtrip(h, &name, values, cfg.pjrt_batch, pjrt_calls) {
                 Ok(rt) => return relative_error_from_roundtrip(values, &rt),
@@ -197,7 +171,7 @@ fn pjrt_roundtrip(
     format_name: &str,
     values: &[f64],
     batch: usize,
-    pjrt_calls: &std::sync::atomic::AtomicU64,
+    pjrt_calls: &AtomicU64,
 ) -> Result<Vec<f64>> {
     let artifact = format!("{}_roundtrip", format_name); // takum8_roundtrip …
     let mut out = Vec::with_capacity(values.len());
@@ -218,13 +192,18 @@ fn pjrt_roundtrip(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::EngineConfig;
     use crate::harness::figure2;
+
+    fn engine(workers: usize) -> Engine {
+        EngineConfig::new().workers(workers).build().unwrap()
+    }
 
     #[test]
     fn parallel_matches_sequential() {
         let spec = CollectionSpec { seed: 0xC0FFEE, count: 80 };
-        let cfg = SweepConfig { spec, bits: 8, workers: 4, ..Default::default() };
-        let (par, metrics) = sweep(&cfg, None).unwrap();
+        let cfg = SweepConfig { spec, bits: 8, ..Default::default() };
+        let (par, metrics) = sweep(&cfg, &engine(4), None).unwrap();
         let seq = figure2::run_panel(spec, 8);
         assert_eq!(par.curves.len(), seq.curves.len());
         for (a, b) in par.curves.iter().zip(&seq.curves) {
@@ -239,8 +218,8 @@ mod tests {
     #[test]
     fn single_worker_works() {
         let spec = CollectionSpec { seed: 1, count: 10 };
-        let cfg = SweepConfig { spec, bits: 16, workers: 1, ..Default::default() };
-        let (p, _) = sweep(&cfg, None).unwrap();
+        let cfg = SweepConfig { spec, bits: 16, ..Default::default() };
+        let (p, _) = sweep(&cfg, &engine(1), None).unwrap();
         assert_eq!(p.curves.len(), 4);
         for c in &p.curves {
             assert_eq!(c.errors.len() + c.exceeded, 10);
@@ -251,17 +230,17 @@ mod tests {
     fn pjrt_engine_without_handle_errors() {
         let cfg = SweepConfig {
             spec: CollectionSpec { seed: 1, count: 1 },
-            engine: Engine::Pjrt,
+            convert: ConvertEngine::Pjrt,
             ..Default::default()
         };
-        assert!(sweep(&cfg, None).is_err());
+        assert!(sweep(&cfg, &engine(2), None).is_err());
     }
 
     #[test]
     fn per_worker_counts_sum_to_total() {
         let spec = CollectionSpec { seed: 2, count: 23 };
-        let cfg = SweepConfig { spec, bits: 8, workers: 3, ..Default::default() };
-        let (_, m) = sweep(&cfg, None).unwrap();
+        let cfg = SweepConfig { spec, bits: 8, ..Default::default() };
+        let (_, m) = sweep(&cfg, &engine(3), None).unwrap();
         assert_eq!(m.per_worker.iter().sum::<usize>(), 23);
     }
 }

@@ -1,0 +1,227 @@
+//! [`EngineConfig`]: the typed builder behind [`Engine`], and the one
+//! place in the crate that reads execution configuration from the
+//! process environment.
+//!
+//! ## Precedence
+//!
+//! Every execution axis resolves as **CLI flag > environment variable >
+//! built-in default**:
+//!
+//! * the CLI front end starts from [`EngineConfig::from_env`] (env or
+//!   default) and overrides with [`EngineConfig::try_backend`] /
+//!   [`EngineConfig::try_codec`] / [`EngineConfig::workers`] only when
+//!   the flag was given;
+//! * `TAKUM_BACKEND` / `TAKUM_CODEC` are read **here and nowhere else**
+//!   ([`EngineConfig::from_env`]); a malformed value warns and falls back
+//!   to the default (`scalar` / `lut`) via the pure, unit-testable
+//!   [`Backend::parse_env`] / [`CodecMode::parse_env`];
+//! * the built-in defaults are [`Backend::Scalar`], [`CodecMode::Lut`],
+//!   one worker per available core, [`WarmPolicy::Auto`] and seed
+//!   `0xBEEF`.
+//!
+//! Default-constructed [`crate::sim::Machine`]s resolve their codec mode
+//! and backend through [`process_default`] (a cached
+//! [`EngineConfig::from_env`]), so the CI backend matrix still forces
+//! every default machine through `TAKUM_BACKEND`/`TAKUM_CODEC` without a
+//! second env-parsing site existing anywhere.
+
+use super::Engine;
+use crate::sim::{Backend, CodecMode};
+use anyhow::Result;
+use std::sync::OnceLock;
+
+/// Which LUT set [`Engine::build`] warms eagerly, **before** any machine
+/// is handed out or any worker fan-out starts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum WarmPolicy {
+    /// Warm everything the configured codec mode can touch: the full
+    /// 8- and 16-bit table set under [`CodecMode::Lut`], nothing under
+    /// [`CodecMode::Arith`] (which never reads a table).
+    #[default]
+    Auto,
+    /// 8-bit tables only (the Figure 2 8/32-bit panels touch no 16-bit
+    /// table, and the 16-bit set is the expensive one to build).
+    Tables8,
+    /// Every table, regardless of codec mode.
+    Full,
+    /// No eager warm: the first decode pays the `OnceLock` build. Only
+    /// sensible for single-threaded, latency-insensitive use.
+    Lazy,
+}
+
+/// Typed builder for [`Engine`]: every knob of the execution context —
+/// plane backend, codec mode, worker count, LUT warm policy, default RNG
+/// seed — in one place, validated once at [`EngineConfig::build`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EngineConfig {
+    pub(crate) backend: Backend,
+    pub(crate) mode: CodecMode,
+    pub(crate) workers: usize,
+    pub(crate) warm: WarmPolicy,
+    pub(crate) seed: u64,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig::new()
+    }
+}
+
+impl EngineConfig {
+    /// The built-in defaults (no environment involved): scalar backend,
+    /// LUT codecs, one worker per available core, auto warm, seed 0xBEEF.
+    pub fn new() -> EngineConfig {
+        EngineConfig {
+            backend: Backend::default(),
+            mode: CodecMode::default(),
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            warm: WarmPolicy::default(),
+            seed: 0xBEEF,
+        }
+    }
+
+    /// Defaults with the `TAKUM_BACKEND` / `TAKUM_CODEC` environment
+    /// overrides applied. **The only place in the crate that reads these
+    /// variables**; malformed values warn and fall back (see
+    /// [`Backend::parse_env`] / [`CodecMode::parse_env`]).
+    pub fn from_env() -> EngineConfig {
+        Self::from_env_values(
+            std::env::var("TAKUM_BACKEND").ok().as_deref(),
+            std::env::var("TAKUM_CODEC").ok().as_deref(),
+        )
+    }
+
+    /// [`EngineConfig::from_env`] with the variable values injected —
+    /// the pure half, so env precedence and the warn-and-fallback path
+    /// are unit-testable without mutating process state.
+    pub fn from_env_values(backend: Option<&str>, codec: Option<&str>) -> EngineConfig {
+        EngineConfig::new()
+            .backend(Backend::parse_env(backend))
+            .codec(CodecMode::parse_env(codec))
+    }
+
+    /// Select the plane backend.
+    pub fn backend(mut self, backend: Backend) -> EngineConfig {
+        self.backend = backend;
+        self
+    }
+
+    /// Select the lane codec mode.
+    pub fn codec(mut self, mode: CodecMode) -> EngineConfig {
+        self.mode = mode;
+        self
+    }
+
+    /// Select the backend by CLI-flag spelling; the error enumerates all
+    /// valid names (via [`Backend::parse`]).
+    pub fn try_backend(self, name: &str) -> Result<EngineConfig> {
+        Ok(self.backend(Backend::parse(name)?))
+    }
+
+    /// Select the codec mode by CLI-flag spelling; the error enumerates
+    /// all valid names (via [`CodecMode::parse`]).
+    pub fn try_codec(self, name: &str) -> Result<EngineConfig> {
+        Ok(self.codec(CodecMode::parse(name)?))
+    }
+
+    /// Worker-pool width for fan-out jobs. Validated at
+    /// [`EngineConfig::build`] (must be ≥ 1).
+    pub fn workers(mut self, workers: usize) -> EngineConfig {
+        self.workers = workers;
+        self
+    }
+
+    /// LUT warm policy (see [`WarmPolicy`]).
+    pub fn warm(mut self, warm: WarmPolicy) -> EngineConfig {
+        self.warm = warm;
+        self
+    }
+
+    /// Default RNG seed jobs inherit when their spec leaves the seed
+    /// unset.
+    pub fn seed(mut self, seed: u64) -> EngineConfig {
+        self.seed = seed;
+        self
+    }
+
+    /// Validate and build the [`Engine`]: checks the worker count, warms
+    /// the configured LUT set, and takes ownership of the shared caches.
+    pub fn build(self) -> Result<Engine> {
+        Engine::build(self)
+    }
+}
+
+/// The cached process-default execution axes, resolved once through
+/// [`EngineConfig::from_env`]. `Machine::default()` routes here so a
+/// default-constructed machine honours `TAKUM_BACKEND`/`TAKUM_CODEC`
+/// (the CI matrix hook) while env parsing still happens in exactly one
+/// function.
+pub(crate) fn process_default() -> (CodecMode, Backend) {
+    static CACHE: OnceLock<(CodecMode, Backend)> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        let cfg = EngineConfig::from_env();
+        (cfg.mode, cfg.backend)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Precedence, bottom two layers: built-in default vs env override
+    /// (valid, invalid, unset) — the CLI-flag layer on top is covered in
+    /// `main.rs` (`parse_engine_cfg`), which starts from `from_env` and
+    /// only overrides when a flag is present.
+    #[test]
+    fn env_overrides_default_and_invalid_falls_back() {
+        let base = EngineConfig::new();
+        assert_eq!(base.backend, Backend::Scalar);
+        assert_eq!(base.mode, CodecMode::Lut);
+
+        // Unset env ⇒ built-in defaults.
+        let cfg = EngineConfig::from_env_values(None, None);
+        assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Scalar));
+
+        // Valid env values override the defaults.
+        let cfg = EngineConfig::from_env_values(Some("vector"), Some("arith"));
+        assert_eq!((cfg.mode, cfg.backend), (CodecMode::Arith, Backend::Vector));
+        let cfg = EngineConfig::from_env_values(Some("graph"), None);
+        assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Graph));
+
+        // Invalid env values warn (stderr) and fall back to the default
+        // rather than failing construction.
+        let cfg = EngineConfig::from_env_values(Some("gpu"), Some("banana"));
+        assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Scalar));
+    }
+
+    /// CLI-spelling setters: valid names select, unknown names produce
+    /// the same enumerated error messages the CLI prints.
+    #[test]
+    fn try_setters_validate_names() {
+        let cfg = EngineConfig::new()
+            .try_backend("graph")
+            .unwrap()
+            .try_codec("arith")
+            .unwrap();
+        assert_eq!(cfg.backend, Backend::Graph);
+        assert_eq!(cfg.mode, CodecMode::Arith);
+
+        let e = EngineConfig::new().try_backend("gpu").unwrap_err().to_string();
+        assert!(e.contains("unknown backend \"gpu\""), "{e:?}");
+        for b in Backend::ALL {
+            assert!(e.contains(b.name()), "{e:?} missing {}", b.name());
+        }
+        let e = EngineConfig::new().try_codec("fast").unwrap_err().to_string();
+        assert!(e.contains("unknown codec mode \"fast\""), "{e:?}");
+        assert!(e.contains("lut") && e.contains("arith"), "{e:?}");
+    }
+
+    /// Builder validation: a zero worker count is rejected at build time
+    /// with an actionable message (the former CLI-side check).
+    #[test]
+    fn zero_workers_rejected_at_build() {
+        let e = EngineConfig::new().workers(0).build().unwrap_err().to_string();
+        assert!(e.contains("workers must be at least 1"), "{e:?}");
+        assert!(EngineConfig::new().workers(1).build().is_ok());
+    }
+}

@@ -1,0 +1,177 @@
+//! The [`Job`]/[`JobResult`] API: every workload the crate can run,
+//! expressed as data and executed through [`Engine::submit`] — the single
+//! entry point the CLI, benches, examples and tests share.
+
+use super::Engine;
+use crate::coordinator::{kernel_sweep, KernelSweep, KernelSweepMetrics};
+use crate::harness::gemm::{gemm_scaled, GemmResult};
+use crate::kernels::{run_suite, KernelResult, KernelSpec};
+use crate::runtime::TensorF64;
+use anyhow::Result;
+
+/// One unit of work. Specs that carry `seed: None` inherit the engine's
+/// configured default seed ([`Engine::seed`]).
+#[derive(Debug, Clone)]
+pub enum Job {
+    /// One (kernel, format, size) cell of the workload suite.
+    Kernel(KernelSpec),
+    /// One quantised GEMM (experiment E11).
+    Gemm(GemmJob),
+    /// Every kernel × format at one size, in suite order (sequential —
+    /// the reference the sweep's determinism tests compare against).
+    Suite { n: usize, seed: Option<u64> },
+    /// Kernels × formats × sizes fanned out across the engine's worker
+    /// pool, slot-merged (deterministic for any worker count).
+    Sweep(KernelSweep),
+    /// A runtime artifact executed through the engine-owned PJRT service
+    /// (graph-interpreter fallback without the `pjrt` feature).
+    Artifact { name: String, inputs: Vec<TensorF64> },
+}
+
+/// Spec of one quantised GEMM run.
+#[derive(Debug, Clone)]
+pub struct GemmJob {
+    pub n: usize,
+    pub format: String,
+    /// `None` inherits [`Engine::seed`].
+    pub seed: Option<u64>,
+    /// Log-normal magnitude spread of the inputs, in decades.
+    pub spread_decades: f64,
+    /// Global magnitude offset (the badly-scaled FEM regime at ~1e5).
+    pub scale: f64,
+}
+
+impl GemmJob {
+    pub fn new(n: usize, format: &str) -> GemmJob {
+        GemmJob { n, format: format.to_string(), seed: None, spread_decades: 1.0, scale: 1.0 }
+    }
+}
+
+/// What a [`Job`] produced; variants parallel [`Job`].
+#[derive(Debug)]
+pub enum JobResult {
+    Kernel(KernelResult),
+    Gemm(GemmResult),
+    Suite(Vec<KernelResult>),
+    Sweep { results: Vec<KernelResult>, metrics: KernelSweepMetrics },
+    Artifact(Vec<Vec<f64>>),
+}
+
+impl JobResult {
+    fn kind(&self) -> &'static str {
+        match self {
+            JobResult::Kernel(_) => "kernel",
+            JobResult::Gemm(_) => "gemm",
+            JobResult::Suite(_) => "suite",
+            JobResult::Sweep { .. } => "sweep",
+            JobResult::Artifact(_) => "artifact",
+        }
+    }
+
+    /// Unwrap a [`JobResult::Kernel`] (panics on a mismatched variant —
+    /// submit() returns the variant matching the job by construction).
+    pub fn kernel(self) -> KernelResult {
+        match self {
+            JobResult::Kernel(r) => r,
+            other => panic!("expected kernel result, got {}", other.kind()),
+        }
+    }
+
+    pub fn gemm(self) -> GemmResult {
+        match self {
+            JobResult::Gemm(r) => r,
+            other => panic!("expected gemm result, got {}", other.kind()),
+        }
+    }
+
+    pub fn suite(self) -> Vec<KernelResult> {
+        match self {
+            JobResult::Suite(r) => r,
+            other => panic!("expected suite result, got {}", other.kind()),
+        }
+    }
+
+    pub fn sweep(self) -> (Vec<KernelResult>, KernelSweepMetrics) {
+        match self {
+            JobResult::Sweep { results, metrics } => (results, metrics),
+            other => panic!("expected sweep result, got {}", other.kind()),
+        }
+    }
+
+    pub fn artifact(self) -> Vec<Vec<f64>> {
+        match self {
+            JobResult::Artifact(r) => r,
+            other => panic!("expected artifact result, got {}", other.kind()),
+        }
+    }
+}
+
+impl Engine {
+    /// Execute one [`Job`] under this engine's configuration. The
+    /// returned variant always matches the submitted job's.
+    pub fn submit(&self, job: Job) -> Result<JobResult> {
+        match job {
+            Job::Kernel(spec) => Ok(JobResult::Kernel(spec.run(self)?)),
+            Job::Gemm(g) => {
+                let seed = g.seed.unwrap_or(self.seed());
+                let r = gemm_scaled(self, g.n, &g.format, seed, g.spread_decades, g.scale)?;
+                Ok(JobResult::Gemm(r))
+            }
+            Job::Suite { n, seed } => {
+                Ok(JobResult::Suite(run_suite(self, n, seed.unwrap_or(self.seed()))?))
+            }
+            Job::Sweep(spec) => {
+                let (results, metrics) = kernel_sweep(self, &spec)?;
+                Ok(JobResult::Sweep { results, metrics })
+            }
+            Job::Artifact { name, inputs } => {
+                Ok(JobResult::Artifact(self.pjrt()?.run_f64(&name, inputs)?))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::EngineConfig;
+    use crate::kernels::Kernel;
+
+    /// submit() returns the variant matching the job, and the unwrap
+    /// helpers hand the payload through.
+    #[test]
+    fn submit_variants_round_trip() {
+        let eng = EngineConfig::new().workers(2).build().unwrap();
+        let spec = KernelSpec { kernel: Kernel::Dot, format: "t8", n: 64, seed: 5 };
+        let r = eng.submit(Job::Kernel(spec)).unwrap().kernel();
+        assert_eq!(r.kernel, "dot");
+        assert!(r.executed > 0);
+
+        let g = eng.submit(Job::Gemm(GemmJob::new(16, "t8"))).unwrap().gemm();
+        assert_eq!(g.n, 16);
+        assert!(g.rel_error.is_finite());
+
+        let art = eng
+            .submit(Job::Artifact {
+                name: "takum8_roundtrip".into(),
+                inputs: vec![TensorF64::vec(vec![1.0, 2.5, -3.0])],
+            })
+            .unwrap()
+            .artifact();
+        assert_eq!(art[0].len(), 3);
+    }
+
+    /// A Gemm job with `seed: None` inherits the engine seed: two engines
+    /// differing only in their configured seed produce different GEMMs,
+    /// and an explicit job seed overrides the engine's.
+    #[test]
+    fn jobs_inherit_engine_seed() {
+        let run = |engine_seed: u64, job_seed: Option<u64>| {
+            let eng = EngineConfig::new().seed(engine_seed).build().unwrap();
+            let job = GemmJob { seed: job_seed, ..GemmJob::new(16, "t8") };
+            eng.submit(Job::Gemm(job)).unwrap().gemm().rel_error
+        };
+        assert_ne!(run(1, None).to_bits(), run(2, None).to_bits());
+        assert_eq!(run(1, Some(7)).to_bits(), run(2, Some(7)).to_bits());
+    }
+}

@@ -1,0 +1,280 @@
+//! # The unified execution context: one front door for every workload
+//!
+//! The paper's streamlining argument (§IV) is that takum's uniformity
+//! collapses a zoo of per-format instruction variants into one consistent
+//! surface. This module is the same move applied to the crate's own API:
+//! instead of per-call mode/config/backend-suffixed variants
+//! multiplying every time an execution axis is added, **all**
+//! execution state is configured once through [`EngineConfig`] (a typed
+//! builder: plane [`Backend`], [`CodecMode`], worker count,
+//! [`WarmPolicy`], default RNG seed) and carried by an [`Engine`] — the
+//! only object that constructs [`Machine`]s, owns the shared caches, and
+//! runs jobs. The kernel suite, the GEMM harness, both sweeps, the
+//! runtime artifact service, the benches and the CLI all go through it.
+//!
+//! ## The job model
+//!
+//! [`Engine::submit`] executes one [`Job`]:
+//!
+//! | job                | work                                            |
+//! |--------------------|-------------------------------------------------|
+//! | [`Job::Kernel`]    | one (kernel, format, size) cell of the suite    |
+//! | [`Job::Gemm`]      | one quantised GEMM (E11)                        |
+//! | [`Job::Suite`]     | every kernel × format at one size, sequential   |
+//! | [`Job::Sweep`]     | kernels × formats × sizes over the worker pool  |
+//! | [`Job::Artifact`]  | a runtime artifact through the PJRT service     |
+//!
+//! Fan-out jobs run on the engine's worker pool
+//! ([`Engine::run_tasks`]): an atomic counter hands out task indices,
+//! workers stream `(index, result)` records through a bounded channel,
+//! and the merger **slots results back by index** — so job output is a
+//! pure function of the config and the spec, independent of the worker
+//! count or thread scheduling.
+//!
+//! ## Determinism guarantee
+//!
+//! For a fixed [`EngineConfig`] and job spec, every result is
+//! bit-deterministic; across configs, the `Backend × CodecMode` axes are
+//! **bit-identical by contract** (a pure performance knob), enforced by
+//! the cross-backend suites and the differential fuzz corpus
+//! (`rust/tests/differential_fuzz.rs`), which drive `Engine`-built
+//! machines through every config.
+//!
+//! ## Cache ownership
+//!
+//! The engine owns the warm state of the process-wide [`crate::num::lut`]
+//! tables ([`Engine::build`] warms the configured set *before* any
+//! machine is handed out or any fan-out starts — no worker ever blocks on
+//! a cold `OnceLock` build) and a **shared mnemonic-plan cache**: every
+//! [`Engine::machine`] is pre-seeded with all plans the engine has seen,
+//! and builders merge newly resolved plans back on
+//! [`crate::kernels::KernelBuilder::finish`], so repeated jobs never
+//! re-parse a mnemonic the engine already knows. Plans are pure functions
+//! of the mnemonic, so sharing them cannot change results. The PJRT
+//! artifact service is owned lazily: the first [`Job::Artifact`] (or
+//! [`Engine::pjrt`]) starts it, subsequent jobs share it.
+//!
+//! ## Extension recipe
+//!
+//! A new execution axis (the ROADMAP's GPU backend slot, an AVX-512 tier
+//! selector) is added by extending [`EngineConfig`] — one new builder
+//! method, one line in [`Engine::tag`] — instead of a new `_with_*`
+//! signature at every call site; every caller inherits it through the
+//! front door automatically.
+
+pub mod config;
+pub mod job;
+pub mod pool;
+
+pub use config::{EngineConfig, WarmPolicy};
+pub use job::{GemmJob, Job, JobResult};
+
+pub(crate) use config::process_default;
+
+use crate::num::lut;
+use crate::runtime::{default_artifact_dir, PjrtHandle, PjrtService};
+use crate::sim::{Backend, CodecMode, LanePlan, Machine};
+use anyhow::{ensure, Result};
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// The execution context (see the module docs): built once from an
+/// [`EngineConfig`], shared by reference across workers.
+pub struct Engine {
+    cfg: EngineConfig,
+    /// Shared mnemonic-plan cache: seeded into every handed-out machine,
+    /// merged back by the builders.
+    plans: Mutex<HashMap<String, LanePlan>>,
+    /// Lazily started PJRT artifact service (graph-interpreter fallback
+    /// without the `pjrt` feature).
+    pjrt: Mutex<Option<PjrtService>>,
+}
+
+impl std::fmt::Debug for Engine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Engine").field("cfg", &self.cfg).finish_non_exhaustive()
+    }
+}
+
+impl Engine {
+    /// Validate the config, warm the configured LUT set, and build the
+    /// context. Called by [`EngineConfig::build`].
+    pub(crate) fn build(cfg: EngineConfig) -> Result<Engine> {
+        ensure!(
+            cfg.workers >= 1,
+            "engine workers must be at least 1, got {} (pass --workers N or \
+             EngineConfig::workers(N) with N ≥ 1)",
+            cfg.workers
+        );
+        // Warm before any machine or worker exists: the whole point of
+        // the policy is that fan-outs start against hot tables.
+        let eng = Engine { cfg, plans: Mutex::new(HashMap::new()), pjrt: Mutex::new(None) };
+        eng.warm_tables(eng.cfg.warm);
+        Ok(eng)
+    }
+
+    /// Apply a [`WarmPolicy`] now (idempotent — already-built tables are
+    /// a no-op). [`Engine::build`] runs the configured policy; workloads
+    /// whose LUT use is independent of the codec mode (the Figure 2
+    /// conversion sweep round-trips through the tables even under
+    /// [`CodecMode::Arith`]) call this with their own requirement before
+    /// fanning out, so warm ownership stays here rather than as
+    /// scattered `lut::warm` calls at the call sites.
+    pub fn warm_tables(&self, policy: WarmPolicy) {
+        match policy {
+            WarmPolicy::Auto => {
+                if self.cfg.mode == CodecMode::Lut {
+                    lut::warm();
+                }
+            }
+            WarmPolicy::Tables8 => lut::warm8(),
+            WarmPolicy::Full => lut::warm(),
+            WarmPolicy::Lazy => {}
+        }
+    }
+
+    /// Shorthand for `EngineConfig::from_env().build()` — the env-driven
+    /// front door the CLI smoke legs and benches use.
+    pub fn from_env() -> Result<Engine> {
+        EngineConfig::from_env().build()
+    }
+
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn backend(&self) -> Backend {
+        self.cfg.backend
+    }
+
+    pub fn mode(&self) -> CodecMode {
+        self.cfg.mode
+    }
+
+    pub fn workers(&self) -> usize {
+        self.cfg.workers
+    }
+
+    /// The default RNG seed jobs inherit when their spec leaves the seed
+    /// unset.
+    pub fn seed(&self) -> u64 {
+        self.cfg.seed
+    }
+
+    /// Hand out a configured [`Machine`]: codec mode and backend from the
+    /// engine config, plan cache pre-seeded with everything the engine
+    /// has resolved so far.
+    pub fn machine(&self) -> Machine {
+        let plans = self.plans.lock().expect("plan cache poisoned").clone();
+        Machine::for_engine(self.cfg.mode, self.cfg.backend, plans)
+    }
+
+    /// Merge a machine's newly resolved mnemonic plans back into the
+    /// shared cache (called by `KernelBuilder::finish`).
+    pub(crate) fn absorb_plans(&self, m: &Machine) {
+        let mut plans = self.plans.lock().expect("plan cache poisoned");
+        for (mn, plan) in m.plan_cache() {
+            if !plans.contains_key(mn) {
+                plans.insert(mn.clone(), *plan);
+            }
+        }
+    }
+
+    /// Number of mnemonics in the shared plan cache (observability +
+    /// tests).
+    pub fn cached_plans(&self) -> usize {
+        self.plans.lock().expect("plan cache poisoned").len()
+    }
+
+    /// The engine-owned PJRT artifact service, started on first use from
+    /// the default artifact directory.
+    pub fn pjrt(&self) -> Result<PjrtHandle> {
+        let mut guard = self.pjrt.lock().expect("pjrt service poisoned");
+        if guard.is_none() {
+            *guard = Some(PjrtService::start(&default_artifact_dir())?);
+        }
+        Ok(guard.as_ref().expect("just installed").handle())
+    }
+
+    /// Names of the artifacts the engine-owned runtime can serve.
+    pub fn artifact_names(&self) -> Result<Vec<String>> {
+        self.pjrt()?.names()
+    }
+
+    /// A compact `key=value` rendering of the execution config — the
+    /// engine-config tag stamped into the bench JSON artifacts.
+    pub fn tag(&self) -> String {
+        format!(
+            "backend={};codec={};workers={}",
+            self.cfg.backend.name(),
+            self.cfg.mode.name(),
+            self.cfg.workers
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The warm contract: building a LUT-mode engine warms the full table
+    /// set *at build time* — i.e. before `machine()` is ever called or
+    /// any worker fan-out starts.
+    #[test]
+    fn build_warms_tables_before_first_fanout() {
+        let eng = EngineConfig::new().codec(CodecMode::Lut).workers(2).build().unwrap();
+        assert!(lut::is_warm8(), "8-bit tables must be warm after build");
+        assert!(lut::is_warm16(), "16-bit tables must be warm after build");
+        // And a fan-out started right after build observes warm tables
+        // from every worker.
+        let (seen, _) = eng
+            .run_tasks(8, |i| {
+                assert!(lut::is_warm8() && lut::is_warm16(), "cold table in worker");
+                Ok(i)
+            })
+            .unwrap();
+        assert_eq!(seen, (0..8).collect::<Vec<_>>());
+    }
+
+    /// Engine-built machines carry the configured axes, and the shared
+    /// plan cache seeds later machines with earlier resolutions.
+    #[test]
+    fn machines_inherit_config_and_share_plans() {
+        let eng = EngineConfig::new()
+            .codec(CodecMode::Arith)
+            .backend(Backend::Vector)
+            .build()
+            .unwrap();
+        let mut m = eng.machine();
+        assert_eq!(m.mode(), CodecMode::Arith);
+        assert_eq!(m.backend(), Backend::Vector);
+
+        use crate::sim::{Instruction, LaneType, Operand};
+        let t = LaneType::Takum(16);
+        m.load_f64(0, t, &[1.0, 2.0]);
+        m.load_f64(1, t, &[3.0, 4.0]);
+        m.step(&Instruction::new(
+            "VADDPT16",
+            Operand::Vreg(2),
+            vec![Operand::Vreg(0), Operand::Vreg(1)],
+        ))
+        .unwrap();
+        assert_eq!(eng.cached_plans(), 0, "plans merge back only on absorb");
+        eng.absorb_plans(&m);
+        assert_eq!(eng.cached_plans(), 1);
+        // A fresh machine starts with the plan pre-seeded.
+        let m2 = eng.machine();
+        assert!(m2.plan_cache().contains_key("VADDPT16"));
+    }
+
+    #[test]
+    fn tag_renders_all_axes() {
+        let eng = EngineConfig::new()
+            .backend(Backend::Graph)
+            .codec(CodecMode::Arith)
+            .workers(3)
+            .build()
+            .unwrap();
+        assert_eq!(eng.tag(), "backend=graph;codec=arith;workers=3");
+    }
+}

@@ -1,0 +1,139 @@
+//! The engine's worker pool: one deterministic, slot-merged fan-out
+//! shared by every parallel job (the kernel sweep, the Figure 2
+//! conversion sweep, and any future fan-out).
+//!
+//! Architecture (inherited from the coordinator's original pools, now in
+//! exactly one place): an atomic index counter hands out task indices;
+//! each worker runs the task closure and streams `(index, result)`
+//! records to the merger through a bounded channel (backpressure: workers
+//! block when the merger lags); the merger slots results back **by
+//! index**, so the output order — and every number in it — is independent
+//! of the worker count and of thread scheduling. Each task must be a pure
+//! function of its index.
+
+use super::Engine;
+use anyhow::Result;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+impl Engine {
+    /// Run `count` tasks over the worker pool; results come back in
+    /// index order regardless of scheduling. Returns the slotted results
+    /// plus the per-worker completion counts (the load-balance metric the
+    /// sweep reports). On the first task error the fan-out is aborted:
+    /// the merger raises an abort flag workers check before claiming the
+    /// next index, so in-flight tasks finish but queued work is skipped,
+    /// and the **first** error is returned after all workers have joined
+    /// (later errors are dropped — with deterministic index handout the
+    /// first received one is the reproducible one).
+    pub fn run_tasks<R, F>(&self, count: usize, task: F) -> Result<(Vec<R>, Vec<usize>)>
+    where
+        R: Send,
+        F: Fn(usize) -> Result<R> + Sync,
+    {
+        let workers = self.workers().max(1).min(count.max(1));
+        let next = AtomicUsize::new(0);
+        let abort = AtomicBool::new(false);
+        // Bounded fan-in: keep the merger at most ~1k records behind.
+        let (tx, rx) = mpsc::sync_channel::<(usize, Result<R>)>(1024);
+
+        let mut slots: Vec<Option<R>> = (0..count).map(|_| None).collect();
+        let mut per_worker = vec![0usize; workers];
+        let mut first_err: Option<anyhow::Error> = None;
+
+        std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(workers);
+            for _ in 0..workers {
+                let tx = tx.clone();
+                let next = &next;
+                let abort = &abort;
+                let task = &task;
+                handles.push(s.spawn(move || {
+                    let mut local = 0usize;
+                    loop {
+                        if abort.load(Ordering::Relaxed) {
+                            break;
+                        }
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= count {
+                            break;
+                        }
+                        if tx.send((i, task(i))).is_err() {
+                            return local;
+                        }
+                        local += 1;
+                    }
+                    local
+                }));
+            }
+            drop(tx);
+
+            while let Ok((i, res)) = rx.recv() {
+                match res {
+                    Ok(r) => slots[i] = Some(r),
+                    Err(e) => {
+                        abort.store(true, Ordering::Relaxed);
+                        if first_err.is_none() {
+                            first_err = Some(e);
+                        }
+                    }
+                }
+            }
+            for (w, h) in handles.into_iter().enumerate() {
+                per_worker[w] = h.join().expect("engine pool worker panicked");
+            }
+        });
+
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        let results: Vec<R> =
+            slots.into_iter().map(|s| s.expect("missing pool slot")).collect();
+        Ok((results, per_worker))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::EngineConfig;
+    use anyhow::anyhow;
+
+    /// Slot-merged output is in task order for any worker count, and the
+    /// per-worker counts account for every task.
+    #[test]
+    fn deterministic_order_across_worker_counts() {
+        for workers in [1usize, 2, 7] {
+            let eng = EngineConfig::new().workers(workers).build().unwrap();
+            let (out, per_worker) = eng.run_tasks(23, |i| Ok(i * i)).unwrap();
+            assert_eq!(out, (0..23).map(|i| i * i).collect::<Vec<_>>(), "workers={workers}");
+            assert_eq!(per_worker.len(), workers.min(23));
+            assert_eq!(per_worker.iter().sum::<usize>(), 23);
+        }
+    }
+
+    /// A failing task surfaces its error after the fan-out drains; the
+    /// pool never panics on task errors.
+    #[test]
+    fn task_error_propagates() {
+        let eng = EngineConfig::new().workers(3).build().unwrap();
+        let err = eng
+            .run_tasks(10, |i| {
+                if i == 4 {
+                    Err(anyhow!("task 4 exploded"))
+                } else {
+                    Ok(i)
+                }
+            })
+            .unwrap_err();
+        assert!(err.to_string().contains("task 4 exploded"));
+    }
+
+    /// Zero tasks is a valid (empty) fan-out.
+    #[test]
+    fn empty_fanout_is_ok() {
+        let eng = EngineConfig::new().workers(2).build().unwrap();
+        let (out, per_worker) = eng.run_tasks(0, |_| Ok(0u32)).unwrap();
+        assert!(out.is_empty());
+        assert_eq!(per_worker.iter().sum::<usize>(), 0);
+    }
+}

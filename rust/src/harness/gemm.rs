@@ -23,8 +23,9 @@
 //! therefore all counts and errors) identical to the previous inline
 //! `Instruction::new` sequences.
 
+use crate::engine::Engine;
 use crate::kernels::{KernelBuilder, Pipeline};
-use crate::sim::{Backend, CodecMode, VecReg};
+use crate::sim::VecReg;
 use crate::util::rng::Rng;
 use anyhow::Result;
 
@@ -39,12 +40,21 @@ pub struct GemmResult {
     pub convert_instructions: u64,
 }
 
-/// Run the simulated GEMM and compare against the f64 reference.
-/// `spread_decades` controls the log-normal magnitude spread of the
-/// inputs: ~0.5 keeps everything inside OFP8's range; ≥2 exercises the
-/// dynamic-range story of the paper.
-pub fn gemm(n: usize, format: &str, seed: u64, spread_decades: f64) -> Result<GemmResult> {
-    gemm_scaled(n, format, seed, spread_decades, 1.0)
+/// Run the simulated GEMM under `engine` and compare against the f64
+/// reference. `spread_decades` controls the log-normal magnitude spread
+/// of the inputs: ~0.5 keeps everything inside OFP8's range; ≥2 exercises
+/// the dynamic-range story of the paper. Both execution axes (codec mode
+/// × plane backend) come from the engine's config — the equivalence
+/// tests and benches pin them by building engines, not per-call variants.
+/// Also reachable as `engine.submit(Job::Gemm(..))`.
+pub fn gemm(
+    engine: &Engine,
+    n: usize,
+    format: &str,
+    seed: u64,
+    spread_decades: f64,
+) -> Result<GemmResult> {
+    gemm_scaled(engine, n, format, seed, spread_decades, 1.0)
 }
 
 /// [`gemm`] with an additional magnitude offset: all inputs are multiplied
@@ -52,65 +62,12 @@ pub fn gemm(n: usize, format: &str, seed: u64, spread_decades: f64) -> Result<Ge
 /// (entries around 10^5 are routine in FEM stiffness matrices and sit far
 /// outside OFP8's dynamic range while takum8 still resolves them).
 pub fn gemm_scaled(
+    engine: &Engine,
     n: usize,
     format: &str,
     seed: u64,
     spread_decades: f64,
     scale: f64,
-) -> Result<GemmResult> {
-    gemm_scaled_with_mode(n, format, seed, spread_decades, scale, CodecMode::default())
-}
-
-/// [`gemm`] with an explicit simulator [`CodecMode`] — the hook the
-/// equivalence tests and `benches/gemm_e2e.rs` use to compare the
-/// LUT-backed lane engine against the pre-refactor arithmetic path.
-pub fn gemm_with_mode(
-    n: usize,
-    format: &str,
-    seed: u64,
-    spread_decades: f64,
-    mode: CodecMode,
-) -> Result<GemmResult> {
-    gemm_scaled_with_mode(n, format, seed, spread_decades, 1.0, mode)
-}
-
-/// [`gemm`] with both simulator axes pinned (codec mode × plane
-/// [`Backend`]) — the hook of the cross-backend equivalence tests and
-/// the Scalar-vs-Vector bench columns.
-pub fn gemm_with_config(
-    n: usize,
-    format: &str,
-    seed: u64,
-    spread_decades: f64,
-    mode: CodecMode,
-    backend: Backend,
-) -> Result<GemmResult> {
-    gemm_scaled_with_config(n, format, seed, spread_decades, 1.0, mode, backend)
-}
-
-/// [`gemm_scaled`] with an explicit simulator [`CodecMode`] (plane
-/// backend from `TAKUM_BACKEND`).
-pub fn gemm_scaled_with_mode(
-    n: usize,
-    format: &str,
-    seed: u64,
-    spread_decades: f64,
-    scale: f64,
-    mode: CodecMode,
-) -> Result<GemmResult> {
-    gemm_scaled_with_config(n, format, seed, spread_decades, scale, mode, Backend::from_env())
-}
-
-/// [`gemm_scaled`] with both simulator axes pinned.
-#[allow(clippy::too_many_arguments)]
-pub fn gemm_scaled_with_config(
-    n: usize,
-    format: &str,
-    seed: u64,
-    spread_decades: f64,
-    scale: f64,
-    mode: CodecMode,
-    backend: Backend,
 ) -> Result<GemmResult> {
     anyhow::ensure!(n >= 2 && n % 2 == 0, "n must be even and ≥ 2");
     let p = Pipeline::for_format(format)?;
@@ -141,7 +98,7 @@ pub fn gemm_scaled_with_config(
     // uses the exact same per-format lowering (storage loads, OFP8
     // promote, widening dp) as every kernel of the suite. Untraced: the
     // O(n³) instruction stream is counted, not kept.
-    let mut kb = KernelBuilder::new_untraced_with(p, mode, backend);
+    let mut kb = KernelBuilder::untraced(p, engine);
     let mut c_out = vec![0.0f64; n * n];
     let (va, vb, vc, vat, vbt) = (0u8, 1u8, 2u8, 3u8, 4u8);
 
@@ -197,21 +154,21 @@ pub fn gemm_scaled_with_config(
 }
 
 /// CLI wrapper: run one format and render a comparison against the
-/// remaining pipelines.
-pub fn run_sim_gemm(n: usize, format: &str, seed: u64, backend: Backend) -> Result<String> {
+/// remaining pipelines, under `engine`'s configuration.
+pub fn run_sim_gemm(engine: &Engine, n: usize, format: &str, seed: u64) -> Result<String> {
     let formats = ["t8", "t16", "bf16", "f16", "e4m3", "e5m2"];
     anyhow::ensure!(formats.contains(&format), "unknown format {format}");
     let mut out = String::new();
     out.push_str(&format!(
         "simulated quantised GEMM, n={n}, {} backend (C = A·B, inputs quantised; f64 reference)\n",
-        backend.name()
+        engine.backend().name()
     ));
     out.push_str(&format!(
         "{:<8} {:>12} {:>12} {:>10} {:>10}\n",
         "format", "rel. error", "instructions", "dp", "convert"
     ));
     for f in formats {
-        let r = gemm_with_config(n, f, seed, 1.0, CodecMode::default(), backend)?;
+        let r = gemm(engine, n, f, seed, 1.0)?;
         let marker = if f == format { " *" } else { "" };
         out.push_str(&format!(
             "{:<8} {:>12.3e} {:>12} {:>10} {:>10}{}\n",
@@ -224,6 +181,18 @@ pub fn run_sim_gemm(n: usize, format: &str, seed: u64, backend: Backend) -> Resu
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::EngineConfig;
+    use crate::sim::{Backend, CodecMode};
+
+    /// Env-default engine (the old implicit default axes, now explicit).
+    fn engine() -> Engine {
+        EngineConfig::from_env().build().unwrap()
+    }
+
+    /// Engine with both axes pinned.
+    fn engine_cfg(mode: CodecMode, backend: Backend) -> Engine {
+        EngineConfig::new().codec(mode).backend(backend).build().unwrap()
+    }
 
     #[test]
     fn narrow_spread_all_formats_work() {
@@ -232,12 +201,13 @@ mod tests {
         // average makes it competitive — the paper's "comparable within
         // their stability regions".
         let n = 32;
+        let eng = engine();
         for f in ["t8", "t16", "bf16", "f16", "e4m3", "e5m2"] {
-            let r = gemm(n, f, 1, 0.4).unwrap();
+            let r = gemm(&eng, n, f, 1, 0.4).unwrap();
             assert!(r.rel_error > 0.0 && r.rel_error < 0.5, "{f}: {}", r.rel_error);
         }
-        let t16 = gemm(n, "t16", 1, 0.4).unwrap();
-        let bf16 = gemm(n, "bf16", 1, 0.4).unwrap();
+        let t16 = gemm(&eng, n, "t16", 1, 0.4).unwrap();
+        let bf16 = gemm(&eng, n, "bf16", 1, 0.4).unwrap();
         assert!(t16.rel_error < bf16.rel_error, "t16={} bf16={}", t16.rel_error, bf16.rel_error);
     }
 
@@ -247,22 +217,24 @@ mod tests {
         // the product carries no signal, rel. error ≈ 100%. takum8's
         // tapered envelope still resolves the magnitudes.
         let n = 32;
-        let t8 = gemm_scaled(n, "t8", 1, 0.3, 1e5).unwrap();
-        let e4 = gemm_scaled(n, "e4m3", 1, 0.3, 1e5).unwrap();
-        let e5 = gemm_scaled(n, "e5m2", 1, 0.3, 1e5).unwrap();
+        let eng = engine();
+        let t8 = gemm_scaled(&eng, n, "t8", 1, 0.3, 1e5).unwrap();
+        let e4 = gemm_scaled(&eng, n, "e4m3", 1, 0.3, 1e5).unwrap();
+        let e5 = gemm_scaled(&eng, n, "e5m2", 1, 0.3, 1e5).unwrap();
         assert!(e4.rel_error > 0.9, "e4m3={}", e4.rel_error);
         assert!(e5.rel_error > 0.9, "e5m2={}", e5.rel_error);
         assert!(t8.rel_error < 0.8, "t8={}", t8.rel_error);
         assert!(t8.rel_error < e4.rel_error && t8.rel_error < e5.rel_error);
-        let t16 = gemm_scaled(n, "t16", 1, 0.3, 1e5).unwrap();
+        let t16 = gemm_scaled(&eng, n, "t16", 1, 0.3, 1e5).unwrap();
         assert!(t16.rel_error < t8.rel_error);
     }
 
     #[test]
     fn ofp8_needs_convert_instructions_takum_does_not() {
         let n = 16;
-        let t8 = gemm(n, "t8", 2, 1.0).unwrap();
-        let e4 = gemm(n, "e4m3", 2, 1.0).unwrap();
+        let eng = engine();
+        let t8 = gemm(&eng, n, "t8", 2, 1.0).unwrap();
+        let e4 = gemm(&eng, n, "e4m3", 2, 1.0).unwrap();
         assert_eq!(t8.convert_instructions, 0);
         assert!(e4.convert_instructions > 0);
         // takum8 dp packs 64 lanes vs 32 for PH: fewer total instructions.
@@ -271,8 +243,9 @@ mod tests {
 
     #[test]
     fn deterministic() {
-        let a = gemm(16, "t8", 3, 1.0).unwrap();
-        let b = gemm(16, "t8", 3, 1.0).unwrap();
+        let eng = engine();
+        let a = gemm(&eng, 16, "t8", 3, 1.0).unwrap();
+        let b = gemm(&eng, 16, "t8", 3, 1.0).unwrap();
         assert_eq!(a.rel_error, b.rel_error);
         assert_eq!(a.executed, b.executed);
     }
@@ -283,10 +256,12 @@ mod tests {
     /// pipeline the paper compares, at n ∈ {16, 32}.
     #[test]
     fn lut_lane_engine_identical_to_per_lane_path() {
+        let lut = engine_cfg(CodecMode::Lut, Backend::Scalar);
+        let arith = engine_cfg(CodecMode::Arith, Backend::Scalar);
         for f in ["t8", "t16", "bf16", "e4m3"] {
             for n in [16usize, 32] {
-                let fast = gemm_with_mode(n, f, 7, 1.0, CodecMode::Lut).unwrap();
-                let slow = gemm_with_mode(n, f, 7, 1.0, CodecMode::Arith).unwrap();
+                let fast = gemm(&lut, n, f, 7, 1.0).unwrap();
+                let slow = gemm(&arith, n, f, 7, 1.0).unwrap();
                 assert_eq!(
                     fast.rel_error.to_bits(),
                     slow.rel_error.to_bits(),
@@ -300,14 +275,15 @@ mod tests {
                     fast.convert_instructions, slow.convert_instructions,
                     "{f} n={n}: convert"
                 );
-                // The default-mode entry point is the LUT path.
-                let default = gemm(n, f, 7, 1.0).unwrap();
+                // The default engine config is the LUT path.
+                let default = gemm(&engine_cfg(CodecMode::default(), Backend::Scalar), n, f, 7, 1.0)
+                    .unwrap();
                 assert_eq!(default.rel_error.to_bits(), fast.rel_error.to_bits());
             }
         }
         // And under the badly-scaled FEM regime, where OFP8 saturates.
-        let fast = gemm_scaled_with_mode(32, "e4m3", 11, 0.3, 1e5, CodecMode::Lut).unwrap();
-        let slow = gemm_scaled_with_mode(32, "e4m3", 11, 0.3, 1e5, CodecMode::Arith).unwrap();
+        let fast = gemm_scaled(&lut, 32, "e4m3", 11, 0.3, 1e5).unwrap();
+        let slow = gemm_scaled(&arith, 32, "e4m3", 11, 0.3, 1e5).unwrap();
         assert_eq!(fast.rel_error.to_bits(), slow.rel_error.to_bits());
     }
 
@@ -317,10 +293,12 @@ mod tests {
     /// pipeline the paper compares.
     #[test]
     fn vector_backend_identical_to_scalar_gemm() {
+        let scalar = engine_cfg(CodecMode::Lut, Backend::Scalar);
+        let vector = engine_cfg(CodecMode::Lut, Backend::Vector);
         for f in ["t8", "t16", "bf16", "e4m3"] {
             for n in [16usize, 32] {
-                let s = gemm_with_config(n, f, 7, 1.0, CodecMode::Lut, Backend::Scalar).unwrap();
-                let v = gemm_with_config(n, f, 7, 1.0, CodecMode::Lut, Backend::Vector).unwrap();
+                let s = gemm(&scalar, n, f, 7, 1.0).unwrap();
+                let v = gemm(&vector, n, f, 7, 1.0).unwrap();
                 assert_eq!(
                     s.rel_error.to_bits(),
                     v.rel_error.to_bits(),
@@ -334,12 +312,8 @@ mod tests {
             }
         }
         // And under the badly-scaled FEM regime, where OFP8 saturates.
-        let s =
-            gemm_scaled_with_config(32, "e4m3", 11, 0.3, 1e5, CodecMode::Lut, Backend::Scalar)
-                .unwrap();
-        let v =
-            gemm_scaled_with_config(32, "e4m3", 11, 0.3, 1e5, CodecMode::Lut, Backend::Vector)
-                .unwrap();
+        let s = gemm_scaled(&scalar, 32, "e4m3", 11, 0.3, 1e5).unwrap();
+        let v = gemm_scaled(&vector, 32, "e4m3", 11, 0.3, 1e5).unwrap();
         assert_eq!(s.rel_error.to_bits(), v.rel_error.to_bits());
     }
 }

@@ -20,31 +20,37 @@
 //! perturb the numerics.
 
 use super::pipeline::Pipeline;
-use crate::sim::{Backend, CodecMode, Instruction, Machine, Operand, Program};
+use crate::engine::Engine;
+use crate::sim::{Instruction, Machine, Operand, Program};
 use anyhow::Result;
 
 /// Register the builder reserves as an all-zero constant (never written;
 /// bit pattern 0 decodes to 0.0 in every lane format).
 pub const ZERO_REG: u8 = 31;
 
-/// Typed emitter over one machine + pipeline.
-pub struct KernelBuilder {
+/// Typed emitter over one engine-built machine + pipeline. The machine's
+/// execution axes (codec mode, plane backend) and pre-seeded
+/// mnemonic-plan cache all come from the [`Engine`]; on
+/// [`KernelBuilder::finish`] the plans this lowering resolved flow back
+/// into the engine's shared cache.
+pub struct KernelBuilder<'e> {
     m: Machine,
     pipe: Pipeline,
     trace: Program,
     tracing: bool,
+    engine: &'e Engine,
 }
 
-impl KernelBuilder {
-    pub fn new(pipe: Pipeline, mode: CodecMode) -> KernelBuilder {
-        Self::new_with(pipe, mode, Backend::from_env())
-    }
-
-    /// A builder with both simulator axes pinned: codec mode × plane
-    /// backend ([`KernelBuilder::new`] honours `TAKUM_BACKEND`).
-    pub fn new_with(pipe: Pipeline, mode: CodecMode, backend: Backend) -> KernelBuilder {
-        let m = Machine::with_config(mode, backend);
-        KernelBuilder { m, pipe, trace: Program::default(), tracing: true }
+impl<'e> KernelBuilder<'e> {
+    /// A tracing builder on a machine configured by `engine`.
+    pub fn new(pipe: Pipeline, engine: &'e Engine) -> KernelBuilder<'e> {
+        KernelBuilder {
+            m: engine.machine(),
+            pipe,
+            trace: Program::default(),
+            tracing: true,
+            engine,
+        }
     }
 
     /// A builder that does not record the instruction trace — for hot
@@ -52,13 +58,8 @@ impl KernelBuilder {
     /// O(n³) instructions; keeping them all would turn an O(1)-memory
     /// loop into gigabytes). [`KernelBuilder::finish`] returns an empty
     /// [`Program`].
-    pub fn new_untraced(pipe: Pipeline, mode: CodecMode) -> KernelBuilder {
-        KernelBuilder { tracing: false, ..KernelBuilder::new(pipe, mode) }
-    }
-
-    /// Untraced builder with an explicit plane backend.
-    pub fn new_untraced_with(pipe: Pipeline, mode: CodecMode, backend: Backend) -> KernelBuilder {
-        KernelBuilder { tracing: false, ..KernelBuilder::new_with(pipe, mode, backend) }
+    pub fn untraced(pipe: Pipeline, engine: &'e Engine) -> KernelBuilder<'e> {
+        KernelBuilder { tracing: false, ..KernelBuilder::new(pipe, engine) }
     }
 
     pub fn pipeline(&self) -> &Pipeline {
@@ -74,8 +75,11 @@ impl KernelBuilder {
         &self.trace
     }
 
-    /// Tear down into the executed machine and the emitted program.
+    /// Tear down into the executed machine and the emitted program,
+    /// merging newly resolved mnemonic plans back into the engine's
+    /// shared cache.
     pub fn finish(self) -> (Machine, Program) {
+        self.engine.absorb_plans(&self.m);
         (self.m, self.trace)
     }
 
@@ -276,11 +280,19 @@ impl KernelBuilder {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::EngineConfig;
+
+    /// The env-default engine every test builder runs on (same axes the
+    /// old default constructor resolved, now through the front door).
+    fn engine() -> Engine {
+        EngineConfig::from_env().build().unwrap()
+    }
 
     #[test]
     fn builder_traces_what_it_executes() {
         let pipe = Pipeline::for_format("t16").unwrap();
-        let mut kb = KernelBuilder::new(pipe, CodecMode::default());
+        let eng = engine();
+        let mut kb = KernelBuilder::new(pipe, &eng);
         kb.load_compute(0, &[1.0, 2.0, 3.0, 4.0]);
         kb.load_compute(1, &[0.5; 4]);
         kb.fp2("VMUL", 2, 0, 1).unwrap();
@@ -299,7 +311,8 @@ mod tests {
     fn convert_roles_are_free_for_takum_and_taxed_for_ofp8() {
         for (fmt, cost) in [("t8", 0u64), ("e4m3", 2)] {
             let pipe = Pipeline::for_format(fmt).unwrap();
-            let mut kb = KernelBuilder::new(pipe, CodecMode::default());
+            let eng = engine();
+            let mut kb = KernelBuilder::new(pipe, &eng);
             kb.load_narrow(0, &[1.0, 2.0]);
             let c = kb.to_compute(1, 0).unwrap();
             let s = kb.store_narrow(2, c).unwrap();
@@ -315,7 +328,8 @@ mod tests {
             let pipe = Pipeline::for_format(fmt).unwrap();
             let wl = pipe.wide_lanes();
             let cl = pipe.compute_lanes();
-            let mut kb = KernelBuilder::new(pipe, CodecMode::default());
+            let eng = engine();
+            let mut kb = KernelBuilder::new(pipe, &eng);
             // Small integers are exact in every wide format.
             let xs: Vec<f64> = (0..wl).map(|i| (i % 4) as f64).collect();
             kb.load_wide(3, &xs);
@@ -332,7 +346,8 @@ mod tests {
     fn broadcast_const_fills_all_lanes() {
         let pipe = Pipeline::for_format("e4m3").unwrap();
         let cl = pipe.compute_lanes();
-        let mut kb = KernelBuilder::new(pipe, CodecMode::default());
+        let eng = engine();
+        let mut kb = KernelBuilder::new(pipe, &eng);
         kb.broadcast_const(7, 8, 1.5).unwrap();
         let lanes = kb.read_compute(7, cl);
         assert!(lanes.iter().all(|&v| v == 1.5));

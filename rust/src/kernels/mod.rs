@@ -11,10 +11,11 @@
 //!   directly in their storage format; that asymmetry **is** the
 //!   measurement.
 //! * [`builder`] — [`KernelBuilder`], the typed emitter every kernel (and
-//!   the E11 GEMM harness) lowers through. It steps a [`crate::sim::Machine`]
-//!   while recording the emitted [`crate::sim::Program`], so each lowering
-//!   is simultaneously an executable run and an inspectable instruction
-//!   stream.
+//!   the E11 GEMM harness) lowers through. It steps an **engine-built**
+//!   [`crate::sim::Machine`] (execution axes and the shared mnemonic-plan
+//!   cache come from [`crate::engine::Engine`]) while recording the
+//!   emitted [`crate::sim::Program`], so each lowering is simultaneously
+//!   an executable run and an inspectable instruction stream.
 //! * [`workloads`] — the kernels: dot product, AXPY, cubic-Horner
 //!   activation, numerically-stable softmax (range-reduced exp via
 //!   `VRNDSCALE`/`VSCALEF`), 5-tap 1-D convolution, and sum/max
@@ -29,12 +30,15 @@
 //!
 //! ## Adding a kernel
 //!
-//! Write a `run_<name>` lowering in [`workloads`] that draws inputs from
-//! its seed, emits **only** through [`KernelBuilder`] role methods (so
-//! both ISAs stay in lock-step), and returns a `KernelRun`; then add a
-//! variant to [`Kernel`] and wire it into `Kernel::ALL`/`run_raw`. Keep
-//! sizes multiples of [`workloads::TILE_ALIGN`] so instruction counts
-//! stay exact functions of `(kernel, format, n)`.
+//! Write a `run_<name>(pipe, n, seed, engine)` lowering in [`workloads`]
+//! that draws inputs from its seed, emits **only** through
+//! [`KernelBuilder`] role methods (so both ISAs stay in lock-step), and
+//! returns a `KernelRun`; then add a variant to [`Kernel`] and wire it
+//! into `Kernel::ALL`/`run_raw`. Keep sizes multiples of
+//! [`workloads::TILE_ALIGN`] so instruction counts stay exact functions
+//! of `(kernel, format, n)`. Execution configuration never appears in
+//! kernel signatures beyond the `&Engine` — new axes ride in
+//! [`crate::engine::EngineConfig`].
 
 pub mod builder;
 pub mod pipeline;
@@ -43,4 +47,4 @@ pub mod workloads;
 
 pub use builder::KernelBuilder;
 pub use pipeline::{Isa, Pipeline};
-pub use suite::{render, run_suite, run_suite_with, Kernel, KernelResult, KernelSpec};
+pub use suite::{render, run_suite, Kernel, KernelResult, KernelSpec};

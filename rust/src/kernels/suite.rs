@@ -4,7 +4,7 @@
 
 use super::pipeline::{Isa, Pipeline};
 use super::workloads::{self, KernelRun};
-use crate::sim::{Backend, CodecMode};
+use crate::engine::Engine;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
@@ -50,21 +50,14 @@ impl Kernel {
         bail!("unknown kernel {name:?} (dot|axpy|poly|softmax|conv1d|reduce)")
     }
 
-    fn run_raw(
-        &self,
-        pipe: &Pipeline,
-        n: usize,
-        seed: u64,
-        mode: CodecMode,
-        backend: Backend,
-    ) -> Result<KernelRun> {
+    fn run_raw(&self, pipe: &Pipeline, n: usize, seed: u64, engine: &Engine) -> Result<KernelRun> {
         match self {
-            Kernel::Dot => workloads::run_dot(pipe, n, seed, mode, backend),
-            Kernel::Axpy => workloads::run_axpy(pipe, n, seed, mode, backend),
-            Kernel::Poly => workloads::run_poly(pipe, n, seed, mode, backend),
-            Kernel::Softmax => workloads::run_softmax(pipe, n, seed, mode, backend),
-            Kernel::Conv1d => workloads::run_conv1d(pipe, n, seed, mode, backend),
-            Kernel::Reduce => workloads::run_reduce(pipe, n, seed, mode, backend),
+            Kernel::Dot => workloads::run_dot(pipe, n, seed, engine),
+            Kernel::Axpy => workloads::run_axpy(pipe, n, seed, engine),
+            Kernel::Poly => workloads::run_poly(pipe, n, seed, engine),
+            Kernel::Softmax => workloads::run_softmax(pipe, n, seed, engine),
+            Kernel::Conv1d => workloads::run_conv1d(pipe, n, seed, engine),
+            Kernel::Reduce => workloads::run_reduce(pipe, n, seed, engine),
         }
     }
 }
@@ -79,21 +72,16 @@ pub struct KernelSpec {
 }
 
 impl KernelSpec {
-    /// Execute the spec: lower through the shared builder, run on the
-    /// simulator, extract the metrics. The plane backend honours
-    /// `TAKUM_BACKEND` (see [`KernelSpec::run_with`] for explicit
-    /// selection).
-    pub fn run(&self, mode: CodecMode) -> Result<KernelResult> {
-        self.run_with(mode, Backend::from_env())
-    }
-
-    /// Execute with both simulator axes pinned: codec mode × plane
-    /// backend (scalar / vector / graph) — the hook of the cross-backend
-    /// equivalence tests, the differential fuzz suite's metrics gate and
-    /// the per-backend bench columns.
-    pub fn run_with(&self, mode: CodecMode, backend: Backend) -> Result<KernelResult> {
+    /// Execute the spec under an [`Engine`]: lower through the shared
+    /// builder on an engine-built machine, run on the simulator, extract
+    /// the metrics. Both execution axes (codec mode × plane backend) come
+    /// from the engine's config — the cross-backend equivalence tests,
+    /// the differential fuzz suite's metrics gate and the per-backend
+    /// bench columns all pin them by building engines, not by per-call
+    /// variants.
+    pub fn run(&self, engine: &Engine) -> Result<KernelResult> {
         let pipe = Pipeline::for_format(self.format)?;
-        let run = self.kernel.run_raw(&pipe, self.n, self.seed, mode, backend)?;
+        let run = self.kernel.run_raw(&pipe, self.n, self.seed, engine)?;
         Ok(KernelResult::from_run(self, &pipe, run))
     }
 }
@@ -146,24 +134,14 @@ impl KernelResult {
 }
 
 /// Run the whole suite (every kernel × every format) at one size, in
-/// suite order. The parallel fan-out lives in
+/// suite order, under one [`Engine`]. The parallel fan-out lives in
 /// [`crate::coordinator::kernel_sweep`]; this sequential form is the
 /// reference the sweep's determinism test compares against.
-pub fn run_suite(n: usize, seed: u64, mode: CodecMode) -> Result<Vec<KernelResult>> {
-    run_suite_with(n, seed, mode, Backend::from_env())
-}
-
-/// [`run_suite`] with an explicit plane backend.
-pub fn run_suite_with(
-    n: usize,
-    seed: u64,
-    mode: CodecMode,
-    backend: Backend,
-) -> Result<Vec<KernelResult>> {
+pub fn run_suite(engine: &Engine, n: usize, seed: u64) -> Result<Vec<KernelResult>> {
     let mut out = Vec::with_capacity(Kernel::ALL.len() * Pipeline::ALL_FORMATS.len());
     for kernel in Kernel::ALL {
         for format in Pipeline::ALL_FORMATS {
-            out.push(KernelSpec { kernel, format, n, seed }.run_with(mode, backend)?);
+            out.push(KernelSpec { kernel, format, n, seed }.run(engine)?);
         }
     }
     Ok(out)
@@ -195,10 +173,12 @@ pub fn render(results: &[KernelResult]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::EngineConfig;
 
     #[test]
     fn suite_covers_kernels_times_formats() {
-        let results = run_suite(64, 11, CodecMode::default()).unwrap();
+        let eng = EngineConfig::from_env().build().unwrap();
+        let results = run_suite(&eng, 64, 11).unwrap();
         assert_eq!(results.len(), Kernel::ALL.len() * Pipeline::ALL_FORMATS.len());
         // ≥5 kernels × ≥4 formats through both ISAs (the acceptance bar).
         assert!(Kernel::ALL.len() >= 5);

@@ -17,7 +17,8 @@
 
 use super::builder::KernelBuilder;
 use super::pipeline::Pipeline;
-use crate::sim::{Backend, CodecMode, Machine, Program};
+use crate::engine::Engine;
+use crate::sim::{Machine, Program};
 use crate::util::rng::Rng;
 use anyhow::Result;
 
@@ -103,8 +104,7 @@ pub fn run_dot(
     pipe: &Pipeline,
     n: usize,
     seed: u64,
-    mode: CodecMode,
-    backend: Backend,
+    engine: &Engine,
 ) -> Result<KernelRun> {
     check_size(n)?;
     let cl = pipe.compute_lanes();
@@ -114,7 +114,7 @@ pub fn run_dot(
     let b = draw_positive(&mut rng, n, 0.5);
     let reference: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
 
-    let mut kb = KernelBuilder::new_with(*pipe, mode, backend);
+    let mut kb = KernelBuilder::new(*pipe, engine);
     kb.load_wide(WACC, &vec![0.0; wl]);
     for t in (0..n).step_by(cl) {
         kb.load_narrow(VA, &a[t..t + cl]);
@@ -135,8 +135,7 @@ pub fn run_axpy(
     pipe: &Pipeline,
     n: usize,
     seed: u64,
-    mode: CodecMode,
-    backend: Backend,
+    engine: &Engine,
 ) -> Result<KernelRun> {
     check_size(n)?;
     let cl = pipe.compute_lanes();
@@ -145,7 +144,7 @@ pub fn run_axpy(
     let y = draw_signed(&mut rng, n, 0.5);
     let reference: Vec<f64> = x.iter().zip(&y).map(|(xi, yi)| AXPY_ALPHA * xi + yi).collect();
 
-    let mut kb = KernelBuilder::new_with(*pipe, mode, backend);
+    let mut kb = KernelBuilder::new(*pipe, engine);
     kb.broadcast_const(C0, CSCRATCH, AXPY_ALPHA)?;
     let mut out = Vec::with_capacity(n);
     for t in (0..n).step_by(cl) {
@@ -168,8 +167,7 @@ pub fn run_poly(
     pipe: &Pipeline,
     n: usize,
     seed: u64,
-    mode: CodecMode,
-    backend: Backend,
+    engine: &Engine,
 ) -> Result<KernelRun> {
     check_size(n)?;
     let cl = pipe.compute_lanes();
@@ -179,7 +177,7 @@ pub fn run_poly(
     let reference: Vec<f64> =
         x.iter().map(|&v| ((c3 * v + c2) * v + c1) * v + c0).collect();
 
-    let mut kb = KernelBuilder::new_with(*pipe, mode, backend);
+    let mut kb = KernelBuilder::new(*pipe, engine);
     for (i, c) in POLY_COEFFS.iter().enumerate() {
         kb.broadcast_const(C0 + i as u8, CSCRATCH, *c)?;
     }
@@ -209,8 +207,7 @@ pub fn run_softmax(
     pipe: &Pipeline,
     n: usize,
     seed: u64,
-    mode: CodecMode,
-    backend: Backend,
+    engine: &Engine,
 ) -> Result<KernelRun> {
     check_size(n)?;
     let cl = pipe.compute_lanes();
@@ -224,7 +221,7 @@ pub fn run_softmax(
 
     let (clog2e, cln2, chalf, cone, cmax, csum) =
         (C0, C0 + 1, C0 + 2, C0 + 3, C0 + 4, C0 + 5);
-    let mut kb = KernelBuilder::new_with(*pipe, mode, backend);
+    let mut kb = KernelBuilder::new(*pipe, engine);
     kb.broadcast_const(clog2e, CSCRATCH, std::f64::consts::LOG2_E)?;
     kb.broadcast_const(cln2, CSCRATCH, std::f64::consts::LN_2)?;
     kb.broadcast_const(chalf, CSCRATCH, 0.5)?;
@@ -286,8 +283,7 @@ pub fn run_conv1d(
     pipe: &Pipeline,
     n: usize,
     seed: u64,
-    mode: CodecMode,
-    backend: Backend,
+    engine: &Engine,
 ) -> Result<KernelRun> {
     check_size(n)?;
     let cl = pipe.compute_lanes();
@@ -298,7 +294,7 @@ pub fn run_conv1d(
         .map(|i| CONV_TAPS.iter().enumerate().map(|(k, w)| w * x[i + k]).sum())
         .collect();
 
-    let mut kb = KernelBuilder::new_with(*pipe, mode, backend);
+    let mut kb = KernelBuilder::new(*pipe, engine);
     for (k, w) in CONV_TAPS.iter().enumerate() {
         kb.broadcast_const(C0 + k as u8, CSCRATCH, *w)?;
     }
@@ -328,8 +324,7 @@ pub fn run_reduce(
     pipe: &Pipeline,
     n: usize,
     seed: u64,
-    mode: CodecMode,
-    backend: Backend,
+    engine: &Engine,
 ) -> Result<KernelRun> {
     check_size(n)?;
     let cl = pipe.compute_lanes();
@@ -339,7 +334,7 @@ pub fn run_reduce(
     let ref_sum: f64 = x.iter().sum();
     let ref_max = x.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
 
-    let mut kb = KernelBuilder::new_with(*pipe, mode, backend);
+    let mut kb = KernelBuilder::new(*pipe, engine);
     kb.broadcast_const(C0, CSCRATCH, 1.0)?;
     kb.load_wide(WACC, &vec![0.0; wl]);
     for (ti, t) in (0..n).step_by(cl).enumerate() {
@@ -364,14 +359,19 @@ pub fn run_reduce(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::EngineConfig;
+
+    fn engine() -> Engine {
+        EngineConfig::from_env().build().unwrap()
+    }
 
     #[test]
     fn sizes_must_tile() {
         let pipe = Pipeline::for_format("t8").unwrap();
-        let (m, b) = (CodecMode::default(), Backend::from_env());
-        assert!(run_dot(&pipe, 63, 1, m, b).is_err());
-        assert!(run_dot(&pipe, 0, 1, m, b).is_err());
-        assert!(run_dot(&pipe, 128, 1, m, b).is_ok());
+        let eng = engine();
+        assert!(run_dot(&pipe, 63, 1, &eng).is_err());
+        assert!(run_dot(&pipe, 0, 1, &eng).is_err());
+        assert!(run_dot(&pipe, 128, 1, &eng).is_ok());
     }
 
     #[test]
@@ -382,7 +382,7 @@ mod tests {
             [("t8", 2u64, 0u64, 5u64), ("t16", 4, 0, 4), ("bf16", 4, 0, 4), ("e4m3", 4, 8, 4)]
         {
             let pipe = Pipeline::for_format(fmt).unwrap();
-            let r = run_dot(&pipe, 128, 3, CodecMode::default(), Backend::from_env()).unwrap();
+            let r = run_dot(&pipe, 128, 3, &engine()).unwrap();
             let counts = &r.machine.counts;
             assert_eq!(counts.get(pipe.dp).copied().unwrap_or(0), dp, "{fmt} dp");
             let cvt_seen: u64 = pipe
@@ -399,7 +399,7 @@ mod tests {
 
     #[test]
     fn every_kernel_runs_on_every_format() {
-        type KernelFn = fn(&Pipeline, usize, u64, CodecMode, Backend) -> Result<KernelRun>;
+        type KernelFn = for<'e> fn(&Pipeline, usize, u64, &'e Engine) -> Result<KernelRun>;
         let kernels: [(&str, KernelFn); 6] = [
             ("dot", run_dot),
             ("axpy", run_axpy),
@@ -408,10 +408,11 @@ mod tests {
             ("conv1d", run_conv1d),
             ("reduce", run_reduce),
         ];
+        let eng = engine();
         for (kname, k) in kernels {
             for fmt in Pipeline::ALL_FORMATS {
                 let pipe = Pipeline::for_format(fmt).unwrap();
-                let r = k(&pipe, 64, 7, CodecMode::default(), Backend::from_env()).unwrap();
+                let r = k(&pipe, 64, 7, &eng).unwrap();
                 assert!(
                     r.rel_error.is_finite() && r.rel_error >= 0.0,
                     "{kname}/{fmt}: {}",

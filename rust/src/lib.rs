@@ -27,6 +27,12 @@
 //! (HLO text produced by `python/compile/aot.py`) through the PJRT C API and
 //! the [`coordinator`] drives the 1,401-matrix conversion sweep across a
 //! worker pool. Python never runs at request time.
+//!
+//! All execution state — plane backend, codec mode, worker count, LUT
+//! warm policy, RNG seed — is configured through the [`engine`] module's
+//! [`EngineConfig`]/[`Engine`], the single front door every workload
+//! (kernel suite, GEMM, sweeps, runtime artifacts, CLI, benches) runs
+//! through.
 
 // The seed idiom predates the clippy CI gate: eagerly-evaluated
 // `Option::or(strip_prefix(..))` chains on cheap operands are pervasive
@@ -37,11 +43,14 @@ pub mod util;
 pub mod num;
 pub mod isa;
 pub mod sim;
+pub mod engine;
 pub mod kernels;
 pub mod matrix;
 pub mod harness;
 pub mod runtime;
 pub mod coordinator;
+
+pub use engine::{Engine, EngineConfig, Job, JobResult};
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

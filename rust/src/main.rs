@@ -11,16 +11,23 @@
 //! takum-avx10 artifacts
 //! ```
 //!
+//! Every subcommand that executes anything builds its execution context
+//! through **one** shared helper ([`parse_engine_cfg`]): `--backend`,
+//! `--codec`, `--workers` and `--seed` are parsed once, on top of the
+//! `TAKUM_BACKEND`/`TAKUM_CODEC` environment defaults
+//! (`EngineConfig::from_env`), with CLI flags taking precedence — flag >
+//! env > default.
+//!
 //! (No `clap` in the offline image — a small hand-rolled parser below.)
 
 use anyhow::{anyhow, bail, Context, Result};
-use takum_avx10::coordinator::{kernel_sweep, sweep, Engine, KernelSweepConfig, SweepConfig};
-use takum_avx10::kernels::{workloads::TILE_ALIGN, Kernel, Pipeline};
+use takum_avx10::coordinator::{sweep, ConvertEngine, KernelSweep, SweepConfig};
+use takum_avx10::engine::{EngineConfig, Job, WarmPolicy};
 use takum_avx10::harness::{figure1, figure2, tables};
 use takum_avx10::isa::database::Category;
+use takum_avx10::kernels::{workloads::TILE_ALIGN, Kernel, Pipeline};
 use takum_avx10::matrix::generator::CollectionSpec;
-use takum_avx10::runtime::{default_artifact_dir, PjrtService};
-use takum_avx10::sim::{assemble, Backend, LaneType, Machine};
+use takum_avx10::sim::{assemble, LaneType};
 
 /// Minimal flag parser: `--key value` and bare flags.
 struct Args {
@@ -81,7 +88,7 @@ fn run(raw: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "gemm" => cmd_gemm(&args),
         "kernels" => cmd_kernels(&args),
-        "artifacts" => cmd_artifacts(),
+        "artifacts" => cmd_artifacts(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -96,20 +103,24 @@ takum-avx10 — takum arithmetic + streamlined AVX10.2 reproduction harness
 commands:
   figure1                         dynamic range vs bit-string length (Figure 1)
   figure2 --bits 8|16|32          conversion-error CDF panel (Figure 2)
-          [--count N] [--seed S] [--workers W] [--engine native|pjrt] [--plot]
+          [--count N] [--seed S] [--engine native|pjrt] [--plot]
   tables  [--category b|m|i|f|c]  AVX10.2 → takum instruction tables (I–V)
           [--summary] [--tsv] [--rvv]
   simulate FILE [--dump vN:TYPE]  run an assembly program on the simulator
-  gemm    [--n 64] [--format t8|t16|bf16|f16] [--backend scalar|vector|graph]
+  gemm    [--n 64] [--format t8|t16|bf16|f16]
           quantised GEMM on the simulator
   kernels [--sizes 64,128] [--kernels dot,softmax,...] [--formats t8,e4m3,...]
-          [--seed S] [--workers W] [--backend scalar|vector|graph]
           workload suite on both ISAs (parallel sweep)
   artifacts                       list artifacts loadable by the runtime
           (built-in graph-interpreter set without the pjrt feature)
 
-sizes must be positive multiples of 64 (whole compute tiles); workers ≥ 1.
-The default backend honours TAKUM_BACKEND (scalar if unset).
+engine flags (shared by figure2/simulate/gemm/kernels/artifacts):
+  --backend scalar|vector|graph   plane backend
+  --codec lut|arith               lane codec mode
+  --workers N                     worker-pool width (N >= 1)
+  --seed S                        default RNG seed
+Precedence: CLI flag > TAKUM_BACKEND/TAKUM_CODEC env > default (scalar/lut).
+sizes must be positive multiples of 64 (whole compute tiles).
 ";
 
 fn cmd_figure1() -> Result<()> {
@@ -117,33 +128,53 @@ fn cmd_figure1() -> Result<()> {
     Ok(())
 }
 
+/// Build the execution context from the shared engine flags. Starts from
+/// the environment defaults ([`EngineConfig::from_env`], the only env
+/// read in the crate) and overrides with `--backend`, `--codec`,
+/// `--workers` and `--seed` when given — flag > env > default.
+fn parse_engine_cfg(args: &Args) -> Result<EngineConfig> {
+    let mut cfg = EngineConfig::from_env();
+    if let Some(b) = args.get("backend") {
+        cfg = cfg.try_backend(b)?;
+    }
+    if let Some(c) = args.get("codec") {
+        cfg = cfg.try_codec(c)?;
+    }
+    if let Some(w) = args.get("workers") {
+        let w: usize = w.parse().map_err(|_| anyhow!("bad value for --workers: {w:?}"))?;
+        anyhow::ensure!(w >= 1, "--workers must be at least 1, got {w}");
+        cfg = cfg.workers(w);
+    }
+    if let Some(s) = args.get("seed") {
+        cfg = cfg.seed(s.parse().map_err(|_| anyhow!("bad value for --seed: {s:?}"))?);
+    }
+    Ok(cfg)
+}
+
 fn cmd_figure2(args: &Args) -> Result<()> {
     let bits: u32 = args.get_parse("bits", 8)?;
     let count: usize = args.get_parse("count", 1401)?;
     let seed: u64 = args.get_parse("seed", CollectionSpec::default().seed)?;
-    let workers: usize = args.get_parse(
-        "workers",
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
-    )?;
-    let engine = match args.get("engine").unwrap_or("native") {
-        "native" => Engine::Native,
-        "pjrt" => Engine::Pjrt,
+    let convert = match args.get("engine").unwrap_or("native") {
+        "native" => ConvertEngine::Native,
+        "pjrt" => ConvertEngine::Pjrt,
         e => bail!("unknown engine {e:?}"),
     };
+    // Lazy here: `sweep()` owns the panel's warm requirement (it knows
+    // which bit width touches which table set) and requests it through
+    // `Engine::warm_tables` before fanning out.
+    let eng = parse_engine_cfg(args)?.warm(WarmPolicy::Lazy).build()?;
     let cfg = SweepConfig {
         spec: CollectionSpec { seed, count },
         bits,
-        workers,
-        engine,
+        convert,
         ..Default::default()
     };
-    let service = if engine == Engine::Pjrt {
-        Some(PjrtService::start(&default_artifact_dir()).context("starting PJRT service")?)
-    } else {
-        None
+    let handle = match convert {
+        ConvertEngine::Pjrt => Some(eng.pjrt().context("starting PJRT service")?),
+        ConvertEngine::Native => None,
     };
-    let handle = service.as_ref().map(|s| s.handle());
-    let (panel, metrics) = sweep(&cfg, handle.as_ref())?;
+    let (panel, metrics) = sweep(&cfg, &eng, handle.as_ref())?;
     print!("{}", figure2::render_panel(&panel));
     if args.has("plot") {
         print!("{}", figure2::render_ascii_plot(&panel, 72, 20));
@@ -188,7 +219,10 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("simulate needs a program file"))?;
     let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let prog = assemble(&src)?;
-    let mut m = Machine::new();
+    // One engine-built machine; --backend/--codec pin the axes, env
+    // defaults otherwise. Lazy warm: a single sequential machine has no
+    // fan-out to protect, and the first decode pays the build once.
+    let mut m = parse_engine_cfg(args)?.warm(WarmPolicy::Lazy).build()?.machine();
     m.run(&prog)?;
     println!("executed {} instructions", m.executed);
     for (mn, n) in &m.counts {
@@ -232,46 +266,29 @@ fn parse_lane_type(s: &str) -> Result<LaneType> {
 fn cmd_gemm(args: &Args) -> Result<()> {
     let n: usize = args.get_parse("n", 64)?;
     let fname = args.get("format").unwrap_or("t8");
-    let backend = parse_backend(args)?;
-    let out = takum_avx10::harness::gemm::run_sim_gemm(n, fname, 0xBEEF, backend)?;
+    let eng = parse_engine_cfg(args)?.build()?;
+    // The seed is the engine's (default 0xBEEF, overridable via --seed).
+    let seed = eng.seed();
+    let out = takum_avx10::harness::gemm::run_sim_gemm(&eng, n, fname, seed)?;
     print!("{out}");
     Ok(())
 }
 
-/// `--backend scalar|vector|graph`, defaulting to the
-/// `TAKUM_BACKEND`-aware process default.
-fn parse_backend(args: &Args) -> Result<Backend> {
-    match args.get("backend") {
-        Some(b) => Backend::parse(b),
-        None => Ok(Backend::from_env()),
-    }
-}
-
-/// Build (and validate) the kernel-sweep config from CLI flags. All
-/// contract violations — sizes off the 64-lane tile grid, a zero worker
-/// count — are rejected *here*, with actionable messages, instead of
-/// surfacing as a deep assertion failure inside a worker thread.
-fn parse_kernel_cfg(args: &Args) -> Result<KernelSweepConfig> {
-    let defaults = KernelSweepConfig::default();
-    let mut cfg = KernelSweepConfig {
-        seed: args.get_parse("seed", defaults.seed)?,
-        workers: args.get_parse("workers", defaults.workers)?,
-        backend: parse_backend(args)?,
-        ..defaults
-    };
-    anyhow::ensure!(
-        cfg.workers >= 1,
-        "--workers must be at least 1, got {}",
-        cfg.workers
-    );
+/// Build (and validate) the kernel-sweep work spec from CLI flags. All
+/// contract violations — sizes off the 64-lane tile grid — are rejected
+/// *here*, with actionable messages, instead of surfacing as a deep
+/// assertion failure inside a worker thread. (Worker-count and
+/// backend/codec validation lives in [`parse_engine_cfg`].)
+fn parse_kernel_sweep(args: &Args) -> Result<KernelSweep> {
+    let mut spec = KernelSweep::default();
     if let Some(sizes) = args.get("sizes") {
-        cfg.sizes = sizes
+        spec.sizes = sizes
             .split(',')
             .map(|s| s.trim().parse::<usize>().map_err(|_| anyhow!("bad size {s:?}")))
             .collect::<Result<Vec<_>>>()?;
     }
-    anyhow::ensure!(!cfg.sizes.is_empty(), "--sizes must name at least one size");
-    for &n in &cfg.sizes {
+    anyhow::ensure!(!spec.sizes.is_empty(), "--sizes must name at least one size");
+    for &n in &spec.sizes {
         anyhow::ensure!(
             n >= TILE_ALIGN && n % TILE_ALIGN == 0,
             "size {n} is not a positive multiple of {TILE_ALIGN}: every kernel processes whole \
@@ -279,11 +296,11 @@ fn parse_kernel_cfg(args: &Args) -> Result<KernelSweepConfig> {
         );
     }
     if let Some(kernels) = args.get("kernels") {
-        cfg.kernels =
+        spec.kernels =
             kernels.split(',').map(|s| Kernel::parse(s.trim())).collect::<Result<Vec<_>>>()?;
     }
     if let Some(formats) = args.get("formats") {
-        cfg.formats = formats
+        spec.formats = formats
             .split(',')
             .map(|s| {
                 let s = s.trim();
@@ -295,23 +312,26 @@ fn parse_kernel_cfg(args: &Args) -> Result<KernelSweepConfig> {
             })
             .collect::<Result<Vec<_>>>()?;
     }
-    Ok(cfg)
+    Ok(spec)
 }
 
 /// Kernel suite: every requested kernel × format × size on both ISAs,
-/// fanned out across the worker pool.
+/// fanned out across the engine's worker pool.
 fn cmd_kernels(args: &Args) -> Result<()> {
-    let cfg = parse_kernel_cfg(args)?;
-    let (results, metrics) = kernel_sweep(&cfg)?;
+    // Validate the work spec before building the engine: flag errors must
+    // print before any LUT warm-up work happens.
+    let spec = parse_kernel_sweep(args)?;
+    let eng = parse_engine_cfg(args)?.build()?;
+    let (results, metrics) = eng.submit(Job::Sweep(spec))?.sweep();
     print!("{}", takum_avx10::kernels::render(&results));
     eprint!("{}", metrics.render());
     Ok(())
 }
 
-fn cmd_artifacts() -> Result<()> {
-    let dir = default_artifact_dir();
-    let service = PjrtService::start(&dir)?;
-    for n in service.handle().names()? {
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    // Listing artifact names touches no lane codec — skip the LUT warm.
+    let eng = parse_engine_cfg(args)?.warm(WarmPolicy::Lazy).build()?;
+    for n in eng.artifact_names()? {
         println!("{n}");
     }
     Ok(())
@@ -320,6 +340,7 @@ fn cmd_artifacts() -> Result<()> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use takum_avx10::sim::{Backend, CodecMode};
 
     fn args(raw: &[&str]) -> Args {
         Args::parse(&raw.iter().map(|s| s.to_string()).collect::<Vec<_>>())
@@ -330,41 +351,57 @@ mod tests {
     #[test]
     fn kernels_cli_rejects_untiled_sizes() {
         for bad in ["63", "100", "0", "64,65"] {
-            let e = parse_kernel_cfg(&args(&["--sizes", bad])).unwrap_err().to_string();
+            let e = parse_kernel_sweep(&args(&["--sizes", bad])).unwrap_err().to_string();
             assert!(
                 e.contains("multiple of 64") && e.contains("--sizes"),
                 "--sizes {bad}: unhelpful message {e:?}"
             );
         }
-        let e = parse_kernel_cfg(&args(&["--sizes", "banana"])).unwrap_err().to_string();
+        let e = parse_kernel_sweep(&args(&["--sizes", "banana"])).unwrap_err().to_string();
         assert!(e.contains("bad size"), "{e:?}");
     }
 
     #[test]
-    fn kernels_cli_rejects_zero_workers() {
-        let e = parse_kernel_cfg(&args(&["--workers", "0"])).unwrap_err().to_string();
+    fn engine_cfg_rejects_zero_workers() {
+        let e = parse_engine_cfg(&args(&["--workers", "0"])).unwrap_err().to_string();
         assert!(e.contains("--workers must be at least 1"), "{e:?}");
+        let e = parse_engine_cfg(&args(&["--workers", "lots"])).unwrap_err().to_string();
+        assert!(e.contains("bad value for --workers"), "{e:?}");
     }
 
+    /// The shared engine helper: flags select backend/codec with CLI
+    /// precedence over env, and unknown values are rejected with the
+    /// name-enumerating messages.
     #[test]
-    fn kernels_cli_accepts_valid_configs() {
-        let cfg = parse_kernel_cfg(&args(&[
-            "--sizes", "64,192", "--workers", "2", "--kernels", "dot,softmax", "--formats",
-            "t8,e4m3", "--backend", "vector",
-        ]))
-        .unwrap();
-        assert_eq!(cfg.sizes, vec![64, 192]);
-        assert_eq!(cfg.workers, 2);
-        assert_eq!(cfg.kernels.len(), 2);
-        assert_eq!(cfg.formats, vec!["t8", "e4m3"]);
-        assert_eq!(cfg.backend, Backend::Vector);
-        let g = parse_kernel_cfg(&args(&["--backend", "graph"])).unwrap();
-        assert_eq!(g.backend, Backend::Graph);
-        let e = parse_kernel_cfg(&args(&["--backend", "gpu"])).unwrap_err().to_string();
+    fn engine_cfg_accepts_and_rejects_flags() {
+        let cfg = parse_engine_cfg(&args(&["--backend", "vector", "--codec", "arith"])).unwrap();
+        assert_eq!(
+            cfg,
+            EngineConfig::from_env().backend(Backend::Vector).codec(CodecMode::Arith)
+        );
+        let g = parse_engine_cfg(&args(&["--backend", "graph"])).unwrap();
+        assert_eq!(g, EngineConfig::from_env().backend(Backend::Graph));
+
+        let e = parse_engine_cfg(&args(&["--backend", "gpu"])).unwrap_err().to_string();
         assert!(e.contains("unknown backend"), "{e:?}");
         // The rejection enumerates every valid backend name.
         for b in Backend::ALL {
             assert!(e.contains(b.name()), "{e:?} missing {}", b.name());
         }
+        let e = parse_engine_cfg(&args(&["--codec", "turbo"])).unwrap_err().to_string();
+        assert!(e.contains("unknown codec mode"), "{e:?}");
+        assert!(e.contains("lut") && e.contains("arith"), "{e:?}");
+    }
+
+    #[test]
+    fn kernels_cli_accepts_valid_configs() {
+        let spec = parse_kernel_sweep(&args(&[
+            "--sizes", "64,192", "--kernels", "dot,softmax", "--formats", "t8,e4m3",
+        ]))
+        .unwrap();
+        assert_eq!(spec.sizes, vec![64, 192]);
+        assert_eq!(spec.kernels.len(), 2);
+        assert_eq!(spec.formats, vec!["t8", "e4m3"]);
+        assert_eq!(spec.seed, None); // inherits the engine seed
     }
 }

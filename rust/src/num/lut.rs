@@ -370,10 +370,12 @@ impl Lut8 {
 pub fn cached(name: &str) -> Option<&'static Lut8> {
     static TABLES: OnceLock<Vec<Lut8>> = OnceLock::new();
     let tables = TABLES.get_or_init(|| {
-        super::registry::LUT8_FORMATS
+        let t: Vec<Lut8> = super::registry::LUT8_FORMATS
             .iter()
             .map(|n| Lut8::build(&*super::registry::format_by_name(n).unwrap()))
-            .collect()
+            .collect();
+        WARM8.store(true, std::sync::atomic::Ordering::Release);
+        t
     });
     tables.iter().find(|t| t.name() == name)
 }
@@ -385,10 +387,12 @@ pub fn cached(name: &str) -> Option<&'static Lut8> {
 pub fn cached16(name: &str) -> Option<&'static Lut8> {
     static TABLES: OnceLock<Vec<Lut8>> = OnceLock::new();
     let tables = TABLES.get_or_init(|| {
-        super::registry::LUT16_FORMATS
+        let t: Vec<Lut8> = super::registry::LUT16_FORMATS
             .iter()
             .map(|n| Lut8::build(&*super::registry::format_by_name(n).unwrap()))
-            .collect()
+            .collect();
+        WARM16.store(true, std::sync::atomic::Ordering::Release);
+        t
     });
     tables.iter().find(|t| t.name() == name)
 }
@@ -415,9 +419,27 @@ pub fn cached_mini(name: &str) -> Option<&'static Lut8> {
     }
 }
 
-/// Eagerly build the 8-bit tables. Called once before fan-out work
-/// (e.g. the sweep's worker pool) so N workers don't all block on the
-/// first `OnceLock` initialisation.
+/// Warm-state flags, set by the `OnceLock` initialisers the moment the
+/// corresponding table set finishes building. Observable through
+/// [`is_warm8`]/[`is_warm16`] so the engine's warm-before-fan-out
+/// contract is testable (see `engine::Engine::build`).
+static WARM8: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+static WARM16: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Whether the 8-bit table set has been built (by [`warm8`] or lazily).
+pub fn is_warm8() -> bool {
+    WARM8.load(std::sync::atomic::Ordering::Acquire)
+}
+
+/// Whether the 16-bit table set has been built (by [`warm`] or lazily).
+pub fn is_warm16() -> bool {
+    WARM16.load(std::sync::atomic::Ordering::Acquire)
+}
+
+/// Eagerly build the 8-bit tables. Since the engine redesign the one
+/// caller on the execution paths is `engine::Engine::build` (per its
+/// [`crate::engine::WarmPolicy`]), which runs before any worker fan-out
+/// so N workers never all block on the first `OnceLock` initialisation.
 pub fn warm8() {
     let _ = cached(super::registry::LUT8_FORMATS[0]);
 }

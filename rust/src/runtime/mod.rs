@@ -19,6 +19,14 @@
 //! artifacts, now pins exactly that). [`Runtime::load_dir`] registers the
 //! builtin graphs regardless of whether the artifact directory exists;
 //! compiling real HLO text still requires the `pjrt` feature.
+//!
+//! **Access goes through the engine:** since the execution-context
+//! redesign, artifact serving is owned by [`crate::engine::Engine`] —
+//! `Engine::pjrt()` lazily starts one [`PjrtService`] per engine and
+//! `Job::Artifact`/`Engine::artifact_names` are the serving entry points
+//! the CLI, benches and examples use. [`PjrtService::start`] remains for
+//! callers that manage their own service lifetime (integration tests
+//! pointing at explicit artifact dirs).
 
 use anyhow::{anyhow, bail, Result};
 #[cfg(feature = "pjrt")]

@@ -126,17 +126,14 @@ pub struct Machine {
 
 impl Default for Machine {
     fn default() -> Machine {
-        Machine {
-            regs: RegisterFile::default(),
-            counts: BTreeMap::new(),
-            executed: 0,
-            mode: CodecMode::default(),
-            // Honours TAKUM_BACKEND so CI can force the vector backend
-            // through every default-constructed machine.
-            backend: Backend::from_env(),
-            plan_cache: HashMap::new(),
-            shadow: ShadowCache::default(),
-        }
+        // Default machines resolve both execution axes through the
+        // engine's cached process defaults (`EngineConfig::from_env`), so
+        // TAKUM_BACKEND/TAKUM_CODEC force every default-constructed
+        // machine (the CI matrix hook) while env parsing lives in exactly
+        // one place. Explicitly configured machines come from
+        // `engine::Engine::machine` — there is no other constructor.
+        let (mode, backend) = crate::engine::process_default();
+        Machine::for_engine(mode, backend, HashMap::new())
     }
 }
 
@@ -145,21 +142,31 @@ impl Machine {
         Machine::default()
     }
 
-    /// A machine with an explicit [`CodecMode`] (the default is
-    /// [`CodecMode::Lut`]).
-    pub fn with_mode(mode: CodecMode) -> Machine {
-        Machine { mode, ..Machine::default() }
+    /// Engine-internal constructor: both execution axes pinned and the
+    /// mnemonic-plan cache pre-seeded from the engine's shared cache.
+    /// The only way to build a non-default machine — callers configure
+    /// through [`crate::engine::EngineConfig`] and ask the built engine
+    /// for machines.
+    pub(crate) fn for_engine(
+        mode: CodecMode,
+        backend: Backend,
+        plan_cache: HashMap<String, LanePlan>,
+    ) -> Machine {
+        Machine {
+            regs: RegisterFile::default(),
+            counts: BTreeMap::new(),
+            executed: 0,
+            mode,
+            backend,
+            plan_cache,
+            shadow: ShadowCache::default(),
+        }
     }
 
-    /// A machine with an explicit plane [`Backend`] (the default honours
-    /// the `TAKUM_BACKEND` environment variable, else scalar).
-    pub fn with_backend(backend: Backend) -> Machine {
-        Machine { backend, ..Machine::default() }
-    }
-
-    /// A machine with both axes pinned: codec mode × plane backend.
-    pub fn with_config(mode: CodecMode, backend: Backend) -> Machine {
-        Machine { mode, backend, ..Machine::default() }
+    /// The resolved mnemonic plans (pure functions of the mnemonic):
+    /// merged back into the engine's shared cache by the builders.
+    pub(crate) fn plan_cache(&self) -> &HashMap<String, LanePlan> {
+        &self.plan_cache
     }
 
     pub fn mode(&self) -> CodecMode {
@@ -850,6 +857,23 @@ mod tests {
         I::new(m, Vreg(dst), vec![Vreg(a), Vreg(b)])
     }
 
+    /// Engine-built machine with both axes pinned — the test-local form
+    /// of the `EngineConfig` front door.
+    fn machine_cfg(mode: CodecMode, backend: Backend) -> Machine {
+        crate::engine::EngineConfig::new()
+            .codec(mode)
+            .backend(backend)
+            .build()
+            .unwrap()
+            .machine()
+    }
+
+    /// Codec mode pinned, backend from the environment default (keeps
+    /// the CI backend matrix meaningful for these equivalence tests).
+    fn machine_mode(mode: CodecMode) -> Machine {
+        crate::engine::EngineConfig::from_env().codec(mode).build().unwrap().machine()
+    }
+
     #[test]
     fn takum16_vector_add() {
         let mut mach = Machine::new();
@@ -1195,8 +1219,8 @@ mod tests {
             ("VMULHF8", LaneType::Mini(crate::num::E4M3)),
         ];
         for (mn, ty) in cases {
-            let mut fast = Machine::with_mode(CodecMode::Lut);
-            let mut slow = Machine::with_mode(CodecMode::Arith);
+            let mut fast = machine_mode(CodecMode::Lut);
+            let mut slow = machine_mode(CodecMode::Arith);
             let lanes = VecReg::lanes(ty.width());
             let a: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-20, 20)).collect();
             let b: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-20, 20)).collect();
@@ -1211,8 +1235,8 @@ mod tests {
             assert_eq!(fast.regs.v[2], slow.regs.v[2], "{mn}: result");
         }
         // Widening dot product with both codec widths in play.
-        let mut fast = Machine::with_mode(CodecMode::Lut);
-        let mut slow = Machine::with_mode(CodecMode::Arith);
+        let mut fast = machine_mode(CodecMode::Lut);
+        let mut slow = machine_mode(CodecMode::Arith);
         let a: Vec<f64> = (0..64).map(|_| r.wide_f64(-8, 8)).collect();
         let b: Vec<f64> = (0..64).map(|_| r.wide_f64(-8, 8)).collect();
         for m in [&mut fast, &mut slow] {
@@ -1254,7 +1278,7 @@ mod tests {
                 for (n, mn) in [(8u32, "VDIVPT8"), (16, "VDIVPT16")] {
                     let t = LaneType::Takum(n);
                     let lanes = VecReg::lanes(n);
-                    let mut m = Machine::with_config(mode, backend);
+                    let mut m = machine_cfg(mode, backend);
                     m.load_f64(0, t, &vec![0.0; lanes]);
                     m.load_f64(1, t, &vec![0.0; lanes]);
                     m.step(&add(mn, 2, 0, 1)).unwrap();
@@ -1283,7 +1307,7 @@ mod tests {
                     let ty = LaneType::Mini(spec);
                     let w = spec.bits();
                     let lanes = VecReg::lanes(w);
-                    let mut m = Machine::with_config(mode, backend);
+                    let mut m = machine_cfg(mode, backend);
                     m.load_f64(0, ty, &vec![f64::INFINITY; lanes]);
                     m.load_f64(1, ty, &vec![f64::INFINITY; lanes]);
                     m.step(&add(sub, 2, 0, 1)).unwrap();
@@ -1309,7 +1333,7 @@ mod tests {
             for backend in Backend::ALL {
                 let bf = LaneType::Mini(BF16);
                 let lanes = VecReg::lanes(16);
-                let mut m = Machine::with_config(mode, backend);
+                let mut m = machine_cfg(mode, backend);
                 // x = -inf row; m = max(x) = -inf; r = x - m = NaN.
                 m.load_f64(0, bf, &vec![f64::NEG_INFINITY; lanes]);
                 m.step(&add("VMAXNEPBF16", 1, 0, 0)).unwrap();
@@ -1357,7 +1381,7 @@ mod tests {
             for mask in masks {
                 for zeroing in [false, true] {
                     for backend in Backend::ALL {
-                        let mut m = Machine::with_config(CodecMode::Lut, backend);
+                        let mut m = machine_cfg(CodecMode::Lut, backend);
                         m.load_f64(0, ty, &a);
                         m.load_f64(1, ty, &b);
                         m.load_f64(2, ty, &old);
@@ -1413,9 +1437,9 @@ mod tests {
             let lanes = VecReg::lanes(ty.width());
             let a: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-20, 20)).collect();
             let b: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-20, 20)).collect();
-            let mut scalar = Machine::with_config(CodecMode::Lut, Backend::Scalar);
-            let mut vector = Machine::with_config(CodecMode::Lut, Backend::Vector);
-            let mut graphm = Machine::with_config(CodecMode::Lut, Backend::Graph);
+            let mut scalar = machine_cfg(CodecMode::Lut, Backend::Scalar);
+            let mut vector = machine_cfg(CodecMode::Lut, Backend::Vector);
+            let mut graphm = machine_cfg(CodecMode::Lut, Backend::Graph);
             for m in [&mut scalar, &mut vector, &mut graphm] {
                 m.load_f64(0, ty, &a);
                 m.load_f64(1, ty, &b);
@@ -1435,9 +1459,9 @@ mod tests {
         // Widening dot product with both codec widths in play.
         let a: Vec<f64> = (0..64).map(|_| r.wide_f64(-8, 8)).collect();
         let b: Vec<f64> = (0..64).map(|_| r.wide_f64(-8, 8)).collect();
-        let mut scalar = Machine::with_config(CodecMode::Lut, Backend::Scalar);
-        let mut vector = Machine::with_config(CodecMode::Lut, Backend::Vector);
-        let mut graphm = Machine::with_config(CodecMode::Lut, Backend::Graph);
+        let mut scalar = machine_cfg(CodecMode::Lut, Backend::Scalar);
+        let mut vector = machine_cfg(CodecMode::Lut, Backend::Vector);
+        let mut graphm = machine_cfg(CodecMode::Lut, Backend::Graph);
         for m in [&mut scalar, &mut vector, &mut graphm] {
             m.load_f64(0, LaneType::Takum(8), &a);
             m.load_f64(1, LaneType::Takum(8), &b);

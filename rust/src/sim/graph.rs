@@ -59,9 +59,11 @@
 //!   mixed-format programs, masked/zeroing stores and NaN/inf payload
 //!   lanes included, across both [`CodecMode`]s.
 //!
-//! Selection is the usual axis: `Machine::with_config(mode,
-//! Backend::Graph)`, `--backend graph` on the `kernels`/`gemm` CLI, or
-//! `TAKUM_BACKEND=graph` for whole-suite forcing (the CI graph leg).
+//! Selection is the usual axis:
+//! `EngineConfig::new().backend(Backend::Graph)` (the unified execution
+//! context, [`crate::engine`]), `--backend graph` on the `kernels`/`gemm`
+//! CLI, or `TAKUM_BACKEND=graph` for whole-suite forcing (the CI graph
+//! leg).
 
 use super::lanes::{CodecMode, FmaKind, FmaOrder, FpOp, LaneCodec, LanePlan, LaneType};
 use super::program::{Instruction, Operand, Program};
@@ -806,11 +808,21 @@ mod tests {
         I::new(m, Operand::Vreg(dst), vec![Operand::Vreg(a), Operand::Vreg(b)])
     }
 
+    /// Engine-built machine with both axes pinned.
+    fn machine_cfg(mode: CodecMode, backend: Backend) -> Machine {
+        crate::engine::EngineConfig::new()
+            .codec(mode)
+            .backend(backend)
+            .build()
+            .unwrap()
+            .machine()
+    }
+
     /// Build a program + initial machine state for lifting tests: a
     /// softmax-tile-shaped chain (sub, mul, rndscale, fnmadd, fma,
     /// scalef, div) over takum16 planes.
     fn tile_chain() -> (Machine, Program) {
-        let mut m = Machine::with_backend(Backend::Scalar);
+        let mut m = machine_cfg(CodecMode::Lut, Backend::Scalar);
         let t = LaneType::Takum(16);
         let mut r = Rng::new(0x11F7);
         let lanes = VecReg::lanes(16);
@@ -837,7 +849,7 @@ mod tests {
         for mode in [CodecMode::Lut, CodecMode::Arith] {
             let (m0, prog) = tile_chain();
             let init = m0.regs.clone();
-            let mut mach = Machine::with_config(mode, Backend::Scalar);
+            let mut mach = machine_cfg(mode, Backend::Scalar);
             mach.regs = init.clone();
             mach.run(&prog).unwrap();
 
@@ -861,7 +873,7 @@ mod tests {
         let lanes = VecReg::lanes(8);
         let mut r = Rng::new(0x3E1E);
         for zeroing in [false, true] {
-            let mut m0 = Machine::with_backend(Backend::Scalar);
+            let mut m0 = machine_cfg(CodecMode::Lut, Backend::Scalar);
             let a: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-8, 8)).collect();
             let b: Vec<f64> = (0..lanes).map(|_| r.wide_f64(-8, 8)).collect();
             m0.load_f64(0, t, &a);
@@ -872,7 +884,7 @@ mod tests {
             p.push(add("VMULPT8", 2, 0, 1).with_mask(1, zeroing));
             p.push(add("VADDPT8", 3, 2, 0));
             let init = m0.regs.clone();
-            let mut mach = Machine::with_backend(Backend::Scalar);
+            let mut mach = machine_cfg(CodecMode::Lut, Backend::Scalar);
             mach.regs = init.clone();
             mach.run(&p).unwrap();
             let mut g = Graph::lift(&p, &init).unwrap();
@@ -892,7 +904,7 @@ mod tests {
         let t8 = LaneType::Takum(8);
         let t16 = LaneType::Takum(16);
         let mut r = Rng::new(0xD07A);
-        let mut m0 = Machine::with_backend(Backend::Scalar);
+        let mut m0 = machine_cfg(CodecMode::Lut, Backend::Scalar);
         let a: Vec<f64> = (0..64).map(|_| r.wide_f64(-4, 4)).collect();
         let b: Vec<f64> = (0..64).map(|_| r.wide_f64(-4, 4)).collect();
         m0.load_f64(0, t8, &a);
@@ -903,7 +915,7 @@ mod tests {
         p.push(add("VDPPT8PT16", 2, 0, 1));
         p.push(I::new("VCVTPT162PT8", Operand::Vreg(3), vec![Operand::Vreg(2)]));
         let init = m0.regs.clone();
-        let mut mach = Machine::with_backend(Backend::Scalar);
+        let mut mach = machine_cfg(CodecMode::Lut, Backend::Scalar);
         mach.regs = init.clone();
         mach.run(&p).unwrap();
         let mut g = Graph::lift(&p, &init).unwrap();

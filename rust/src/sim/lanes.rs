@@ -147,6 +147,46 @@ pub enum CodecMode {
     Arith,
 }
 
+impl CodecMode {
+    /// Every codec mode, in the order the CLI/CI matrix enumerates them.
+    pub const ALL: [CodecMode; 2] = [CodecMode::Lut, CodecMode::Arith];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecMode::Lut => "lut",
+            CodecMode::Arith => "arith",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<CodecMode> {
+        for m in CodecMode::ALL {
+            if m.name() == s {
+                return Ok(m);
+            }
+        }
+        // Enumerate every valid name from ALL so the message cannot go
+        // stale if a mode is ever added.
+        let names: Vec<&str> = CodecMode::ALL.iter().map(|m| m.name()).collect();
+        bail!("unknown codec mode {s:?} (expected one of: {})", names.join("|"))
+    }
+
+    /// Resolve the value of the `TAKUM_CODEC` environment variable
+    /// (`None` = unset): a malformed value warns and falls back to the
+    /// LUT engine rather than failing deep inside a constructor. The env
+    /// read itself lives in [`crate::engine::EngineConfig::from_env`] —
+    /// the only place in the crate that touches the process environment
+    /// for execution configuration; this is the pure, unit-testable half.
+    pub fn parse_env(var: Option<&str>) -> CodecMode {
+        match var {
+            Some(v) => CodecMode::parse(v).unwrap_or_else(|e| {
+                eprintln!("warning: TAKUM_CODEC: {e}; using lut");
+                CodecMode::Lut
+            }),
+            None => CodecMode::Lut,
+        }
+    }
+}
+
 /// A lane type resolved against the codec tables **and a plane
 /// [`Backend`]**: the per-plane decode/encode engine. Resolution happens
 /// once per executed instruction (not per lane).
@@ -772,6 +812,28 @@ mod tests {
             ("PBF16", LaneType::Mini(BF16)),
             ("PH", LaneType::Mini(F16)),
         ]
+    }
+
+    /// The codec-mode spellings mirror the backend's: round-tripping
+    /// names, enumerated parse errors, and the `TAKUM_CODEC`
+    /// warn-and-fallback path (pure half — the env read lives in
+    /// `EngineConfig::from_env` only).
+    #[test]
+    fn codec_mode_parse_and_env_fallback() {
+        for m in CodecMode::ALL {
+            assert_eq!(CodecMode::parse(m.name()).unwrap(), m);
+            assert_eq!(CodecMode::parse_env(Some(m.name())), m);
+        }
+        assert_eq!(CodecMode::default(), CodecMode::Lut);
+        let e = CodecMode::parse("turbo").unwrap_err().to_string();
+        assert!(e.contains("unknown codec mode \"turbo\""), "{e:?}");
+        for m in CodecMode::ALL {
+            assert!(e.contains(m.name()), "{e:?} missing {}", m.name());
+        }
+        // Invalid / unset values fall back to the LUT engine.
+        assert_eq!(CodecMode::parse_env(None), CodecMode::Lut);
+        assert_eq!(CodecMode::parse_env(Some("banana")), CodecMode::Lut);
+        assert_eq!(CodecMode::parse_env(Some("")), CodecMode::Lut);
     }
 
     #[test]

@@ -82,9 +82,10 @@ impl Backend {
 
     /// Resolve the value of the `TAKUM_BACKEND` environment variable
     /// (`None` = unset): a malformed value warns and falls back to scalar
-    /// rather than failing inside `Machine::default`. Split out of
-    /// [`Backend::from_env`] so the fallback path is unit-testable
-    /// without mutating process state.
+    /// rather than failing inside `Machine::default`. The env read itself
+    /// lives in [`crate::engine::EngineConfig::from_env`] — the single
+    /// place in the crate that touches the process environment for
+    /// execution configuration; this is the pure, unit-testable half.
     pub fn parse_env(var: Option<&str>) -> Backend {
         match var {
             Some(v) => Backend::parse(v).unwrap_or_else(|e| {
@@ -93,15 +94,6 @@ impl Backend {
             }),
             None => Backend::Scalar,
         }
-    }
-
-    /// Process-wide default: `TAKUM_BACKEND=scalar|vector|graph` if set
-    /// (the CI backend-matrix hook), [`Backend::Scalar`] otherwise. Read
-    /// once, through [`Backend::parse_env`].
-    pub fn from_env() -> Backend {
-        use std::sync::OnceLock;
-        static CACHE: OnceLock<Backend> = OnceLock::new();
-        *CACHE.get_or_init(|| Backend::parse_env(std::env::var("TAKUM_BACKEND").ok().as_deref()))
     }
 }
 

@@ -160,16 +160,27 @@ impl Bencher {
 
     /// Serialise every measurement as a machine-readable JSON document
     /// (hand-rolled — the offline image has no `serde`). The schema is
-    /// flat and stable so perf-trajectory tooling can diff runs:
-    /// `{bench, results: [{group, name, median_ns, mean_ns, stddev_ns,
-    /// iters, elements, throughput_elem_per_s}]}`.
-    pub fn json(&self, bench: &str) -> String {
+    /// flat and versioned so perf-trajectory tooling can diff runs across
+    /// PRs and CI matrix legs:
+    /// `{schema_version, bench, engine_config, results: [{group, name,
+    /// median_ns, mean_ns, stddev_ns, iters, elements,
+    /// throughput_elem_per_s}]}`. `engine_config` is the `Engine::tag()`
+    /// of the bench process's **default** execution context
+    /// (`backend=…;codec=…;workers=…`, the env-derived engine), so
+    /// per-backend CI artifacts are self-describing; comparison groups
+    /// that pin a *different* config per measurement carry it in the
+    /// measurement name (the `[lut]`/`[arith]`/`[scalar|vector|graph]`
+    /// suffixes) — trend tooling must key those rows on the name, not
+    /// the file-level tag.
+    pub fn json(&self, bench: &str, engine_config: &str) -> String {
         fn esc(s: &str) -> String {
             s.replace('\\', "\\\\").replace('"', "\\\"")
         }
         let mut out = String::new();
         out.push_str("{\n");
+        out.push_str("  \"schema_version\": 2,\n");
         out.push_str(&format!("  \"bench\": \"{}\",\n", esc(bench)));
+        out.push_str(&format!("  \"engine_config\": \"{}\",\n", esc(engine_config)));
         out.push_str("  \"results\": [\n");
         for (i, m) in self.results.iter().enumerate() {
             let elements = m
@@ -201,8 +212,13 @@ impl Bencher {
 
     /// Write [`Bencher::json`] to `path`, reporting where it went (the
     /// benches call this last so the file reflects the full run).
-    pub fn write_json(&self, bench: &str, path: &str) -> std::io::Result<()> {
-        std::fs::write(path, self.json(bench))?;
+    pub fn write_json(
+        &self,
+        bench: &str,
+        engine_config: &str,
+        path: &str,
+    ) -> std::io::Result<()> {
+        std::fs::write(path, self.json(bench, engine_config))?;
         println!("\nwrote {} measurements to {path}", self.results.len());
         Ok(())
     }
@@ -239,8 +255,13 @@ mod tests {
         b.group("g \"one\"");
         b.bench_with_elements("with-elems", 64, || std::hint::black_box(1u64 + 1));
         b.bench("no-elems", || std::hint::black_box(2u64 * 3));
-        let j = b.json("unit");
+        let j = b.json("unit", "backend=scalar;codec=lut;workers=2");
+        assert!(j.contains("\"schema_version\": 2"), "{j}");
         assert!(j.contains("\"bench\": \"unit\""), "{j}");
+        assert!(
+            j.contains("\"engine_config\": \"backend=scalar;codec=lut;workers=2\""),
+            "{j}"
+        );
         assert!(j.contains("\"group\": \"g \\\"one\\\"\""), "{j}");
         assert!(j.contains("\"name\": \"with-elems\""), "{j}");
         assert!(j.contains("\"elements\": 64"), "{j}");

@@ -5,6 +5,11 @@
 //! HLO-lite graph interpreter (`Graph::lift` → `optimize` → `run_on`)
 //! must reproduce the machine replay of every liftable program exactly.
 //!
+//! Every machine here is built through `engine::EngineConfig`/`Engine` —
+//! the unified execution context — so the corpus simultaneously pins the
+//! front door itself: an engine-built machine in any config must be
+//! bit-identical to every other config's.
+//!
 //! The program generator is a plain LCG (no external deps, no shared
 //! `Rng` state): every test derives everything — instruction sequence,
 //! operand registers, lane values (including NaN/±inf payload lanes),
@@ -13,11 +18,19 @@
 //! the failing seed is printed so it can be pinned into `SEEDS` as a
 //! regression.
 
-use takum_avx10::kernels::run_suite_with;
+use takum_avx10::engine::{Engine, EngineConfig};
+use takum_avx10::kernels::run_suite;
 use takum_avx10::num::{BF16, E4M3, E5M2, F16, F32};
 use takum_avx10::sim::{
     Backend, CodecMode, Graph, Instruction, LaneType, Machine, Operand, Program, VecReg,
 };
+
+/// Build the engine for one (mode, backend) config — the front door every
+/// machine in this suite comes through (the execution-context redesign's
+/// acceptance gate: the fuzz corpus drives *engine-built* machines).
+fn engine_for(mode: CodecMode, backend: Backend) -> Engine {
+    EngineConfig::new().codec(mode).backend(backend).build().unwrap()
+}
 
 /// The fixed fuzz corpus: 32 seeds for each tier (the acceptance floor).
 /// To reproduce a CI failure locally, the failing seed is printed in the
@@ -98,10 +111,10 @@ struct Case {
 }
 
 impl Case {
-    /// Build a fresh machine in the given config with the case's initial
+    /// Build a fresh engine-configured machine with the case's initial
     /// state installed.
-    fn machine(&self, mode: CodecMode, backend: Backend) -> Machine {
-        let mut m = Machine::with_config(mode, backend);
+    fn machine(&self, engine: &Engine) -> Machine {
+        let mut m = engine.machine();
         for (reg, ty, vals) in &self.loads {
             m.load_f64(*reg, *ty, vals);
         }
@@ -309,14 +322,18 @@ const CONFIGS: [(CodecMode, Backend); 6] = [
 /// mode leaves bit-identical register planes and mask registers.
 #[test]
 fn cross_backend_bit_identity_on_random_programs() {
+    let engines: Vec<(CodecMode, Backend, Engine)> =
+        CONFIGS.iter().map(|&(m, b)| (m, b, engine_for(m, b))).collect();
+    let reference_engine = engine_for(CodecMode::Lut, Backend::Scalar);
     for &seed in &SEEDS {
         let case = generate(seed, false);
-        let mut reference = case.machine(CodecMode::Lut, Backend::Scalar);
+        let mut reference = case.machine(&reference_engine);
         reference
             .run(&case.prog)
             .unwrap_or_else(|e| panic!("seed={seed:#x}: reference run failed: {e}"));
-        for (mode, backend) in CONFIGS {
-            let mut m = case.machine(mode, backend);
+        for (mode, backend, eng) in &engines {
+            let (mode, backend) = (*mode, *backend);
+            let mut m = case.machine(eng);
             m.run(&case.prog)
                 .unwrap_or_else(|e| panic!("seed={seed:#x} {mode:?}/{backend:?}: {e}"));
             for reg in 0..32 {
@@ -344,16 +361,19 @@ fn cross_backend_bit_identity_on_random_programs() {
 fn lifted_interpreter_matches_machine_replay() {
     let mut total_folded = 0usize;
     let mut total_dead = 0usize;
+    let scalar_lut = engine_for(CodecMode::Lut, Backend::Scalar);
+    let scalar_arith = engine_for(CodecMode::Arith, Backend::Scalar);
     for &seed in &SEEDS {
         let case = generate(seed, true);
-        let init = case.machine(CodecMode::Lut, Backend::Scalar).regs.clone();
+        let init = case.machine(&scalar_lut).regs.clone();
         let mut graph = Graph::lift(&case.prog, &init)
             .unwrap_or_else(|e| panic!("seed={seed:#x}: lift failed: {e}"));
         let stats = graph.optimize();
         total_folded += stats.converts_folded;
         total_dead += stats.dead_removed;
         for mode in [CodecMode::Lut, CodecMode::Arith] {
-            let mut mach = Machine::with_config(mode, Backend::Scalar);
+            let eng = if mode == CodecMode::Lut { &scalar_lut } else { &scalar_arith };
+            let mut mach = eng.machine();
             mach.regs = init.clone();
             mach.run(&case.prog)
                 .unwrap_or_else(|e| panic!("seed={seed:#x} {mode:?}: replay failed: {e}"));
@@ -381,9 +401,10 @@ fn lifted_interpreter_matches_machine_replay() {
 #[test]
 fn suite_metrics_byte_identical_across_backends_and_modes() {
     const SUITE_SEED: u64 = 0xF077;
-    let reference = run_suite_with(64, SUITE_SEED, CodecMode::Lut, Backend::Scalar).unwrap();
+    let reference =
+        run_suite(&engine_for(CodecMode::Lut, Backend::Scalar), 64, SUITE_SEED).unwrap();
     for (mode, backend) in CONFIGS {
-        let got = run_suite_with(64, SUITE_SEED, mode, backend).unwrap();
+        let got = run_suite(&engine_for(mode, backend), 64, SUITE_SEED).unwrap();
         assert_eq!(reference.len(), got.len());
         for (a, b) in reference.iter().zip(&got) {
             assert_eq!((&a.kernel, &a.format, a.n), (&b.kernel, &b.format, b.n));

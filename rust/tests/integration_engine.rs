@@ -1,0 +1,155 @@
+//! Integration over the unified execution context (`engine::Engine`):
+//! the engine-config matrix — every `Backend × CodecMode` combination —
+//! must produce byte-identical suite metrics and GEMM results whether
+//! work goes through `Engine::submit` or the direct library calls /
+//! direct `Machine` stepping, and builder validation must fail with
+//! actionable messages.
+
+use takum_avx10::engine::{Engine, EngineConfig, GemmJob, Job};
+use takum_avx10::harness::gemm::gemm;
+use takum_avx10::kernels::run_suite;
+use takum_avx10::sim::{Backend, CodecMode, Instruction, LaneType, Operand};
+
+fn engine_cfg(mode: CodecMode, backend: Backend) -> Engine {
+    EngineConfig::new().codec(mode).backend(backend).build().unwrap()
+}
+
+/// The full engine-config matrix at n ∈ {64, 128}: `Engine::submit`
+/// (jobs) vs the direct library entry points must agree byte for byte,
+/// and every config must agree with the scalar/LUT reference — the
+/// bit-identity contract surfaced at the front door itself.
+#[test]
+fn engine_config_matrix_suite_and_gemm_byte_identical() {
+    const SEED: u64 = 0xE96;
+    for n in [64usize, 128] {
+        let reference = {
+            let eng = engine_cfg(CodecMode::Lut, Backend::Scalar);
+            eng.submit(Job::Suite { n, seed: Some(SEED) }).unwrap().suite()
+        };
+        for backend in Backend::ALL {
+            for mode in CodecMode::ALL {
+                let eng = engine_cfg(mode, backend);
+                // Submit path vs direct call path.
+                let submitted = eng.submit(Job::Suite { n, seed: Some(SEED) }).unwrap().suite();
+                let direct = run_suite(&eng, n, SEED).unwrap();
+                assert_eq!(submitted.len(), direct.len());
+                assert_eq!(submitted.len(), reference.len());
+                for ((s, d), r) in submitted.iter().zip(&direct).zip(&reference) {
+                    let tag = format!("{}/{} n={n} {mode:?}/{backend:?}", s.kernel, s.format);
+                    assert_eq!((&s.kernel, &s.format, s.n), (&d.kernel, &d.format, d.n));
+                    assert_eq!(s.rel_error.to_bits(), d.rel_error.to_bits(), "{tag}: submit≠direct");
+                    assert_eq!(s.executed, d.executed, "{tag}: submit≠direct executed");
+                    assert_eq!(s.counts, d.counts, "{tag}: submit≠direct counts");
+                    // …and the whole matrix is pinned to the reference.
+                    assert_eq!(s.rel_error.to_bits(), r.rel_error.to_bits(), "{tag}: vs reference");
+                    assert_eq!(s.executed, r.executed, "{tag}: vs reference executed");
+                    assert_eq!(s.dp_instructions, r.dp_instructions, "{tag}");
+                    assert_eq!(s.convert_instructions, r.convert_instructions, "{tag}");
+                    assert_eq!(s.counts, r.counts, "{tag}: vs reference counts");
+                }
+
+                // GEMM through both doors.
+                let job = GemmJob { seed: Some(SEED), ..GemmJob::new(n, "t8") };
+                let via_job = eng.submit(Job::Gemm(job)).unwrap().gemm();
+                let via_call = gemm(&eng, n, "t8", SEED, 1.0).unwrap();
+                assert_eq!(
+                    via_job.rel_error.to_bits(),
+                    via_call.rel_error.to_bits(),
+                    "gemm n={n} {mode:?}/{backend:?}"
+                );
+                assert_eq!(via_job.executed, via_call.executed);
+                assert_eq!(via_job.dp_instructions, via_call.dp_instructions);
+            }
+        }
+    }
+}
+
+/// Direct `Machine` stepping on engine-built machines: the same small
+/// FMA/convert program stepped by hand leaves bit-identical register
+/// state in every engine config (the front door hands out machines whose
+/// semantics do not depend on the config).
+#[test]
+fn direct_machine_stepping_matches_across_engine_configs() {
+    let t8 = LaneType::Takum(8);
+    let t16 = LaneType::Takum(16);
+    let a: Vec<f64> = (0..64).map(|i| ((i % 9) as f64 - 4.0) * 0.75).collect();
+    let b: Vec<f64> = (0..64).map(|i| ((i % 7) as f64 - 3.0) * 0.5).collect();
+    let prog = [
+        Instruction::new("VMULPT8", Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]),
+        Instruction::new("VFMADD231PT8", Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]),
+        Instruction::new("VDPPT8PT16", Operand::Vreg(3), vec![Operand::Vreg(0), Operand::Vreg(2)]),
+        Instruction::new("VCVTPT162PT8", Operand::Vreg(4), vec![Operand::Vreg(3)]),
+    ];
+    let run = |eng: &Engine| {
+        let mut m = eng.machine();
+        m.load_f64(0, t8, &a);
+        m.load_f64(1, t8, &b);
+        m.load_f64(2, t8, &vec![0.0; 64]);
+        m.load_f64(3, t16, &vec![0.0; 32]);
+        for ins in &prog {
+            m.step(ins).unwrap();
+        }
+        m
+    };
+    let reference = run(&engine_cfg(CodecMode::Lut, Backend::Scalar));
+    for backend in Backend::ALL {
+        for mode in CodecMode::ALL {
+            let m = run(&engine_cfg(mode, backend));
+            for reg in 0..5usize {
+                assert_eq!(
+                    reference.regs.v[reg], m.regs.v[reg],
+                    "{mode:?}/{backend:?} v{reg}"
+                );
+            }
+            assert_eq!(reference.executed, m.executed);
+        }
+    }
+}
+
+/// Builder validation at the public boundary: bad worker counts and
+/// unknown backend/codec names fail `EngineConfig` with the messages the
+/// CLI surfaces.
+#[test]
+fn builder_validation_messages() {
+    let e = EngineConfig::new().workers(0).build().unwrap_err().to_string();
+    assert!(e.contains("workers must be at least 1"), "{e:?}");
+    assert!(e.contains("got 0"), "{e:?}");
+
+    let e = EngineConfig::new().try_backend("cuda").unwrap_err().to_string();
+    assert!(e.contains("unknown backend \"cuda\""), "{e:?}");
+    for b in Backend::ALL {
+        assert!(e.contains(b.name()), "{e:?} missing {}", b.name());
+    }
+
+    let e = EngineConfig::new().try_codec("table").unwrap_err().to_string();
+    assert!(e.contains("unknown codec mode \"table\""), "{e:?}");
+    for m in CodecMode::ALL {
+        assert!(e.contains(m.name()), "{e:?} missing {}", m.name());
+    }
+}
+
+/// The artifact front door: `Job::Artifact` serves the builtin graph set
+/// through the engine-owned runtime, and unknown names error with the
+/// available list.
+#[test]
+fn artifact_jobs_route_through_engine() {
+    use takum_avx10::runtime::TensorF64;
+    let eng = EngineConfig::new().build().unwrap();
+    let names = eng.artifact_names().unwrap();
+    assert!(names.iter().any(|n| n == "takum8_roundtrip"), "{names:?}");
+    let out = eng
+        .submit(Job::Artifact {
+            name: "takum16_roundtrip".into(),
+            inputs: vec![TensorF64::vec(vec![1.0, 2.5, -3.25, 1e30])],
+        })
+        .unwrap()
+        .artifact();
+    assert_eq!(out[0].len(), 4);
+    // Round-trip through takum16 is exact on representable values.
+    assert_eq!(out[0][0], 1.0);
+    let err = eng
+        .submit(Job::Artifact { name: "nope".into(), inputs: vec![] })
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("not loaded"), "{err:?}");
+}

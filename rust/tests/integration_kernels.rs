@@ -2,9 +2,20 @@
 //! of the suite, golden instruction counts, codec-mode bit-identity, and
 //! determinism of the parallel kernel sweep.
 
-use takum_avx10::coordinator::{kernel_sweep, KernelSweepConfig};
-use takum_avx10::kernels::{run_suite, run_suite_with, Isa, Kernel, KernelSpec, Pipeline};
+use takum_avx10::coordinator::{kernel_sweep, KernelSweep};
+use takum_avx10::engine::{Engine, EngineConfig};
+use takum_avx10::kernels::{run_suite, Isa, Kernel, KernelSpec, Pipeline};
 use takum_avx10::sim::{Backend, CodecMode};
+
+/// Env-default engine (the execution front door).
+fn engine() -> Engine {
+    EngineConfig::from_env().build().unwrap()
+}
+
+/// Engine with both execution axes pinned.
+fn engine_cfg(mode: CodecMode, backend: Backend) -> Engine {
+    EngineConfig::new().codec(mode).backend(backend).build().unwrap()
+}
 
 /// Both ISAs produce finite, comparable relative errors on shared inputs
 /// for every kernel. The bounds are deliberately loose sanity gates
@@ -15,7 +26,7 @@ use takum_avx10::sim::{Backend, CodecMode};
 /// claims takum survives — coarse, but finite and normalised.
 #[test]
 fn cross_isa_equivalence_finite_and_comparable() {
-    let results = run_suite(128, 0xE0_11, CodecMode::default()).unwrap();
+    let results = run_suite(&engine(), 128, 0xE0_11).unwrap();
     assert_eq!(results.len(), 36); // 6 kernels × 6 formats
     for r in &results {
         assert!(
@@ -57,7 +68,7 @@ fn cross_isa_equivalence_finite_and_comparable() {
 /// bf16/fp16) pipelines none — on every kernel of the suite.
 #[test]
 fn golden_convert_counts_ofp8_pays_takum_does_not() {
-    let results = run_suite(64, 3, CodecMode::default()).unwrap();
+    let results = run_suite(&engine(), 64, 3).unwrap();
     for r in &results {
         match r.format.as_str() {
             "e4m3" | "e5m2" => assert!(
@@ -89,9 +100,10 @@ fn golden_convert_counts_ofp8_pays_takum_does_not() {
 /// data.
 #[test]
 fn golden_axpy_instruction_counts() {
+    let eng = engine();
     for (fmt, executed, converts) in [("t8", 3u64, 0u64), ("bf16", 5, 0), ("e4m3", 18, 13)] {
         let spec = KernelSpec { kernel: Kernel::Axpy, format: fmt, n: 128, seed: 1 };
-        let r = spec.run(CodecMode::default()).unwrap();
+        let r = spec.run(&eng).unwrap();
         assert_eq!(r.executed, executed, "{fmt} executed");
         assert_eq!(r.convert_instructions, converts, "{fmt} converts");
     }
@@ -103,10 +115,12 @@ fn golden_axpy_instruction_counts() {
 /// streams.
 #[test]
 fn softmax_arith_vs_lut_bit_identity() {
+    let lut = EngineConfig::from_env().codec(CodecMode::Lut).build().unwrap();
+    let arith = EngineConfig::from_env().codec(CodecMode::Arith).build().unwrap();
     for fmt in ["t8", "t16", "bf16", "e4m3"] {
         let spec = KernelSpec { kernel: Kernel::Softmax, format: fmt, n: 64, seed: 7 };
-        let fast = spec.run(CodecMode::Lut).unwrap();
-        let slow = spec.run(CodecMode::Arith).unwrap();
+        let fast = spec.run(&lut).unwrap();
+        let slow = spec.run(&arith).unwrap();
         assert_eq!(
             fast.rel_error.to_bits(),
             slow.rel_error.to_bits(),
@@ -123,19 +137,18 @@ fn softmax_arith_vs_lut_bit_identity() {
 /// results for 1, 2 and 5 workers, matching the sequential suite.
 #[test]
 fn kernel_sweep_deterministic_and_matches_suite() {
-    let cfg = |workers: usize| KernelSweepConfig {
+    let spec = KernelSweep {
         kernels: Kernel::ALL.to_vec(),
         formats: vec!["t8", "t16", "bf16", "e4m3"],
         sizes: vec![64, 128],
-        seed: 0xD15C,
-        workers,
-        ..Default::default()
+        seed: Some(0xD15C),
     };
-    let (base, metrics) = kernel_sweep(&cfg(1)).unwrap();
+    let eng = |workers: usize| EngineConfig::from_env().workers(workers).build().unwrap();
+    let (base, metrics) = kernel_sweep(&eng(1), &spec).unwrap();
     assert_eq!(base.len(), 6 * 4 * 2);
     assert_eq!(metrics.per_worker.iter().sum::<usize>(), base.len());
     for workers in [2usize, 5] {
-        let (par, m) = kernel_sweep(&cfg(workers)).unwrap();
+        let (par, m) = kernel_sweep(&eng(workers), &spec).unwrap();
         assert_eq!(par.len(), base.len());
         for (a, b) in par.iter().zip(&base) {
             assert_eq!((&a.kernel, &a.format, a.n), (&b.kernel, &b.format, b.n));
@@ -165,9 +178,11 @@ fn kernel_sweep_deterministic_and_matches_suite() {
 #[test]
 fn suite_byte_identical_across_backends() {
     for n in [64usize, 128] {
-        let scalar = run_suite_with(n, 0xBAC0, CodecMode::default(), Backend::Scalar).unwrap();
+        let scalar =
+            run_suite(&engine_cfg(CodecMode::default(), Backend::Scalar), n, 0xBAC0).unwrap();
         for backend in [Backend::Vector, Backend::Graph] {
-            let other = run_suite_with(n, 0xBAC0, CodecMode::default(), backend).unwrap();
+            let other =
+                run_suite(&engine_cfg(CodecMode::default(), backend), n, 0xBAC0).unwrap();
             assert_eq!(scalar.len(), other.len());
             for (s, v) in scalar.iter().zip(&other) {
                 assert_eq!((&s.kernel, &s.format, s.n), (&v.kernel, &v.format, v.n));
@@ -197,13 +212,14 @@ fn suite_byte_identical_across_backends() {
     }
     // GEMM through the same gate (both codec modes on the non-scalar
     // backends).
-    use takum_avx10::harness::gemm::gemm_with_config;
+    use takum_avx10::harness::gemm::gemm;
+    let scalar_eng = engine_cfg(CodecMode::default(), Backend::Scalar);
     for f in ["t8", "t16", "bf16", "e4m3"] {
         for n in [64usize, 128] {
-            let s = gemm_with_config(n, f, 7, 1.0, CodecMode::default(), Backend::Scalar).unwrap();
+            let s = gemm(&scalar_eng, n, f, 7, 1.0).unwrap();
             for backend in [Backend::Vector, Backend::Graph] {
-                let v = gemm_with_config(n, f, 7, 1.0, CodecMode::default(), backend).unwrap();
-                let a = gemm_with_config(n, f, 7, 1.0, CodecMode::Arith, backend).unwrap();
+                let v = gemm(&engine_cfg(CodecMode::default(), backend), n, f, 7, 1.0).unwrap();
+                let a = gemm(&engine_cfg(CodecMode::Arith, backend), n, f, 7, 1.0).unwrap();
                 assert_eq!(s.rel_error.to_bits(), v.rel_error.to_bits(), "{f} n={n} {backend:?}");
                 assert_eq!(
                     s.rel_error.to_bits(),
@@ -223,10 +239,12 @@ fn suite_byte_identical_across_backends() {
 /// and the decoded-shadow cache.
 #[test]
 fn softmax_vector_backend_vs_arith_bit_identity() {
+    let vec_lut = engine_cfg(CodecMode::Lut, Backend::Vector);
+    let scalar_arith = engine_cfg(CodecMode::Arith, Backend::Scalar);
     for fmt in ["t8", "t16", "bf16", "e4m3"] {
         let spec = KernelSpec { kernel: Kernel::Softmax, format: fmt, n: 64, seed: 7 };
-        let fast = spec.run_with(CodecMode::Lut, Backend::Vector).unwrap();
-        let slow = spec.run_with(CodecMode::Arith, Backend::Scalar).unwrap();
+        let fast = spec.run(&vec_lut).unwrap();
+        let slow = spec.run(&scalar_arith).unwrap();
         assert_eq!(
             fast.rel_error.to_bits(),
             slow.rel_error.to_bits(),
@@ -246,10 +264,11 @@ fn softmax_vector_backend_vs_arith_bit_identity() {
 #[test]
 fn gemm_emits_through_the_shared_pipeline_vocabulary() {
     use takum_avx10::harness::gemm::gemm;
-    let t8 = gemm(32, "t8", 2, 1.0).unwrap();
+    let eng = engine();
+    let t8 = gemm(&eng, 32, "t8", 2, 1.0).unwrap();
     assert_eq!(t8.executed, t8.dp_instructions);
     assert_eq!(t8.convert_instructions, 0);
-    let e4 = gemm(32, "e4m3", 2, 1.0).unwrap();
+    let e4 = gemm(&eng, 32, "e4m3", 2, 1.0).unwrap();
     assert_eq!(e4.executed, e4.dp_instructions + e4.convert_instructions);
     assert!(e4.convert_instructions == 2 * e4.dp_instructions);
 }

@@ -1,10 +1,17 @@
 //! Integration over the simulator: assembled programs, GEMM pipelines and
 //! cross-checks against the numeric library.
 
-use takum_avx10::harness::gemm::{gemm, gemm_scaled, gemm_with_mode};
+use takum_avx10::engine::{Engine, EngineConfig};
+use takum_avx10::harness::gemm::{gemm, gemm_scaled};
 use takum_avx10::num::takum_linear;
 use takum_avx10::sim::{assemble, CodecMode, LaneType, Machine};
 use takum_avx10::util::rng::Rng;
+
+/// Env-default engine (the front door the old implicit defaults moved
+/// behind).
+fn engine() -> Engine {
+    EngineConfig::from_env().build().unwrap()
+}
 
 #[test]
 fn assembled_takum_kernel_runs_end_to_end() {
@@ -59,9 +66,10 @@ fn takum_compare_equals_value_compare_randomised() {
 fn gemm_instruction_count_advantage_scales() {
     // The takum pipeline's instruction-count advantage over the OFP8
     // convert-then-compute pipeline grows linearly with the problem.
+    let eng = engine();
     for n in [16usize, 32, 64] {
-        let t8 = gemm(n, "t8", 5, 1.0).unwrap();
-        let e4 = gemm(n, "e4m3", 5, 1.0).unwrap();
+        let t8 = gemm(&eng, n, "t8", 5, 1.0).unwrap();
+        let e4 = gemm(&eng, n, "e4m3", 5, 1.0).unwrap();
         // t8 processes 64 narrow lanes/dp vs 32, and needs no converts:
         // ≥ 3× fewer instructions.
         assert!(
@@ -111,8 +119,8 @@ fn lane_engine_program_equivalence_via_public_api() {
     let t = LaneType::Takum(16);
     let vals_a: Vec<f64> = (0..32).map(|_| rng.wide_f64(-30, 30)).collect();
     let vals_b: Vec<f64> = (0..32).map(|_| rng.wide_f64(-30, 30)).collect();
-    let mut fast = Machine::with_mode(CodecMode::Lut);
-    let mut slow = Machine::with_mode(CodecMode::Arith);
+    let mut fast = EngineConfig::from_env().codec(CodecMode::Lut).build().unwrap().machine();
+    let mut slow = EngineConfig::from_env().codec(CodecMode::Arith).build().unwrap().machine();
     for m in [&mut fast, &mut slow] {
         m.load_f64(0, t, &vals_a);
         m.load_f64(1, t, &vals_b);
@@ -125,9 +133,11 @@ fn lane_engine_program_equivalence_via_public_api() {
     assert_eq!(fast.executed, slow.executed);
 
     // End-to-end GEMM: identical error and instruction stream.
+    let lut_eng = EngineConfig::from_env().codec(CodecMode::Lut).build().unwrap();
+    let arith_eng = EngineConfig::from_env().codec(CodecMode::Arith).build().unwrap();
     for f in ["t8", "bf16"] {
-        let a = gemm_with_mode(16, f, 4, 1.0, CodecMode::Lut).unwrap();
-        let b = gemm_with_mode(16, f, 4, 1.0, CodecMode::Arith).unwrap();
+        let a = gemm(&lut_eng, 16, f, 4, 1.0).unwrap();
+        let b = gemm(&arith_eng, 16, f, 4, 1.0).unwrap();
         assert_eq!(a.rel_error.to_bits(), b.rel_error.to_bits(), "{f}");
         assert_eq!(a.executed, b.executed, "{f}");
     }
@@ -135,14 +145,9 @@ fn lane_engine_program_equivalence_via_public_api() {
 
 #[test]
 fn scaled_gemm_report_renders() {
-    let r = gemm_scaled(32, "t8", 9, 0.5, 1e4).unwrap();
+    let eng = engine();
+    let r = gemm_scaled(&eng, 32, "t8", 9, 0.5, 1e4).unwrap();
     assert!(r.rel_error.is_finite());
-    let txt = takum_avx10::harness::gemm::run_sim_gemm(
-        16,
-        "t8",
-        9,
-        takum_avx10::sim::Backend::from_env(),
-    )
-    .unwrap();
+    let txt = takum_avx10::harness::gemm::run_sim_gemm(&eng, 16, "t8", 9).unwrap();
     assert!(txt.contains("t8") && txt.contains("e4m3") && txt.contains("bf16"));
 }
