@@ -7,6 +7,7 @@ use takum_avx10::engine::{EngineConfig, Job};
 use takum_avx10::kernels::{Kernel, KernelSpec, Pipeline};
 use takum_avx10::sim::{Backend, CodecMode};
 use takum_avx10::util::bench::Bencher;
+use takum_avx10::verify::Verify;
 
 fn main() {
     let mut b = Bencher::new();
@@ -89,6 +90,36 @@ fn main() {
     println!("\n-- kernel speedup vs scalar backend (scalar / vector, scalar / graph) --");
     for (k, [sc, vec, gr]) in &backend_ns {
         println!("{k:<16} vector {:>6.2}x  graph {:>6.2}x", sc / vec, sc / gr);
+    }
+
+    // The verify-before-run gate (`crate::verify`): the same cells with
+    // the static pass off vs enforced under `Deny`. The delta is the
+    // whole price of verification — the abstract interpretation over the
+    // trace plus the builder's external-load journal — and it rides on
+    // the interned-mnemonic histograms (`&'static str` keys end to end),
+    // so a regression here usually means something started allocating
+    // keys on the per-instruction path again.
+    b.group(&format!("static verifier gate: off vs deny (softmax, n={n})"));
+    let off_eng = EngineConfig::new().verify(Verify::Off).build().expect("engine");
+    let deny_eng = EngineConfig::new().verify(Verify::Deny).build().expect("engine");
+    let mut gate: Vec<(&str, f64, f64)> = Vec::new();
+    for format in ["t8", "bf16", "e4m3"] {
+        let spec = KernelSpec { kernel: Kernel::Softmax, format, n, seed: 1 };
+        let off = b
+            .bench_with_elements(&format!("softmax {format} [verify=off]"), n as u64, || {
+                spec.run(&off_eng).unwrap()
+            })
+            .median_ns;
+        let deny = b
+            .bench_with_elements(&format!("softmax {format} [verify=deny]"), n as u64, || {
+                spec.run(&deny_eng).unwrap()
+            })
+            .median_ns;
+        gate.push((format, off, deny));
+    }
+    println!("\n-- static verification overhead (deny / off) --");
+    for (f, off, deny) in &gate {
+        println!("softmax {f:<6} {:>6.2}x", deny / off);
     }
 
     b.group("parallel kernel sweep (full suite, sizes 64+128)");

@@ -1,0 +1,96 @@
+#!/usr/bin/env python3
+"""Diff two sets of BENCH_*.json perf-trajectory files (schema v2, as
+emitted by the Rust benches' hand-rolled JSON writer) and report median
+wall-time regressions.
+
+Usage:
+    bench_trend.py BASELINE_DIR CURRENT_DIR [--threshold PCT]
+
+Measurements are keyed on (group, name) — per the schema, rows that pin
+a non-default engine config carry it in the measurement *name* (the
+`[lut]`/`[arith]`/`[scalar|vector|graph]`/`[verify=…]` suffixes), so the
+key is stable across runs even though the file-level `engine_config` tag
+varies by CI matrix leg.
+
+Emits a GitHub-flavoured-markdown summary on stdout (CI appends it to
+$GITHUB_STEP_SUMMARY). Exits 2 when any measurement regressed by more
+than the threshold, 0 otherwise; shared-runner timing is noisy, so
+callers treat this as a visibility signal, not a gate (the CI step is
+continue-on-error).
+"""
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def load(path):
+    """Parse one bench JSON file into {(group, name): median_ns}."""
+    doc = json.loads(Path(path).read_text())
+    rows = {}
+    for r in doc.get("results", []):
+        rows[(r.get("group", ""), r["name"])] = float(r["median_ns"])
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", help="directory holding the previous run's BENCH_*.json")
+    ap.add_argument("current", help="directory holding this run's BENCH_*.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=10.0,
+        help="flag regressions above this percentage of median time (default 10)",
+    )
+    args = ap.parse_args()
+
+    base_dir = Path(args.baseline)
+    cur_dir = Path(args.current)
+    compared = 0
+    regressions = []
+
+    print(f"### Bench trend vs previous run (threshold +{args.threshold:.0f}%)")
+    for cur_file in sorted(cur_dir.glob("BENCH_*.json")):
+        base_file = base_dir / cur_file.name
+        if not base_file.exists():
+            print(f"\n`{cur_file.name}`: no baseline file — skipped")
+            continue
+        base = load(base_file)
+        cur = load(cur_file)
+        flagged = []
+        for key in sorted(cur):
+            if key not in base or base[key] <= 0.0:
+                continue
+            compared += 1
+            delta = (cur[key] - base[key]) / base[key] * 100.0
+            if delta > args.threshold:
+                flagged.append((key, base[key], cur[key], delta))
+        print(
+            f"\n`{cur_file.name}`: {len(cur)} measurements, "
+            f"{len(flagged)} regressed beyond threshold"
+        )
+        if flagged:
+            print("\n| group | name | baseline | current | delta |")
+            print("|---|---|---|---|---|")
+            for (group, name), b, c, delta in flagged:
+                print(f"| {group} | {name} | {b:,.0f} ns | {c:,.0f} ns | +{delta:.1f}% |")
+        regressions.extend(flagged)
+
+    if compared == 0:
+        print("\nNo overlapping measurements — nothing compared.")
+        return 0
+    if not regressions:
+        print(f"\nAll {compared} overlapping measurements within threshold.")
+        return 0
+    print(
+        f"\n{len(regressions)} of {compared} measurements regressed "
+        f"beyond +{args.threshold:.0f}% (noise on shared runners is common; "
+        "compare across several runs before acting)."
+    )
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

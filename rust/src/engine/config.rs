@@ -11,13 +11,14 @@
 //!   default) and overrides with [`EngineConfig::try_backend`] /
 //!   [`EngineConfig::try_codec`] / [`EngineConfig::workers`] only when
 //!   the flag was given;
-//! * `TAKUM_BACKEND` / `TAKUM_CODEC` are read **here and nowhere else**
-//!   ([`EngineConfig::from_env`]); a malformed value warns and falls back
-//!   to the default (`scalar` / `lut`) via the pure, unit-testable
-//!   [`Backend::parse_env`] / [`CodecMode::parse_env`];
+//! * `TAKUM_BACKEND` / `TAKUM_CODEC` / `TAKUM_VERIFY` are read **here
+//!   and nowhere else** ([`EngineConfig::from_env`]); a malformed value
+//!   warns and falls back to the default (`scalar` / `lut` / `off`) via
+//!   the pure, unit-testable [`Backend::parse_env`] /
+//!   [`CodecMode::parse_env`] / [`crate::verify::Verify::parse_env`];
 //! * the built-in defaults are [`Backend::Scalar`], [`CodecMode::Lut`],
-//!   one worker per available core, [`WarmPolicy::Auto`] and seed
-//!   `0xBEEF`.
+//!   one worker per available core, [`WarmPolicy::Auto`], seed `0xBEEF`
+//!   and [`crate::verify::Verify::Off`].
 //!
 //! Default-constructed [`crate::sim::Machine`]s resolve their codec mode
 //! and backend through [`process_default`] (a cached
@@ -27,6 +28,7 @@
 
 use super::Engine;
 use crate::sim::{Backend, CodecMode};
+use crate::verify::Verify;
 use anyhow::Result;
 use std::sync::OnceLock;
 
@@ -59,6 +61,7 @@ pub struct EngineConfig {
     pub(crate) workers: usize,
     pub(crate) warm: WarmPolicy,
     pub(crate) seed: u64,
+    pub(crate) verify: Verify,
 }
 
 impl Default for EngineConfig {
@@ -77,6 +80,7 @@ impl EngineConfig {
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             warm: WarmPolicy::default(),
             seed: 0xBEEF,
+            verify: Verify::default(),
         }
     }
 
@@ -88,16 +92,22 @@ impl EngineConfig {
         Self::from_env_values(
             std::env::var("TAKUM_BACKEND").ok().as_deref(),
             std::env::var("TAKUM_CODEC").ok().as_deref(),
+            std::env::var("TAKUM_VERIFY").ok().as_deref(),
         )
     }
 
     /// [`EngineConfig::from_env`] with the variable values injected —
     /// the pure half, so env precedence and the warn-and-fallback path
     /// are unit-testable without mutating process state.
-    pub fn from_env_values(backend: Option<&str>, codec: Option<&str>) -> EngineConfig {
+    pub fn from_env_values(
+        backend: Option<&str>,
+        codec: Option<&str>,
+        verify: Option<&str>,
+    ) -> EngineConfig {
         EngineConfig::new()
             .backend(Backend::parse_env(backend))
             .codec(CodecMode::parse_env(codec))
+            .verify(Verify::parse_env(verify))
     }
 
     /// Select the plane backend.
@@ -122,6 +132,20 @@ impl EngineConfig {
     /// all valid names (via [`CodecMode::parse`]).
     pub fn try_codec(self, name: &str) -> Result<EngineConfig> {
         Ok(self.codec(CodecMode::parse(name)?))
+    }
+
+    /// Select the verify-before-run policy (see [`crate::verify`]): `Off`
+    /// skips the static pass, `Warn` prints diagnostics and runs anyway,
+    /// `Deny` refuses to execute programs with error-severity hazards.
+    pub fn verify(mut self, verify: Verify) -> EngineConfig {
+        self.verify = verify;
+        self
+    }
+
+    /// Select the verify policy by CLI-flag spelling; the error
+    /// enumerates all valid names (via [`Verify::parse`]).
+    pub fn try_verify(self, name: &str) -> Result<EngineConfig> {
+        Ok(self.verify(Verify::parse(name)?))
     }
 
     /// Worker-pool width for fan-out jobs. Validated at
@@ -179,19 +203,22 @@ mod tests {
         assert_eq!(base.mode, CodecMode::Lut);
 
         // Unset env ⇒ built-in defaults.
-        let cfg = EngineConfig::from_env_values(None, None);
+        let cfg = EngineConfig::from_env_values(None, None, None);
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Scalar));
+        assert_eq!(cfg.verify, Verify::Off);
 
         // Valid env values override the defaults.
-        let cfg = EngineConfig::from_env_values(Some("vector"), Some("arith"));
+        let cfg = EngineConfig::from_env_values(Some("vector"), Some("arith"), Some("deny"));
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Arith, Backend::Vector));
-        let cfg = EngineConfig::from_env_values(Some("graph"), None);
+        assert_eq!(cfg.verify, Verify::Deny);
+        let cfg = EngineConfig::from_env_values(Some("graph"), None, None);
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Graph));
 
         // Invalid env values warn (stderr) and fall back to the default
         // rather than failing construction.
-        let cfg = EngineConfig::from_env_values(Some("gpu"), Some("banana"));
+        let cfg = EngineConfig::from_env_values(Some("gpu"), Some("banana"), Some("paranoid"));
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Scalar));
+        assert_eq!(cfg.verify, Verify::Off);
     }
 
     /// CLI-spelling setters: valid names select, unknown names produce
@@ -214,6 +241,12 @@ mod tests {
         let e = EngineConfig::new().try_codec("fast").unwrap_err().to_string();
         assert!(e.contains("unknown codec mode \"fast\""), "{e:?}");
         assert!(e.contains("lut") && e.contains("arith"), "{e:?}");
+
+        let cfg = EngineConfig::new().try_verify("deny").unwrap();
+        assert_eq!(cfg.verify, Verify::Deny);
+        let e = EngineConfig::new().try_verify("paranoid").unwrap_err().to_string();
+        assert!(e.contains("unknown verify policy \"paranoid\""), "{e:?}");
+        assert!(e.contains("off") && e.contains("warn") && e.contains("deny"), "{e:?}");
     }
 
     /// Builder validation: a zero worker count is rejected at build time

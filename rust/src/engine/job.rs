@@ -7,6 +7,8 @@ use crate::coordinator::{kernel_sweep, KernelSweep, KernelSweepMetrics};
 use crate::harness::gemm::{gemm_scaled, GemmResult};
 use crate::kernels::{run_suite, KernelResult, KernelSpec};
 use crate::runtime::TensorF64;
+use crate::sim::{Machine, Program};
+use crate::verify::{Externals, Verifier};
 use anyhow::Result;
 
 /// One unit of work. Specs that carry `seed: None` inherit the engine's
@@ -26,6 +28,17 @@ pub enum Job {
     /// A runtime artifact executed through the engine-owned PJRT service
     /// (graph-interpreter fallback without the `pjrt` feature).
     Artifact { name: String, inputs: Vec<TensorF64> },
+    /// A raw recorded program executed instruction-by-instruction on a
+    /// fresh (zeroed) engine-built machine. `externals` is *static
+    /// typing metadata* for the verifier — it declares which registers
+    /// and masks the caller considers externally defined, and at what
+    /// lane types, without carrying data (the machine itself starts
+    /// zeroed; an all-zero register decodes to 0.0 in every format).
+    /// Under a non-`Off` verify policy the program is statically
+    /// verified first (implicit-inputs semantics: registers outside the
+    /// journal read as architectural zeros); `Verify::Deny` rejects
+    /// ill-typed programs before a single instruction runs.
+    Program { prog: Program, externals: Externals },
 }
 
 /// Spec of one quantised GEMM run.
@@ -55,6 +68,9 @@ pub enum JobResult {
     Suite(Vec<KernelResult>),
     Sweep { results: Vec<KernelResult>, metrics: KernelSweepMetrics },
     Artifact(Vec<Vec<f64>>),
+    /// The machine after the program ran (boxed: a machine owns the full
+    /// 32×512-bit register file).
+    Program(Box<Machine>),
 }
 
 impl JobResult {
@@ -65,6 +81,7 @@ impl JobResult {
             JobResult::Suite(_) => "suite",
             JobResult::Sweep { .. } => "sweep",
             JobResult::Artifact(_) => "artifact",
+            JobResult::Program(_) => "program",
         }
     }
 
@@ -104,6 +121,13 @@ impl JobResult {
             other => panic!("expected artifact result, got {}", other.kind()),
         }
     }
+
+    pub fn program(self) -> Box<Machine> {
+        match self {
+            JobResult::Program(m) => m,
+            other => panic!("expected program result, got {}", other.kind()),
+        }
+    }
 }
 
 impl Engine {
@@ -126,6 +150,18 @@ impl Engine {
             }
             Job::Artifact { name, inputs } => {
                 Ok(JobResult::Artifact(self.pjrt()?.run_f64(&name, inputs)?))
+            }
+            Job::Program { prog, externals } => {
+                use crate::verify::Verify;
+                if self.verify_policy() != Verify::Off {
+                    let report =
+                        Verifier::with_externals(externals).implicit_inputs(true).verify(&prog);
+                    self.enforce_report(&format!("program ({} instrs)", prog.len()), &report)?;
+                }
+                let mut m = self.machine();
+                m.run(&prog)?;
+                self.absorb_plans(&m);
+                Ok(JobResult::Program(Box::new(m)))
             }
         }
     }
@@ -159,6 +195,67 @@ mod tests {
             .unwrap()
             .artifact();
         assert_eq!(art[0].len(), 3);
+    }
+
+    /// The acceptance gate of the static verifier: an engine under
+    /// `Verify::Deny` refuses to execute a program that writes takum8
+    /// lanes and reads them back as OFP8 without a convert, and the
+    /// error names the offending instruction index; the same engine
+    /// happily runs the well-typed variant, and a `Verify::Off` engine
+    /// runs the ill-typed one (dynamic semantics are raw bits — the
+    /// hazard is silent without the gate).
+    #[test]
+    fn deny_rejects_ill_typed_program_by_index() {
+        use crate::sim::{Instruction, Operand};
+        use crate::verify::{Externals, Verify};
+
+        let ill = {
+            let mut p = Program::default();
+            // #0: v2 := v0 + v1 in takum8.
+            p.push(Instruction::new(
+                "VADDPT8",
+                Operand::Vreg(2),
+                vec![Operand::Vreg(0), Operand::Vreg(1)],
+            ));
+            // #1: v2 reinterpreted as E4M3 (PH-pipe convert reads HF8).
+            p.push(Instruction::new("VCVTHF82PH", Operand::Vreg(3), vec![Operand::Vreg(2)]));
+            p
+        };
+
+        let deny = EngineConfig::new().verify(Verify::Deny).workers(1).build().unwrap();
+        let err = deny
+            .submit(Job::Program { prog: ill.clone(), externals: Externals::new() })
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("type-mismatch"), "{err}");
+        assert!(err.contains("#1"), "error must name the instruction index: {err}");
+        assert!(err.contains("v2"), "{err}");
+
+        // Well-typed: stay in the takum domain.
+        let ok = {
+            let mut p = Program::default();
+            p.push(Instruction::new(
+                "VADDPT8",
+                Operand::Vreg(2),
+                vec![Operand::Vreg(0), Operand::Vreg(1)],
+            ));
+            p.push(Instruction::new("VMULPT8", Operand::Vreg(3), vec![Operand::Vreg(2), Operand::Vreg(2)]));
+            p
+        };
+        let m = deny
+            .submit(Job::Program { prog: ok, externals: Externals::new() })
+            .unwrap()
+            .program();
+        assert_eq!(m.executed, 2);
+
+        // Off: the ill-typed program executes (bit-reinterpretation and
+        // all) — the gate, not the simulator, is what catches it.
+        let off = EngineConfig::new().workers(1).build().unwrap();
+        let m = off
+            .submit(Job::Program { prog: ill, externals: Externals::new() })
+            .unwrap()
+            .program();
+        assert_eq!(m.executed, 2);
     }
 
     /// A Gemm job with `seed: None` inherits the engine seed: two engines

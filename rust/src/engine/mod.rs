@@ -23,6 +23,18 @@
 //! | [`Job::Suite`]     | every kernel × format at one size, sequential   |
 //! | [`Job::Sweep`]     | kernels × formats × sizes over the worker pool  |
 //! | [`Job::Artifact`]  | a runtime artifact through the PJRT service     |
+//! | [`Job::Program`]   | a raw recorded [`crate::sim::Program`] on a fresh machine |
+//!
+//! ## The verify-before-run gate
+//!
+//! When the config's [`Verify`] policy is not `Off`, every recorded
+//! program passes through the [`crate::verify`] static dataflow lint
+//! before it executes: kernel-suite cells verify their traced lowering
+//! (with the builder's external-load journal), and [`Job::Program`]
+//! verifies under implicit-inputs semantics. `Warn` prints diagnostics
+//! and proceeds; `Deny` makes [`Engine::submit`] fail with the
+//! instruction-indexed error listing ([`Engine::enforce_report`]).
+//! Dead-write findings are warnings and never block.
 //!
 //! Fan-out jobs run on the engine's worker pool
 //! ([`Engine::run_tasks`]): an atomic counter hands out task indices,
@@ -60,7 +72,8 @@
 //! selector) is added by extending [`EngineConfig`] — one new builder
 //! method, one line in [`Engine::tag`] — instead of a new `_with_*`
 //! signature at every call site; every caller inherits it through the
-//! front door automatically.
+//! front door automatically. The [`Verify`] policy axis (`--verify`,
+//! `TAKUM_VERIFY`) is the worked example of the recipe.
 
 pub mod config;
 pub mod job;
@@ -74,7 +87,8 @@ pub(crate) use config::process_default;
 use crate::num::lut;
 use crate::runtime::{default_artifact_dir, PjrtHandle, PjrtService};
 use crate::sim::{Backend, CodecMode, LanePlan, Machine};
-use anyhow::{ensure, Result};
+use crate::verify::{self, Verify};
+use anyhow::{bail, ensure, Result};
 use std::collections::HashMap;
 use std::sync::Mutex;
 
@@ -83,8 +97,9 @@ use std::sync::Mutex;
 pub struct Engine {
     cfg: EngineConfig,
     /// Shared mnemonic-plan cache: seeded into every handed-out machine,
-    /// merged back by the builders.
-    plans: Mutex<HashMap<String, LanePlan>>,
+    /// merged back by the builders (interned keys — cloning the cache
+    /// into a machine copies pointers, not strings).
+    plans: Mutex<HashMap<&'static str, LanePlan>>,
     /// Lazily started PJRT artifact service (graph-interpreter fallback
     /// without the `pjrt` feature).
     pjrt: Mutex<Option<PjrtService>>,
@@ -161,6 +176,51 @@ impl Engine {
         self.cfg.seed
     }
 
+    /// The verify-before-run policy (see [`crate::verify`]).
+    pub fn verify_policy(&self) -> Verify {
+        self.cfg.verify
+    }
+
+    /// Apply the configured [`Verify`] policy to a verification report
+    /// produced for `context` (a human-readable job description, e.g.
+    /// `"kernel softmax/e4m3"`). `Off` is a no-op; `Warn` prints every
+    /// diagnostic to stderr and continues; `Deny` fails with the full
+    /// error listing (instruction indices included) when the report
+    /// carries error-severity diagnostics — warnings print but pass.
+    pub fn enforce_report(&self, context: &str, report: &verify::Report) -> Result<()> {
+        match self.cfg.verify {
+            Verify::Off => Ok(()),
+            Verify::Warn => {
+                if !report.is_clean() {
+                    eprintln!(
+                        "verify warning: {context}: {} diagnostic(s):\n{}",
+                        report.diagnostics.len(),
+                        report.render_diagnostics()
+                    );
+                }
+                Ok(())
+            }
+            Verify::Deny => {
+                if !report.passes_deny() {
+                    bail!(
+                        "verify: {context}: {} error(s), {} warning(s):\n{}",
+                        report.error_count(),
+                        report.warning_count(),
+                        report.render_diagnostics()
+                    );
+                }
+                if report.warning_count() > 0 {
+                    eprintln!(
+                        "verify warning: {context}: {} warning(s):\n{}",
+                        report.warning_count(),
+                        report.render_diagnostics()
+                    );
+                }
+                Ok(())
+            }
+        }
+    }
+
     /// Hand out a configured [`Machine`]: codec mode and backend from the
     /// engine config, plan cache pre-seeded with everything the engine
     /// has resolved so far.
@@ -173,10 +233,8 @@ impl Engine {
     /// shared cache (called by `KernelBuilder::finish`).
     pub(crate) fn absorb_plans(&self, m: &Machine) {
         let mut plans = self.plans.lock().expect("plan cache poisoned");
-        for (mn, plan) in m.plan_cache() {
-            if !plans.contains_key(mn) {
-                plans.insert(mn.clone(), *plan);
-            }
+        for (&mn, &plan) in m.plan_cache() {
+            plans.entry(mn).or_insert(plan);
         }
     }
 
@@ -205,10 +263,11 @@ impl Engine {
     /// engine-config tag stamped into the bench JSON artifacts.
     pub fn tag(&self) -> String {
         format!(
-            "backend={};codec={};workers={}",
+            "backend={};codec={};workers={};verify={}",
             self.cfg.backend.name(),
             self.cfg.mode.name(),
-            self.cfg.workers
+            self.cfg.workers,
+            self.cfg.verify.name()
         )
     }
 }
@@ -275,6 +334,14 @@ mod tests {
             .workers(3)
             .build()
             .unwrap();
-        assert_eq!(eng.tag(), "backend=graph;codec=arith;workers=3");
+        assert_eq!(eng.tag(), "backend=graph;codec=arith;workers=3;verify=off");
+        let eng = EngineConfig::new()
+            .backend(Backend::Graph)
+            .codec(CodecMode::Arith)
+            .workers(3)
+            .verify(Verify::Deny)
+            .build()
+            .unwrap();
+        assert_eq!(eng.tag(), "backend=graph;codec=arith;workers=3;verify=deny");
     }
 }

@@ -528,6 +528,74 @@ pub fn total_count() -> usize {
     Category::ALL.iter().map(|c| category_count(*c)).sum()
 }
 
+/// Membership test over the union of the AVX10.2 and proposed mnemonic
+/// sets (cached process-wide). The static verifier's ISA cross-check
+/// ([`crate::verify::isa_cross_check`]) routes here: a program mnemonic
+/// outside both sets means a lowering drifted off the ISA under study.
+pub fn known_mnemonic(m: &str) -> bool {
+    use std::collections::HashSet;
+    use std::sync::OnceLock;
+    static ALL: OnceLock<HashSet<&'static str>> = OnceLock::new();
+    ALL.get_or_init(|| {
+        groups()
+            .iter()
+            .flat_map(|g| g.avx_instructions.iter().chain(g.proposed_instructions.iter()))
+            .map(|s| s.as_str())
+            .collect()
+    })
+    .contains(m)
+}
+
+/// The executability audit: the proposed instruction set partitioned by
+/// whether [`crate::sim::lanes::LanePlan::resolve`] gives the mnemonic
+/// runnable semantics in the simulator.
+#[derive(Debug, Clone)]
+pub struct IsaAudit {
+    /// Proposed mnemonics the simulator executes.
+    pub resolvable: Vec<String>,
+    /// Proposed mnemonics that are names only (data movement, complex
+    /// arithmetic, crypto, gather/scatter — families the simulator's
+    /// compute-only model deliberately leaves out).
+    pub unresolvable: Vec<String>,
+}
+
+impl IsaAudit {
+    pub fn total(&self) -> usize {
+        self.resolvable.len() + self.unresolvable.len()
+    }
+
+    /// One-paragraph summary for reports (`lint` prints this).
+    pub fn describe(&self) -> String {
+        format!(
+            "proposed ISA: {} mnemonics, {} executable in the simulator ({:.1}%), {} name-only",
+            self.total(),
+            self.resolvable.len(),
+            100.0 * self.resolvable.len() as f64 / self.total().max(1) as f64,
+            self.unresolvable.len()
+        )
+    }
+}
+
+/// Partition every proposed mnemonic in the database by whether the
+/// simulator can execute it (see [`IsaAudit`]). Deduplicates across
+/// groups; order follows the tables.
+pub fn audit_executable() -> IsaAudit {
+    let mut seen = std::collections::HashSet::new();
+    let mut audit = IsaAudit { resolvable: Vec::new(), unresolvable: Vec::new() };
+    for g in groups() {
+        for m in &g.proposed_instructions {
+            if !seen.insert(m.as_str()) {
+                continue;
+            }
+            match crate::sim::lanes::LanePlan::resolve(m) {
+                Ok(_) => audit.resolvable.push(m.clone()),
+                Err(_) => audit.unresolvable.push(m.clone()),
+            }
+        }
+    }
+    audit
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -663,6 +731,73 @@ mod tests {
         ] {
             assert!(proposed.contains(m), "missing proposed mnemonic {m}");
         }
+    }
+
+    #[test]
+    fn known_mnemonic_spans_both_sets() {
+        // Baseline, proposed, and the obviously absent.
+        assert!(known_mnemonic("VADDPS"));
+        assert!(known_mnemonic("VDPBF16PS"));
+        assert!(known_mnemonic("VADDPT8"));
+        assert!(known_mnemonic("VDPPT8PT16"));
+        assert!(known_mnemonic("KADDB8"));
+        assert!(!known_mnemonic("VFROBNICATE"));
+        // The simulator's takum↔takum narrowing glue is deliberately NOT
+        // in the tables (the proposed convert matrix is int↔takum only) —
+        // the verifier's cross-check allowlists it explicitly.
+        assert!(!known_mnemonic("VCVTPT162PT8"));
+    }
+
+    /// The executability audit partitions the proposed set cleanly, and
+    /// the partition's edges are where they should be: the arithmetic/
+    /// compare/convert/mask/dot core runs, the data-movement and crypto
+    /// families are names only.
+    #[test]
+    fn audit_partitions_proposed_set() {
+        let audit = audit_executable();
+        // Dedup happens across groups, so ≤ the raw proposed total.
+        let raw: usize = Category::ALL.iter().map(|c| proposed_category_count(*c)).sum();
+        assert!(audit.total() <= raw);
+        assert!(audit.total() > 0);
+
+        let resolvable: std::collections::HashSet<&str> =
+            audit.resolvable.iter().map(|s| s.as_str()).collect();
+        for m in [
+            "VADDPT8",       // packed takum arithmetic
+            "VADDST8",       // scalar takum arithmetic
+            "VFMADD231PT16", // FMA family
+            "VCMPPT32",      // compares
+            "VDPPT8PT16",    // widening dot products
+            "VCVTPS82PT8",   // int→takum converts
+            "VCVTPT642PU64", // takum→int converts
+            "KADDB8",        // mask ops
+            "VKUNPCKB16B32", // mask unpacks
+            "VPMOVM2B64",    // mask→vector
+            "VPMOVB82M",     // vector→mask
+            "VBROADCASTB8",  // lane broadcasts
+            "VPSLLB16",      // shifts
+            "VPADDU8",       // integer lanes
+            "VPAND",         // width-agnostic bitwise
+        ] {
+            assert!(resolvable.contains(m), "{m} should be executable");
+        }
+
+        let unresolvable: std::collections::HashSet<&str> =
+            audit.unresolvable.iter().map(|s| s.as_str()).collect();
+        for m in [
+            "VAESENC",        // crypto
+            "VGF2P8MULU8",    // crypto
+            "VPCLMULS64",     // carry-less multiply
+            "VPTERNLOGB8",    // ternary logic
+            "VPGATHERB32",    // gather/scatter
+            "VFIXUPIMMPT8",   // fp special-case fixup
+            "VUCMPST64",      // unordered compares
+            "VCVTST162SU16",  // scalar int↔takum converts
+            "VPSADU8U16",     // sum of absolute differences
+        ] {
+            assert!(unresolvable.contains(m), "{m} should be name-only");
+        }
+        assert!(audit.describe().contains("executable"));
     }
 
     #[test]

@@ -21,7 +21,8 @@
 
 use super::pipeline::Pipeline;
 use crate::engine::Engine;
-use crate::sim::{Instruction, Machine, Operand, Program};
+use crate::sim::{Instruction, LaneType, Machine, Operand, Program};
+use crate::verify::{Externals, Report, Verifier, Verify};
 use anyhow::Result;
 
 /// Register the builder reserves as an all-zero constant (never written;
@@ -39,17 +40,28 @@ pub struct KernelBuilder<'e> {
     trace: Program,
     tracing: bool,
     engine: &'e Engine,
+    /// Position-aware journal of the harness-side data I/O (`load_*`
+    /// calls, which go straight to the register file), kept in lock-step
+    /// with the trace so the static verifier knows which registers are
+    /// externally defined — and at which lane type — before each
+    /// instruction. Only maintained while tracing.
+    externals: Externals,
 }
 
 impl<'e> KernelBuilder<'e> {
     /// A tracing builder on a machine configured by `engine`.
     pub fn new(pipe: Pipeline, engine: &'e Engine) -> KernelBuilder<'e> {
+        let mut externals = Externals::new();
+        // The reserved all-zero constant register is type-polymorphic:
+        // bit pattern 0 decodes to 0.0 under every lane format.
+        externals.load_untyped(0, ZERO_REG);
         KernelBuilder {
             m: engine.machine(),
             pipe,
             trace: Program::default(),
             tracing: true,
             engine,
+            externals,
         }
     }
 
@@ -83,6 +95,31 @@ impl<'e> KernelBuilder<'e> {
         (self.m, self.trace)
     }
 
+    /// [`KernelBuilder::finish`] plus the static verification report for
+    /// the recorded trace (against the builder's external-load journal).
+    /// `None` when the engine's verify policy is `Off` or the builder is
+    /// untraced — computing the report is one linear pass over the
+    /// trace, so it is skipped entirely unless asked for.
+    pub fn finish_with_report(self) -> (Machine, Program, Option<Report>) {
+        let report = (self.tracing && self.engine.verify_policy() != Verify::Off)
+            .then(|| self.verify_report());
+        self.engine.absorb_plans(&self.m);
+        (self.m, self.trace, report)
+    }
+
+    /// The external-load journal recorded so far (in lock-step with
+    /// [`KernelBuilder::program`]).
+    pub fn externals(&self) -> &Externals {
+        &self.externals
+    }
+
+    /// Statically verify the trace recorded so far against the external
+    /// journal (strict inputs: every read must trace back to an emitted
+    /// instruction or a journalled load).
+    pub fn verify_report(&self) -> Report {
+        Verifier::with_externals(self.externals.clone()).verify(&self.trace)
+    }
+
     /// Execute one instruction, then record it (no clone on the hot
     /// path: the trace takes ownership after the step).
     fn emit(&mut self, ins: Instruction) -> Result<()> {
@@ -96,30 +133,54 @@ impl<'e> KernelBuilder<'e> {
     // -------------------------------------------------------------- data I/O
 
     pub fn load_narrow(&mut self, v: u8, xs: &[f64]) {
+        self.journal_load(v, self.pipe.narrow);
         self.m.load_f64(v, self.pipe.narrow, xs);
     }
 
     pub fn load_compute(&mut self, v: u8, xs: &[f64]) {
+        self.journal_load(v, self.pipe.compute);
         self.m.load_f64(v, self.pipe.compute, xs);
     }
 
     pub fn load_wide(&mut self, v: u8, xs: &[f64]) {
+        self.journal_load(v, self.pipe.wide);
         self.m.load_f64(v, self.pipe.wide, xs);
     }
 
-    pub fn read_compute(&self, v: u8, n: usize) -> Vec<f64> {
+    /// Record an external register definition at the current trace
+    /// position (no-op when untraced: the journal exists to verify the
+    /// trace, and untraced builders keep neither).
+    fn journal_load(&mut self, v: u8, ty: LaneType) {
+        if self.tracing {
+            self.externals.load(self.trace.len(), v, ty);
+        }
+    }
+
+    /// Record a harness-side data read (the consumption that keeps a
+    /// per-tile result live for the dead-write analysis even though no
+    /// instruction reads it).
+    fn journal_read(&mut self, v: u8) {
+        if self.tracing {
+            self.externals.read(self.trace.len(), v);
+        }
+    }
+
+    pub fn read_compute(&mut self, v: u8, n: usize) -> Vec<f64> {
+        self.journal_read(v);
         let mut out = self.m.read_f64(v, self.pipe.compute);
         out.truncate(n);
         out
     }
 
-    pub fn read_wide(&self, v: u8, n: usize) -> Vec<f64> {
+    pub fn read_wide(&mut self, v: u8, n: usize) -> Vec<f64> {
+        self.journal_read(v);
         let mut out = self.m.read_f64(v, self.pipe.wide);
         out.truncate(n);
         out
     }
 
-    pub fn read_narrow(&self, v: u8, n: usize) -> Vec<f64> {
+    pub fn read_narrow(&mut self, v: u8, n: usize) -> Vec<f64> {
+        self.journal_read(v);
         let mut out = self.m.read_f64(v, self.pipe.narrow);
         out.truncate(n);
         out

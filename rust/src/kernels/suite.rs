@@ -82,7 +82,26 @@ impl KernelSpec {
     pub fn run(&self, engine: &Engine) -> Result<KernelResult> {
         let pipe = Pipeline::for_format(self.format)?;
         let run = self.kernel.run_raw(&pipe, self.n, self.seed, engine)?;
+        if let Some(report) = &run.report {
+            // The verify-before-run gate (see `crate::verify`): under
+            // `Warn` diagnostics go to stderr, under `Deny` an ill-typed
+            // lowering is an error naming the offending instructions.
+            engine.enforce_report(
+                &format!("kernel {}/{} (n={})", self.kernel.name(), self.format, self.n),
+                report,
+            )?;
+        }
         Ok(KernelResult::from_run(self, &pipe, run))
+    }
+
+    /// Lower + execute without the enforcement step, returning the raw
+    /// [`KernelRun`] (machine, trace, and — under a non-`Off` policy —
+    /// the static verification report). The `lint` subcommand and the
+    /// verifier's corpus tests inspect reports themselves rather than
+    /// routing them through the engine's policy.
+    pub fn lower(&self, engine: &Engine) -> Result<KernelRun> {
+        let pipe = Pipeline::for_format(self.format)?;
+        self.kernel.run_raw(&pipe, self.n, self.seed, engine)
     }
 }
 
@@ -126,9 +145,10 @@ impl KernelResult {
             executed: run.machine.executed,
             dp_instructions,
             convert_instructions,
-            // The machine is owned and dropped here; move the histogram
-            // out instead of cloning it.
-            counts: run.machine.counts,
+            // The interned-key histogram crosses into the owned-String
+            // result type here, at the end of the run — the hot path
+            // (per-instruction counting) never allocates a key.
+            counts: run.machine.counts.into_iter().map(|(m, c)| (m.to_string(), c)).collect(),
         }
     }
 }
@@ -191,6 +211,18 @@ mod tests {
         }
         let txt = render(&results);
         assert!(txt.contains("softmax") && txt.contains("e4m3") && txt.contains("avx10.2"));
+    }
+
+    /// Under `Verify::Deny` every suite lowering passes the static gate
+    /// and still runs (the rejecting direction is pinned in
+    /// `engine::job`; the full corpus sweep in `crate::verify`).
+    #[test]
+    fn suite_cell_runs_under_deny() {
+        use crate::verify::Verify;
+        let eng = EngineConfig::new().verify(Verify::Deny).workers(1).build().unwrap();
+        let spec = KernelSpec { kernel: Kernel::Softmax, format: "e4m3", n: 64, seed: 2 };
+        let r = spec.run(&eng).unwrap();
+        assert!(r.executed > 0);
     }
 
     #[test]

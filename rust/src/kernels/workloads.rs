@@ -20,6 +20,7 @@ use super::pipeline::Pipeline;
 use crate::engine::Engine;
 use crate::sim::{Machine, Program};
 use crate::util::rng::Rng;
+use crate::verify::Report;
 use anyhow::Result;
 
 /// All kernels operate on whole tiles for every format: the 8-bit formats
@@ -42,6 +43,10 @@ pub struct KernelRun {
     pub rel_error: f64,
     pub machine: Machine,
     pub program: Program,
+    /// Static verification of the recorded trace against the builder's
+    /// external-load journal; `None` when the engine's verify policy is
+    /// `Off` (the report is never computed unless asked for).
+    pub report: Option<Report>,
 }
 
 fn check_size(n: usize) -> Result<()> {
@@ -125,8 +130,8 @@ pub fn run_dot(
     }
     let sum = kb.hsum_wide(WACC, wl, S1, S2)?;
     let rel_error = ((sum - reference) / reference).abs();
-    let (machine, program) = kb.finish();
-    Ok(KernelRun { rel_error, machine, program })
+    let (machine, program, report) = kb.finish_with_report();
+    Ok(KernelRun { rel_error, machine, program, report })
 }
 
 /// AXPY `y ← α·x + y`: broadcast constant + one packed FMA per tile, with
@@ -157,8 +162,8 @@ pub fn run_axpy(
         out.extend(kb.read_narrow(s, cl));
     }
     let rel_error = frobenius(&out, &reference);
-    let (machine, program) = kb.finish();
-    Ok(KernelRun { rel_error, machine, program })
+    let (machine, program, report) = kb.finish_with_report();
+    Ok(KernelRun { rel_error, machine, program, report })
 }
 
 /// Elementwise activation via a cubic Horner polynomial: three dependent
@@ -193,8 +198,8 @@ pub fn run_poly(
         out.extend(kb.read_narrow(s, cl));
     }
     let rel_error = frobenius(&out, &reference);
-    let (machine, program) = kb.finish();
-    Ok(KernelRun { rel_error, machine, program })
+    let (machine, program, report) = kb.finish_with_report();
+    Ok(KernelRun { rel_error, machine, program, report })
 }
 
 /// Numerically-stable softmax: global max (packed + horizontal tree),
@@ -271,8 +276,8 @@ pub fn run_softmax(
         out.extend(kb.read_narrow(s, cl));
     }
     let rel_error = frobenius(&out, &reference);
-    let (machine, program) = kb.finish();
-    Ok(KernelRun { rel_error, machine, program })
+    let (machine, program, report) = kb.finish_with_report();
+    Ok(KernelRun { rel_error, machine, program, report })
 }
 
 /// 1-D convolution with the 5-tap filter [`CONV_TAPS`]: per output tile,
@@ -312,8 +317,8 @@ pub fn run_conv1d(
         out.extend(kb.read_narrow(s, cl));
     }
     let rel_error = frobenius(&out, &reference);
-    let (machine, program) = kb.finish();
-    Ok(KernelRun { rel_error, machine, program })
+    let (machine, program, report) = kb.finish_with_report();
+    Ok(KernelRun { rel_error, machine, program, report })
 }
 
 /// Sum + max reduction: the sum runs through the widening dot product
@@ -352,8 +357,8 @@ pub fn run_reduce(
     let es = ((sum - ref_sum) / ref_sum).abs();
     let em = ((mx - ref_max) / ref_max).abs();
     let rel_error = ((es * es + em * em) / 2.0).sqrt();
-    let (machine, program) = kb.finish();
-    Ok(KernelRun { rel_error, machine, program })
+    let (machine, program, report) = kb.finish_with_report();
+    Ok(KernelRun { rel_error, machine, program, report })
 }
 
 #[cfg(test)]

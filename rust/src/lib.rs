@@ -32,7 +32,10 @@
 //! warm policy, RNG seed — is configured through the [`engine`] module's
 //! [`EngineConfig`]/[`Engine`], the single front door every workload
 //! (kernel suite, GEMM, sweeps, runtime artifacts, CLI, benches) runs
-//! through.
+//! through. The engine optionally runs every recorded program through the
+//! [`verify`] module's static dataflow lint (typestate over registers and
+//! masks, instruction-indexed diagnostics, a static instruction-mix
+//! model) before execution — `TAKUM_VERIFY=warn|deny` / `--verify`.
 
 // The seed idiom predates the clippy CI gate: eagerly-evaluated
 // `Option::or(strip_prefix(..))` chains on cheap operands are pervasive
@@ -44,6 +47,7 @@ pub mod num;
 pub mod isa;
 pub mod sim;
 pub mod engine;
+pub mod verify;
 pub mod kernels;
 pub mod matrix;
 pub mod harness;

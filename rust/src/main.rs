@@ -26,8 +26,10 @@ use takum_avx10::engine::{EngineConfig, Job, WarmPolicy};
 use takum_avx10::harness::{figure1, figure2, tables};
 use takum_avx10::isa::database::Category;
 use takum_avx10::kernels::{workloads::TILE_ALIGN, Kernel, Pipeline};
+use takum_avx10::kernels::KernelSpec;
 use takum_avx10::matrix::generator::CollectionSpec;
 use takum_avx10::sim::{assemble, LaneType};
+use takum_avx10::verify::{isa_cross_check, StaticMix, Verify};
 
 /// Minimal flag parser: `--key value` and bare flags.
 struct Args {
@@ -88,6 +90,7 @@ fn run(raw: &[String]) -> Result<()> {
         "simulate" => cmd_simulate(&args),
         "gemm" => cmd_gemm(&args),
         "kernels" => cmd_kernels(&args),
+        "lint" => cmd_lint(&args),
         "artifacts" => cmd_artifacts(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
@@ -111,16 +114,21 @@ commands:
           quantised GEMM on the simulator
   kernels [--sizes 64,128] [--kernels dot,softmax,...] [--formats t8,e4m3,...]
           workload suite on both ISAs (parallel sweep)
+  lint    [--n 64]                static dataflow lint over every kernel ×
+          format lowering: per-cell diagnostics, the static instruction
+          mix, and the ISA-database cross-check + executability audit
   artifacts                       list artifacts loadable by the runtime
           (built-in graph-interpreter set without the pjrt feature)
 
-engine flags (shared by figure2/simulate/gemm/kernels/artifacts):
+engine flags (shared by figure2/simulate/gemm/kernels/lint/artifacts):
   --backend scalar|vector|graph   plane backend
   --codec lut|arith               lane codec mode
   --workers N                     worker-pool width (N >= 1)
   --seed S                        default RNG seed
-Precedence: CLI flag > TAKUM_BACKEND/TAKUM_CODEC env > default (scalar/lut).
-sizes must be positive multiples of 64 (whole compute tiles).
+  --verify off|warn|deny          static verify-before-run policy
+Precedence: CLI flag > TAKUM_BACKEND/TAKUM_CODEC/TAKUM_VERIFY env >
+default (scalar/lut/off). sizes must be positive multiples of 64 (whole
+compute tiles).
 ";
 
 fn cmd_figure1() -> Result<()> {
@@ -147,6 +155,9 @@ fn parse_engine_cfg(args: &Args) -> Result<EngineConfig> {
     }
     if let Some(s) = args.get("seed") {
         cfg = cfg.seed(s.parse().map_err(|_| anyhow!("bad value for --seed: {s:?}"))?);
+    }
+    if let Some(v) = args.get("verify") {
+        cfg = cfg.try_verify(v)?;
     }
     Ok(cfg)
 }
@@ -328,6 +339,75 @@ fn cmd_kernels(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Static dataflow lint over the kernel suite: lower every kernel ×
+/// format cell with tracing on, verify each trace against the builder's
+/// external journal, and print per-cell diagnostics, the aggregate static
+/// instruction mix, the ISA-database cross-check and the executability
+/// audit. Exits non-zero if any cell carries error-severity diagnostics.
+fn cmd_lint(args: &Args) -> Result<()> {
+    let n: usize = args.get_parse("n", 64)?;
+    anyhow::ensure!(
+        n >= TILE_ALIGN && n % TILE_ALIGN == 0,
+        "--n must be a positive multiple of {TILE_ALIGN}, got {n}"
+    );
+    let mut eng = parse_engine_cfg(args)?.build()?;
+    if eng.verify_policy() == Verify::Off {
+        // The lint exists to look at reports: lift the policy floor to
+        // Warn when neither flag nor env asked for more.
+        eng = parse_engine_cfg(args)?.verify(Verify::Warn).build()?;
+    }
+
+    let mut failing = 0usize;
+    let mut mix = StaticMix::default();
+    for kernel in Kernel::ALL {
+        for format in Pipeline::ALL_FORMATS {
+            let spec = KernelSpec { kernel, format, n, seed: eng.seed() };
+            let run = spec.lower(&eng)?;
+            let report = run.report.expect("lint engines verify every lowering");
+            let status = if report.error_count() > 0 {
+                failing += 1;
+                "FAIL"
+            } else if report.warning_count() > 0 {
+                "warn"
+            } else {
+                "ok"
+            };
+            println!(
+                "{:<9} {:<6} {:>6} instrs {:>4} converts {:>4} dots  [{status}]",
+                kernel.name(),
+                format,
+                report.mix.total,
+                report.mix.converts,
+                report.mix.dots
+            );
+            print!("{}", report.render_diagnostics());
+            mix.total += report.mix.total;
+            mix.converts += report.mix.converts;
+            mix.dots += report.mix.dots;
+            for (&m, &c) in &report.mix.histogram {
+                *mix.histogram.entry(m).or_default() += c;
+            }
+        }
+    }
+
+    println!(
+        "\nsuite total: {} instructions, {} distinct mnemonics, {} converts, {} dots",
+        mix.total,
+        mix.histogram.len(),
+        mix.converts,
+        mix.dots
+    );
+    let unknown = isa_cross_check(&mix);
+    if unknown.is_empty() {
+        println!("isa cross-check: every mnemonic is in the database tables");
+    } else {
+        println!("isa cross-check: outside the database tables: {}", unknown.join(" "));
+    }
+    println!("{}", takum_avx10::isa::database::audit_executable().describe());
+    anyhow::ensure!(failing == 0, "{failing} suite cell(s) failed static verification");
+    Ok(())
+}
+
 fn cmd_artifacts(args: &Args) -> Result<()> {
     // Listing artifact names touches no lane codec — skip the LUT warm.
     let eng = parse_engine_cfg(args)?.warm(WarmPolicy::Lazy).build()?;
@@ -391,6 +471,23 @@ mod tests {
         let e = parse_engine_cfg(&args(&["--codec", "turbo"])).unwrap_err().to_string();
         assert!(e.contains("unknown codec mode"), "{e:?}");
         assert!(e.contains("lut") && e.contains("arith"), "{e:?}");
+    }
+
+    /// `--verify` selects the static verification policy with the same
+    /// precedence and the same name-enumerating rejection as the other
+    /// engine axes.
+    #[test]
+    fn engine_cfg_parses_verify_policy() {
+        let cfg = parse_engine_cfg(&args(&["--verify", "deny"])).unwrap();
+        assert_eq!(cfg, EngineConfig::from_env().verify(Verify::Deny));
+        let cfg = parse_engine_cfg(&args(&["--verify", "warn"])).unwrap();
+        assert_eq!(cfg, EngineConfig::from_env().verify(Verify::Warn));
+
+        let e = parse_engine_cfg(&args(&["--verify", "paranoid"])).unwrap_err().to_string();
+        assert!(e.contains("unknown verify policy"), "{e:?}");
+        for v in Verify::ALL {
+            assert!(e.contains(v.name()), "{e:?} missing {}", v.name());
+        }
     }
 
     #[test]

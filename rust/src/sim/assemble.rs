@@ -88,7 +88,7 @@ pub fn parse_line(line: &str) -> Result<Option<Instruction>> {
     let (dst, mask, zeroing) = parse_dst(dst_s)?;
     let srcs = parts.map(parse_operand).collect::<Result<Vec<_>>>()?;
     Ok(Some(Instruction {
-        mnemonic: mnemonic.to_uppercase(),
+        mnemonic: crate::sim::intern(&mnemonic.to_uppercase()),
         dst,
         srcs,
         mask,

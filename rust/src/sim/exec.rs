@@ -109,8 +109,9 @@ impl ShadowCache {
 #[derive(Debug, Clone)]
 pub struct Machine {
     pub regs: RegisterFile,
-    /// Executed-instruction histogram.
-    pub counts: BTreeMap<String, u64>,
+    /// Executed-instruction histogram (interned mnemonic keys — counting
+    /// never clones a `String`).
+    pub counts: BTreeMap<&'static str, u64>,
     /// Total executed instructions.
     pub executed: u64,
     /// How lanes translate between bits and f64 (LUT-backed by default).
@@ -119,7 +120,7 @@ pub struct Machine {
     backend: Backend,
     /// Memoized mnemonic → plan cache: each distinct mnemonic is parsed
     /// exactly once per machine.
-    plan_cache: HashMap<String, LanePlan>,
+    plan_cache: HashMap<&'static str, LanePlan>,
     /// Decoded-shadow plane cache (content-keyed; see [`ShadowPlane`]).
     shadow: ShadowCache,
 }
@@ -150,7 +151,7 @@ impl Machine {
     pub(crate) fn for_engine(
         mode: CodecMode,
         backend: Backend,
-        plan_cache: HashMap<String, LanePlan>,
+        plan_cache: HashMap<&'static str, LanePlan>,
     ) -> Machine {
         Machine {
             regs: RegisterFile::default(),
@@ -165,7 +166,7 @@ impl Machine {
 
     /// The resolved mnemonic plans (pure functions of the mnemonic):
     /// merged back into the engine's shared cache by the builders.
-    pub(crate) fn plan_cache(&self) -> &HashMap<String, LanePlan> {
+    pub(crate) fn plan_cache(&self) -> &HashMap<&'static str, LanePlan> {
         &self.plan_cache
     }
 
@@ -252,20 +253,15 @@ impl Machine {
     }
 
     pub fn step(&mut self, ins: &Instruction) -> Result<()> {
-        // Count without cloning the mnemonic on the hot path (the String
-        // is only cloned the first time a mnemonic is seen, like the plan
-        // cache below).
-        if let Some(c) = self.counts.get_mut(ins.mnemonic.as_str()) {
-            *c += 1;
-        } else {
-            self.counts.insert(ins.mnemonic.clone(), 1);
-        }
+        // Interned mnemonics: counting and plan caching copy a pointer,
+        // never a `String`.
+        *self.counts.entry(ins.mnemonic).or_insert(0) += 1;
         self.executed += 1;
-        let plan = match self.plan_cache.get(ins.mnemonic.as_str()) {
+        let plan = match self.plan_cache.get(ins.mnemonic) {
             Some(p) => *p,
             None => {
-                let p = LanePlan::resolve(&ins.mnemonic)?;
-                self.plan_cache.insert(ins.mnemonic.clone(), p);
+                let p = LanePlan::resolve(ins.mnemonic)?;
+                self.plan_cache.insert(ins.mnemonic, p);
                 p
             }
         };

@@ -1,0 +1,46 @@
+//! Mnemonic interning: every distinct mnemonic string is leaked exactly
+//! once and shared as a `&'static str` for the rest of the process.
+//!
+//! The recording hot path used to clone the mnemonic `String` once per
+//! recorded instruction (and once more per histogram entry); with
+//! interning, [`crate::sim::Instruction`] carries a `&'static str`, the
+//! machine's executed-count and plan caches key on pointer-sized copies,
+//! and [`crate::sim::Program::histogram`] borrows instead of cloning.
+//! The vocabulary is bounded (the mnemonics of the two ISAs plus whatever
+//! a test assembles), so the leak is a one-time cost per distinct
+//! spelling, not a per-instruction one.
+
+use std::collections::HashSet;
+use std::sync::{Mutex, OnceLock};
+
+static POOL: OnceLock<Mutex<HashSet<&'static str>>> = OnceLock::new();
+
+/// Intern `s`: returns the canonical `&'static str` for this spelling,
+/// leaking it on first sight. O(1) amortised; callers on hot paths should
+/// intern once and reuse the returned reference (string literals used as
+/// mnemonics are already `'static` and cost one pool lookup).
+pub fn intern(s: &str) -> &'static str {
+    let pool = POOL.get_or_init(|| Mutex::new(HashSet::new()));
+    let mut set = pool.lock().expect("intern pool poisoned");
+    if let Some(&hit) = set.get(s) {
+        return hit;
+    }
+    let leaked: &'static str = Box::leak(s.to_owned().into_boxed_str());
+    set.insert(leaked);
+    leaked
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interning_is_idempotent_and_pointer_stable() {
+        let a = intern("VADDPT16");
+        let b = intern(&String::from("VADDPT16"));
+        assert_eq!(a, b);
+        assert!(std::ptr::eq(a, b), "same spelling must intern to one allocation");
+        let c = intern("VMULPT16");
+        assert_ne!(a, c);
+    }
+}

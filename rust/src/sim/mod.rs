@@ -13,6 +13,7 @@
 //! into an optimised dataflow graph) — all bit-identical.
 
 pub mod register;
+pub mod intern;
 pub mod program;
 pub mod lanes;
 pub mod plane;
@@ -22,6 +23,7 @@ pub mod assemble;
 
 pub use assemble::assemble;
 pub use exec::Machine;
+pub use intern::intern;
 pub use graph::Graph;
 pub use lanes::{CodecMode, LaneCodec, LanePlan, LaneType};
 pub use plane::Backend;

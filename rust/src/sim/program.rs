@@ -1,5 +1,7 @@
 //! Program representation for the simulator.
 
+use super::intern::intern;
+
 /// An instruction operand.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Operand {
@@ -14,8 +16,10 @@ pub enum Operand {
 /// One decoded instruction.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Instruction {
-    /// Upper-case mnemonic, e.g. `VADDPT16`.
-    pub mnemonic: String,
+    /// Upper-case mnemonic, e.g. `VADDPT16` (interned: one allocation
+    /// per distinct spelling process-wide, so recording an instruction
+    /// never clones a `String`).
+    pub mnemonic: &'static str,
     /// Destination (vector or mask register, depending on the op).
     pub dst: Operand,
     /// Sources in order.
@@ -28,7 +32,7 @@ pub struct Instruction {
 
 impl Instruction {
     pub fn new(mnemonic: &str, dst: Operand, srcs: Vec<Operand>) -> Instruction {
-        Instruction { mnemonic: mnemonic.to_string(), dst, srcs, mask: None, zeroing: false }
+        Instruction { mnemonic: intern(mnemonic), dst, srcs, mask: None, zeroing: false }
     }
 
     pub fn with_mask(mut self, k: u8, zeroing: bool) -> Instruction {
@@ -58,11 +62,12 @@ impl Program {
     }
 
     /// Histogram of mnemonics (the "instruction mix" metric used when
-    /// comparing the proposed ISA against the AVX10.2 baseline).
-    pub fn histogram(&self) -> std::collections::BTreeMap<String, usize> {
+    /// comparing the proposed ISA against the AVX10.2 baseline). Borrows
+    /// the interned mnemonics — no `String` clone per entry.
+    pub fn histogram(&self) -> std::collections::BTreeMap<&'static str, usize> {
         let mut h = std::collections::BTreeMap::new();
         for i in &self.instrs {
-            *h.entry(i.mnemonic.clone()).or_default() += 1;
+            *h.entry(i.mnemonic).or_default() += 1;
         }
         h
     }

@@ -1,0 +1,722 @@
+//! The abstract interpreter: one linear pass over a [`Program`],
+//! resolving each mnemonic through [`LanePlan::resolve`] and walking the
+//! [`VState`]/[`KState`] lattice with the exact operand conventions of
+//! the executor (`sim::exec`) — FMAs and dot products read their
+//! destination, merging masked writes read the old destination at the
+//! write type, zeroing and unmasked writes kill it, compares and `VCLASS`
+//! define mask registers, integer-domain ops read and write raw bits.
+
+use super::diag::{DiagKind, Diagnostic, Report};
+use super::typestate::{compatible, KState, VState};
+use crate::sim::lanes::{FpOp, LanePlan};
+use crate::sim::{Instruction, LaneType, Operand, Program};
+use std::collections::HashMap;
+
+const NUM_VREGS: usize = 32;
+const NUM_KREGS: usize = 8;
+
+/// One journalled piece of machine state installed from outside the
+/// instruction stream.
+#[derive(Debug, Clone, Copy)]
+enum Event {
+    /// `Machine::load_f64(reg, ty, …)`; `ty: None` declares the register
+    /// type-polymorphic (readable as anything — the all-zero constant).
+    LoadV { reg: u8, ty: Option<LaneType> },
+    /// `Machine::set_mask(k, …)`.
+    SetMask { k: u8 },
+    /// A harness-side data read (`Machine::read_f64`): consumes the
+    /// register's current value through the data-I/O path, keeping the
+    /// defining write live.
+    ReadV { reg: u8 },
+}
+
+/// The external-state journal: harness-side data I/O interleaved with
+/// the instruction stream. Each event carries the instruction index it
+/// precedes (`at == 0` is initial state; `at == program.len()` follows
+/// the last instruction), because kernels reload scratch registers
+/// *between* instructions — a reduction tree loads shuffled halves
+/// mid-program, so position matters for both typestate and dead-write
+/// analysis.
+#[derive(Debug, Clone, Default)]
+pub struct Externals {
+    events: Vec<(usize, Event)>,
+}
+
+impl Externals {
+    pub fn new() -> Externals {
+        Externals::default()
+    }
+
+    /// Journal a typed external vector load applied before instruction
+    /// index `at`.
+    pub fn load(&mut self, at: usize, reg: u8, ty: LaneType) {
+        self.events.push((at, Event::LoadV { reg, ty: Some(ty) }));
+    }
+
+    /// Journal a type-polymorphic external vector definition (readable
+    /// under any lane type without reinterpretation hazard).
+    pub fn load_untyped(&mut self, at: usize, reg: u8) {
+        self.events.push((at, Event::LoadV { reg, ty: None }));
+    }
+
+    /// Journal an external mask-register write applied before
+    /// instruction index `at`.
+    pub fn set_mask(&mut self, at: usize, k: u8) {
+        self.events.push((at, Event::SetMask { k }));
+    }
+
+    /// Journal a harness-side data read of a vector register before
+    /// instruction index `at` — the consumption that keeps a kernel's
+    /// per-tile result live even though no *instruction* ever reads it
+    /// (store → `read_*` → next tile overwrites).
+    pub fn read(&mut self, at: usize, reg: u8) {
+        self.events.push((at, Event::ReadV { reg }));
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+}
+
+/// The verifier: configuration (external journal, input policy) + the
+/// [`Verifier::verify`] entry point. See the module docs of
+/// [`crate::verify`] for the diagnostic catalogue and lattice.
+#[derive(Debug, Clone, Default)]
+pub struct Verifier {
+    externals: Externals,
+    implicit_inputs: bool,
+}
+
+impl Verifier {
+    /// Strict verifier: no external state, every read must be preceded
+    /// by an instruction write.
+    pub fn new() -> Verifier {
+        Verifier::default()
+    }
+
+    /// Verifier with a journal of harness-side loads/mask writes.
+    pub fn with_externals(externals: Externals) -> Verifier {
+        Verifier { externals, implicit_inputs: false }
+    }
+
+    /// Treat reads of never-defined registers as implicit zero inputs
+    /// instead of use-before-def errors — the lifter's semantics, used
+    /// for raw programs run against a freshly zeroed machine (the fuzz
+    /// corpus, `simulate` on an assembly file). Type-mismatch, unset
+    /// mask and irregular-mnemonic checks stay fully active.
+    pub fn implicit_inputs(mut self, yes: bool) -> Verifier {
+        self.implicit_inputs = yes;
+        self
+    }
+
+    /// Run the dataflow pass and produce the report.
+    pub fn verify(&self, prog: &Program) -> Report {
+        let mut events = self.externals.events.clone();
+        events.sort_by_key(|(at, _)| *at);
+        let mut st = State {
+            v: [VState::Undef; NUM_VREGS],
+            k: [KState::Undef; NUM_KREGS],
+            implicit: self.implicit_inputs,
+            diags: Vec::new(),
+        };
+        // k0 is architecturally "no mask" (all lanes active): always set.
+        st.k[0] = KState::Def;
+
+        let mut report = Report::default();
+        let mut plans: HashMap<&'static str, Option<LanePlan>> = HashMap::new();
+        let mut cursor = 0usize;
+        for (at, ins) in prog.instrs.iter().enumerate() {
+            while cursor < events.len() && events[cursor].0 <= at {
+                st.apply_event(events[cursor].1);
+                cursor += 1;
+            }
+            report.mix.total += 1;
+            *report.mix.histogram.entry(ins.mnemonic).or_default() += 1;
+            let plan = *plans
+                .entry(ins.mnemonic)
+                .or_insert_with(|| LanePlan::resolve(ins.mnemonic).ok());
+            match plan {
+                None => {
+                    // Re-resolve for the error detail; resolution is pure.
+                    let why = LanePlan::resolve(ins.mnemonic)
+                        .err()
+                        .map(|e| e.to_string())
+                        .unwrap_or_else(|| "unresolvable".into());
+                    st.diag(
+                        DiagKind::IrregularMnemonic,
+                        at,
+                        format!("{}: {}", ins.mnemonic, why),
+                    );
+                }
+                Some(plan) => {
+                    match plan {
+                        LanePlan::Convert { .. } | LanePlan::ConvertNe2PsBf16 => {
+                            report.mix.converts += 1
+                        }
+                        LanePlan::Dot { .. } => report.mix.dots += 1,
+                        _ => {}
+                    }
+                    st.step(at, ins, plan);
+                }
+            }
+        }
+        report.diagnostics = st.diags;
+        report
+    }
+}
+
+/// Convenience: strict verification of a self-contained program.
+pub fn verify_program(prog: &Program) -> Report {
+    Verifier::new().verify(prog)
+}
+
+// ---------------------------------------------------------------------------
+// The interpreter state
+// ---------------------------------------------------------------------------
+
+struct State {
+    v: [VState; NUM_VREGS],
+    k: [KState; NUM_KREGS],
+    implicit: bool,
+    diags: Vec<Diagnostic>,
+}
+
+fn vreg(op: &Operand) -> Option<u8> {
+    match op {
+        Operand::Vreg(r) => Some(*r),
+        _ => None,
+    }
+}
+
+fn kreg(op: &Operand) -> Option<u8> {
+    match op {
+        Operand::Kreg(r) => Some(*r),
+        _ => None,
+    }
+}
+
+impl State {
+    fn diag(&mut self, kind: DiagKind, at: usize, message: String) {
+        self.diags.push(Diagnostic { kind, at, message });
+    }
+
+    fn apply_event(&mut self, ev: Event) {
+        match ev {
+            // An external load replaces whatever was there. It does NOT
+            // flag an unread previous write as dead: the harness may
+            // have read the register through the data-I/O path before
+            // reloading it (store-narrow → read-back → next tile).
+            Event::LoadV { reg, ty } => self.v[reg as usize] = VState::Ext(ty),
+            Event::SetMask { k } => self.k[k as usize] = KState::Def,
+            // A data read consumes the value: the defining write is live.
+            Event::ReadV { reg } => {
+                if let VState::Def { read, .. } = &mut self.v[reg as usize] {
+                    *read = true;
+                }
+            }
+        }
+    }
+
+    /// Read vector register `r` under lane type `ty` (`None` = raw-bit
+    /// read, any type acceptable) at instruction `at`.
+    fn read_v(&mut self, r: u8, ty: Option<LaneType>, at: usize) {
+        let i = r as usize;
+        match self.v[i] {
+            VState::Undef => {
+                if !self.implicit {
+                    self.diag(
+                        DiagKind::UseBeforeDef,
+                        at,
+                        format!("v{r} read before any write or external load"),
+                    );
+                }
+            }
+            VState::Ext(held) => {
+                if let (Some(h), Some(want)) = (held, ty) {
+                    if !compatible(h, want) {
+                        self.diag(
+                            DiagKind::TypeMismatch,
+                            at,
+                            format!(
+                                "v{r} holds {h:?} (external load) but is read as {want:?} \
+                                 without a convert (bit reinterpretation)"
+                            ),
+                        );
+                    }
+                }
+            }
+            VState::Def { ty: held, at: def_at, .. } => {
+                if let (Some(h), Some(want)) = (held, ty) {
+                    if !compatible(h, want) {
+                        self.diag(
+                            DiagKind::TypeMismatch,
+                            at,
+                            format!(
+                                "v{r} written as {h:?} at #{def_at} but read as {want:?} \
+                                 without a convert (bit reinterpretation)"
+                            ),
+                        );
+                    }
+                }
+                if let VState::Def { read, .. } = &mut self.v[i] {
+                    *read = true;
+                }
+            }
+        }
+    }
+
+    /// Read mask register `r` as a data source (mask ops, mask→vector).
+    fn read_k(&mut self, r: u8, at: usize) {
+        if self.k[r as usize] == KState::Undef && !self.implicit {
+            self.diag(
+                DiagKind::UseBeforeDef,
+                at,
+                format!("k{r} read before any mask write"),
+            );
+        }
+    }
+
+    /// A `{k}` write/read mask on instruction `at`: `k0` means no mask;
+    /// any other unset register is an error regardless of input policy
+    /// (an all-zero mask silently drops every lane).
+    fn use_mask(&mut self, ins: &Instruction, at: usize) {
+        if let Some(k) = ins.mask {
+            if k != 0 && self.k[k as usize] == KState::Undef {
+                self.diag(
+                    DiagKind::UnsetMask,
+                    at,
+                    format!(
+                        "{} masked with k{k}, which is never set",
+                        ins.mnemonic
+                    ),
+                );
+            }
+        }
+    }
+
+    /// Define vector register `r` at `at`. `kills` = the write fully
+    /// determines the register (unmasked packed, or zeroing-masked), so
+    /// an unread previous instruction write becomes a dead write.
+    fn write_v(&mut self, r: u8, ty: Option<LaneType>, at: usize, kills: bool) {
+        let i = r as usize;
+        if kills {
+            if let VState::Def { at: prev, read: false, .. } = self.v[i] {
+                self.diag(
+                    DiagKind::DeadWrite,
+                    at,
+                    format!("v{r} written at #{prev} is overwritten at #{at} before any read"),
+                );
+            }
+        }
+        self.v[i] = VState::Def { ty, at, read: false };
+    }
+
+    fn write_k(&mut self, r: u8) {
+        self.k[r as usize] = KState::Def;
+    }
+
+    /// Malformed operand shape for the resolved plan.
+    fn irregular(&mut self, at: usize, ins: &Instruction, what: &str) {
+        self.diag(
+            DiagKind::IrregularMnemonic,
+            at,
+            format!("{}: {what}", ins.mnemonic),
+        );
+    }
+
+    /// Read every vector-register source under `ty` and every
+    /// mask-register source as data (immediates pass through untouched).
+    fn read_srcs(&mut self, ins: &Instruction, ty: Option<LaneType>, at: usize) {
+        for s in &ins.srcs {
+            match s {
+                Operand::Vreg(r) => self.read_v(*r, ty, at),
+                Operand::Kreg(r) => self.read_k(*r, at),
+                Operand::Imm(_) => {}
+            }
+        }
+    }
+
+    /// The common vector-destination epilogue: mask check, optional
+    /// merge-read of the old destination at the write type, then the
+    /// define (kill analysis per mask/zeroing/partial semantics).
+    fn write_vdst(
+        &mut self,
+        ins: &Instruction,
+        at: usize,
+        ty: Option<LaneType>,
+        partial: bool,
+        reads_dst: bool,
+    ) {
+        let Some(dst) = vreg(&ins.dst) else {
+            return self.irregular(at, ins, "destination must be a vector register");
+        };
+        self.use_mask(ins, at);
+        let masked = matches!(ins.mask, Some(k) if k != 0);
+        let merging = (masked && !ins.zeroing) || partial;
+        if merging || reads_dst {
+            // Merging keeps inactive lanes: the old value is consumed at
+            // the write type (so is an FMA/dot accumulator input).
+            self.read_v(dst, ty, at);
+        }
+        let kills = !merging && !reads_dst;
+        self.write_v(dst, ty, at, kills);
+    }
+
+    fn write_kdst(&mut self, ins: &Instruction, at: usize) {
+        match kreg(&ins.dst) {
+            Some(dst) => {
+                self.use_mask(ins, at);
+                self.write_k(dst);
+            }
+            None => self.irregular(at, ins, "destination must be a mask register"),
+        }
+    }
+
+    /// One instruction through the lattice, mirroring the executor's
+    /// per-plan operand conventions.
+    fn step(&mut self, at: usize, ins: &Instruction, plan: LanePlan) {
+        match plan {
+            LanePlan::Fp { op, ty, packed } => {
+                self.read_srcs(ins, Some(ty), at);
+                if matches!(op, FpOp::Class) {
+                    // VCLASS writes a mask register.
+                    self.write_kdst(ins, at);
+                } else {
+                    let fma = matches!(op, FpOp::Fma(..));
+                    self.write_vdst(ins, at, Some(ty), !packed, fma);
+                }
+            }
+            LanePlan::Convert { src, dst } => {
+                self.read_srcs(ins, Some(src), at);
+                self.write_vdst(ins, at, Some(dst), false, false);
+            }
+            LanePlan::ConvertNe2PsBf16 => {
+                self.read_srcs(ins, Some(LaneType::Mini(crate::num::F32)), at);
+                self.write_vdst(ins, at, Some(LaneType::Mini(crate::num::BF16)), false, false);
+            }
+            LanePlan::Dot { src, dst } => {
+                self.read_srcs(ins, Some(src), at);
+                // The accumulator is always read, even unmasked.
+                self.write_vdst(ins, at, Some(dst), false, true);
+            }
+            LanePlan::Compare { ty, .. } => {
+                self.read_srcs(ins, Some(ty), at);
+                self.write_kdst(ins, at);
+            }
+            LanePlan::Bitwise(_) | LanePlan::Shift(..) | LanePlan::Int(_) => {
+                // Integer domain: raw-bit reads, untyped definition.
+                self.read_srcs(ins, None, at);
+                self.write_vdst(ins, at, None, false, false);
+            }
+            LanePlan::Broadcast(w) => {
+                let src_ty = match ins.srcs.first().and_then(vreg) {
+                    Some(r) => {
+                        self.read_v(r, None, at);
+                        self.v[r as usize].ty()
+                    }
+                    None => {
+                        self.irregular(at, ins, "broadcast needs a vector source");
+                        None
+                    }
+                };
+                // A lane broadcast at width `w` propagates the source
+                // type when the widths agree; a width clash is the same
+                // reinterpretation hazard as a mistyped read. Block
+                // broadcasts (128/256) shuffle raw sub-registers.
+                let ty = match src_ty {
+                    Some(t) if w <= 64 && t.width() == w => Some(t),
+                    Some(t) if w <= 64 => {
+                        self.diag(
+                            DiagKind::TypeMismatch,
+                            at,
+                            format!(
+                                "{} broadcasts {w}-bit lanes from a register holding \
+                                 {t:?} ({}-bit lanes)",
+                                ins.mnemonic,
+                                t.width()
+                            ),
+                        );
+                        None
+                    }
+                    _ => None,
+                };
+                self.write_vdst(ins, at, ty, false, false);
+            }
+            LanePlan::VecToMask(_) => {
+                self.read_srcs(ins, None, at);
+                self.write_kdst(ins, at);
+            }
+            LanePlan::MaskToVec(_) => {
+                self.read_srcs(ins, None, at);
+                self.write_vdst(ins, at, None, false, false);
+            }
+            LanePlan::Mask(_) => {
+                // Mask ops read mask registers (KUNPCK/binaries two, NOT/
+                // MOV/shifts one) and define the mask destination.
+                for s in &ins.srcs {
+                    match s {
+                        Operand::Kreg(r) => self.read_k(*r, at),
+                        Operand::Imm(_) => {}
+                        Operand::Vreg(_) => {
+                            self.irregular(at, ins, "mask op sources must be mask registers");
+                        }
+                    }
+                }
+                match kreg(&ins.dst) {
+                    Some(dst) => self.write_k(dst),
+                    None => self.irregular(at, ins, "destination must be a mask register"),
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::E4M3;
+    use crate::sim::{Instruction, LaneType, Operand, Program};
+
+    const T16: LaneType = LaneType::Takum(16);
+    const T8: LaneType = LaneType::Takum(8);
+
+    fn v(r: u8) -> Operand {
+        Operand::Vreg(r)
+    }
+
+    fn fp(m: &str, dst: u8, a: u8, b: u8) -> Instruction {
+        Instruction::new(m, v(dst), vec![v(a), v(b)])
+    }
+
+    /// v0/v1 preloaded as takum16, then v2 = v0 + v1 read back wrongly as
+    /// takum8 — the bit-reinterpretation hazard, anchored to the
+    /// offending read's index.
+    #[test]
+    fn detects_type_mismatch_read() {
+        let mut ext = Externals::new();
+        ext.load(0, 0, T16);
+        ext.load(0, 1, T16);
+        let mut p = Program::default();
+        p.push(fp("VADDPT16", 2, 0, 1)); // #0: v2 := t16
+        p.push(fp("VMULPT8", 3, 2, 2)); // #1: reads v2 as t8 — hazard
+        let rep = Verifier::with_externals(ext).verify(&p);
+        assert_eq!(rep.count(DiagKind::TypeMismatch), 2, "{}", rep.render_diagnostics());
+        assert!(!rep.passes_deny());
+        let d = &rep.diagnostics[0];
+        assert_eq!(d.at, 1, "anchored to the reading instruction");
+        assert!(d.message.contains("#0"), "names the writing instruction: {}", d.message);
+        // A convert in between makes the same read clean.
+        let mut ext = Externals::new();
+        ext.load(0, 0, T16);
+        ext.load(0, 1, T16);
+        let mut p = Program::default();
+        p.push(fp("VADDPT16", 2, 0, 1));
+        p.push(Instruction::new("VCVTPT162PT8", v(4), vec![v(2)]));
+        p.push(fp("VMULPT8", 3, 4, 4));
+        let rep = Verifier::with_externals(ext).verify(&p);
+        assert!(rep.passes_deny(), "{}", rep.render_diagnostics());
+        assert_eq!(rep.mix.converts, 1);
+    }
+
+    /// Saturating-encode stores read back as the plain spec are NOT a
+    /// mismatch (the VCVTPH2HF8S / VCVTHF82PH round trip).
+    #[test]
+    fn saturating_and_plain_minifloat_are_compatible() {
+        let mut ext = Externals::new();
+        ext.load(0, 0, LaneType::MiniSat(E4M3));
+        let mut p = Program::default();
+        p.push(Instruction::new("VCVTHF82PH", v(1), vec![v(0)])); // reads Mini(E4M3)
+        let rep = Verifier::with_externals(ext).verify(&p);
+        assert_eq!(rep.count(DiagKind::TypeMismatch), 0, "{}", rep.render_diagnostics());
+    }
+
+    #[test]
+    fn detects_use_before_def() {
+        let mut p = Program::default();
+        p.push(fp("VADDPT16", 2, 0, 1)); // v0, v1 never defined
+        let rep = Verifier::new().verify(&p);
+        assert_eq!(rep.count(DiagKind::UseBeforeDef), 2, "{}", rep.render_diagnostics());
+        assert!(!rep.passes_deny());
+        // Implicit-inputs mode (lifter semantics: undefined registers are
+        // architectural zeros) accepts the same program.
+        let rep = Verifier::new().implicit_inputs(true).verify(&p);
+        assert!(rep.is_clean(), "{}", rep.render_diagnostics());
+        // An external journal entry also satisfies the definition.
+        let mut ext = Externals::new();
+        ext.load(0, 0, T16);
+        ext.load(0, 1, T16);
+        let rep = Verifier::with_externals(ext).verify(&p);
+        assert!(rep.is_clean(), "{}", rep.render_diagnostics());
+    }
+
+    #[test]
+    fn detects_dead_write() {
+        let mut ext = Externals::new();
+        ext.load(0, 0, T16);
+        ext.load(0, 1, T16);
+        let mut p = Program::default();
+        p.push(fp("VADDPT16", 2, 0, 1)); // #0: never read …
+        p.push(fp("VMULPT16", 2, 0, 1)); // #1: … clobbered here
+        p.push(fp("VSUBPT16", 3, 2, 0)); // #2: keeps #1 live
+        let rep = Verifier::with_externals(ext).verify(&p);
+        assert_eq!(rep.count(DiagKind::DeadWrite), 1, "{}", rep.render_diagnostics());
+        // Dead writes are warnings: wasteful, not value-corrupting.
+        assert!(rep.passes_deny());
+        assert_eq!(rep.error_count(), 0);
+        assert_eq!(rep.warning_count(), 1);
+        let d = &rep.diagnostics[0];
+        assert!(d.message.contains("#0") && d.message.contains("#1"), "{}", d.message);
+        // A merging masked overwrite reads the old value: not dead.
+        let mut ext = Externals::new();
+        ext.load(0, 0, T16);
+        ext.load(0, 1, T16);
+        ext.set_mask(0, 1);
+        let mut p = Program::default();
+        p.push(fp("VADDPT16", 2, 0, 1));
+        p.push(fp("VMULPT16", 2, 0, 1).with_mask(1, false));
+        p.push(fp("VSUBPT16", 3, 2, 0));
+        let rep = Verifier::with_externals(ext).verify(&p);
+        assert_eq!(rep.count(DiagKind::DeadWrite), 0, "{}", rep.render_diagnostics());
+    }
+
+    /// A journalled harness read keeps the write live: write → data-I/O
+    /// read → overwrite is the per-tile store/read-back pattern of every
+    /// kernel, not a dead write.
+    #[test]
+    fn journalled_harness_read_keeps_write_live() {
+        let mut ext = Externals::new();
+        ext.load(0, 0, T16);
+        ext.load(0, 1, T16);
+        let mut p = Program::default();
+        p.push(fp("VADDPT16", 2, 0, 1)); // #0: tile result …
+        p.push(fp("VMULPT16", 2, 0, 1)); // #1: … next tile clobbers
+        // Without the read journal the overwrite at #1 is a dead write.
+        let rep = Verifier::with_externals(ext.clone()).verify(&p);
+        assert_eq!(rep.count(DiagKind::DeadWrite), 1, "{}", rep.render_diagnostics());
+        // With the harness read of v2 journalled between #0 and #1 it is
+        // a consumed value.
+        ext.read(1, 2);
+        let rep = Verifier::with_externals(ext).verify(&p);
+        assert!(rep.is_clean(), "{}", rep.render_diagnostics());
+    }
+
+    /// End-of-program writes are harness outputs, never flagged dead.
+    #[test]
+    fn final_writes_are_not_dead() {
+        let mut ext = Externals::new();
+        ext.load(0, 0, T16);
+        ext.load(0, 1, T16);
+        let mut p = Program::default();
+        p.push(fp("VADDPT16", 2, 0, 1));
+        let rep = Verifier::with_externals(ext).verify(&p);
+        assert!(rep.is_clean(), "{}", rep.render_diagnostics());
+    }
+
+    #[test]
+    fn detects_unset_mask() {
+        let mut ext = Externals::new();
+        ext.load(0, 0, T16);
+        ext.load(0, 1, T16);
+        let mut p = Program::default();
+        p.push(fp("VADDPT16", 2, 0, 1).with_mask(5, true)); // k5 never set
+        let rep = Verifier::with_externals(ext).verify(&p);
+        assert_eq!(rep.count(DiagKind::UnsetMask), 1, "{}", rep.render_diagnostics());
+        assert!(!rep.passes_deny());
+        assert!(rep.diagnostics[0].message.contains("k5"));
+        // Unset masks are errors even under implicit-inputs (an all-zero
+        // mask silently drops every lane).
+        let rep = Verifier::new().implicit_inputs(true).verify(&p);
+        assert_eq!(rep.count(DiagKind::UnsetMask), 1);
+        // k0 is "no mask": always fine.
+        let mut p = Program::default();
+        p.push(fp("VADDPT16", 2, 0, 1).with_mask(0, false));
+        let rep = Verifier::new().implicit_inputs(true).verify(&p);
+        assert!(rep.is_clean(), "{}", rep.render_diagnostics());
+        // A compare defines the mask; using it afterwards is clean.
+        let mut ext = Externals::new();
+        ext.load(0, 0, T16);
+        ext.load(0, 1, T16);
+        let mut p = Program::default();
+        p.push(Instruction::new(
+            "VCMPPT16",
+            Operand::Kreg(5),
+            vec![v(0), v(1), Operand::Imm(1)],
+        ));
+        p.push(fp("VADDPT16", 2, 0, 1).with_mask(5, true));
+        let rep = Verifier::with_externals(ext).verify(&p);
+        assert!(rep.is_clean(), "{}", rep.render_diagnostics());
+    }
+
+    #[test]
+    fn detects_irregular_mnemonic() {
+        let mut p = Program::default();
+        p.push(Instruction::new("VFROBNICATE", v(0), vec![v(1)]));
+        let rep = Verifier::new().implicit_inputs(true).verify(&p);
+        assert_eq!(rep.count(DiagKind::IrregularMnemonic), 1, "{}", rep.render_diagnostics());
+        assert!(!rep.passes_deny());
+        assert_eq!(rep.diagnostics[0].at, 0);
+        assert!(rep.diagnostics[0].message.contains("VFROBNICATE"));
+        // Operand shape that cannot fit the plan is the same class:
+        // a mask op with a vector destination.
+        let mut p = Program::default();
+        p.push(Instruction::new("KANDQ", v(0), vec![Operand::Kreg(1), Operand::Kreg(2)]));
+        let rep = Verifier::new().implicit_inputs(true).verify(&p);
+        assert!(rep.count(DiagKind::IrregularMnemonic) >= 1, "{}", rep.render_diagnostics());
+    }
+
+    /// Position-aware externals: a mid-program reload changes the type a
+    /// register may be read at from that index on.
+    #[test]
+    fn externals_apply_at_their_instruction_index() {
+        let mut ext = Externals::new();
+        ext.load(0, 0, T16);
+        ext.load(0, 1, T16);
+        ext.load(1, 0, T8); // reloaded as t8 before #1
+        let mut p = Program::default();
+        p.push(fp("VADDPT16", 2, 0, 1)); // #0: v0 still t16 — clean
+        p.push(fp("VADDPT8", 3, 0, 0)); // #1: v0 now t8 — clean
+        p.push(fp("VADDPT16", 4, 0, 0)); // #2: v0 is t8 — hazard ×2 reads
+        let rep = Verifier::with_externals(ext).verify(&p);
+        assert_eq!(rep.count(DiagKind::TypeMismatch), 2, "{}", rep.render_diagnostics());
+        assert!(rep.diagnostics.iter().all(|d| d.at == 2));
+    }
+
+    /// The accumulator of a dot product is a read: a preceding write to
+    /// it is live, and its type is checked at the destination type.
+    #[test]
+    fn dot_reads_its_accumulator() {
+        let mut ext = Externals::new();
+        ext.load(0, 0, T8);
+        ext.load(0, 1, T8);
+        ext.load(0, 2, T16);
+        let mut p = Program::default();
+        p.push(Instruction::new("VDPPT8PT16", v(2), vec![v(0), v(1)]));
+        let rep = Verifier::with_externals(ext).verify(&p);
+        assert!(rep.is_clean(), "{}", rep.render_diagnostics());
+        assert_eq!(rep.mix.dots, 1);
+        // Accumulator held at the wrong type → mismatch.
+        let mut ext = Externals::new();
+        ext.load(0, 0, T8);
+        ext.load(0, 1, T8);
+        ext.load(0, 2, T8);
+        let rep = Verifier::with_externals(ext).verify(&p);
+        assert_eq!(rep.count(DiagKind::TypeMismatch), 1, "{}", rep.render_diagnostics());
+    }
+
+    /// The static mix equals the program's own histogram by construction.
+    #[test]
+    fn static_mix_matches_program_histogram() {
+        let mut p = Program::default();
+        p.push(fp("VADDPT16", 2, 0, 1));
+        p.push(fp("VADDPT16", 3, 2, 1));
+        p.push(Instruction::new("VCVTPT162PT8", v(4), vec![v(3)]));
+        let rep = Verifier::new().implicit_inputs(true).verify(&p);
+        assert_eq!(rep.mix.total, 3);
+        assert_eq!(rep.mix.converts, 1);
+        assert_eq!(rep.mix.histogram, p.histogram());
+    }
+}

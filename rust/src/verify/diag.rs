@@ -1,0 +1,152 @@
+//! The typed diagnostic catalogue and the per-program report.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// How a diagnostic interacts with the `Verify::Deny` policy: errors
+/// block execution, warnings are advisory (a dead write is wasteful but
+/// cannot corrupt results, so randomly generated corpora may carry them).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+/// Every defect class the static verifier can report.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DiagKind {
+    /// A register's lanes are read under a lane type incompatible with
+    /// the type they were written as, with no convert in between — the
+    /// bit-reinterpretation hazard `Graph::lift` rejects dynamically,
+    /// hoisted to a static check.
+    TypeMismatch,
+    /// A vector or mask register is read before any instruction write or
+    /// journalled external load defines it.
+    UseBeforeDef,
+    /// An instruction write is overwritten by a later full (unmasked or
+    /// zeroing) write with no intervening read — wasted work. Warning
+    /// severity: never blocks `Verify::Deny`.
+    DeadWrite,
+    /// A masked or zeroing write names a mask register that is never set
+    /// (neither written by a mask-producing instruction nor journalled
+    /// as external state). `k0` is architecturally "no mask" and exempt.
+    UnsetMask,
+    /// The mnemonic does not decompose into op + lane suffix under
+    /// [`crate::sim::LanePlan::resolve`], or its operands do not fit the
+    /// resolved plan's shape.
+    IrregularMnemonic,
+}
+
+impl DiagKind {
+    pub const ALL: [DiagKind; 5] = [
+        DiagKind::TypeMismatch,
+        DiagKind::UseBeforeDef,
+        DiagKind::DeadWrite,
+        DiagKind::UnsetMask,
+        DiagKind::IrregularMnemonic,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DiagKind::TypeMismatch => "type-mismatch",
+            DiagKind::UseBeforeDef => "use-before-def",
+            DiagKind::DeadWrite => "dead-write",
+            DiagKind::UnsetMask => "unset-mask",
+            DiagKind::IrregularMnemonic => "irregular-mnemonic",
+        }
+    }
+
+    pub fn severity(self) -> Severity {
+        match self {
+            DiagKind::DeadWrite => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+}
+
+/// One finding, anchored to the instruction index it fires at.
+#[derive(Debug, Clone)]
+pub struct Diagnostic {
+    pub kind: DiagKind,
+    /// Index into `Program::instrs` of the instruction the diagnostic
+    /// anchors to.
+    pub at: usize,
+    /// Human-readable detail (registers, both lane types, the second
+    /// instruction index where relevant).
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "#{}: {}: {}", self.at, self.kind.name(), self.message)
+    }
+}
+
+/// The static instruction-mix model: what the program *will* execute,
+/// computed without running it. On any program the simulator accepts,
+/// `histogram` equals `Program::histogram()` and matches the machine's
+/// executed counts one-for-one (pinned by the differential fuzz suite).
+#[derive(Debug, Clone, Default)]
+pub struct StaticMix {
+    /// Total instructions.
+    pub total: usize,
+    /// Instructions whose plan is a format conversion — the static
+    /// convert-tax model (the paper's OFP8 promote/demote accounting).
+    pub converts: usize,
+    /// Widening dot products.
+    pub dots: usize,
+    /// Per-mnemonic counts (interned keys, borrowed not cloned).
+    pub histogram: BTreeMap<&'static str, usize>,
+}
+
+/// Outcome of verifying one program: the diagnostics plus the static mix.
+#[derive(Debug, Clone, Default)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+    pub mix: StaticMix,
+}
+
+impl Report {
+    /// No diagnostics at all — not even warnings.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn count(&self, kind: DiagKind) -> usize {
+        self.diagnostics.iter().filter(|d| d.kind == kind).count()
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.kind.severity() == Severity::Error).count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diagnostics.len() - self.error_count()
+    }
+
+    /// Whether `Verify::Deny` lets the program run: no error-severity
+    /// diagnostics (warnings pass).
+    pub fn passes_deny(&self) -> bool {
+        self.error_count() == 0
+    }
+
+    /// Multi-line listing of every diagnostic (empty string when clean).
+    pub fn render_diagnostics(&self) -> String {
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!("  {d}\n"));
+        }
+        out
+    }
+
+    /// One-line metrics summary of the static mix.
+    pub fn render_mix(&self) -> String {
+        format!(
+            "{} instructions, {} distinct mnemonics, {} converts, {} dots",
+            self.mix.total,
+            self.mix.histogram.len(),
+            self.mix.converts,
+            self.mix.dots
+        )
+    }
+}

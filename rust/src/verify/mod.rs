@@ -1,0 +1,223 @@
+//! # Static ISA verifier: dataflow lint over recorded programs
+//!
+//! Every workload in this crate lowers to a straight-line
+//! [`crate::sim::Program`] before it executes. That makes the full
+//! dataflow of a kernel statically decidable — there are no branches, no
+//! memory, just 32 vector registers, 8 mask registers and a journal of
+//! harness-side loads — so the hazards the simulator (or the graph
+//! lifter) can only trip over *dynamically* can be reported *before*
+//! execution, with instruction indices attached. This module is that
+//! check: an abstract interpreter ([`Verifier`]) over the typestate
+//! lattice of [`typestate`], wired into the [`crate::engine::Engine`]
+//! as a verify-before-run gate.
+//!
+//! ## The typestate lattice
+//!
+//! Each vector register `v0`–`v31` is `Undef`, `Ext` (externally loaded
+//! by the harness, per the position-aware [`Externals`] journal) or
+//! `Def` (instruction-written at a known index), and carries the lane
+//! type of its definition when one is known — takum writes pin
+//! `Takum(w)`, IEEE/OFP8 writes pin `Mini`/`MiniSat` specs, while
+//! integer-domain ops (bitwise, shifts, integer lanes, mask→vector
+//! moves) install *untyped* raw-bit definitions compatible with any
+//! later read. Mask registers `k0`–`k7` track set/unset, with `k0`
+//! architecturally "no mask". Readback compatibility is exact type
+//! equality plus the saturating-encode split
+//! ([`typestate::compatible`]): `VCVTPH2HF8S` writes `MiniSat(E4M3)`
+//! lanes that `VCVTHF82PH` legitimately reads back as `Mini(E4M3)`.
+//!
+//! ## The diagnostic catalogue
+//!
+//! | kind ([`DiagKind`])   | severity | meaning                                            |
+//! |-----------------------|----------|----------------------------------------------------|
+//! | `type-mismatch`       | error    | lanes written as one type, read as another with no convert — the bit-reinterpretation hazard `Graph::lift` rejects dynamically, hoisted static |
+//! | `use-before-def`      | error    | register read with no prior write or journalled external load |
+//! | `unset-mask`          | error    | `{k}`-masked op whose mask register is never set (silently drops every lane) |
+//! | `irregular-mnemonic`  | error    | mnemonic unresolvable by [`crate::sim::LanePlan::resolve`], or operands that don't fit the resolved plan |
+//! | `dead-write`          | warning  | write overwritten before any read — wasteful, never value-corrupting |
+//!
+//! Alongside the diagnostics, every verification computes a
+//! [`StaticMix`]: the per-mnemonic histogram, total, convert and
+//! widening-dot counts the program *will* execute — a static model of
+//! the paper's instruction-mix metrics, pinned against the dynamic
+//! counts by the differential fuzz suite.
+//!
+//! ## Policy: Off / Warn / Deny
+//!
+//! The engine carries a [`Verify`] policy
+//! ([`crate::engine::EngineConfig::verify`], env `TAKUM_VERIFY`, CLI
+//! `--verify`): `Off` skips the pass, `Warn` prints diagnostics to
+//! stderr and runs anyway, `Deny` refuses to execute any program with
+//! **error**-severity diagnostics (warnings — dead writes — never
+//! block; randomly generated corpora legitimately contain them). The
+//! gate sits in the engine's job paths: kernel-suite cells verify the
+//! traced lowering (with the builder's external-load journal), and raw
+//! programs submitted as [`crate::engine::Job::Program`] verify under
+//! implicit-inputs semantics (undefined registers read as architectural
+//! zeros, exactly the lifter's convention). The `lint` CLI subcommand
+//! runs the same pass over the whole kernel suite × format matrix and
+//! reports per-cell diagnostics, static mixes and the
+//! [`crate::isa::database`] cross-check.
+
+pub mod dataflow;
+pub mod diag;
+pub mod typestate;
+
+pub use dataflow::{verify_program, Externals, Verifier};
+pub use diag::{DiagKind, Diagnostic, Report, Severity, StaticMix};
+pub use typestate::{compatible, KState, VState};
+
+use anyhow::{bail, Result};
+
+/// The engine's verify-before-run policy (see the module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Verify {
+    /// Skip static verification entirely.
+    #[default]
+    Off,
+    /// Verify, print every diagnostic to stderr, run anyway.
+    Warn,
+    /// Verify and refuse to execute programs with error-severity
+    /// diagnostics (warnings still print and pass).
+    Deny,
+}
+
+impl Verify {
+    /// Every policy, in escalation order.
+    pub const ALL: [Verify; 3] = [Verify::Off, Verify::Warn, Verify::Deny];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Verify::Off => "off",
+            Verify::Warn => "warn",
+            Verify::Deny => "deny",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Verify> {
+        for v in Verify::ALL {
+            if v.name() == s {
+                return Ok(v);
+            }
+        }
+        let names: Vec<&str> = Verify::ALL.iter().map(|v| v.name()).collect();
+        bail!("unknown verify policy {s:?} (expected one of: {})", names.join("|"))
+    }
+
+    /// Resolve the value of the `TAKUM_VERIFY` environment variable
+    /// (`None` = unset): malformed values warn and fall back to `Off`
+    /// rather than failing engine construction. The env read itself
+    /// lives in [`crate::engine::EngineConfig::from_env`]; this is the
+    /// pure, unit-testable half.
+    pub fn parse_env(var: Option<&str>) -> Verify {
+        match var {
+            Some(v) => Verify::parse(v).unwrap_or_else(|e| {
+                eprintln!("warning: TAKUM_VERIFY: {e}; verification off");
+                Verify::Off
+            }),
+            None => Verify::Off,
+        }
+    }
+}
+
+/// Cross-check a static mix against the ISA database: every mnemonic the
+/// program uses that appears in neither the AVX10.2 baseline tables nor
+/// the proposed-extension tables. Informational — the kernel builders
+/// emit a handful of glue spellings (legacy width-suffixed bitwise ops)
+/// that the paper's tables don't enumerate — but a sudden growth here
+/// means a lowering drifted away from the ISA under study.
+pub fn isa_cross_check(mix: &StaticMix) -> Vec<&'static str> {
+    mix.histogram
+        .keys()
+        .copied()
+        .filter(|m| !crate::isa::database::known_mnemonic(m))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_parse_round_trips() {
+        for v in Verify::ALL {
+            assert_eq!(Verify::parse(v.name()).unwrap(), v);
+        }
+        assert!(Verify::parse("paranoid").is_err());
+        assert_eq!(Verify::parse_env(None), Verify::Off);
+        assert_eq!(Verify::parse_env(Some("deny")), Verify::Deny);
+        assert_eq!(Verify::parse_env(Some("bogus")), Verify::Off);
+        assert_eq!(Verify::default(), Verify::Off);
+    }
+
+    /// The whole kernel suite — every kernel × every format, both ISAs —
+    /// verifies with ZERO diagnostics (not even dead-write warnings):
+    /// the lowerings in `kernels::workloads` are hazard-free by
+    /// construction, and this pins that they stay so.
+    #[test]
+    fn kernel_suite_corpus_is_clean() {
+        use crate::engine::EngineConfig;
+        use crate::kernels::{Kernel, KernelSpec, Pipeline};
+
+        let eng = EngineConfig::new().verify(Verify::Warn).build().unwrap();
+        for kernel in Kernel::ALL {
+            for format in Pipeline::ALL_FORMATS {
+                let spec = KernelSpec { kernel, format, n: 64, seed: 7 };
+                let run = spec.lower(&eng).unwrap();
+                let report = run.report.expect("verify=warn engines produce reports");
+                assert!(
+                    report.is_clean(),
+                    "{}/{format} is not hazard-free:\n{}",
+                    kernel.name(),
+                    report.render_diagnostics()
+                );
+                assert!(report.mix.total > 0);
+                // The static mix agrees with what actually executed.
+                assert_eq!(report.mix.total as u64, run.machine.executed);
+            }
+        }
+    }
+
+    /// Every mnemonic the suite's lowerings emit is accounted for in the
+    /// ISA database tables (baseline or proposed), modulo a pinned
+    /// allowlist of spellings the paper's patterns don't capture: the
+    /// takum↔takum width narrowings (the proposed convert matrix is
+    /// int↔takum only), the real-hardware OFP8 store converts
+    /// (`VCVTPH2HF8S`/`VCVTPH2BF8S` — the table mandates a `BIAS|NE`
+    /// prefix) and `VCVTBF82PH`, and the `NEPBF16` spellings of
+    /// `VMAX`/`VSCALEF` that the F03 row writes as `PBF16`. Anything
+    /// outside the allowlist means a lowering drifted off the ISA under
+    /// study.
+    #[test]
+    fn kernel_suite_mnemonics_are_known_to_the_isa_database() {
+        use crate::engine::EngineConfig;
+        use crate::kernels::{Kernel, KernelSpec, Pipeline};
+
+        const ALLOWED_GLUE: [&str; 7] = [
+            "VCVTPT162PT8",
+            "VCVTPT322PT16",
+            "VCVTPH2HF8S",
+            "VCVTPH2BF8S",
+            "VCVTBF82PH",
+            "VMAXNEPBF16",
+            "VSCALEFNEPBF16",
+        ];
+        let eng = EngineConfig::new().verify(Verify::Warn).build().unwrap();
+        for kernel in Kernel::ALL {
+            for format in Pipeline::ALL_FORMATS {
+                let spec = KernelSpec { kernel, format, n: 64, seed: 3 };
+                let run = spec.lower(&eng).unwrap();
+                let report = run.report.expect("verify=warn engines produce reports");
+                let unknown: Vec<&str> = isa_cross_check(&report.mix)
+                    .into_iter()
+                    .filter(|m| !ALLOWED_GLUE.contains(m))
+                    .collect();
+                assert!(
+                    unknown.is_empty(),
+                    "{}/{format} uses mnemonics outside the ISA tables: {unknown:?}",
+                    kernel.name()
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! The per-register typestate lattice the dataflow interpreter walks.
+//!
+//! Each vector register is in one of three states — never defined,
+//! externally defined (harness data I/O outside the instruction stream),
+//! or instruction-defined at a known index — and carries the lane type
+//! of its last definition when one is known. Integer-domain writes
+//! (bitwise, shifts, integer lane ops, mask→vector moves) install an
+//! *untyped* definition: they manipulate raw bits and are compatible
+//! with any later read. Mask registers only need set/unset tracking.
+
+use crate::sim::LaneType;
+
+/// Typestate of one vector register (`v0`–`v31`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum VState {
+    /// Never written by an instruction and never externally loaded.
+    Undef,
+    /// Externally loaded by the harness (a journalled
+    /// [`super::Externals`] event); `None` means type-polymorphic
+    /// external state (e.g. the builder's all-zero constant register,
+    /// whose bit pattern decodes to 0.0 in every format).
+    Ext(Option<LaneType>),
+    /// Defined by the instruction at index `at`. `ty: None` is an
+    /// untyped (raw-bit) definition; `read` flips once any later
+    /// instruction consumes the value (dead-write tracking).
+    Def { ty: Option<LaneType>, at: usize, read: bool },
+}
+
+impl VState {
+    /// The lane type this state pins, if any.
+    pub fn ty(&self) -> Option<LaneType> {
+        match self {
+            VState::Undef => None,
+            VState::Ext(t) => *t,
+            VState::Def { ty, .. } => *ty,
+        }
+    }
+}
+
+/// Typestate of one mask register (`k0`–`k7`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KState {
+    Undef,
+    /// Set by a mask-producing instruction (mask op, compare, `VCLASS`,
+    /// vector→mask move) or journalled as external state.
+    Def,
+}
+
+/// Readback compatibility: can lanes written as `a` be read as `b`
+/// without a bit reinterpretation? Exact type equality, plus the
+/// saturating/non-saturating encode split of one IEEE spec —
+/// `VCVTPH2HF8S` *writes* saturating E4M3 lanes which `VCVTHF82PH`
+/// *reads* back as plain E4M3; the bits are the same format either way.
+pub fn compatible(a: LaneType, b: LaneType) -> bool {
+    if a == b {
+        return true;
+    }
+    match (a, b) {
+        (LaneType::Mini(x), LaneType::MiniSat(y)) | (LaneType::MiniSat(x), LaneType::Mini(y)) => {
+            x == y
+        }
+        _ => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::num::{E4M3, E5M2};
+
+    #[test]
+    fn compatibility_is_spec_equality_modulo_saturation() {
+        assert!(compatible(LaneType::Takum(8), LaneType::Takum(8)));
+        assert!(!compatible(LaneType::Takum(8), LaneType::Takum(16)));
+        assert!(!compatible(LaneType::Takum(8), LaneType::Mini(E4M3)));
+        // The VCVT…S store / plain load round trip.
+        assert!(compatible(LaneType::MiniSat(E4M3), LaneType::Mini(E4M3)));
+        assert!(compatible(LaneType::Mini(E5M2), LaneType::MiniSat(E5M2)));
+        assert!(!compatible(LaneType::MiniSat(E4M3), LaneType::Mini(E5M2)));
+    }
+
+    #[test]
+    fn state_type_projection() {
+        assert_eq!(VState::Undef.ty(), None);
+        assert_eq!(VState::Ext(Some(LaneType::Takum(16))).ty(), Some(LaneType::Takum(16)));
+        assert_eq!(VState::Ext(None).ty(), None);
+        let d = VState::Def { ty: Some(LaneType::Takum(8)), at: 3, read: false };
+        assert_eq!(d.ty(), Some(LaneType::Takum(8)));
+    }
+}

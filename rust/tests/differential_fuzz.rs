@@ -24,6 +24,7 @@ use takum_avx10::num::{BF16, E4M3, E5M2, F16, F32};
 use takum_avx10::sim::{
     Backend, CodecMode, Graph, Instruction, LaneType, Machine, Operand, Program, VecReg,
 };
+use takum_avx10::verify::{Externals, Verifier};
 
 /// Build the engine for one (mode, backend) config — the front door every
 /// machine in this suite comes through (the execution-context redesign's
@@ -392,6 +393,64 @@ fn lifted_interpreter_matches_machine_replay() {
     // The corpus must exercise the passes, not tiptoe around them.
     assert!(total_folded > 0, "no convert pairs folded across the corpus");
     assert!(total_dead > 0, "no dead planes eliminated across the corpus");
+}
+
+/// Static-vs-dynamic differential: for every liftable corpus seed, the
+/// static verifier's instruction-mix model (histogram, total, convert
+/// and dot counts computed *without executing*) must equal what the
+/// machine actually executes — and the corpus must verify clean enough
+/// for `Verify::Deny` (dead-write warnings are legitimate in random
+/// programs; error-severity diagnostics are not).
+#[test]
+fn static_verifier_mix_matches_dynamic_execution() {
+    let eng = engine_for(CodecMode::Lut, Backend::Scalar);
+    for &seed in &SEEDS {
+        let case = generate(seed, true);
+
+        // Journal the case's initial state exactly as `Case::machine`
+        // installs it: typed loads and mask sets, all before index 0.
+        let mut ext = Externals::new();
+        for (reg, ty, _) in &case.loads {
+            ext.load(0, *reg, *ty);
+        }
+        for (k, _) in case.masks {
+            ext.set_mask(0, k);
+        }
+        let report =
+            Verifier::with_externals(ext).implicit_inputs(true).verify(&case.prog);
+        assert!(
+            report.passes_deny(),
+            "seed={seed:#x}: corpus program has error-severity diagnostics:\n{}",
+            report.render_diagnostics()
+        );
+
+        // The static histogram is the program histogram (straight-line
+        // code: every recorded instruction executes exactly once).
+        assert_eq!(
+            report.mix.histogram,
+            case.prog.histogram(),
+            "seed={seed:#x}: static histogram diverged from the program's"
+        );
+        assert_eq!(report.mix.total, case.prog.len(), "seed={seed:#x}");
+
+        // And it matches the dynamic counters after an actual run.
+        let mut m = case.machine(&eng);
+        m.run(&case.prog).unwrap_or_else(|e| panic!("seed={seed:#x}: run failed: {e}"));
+        assert_eq!(report.mix.total as u64, m.executed, "seed={seed:#x}: total");
+        for (&mn, &c) in &report.mix.histogram {
+            assert_eq!(
+                m.counts.get(mn).copied().unwrap_or(0),
+                c as u64,
+                "seed={seed:#x}: static count for {mn} diverged from execution"
+            );
+        }
+        let dyn_converts: u64 =
+            m.counts.iter().filter(|(m, _)| m.starts_with("VCVT")).map(|(_, c)| c).sum();
+        let dyn_dots: u64 =
+            m.counts.iter().filter(|(m, _)| m.starts_with("VDP")).map(|(_, c)| c).sum();
+        assert_eq!(report.mix.converts as u64, dyn_converts, "seed={seed:#x}: converts");
+        assert_eq!(report.mix.dots as u64, dyn_dots, "seed={seed:#x}: dots");
+    }
 }
 
 /// Suite-metrics differential: the kernel suite's metrics (relative
