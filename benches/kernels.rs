@@ -122,6 +122,29 @@ fn main() {
         println!("softmax {f:<6} {:>6.2}x", deny / off);
     }
 
+    // Telemetry-overhead contract (see `crate::telemetry`): the same
+    // packed-FMA plane cells, measured with whatever instrumentation
+    // this build carries. The hot-path counters are plain u64 bumps
+    // guarded by the const `telemetry::enabled()`, so a build with
+    // `--features telemetry-off` compiles them out entirely; comparing
+    // the `[telemetry=on]` rows of a default build against the
+    // `[telemetry=off]` rows of a feature-gated build bounds the cost of
+    // always-on observability (acceptance: within ~5%). Both row names
+    // are stamped with the compile-time state so the two artifacts are
+    // directly diffable.
+    let telem_state = if takum_avx10::telemetry::enabled() { "on" } else { "off" };
+    b.group(&format!("telemetry overhead: instrumented hot path [telemetry={telem_state}]"));
+    for kernel in [Kernel::Poly, Kernel::Axpy] {
+        for format in ["t8", "t16"] {
+            let spec = KernelSpec { kernel, format, n, seed: 1 };
+            b.bench_with_elements(
+                &format!("{} {format} [telemetry={telem_state}]", kernel.name()),
+                n as u64,
+                || spec.run(&eng).unwrap(),
+            );
+        }
+    }
+
     b.group("parallel kernel sweep (full suite, sizes 64+128)");
     for workers in [1usize, 2, 4] {
         let weng = EngineConfig::from_env().workers(workers).build().expect("engine");
@@ -136,7 +159,11 @@ fn main() {
     // including the per-backend kernel timings — lands in
     // BENCH_kernels.json so CI archives can diff runs over time. The
     // file-level tag is the process-default engine; rows that pinned a
-    // different config carry it in their measurement name.
+    // different config carry it in their measurement name. Schema v3:
+    // the default engine's counter snapshot rides along under
+    // `telemetry`, so trend tooling can diff cache-hit rates and convert
+    // counts alongside the timings.
+    b.set_telemetry(eng.telemetry().to_json());
     b.write_json("kernels", &eng.tag(), "BENCH_kernels.json")
         .expect("writing BENCH_kernels.json");
 }

@@ -1,16 +1,23 @@
 #!/usr/bin/env python3
-"""Diff two sets of BENCH_*.json perf-trajectory files (schema v2, as
-emitted by the Rust benches' hand-rolled JSON writer) and report median
-wall-time regressions.
+"""Diff two sets of BENCH_*.json perf-trajectory files (schema v2 or v3,
+as emitted by the Rust benches' hand-rolled JSON writer) and report
+median wall-time regressions plus — for v3 files that embed a telemetry
+snapshot — cache-hit-rate and convert-count drift.
 
 Usage:
     bench_trend.py BASELINE_DIR CURRENT_DIR [--threshold PCT]
 
 Measurements are keyed on (group, name) — per the schema, rows that pin
 a non-default engine config carry it in the measurement *name* (the
-`[lut]`/`[arith]`/`[scalar|vector|graph]`/`[verify=…]` suffixes), so the
-key is stable across runs even though the file-level `engine_config` tag
-varies by CI matrix leg.
+`[lut]`/`[arith]`/`[scalar|vector|graph]`/`[verify=…]`/`[telemetry=…]`
+suffixes), so the key is stable across runs even though the file-level
+`engine_config` tag varies by CI matrix leg.
+
+Missing, corrupt, or unsupported-schema baselines are reported and
+skipped — a first run (no baseline yet) must never stack-trace. The
+telemetry diff is purely informational: a plan/shadow hit-rate drop of
+more than 5 points is flagged in the summary but never affects the exit
+code.
 
 Emits a GitHub-flavoured-markdown summary on stdout (CI appends it to
 $GITHUB_STEP_SUMMARY). Exits 2 when any measurement regressed by more
@@ -24,14 +31,75 @@ import json
 import sys
 from pathlib import Path
 
+SUPPORTED_SCHEMAS = (2, 3)
+
+# Telemetry flagging threshold: hit-rate drops beyond this many
+# percentage points are called out (informational only).
+HIT_RATE_DROP_POINTS = 5.0
+
 
 def load(path):
-    """Parse one bench JSON file into {(group, name): median_ns}."""
+    """Parse one bench JSON file into ({(group, name): median_ns}, telemetry).
+
+    `telemetry` is the embedded snapshot object for schema-v3 files that
+    attached one, else None (schema v2 has no such key).
+    """
     doc = json.loads(Path(path).read_text())
+    schema = doc.get("schema_version")
+    if schema not in SUPPORTED_SCHEMAS:
+        raise ValueError(
+            f"unsupported schema_version {schema!r} (supported: {list(SUPPORTED_SCHEMAS)})"
+        )
     rows = {}
     for r in doc.get("results", []):
         rows[(r.get("group", ""), r["name"])] = float(r["median_ns"])
-    return rows
+    return rows, doc.get("telemetry")
+
+
+def load_or_none(path, label):
+    """`load`, but degrade any failure to a skip message (no stack trace)."""
+    try:
+        return load(path)
+    except (OSError, ValueError, KeyError, TypeError) as e:
+        print(f"\n`{path.name}`: unreadable {label} ({e}) — skipped")
+        return None
+
+
+def hit_rate(counters, kind):
+    """Hit rate in percent for `plan`/`shadow`, or None before any lookup."""
+    hits = counters.get(f"{kind}_hits", 0)
+    total = hits + counters.get(f"{kind}_misses", 0)
+    return hits / total * 100.0 if total else None
+
+
+def telemetry_diff(base_telem, cur_telem):
+    """Print hit-rate / convert drift between two embedded snapshots.
+
+    Returns the list of flagged drift strings (informational — the
+    caller never turns these into a failing exit code).
+    """
+    if not isinstance(base_telem, dict) or not isinstance(cur_telem, dict):
+        return []
+    base_c = base_telem.get("counters", {})
+    cur_c = cur_telem.get("counters", {})
+    flagged = []
+    print("\n  telemetry drift (informational, never gates):")
+    for kind, label in (("plan", "plan-cache"), ("shadow", "decoded-shadow")):
+        b, c = hit_rate(base_c, kind), hit_rate(cur_c, kind)
+        if b is None or c is None:
+            continue
+        note = ""
+        if b - c > HIT_RATE_DROP_POINTS:
+            note = f"  ⚠ dropped >{HIT_RATE_DROP_POINTS:.0f} points"
+            flagged.append(f"{label} hit rate {b:.1f}% → {c:.1f}%")
+        print(f"    {label} hit rate: {b:.1f}% → {c:.1f}%{note}")
+    for key in ("converts", "dots", "executed"):
+        b, c = base_c.get(key), cur_c.get(key)
+        if b is None or c is None:
+            continue
+        note = " (changed)" if b != c else ""
+        print(f"    {key}: {b} → {c}{note}")
+    return flagged
 
 
 def main():
@@ -50,25 +118,35 @@ def main():
     cur_dir = Path(args.current)
     compared = 0
     regressions = []
+    telemetry_flags = []
 
     print(f"### Bench trend vs previous run (threshold +{args.threshold:.0f}%)")
+    if not base_dir.is_dir():
+        print(f"\nBaseline directory `{base_dir}` missing — first run, nothing to compare.")
+        return 0
     for cur_file in sorted(cur_dir.glob("BENCH_*.json")):
         base_file = base_dir / cur_file.name
         if not base_file.exists():
             print(f"\n`{cur_file.name}`: no baseline file — skipped")
             continue
-        base = load(base_file)
-        cur = load(cur_file)
+        base = load_or_none(base_file, "baseline")
+        if base is None:
+            continue
+        cur = load_or_none(cur_file, "current run")
+        if cur is None:
+            continue
+        base_rows, base_telem = base
+        cur_rows, cur_telem = cur
         flagged = []
-        for key in sorted(cur):
-            if key not in base or base[key] <= 0.0:
+        for key in sorted(cur_rows):
+            if key not in base_rows or base_rows[key] <= 0.0:
                 continue
             compared += 1
-            delta = (cur[key] - base[key]) / base[key] * 100.0
+            delta = (cur_rows[key] - base_rows[key]) / base_rows[key] * 100.0
             if delta > args.threshold:
-                flagged.append((key, base[key], cur[key], delta))
+                flagged.append((key, base_rows[key], cur_rows[key], delta))
         print(
-            f"\n`{cur_file.name}`: {len(cur)} measurements, "
+            f"\n`{cur_file.name}`: {len(cur_rows)} measurements, "
             f"{len(flagged)} regressed beyond threshold"
         )
         if flagged:
@@ -77,6 +155,16 @@ def main():
             for (group, name), b, c, delta in flagged:
                 print(f"| {group} | {name} | {b:,.0f} ns | {c:,.0f} ns | +{delta:.1f}% |")
         regressions.extend(flagged)
+        telemetry_flags.extend(telemetry_diff(base_telem, cur_telem))
+
+    if telemetry_flags:
+        print(
+            f"\n{len(telemetry_flags)} telemetry hit-rate drop(s) beyond "
+            f"{HIT_RATE_DROP_POINTS:.0f} points (informational — investigate cache "
+            "behaviour, but this never fails the step):"
+        )
+        for f in telemetry_flags:
+            print(f"- {f}")
 
     if compared == 0:
         print("\nNo overlapping measurements — nothing compared.")

@@ -14,9 +14,11 @@
 //! deterministic task lists over it.
 
 pub mod kernel_sweep;
-pub mod metrics;
 pub mod sweep;
 
 pub use kernel_sweep::{kernel_sweep, KernelSweep, KernelSweepMetrics};
-pub use metrics::SweepMetrics;
+// The sweep accumulator moved into the telemetry layer (the one metrics
+// owner in the crate); re-exported here so coordinator callers keep
+// their import path.
+pub use crate::telemetry::SweepMetrics;
 pub use sweep::{sweep, ConvertEngine, SweepConfig};

@@ -18,7 +18,7 @@
 //!   stay native. Numerically identical to Native (asserted by
 //!   integration tests).
 
-use super::metrics::SweepMetrics;
+use crate::telemetry::SweepMetrics;
 use crate::engine::Engine;
 use crate::harness::figure2::{FormatCdf, PanelResult};
 use crate::matrix::generator::{self, CollectionSpec};

@@ -62,6 +62,10 @@ pub struct EngineConfig {
     pub(crate) warm: WarmPolicy,
     pub(crate) seed: u64,
     pub(crate) verify: Verify,
+    /// Chrome-trace output path (`TAKUM_TRACE` / `--trace`): when set,
+    /// the engine writes its span ring there on drop (see
+    /// [`crate::telemetry::spans`]).
+    pub(crate) trace: Option<String>,
 }
 
 impl Default for EngineConfig {
@@ -81,6 +85,7 @@ impl EngineConfig {
             warm: WarmPolicy::default(),
             seed: 0xBEEF,
             verify: Verify::default(),
+            trace: None,
         }
     }
 
@@ -93,21 +98,29 @@ impl EngineConfig {
             std::env::var("TAKUM_BACKEND").ok().as_deref(),
             std::env::var("TAKUM_CODEC").ok().as_deref(),
             std::env::var("TAKUM_VERIFY").ok().as_deref(),
+            std::env::var("TAKUM_TRACE").ok().as_deref(),
         )
     }
 
     /// [`EngineConfig::from_env`] with the variable values injected —
     /// the pure half, so env precedence and the warn-and-fallback path
-    /// are unit-testable without mutating process state.
+    /// are unit-testable without mutating process state. `trace` is a
+    /// file path (any non-empty value enables trace export); an empty
+    /// `TAKUM_TRACE` is treated as unset.
     pub fn from_env_values(
         backend: Option<&str>,
         codec: Option<&str>,
         verify: Option<&str>,
+        trace: Option<&str>,
     ) -> EngineConfig {
-        EngineConfig::new()
+        let cfg = EngineConfig::new()
             .backend(Backend::parse_env(backend))
             .codec(CodecMode::parse_env(codec))
-            .verify(Verify::parse_env(verify))
+            .verify(Verify::parse_env(verify));
+        match trace {
+            Some(path) if !path.is_empty() => cfg.trace(path),
+            _ => cfg,
+        }
     }
 
     /// Select the plane backend.
@@ -146,6 +159,15 @@ impl EngineConfig {
     /// enumerates all valid names (via [`Verify::parse`]).
     pub fn try_verify(self, name: &str) -> Result<EngineConfig> {
         Ok(self.verify(Verify::parse(name)?))
+    }
+
+    /// Enable Chrome-trace export of the job-lifecycle spans to `path`
+    /// (written when the engine is dropped; see
+    /// [`crate::telemetry::spans`]). The env spelling is
+    /// `TAKUM_TRACE=<path>`, the CLI spelling `--trace <path>`.
+    pub fn trace(mut self, path: &str) -> EngineConfig {
+        self.trace = Some(path.to_string());
+        self
     }
 
     /// Worker-pool width for fan-out jobs. Validated at
@@ -203,22 +225,32 @@ mod tests {
         assert_eq!(base.mode, CodecMode::Lut);
 
         // Unset env ⇒ built-in defaults.
-        let cfg = EngineConfig::from_env_values(None, None, None);
+        let cfg = EngineConfig::from_env_values(None, None, None, None);
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Scalar));
         assert_eq!(cfg.verify, Verify::Off);
+        assert_eq!(cfg.trace, None);
 
         // Valid env values override the defaults.
-        let cfg = EngineConfig::from_env_values(Some("vector"), Some("arith"), Some("deny"));
+        let cfg = EngineConfig::from_env_values(
+            Some("vector"),
+            Some("arith"),
+            Some("deny"),
+            Some("out/trace.json"),
+        );
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Arith, Backend::Vector));
         assert_eq!(cfg.verify, Verify::Deny);
-        let cfg = EngineConfig::from_env_values(Some("graph"), None, None);
+        assert_eq!(cfg.trace.as_deref(), Some("out/trace.json"));
+        let cfg = EngineConfig::from_env_values(Some("graph"), None, None, None);
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Graph));
 
         // Invalid env values warn (stderr) and fall back to the default
-        // rather than failing construction.
-        let cfg = EngineConfig::from_env_values(Some("gpu"), Some("banana"), Some("paranoid"));
+        // rather than failing construction; an empty TAKUM_TRACE is
+        // unset, not a trace to a file named "".
+        let cfg =
+            EngineConfig::from_env_values(Some("gpu"), Some("banana"), Some("paranoid"), Some(""));
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Scalar));
         assert_eq!(cfg.verify, Verify::Off);
+        assert_eq!(cfg.trace, None);
     }
 
     /// CLI-spelling setters: valid names select, unknown names produce

@@ -2,14 +2,16 @@
 //! expressed as data and executed through [`Engine::submit`] — the single
 //! entry point the CLI, benches, examples and tests share.
 
-use super::Engine;
+use super::{Engine, JobTrace};
 use crate::coordinator::{kernel_sweep, KernelSweep, KernelSweepMetrics};
 use crate::harness::gemm::{gemm_scaled, GemmResult};
 use crate::kernels::{run_suite, KernelResult, KernelSpec};
 use crate::runtime::TensorF64;
 use crate::sim::{Machine, Program};
+use crate::telemetry::Stage;
 use crate::verify::{Externals, Verifier};
 use anyhow::Result;
+use std::time::Instant;
 
 /// One unit of work. Specs that carry `seed: None` inherit the engine's
 /// configured default seed ([`Engine::seed`]).
@@ -39,6 +41,21 @@ pub enum Job {
     /// journal read as architectural zeros); `Verify::Deny` rejects
     /// ill-typed programs before a single instruction runs.
     Program { prog: Program, externals: Externals },
+}
+
+impl Job {
+    /// Job-kind label: the span recorder's `cat` field and the stats
+    /// grouping (parallels [`JobResult::kind`]).
+    pub(crate) fn kind(&self) -> &'static str {
+        match self {
+            Job::Kernel(_) => "kernel",
+            Job::Gemm(_) => "gemm",
+            Job::Suite { .. } => "suite",
+            Job::Sweep(_) => "sweep",
+            Job::Artifact { .. } => "artifact",
+            Job::Program { .. } => "program",
+        }
+    }
 }
 
 /// Spec of one quantised GEMM run.
@@ -133,34 +150,87 @@ impl JobResult {
 impl Engine {
     /// Execute one [`Job`] under this engine's configuration. The
     /// returned variant always matches the submitted job's.
+    ///
+    /// Every submitted job records one span per lifecycle stage
+    /// (`submit → verify → plan → decode → execute → encode`, see
+    /// [`crate::telemetry::spans`]): stages a job kind fuses into its
+    /// execution body appear as zero-duration markers, so the span count
+    /// and ordering are invariants across job kinds. The umbrella
+    /// `submit` span covers the whole call.
     pub fn submit(&self, job: Job) -> Result<JobResult> {
+        let tr = self.begin_job(job.kind());
+        let start = Instant::now();
+        let out = self.submit_traced(job, &tr);
+        self.record_span(tr.job, tr.kind, Stage::Submit, start, start.elapsed());
+        out
+    }
+
+    fn submit_traced(&self, job: Job, tr: &JobTrace<'_>) -> Result<JobResult> {
         match job {
-            Job::Kernel(spec) => Ok(JobResult::Kernel(spec.run(self)?)),
+            Job::Kernel(spec) => Ok(JobResult::Kernel(spec.run_traced(self, Some(tr))?)),
             Job::Gemm(g) => {
+                // The GEMM harness lowers through untraced builders, so
+                // its program never reaches the verify gate: one Skipped
+                // outcome keeps the gate counters at one-per-job.
+                tr.mark(Stage::Verify);
+                self.note_verify_skipped();
+                tr.mark(Stage::Plan);
+                tr.mark(Stage::Decode);
                 let seed = g.seed.unwrap_or(self.seed());
-                let r = gemm_scaled(self, g.n, &g.format, seed, g.spread_decades, g.scale)?;
+                let r = tr.stage(Stage::Execute, || {
+                    gemm_scaled(self, g.n, &g.format, seed, g.spread_decades, g.scale)
+                })?;
+                tr.mark(Stage::Encode);
                 Ok(JobResult::Gemm(r))
             }
             Job::Suite { n, seed } => {
-                Ok(JobResult::Suite(run_suite(self, n, seed.unwrap_or(self.seed()))?))
+                // Per-cell stages (plan/verify/encode) happen inside each
+                // cell's own pipeline; the job-level lifecycle fuses them
+                // into the execute body.
+                tr.mark(Stage::Verify);
+                tr.mark(Stage::Plan);
+                tr.mark(Stage::Decode);
+                let r = tr
+                    .stage(Stage::Execute, || run_suite(self, n, seed.unwrap_or(self.seed())))?;
+                tr.mark(Stage::Encode);
+                Ok(JobResult::Suite(r))
             }
             Job::Sweep(spec) => {
-                let (results, metrics) = kernel_sweep(self, &spec)?;
+                tr.mark(Stage::Verify);
+                tr.mark(Stage::Plan);
+                tr.mark(Stage::Decode);
+                let (results, metrics) = tr.stage(Stage::Execute, || kernel_sweep(self, &spec))?;
+                tr.mark(Stage::Encode);
                 Ok(JobResult::Sweep { results, metrics })
             }
             Job::Artifact { name, inputs } => {
-                Ok(JobResult::Artifact(self.pjrt()?.run_f64(&name, inputs)?))
+                tr.mark(Stage::Verify);
+                // Plan = acquiring the artifact service (lazy start on
+                // the first artifact job — the expensive case).
+                let handle = tr.stage(Stage::Plan, || self.pjrt())?;
+                tr.mark(Stage::Decode);
+                let out = tr.stage(Stage::Execute, || handle.run_f64(&name, inputs))?;
+                tr.mark(Stage::Encode);
+                Ok(JobResult::Artifact(out))
             }
             Job::Program { prog, externals } => {
                 use crate::verify::Verify;
-                if self.verify_policy() != Verify::Off {
-                    let report =
-                        Verifier::with_externals(externals).implicit_inputs(true).verify(&prog);
-                    self.enforce_report(&format!("program ({} instrs)", prog.len()), &report)?;
-                }
-                let mut m = self.machine();
-                m.run(&prog)?;
-                self.absorb_plans(&m);
+                tr.stage(Stage::Verify, || {
+                    if self.verify_policy() != Verify::Off {
+                        let report =
+                            Verifier::with_externals(externals).implicit_inputs(true).verify(&prog);
+                        self.enforce_report(&format!("program ({} instrs)", prog.len()), &report)
+                    } else {
+                        self.note_verify_skipped();
+                        Ok(())
+                    }
+                })?;
+                // The program is already recorded — there is no planning
+                // step between the gate and the machine.
+                tr.mark(Stage::Plan);
+                let mut m = tr.stage(Stage::Decode, || self.machine());
+                tr.stage(Stage::Execute, || m.run(&prog))?;
+                tr.stage(Stage::Encode, || self.absorb(&m));
                 Ok(JobResult::Program(Box::new(m)))
             }
         }

@@ -87,10 +87,13 @@ pub(crate) use config::process_default;
 use crate::num::lut;
 use crate::runtime::{default_artifact_dir, PjrtHandle, PjrtService};
 use crate::sim::{Backend, CodecMode, LanePlan, Machine};
+use crate::telemetry::{Registry, SpanRecorder, Stage, TelemetrySnapshot, VerifyOutcome};
 use crate::verify::{self, Verify};
-use anyhow::{bail, ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+use std::time::{Duration, Instant};
 
 /// The execution context (see the module docs): built once from an
 /// [`EngineConfig`], shared by reference across workers.
@@ -103,6 +106,15 @@ pub struct Engine {
     /// Lazily started PJRT artifact service (graph-interpreter fallback
     /// without the `pjrt` feature).
     pjrt: Mutex<Option<PjrtService>>,
+    /// Per-engine metrics registry (see [`crate::telemetry`]): machines
+    /// fold their counters in on [`Engine::absorb`]; per-engine so
+    /// concurrent engines (and parallel tests) never share counters.
+    telemetry: Registry,
+    /// Bounded job-lifecycle span ring, exported as Chrome-trace JSON
+    /// when the config carries a trace path.
+    spans: SpanRecorder,
+    /// Per-engine job sequence (the trace's `tid` axis).
+    next_job: AtomicU64,
 }
 
 impl std::fmt::Debug for Engine {
@@ -123,7 +135,14 @@ impl Engine {
         );
         // Warm before any machine or worker exists: the whole point of
         // the policy is that fan-outs start against hot tables.
-        let eng = Engine { cfg, plans: Mutex::new(HashMap::new()), pjrt: Mutex::new(None) };
+        let eng = Engine {
+            cfg,
+            plans: Mutex::new(HashMap::new()),
+            pjrt: Mutex::new(None),
+            telemetry: Registry::new(),
+            spans: SpanRecorder::default(),
+            next_job: AtomicU64::new(0),
+        };
         eng.warm_tables(eng.cfg.warm);
         Ok(eng)
     }
@@ -189,19 +208,26 @@ impl Engine {
     /// carries error-severity diagnostics — warnings print but pass.
     pub fn enforce_report(&self, context: &str, report: &verify::Report) -> Result<()> {
         match self.cfg.verify {
-            Verify::Off => Ok(()),
+            Verify::Off => {
+                self.telemetry.count_verify(VerifyOutcome::Skipped);
+                Ok(())
+            }
             Verify::Warn => {
                 if !report.is_clean() {
+                    self.telemetry.count_verify(VerifyOutcome::Warned);
                     eprintln!(
                         "verify warning: {context}: {} diagnostic(s):\n{}",
                         report.diagnostics.len(),
                         report.render_diagnostics()
                     );
+                } else {
+                    self.telemetry.count_verify(VerifyOutcome::Clean);
                 }
                 Ok(())
             }
             Verify::Deny => {
                 if !report.passes_deny() {
+                    self.telemetry.count_verify(VerifyOutcome::Denied);
                     bail!(
                         "verify: {context}: {} error(s), {} warning(s):\n{}",
                         report.error_count(),
@@ -210,15 +236,25 @@ impl Engine {
                     );
                 }
                 if report.warning_count() > 0 {
+                    self.telemetry.count_verify(VerifyOutcome::Warned);
                     eprintln!(
                         "verify warning: {context}: {} warning(s):\n{}",
                         report.warning_count(),
                         report.render_diagnostics()
                     );
+                } else {
+                    self.telemetry.count_verify(VerifyOutcome::Clean);
                 }
                 Ok(())
             }
         }
+    }
+
+    /// Count a job whose program never reached the gate (policy `Off` —
+    /// no report was even produced). Keeps the verify-outcome counters
+    /// summing to one outcome per verifiable unit.
+    pub(crate) fn note_verify_skipped(&self) {
+        self.telemetry.count_verify(VerifyOutcome::Skipped);
     }
 
     /// Hand out a configured [`Machine`]: codec mode and backend from the
@@ -229,8 +265,19 @@ impl Engine {
         Machine::for_engine(self.cfg.mode, self.cfg.backend, plans)
     }
 
-    /// Merge a machine's newly resolved mnemonic plans back into the
-    /// shared cache (called by `KernelBuilder::finish`).
+    /// Merge a finished machine back into the engine: newly resolved
+    /// mnemonic plans into the shared plan cache, and the machine's
+    /// execution counters (cache hit/miss tallies, the executed-mnemonic
+    /// histogram and its per-class decomposition) into the telemetry
+    /// registry. Called by `KernelBuilder::finish` and [`Job::Program`];
+    /// callers driving machines by hand (`Engine::machine()` + `run`)
+    /// call it themselves when the run is done.
+    pub fn absorb(&self, m: &Machine) {
+        self.absorb_plans(m);
+        self.telemetry.absorb_machine(m);
+    }
+
+    /// The plan half of [`Engine::absorb`].
     pub(crate) fn absorb_plans(&self, m: &Machine) {
         let mut plans = self.plans.lock().expect("plan cache poisoned");
         for (&mn, &plan) in m.plan_cache() {
@@ -260,15 +307,117 @@ impl Engine {
     }
 
     /// A compact `key=value` rendering of the execution config — the
-    /// engine-config tag stamped into the bench JSON artifacts.
+    /// engine-config tag stamped into the bench JSON artifacts and the
+    /// telemetry snapshot.
     pub fn tag(&self) -> String {
         format!(
-            "backend={};codec={};workers={};verify={}",
+            "backend={};codec={};workers={};verify={};trace={}",
             self.cfg.backend.name(),
             self.cfg.mode.name(),
             self.cfg.workers,
-            self.cfg.verify.name()
+            self.cfg.verify.name(),
+            if self.cfg.trace.is_some() { "on" } else { "off" }
         )
+    }
+
+    // ----------------------------------------------------------- telemetry
+
+    /// A point-in-time snapshot of this engine's telemetry registry (see
+    /// [`crate::telemetry`] for the counter catalogue).
+    pub fn telemetry(&self) -> TelemetrySnapshot {
+        self.telemetry.snapshot(&self.tag())
+    }
+
+    /// The engine-wide metrics registry (fold paths: the pool's worker
+    /// counts, the job absorb).
+    pub(crate) fn registry(&self) -> &Registry {
+        &self.telemetry
+    }
+
+    /// Start the span trace for one submitted job: counts the job and
+    /// hands back the [`JobTrace`] the submit path threads through its
+    /// lifecycle stages.
+    pub(crate) fn begin_job(&self, kind: &'static str) -> JobTrace<'_> {
+        self.telemetry.count_job();
+        JobTrace { eng: self, job: self.next_job.fetch_add(1, Ordering::Relaxed), kind }
+    }
+
+    /// Record one lifecycle-stage span: into the bounded ring (for the
+    /// Chrome trace) and the per-stage latency histogram (for p50/p99).
+    pub(crate) fn record_span(
+        &self,
+        job: u64,
+        kind: &'static str,
+        stage: Stage,
+        start: Instant,
+        dur: Duration,
+    ) {
+        self.spans.record(job, kind, stage, start, dur);
+        self.telemetry.record_stage(stage, dur.as_nanos() as u64);
+    }
+
+    /// Render the span ring as Chrome-trace JSON (see
+    /// [`crate::telemetry::spans`] for the format).
+    pub fn chrome_trace(&self) -> String {
+        self.spans.chrome_trace()
+    }
+
+    /// Write the Chrome trace to `path` (the explicit form of the
+    /// on-drop export).
+    pub fn write_trace(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.chrome_trace())
+            .with_context(|| format!("writing Chrome trace to {path}"))
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        // The trace axis' exit path: an engine configured with
+        // `TAKUM_TRACE`/`--trace` flushes its span ring as Chrome-trace
+        // JSON when it goes away. Failures report to stderr — a broken
+        // trace path must not turn a successful job into a panic inside
+        // drop.
+        if let Some(path) = self.cfg.trace.clone() {
+            if let Err(e) = self.write_trace(&path) {
+                eprintln!("telemetry: {e:#}");
+            }
+        }
+    }
+}
+
+/// Per-job span context: created by [`Engine::begin_job`] at the top of
+/// `Engine::submit`, passed down so each lifecycle stage records exactly
+/// one span (see [`crate::telemetry::spans`]). Stages a job kind fuses
+/// into its execution body call [`JobTrace::mark`] (a zero-duration
+/// marker) so every job renders the full lifecycle.
+pub(crate) struct JobTrace<'e> {
+    eng: &'e Engine,
+    job: u64,
+    kind: &'static str,
+}
+
+impl JobTrace<'_> {
+    /// Time `f` as one `stage` span.
+    pub(crate) fn stage<T>(&self, stage: Stage, f: impl FnOnce() -> T) -> T {
+        let start = Instant::now();
+        let out = f();
+        self.eng.record_span(self.job, self.kind, stage, start, start.elapsed());
+        out
+    }
+
+    /// Record a zero-duration marker for a stage fused into another.
+    pub(crate) fn mark(&self, stage: Stage) {
+        self.eng.record_span(self.job, self.kind, stage, Instant::now(), Duration::ZERO);
+    }
+}
+
+/// Run `f`, timed as a `stage` span when a [`JobTrace`] is present
+/// (`Engine::submit` paths) and untimed otherwise (direct calls, e.g.
+/// `KernelSpec::run` from benches or sweep workers).
+pub(crate) fn stage_opt<T>(tr: Option<&JobTrace<'_>>, stage: Stage, f: impl FnOnce() -> T) -> T {
+    match tr {
+        Some(t) => t.stage(stage, f),
+        None => f(),
     }
 }
 
@@ -334,7 +483,7 @@ mod tests {
             .workers(3)
             .build()
             .unwrap();
-        assert_eq!(eng.tag(), "backend=graph;codec=arith;workers=3;verify=off");
+        assert_eq!(eng.tag(), "backend=graph;codec=arith;workers=3;verify=off;trace=off");
         let eng = EngineConfig::new()
             .backend(Backend::Graph)
             .codec(CodecMode::Arith)
@@ -342,6 +491,47 @@ mod tests {
             .verify(Verify::Deny)
             .build()
             .unwrap();
-        assert_eq!(eng.tag(), "backend=graph;codec=arith;workers=3;verify=deny");
+        assert_eq!(eng.tag(), "backend=graph;codec=arith;workers=3;verify=deny;trace=off");
+        // The trace axis is stamped like the others (the path itself is
+        // not — it is an output location, not an execution axis).
+        let dir = std::env::temp_dir().join("takum-tag-trace-test");
+        let path = dir.join("trace.json");
+        std::fs::create_dir_all(&dir).unwrap();
+        let eng = EngineConfig::new()
+            .workers(2)
+            .trace(path.to_str().unwrap())
+            .build()
+            .unwrap();
+        assert_eq!(eng.tag(), "backend=scalar;codec=lut;workers=2;verify=off;trace=on");
+        drop(eng); // the drop flush writes the (possibly empty) trace
+        assert!(path.exists(), "drop must write the configured trace file");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// `Engine::absorb` folds a finished machine's counters into the
+    /// telemetry registry: executed totals, per-mnemonic and per-class
+    /// histograms, and the plan-cache hit/miss tallies.
+    #[cfg(not(feature = "telemetry-off"))]
+    #[test]
+    fn absorb_folds_machine_counters_into_telemetry() {
+        use crate::sim::{Instruction, LaneType, Operand};
+        let eng = EngineConfig::new().workers(1).build().unwrap();
+        let mut m = eng.machine();
+        let t = LaneType::Takum(16);
+        m.load_f64(0, t, &[1.0, 2.0]);
+        m.load_f64(1, t, &[3.0, 4.0]);
+        let add =
+            Instruction::new("VADDPT16", Operand::Vreg(2), vec![Operand::Vreg(0), Operand::Vreg(1)]);
+        m.step(&add).unwrap(); // plan miss
+        m.step(&add).unwrap(); // plan hit
+        eng.absorb(&m);
+        let snap = eng.telemetry();
+        assert_eq!(snap.executed, 2);
+        assert_eq!(snap.plan_hits, 1);
+        assert_eq!(snap.plan_misses, 1);
+        assert_eq!(snap.mnemonics.get("VADDPT16"), Some(&2));
+        assert_eq!(snap.classes.get("fp"), Some(&2));
+        assert!(snap.shadow_hits > 0, "loaded tiles pre-seed the shadow: {snap:?}");
+        assert!(snap.engine.starts_with("backend=scalar"));
     }
 }

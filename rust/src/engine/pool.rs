@@ -84,6 +84,11 @@ impl Engine {
             }
         });
 
+        // Fold the fan-out's load balance into the telemetry registry
+        // (slot-wise accumulation across fan-outs) — also on the error
+        // path: completed tasks were real work.
+        self.registry().record_workers(&per_worker);
+
         if let Some(e) = first_err {
             return Err(e);
         }

@@ -89,9 +89,10 @@ impl<'e> KernelBuilder<'e> {
 
     /// Tear down into the executed machine and the emitted program,
     /// merging newly resolved mnemonic plans back into the engine's
-    /// shared cache.
+    /// shared cache and folding the machine's execution counters into
+    /// the engine's telemetry registry ([`Engine::absorb`]).
     pub fn finish(self) -> (Machine, Program) {
-        self.engine.absorb_plans(&self.m);
+        self.engine.absorb(&self.m);
         (self.m, self.trace)
     }
 
@@ -103,7 +104,7 @@ impl<'e> KernelBuilder<'e> {
     pub fn finish_with_report(self) -> (Machine, Program, Option<Report>) {
         let report = (self.tracing && self.engine.verify_policy() != Verify::Off)
             .then(|| self.verify_report());
-        self.engine.absorb_plans(&self.m);
+        self.engine.absorb(&self.m);
         (self.m, self.trace, report)
     }
 

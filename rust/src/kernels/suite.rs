@@ -4,7 +4,8 @@
 
 use super::pipeline::{Isa, Pipeline};
 use super::workloads::{self, KernelRun};
-use crate::engine::Engine;
+use crate::engine::{stage_opt, Engine, JobTrace};
+use crate::telemetry::Stage;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
 
@@ -80,18 +81,42 @@ impl KernelSpec {
     /// bench columns all pin them by building engines, not by per-call
     /// variants.
     pub fn run(&self, engine: &Engine) -> Result<KernelResult> {
-        let pipe = Pipeline::for_format(self.format)?;
-        let run = self.kernel.run_raw(&pipe, self.n, self.seed, engine)?;
-        if let Some(report) = &run.report {
+        self.run_traced(engine, None)
+    }
+
+    /// [`KernelSpec::run`] with an optional job-lifecycle trace: each
+    /// stage of the cell (plan = pipeline resolution, execute = the
+    /// lowered run, verify = the gate, encode = metric extraction)
+    /// records one span when `Engine::submit` is driving; direct callers
+    /// (benches, sweep workers) pass `None` and pay nothing.
+    pub(crate) fn run_traced(
+        &self,
+        engine: &Engine,
+        tr: Option<&JobTrace<'_>>,
+    ) -> Result<KernelResult> {
+        let pipe = stage_opt(tr, Stage::Plan, || Pipeline::for_format(self.format))?;
+        if let Some(tr) = tr {
+            // Input decode is fused into the builder-lowered execution.
+            tr.mark(Stage::Decode);
+        }
+        let run =
+            stage_opt(tr, Stage::Execute, || self.kernel.run_raw(&pipe, self.n, self.seed, engine))?;
+        stage_opt(tr, Stage::Verify, || match &run.report {
             // The verify-before-run gate (see `crate::verify`): under
             // `Warn` diagnostics go to stderr, under `Deny` an ill-typed
             // lowering is an error naming the offending instructions.
-            engine.enforce_report(
+            Some(report) => engine.enforce_report(
                 &format!("kernel {}/{} (n={})", self.kernel.name(), self.format, self.n),
                 report,
-            )?;
-        }
-        Ok(KernelResult::from_run(self, &pipe, run))
+            ),
+            // Policy `Off` lowers without a report — count the skip so
+            // the gate counters sum to one outcome per cell.
+            None => {
+                engine.note_verify_skipped();
+                Ok(())
+            }
+        })?;
+        Ok(stage_opt(tr, Stage::Encode, || KernelResult::from_run(self, &pipe, run)))
     }
 
     /// Lower + execute without the enforcement step, returning the raw

@@ -35,7 +35,12 @@
 //! through. The engine optionally runs every recorded program through the
 //! [`verify`] module's static dataflow lint (typestate over registers and
 //! masks, instruction-indexed diagnostics, a static instruction-mix
-//! model) before execution — `TAKUM_VERIFY=warn|deny` / `--verify`.
+//! model) before execution — `TAKUM_VERIFY=warn|deny` / `--verify` —
+//! and owns the [`telemetry`] layer: a per-engine metrics registry
+//! (cache hit rates, verifier outcomes, per-mnemonic-class counters) and
+//! a job-lifecycle span recorder with Chrome-trace export
+//! (`TAKUM_TRACE=<path>` / `--trace`), surfaced through
+//! `Engine::telemetry()` and the `stats` CLI subcommand.
 
 // The seed idiom predates the clippy CI gate: eagerly-evaluated
 // `Option::or(strip_prefix(..))` chains on cheap operands are pervasive
@@ -46,6 +51,7 @@ pub mod util;
 pub mod num;
 pub mod isa;
 pub mod sim;
+pub mod telemetry;
 pub mod engine;
 pub mod verify;
 pub mod kernels;
@@ -55,6 +61,7 @@ pub mod runtime;
 pub mod coordinator;
 
 pub use engine::{Engine, EngineConfig, Job, JobResult};
+pub use telemetry::TelemetrySnapshot;
 
 /// Crate-wide result alias.
 pub type Result<T> = anyhow::Result<T>;

@@ -22,14 +22,15 @@
 
 use anyhow::{anyhow, bail, Context, Result};
 use takum_avx10::coordinator::{sweep, ConvertEngine, KernelSweep, SweepConfig};
-use takum_avx10::engine::{EngineConfig, Job, WarmPolicy};
+use takum_avx10::engine::{Engine, EngineConfig, Job, WarmPolicy};
 use takum_avx10::harness::{figure1, figure2, tables};
 use takum_avx10::isa::database::Category;
 use takum_avx10::kernels::{workloads::TILE_ALIGN, Kernel, Pipeline};
 use takum_avx10::kernels::KernelSpec;
 use takum_avx10::matrix::generator::CollectionSpec;
 use takum_avx10::sim::{assemble, LaneType};
-use takum_avx10::verify::{isa_cross_check, StaticMix, Verify};
+use takum_avx10::telemetry::{TelemetrySnapshot, STATS_FILE};
+use takum_avx10::verify::{isa_cross_check, Externals, StaticMix, Verify};
 
 /// Minimal flag parser: `--key value` and bare flags.
 struct Args {
@@ -92,6 +93,7 @@ fn run(raw: &[String]) -> Result<()> {
         "kernels" => cmd_kernels(&args),
         "lint" => cmd_lint(&args),
         "artifacts" => cmd_artifacts(&args),
+        "stats" => cmd_stats(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -119,6 +121,9 @@ commands:
           mix, and the ISA-database cross-check + executability audit
   artifacts                       list artifacts loadable by the runtime
           (built-in graph-interpreter set without the pjrt feature)
+  stats   [--json] [--path FILE]  report the telemetry snapshot the last
+          engine command persisted (plan/shadow cache hit rates, verifier
+          gate outcomes, per-class instruction counts, stage latencies)
 
 engine flags (shared by figure2/simulate/gemm/kernels/lint/artifacts):
   --backend scalar|vector|graph   plane backend
@@ -126,9 +131,11 @@ engine flags (shared by figure2/simulate/gemm/kernels/lint/artifacts):
   --workers N                     worker-pool width (N >= 1)
   --seed S                        default RNG seed
   --verify off|warn|deny          static verify-before-run policy
-Precedence: CLI flag > TAKUM_BACKEND/TAKUM_CODEC/TAKUM_VERIFY env >
-default (scalar/lut/off). sizes must be positive multiples of 64 (whole
-compute tiles).
+  --trace FILE                    write job-lifecycle spans as
+          Chrome-trace JSON (chrome://tracing, Perfetto) on exit
+Precedence: CLI flag > TAKUM_BACKEND/TAKUM_CODEC/TAKUM_VERIFY/TAKUM_TRACE
+env > default (scalar/lut/off/none). sizes must be positive multiples of
+64 (whole compute tiles).
 ";
 
 fn cmd_figure1() -> Result<()> {
@@ -159,7 +166,41 @@ fn parse_engine_cfg(args: &Args) -> Result<EngineConfig> {
     if let Some(v) = args.get("verify") {
         cfg = cfg.try_verify(v)?;
     }
+    if let Some(t) = args.get("trace") {
+        anyhow::ensure!(t != "true", "--trace needs a file path, e.g. --trace trace.json");
+        cfg = cfg.trace(t);
+    }
     Ok(cfg)
+}
+
+/// Persist the engine's telemetry snapshot to [`STATS_FILE`] so the
+/// `stats` subcommand (a separate process) can report on the run.
+/// Best-effort: a read-only working directory downgrades to a warning —
+/// observability must never fail the job that produced it.
+fn persist_stats(eng: &Engine) {
+    if let Err(e) = std::fs::write(STATS_FILE, eng.telemetry().to_json()) {
+        eprintln!("warning: could not persist telemetry snapshot to {STATS_FILE}: {e}");
+    }
+}
+
+/// Report the snapshot the last engine command persisted.
+fn cmd_stats(args: &Args) -> Result<()> {
+    let path = args.get("path").unwrap_or(STATS_FILE);
+    let text = std::fs::read_to_string(path).with_context(|| {
+        format!(
+            "reading {path} — run an engine command first (e.g. `takum-avx10 kernels`); \
+             each one persists its telemetry snapshot there"
+        )
+    })?;
+    let snap = TelemetrySnapshot::from_json(&text).with_context(|| format!("parsing {path}"))?;
+    if args.has("json") {
+        // Re-emit through the writer: normalised, schema-checked JSON
+        // rather than whatever bytes were on disk.
+        print!("{}", snap.to_json());
+    } else {
+        print!("{}", snap.render());
+    }
+    Ok(())
 }
 
 fn cmd_figure2(args: &Args) -> Result<()> {
@@ -186,6 +227,7 @@ fn cmd_figure2(args: &Args) -> Result<()> {
         ConvertEngine::Native => None,
     };
     let (panel, metrics) = sweep(&cfg, &eng, handle.as_ref())?;
+    persist_stats(&eng);
     print!("{}", figure2::render_panel(&panel));
     if args.has("plot") {
         print!("{}", figure2::render_ascii_plot(&panel, 72, 20));
@@ -230,11 +272,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("simulate needs a program file"))?;
     let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
     let prog = assemble(&src)?;
-    // One engine-built machine; --backend/--codec pin the axes, env
-    // defaults otherwise. Lazy warm: a single sequential machine has no
-    // fan-out to protect, and the first decode pays the build once.
-    let mut m = parse_engine_cfg(args)?.warm(WarmPolicy::Lazy).build()?.machine();
-    m.run(&prog)?;
+    // Through the engine front door (`Job::Program`): --backend/--codec
+    // pin the axes, env defaults otherwise, a non-`Off` --verify policy
+    // statically checks the program before it runs, and the run lands in
+    // the telemetry snapshot / span trace like every other job. Lazy
+    // warm: a single sequential machine has no fan-out to protect, and
+    // the first decode pays the build once.
+    let eng = parse_engine_cfg(args)?.warm(WarmPolicy::Lazy).build()?;
+    let m = eng.submit(Job::Program { prog, externals: Externals::new() })?.program();
+    persist_stats(&eng);
     println!("executed {} instructions", m.executed);
     for (mn, n) in &m.counts {
         println!("  {mn:<20} {n}");
@@ -281,6 +327,7 @@ fn cmd_gemm(args: &Args) -> Result<()> {
     // The seed is the engine's (default 0xBEEF, overridable via --seed).
     let seed = eng.seed();
     let out = takum_avx10::harness::gemm::run_sim_gemm(&eng, n, fname, seed)?;
+    persist_stats(&eng);
     print!("{out}");
     Ok(())
 }
@@ -334,6 +381,7 @@ fn cmd_kernels(args: &Args) -> Result<()> {
     let spec = parse_kernel_sweep(args)?;
     let eng = parse_engine_cfg(args)?.build()?;
     let (results, metrics) = eng.submit(Job::Sweep(spec))?.sweep();
+    persist_stats(&eng);
     print!("{}", takum_avx10::kernels::render(&results));
     eprint!("{}", metrics.render());
     Ok(())
@@ -404,6 +452,7 @@ fn cmd_lint(args: &Args) -> Result<()> {
         println!("isa cross-check: outside the database tables: {}", unknown.join(" "));
     }
     println!("{}", takum_avx10::isa::database::audit_executable().describe());
+    persist_stats(&eng);
     anyhow::ensure!(failing == 0, "{failing} suite cell(s) failed static verification");
     Ok(())
 }
@@ -488,6 +537,17 @@ mod tests {
         for v in Verify::ALL {
             assert!(e.contains(v.name()), "{e:?} missing {}", v.name());
         }
+    }
+
+    /// `--trace` needs a path operand: a bare flag is rejected with an
+    /// actionable message, a path lands in the config like the env
+    /// spelling would.
+    #[test]
+    fn engine_cfg_parses_trace_path() {
+        let cfg = parse_engine_cfg(&args(&["--trace", "out/trace.json"])).unwrap();
+        assert_eq!(cfg, EngineConfig::from_env().trace("out/trace.json"));
+        let e = parse_engine_cfg(&args(&["--trace"])).unwrap_err().to_string();
+        assert!(e.contains("--trace needs a file path"), "{e:?}");
     }
 
     #[test]

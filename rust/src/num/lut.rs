@@ -374,6 +374,7 @@ pub fn cached(name: &str) -> Option<&'static Lut8> {
             .iter()
             .map(|n| Lut8::build(&*super::registry::format_by_name(n).unwrap()))
             .collect();
+        WARM8_EVENTS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         WARM8.store(true, std::sync::atomic::Ordering::Release);
         t
     });
@@ -391,6 +392,7 @@ pub fn cached16(name: &str) -> Option<&'static Lut8> {
             .iter()
             .map(|n| Lut8::build(&*super::registry::format_by_name(n).unwrap()))
             .collect();
+        WARM16_EVENTS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         WARM16.store(true, std::sync::atomic::Ordering::Release);
         t
     });
@@ -425,6 +427,23 @@ pub fn cached_mini(name: &str) -> Option<&'static Lut8> {
 /// contract is testable (see `engine::Engine::build`).
 static WARM8: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
 static WARM16: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+
+/// Warm-*event* counters for the telemetry layer: bumped inside the
+/// `OnceLock` initialisers, so each counts the cold table builds this
+/// process actually paid (at most 1 per table set — `OnceLock` runs the
+/// initialiser once; a count of 0 in a snapshot means every decode so
+/// far ran against already-warm tables).
+static WARM8_EVENTS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+static WARM16_EVENTS: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+
+/// Process-wide (8-bit, 16-bit) cold table-build counts — the telemetry
+/// snapshot's `lut_warm{8,16}_events`.
+pub fn warm_events() -> (u64, u64) {
+    (
+        WARM8_EVENTS.load(std::sync::atomic::Ordering::Relaxed),
+        WARM16_EVENTS.load(std::sync::atomic::Ordering::Relaxed),
+    )
+}
 
 /// Whether the 8-bit table set has been built (by [`warm8`] or lazily).
 pub fn is_warm8() -> bool {

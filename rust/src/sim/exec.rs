@@ -105,6 +105,36 @@ impl ShadowCache {
     }
 }
 
+/// Machine-local execution counters for the telemetry layer: cache
+/// hit/miss tallies the hot path bumps as **plain u64 fields** (no
+/// atomics, no locks — the machine is single-threaded while it runs) and
+/// the engine folds into its shared registry once per finished job
+/// (`telemetry::Registry::absorb_machine`). Under the `telemetry-off`
+/// cargo feature the bump methods compile to no-ops and every field stays
+/// zero.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct ExecCounters {
+    /// Mnemonic-plan cache hits in `Machine::step` (the plan was already
+    /// resolved — by this machine or pre-seeded from the engine).
+    pub plan_hits: u64,
+    /// Plan-cache misses: one `LanePlan::resolve` each.
+    pub plan_misses: u64,
+    /// Decoded-shadow plane hits in `decode_plane_cached` (a 512-byte
+    /// copy instead of a bit-extraction + table/arithmetic sweep).
+    pub shadow_hits: u64,
+    /// Shadow misses: full plane decode + install.
+    pub shadow_misses: u64,
+}
+
+impl ExecCounters {
+    #[inline(always)]
+    fn bump(field: &mut u64) {
+        if crate::telemetry::enabled() {
+            *field += 1;
+        }
+    }
+}
+
 /// The simulator.
 #[derive(Debug, Clone)]
 pub struct Machine {
@@ -114,6 +144,9 @@ pub struct Machine {
     pub counts: BTreeMap<&'static str, u64>,
     /// Total executed instructions.
     pub executed: u64,
+    /// Telemetry counters (see [`ExecCounters`]): folded into the owning
+    /// engine's registry when the job finishes.
+    pub stats: ExecCounters,
     /// How lanes translate between bits and f64 (LUT-backed by default).
     mode: CodecMode,
     /// Which plane backend executes decode/encode/FMA plane loops.
@@ -157,6 +190,7 @@ impl Machine {
             regs: RegisterFile::default(),
             counts: BTreeMap::new(),
             executed: 0,
+            stats: ExecCounters::default(),
             mode,
             backend,
             plan_cache,
@@ -229,8 +263,10 @@ impl Machine {
         let reg = self.regs.v[r];
         if let Some(vals) = self.shadow.lookup(r, &reg, ty, lanes) {
             out[..lanes].copy_from_slice(&vals[..lanes]);
+            ExecCounters::bump(&mut self.stats.shadow_hits);
             return;
         }
+        ExecCounters::bump(&mut self.stats.shadow_misses);
         codec.decode_plane(&reg, ty.width(), lanes, out);
         self.shadow.install(r, reg, ty, lanes, out);
     }
@@ -258,8 +294,12 @@ impl Machine {
         *self.counts.entry(ins.mnemonic).or_insert(0) += 1;
         self.executed += 1;
         let plan = match self.plan_cache.get(ins.mnemonic) {
-            Some(p) => *p,
+            Some(p) => {
+                ExecCounters::bump(&mut self.stats.plan_hits);
+                *p
+            }
             None => {
+                ExecCounters::bump(&mut self.stats.plan_misses);
                 let p = LanePlan::resolve(ins.mnemonic)?;
                 self.plan_cache.insert(ins.mnemonic, p);
                 p

@@ -497,6 +497,27 @@ pub enum LanePlan {
 }
 
 impl LanePlan {
+    /// The plan's mnemonic class for the telemetry registry's per-class
+    /// executed-instruction counters (`convert` is the paper's dynamic
+    /// convert-tax bucket; `dot` the widening dot products). Classes are
+    /// coarser than variants where the distinction is plumbing, not
+    /// semantics (both convert forms are `convert`, both vector↔mask
+    /// moves are `maskmove`).
+    pub fn class_name(&self) -> &'static str {
+        match self {
+            LanePlan::Mask(_) => "mask",
+            LanePlan::Dot { .. } => "dot",
+            LanePlan::ConvertNe2PsBf16 | LanePlan::Convert { .. } => "convert",
+            LanePlan::Compare { .. } => "compare",
+            LanePlan::Bitwise(_) => "bitwise",
+            LanePlan::Broadcast(_) => "broadcast",
+            LanePlan::VecToMask(_) | LanePlan::MaskToVec(_) => "maskmove",
+            LanePlan::Shift(..) => "shift",
+            LanePlan::Int(_) => "int",
+            LanePlan::Fp { .. } => "fp",
+        }
+    }
+
     /// Resolve a mnemonic into its plan. Dispatch order mirrors the
     /// original per-step parser exactly (mask ops, dot products,
     /// conversions, compares, bitwise, broadcasts, vector↔mask moves,

@@ -22,7 +22,7 @@ pub mod exec;
 pub mod assemble;
 
 pub use assemble::assemble;
-pub use exec::Machine;
+pub use exec::{ExecCounters, Machine};
 pub use intern::intern;
 pub use graph::Graph;
 pub use lanes::{CodecMode, LaneCodec, LanePlan, LaneType};

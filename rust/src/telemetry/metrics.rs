@@ -1,0 +1,370 @@
+//! The metrics registry: relaxed-atomic counters and fixed-bucket
+//! latency histograms, one instance owned by each [`crate::engine::Engine`].
+//!
+//! Everything here is written for the cold side of the instrumentation
+//! split (see the module docs in [`crate::telemetry`]): machines count
+//! into plain-u64 fields while they run ([`crate::sim::ExecCounters`]),
+//! and the engine folds those into this registry **once per finished
+//! job** via [`Registry::absorb_machine`]. Only the fold path takes the
+//! map locks; the per-instruction path never touches an atomic that is
+//! shared across threads.
+
+use crate::num::lut;
+use crate::sim::Machine;
+use crate::telemetry::enabled;
+use crate::telemetry::snapshot::{StageStats, TelemetrySnapshot};
+use crate::telemetry::spans::Stage;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::Mutex;
+
+/// Number of log-linear histogram buckets: 64 octaves × 4 sub-buckets
+/// (quartered octaves keep the quantile read-out within ~19% of the true
+/// value across the whole u64 nanosecond range).
+pub const HIST_BUCKETS: usize = 256;
+
+/// A fixed-bucket latency histogram over u64 nanoseconds. Buckets are
+/// quartered powers of two (log-linear), recorded with relaxed atomics —
+/// concurrent `record` calls never lock, and `snapshot` reads a
+/// consistent-enough view for quantiles (counters only ever grow).
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Bucket index for a nanosecond value: 4 sub-buckets per octave.
+fn bucket_index(ns: u64) -> usize {
+    if ns < 4 {
+        return ns as usize; // exact buckets for 0..4 ns
+    }
+    let octave = 63 - ns.leading_zeros() as u64; // ≥ 2
+    let sub = (ns >> (octave - 2)) & 0b11; // top-2 bits below the MSB
+    let idx = (octave * 4 + sub) as usize;
+    idx.min(HIST_BUCKETS - 1)
+}
+
+/// Upper edge of a bucket (the value reported for quantiles — "p99 ≤ x").
+fn bucket_upper(idx: usize) -> u64 {
+    if idx < 4 {
+        return idx as u64;
+    }
+    let octave = (idx / 4) as u32;
+    let sub = (idx % 4) as u64;
+    // Lower edge of the *next* sub-bucket minus one, saturating at the
+    // top so the last bucket bounds u64::MAX.
+    let next_lower = (1u64 << octave).saturating_add((sub + 1) << octave.saturating_sub(2));
+    if next_lower == u64::MAX {
+        u64::MAX
+    } else {
+        next_lower - 1
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, ns: u64) {
+        if !enabled() {
+            return;
+        }
+        self.buckets[bucket_index(ns)].fetch_add(1, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+        self.sum_ns.fetch_add(ns, Relaxed);
+    }
+
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Relaxed)),
+            count: self.count.load(Relaxed),
+            sum_ns: self.sum_ns.load(Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`Histogram`], with quantile read-out.
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    buckets: [u64; HIST_BUCKETS],
+    pub count: u64,
+    pub sum_ns: u64,
+}
+
+impl HistogramSnapshot {
+    /// The value at quantile `q` in `[0, 1]`: an **upper bound** on the
+    /// true quantile, exact to the bucket resolution (quartered octaves,
+    /// ≤ ~19% relative error). Returns 0 for an empty histogram.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        // Rank of the q-quantile among `count` samples (1-based, clamped).
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_upper(i);
+            }
+        }
+        bucket_upper(HIST_BUCKETS - 1)
+    }
+}
+
+/// Verifier-gate outcome for one submitted job (counted by
+/// `Engine::enforce_report` and the skip paths).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum VerifyOutcome {
+    /// Policy `Off` (or nothing to verify): the gate did not run.
+    Skipped,
+    /// The gate ran and the program was clean.
+    Clean,
+    /// Diagnostics printed, execution proceeded (`Warn`, or `Deny` with
+    /// warnings only).
+    Warned,
+    /// `Deny` refused to execute the program.
+    Denied,
+}
+
+/// The per-engine metrics registry. All counters are monotone; `Snapshot`
+/// is the only read surface.
+#[derive(Debug, Default)]
+pub struct Registry {
+    /// Jobs started through `Engine::submit`.
+    jobs: AtomicU64,
+    /// Mnemonic-plan cache hits/misses folded from finished machines.
+    plan_hits: AtomicU64,
+    plan_misses: AtomicU64,
+    /// Decoded-shadow plane cache hits/misses folded from finished
+    /// machines.
+    shadow_hits: AtomicU64,
+    shadow_misses: AtomicU64,
+    /// Verifier-gate outcomes (one count per submitted program/cell).
+    verify_skipped: AtomicU64,
+    verify_clean: AtomicU64,
+    verify_warned: AtomicU64,
+    verify_denied: AtomicU64,
+    /// Total executed instructions folded from finished machines.
+    executed: AtomicU64,
+    /// Executed-instruction histogram on interned mnemonic keys (fold
+    /// path only — the hot path counts into `Machine::counts`).
+    mnemonics: Mutex<BTreeMap<&'static str, u64>>,
+    /// Executed instructions grouped by resolved `LanePlan` class
+    /// (`convert`, `dot`, `fp`, …; see `LanePlan::class_name`).
+    classes: Mutex<BTreeMap<&'static str, u64>>,
+    /// Tasks completed per pool worker, accumulated across fan-outs
+    /// (index = worker slot; fan-outs with fewer workers fold into the
+    /// low slots).
+    per_worker: Mutex<Vec<u64>>,
+    /// Span-duration histograms, one per lifecycle [`Stage`].
+    stage_hist: [Histogram; Stage::ALL.len()],
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Count one submitted job.
+    pub fn count_job(&self) {
+        if enabled() {
+            self.jobs.fetch_add(1, Relaxed);
+        }
+    }
+
+    /// Count one verifier-gate outcome.
+    pub fn count_verify(&self, outcome: VerifyOutcome) {
+        if !enabled() {
+            return;
+        }
+        let counter = match outcome {
+            VerifyOutcome::Skipped => &self.verify_skipped,
+            VerifyOutcome::Clean => &self.verify_clean,
+            VerifyOutcome::Warned => &self.verify_warned,
+            VerifyOutcome::Denied => &self.verify_denied,
+        };
+        counter.fetch_add(1, Relaxed);
+    }
+
+    /// Fold a finished machine's execution counters into the registry:
+    /// cache hit/miss tallies, the interned-mnemonic histogram, and the
+    /// per-class decomposition (classified through the machine's own
+    /// resolved plan cache — every counted mnemonic has a plan there, so
+    /// classification costs nothing on the per-instruction path).
+    pub fn absorb_machine(&self, m: &Machine) {
+        if !enabled() {
+            return;
+        }
+        let s = &m.stats;
+        self.plan_hits.fetch_add(s.plan_hits, Relaxed);
+        self.plan_misses.fetch_add(s.plan_misses, Relaxed);
+        self.shadow_hits.fetch_add(s.shadow_hits, Relaxed);
+        self.shadow_misses.fetch_add(s.shadow_misses, Relaxed);
+        self.executed.fetch_add(m.executed, Relaxed);
+        if m.counts.is_empty() {
+            return;
+        }
+        let mut mnemonics = self.mnemonics.lock().expect("telemetry mnemonics poisoned");
+        let mut classes = self.classes.lock().expect("telemetry classes poisoned");
+        for (&mn, &n) in &m.counts {
+            *mnemonics.entry(mn).or_insert(0) += n;
+            let class = m.plan_cache().get(mn).map(|p| p.class_name()).unwrap_or("other");
+            *classes.entry(class).or_insert(0) += n;
+        }
+    }
+
+    /// Fold one fan-out's per-worker completion counts (from
+    /// `Engine::run_tasks`) into the running per-slot totals.
+    pub fn record_workers(&self, counts: &[usize]) {
+        if !enabled() || counts.is_empty() {
+            return;
+        }
+        let mut per_worker = self.per_worker.lock().expect("telemetry workers poisoned");
+        if per_worker.len() < counts.len() {
+            per_worker.resize(counts.len(), 0);
+        }
+        for (slot, &n) in counts.iter().enumerate() {
+            per_worker[slot] += n as u64;
+        }
+    }
+
+    /// Record one lifecycle-stage duration into the stage histogram.
+    pub fn record_stage(&self, stage: Stage, ns: u64) {
+        self.stage_hist[stage.index()].record(ns);
+    }
+
+    /// Materialise the read surface. `engine_tag` is stamped in so a
+    /// persisted snapshot is self-describing (which config produced it).
+    pub fn snapshot(&self, engine_tag: &str) -> TelemetrySnapshot {
+        let (warm8, warm16) = lut::warm_events();
+        let mnemonics = self
+            .mnemonics
+            .lock()
+            .expect("telemetry mnemonics poisoned")
+            .iter()
+            .map(|(&k, &v)| (k.to_string(), v))
+            .collect::<BTreeMap<String, u64>>();
+        let classes = self
+            .classes
+            .lock()
+            .expect("telemetry classes poisoned")
+            .iter()
+            .map(|(&k, &v)| (k.to_string(), v))
+            .collect::<BTreeMap<String, u64>>();
+        let converts = classes.get("convert").copied().unwrap_or(0);
+        let dots = classes.get("dot").copied().unwrap_or(0);
+        let stages = Stage::ALL
+            .iter()
+            .map(|&st| {
+                let h = self.stage_hist[st.index()].snapshot();
+                StageStats {
+                    stage: st.name().to_string(),
+                    count: h.count,
+                    p50_ns: h.quantile(0.50),
+                    p90_ns: h.quantile(0.90),
+                    p99_ns: h.quantile(0.99),
+                    total_ns: h.sum_ns,
+                }
+            })
+            .collect();
+        TelemetrySnapshot {
+            engine: engine_tag.to_string(),
+            jobs: self.jobs.load(Relaxed),
+            plan_hits: self.plan_hits.load(Relaxed),
+            plan_misses: self.plan_misses.load(Relaxed),
+            shadow_hits: self.shadow_hits.load(Relaxed),
+            shadow_misses: self.shadow_misses.load(Relaxed),
+            lut_warm8_events: warm8,
+            lut_warm16_events: warm16,
+            verify_skipped: self.verify_skipped.load(Relaxed),
+            verify_clean: self.verify_clean.load(Relaxed),
+            verify_warned: self.verify_warned.load(Relaxed),
+            verify_denied: self.verify_denied.load(Relaxed),
+            executed: self.executed.load(Relaxed),
+            converts,
+            dots,
+            classes,
+            mnemonics,
+            per_worker: self.per_worker.lock().expect("telemetry workers poisoned").clone(),
+            stages,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_index_is_monotone_and_in_range() {
+        let mut samples: Vec<u64> = Vec::new();
+        for shift in 0..63u32 {
+            for sub in [0u64, 1, 3] {
+                samples.push((1u64 << shift) + sub * (1u64 << shift.saturating_sub(2)));
+            }
+        }
+        samples.sort_unstable();
+        let mut last = 0usize;
+        for ns in samples {
+            let idx = bucket_index(ns);
+            assert!(idx < HIST_BUCKETS);
+            assert!(idx >= last, "bucket index must be monotone in ns ({ns})");
+            last = idx;
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_upper_bounds_its_members() {
+        for ns in [0u64, 1, 2, 3, 5, 17, 1_000, 123_456, 9_999_999_999] {
+            let idx = bucket_index(ns);
+            assert!(
+                bucket_upper(idx) >= ns,
+                "upper edge of bucket {idx} must bound {ns}, got {}",
+                bucket_upper(idx)
+            );
+        }
+    }
+
+    #[cfg(not(feature = "telemetry-off"))]
+    #[test]
+    fn histogram_quantiles_bound_the_true_values() {
+        let h = Histogram::default();
+        // 100 samples: 1..=100 µs. True p50 = 50µs, p90 = 90µs, p99 = 99µs.
+        for us in 1..=100u64 {
+            h.record(us * 1_000);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        for (q, truth) in [(0.50, 50_000u64), (0.90, 90_000), (0.99, 99_000)] {
+            let est = s.quantile(q);
+            assert!(est >= truth, "p{q} estimate {est} must bound true {truth}");
+            assert!(
+                (est as f64) <= truth as f64 * 1.25,
+                "p{q} estimate {est} too far above true {truth}"
+            );
+        }
+        assert_eq!(HistogramSnapshot { buckets: [0; HIST_BUCKETS], count: 0, sum_ns: 0 }
+            .quantile(0.99), 0);
+    }
+
+    #[cfg(not(feature = "telemetry-off"))]
+    #[test]
+    fn worker_counts_accumulate_by_slot() {
+        let r = Registry::new();
+        r.record_workers(&[3, 2]);
+        r.record_workers(&[1, 1, 5]);
+        let snap = r.snapshot("test");
+        assert_eq!(snap.per_worker, vec![4, 3, 5]);
+    }
+}

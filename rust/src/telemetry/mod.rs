@@ -1,0 +1,143 @@
+//! # Engine-wide telemetry: counters, job-lifecycle spans, trace export
+//!
+//! The paper's quantitative claims are about *instruction mix* — the
+//! OFP8 convert tax vs. takum's convert-free lowerings — and the crate's
+//! performance claims rest on cache behaviour (the mnemonic-plan cache,
+//! the decoded-shadow plane cache, the process-wide LUTs). This module
+//! makes both dynamically observable: every [`crate::engine::Engine`]
+//! owns a [`Registry`] of counters and latency histograms plus a
+//! [`SpanRecorder`] tracing the `Engine::submit` lifecycle, read out as
+//! a [`TelemetrySnapshot`] (`Engine::telemetry()`, the `stats` CLI
+//! subcommand, and the schema-v3 bench JSON all consume it).
+//!
+//! ## Counter catalogue
+//!
+//! | counter | incremented | meaning |
+//! |---|---|---|
+//! | `jobs` | `Engine::submit` | jobs submitted through the front door |
+//! | `plan_hits` / `plan_misses` | `Machine::step`, folded on absorb | mnemonic-plan cache lookups (miss = one `LanePlan::resolve`) |
+//! | `shadow_hits` / `shadow_misses` | `Machine::decode_plane_cached`, folded on absorb | decoded-shadow plane lookups (hit = 512-byte copy instead of a decode sweep) |
+//! | `lut_warm8_events` / `lut_warm16_events` | `num::lut` `OnceLock` initialisers | cold table builds — **process-wide**, at most one per table set |
+//! | `verify_{skipped,clean,warned,denied}` | `Engine::enforce_report` + skip paths | verifier-gate outcome per submitted program/cell |
+//! | `executed` | folded on absorb | total executed instructions |
+//! | `converts` / `dots` | derived from `classes` | executed convert-class / dot-class instructions (the dynamic convert tax) |
+//! | `classes` | folded on absorb | executed instructions per resolved [`crate::sim::LanePlan`] class |
+//! | `mnemonics` | folded on absorb | full executed-mnemonic histogram (interned `&'static str` keys until the snapshot) |
+//! | `per_worker` | `Engine::run_tasks` | cumulative tasks completed per pool-worker slot |
+//! | `stages` | span recording | per-lifecycle-stage latency histograms (p50/p90/p99) |
+//!
+//! ## Overhead contract
+//!
+//! The per-instruction path pays **plain u64 increments on
+//! machine-local fields** ([`crate::sim::ExecCounters`]) — no atomics,
+//! no locks, no allocation, interned keys only. Shared state (the
+//! registry's atomics and maps) is touched once per *finished job*, when
+//! the engine folds the machine's counters in (`absorb`), and once per
+//! lifecycle stage for span recording. The `telemetry-off` cargo feature
+//! compiles every increment and span record to a no-op ([`enabled`]
+//! folds to `false` at compile time); the `benches/kernels.rs`
+//! telemetry-overhead group pins the on-vs-off delta on the packed-FMA
+//! hot loop (acceptance: within ~5%).
+//!
+//! ## Trace format
+//!
+//! With a trace path configured (`TAKUM_TRACE=<path>` or `--trace`,
+//! stamped into `Engine::tag()` as `trace=on`), the engine writes the
+//! span ring as Chrome-trace JSON when it is dropped: one complete
+//! (`"ph": "X"`) event per lifecycle stage per job — `submit` (umbrella),
+//! `verify`, `plan`, `decode`, `execute`, `encode` — sorted by
+//! timestamp, microsecond units, loadable in Perfetto or
+//! `chrome://tracing`. Stages a job kind fuses into its execution body
+//! appear as zero-duration markers so every job renders the full
+//! lifecycle. See [`spans`] for the exact event fields.
+
+pub mod metrics;
+pub mod snapshot;
+pub mod spans;
+
+pub use metrics::{Histogram, HistogramSnapshot, Registry, VerifyOutcome};
+pub use snapshot::{StageStats, TelemetrySnapshot, SNAPSHOT_SCHEMA, STATS_FILE};
+pub use spans::{Span, SpanRecorder, Stage};
+
+use std::time::Duration;
+
+/// Whether telemetry instrumentation is compiled in. A plain `cfg!` so
+/// every `if enabled() { … }` guard constant-folds: under the
+/// `telemetry-off` feature the counters and span records vanish from the
+/// generated code entirely (the overhead-bench comparison baseline).
+#[inline(always)]
+pub const fn enabled() -> bool {
+    cfg!(not(feature = "telemetry-off"))
+}
+
+/// Aggregate metrics of one Figure-2 conversion sweep: throughput and
+/// work distribution across the pool. Lived in `coordinator::metrics`
+/// before the telemetry layer existed; the coordinator re-exports it, and
+/// the per-worker counts it carries are also folded into the owning
+/// engine's [`Registry`] by `Engine::run_tasks`.
+#[derive(Debug, Clone, Default)]
+pub struct SweepMetrics {
+    pub matrices: usize,
+    pub values: u64,
+    pub conversions: u64,
+    pub wall: Duration,
+    /// Matrices processed per worker (load-balance check).
+    pub per_worker: Vec<usize>,
+    /// Batched PJRT calls issued (0 for the native engine).
+    pub pjrt_calls: u64,
+}
+
+impl SweepMetrics {
+    pub fn matrices_per_sec(&self) -> f64 {
+        self.matrices as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn conversions_per_sec(&self) -> f64 {
+        self.conversions as f64 / self.wall.as_secs_f64().max(1e-9)
+    }
+
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "sweep: {} matrices, {} values, {} conversions in {:.2?} \
+             ({:.0} matrices/s, {:.2} Mconv/s)\n",
+            self.matrices,
+            self.values,
+            self.conversions,
+            self.wall,
+            self.matrices_per_sec(),
+            self.conversions_per_sec() / 1e6,
+        ));
+        if !self.per_worker.is_empty() {
+            let min = self.per_worker.iter().min().unwrap();
+            let max = self.per_worker.iter().max().unwrap();
+            s.push_str(&format!(
+                "workers: {} (per-worker matrices min {min} / max {max})\n",
+                self.per_worker.len()
+            ));
+        }
+        if self.pjrt_calls > 0 {
+            s.push_str(&format!("pjrt batch calls: {}\n", self.pjrt_calls));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sweep_metrics_rates() {
+        let m = SweepMetrics {
+            matrices: 100,
+            values: 1000,
+            conversions: 4000, // values × formats
+            wall: Duration::from_secs(2),
+            per_worker: vec![50, 50],
+            pjrt_calls: 0,
+        };
+        assert!((m.matrices_per_sec() - 50.0).abs() < 1e-9);
+        assert!(m.render().contains("100 matrices"));
+    }
+}

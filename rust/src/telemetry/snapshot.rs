@@ -1,0 +1,366 @@
+//! [`TelemetrySnapshot`]: the point-in-time read surface of the metrics
+//! registry — what `Engine::telemetry()` returns, what the `stats` CLI
+//! prints, and what `Bencher::json` (schema v3) embeds. Serialises to a
+//! small stable JSON document (`schema: 1`) and parses back through
+//! [`crate::util::json`], so the `stats` subcommand can report on a
+//! snapshot persisted by an earlier process.
+
+use crate::util::json::{escape, Json};
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+
+/// Snapshot JSON schema version (the `"schema"` member).
+pub const SNAPSHOT_SCHEMA: u64 = 1;
+
+/// Default file the CLI persists the post-job snapshot to (and the
+/// `stats` subcommand reads from).
+pub const STATS_FILE: &str = "takum-stats.json";
+
+/// Latency statistics for one lifecycle stage (quantiles are upper
+/// bounds at the histogram's bucket resolution; see
+/// [`crate::telemetry::metrics::Histogram`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageStats {
+    pub stage: String,
+    pub count: u64,
+    pub p50_ns: u64,
+    pub p90_ns: u64,
+    pub p99_ns: u64,
+    pub total_ns: u64,
+}
+
+/// A point-in-time copy of an engine's telemetry registry. All counters
+/// are cumulative since the engine was built (LUT warm events are
+/// process-wide — the tables are `OnceLock`-owned, so warm events happen
+/// at most once per table set per process).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TelemetrySnapshot {
+    /// The engine-config tag (`Engine::tag()`) that produced this
+    /// snapshot.
+    pub engine: String,
+    /// Jobs submitted through `Engine::submit`.
+    pub jobs: u64,
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub shadow_hits: u64,
+    pub shadow_misses: u64,
+    pub lut_warm8_events: u64,
+    pub lut_warm16_events: u64,
+    pub verify_skipped: u64,
+    pub verify_clean: u64,
+    pub verify_warned: u64,
+    pub verify_denied: u64,
+    /// Total executed instructions folded from finished machines.
+    pub executed: u64,
+    /// Executed instructions whose resolved plan class is `convert` —
+    /// the dynamic convert-tax counter.
+    pub converts: u64,
+    /// Executed widening dot products (plan class `dot`).
+    pub dots: u64,
+    /// Executed instructions per resolved `LanePlan` class.
+    pub classes: BTreeMap<String, u64>,
+    /// Full executed-mnemonic histogram.
+    pub mnemonics: BTreeMap<String, u64>,
+    /// Cumulative tasks completed per pool-worker slot.
+    pub per_worker: Vec<u64>,
+    /// Per-lifecycle-stage latency stats, in `Stage::ALL` order.
+    pub stages: Vec<StageStats>,
+}
+
+fn hit_rate(hits: u64, misses: u64) -> Option<f64> {
+    let total = hits + misses;
+    (total > 0).then(|| hits as f64 / total as f64 * 100.0)
+}
+
+fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.2}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.2}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.1}µs", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+fn json_map(map: &BTreeMap<String, u64>, indent: &str) -> String {
+    if map.is_empty() {
+        return "{}".to_string();
+    }
+    let body = map
+        .iter()
+        .map(|(k, v)| format!("{indent}  \"{}\": {v}", escape(k)))
+        .collect::<Vec<_>>()
+        .join(",\n");
+    format!("{{\n{body}\n{indent}}}")
+}
+
+impl TelemetrySnapshot {
+    /// Plan-cache hit rate in percent (`None` before any lookup).
+    pub fn plan_hit_rate(&self) -> Option<f64> {
+        hit_rate(self.plan_hits, self.plan_misses)
+    }
+
+    /// Decoded-shadow hit rate in percent (`None` before any lookup).
+    pub fn shadow_hit_rate(&self) -> Option<f64> {
+        hit_rate(self.shadow_hits, self.shadow_misses)
+    }
+
+    /// Serialise as the stable snapshot JSON document (see the module
+    /// docs; `schema: 1`).
+    pub fn to_json(&self) -> String {
+        let counters: [(&str, u64); 14] = [
+            ("jobs", self.jobs),
+            ("plan_hits", self.plan_hits),
+            ("plan_misses", self.plan_misses),
+            ("shadow_hits", self.shadow_hits),
+            ("shadow_misses", self.shadow_misses),
+            ("lut_warm8_events", self.lut_warm8_events),
+            ("lut_warm16_events", self.lut_warm16_events),
+            ("verify_skipped", self.verify_skipped),
+            ("verify_clean", self.verify_clean),
+            ("verify_warned", self.verify_warned),
+            ("verify_denied", self.verify_denied),
+            ("executed", self.executed),
+            ("converts", self.converts),
+            ("dots", self.dots),
+        ];
+        let counter_body = counters
+            .iter()
+            .map(|(k, v)| format!("    \"{k}\": {v}"))
+            .collect::<Vec<_>>()
+            .join(",\n");
+        let per_worker =
+            self.per_worker.iter().map(u64::to_string).collect::<Vec<_>>().join(", ");
+        let stages = self
+            .stages
+            .iter()
+            .map(|s| {
+                format!(
+                    "    {{\"stage\": \"{}\", \"count\": {}, \"p50_ns\": {}, \"p90_ns\": {}, \
+                     \"p99_ns\": {}, \"total_ns\": {}}}",
+                    escape(&s.stage),
+                    s.count,
+                    s.p50_ns,
+                    s.p90_ns,
+                    s.p99_ns,
+                    s.total_ns
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(",\n");
+        format!(
+            "{{\n  \"schema\": {SNAPSHOT_SCHEMA},\n  \"engine\": \"{}\",\n  \
+             \"counters\": {{\n{counter_body}\n  }},\n  \
+             \"classes\": {},\n  \"mnemonics\": {},\n  \
+             \"per_worker\": [{per_worker}],\n  \"stages\": [\n{stages}\n  ]\n}}\n",
+            escape(&self.engine),
+            json_map(&self.classes, "  "),
+            json_map(&self.mnemonics, "  "),
+        )
+    }
+
+    /// Parse a snapshot document produced by [`TelemetrySnapshot::to_json`].
+    pub fn from_json(text: &str) -> Result<TelemetrySnapshot> {
+        let doc = Json::parse(text).context("telemetry snapshot is not valid JSON")?;
+        let schema = doc.u64_or_zero("schema");
+        ensure!(
+            schema == SNAPSHOT_SCHEMA,
+            "telemetry snapshot schema {schema} unsupported (expected {SNAPSHOT_SCHEMA})"
+        );
+        let counters = doc.get("counters").context("snapshot missing \"counters\"")?;
+        let read_map = |key: &str| -> BTreeMap<String, u64> {
+            doc.get(key)
+                .and_then(Json::as_obj)
+                .map(|members| {
+                    members
+                        .iter()
+                        .filter_map(|(k, v)| v.as_u64().map(|n| (k.clone(), n)))
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+        let stages = doc
+            .get("stages")
+            .and_then(Json::as_arr)
+            .map(|rows| {
+                rows.iter()
+                    .map(|r| StageStats {
+                        stage: r.get("stage").and_then(Json::as_str).unwrap_or("?").to_string(),
+                        count: r.u64_or_zero("count"),
+                        p50_ns: r.u64_or_zero("p50_ns"),
+                        p90_ns: r.u64_or_zero("p90_ns"),
+                        p99_ns: r.u64_or_zero("p99_ns"),
+                        total_ns: r.u64_or_zero("total_ns"),
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        Ok(TelemetrySnapshot {
+            engine: doc.get("engine").and_then(Json::as_str).unwrap_or("").to_string(),
+            jobs: counters.u64_or_zero("jobs"),
+            plan_hits: counters.u64_or_zero("plan_hits"),
+            plan_misses: counters.u64_or_zero("plan_misses"),
+            shadow_hits: counters.u64_or_zero("shadow_hits"),
+            shadow_misses: counters.u64_or_zero("shadow_misses"),
+            lut_warm8_events: counters.u64_or_zero("lut_warm8_events"),
+            lut_warm16_events: counters.u64_or_zero("lut_warm16_events"),
+            verify_skipped: counters.u64_or_zero("verify_skipped"),
+            verify_clean: counters.u64_or_zero("verify_clean"),
+            verify_warned: counters.u64_or_zero("verify_warned"),
+            verify_denied: counters.u64_or_zero("verify_denied"),
+            executed: counters.u64_or_zero("executed"),
+            converts: counters.u64_or_zero("converts"),
+            dots: counters.u64_or_zero("dots"),
+            classes: read_map("classes"),
+            mnemonics: read_map("mnemonics"),
+            per_worker: doc
+                .get("per_worker")
+                .and_then(Json::as_arr)
+                .map(|a| a.iter().filter_map(Json::as_u64).collect())
+                .unwrap_or_default(),
+            stages,
+        })
+    }
+
+    /// Human-readable rendering (the `stats` subcommand's default output).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("telemetry snapshot ({})\n", self.engine));
+        out.push_str(&format!("  jobs submitted      {}\n", self.jobs));
+        let rate = |r: Option<f64>| r.map(|p| format!("{p:.1}%")).unwrap_or_else(|| "-".into());
+        out.push_str(&format!(
+            "  plan cache          {} hits / {} misses ({} hit rate)\n",
+            self.plan_hits,
+            self.plan_misses,
+            rate(self.plan_hit_rate())
+        ));
+        out.push_str(&format!(
+            "  decoded shadow      {} hits / {} misses ({} hit rate)\n",
+            self.shadow_hits,
+            self.shadow_misses,
+            rate(self.shadow_hit_rate())
+        ));
+        out.push_str(&format!(
+            "  lut warm events     8-bit: {}  16-bit: {} (process-wide)\n",
+            self.lut_warm8_events, self.lut_warm16_events
+        ));
+        out.push_str(&format!(
+            "  verifier gate       clean: {}  warned: {}  denied: {}  skipped: {}\n",
+            self.verify_clean, self.verify_warned, self.verify_denied, self.verify_skipped
+        ));
+        out.push_str(&format!(
+            "  executed            {} instructions (converts: {}, dots: {})\n",
+            self.executed, self.converts, self.dots
+        ));
+        if !self.classes.is_empty() {
+            out.push_str("  per class           ");
+            let cells = self
+                .classes
+                .iter()
+                .map(|(k, v)| format!("{k}={v}"))
+                .collect::<Vec<_>>()
+                .join("  ");
+            out.push_str(&cells);
+            out.push('\n');
+        }
+        if !self.per_worker.is_empty() {
+            out.push_str(&format!(
+                "  pool tasks/worker   {:?}\n",
+                self.per_worker
+            ));
+        }
+        let timed: Vec<&StageStats> = self.stages.iter().filter(|s| s.count > 0).collect();
+        if !timed.is_empty() {
+            out.push_str("  stage latency       (count, p50 / p90 / p99, ≤ bucket resolution)\n");
+            for s in timed {
+                out.push_str(&format!(
+                    "    {:<8} n={:<6} {} / {} / {}\n",
+                    s.stage,
+                    s.count,
+                    fmt_ns(s.p50_ns),
+                    fmt_ns(s.p90_ns),
+                    fmt_ns(s.p99_ns)
+                ));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TelemetrySnapshot {
+        TelemetrySnapshot {
+            engine: "backend=scalar;codec=lut;workers=2;verify=off;trace=off".to_string(),
+            jobs: 3,
+            plan_hits: 120,
+            plan_misses: 8,
+            shadow_hits: 40,
+            shadow_misses: 10,
+            lut_warm8_events: 1,
+            lut_warm16_events: 1,
+            verify_skipped: 2,
+            verify_clean: 1,
+            verify_warned: 0,
+            verify_denied: 0,
+            executed: 128,
+            converts: 12,
+            dots: 4,
+            classes: [("convert".to_string(), 12), ("dot".to_string(), 4), ("fp".to_string(), 112)]
+                .into_iter()
+                .collect(),
+            mnemonics: [("VADDPT8".to_string(), 64), ("VCVTPH2PSX".to_string(), 12)]
+                .into_iter()
+                .collect(),
+            per_worker: vec![5, 4],
+            stages: vec![StageStats {
+                stage: "submit".to_string(),
+                count: 3,
+                p50_ns: 1_500,
+                p90_ns: 2_000,
+                p99_ns: 2_000,
+                total_ns: 5_000,
+            }],
+        }
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let snap = sample();
+        let parsed = TelemetrySnapshot::from_json(&snap.to_json()).unwrap();
+        assert_eq!(parsed, snap);
+    }
+
+    #[test]
+    fn from_json_rejects_garbage_and_wrong_schema() {
+        assert!(TelemetrySnapshot::from_json("not json").is_err());
+        let e = TelemetrySnapshot::from_json("{\"schema\": 99, \"counters\": {}}")
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("schema 99"), "{e}");
+    }
+
+    #[test]
+    fn render_mentions_the_headline_counters() {
+        let txt = sample().render();
+        assert!(txt.contains("plan cache"), "{txt}");
+        assert!(txt.contains("93.8% hit rate"), "{txt}"); // 120/128
+        assert!(txt.contains("decoded shadow"), "{txt}");
+        assert!(txt.contains("converts: 12"), "{txt}");
+        assert!(txt.contains("denied: 0"), "{txt}");
+        assert!(txt.contains("submit"), "{txt}");
+    }
+
+    #[test]
+    fn hit_rate_is_none_before_any_lookup() {
+        let mut snap = sample();
+        snap.plan_hits = 0;
+        snap.plan_misses = 0;
+        assert_eq!(snap.plan_hit_rate(), None);
+        assert!(snap.render().contains("(- hit rate)"));
+    }
+}

@@ -52,6 +52,10 @@ pub struct Bencher {
     samples: usize,
     results: Vec<Measurement>,
     group: String,
+    /// Pre-rendered telemetry-snapshot JSON (see
+    /// [`crate::telemetry::TelemetrySnapshot::to_json`]) embedded in the
+    /// artifact under the `telemetry` key; `null` when never set.
+    telemetry: Option<String>,
 }
 
 impl Default for Bencher {
@@ -71,7 +75,16 @@ impl Bencher {
             samples: if quick { 3 } else { 7 },
             results: Vec::new(),
             group: String::new(),
+            telemetry: None,
         }
+    }
+
+    /// Attach a telemetry-snapshot JSON document (the bench engine's
+    /// `Engine::telemetry().to_json()`) to be embedded in the artifact.
+    /// Call once, right before [`Bencher::write_json`], so the snapshot
+    /// covers the full run.
+    pub fn set_telemetry(&mut self, snapshot_json: String) {
+        self.telemetry = Some(snapshot_json);
     }
 
     /// Start a named group (purely cosmetic, printed as a header).
@@ -162,9 +175,13 @@ impl Bencher {
     /// (hand-rolled — the offline image has no `serde`). The schema is
     /// flat and versioned so perf-trajectory tooling can diff runs across
     /// PRs and CI matrix legs:
-    /// `{schema_version, bench, engine_config, results: [{group, name,
-    /// median_ns, mean_ns, stddev_ns, iters, elements,
-    /// throughput_elem_per_s}]}`. `engine_config` is the `Engine::tag()`
+    /// `{schema_version, bench, engine_config, telemetry, results:
+    /// [{group, name, median_ns, mean_ns, stddev_ns, iters, elements,
+    /// throughput_elem_per_s}]}`. Schema v3 added the `telemetry`
+    /// member: the bench engine's counter snapshot
+    /// ([`crate::telemetry::TelemetrySnapshot`]) when the bench attached
+    /// one via [`Bencher::set_telemetry`], else `null` — trend tooling
+    /// accepts both v2 (no key) and v3. `engine_config` is the `Engine::tag()`
     /// of the bench process's **default** execution context
     /// (`backend=…;codec=…;workers=…`, the env-derived engine), so
     /// per-backend CI artifacts are self-describing; comparison groups
@@ -178,9 +195,14 @@ impl Bencher {
         }
         let mut out = String::new();
         out.push_str("{\n");
-        out.push_str("  \"schema_version\": 2,\n");
+        out.push_str("  \"schema_version\": 3,\n");
         out.push_str(&format!("  \"bench\": \"{}\",\n", esc(bench)));
         out.push_str(&format!("  \"engine_config\": \"{}\",\n", esc(engine_config)));
+        match &self.telemetry {
+            // Embedded verbatim: the snapshot is already a JSON object.
+            Some(snap) => out.push_str(&format!("  \"telemetry\": {},\n", snap.trim_end())),
+            None => out.push_str("  \"telemetry\": null,\n"),
+        }
         out.push_str("  \"results\": [\n");
         for (i, m) in self.results.iter().enumerate() {
             let elements = m
@@ -256,12 +278,14 @@ mod tests {
         b.bench_with_elements("with-elems", 64, || std::hint::black_box(1u64 + 1));
         b.bench("no-elems", || std::hint::black_box(2u64 * 3));
         let j = b.json("unit", "backend=scalar;codec=lut;workers=2");
-        assert!(j.contains("\"schema_version\": 2"), "{j}");
+        assert!(j.contains("\"schema_version\": 3"), "{j}");
         assert!(j.contains("\"bench\": \"unit\""), "{j}");
         assert!(
             j.contains("\"engine_config\": \"backend=scalar;codec=lut;workers=2\""),
             "{j}"
         );
+        // No snapshot attached ⇒ explicit null (v3 key is always present).
+        assert!(j.contains("\"telemetry\": null"), "{j}");
         assert!(j.contains("\"group\": \"g \\\"one\\\"\""), "{j}");
         assert!(j.contains("\"name\": \"with-elems\""), "{j}");
         assert!(j.contains("\"elements\": 64"), "{j}");
@@ -270,5 +294,23 @@ mod tests {
         // Two records, comma-separated (valid JSON shape).
         assert_eq!(j.matches("\"median_ns\"").count(), 2);
         assert!(j.trim_end().ends_with('}'));
+    }
+
+    /// An attached telemetry snapshot is embedded as a JSON object (not a
+    /// string) and the whole artifact still parses.
+    #[test]
+    fn json_embeds_telemetry_object() {
+        std::env::set_var("TAKUM_BENCH_QUICK", "1");
+        let mut b = Bencher::new();
+        b.bench("x", || std::hint::black_box(1u64 + 1));
+        b.set_telemetry("{\"schema\": 1, \"counters\": {\"jobs\": 4}}".to_string());
+        let j = b.json("unit", "backend=scalar");
+        let doc = crate::util::json::Json::parse(&j).expect("artifact must stay valid JSON");
+        let telem = doc.get("telemetry").expect("v3 carries the telemetry key");
+        assert_eq!(telem.get("schema").and_then(|v| v.as_u64()), Some(1));
+        assert_eq!(
+            telem.get("counters").and_then(|c| c.get("jobs")).and_then(|v| v.as_u64()),
+            Some(4)
+        );
     }
 }

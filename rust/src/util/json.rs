@@ -1,0 +1,326 @@
+//! A minimal JSON reader for the crate's own machine-readable artifacts
+//! (the telemetry snapshot file and the bench JSON). The offline build
+//! has no `serde`; the writers are hand-rolled (`util::bench`,
+//! `telemetry`), so the reader only needs to cover the subset those
+//! writers emit: objects, arrays, strings with `\"`/`\\`/`\n`-style
+//! escapes, numbers, booleans and null. It is a strict recursive-descent
+//! parser — malformed input is an error, never a silent partial value.
+
+use anyhow::{bail, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    /// Insertion-ordered key/value pairs (duplicate keys keep the last).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Parse a complete JSON document; trailing non-whitespace is an
+    /// error.
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value()?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing data at byte {} of JSON document", p.i);
+        }
+        Ok(v)
+    }
+
+    /// Object member lookup (last occurrence wins, matching the usual
+    /// duplicate-key semantics).
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(members) => members.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Numeric member as an unsigned counter (negative / fractional
+    /// values are `None` — counters are integers by construction).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    pub fn as_obj(&self) -> Option<&[(String, Json)]> {
+        match self {
+            Json::Obj(members) => Some(members),
+            _ => None,
+        }
+    }
+
+    /// Convenience: `get(key)` then [`Json::as_u64`], defaulting to 0
+    /// when the member is missing (absent counter == never incremented).
+    pub fn u64_or_zero(&self, key: &str) -> u64 {
+        self.get(key).and_then(Json::as_u64).unwrap_or(0)
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn ws(&mut self) {
+        while matches!(self.b.get(self.i), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.i += 1;
+        }
+    }
+
+    fn expect(&mut self, c: u8) -> Result<()> {
+        if self.b.get(self.i) == Some(&c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at byte {} of JSON document", c as char, self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.b.get(self.i) {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.keyword("true", Json::Bool(true)),
+            Some(b'f') => self.keyword("false", Json::Bool(false)),
+            Some(b'n') => self.keyword("null", Json::Null),
+            Some(c) if c.is_ascii_digit() || *c == b'-' => self.number(),
+            _ => bail!("unexpected byte at {} of JSON document", self.i),
+        }
+    }
+
+    fn keyword(&mut self, word: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            bail!("malformed keyword at byte {} of JSON document", self.i)
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while matches!(
+            self.b.get(self.i),
+            Some(b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        ) {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.b[start..self.i]).expect("ascii number bytes");
+        match text.parse::<f64>() {
+            Ok(n) => Ok(Json::Num(n)),
+            Err(_) => bail!("malformed number {text:?} at byte {start} of JSON document"),
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.b.get(self.i) {
+                None => bail!("unterminated string in JSON document"),
+                Some(b'"') => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.b.get(self.i) {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b'b') => out.push('\u{8}'),
+                        Some(b'f') => out.push('\u{c}'),
+                        Some(b'u') => {
+                            let hex = self
+                                .b
+                                .get(self.i + 1..self.i + 5)
+                                .and_then(|h| std::str::from_utf8(h).ok())
+                                .and_then(|h| u32::from_str_radix(h, 16).ok());
+                            match hex.and_then(char::from_u32) {
+                                Some(c) => {
+                                    out.push(c);
+                                    self.i += 4;
+                                }
+                                None => bail!(
+                                    "malformed \\u escape at byte {} of JSON document",
+                                    self.i
+                                ),
+                            }
+                        }
+                        _ => bail!("malformed escape at byte {} of JSON document", self.i),
+                    }
+                    self.i += 1;
+                }
+                Some(_) => {
+                    // Copy the whole unescaped run in one slice: the input
+                    // is a &str, so byte runs between quotes and escapes
+                    // are valid UTF-8 by construction.
+                    let start = self.i;
+                    while self.i < self.b.len() && !matches!(self.b[self.i], b'"' | b'\\') {
+                        self.i += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.b[start..self.i]).expect("input is valid UTF-8"),
+                    );
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.ws();
+            items.push(self.value()?);
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => bail!("expected ',' or ']' at byte {} of JSON document", self.i),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut members = Vec::new();
+        self.ws();
+        if self.b.get(self.i) == Some(&b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(members));
+        }
+        loop {
+            self.ws();
+            let key = self.string()?;
+            self.ws();
+            self.expect(b':')?;
+            self.ws();
+            let value = self.value()?;
+            members.push((key, value));
+            self.ws();
+            match self.b.get(self.i) {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(members));
+                }
+                _ => bail!("expected ',' or '}}' at byte {} of JSON document", self.i),
+            }
+        }
+    }
+}
+
+/// Escape a string for embedding in the crate's hand-rolled JSON writers
+/// (shared by `util::bench` and `telemetry`).
+pub fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_writer_subset() {
+        let doc = r#"{
+            "schema": 3, "tag": "backend=scalar;codec=lut",
+            "rows": [{"name": "dot t8", "median_ns": 123.5}, {"name": "x", "median_ns": 1e3}],
+            "empty": [], "none": null, "on": true, "off": false,
+            "nested": {"a": {"b": [1, 2, 3]}}
+        }"#;
+        let v = Json::parse(doc).unwrap();
+        assert_eq!(v.get("schema").and_then(Json::as_u64), Some(3));
+        assert_eq!(v.get("tag").and_then(Json::as_str), Some("backend=scalar;codec=lut"));
+        let rows = v.get("rows").and_then(Json::as_arr).unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("median_ns").and_then(Json::as_f64), Some(123.5));
+        assert_eq!(rows[1].get("median_ns").and_then(Json::as_f64), Some(1000.0));
+        assert_eq!(v.get("none"), Some(&Json::Null));
+        assert_eq!(v.get("on"), Some(&Json::Bool(true)));
+        let b = v.get("nested").unwrap().get("a").unwrap().get("b").unwrap();
+        assert_eq!(b.as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn escape_round_trips_through_parse() {
+        let raw = "tab\there \"quote\" back\\slash\nnewline";
+        let doc = format!("{{\"s\": \"{}\"}}", escape(raw));
+        let v = Json::parse(&doc).unwrap();
+        assert_eq!(v.get("s").and_then(Json::as_str), Some(raw));
+    }
+
+    #[test]
+    fn rejects_malformed_documents() {
+        for bad in ["{", "[1, 2", "{\"a\" 1}", "{\"a\": 1} extra", "nul", "+-3"] {
+            assert!(Json::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn u64_or_zero_defaults_missing_members() {
+        let v = Json::parse(r#"{"hits": 7, "frac": 1.5, "neg": -2}"#).unwrap();
+        assert_eq!(v.u64_or_zero("hits"), 7);
+        assert_eq!(v.u64_or_zero("missing"), 0);
+        assert_eq!(v.get("frac").and_then(Json::as_u64), None);
+        assert_eq!(v.get("neg").and_then(Json::as_u64), None);
+    }
+}

@@ -5,3 +5,4 @@
 pub mod rng;
 pub mod proptest;
 pub mod bench;
+pub mod json;

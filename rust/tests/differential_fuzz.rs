@@ -453,6 +453,62 @@ fn static_verifier_mix_matches_dynamic_execution() {
     }
 }
 
+/// Telemetry differential: after folding a hand-driven machine into the
+/// engine (`Engine::absorb`), the telemetry snapshot's per-mnemonic
+/// histogram must equal `Machine::counts` exactly, the class
+/// decomposition must account for every executed instruction, and — like
+/// every other observable — the counters must be invariant across
+/// `Backend × CodecMode` (telemetry is a read-out, never an execution
+/// axis).
+#[cfg(not(feature = "telemetry-off"))]
+#[test]
+fn telemetry_counters_match_machine_counts() {
+    use std::collections::BTreeMap;
+    for &seed in &SEEDS {
+        let mut reference: Option<BTreeMap<String, u64>> = None;
+        for (mode, backend) in CONFIGS {
+            let eng = engine_for(mode, backend);
+            let m = case_machine_run(&eng, seed);
+            let expect: BTreeMap<String, u64> =
+                m.counts.iter().map(|(&mn, &c)| (mn.to_string(), c)).collect();
+            eng.absorb(&m);
+            let snap = eng.telemetry();
+            assert_eq!(
+                snap.mnemonics, expect,
+                "seed={seed:#x} {mode:?}/{backend:?}: snapshot histogram != machine counts"
+            );
+            assert_eq!(snap.executed, m.executed, "seed={seed:#x} {mode:?}/{backend:?}");
+            assert_eq!(
+                snap.classes.values().sum::<u64>(),
+                m.executed,
+                "seed={seed:#x} {mode:?}/{backend:?}: class decomposition must be total"
+            );
+            // Absorbing again must double every fold-path counter, not
+            // drop or duplicate selectively.
+            eng.absorb(&m);
+            assert_eq!(eng.telemetry().executed, 2 * m.executed, "seed={seed:#x}");
+            match &reference {
+                None => reference = Some(expect),
+                Some(r) => assert_eq!(
+                    r, &expect,
+                    "TELEMETRY MISMATCH seed={seed:#x} {mode:?}/{backend:?}: counters must be \
+                     invariant across backend × codec configs"
+                ),
+            }
+        }
+    }
+}
+
+/// Run one corpus case on a fresh engine-built machine (shared helper of
+/// the telemetry differential above).
+#[cfg(not(feature = "telemetry-off"))]
+fn case_machine_run(eng: &Engine, seed: u64) -> Machine {
+    let case = generate(seed, false);
+    let mut m = case.machine(eng);
+    m.run(&case.prog).unwrap_or_else(|e| panic!("seed={seed:#x}: run failed: {e}"));
+    m
+}
+
 /// Suite-metrics differential: the kernel suite's metrics (relative
 /// error bit patterns, executed/dp/convert counts, full mnemonic
 /// histograms) are byte-identical across all three backends × both codec

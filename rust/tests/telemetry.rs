@@ -1,0 +1,170 @@
+//! Integration tests for the engine-wide telemetry layer: counters are
+//! deterministic functions of the submitted work, the span recorder
+//! emits one span per lifecycle stage per job regardless of job kind,
+//! the Chrome-trace export is well-formed, and snapshots survive the
+//! persist/parse round trip the `stats` subcommand depends on.
+//!
+//! The whole file is gated on telemetry being compiled in: under
+//! `--features telemetry-off` every counter is a no-op by design.
+#![cfg(not(feature = "telemetry-off"))]
+
+use takum_avx10::engine::{EngineConfig, GemmJob, Job};
+use takum_avx10::kernels::{Kernel, KernelSpec};
+use takum_avx10::sim::{Instruction, Operand, Program};
+use takum_avx10::telemetry::{Stage, TelemetrySnapshot};
+use takum_avx10::util::json::Json;
+use takum_avx10::verify::Externals;
+
+fn kernel_spec() -> KernelSpec {
+    KernelSpec { kernel: Kernel::Softmax, format: "e4m3", n: 128, seed: 7 }
+}
+
+/// Zero out the wall-clock-dependent parts of a snapshot so the
+/// remainder can be compared for exact equality across runs.
+fn counters_only(mut s: TelemetrySnapshot) -> TelemetrySnapshot {
+    s.stages.clear();
+    s
+}
+
+/// Telemetry counters are exact, reproducible functions of
+/// `(kernel, format, n, seed)` — two fresh engines running the same job
+/// produce identical counter snapshots, and the snapshot agrees with the
+/// job's own result metrics.
+#[test]
+fn counters_are_deterministic_and_match_the_result() {
+    let run = || {
+        let eng = EngineConfig::new().workers(2).build().unwrap();
+        let r = eng.submit(Job::Kernel(kernel_spec())).unwrap().kernel();
+        (eng.telemetry(), r)
+    };
+    let (snap_a, result) = run();
+    let (snap_b, _) = run();
+    assert_eq!(
+        counters_only(snap_a.clone()),
+        counters_only(snap_b),
+        "same job on a fresh engine must produce identical counters"
+    );
+
+    assert_eq!(snap_a.jobs, 1);
+    // One kernel job absorbs exactly one machine: the snapshot's
+    // executed-mnemonic histogram IS the result's.
+    assert_eq!(snap_a.executed, result.executed);
+    assert_eq!(
+        snap_a.mnemonics,
+        result.counts,
+        "snapshot histogram must match the kernel result's"
+    );
+    // The e4m3 pipeline pays storage↔compute converts; the class
+    // decomposition counts every Convert-plan execution, which includes
+    // the result's cvt_in/cvt_out subset.
+    let class_converts = snap_a.classes.get("convert").copied().unwrap_or(0);
+    assert!(
+        class_converts >= result.convert_instructions && result.convert_instructions > 0,
+        "convert class {class_converts} must cover the result's {}",
+        result.convert_instructions
+    );
+    assert_eq!(snap_a.converts, class_converts, "headline converts = class counter");
+    // Hot-path cache counters: repeated mnemonics hit the plan cache,
+    // repeated tile reads hit the decoded shadow.
+    assert!(snap_a.plan_hits > 0, "{snap_a:?}");
+    assert!(snap_a.shadow_hits > 0, "{snap_a:?}");
+    // Policy Off ⇒ the cell counts one skipped verify outcome.
+    assert_eq!(
+        (snap_a.verify_skipped, snap_a.verify_clean, snap_a.verify_denied),
+        (1, 0, 0),
+        "{snap_a:?}"
+    );
+}
+
+/// Every job kind emits exactly one span per lifecycle stage (fused
+/// stages appear as zero-duration markers), so the per-stage counts all
+/// equal the number of submitted jobs.
+#[test]
+fn every_job_kind_records_one_span_per_stage() {
+    let eng = EngineConfig::new().workers(1).build().unwrap();
+    eng.submit(Job::Kernel(kernel_spec())).unwrap();
+    eng.submit(Job::Gemm(GemmJob::new(16, "t8"))).unwrap();
+    let mut prog = Program::default();
+    prog.push(Instruction::new(
+        "VADDPT8",
+        Operand::Vreg(2),
+        vec![Operand::Vreg(0), Operand::Vreg(1)],
+    ));
+    eng.submit(Job::Program { prog, externals: Externals::new() }).unwrap();
+
+    let snap = eng.telemetry();
+    assert_eq!(snap.jobs, 3);
+    assert_eq!(snap.stages.len(), Stage::ALL.len());
+    for stage in &snap.stages {
+        assert_eq!(
+            stage.count, 3,
+            "stage {} must have one span per submitted job: {snap:?}",
+            stage.stage
+        );
+    }
+}
+
+/// The Chrome-trace export of a real engine run: valid JSON, one
+/// complete-phase event per stage per job, timestamps sorted.
+#[test]
+fn chrome_trace_covers_the_lifecycle_per_job() {
+    let eng = EngineConfig::new().workers(1).build().unwrap();
+    let jobs = 2usize;
+    for seed in 0..jobs as u64 {
+        let spec = KernelSpec { seed, ..kernel_spec() };
+        eng.submit(Job::Kernel(spec)).unwrap();
+    }
+    let trace = eng.chrome_trace();
+    let doc = Json::parse(&trace).expect("chrome trace must be valid JSON");
+    let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents");
+    assert_eq!(events.len(), jobs * Stage::ALL.len(), "one event per stage per job");
+    let mut last_ts = f64::MIN;
+    for e in events {
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(e.get("cat").and_then(Json::as_str), Some("kernel"));
+        let ts = e.get("ts").and_then(Json::as_f64).expect("ts");
+        assert!(ts >= last_ts, "trace events must be sorted by ts");
+        last_ts = ts;
+    }
+    for st in Stage::ALL {
+        let per_stage = events
+            .iter()
+            .filter(|e| e.get("name").and_then(Json::as_str) == Some(st.name()))
+            .count();
+        assert_eq!(per_stage, jobs, "stage {} once per job", st.name());
+    }
+}
+
+/// The cross-process flow behind `takum-avx10 stats`: a snapshot written
+/// to disk parses back into an identical value.
+#[test]
+fn snapshot_survives_the_persist_round_trip() {
+    let eng = EngineConfig::new().workers(2).build().unwrap();
+    eng.submit(Job::Kernel(kernel_spec())).unwrap();
+    let snap = eng.telemetry();
+
+    let dir = std::env::temp_dir().join("takum-telemetry-roundtrip-test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("takum-stats.json");
+    std::fs::write(&path, snap.to_json()).unwrap();
+    let parsed =
+        TelemetrySnapshot::from_json(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(parsed, snap);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Suite jobs exercise the fold paths the single-cell test cannot: many
+/// absorbed machines accumulate, and the shared plan cache turns later
+/// cells' first lookups into hits (the hit rate climbs with reuse).
+#[test]
+fn suite_jobs_accumulate_across_cells() {
+    let eng = EngineConfig::new().workers(1).build().unwrap();
+    let results = eng.submit(Job::Suite { n: 64, seed: Some(3) }).unwrap().suite();
+    let snap = eng.telemetry();
+    assert_eq!(snap.jobs, 1);
+    let total: u64 = results.iter().map(|r| r.executed).sum();
+    assert_eq!(snap.executed, total, "suite snapshot sums every cell's machine");
+    // One verify outcome per cell (policy Off ⇒ all skipped).
+    assert_eq!(snap.verify_skipped, results.len() as u64, "{snap:?}");
+    assert!(snap.plan_hit_rate().unwrap_or(0.0) > 50.0, "plan reuse must dominate: {snap:?}");
+}
