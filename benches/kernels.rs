@@ -145,6 +145,43 @@ fn main() {
         }
     }
 
+    // SIMD tier cascade (`crate::sim::simd`): the same whole-register
+    // decode plane forced through every tier this host supports, plus a
+    // row that re-resolves the dispatch table on every call. The forced
+    // rows chart the cascade (avx512 ≥ avx2 ≥ sse2 ≥ scalar throughput);
+    // the re-resolve row bounds the *entire* tier-resolution cost — the
+    // hot path pays strictly less (one indirect call through a table
+    // resolved at engine build), so a gap between the best forced row
+    // and `[resolve-per-call]` beyond noise means per-plane detection
+    // crept back into a kernel.
+    b.group("simd tier dispatch: whole-register takum8 decode plane");
+    {
+        use takum_avx10::sim::{LaneCodec, LaneType, Tier, VecReg};
+        let mut reg = VecReg::ZERO;
+        for (i, w) in reg.words.iter_mut().enumerate() {
+            *w = 0x0123_4567_89AB_CDEFu64.rotate_left(i as u32 * 7);
+        }
+        let mut out = [0.0f64; 64];
+        for tier in Tier::supported() {
+            let codec =
+                LaneCodec::resolve_tiered(LaneType::Takum(8), CodecMode::Lut, Backend::Vector, tier);
+            b.bench_with_elements(&format!("decode w8 [simd={}]", tier.name()), 64, || {
+                codec.decode_plane(&reg, 8, 64, &mut out);
+                out[0]
+            });
+        }
+        b.bench_with_elements("decode w8 [resolve-per-call]", 64, || {
+            let codec = LaneCodec::resolve_tiered(
+                LaneType::Takum(8),
+                CodecMode::Lut,
+                Backend::Vector,
+                Tier::detect(),
+            );
+            codec.decode_plane(&reg, 8, 64, &mut out);
+            out[0]
+        });
+    }
+
     b.group("parallel kernel sweep (full suite, sizes 64+128)");
     for workers in [1usize, 2, 4] {
         let weng = EngineConfig::from_env().workers(workers).build().expect("engine");

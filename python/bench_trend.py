@@ -13,6 +13,12 @@ a non-default engine config carry it in the measurement *name* (the
 suffixes), so the key is stable across runs even though the file-level
 `engine_config` tag varies by CI matrix leg.
 
+Rows are never compared across different resolved SIMD tiers: when the
+file-level `engine_config` tags disagree on their `simd=<tier>` token
+(runner generation changed, forced-tier leg repointed), the file prints
+a tier-changed notice and is skipped — cross-tier timing deltas are
+by-design, not regressions.
+
 Missing, corrupt, or unsupported-schema baselines are reported and
 skipped — a first run (no baseline yet) must never stack-trace. The
 telemetry diff is purely informational: a plan/shadow hit-rate drop of
@@ -39,10 +45,12 @@ HIT_RATE_DROP_POINTS = 5.0
 
 
 def load(path):
-    """Parse one bench JSON file into ({(group, name): median_ns}, telemetry).
+    """Parse one bench JSON file into ({(group, name): median_ns}, telemetry, simd).
 
     `telemetry` is the embedded snapshot object for schema-v3 files that
-    attached one, else None (schema v2 has no such key).
+    attached one, else None (schema v2 has no such key). `simd` is the
+    resolved SIMD tier extracted from the file-level `engine_config` tag
+    (the `simd=<tier>` token), or None for pre-tier files.
     """
     doc = json.loads(Path(path).read_text())
     schema = doc.get("schema_version")
@@ -53,7 +61,21 @@ def load(path):
     rows = {}
     for r in doc.get("results", []):
         rows[(r.get("group", ""), r["name"])] = float(r["median_ns"])
-    return rows, doc.get("telemetry")
+    return rows, doc.get("telemetry"), engine_simd(doc.get("engine_config"))
+
+
+def engine_simd(tag):
+    """The `simd=<tier>` token of an `engine_config` tag, or None.
+
+    Pre-tier artifacts (and v2 files) have no such token; they compare
+    freely, as before the tier axis existed.
+    """
+    if not isinstance(tag, str):
+        return None
+    for token in tag.split(";"):
+        if token.startswith("simd="):
+            return token[len("simd="):]
+    return None
 
 
 def load_or_none(path, label):
@@ -135,8 +157,19 @@ def main():
         cur = load_or_none(cur_file, "current run")
         if cur is None:
             continue
-        base_rows, base_telem = base
-        cur_rows, cur_telem = cur
+        base_rows, base_telem, base_simd = base
+        cur_rows, cur_telem, cur_simd = cur
+        if base_simd != cur_simd and base_simd is not None and cur_simd is not None:
+            # A different SIMD tier served the two runs (new CI runner
+            # generation, forced-tier leg renamed, …). Timings across
+            # tiers differ by design — diffing them reports phantom
+            # regressions, so this file is a notice, never a comparison.
+            print(
+                f"\n`{cur_file.name}`: SIMD tier changed "
+                f"({base_simd} → {cur_simd}) — timings not comparable "
+                "across tiers, file skipped"
+            )
+            continue
         flagged = []
         for key in sorted(cur_rows):
             if key not in base_rows or base_rows[key] <= 0.0:

@@ -9,25 +9,27 @@
 //!
 //! * the CLI front end starts from [`EngineConfig::from_env`] (env or
 //!   default) and overrides with [`EngineConfig::try_backend`] /
-//!   [`EngineConfig::try_codec`] / [`EngineConfig::workers`] only when
-//!   the flag was given;
-//! * `TAKUM_BACKEND` / `TAKUM_CODEC` / `TAKUM_VERIFY` are read **here
-//!   and nowhere else** ([`EngineConfig::from_env`]); a malformed value
-//!   warns and falls back to the default (`scalar` / `lut` / `off`) via
-//!   the pure, unit-testable [`Backend::parse_env`] /
-//!   [`CodecMode::parse_env`] / [`crate::verify::Verify::parse_env`];
+//!   [`EngineConfig::try_codec`] / [`EngineConfig::try_simd`] /
+//!   [`EngineConfig::workers`] only when the flag was given;
+//! * `TAKUM_BACKEND` / `TAKUM_CODEC` / `TAKUM_SIMD` / `TAKUM_VERIFY` are
+//!   read **here and nowhere else** ([`EngineConfig::from_env`]); a
+//!   malformed value warns and falls back to the default (`scalar` /
+//!   `lut` / auto-detect / `off`) via the pure, unit-testable
+//!   [`Backend::parse_env`] / [`CodecMode::parse_env`] /
+//!   [`Tier::parse_env`] / [`crate::verify::Verify::parse_env`];
 //! * the built-in defaults are [`Backend::Scalar`], [`CodecMode::Lut`],
-//!   one worker per available core, [`WarmPolicy::Auto`], seed `0xBEEF`
-//!   and [`crate::verify::Verify::Off`].
+//!   auto-detected SIMD tier, one worker per available core,
+//!   [`WarmPolicy::Auto`], seed `0xBEEF` and
+//!   [`crate::verify::Verify::Off`].
 //!
-//! Default-constructed [`crate::sim::Machine`]s resolve their codec mode
-//! and backend through [`process_default`] (a cached
-//! [`EngineConfig::from_env`]), so the CI backend matrix still forces
-//! every default machine through `TAKUM_BACKEND`/`TAKUM_CODEC` without a
-//! second env-parsing site existing anywhere.
+//! Default-constructed [`crate::sim::Machine`]s resolve their codec
+//! mode, backend and SIMD tier through [`process_default`] (a cached
+//! [`EngineConfig::from_env`]), so the CI matrix still forces every
+//! default machine through `TAKUM_BACKEND`/`TAKUM_CODEC`/`TAKUM_SIMD`
+//! without a second env-parsing site existing anywhere.
 
 use super::Engine;
-use crate::sim::{Backend, CodecMode};
+use crate::sim::{Backend, CodecMode, Tier};
 use crate::verify::Verify;
 use anyhow::Result;
 use std::sync::OnceLock;
@@ -58,6 +60,11 @@ pub enum WarmPolicy {
 pub struct EngineConfig {
     pub(crate) backend: Backend,
     pub(crate) mode: CodecMode,
+    /// Forced SIMD tier for the vector plane kernels (`TAKUM_SIMD` /
+    /// `--simd`); `None` = auto-detect the best tier at
+    /// [`EngineConfig::build`]. A forced tier the host cannot run is a
+    /// build error.
+    pub(crate) simd: Option<Tier>,
     pub(crate) workers: usize,
     pub(crate) warm: WarmPolicy,
     pub(crate) seed: u64,
@@ -81,6 +88,7 @@ impl EngineConfig {
         EngineConfig {
             backend: Backend::default(),
             mode: CodecMode::default(),
+            simd: None,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             warm: WarmPolicy::default(),
             seed: 0xBEEF,
@@ -97,6 +105,7 @@ impl EngineConfig {
         Self::from_env_values(
             std::env::var("TAKUM_BACKEND").ok().as_deref(),
             std::env::var("TAKUM_CODEC").ok().as_deref(),
+            std::env::var("TAKUM_SIMD").ok().as_deref(),
             std::env::var("TAKUM_VERIFY").ok().as_deref(),
             std::env::var("TAKUM_TRACE").ok().as_deref(),
         )
@@ -106,17 +115,20 @@ impl EngineConfig {
     /// the pure half, so env precedence and the warn-and-fallback path
     /// are unit-testable without mutating process state. `trace` is a
     /// file path (any non-empty value enables trace export); an empty
-    /// `TAKUM_TRACE` is treated as unset.
+    /// `TAKUM_TRACE` is treated as unset, as are empty/`auto`
+    /// `TAKUM_SIMD` values (auto-detect).
     pub fn from_env_values(
         backend: Option<&str>,
         codec: Option<&str>,
+        simd: Option<&str>,
         verify: Option<&str>,
         trace: Option<&str>,
     ) -> EngineConfig {
-        let cfg = EngineConfig::new()
+        let mut cfg = EngineConfig::new()
             .backend(Backend::parse_env(backend))
             .codec(CodecMode::parse_env(codec))
             .verify(Verify::parse_env(verify));
+        cfg.simd = Tier::parse_env(simd);
         match trace {
             Some(path) if !path.is_empty() => cfg.trace(path),
             _ => cfg,
@@ -145,6 +157,22 @@ impl EngineConfig {
     /// all valid names (via [`CodecMode::parse`]).
     pub fn try_codec(self, name: &str) -> Result<EngineConfig> {
         Ok(self.codec(CodecMode::parse(name)?))
+    }
+
+    /// Force a SIMD tier for the vector plane kernels. Availability is
+    /// validated at [`EngineConfig::build`], not here, so a config can be
+    /// constructed and inspected on any host.
+    pub fn simd(mut self, tier: Tier) -> EngineConfig {
+        self.simd = Some(tier);
+        self
+    }
+
+    /// Select the SIMD tier by CLI-flag spelling (`--simd`); `auto`
+    /// restores auto-detection, anything else must be a tier name (the
+    /// error enumerates them via [`Tier::parse`]).
+    pub fn try_simd(mut self, name: &str) -> Result<EngineConfig> {
+        self.simd = if name == "auto" { None } else { Some(Tier::parse(name)?) };
+        Ok(self)
     }
 
     /// Select the verify-before-run policy (see [`crate::verify`]): `Off`
@@ -199,14 +227,30 @@ impl EngineConfig {
 
 /// The cached process-default execution axes, resolved once through
 /// [`EngineConfig::from_env`]. `Machine::default()` routes here so a
-/// default-constructed machine honours `TAKUM_BACKEND`/`TAKUM_CODEC`
-/// (the CI matrix hook) while env parsing still happens in exactly one
-/// function.
-pub(crate) fn process_default() -> (CodecMode, Backend) {
-    static CACHE: OnceLock<(CodecMode, Backend)> = OnceLock::new();
+/// default-constructed machine honours
+/// `TAKUM_BACKEND`/`TAKUM_CODEC`/`TAKUM_SIMD` (the CI matrix hook) while
+/// env parsing still happens in exactly one function. A forced tier the
+/// host cannot run degrades to auto-detect with a warning here (default
+/// construction cannot return an error); `Engine::build` is the strict
+/// path.
+pub(crate) fn process_default() -> (CodecMode, Backend, Tier) {
+    static CACHE: OnceLock<(CodecMode, Backend, Tier)> = OnceLock::new();
     *CACHE.get_or_init(|| {
         let cfg = EngineConfig::from_env();
-        (cfg.mode, cfg.backend)
+        let tier = match cfg.simd {
+            Some(t) if t.available() => t,
+            Some(t) => {
+                eprintln!(
+                    "warning: TAKUM_SIMD: tier {:?} not available on this host \
+                     (supported: {:?}); using auto",
+                    t,
+                    Tier::supported()
+                );
+                Tier::detect()
+            }
+            None => Tier::detect(),
+        };
+        (cfg.mode, cfg.backend, tier)
     })
 }
 
@@ -225,8 +269,9 @@ mod tests {
         assert_eq!(base.mode, CodecMode::Lut);
 
         // Unset env ⇒ built-in defaults.
-        let cfg = EngineConfig::from_env_values(None, None, None, None);
+        let cfg = EngineConfig::from_env_values(None, None, None, None, None);
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Scalar));
+        assert_eq!(cfg.simd, None);
         assert_eq!(cfg.verify, Verify::Off);
         assert_eq!(cfg.trace, None);
 
@@ -234,23 +279,34 @@ mod tests {
         let cfg = EngineConfig::from_env_values(
             Some("vector"),
             Some("arith"),
+            Some("scalar"),
             Some("deny"),
             Some("out/trace.json"),
         );
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Arith, Backend::Vector));
+        assert_eq!(cfg.simd, Some(Tier::Scalar));
         assert_eq!(cfg.verify, Verify::Deny);
         assert_eq!(cfg.trace.as_deref(), Some("out/trace.json"));
-        let cfg = EngineConfig::from_env_values(Some("graph"), None, None, None);
+        let cfg = EngineConfig::from_env_values(Some("graph"), None, None, None, None);
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Graph));
 
         // Invalid env values warn (stderr) and fall back to the default
         // rather than failing construction; an empty TAKUM_TRACE is
-        // unset, not a trace to a file named "".
-        let cfg =
-            EngineConfig::from_env_values(Some("gpu"), Some("banana"), Some("paranoid"), Some(""));
+        // unset, not a trace to a file named "", and TAKUM_SIMD falls
+        // back to auto-detect (None), as do ""/"auto".
+        let cfg = EngineConfig::from_env_values(
+            Some("gpu"),
+            Some("banana"),
+            Some("mmx"),
+            Some("paranoid"),
+            Some(""),
+        );
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Scalar));
+        assert_eq!(cfg.simd, None);
         assert_eq!(cfg.verify, Verify::Off);
         assert_eq!(cfg.trace, None);
+        let cfg = EngineConfig::from_env_values(None, None, Some("auto"), None, None);
+        assert_eq!(cfg.simd, None);
     }
 
     /// CLI-spelling setters: valid names select, unknown names produce
@@ -279,6 +335,16 @@ mod tests {
         let e = EngineConfig::new().try_verify("paranoid").unwrap_err().to_string();
         assert!(e.contains("unknown verify policy \"paranoid\""), "{e:?}");
         assert!(e.contains("off") && e.contains("warn") && e.contains("deny"), "{e:?}");
+
+        let cfg = EngineConfig::new().try_simd("scalar").unwrap();
+        assert_eq!(cfg.simd, Some(Tier::Scalar));
+        let cfg = EngineConfig::new().try_simd("auto").unwrap();
+        assert_eq!(cfg.simd, None);
+        let e = EngineConfig::new().try_simd("mmx").unwrap_err().to_string();
+        assert!(e.contains("unknown SIMD tier \"mmx\""), "{e:?}");
+        for t in Tier::ALL {
+            assert!(e.contains(t.name()), "{e:?} missing {}", t.name());
+        }
     }
 
     /// Builder validation: a zero worker count is rejected at build time

@@ -68,12 +68,16 @@
 //!
 //! ## Extension recipe
 //!
-//! A new execution axis (the ROADMAP's GPU backend slot, an AVX-512 tier
-//! selector) is added by extending [`EngineConfig`] — one new builder
-//! method, one line in [`Engine::tag`] — instead of a new `_with_*`
-//! signature at every call site; every caller inherits it through the
-//! front door automatically. The [`Verify`] policy axis (`--verify`,
-//! `TAKUM_VERIFY`) is the worked example of the recipe.
+//! A new execution axis is added by extending [`EngineConfig`] — one new
+//! builder method, one line in [`Engine::tag`] — instead of a new
+//! `_with_*` signature at every call site; every caller inherits it
+//! through the front door automatically. The SIMD [`Tier`] axis
+//! (`--simd`, `TAKUM_SIMD`) is the worked example: the config carries an
+//! `Option<Tier>` (None = auto-detect), [`Engine::build`] validates a
+//! forced tier against [`Tier::supported`] and resolves it **once** into
+//! the engine, every [`Engine::machine`] inherits the resolved
+//! dispatch table, and [`Engine::tag`] stamps `simd=<tier>` into the
+//! bench JSON and telemetry artifacts.
 
 pub mod config;
 pub mod job;
@@ -86,7 +90,7 @@ pub(crate) use config::process_default;
 
 use crate::num::lut;
 use crate::runtime::{default_artifact_dir, PjrtHandle, PjrtService};
-use crate::sim::{Backend, CodecMode, LanePlan, Machine};
+use crate::sim::{Backend, CodecMode, LanePlan, Machine, Tier};
 use crate::telemetry::{Registry, SpanRecorder, Stage, TelemetrySnapshot, VerifyOutcome};
 use crate::verify::{self, Verify};
 use anyhow::{bail, ensure, Context, Result};
@@ -99,6 +103,11 @@ use std::time::{Duration, Instant};
 /// [`EngineConfig`], shared by reference across workers.
 pub struct Engine {
     cfg: EngineConfig,
+    /// The SIMD [`Tier`] every machine of this engine dispatches through:
+    /// the config's forced tier (validated available at build) or the
+    /// host's best detected tier. Resolved exactly once, here — the hot
+    /// plane paths never re-run feature detection.
+    resolved_simd: Tier,
     /// Shared mnemonic-plan cache: seeded into every handed-out machine,
     /// merged back by the builders (interned keys — cloning the cache
     /// into a machine copies pointers, not strings).
@@ -133,10 +142,31 @@ impl Engine {
              EngineConfig::workers(N) with N ≥ 1)",
             cfg.workers
         );
+        // Resolve the SIMD tier once, at the front door: a forced tier
+        // the host cannot run is a build error (the env/default path
+        // warns and falls back instead — see `process_default`).
+        let resolved_simd = match cfg.simd {
+            Some(t) => {
+                ensure!(
+                    t.available(),
+                    "SIMD tier {:?} is not available on this host (supported: {}; pass \
+                     --simd auto or one of the supported names)",
+                    t.name(),
+                    Tier::supported()
+                        .iter()
+                        .map(|t| t.name())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+                t
+            }
+            None => Tier::detect(),
+        };
         // Warm before any machine or worker exists: the whole point of
         // the policy is that fan-outs start against hot tables.
         let eng = Engine {
             cfg,
+            resolved_simd,
             plans: Mutex::new(HashMap::new()),
             pjrt: Mutex::new(None),
             telemetry: Registry::new(),
@@ -187,6 +217,13 @@ impl Engine {
 
     pub fn workers(&self) -> usize {
         self.cfg.workers
+    }
+
+    /// The SIMD tier resolved at build time (forced via `--simd` /
+    /// `TAKUM_SIMD` / [`EngineConfig::simd`], or the host's best
+    /// detected tier).
+    pub fn simd(&self) -> Tier {
+        self.resolved_simd
     }
 
     /// The default RNG seed jobs inherit when their spec leaves the seed
@@ -262,7 +299,7 @@ impl Engine {
     /// has resolved so far.
     pub fn machine(&self) -> Machine {
         let plans = self.plans.lock().expect("plan cache poisoned").clone();
-        Machine::for_engine(self.cfg.mode, self.cfg.backend, plans)
+        Machine::for_engine(self.cfg.mode, self.cfg.backend, self.resolved_simd, plans)
     }
 
     /// Merge a finished machine back into the engine: newly resolved
@@ -311,12 +348,13 @@ impl Engine {
     /// telemetry snapshot.
     pub fn tag(&self) -> String {
         format!(
-            "backend={};codec={};workers={};verify={};trace={}",
+            "backend={};codec={};workers={};verify={};trace={};simd={}",
             self.cfg.backend.name(),
             self.cfg.mode.name(),
             self.cfg.workers,
             self.cfg.verify.name(),
-            if self.cfg.trace.is_some() { "on" } else { "off" }
+            if self.cfg.trace.is_some() { "on" } else { "off" },
+            self.resolved_simd.name()
         )
     }
 
@@ -477,21 +515,31 @@ mod tests {
 
     #[test]
     fn tag_renders_all_axes() {
+        // Tier pinned to scalar (always available) so the literal
+        // assertions hold on every host.
         let eng = EngineConfig::new()
             .backend(Backend::Graph)
             .codec(CodecMode::Arith)
             .workers(3)
+            .simd(Tier::Scalar)
             .build()
             .unwrap();
-        assert_eq!(eng.tag(), "backend=graph;codec=arith;workers=3;verify=off;trace=off");
+        assert_eq!(
+            eng.tag(),
+            "backend=graph;codec=arith;workers=3;verify=off;trace=off;simd=scalar"
+        );
         let eng = EngineConfig::new()
             .backend(Backend::Graph)
             .codec(CodecMode::Arith)
             .workers(3)
             .verify(Verify::Deny)
+            .simd(Tier::Scalar)
             .build()
             .unwrap();
-        assert_eq!(eng.tag(), "backend=graph;codec=arith;workers=3;verify=deny;trace=off");
+        assert_eq!(
+            eng.tag(),
+            "backend=graph;codec=arith;workers=3;verify=deny;trace=off;simd=scalar"
+        );
         // The trace axis is stamped like the others (the path itself is
         // not — it is an output location, not an execution axis).
         let dir = std::env::temp_dir().join("takum-tag-trace-test");
@@ -500,12 +548,37 @@ mod tests {
         let eng = EngineConfig::new()
             .workers(2)
             .trace(path.to_str().unwrap())
+            .simd(Tier::Scalar)
             .build()
             .unwrap();
-        assert_eq!(eng.tag(), "backend=scalar;codec=lut;workers=2;verify=off;trace=on");
+        assert_eq!(
+            eng.tag(),
+            "backend=scalar;codec=lut;workers=2;verify=off;trace=on;simd=scalar"
+        );
         drop(eng); // the drop flush writes the (possibly empty) trace
         assert!(path.exists(), "drop must write the configured trace file");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    /// The SIMD axis through the front door: auto resolves to the host's
+    /// best tier, a forced available tier sticks (and flows into the
+    /// machines), and a forced unavailable tier is a build-time error
+    /// listing the supported cascade.
+    #[test]
+    fn simd_tier_resolves_and_validates_at_build() {
+        let eng = EngineConfig::new().build().unwrap();
+        assert_eq!(eng.simd(), Tier::detect(), "auto must land on the detected tier");
+        assert!(eng.tag().ends_with(&format!(";simd={}", Tier::detect().name())));
+
+        let eng = EngineConfig::new().simd(Tier::Scalar).build().unwrap();
+        assert_eq!(eng.simd(), Tier::Scalar);
+        assert_eq!(eng.machine().tier(), Tier::Scalar, "machines inherit the resolved tier");
+
+        if let Some(&t) = Tier::ALL.iter().find(|t| !t.available()) {
+            let e = EngineConfig::new().simd(t).build().unwrap_err().to_string();
+            assert!(e.contains("not available on this host"), "{e:?}");
+            assert!(e.contains("scalar"), "error must list the supported tiers: {e:?}");
+        }
     }
 
     /// `Engine::absorb` folds a finished machine's counters into the

@@ -13,10 +13,10 @@
 //!
 //! Every subcommand that executes anything builds its execution context
 //! through **one** shared helper ([`parse_engine_cfg`]): `--backend`,
-//! `--codec`, `--workers` and `--seed` are parsed once, on top of the
-//! `TAKUM_BACKEND`/`TAKUM_CODEC` environment defaults
-//! (`EngineConfig::from_env`), with CLI flags taking precedence — flag >
-//! env > default.
+//! `--codec`, `--simd`, `--workers` and `--seed` are parsed once, on top
+//! of the `TAKUM_BACKEND`/`TAKUM_CODEC`/`TAKUM_SIMD` environment
+//! defaults (`EngineConfig::from_env`), with CLI flags taking precedence
+//! — flag > env > default.
 //!
 //! (No `clap` in the offline image — a small hand-rolled parser below.)
 
@@ -128,14 +128,17 @@ commands:
 engine flags (shared by figure2/simulate/gemm/kernels/lint/artifacts):
   --backend scalar|vector|graph   plane backend
   --codec lut|arith               lane codec mode
+  --simd auto|avx512|avx2|sse2|neon|wasm128|scalar
+          SIMD tier for the vector plane kernels (auto = best available;
+          a forced tier the host cannot run is a build error)
   --workers N                     worker-pool width (N >= 1)
   --seed S                        default RNG seed
   --verify off|warn|deny          static verify-before-run policy
   --trace FILE                    write job-lifecycle spans as
           Chrome-trace JSON (chrome://tracing, Perfetto) on exit
-Precedence: CLI flag > TAKUM_BACKEND/TAKUM_CODEC/TAKUM_VERIFY/TAKUM_TRACE
-env > default (scalar/lut/off/none). sizes must be positive multiples of
-64 (whole compute tiles).
+Precedence: CLI flag > TAKUM_BACKEND/TAKUM_CODEC/TAKUM_SIMD/TAKUM_VERIFY/
+TAKUM_TRACE env > default (scalar/lut/auto/off/none). sizes must be
+positive multiples of 64 (whole compute tiles).
 ";
 
 fn cmd_figure1() -> Result<()> {
@@ -154,6 +157,9 @@ fn parse_engine_cfg(args: &Args) -> Result<EngineConfig> {
     }
     if let Some(c) = args.get("codec") {
         cfg = cfg.try_codec(c)?;
+    }
+    if let Some(s) = args.get("simd") {
+        cfg = cfg.try_simd(s)?;
     }
     if let Some(w) = args.get("workers") {
         let w: usize = w.parse().map_err(|_| anyhow!("bad value for --workers: {w:?}"))?;
@@ -520,6 +526,24 @@ mod tests {
         let e = parse_engine_cfg(&args(&["--codec", "turbo"])).unwrap_err().to_string();
         assert!(e.contains("unknown codec mode"), "{e:?}");
         assert!(e.contains("lut") && e.contains("arith"), "{e:?}");
+    }
+
+    /// `--simd` forces a dispatch tier with the same precedence scheme
+    /// and the same name-enumerating rejection as `--backend`; "auto"
+    /// explicitly restores tier auto-detection.
+    #[test]
+    fn engine_cfg_parses_simd_tier() {
+        use takum_avx10::sim::Tier;
+        let cfg = parse_engine_cfg(&args(&["--simd", "scalar"])).unwrap();
+        assert_eq!(cfg, EngineConfig::from_env().simd(Tier::Scalar));
+        let cfg = parse_engine_cfg(&args(&["--simd", "auto"])).unwrap();
+        assert_eq!(cfg, EngineConfig::from_env().try_simd("auto").unwrap());
+
+        let e = parse_engine_cfg(&args(&["--simd", "mmx"])).unwrap_err().to_string();
+        assert!(e.contains("unknown SIMD tier"), "{e:?}");
+        for t in Tier::ALL {
+            assert!(e.contains(t.name()), "{e:?} missing {}", t.name());
+        }
     }
 
     /// `--verify` selects the static verification policy with the same

@@ -260,43 +260,55 @@ impl Lut8 {
     /// *level by level* — every probe level is one compare + conditional
     /// add per element with no data-dependent branch and a constant trip
     /// count across the chunk, exactly the shape the autovectoriser turns
-    /// into masked SIMD adds. The vector plane backend
-    /// ([`crate::sim::plane`]) routes whole-register encodes through this.
+    /// into masked SIMD adds. This is the eight-wide instantiation of
+    /// [`Lut8::encode_slice_lockstep_n`].
     pub fn encode_slice_lockstep(&self, xs: &[f64], out: &mut [u64]) {
+        self.encode_slice_lockstep_n::<8>(xs, out);
+    }
+
+    /// `L`-wide lockstep encode: the generic chunk width behind the SIMD
+    /// tier cascade — each [`crate::sim::simd::Tier`]'s portable kernel
+    /// instantiates this at its native f64 lane count (1/2/4/8). Any
+    /// chunk width is bit-identical to per-element [`Lut8::encode_bits`]
+    /// (the search below mirrors the scalar walk level for level), so
+    /// `L` is a pure performance knob.
+    pub fn encode_slice_lockstep_n<const L: usize>(&self, xs: &[f64], out: &mut [u64]) {
         assert_eq!(xs.len(), out.len());
-        let head = xs.len() & !7;
+        let head = xs.len() - xs.len() % L;
         let (xc, xr) = xs.split_at(head);
         let (oc, or) = out.split_at_mut(head);
-        for (x8, o8) in xc.chunks_exact(8).zip(oc.chunks_exact_mut(8)) {
-            self.encode_chunk8(x8.try_into().unwrap(), o8.try_into().unwrap());
+        for (xg, og) in xc.chunks_exact(L).zip(oc.chunks_exact_mut(L)) {
+            self.encode_chunk_n::<L>(xg, og);
         }
         for (o, &x) in or.iter_mut().zip(xr) {
             *o = self.encode_bits(x);
         }
     }
 
-    /// Eight-wide lockstep boundary search (see
-    /// [`Lut8::encode_slice_lockstep`]). Mirrors
+    /// `L`-wide lockstep boundary search (see
+    /// [`Lut8::encode_slice_lockstep_n`]). Mirrors
     /// [`Lut8::partition_branchless`] level for level so the result is
-    /// bit-identical to eight scalar [`Lut8::encode_bits`] calls,
+    /// bit-identical to `L` scalar [`Lut8::encode_bits`] calls,
     /// including the NaN → NaN/NaR fix-up (a select, not a branch).
+    /// `xs`/`out` are exactly `L` elements (the caller chunks).
     #[inline]
-    fn encode_chunk8(&self, xs: &[f64; 8], out: &mut [u64; 8]) {
+    fn encode_chunk_n<const L: usize>(&self, xs: &[f64], out: &mut [u64]) {
+        debug_assert!(xs.len() == L && out.len() == L);
         let b = &self.boundaries;
-        let mut keys = [0u64; 8];
-        for i in 0..8 {
+        let mut keys = [0u64; L];
+        for i in 0..L {
             keys[i] = f64_key(xs[i]);
         }
-        let mut base = [0usize; 8];
+        let mut base = [0usize; L];
         let mut len = b.len();
         while len > 1 {
             let half = len / 2;
-            for i in 0..8 {
+            for i in 0..L {
                 base[i] += usize::from(b[base[i] + half - 1] <= keys[i]) * half;
             }
             len -= half;
         }
-        for i in 0..8 {
+        for i in 0..L {
             let idx = base[i] + usize::from(len == 1 && b[base[i]] <= keys[i]);
             let bits = self.sorted_bits[idx] as u64;
             out[i] = if xs[i].is_nan() { self.nan_bits } else { bits };
@@ -708,6 +720,17 @@ mod tests {
             lut.encode_slice_lockstep(&xs, &mut lock);
             for (i, &x) in xs.iter().enumerate() {
                 assert_eq!(lock[i], lut.encode_bits(x), "{name} i={i} x={x}");
+            }
+            // Every tier chunk width is bit-identical too (the ragged
+            // tail exercises each width's remainder path).
+            for (l, run) in [
+                (1usize, Lut8::encode_slice_lockstep_n::<1> as fn(&Lut8, &[f64], &mut [u64])),
+                (2, Lut8::encode_slice_lockstep_n::<2>),
+                (4, Lut8::encode_slice_lockstep_n::<4>),
+            ] {
+                let mut got = vec![0u64; xs.len()];
+                run(&lut, &xs, &mut got);
+                assert_eq!(got, lock, "{name} L={l} diverges from L=8");
             }
         }
     }

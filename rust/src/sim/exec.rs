@@ -60,6 +60,7 @@ use super::lanes::{
 use super::plane::{self, Backend};
 use super::program::{Instruction, Operand, Program};
 use super::register::{RegisterFile, VecReg, NUM_VREGS};
+use super::simd::{PlaneKernels, Tier};
 use crate::num::bitstring::sign_extend;
 use crate::num::{BF16, F32};
 use anyhow::{anyhow, bail, Result};
@@ -124,6 +125,13 @@ pub struct ExecCounters {
     pub shadow_hits: u64,
     /// Shadow misses: full plane decode + install.
     pub shadow_misses: u64,
+    /// Plane-kernel invocations served through the resolved SIMD tier's
+    /// dispatch table (vector-backend LUT decode/encode sweeps and
+    /// FMA/dot planes). The engine registry buckets these per tier name
+    /// (`tier.<name>.planes`), so `stats` shows which tier actually
+    /// served a run — a `scalar` count on an AVX-512 host is a dispatch
+    /// bug made visible.
+    pub tier_planes: u64,
 }
 
 impl ExecCounters {
@@ -151,6 +159,10 @@ pub struct Machine {
     mode: CodecMode,
     /// Which plane backend executes decode/encode/FMA plane loops.
     backend: Backend,
+    /// The resolved SIMD tier's kernel table (see [`crate::sim::simd`]):
+    /// fixed at construction, so the hot path never consults feature
+    /// detection — dispatch is one indirect call through this table.
+    kern: &'static PlaneKernels,
     /// Memoized mnemonic → plan cache: each distinct mnemonic is parsed
     /// exactly once per machine.
     plan_cache: HashMap<&'static str, LanePlan>,
@@ -160,14 +172,15 @@ pub struct Machine {
 
 impl Default for Machine {
     fn default() -> Machine {
-        // Default machines resolve both execution axes through the
+        // Default machines resolve all three execution axes through the
         // engine's cached process defaults (`EngineConfig::from_env`), so
-        // TAKUM_BACKEND/TAKUM_CODEC force every default-constructed
-        // machine (the CI matrix hook) while env parsing lives in exactly
-        // one place. Explicitly configured machines come from
-        // `engine::Engine::machine` — there is no other constructor.
-        let (mode, backend) = crate::engine::process_default();
-        Machine::for_engine(mode, backend, HashMap::new())
+        // TAKUM_BACKEND/TAKUM_CODEC/TAKUM_SIMD force every
+        // default-constructed machine (the CI matrix hook) while env
+        // parsing lives in exactly one place. Explicitly configured
+        // machines come from `engine::Engine::machine` — there is no
+        // other constructor.
+        let (mode, backend, tier) = crate::engine::process_default();
+        Machine::for_engine(mode, backend, tier, HashMap::new())
     }
 }
 
@@ -176,14 +189,17 @@ impl Machine {
         Machine::default()
     }
 
-    /// Engine-internal constructor: both execution axes pinned and the
-    /// mnemonic-plan cache pre-seeded from the engine's shared cache.
-    /// The only way to build a non-default machine — callers configure
-    /// through [`crate::engine::EngineConfig`] and ask the built engine
-    /// for machines.
+    /// Engine-internal constructor: all execution axes pinned (the tier
+    /// must already be validated available — `Engine::build` and
+    /// `process_default` both guarantee it) and the mnemonic-plan cache
+    /// pre-seeded from the engine's shared cache. The only way to build
+    /// a non-default machine — callers configure through
+    /// [`crate::engine::EngineConfig`] and ask the built engine for
+    /// machines.
     pub(crate) fn for_engine(
         mode: CodecMode,
         backend: Backend,
+        tier: Tier,
         plan_cache: HashMap<&'static str, LanePlan>,
     ) -> Machine {
         Machine {
@@ -193,6 +209,7 @@ impl Machine {
             stats: ExecCounters::default(),
             mode,
             backend,
+            kern: tier.kernels(),
             plan_cache,
             shadow: ShadowCache::default(),
         }
@@ -212,10 +229,16 @@ impl Machine {
         self.backend
     }
 
-    /// Resolve a codec against this machine's mode and backend.
+    /// The SIMD tier serving this machine's vector plane kernels.
+    pub fn tier(&self) -> Tier {
+        self.kern.tier
+    }
+
+    /// Resolve a codec against this machine's mode, backend and
+    /// pre-resolved tier table.
     #[inline]
     fn codec(&self, ty: LaneType) -> LaneCodec {
-        LaneCodec::resolve_with(ty, self.mode, self.backend)
+        LaneCodec::resolve_with_kern(ty, self.mode, self.backend, self.kern)
     }
 
     // ------------------------------------------------------------- data I/O
@@ -267,6 +290,9 @@ impl Machine {
             return;
         }
         ExecCounters::bump(&mut self.stats.shadow_misses);
+        if self.backend == Backend::Vector && codec.has_lut() {
+            ExecCounters::bump(&mut self.stats.tier_planes);
+        }
         codec.decode_plane(&reg, ty.width(), lanes, out);
         self.shadow.install(r, reg, ty, lanes, out);
     }
@@ -385,6 +411,9 @@ impl Machine {
             return Ok(());
         }
         let mut bits = [0u64; 64];
+        if self.backend == Backend::Vector && codec.has_lut() {
+            ExecCounters::bump(&mut self.stats.tier_planes);
+        }
         codec.encode_slice(&vals[..lanes], &mut bits[..lanes]);
         for i in 0..lanes {
             if mask >> i & 1 == 1 {
@@ -595,15 +624,24 @@ impl Machine {
         }
 
         let mut vals = [0.0f64; 64];
-        // The vector and graph backends run the FMA chain as the fused
-        // plane kernel (dispatch hoisted out of the lane loop) — one
-        // shared implementation, which is also the graph interpreter's
-        // Fma-node evaluator (`sim::graph` re-exports it); bit-identical
-        // to the scalar loop below.
+        // The vector and graph backends run the FMA chain as a fused
+        // plane kernel (dispatch hoisted out of the lane loop): the
+        // vector backend through its resolved tier's table, the graph
+        // backend on the portable kernel that doubles as its Fma-node
+        // evaluator (`sim::graph` re-exports it); both bit-identical to
+        // the scalar loop below.
         if let FpOp::Fma(kind, order) = op {
-            if self.backend != Backend::Scalar {
-                plane::fma_plane(kind, order, &xa, &xb, &xz, &mut vals);
-                return self.write_lanes_f64(ins, &codec, ty, lanes, &vals);
+            match self.backend {
+                Backend::Vector => {
+                    ExecCounters::bump(&mut self.stats.tier_planes);
+                    (self.kern.fma_plane)(kind, order, &xa, &xb, &xz, &mut vals);
+                    return self.write_lanes_f64(ins, &codec, ty, lanes, &vals);
+                }
+                Backend::Graph => {
+                    plane::fma_plane(kind, order, &xa, &xb, &xz, &mut vals);
+                    return self.write_lanes_f64(ins, &codec, ty, lanes, &vals);
+                }
+                Backend::Scalar => {}
             }
         }
         for (i, v) in vals.iter_mut().enumerate().take(lanes) {
@@ -867,10 +905,15 @@ impl Machine {
         let mut vals = [0.0f64; 64];
         match self.backend {
             // Fused widening-reduce plane (constant trip count; computes
-            // the full 32-lane plane, the writer takes `lanes`) — shared
-            // by the vector and graph backends, and doubling as the
-            // graph interpreter's Dot-node evaluator.
-            Backend::Vector | Backend::Graph => plane::dot_plane(&xa, &xb, &xz, &mut vals),
+            // the full 32-lane plane, the writer takes `lanes`): the
+            // vector backend through its tier table, the graph backend
+            // on the portable kernel that doubles as its Dot-node
+            // evaluator.
+            Backend::Vector => {
+                ExecCounters::bump(&mut self.stats.tier_planes);
+                (self.kern.dot_plane)(&xa, &xb, &xz, &mut vals);
+            }
+            Backend::Graph => plane::dot_plane(&xa, &xb, &xz, &mut vals),
             Backend::Scalar => {
                 for (i, v) in vals.iter_mut().enumerate().take(lanes) {
                     let mut sum = xz[i];

@@ -39,6 +39,7 @@
 use super::graph;
 use super::plane::{self, Backend};
 use super::register::VecReg;
+use super::simd::{PlaneKernels, Tier};
 use crate::num::bitstring::{mask64, sign_extend};
 use crate::num::lut::{self, Lut8};
 use crate::num::{takum_linear, MinifloatSpec, BF16, E4M3, E5M2, F16, F32, F64};
@@ -194,6 +195,10 @@ impl CodecMode {
 pub struct LaneCodec {
     kind: CodecKind,
     backend: Backend,
+    /// The resolved SIMD tier's dispatch table (only consulted on
+    /// [`Backend::Vector`] plane paths; carried resolved so the hot path
+    /// never re-detects — see [`crate::sim::simd`]).
+    kern: &'static PlaneKernels,
 }
 
 #[derive(Clone, Copy)]
@@ -209,9 +214,38 @@ impl LaneCodec {
         Self::resolve_with(ty, mode, Backend::Scalar)
     }
 
-    /// Resolve against an explicit plane backend (what
-    /// [`crate::sim::Machine`] does with its own selector).
+    /// Resolve against an explicit plane backend (auto-detected SIMD
+    /// tier; what standalone tools and the benches use).
     pub fn resolve_with(ty: LaneType, mode: CodecMode, backend: Backend) -> LaneCodec {
+        Self::resolve_with_kern(ty, mode, backend, Tier::detect().kernels())
+    }
+
+    /// Resolve against an explicit backend **and** a forced SIMD tier.
+    /// The safe public door onto the tier axis: panics if the host cannot
+    /// run `tier` (an unavailable tier's kernel table must never become
+    /// reachable — see the soundness notes in [`crate::sim::simd`]).
+    /// Engine-integrated callers go through
+    /// [`crate::engine::EngineConfig::build`] instead, which validates
+    /// availability up front and returns an error rather than panicking.
+    pub fn resolve_tiered(ty: LaneType, mode: CodecMode, backend: Backend, tier: Tier) -> LaneCodec {
+        assert!(
+            tier.available(),
+            "SIMD tier {:?} is not available on this host (supported: {:?})",
+            tier,
+            Tier::supported()
+        );
+        Self::resolve_with_kern(ty, mode, backend, tier.kernels())
+    }
+
+    /// Crate-internal resolution against a pre-validated dispatch table
+    /// (what [`crate::sim::Machine`] does with the table it resolved once
+    /// at construction).
+    pub(crate) fn resolve_with_kern(
+        ty: LaneType,
+        mode: CodecMode,
+        backend: Backend,
+        kern: &'static PlaneKernels,
+    ) -> LaneCodec {
         let use_lut = mode == CodecMode::Lut;
         let kind = match ty {
             LaneType::Takum(n) => CodecKind::Takum {
@@ -230,12 +264,17 @@ impl LaneCodec {
             },
             LaneType::UInt(_) | LaneType::SInt(_) => CodecKind::Int(ty),
         };
-        LaneCodec { kind, backend }
+        LaneCodec { kind, backend, kern }
     }
 
     /// The plane backend this codec dispatches to.
     pub fn backend(&self) -> Backend {
         self.backend
+    }
+
+    /// The resolved SIMD tier behind the vector plane paths.
+    pub fn tier(&self) -> Tier {
+        self.kern.tier
     }
 
     /// The attached LUT, if the (mode, width) combination has one.
@@ -316,15 +355,15 @@ impl LaneCodec {
     /// Decode the first `lanes` lanes of `reg` at `width` into
     /// `out[..lanes]` — the whole-plane form. With a LUT attached,
     /// [`Backend::Scalar`] runs one bit-extraction pass plus a
-    /// [`Lut8::decode_slice`] sweep; [`Backend::Vector`] dispatches to the
-    /// chunked word-walk (AVX2 gather where available) of
-    /// [`crate::sim::plane`].
+    /// [`Lut8::decode_slice`] sweep; [`Backend::Vector`] dispatches
+    /// through the resolved SIMD tier's table to the chunked gather
+    /// kernels of [`crate::sim::plane`].
     #[inline]
     pub fn decode_plane(&self, reg: &VecReg, width: u32, lanes: usize, out: &mut [f64]) {
         debug_assert!(lanes <= out.len() && lanes <= VecReg::lanes(width));
         match self.attached_lut() {
             Some(t) if self.backend == Backend::Vector => {
-                plane::decode_plane_lut(t, reg, width, lanes, out);
+                plane::decode_plane_lut(self.kern, t, reg, width, lanes, out);
             }
             Some(t) if self.backend == Backend::Graph => {
                 graph::decode_plane_lut(t, reg, width, lanes, out);
@@ -345,8 +384,9 @@ impl LaneCodec {
     /// Batched [`LaneCodec::encode`] — bit-identical to the scalar path.
     /// Infinity-free takum planes take the table sweep (NaN lanes encode
     /// to NaR in the table itself now): [`Backend::Scalar`] runs the
-    /// per-element boundary search, [`Backend::Vector`] the lockstep
-    /// chunk search (AVX2 compares where available). IEEE minifloat
+    /// per-element boundary search, [`Backend::Vector`] the resolved
+    /// tier's lockstep chunk search (SIMD compares on the AVX tiers).
+    /// IEEE minifloat
     /// planes stay per-value because their encode has value-dependent
     /// fallbacks (signed zero, non-saturating overflow) that a straight
     /// table sweep cannot reproduce.
@@ -355,7 +395,7 @@ impl LaneCodec {
         if let CodecKind::Takum { lut: Some(t), .. } = self.kind {
             if xs.iter().all(|x| !x.is_infinite()) {
                 match self.backend {
-                    Backend::Vector => plane::encode_slice_lut(t, xs, out),
+                    Backend::Vector => plane::encode_slice_lut(self.kern, t, xs, out),
                     Backend::Graph => graph::encode_slice_lut(t, xs, out),
                     Backend::Scalar => t.encode_slice(xs, out),
                 }

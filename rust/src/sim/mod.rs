@@ -7,15 +7,19 @@
 //! decode/encode traffic through the cached LUTs of [`crate::num::lut`] —
 //! bit-identical to the arithmetic codecs, selectable via [`CodecMode`].
 //! Orthogonally, a plane [`Backend`] ([`plane`]) selects between the
-//! per-element loops, the chunked/vectorised plane kernels (with
-//! runtime-detected AVX2 specialisations), and the HLO-lite graph
-//! interpreter ([`graph`], which can also lift whole recorded programs
-//! into an optimised dataflow graph) — all bit-identical.
+//! per-element loops, the chunked/vectorised plane kernels, and the
+//! HLO-lite graph interpreter ([`graph`], which can also lift whole
+//! recorded programs into an optimised dataflow graph) — all
+//! bit-identical. The vector kernels are themselves tiered: [`simd`]
+//! resolves the host's best SIMD [`Tier`] (AVX-512 → AVX2 → SSE2 → NEON
+//! → WASM128 → scalar) once per engine into a function-pointer dispatch
+//! table — another bit-identical, pure-performance axis.
 
 pub mod register;
 pub mod intern;
 pub mod program;
 pub mod lanes;
+pub mod simd;
 pub mod plane;
 pub mod graph;
 pub mod exec;
@@ -27,5 +31,6 @@ pub use intern::intern;
 pub use graph::Graph;
 pub use lanes::{CodecMode, LaneCodec, LanePlan, LaneType};
 pub use plane::Backend;
+pub use simd::{PlaneKernels, Tier, NATIVE_LANES};
 pub use program::{Instruction, Operand, Program};
 pub use register::{MaskReg, VecReg, VLEN_BITS};

@@ -1,40 +1,51 @@
 //! Plane backends: the vectorised decode/encode/FMA plane kernels behind
-//! the lane engine.
+//! the lane engine, written generically over a compile-time `LANES`
+//! constant and instantiated per SIMD tier.
 //!
 //! The paper's streamlining claim (§IV) is that one takum envelope decode
 //! serves every precision through a single datapath. [`crate::sim::lanes`]
 //! established the *plane boundary* for that datapath —
 //! `LaneCodec::decode_plane` / `LaneCodec::encode_slice` see whole
-//! 512-bit register planes — and this module supplies the first native
-//! backend behind it:
+//! 512-bit register planes — and this module supplies the native kernels
+//! behind it:
 //!
 //! * [`Backend::Scalar`] — the original per-element LUT path: one
 //!   `VecReg::get` bit extraction and one table probe per lane.
-//! * [`Backend::Vector`] — fixed-width chunked plane loops. Decode walks
-//!   the register **word by word** (8×8 bytes or 8×4 halfwords, constant
-//!   trip counts, mask-and-shift only — no per-lane `div`/`mod` address
-//!   arithmetic, no bounds checks after the one-time table-size proof),
-//!   encode runs the boundary search in **lockstep chunks** (every probe
-//!   level is a compare + conditional add across the whole chunk; see
-//!   [`Lut8::encode_slice_lockstep`]), and the FMA/dot plane loops are
-//!   emitted as constant-trip-count kernels the autovectoriser can turn
-//!   into straight SIMD. On x86-64 with AVX2 (runtime-detected, scalar
-//!   fallback elsewhere) the 8-bit decode becomes a real
-//!   `vgatherdpd` table gather and the encode search runs four lanes per
-//!   step on SIMD compares — the software shape of the paper's proposed
-//!   hardware codec (Hunhold 2024, arXiv:2408.10594).
+//! * [`Backend::Vector`] — the tiered plane kernels of this module,
+//!   reached through the [`crate::sim::simd::PlaneKernels`] dispatch
+//!   table a [`crate::sim::simd::Tier`] resolves to. The portable
+//!   instantiations are `LANES`-generic: decode gathers table probes in
+//!   `L`-lane groups over constant trip counts (mask-and-shift index
+//!   extraction, no per-lane `div`/`mod`, no bounds checks after the
+//!   one-time table-size proof), encode runs the boundary search in
+//!   `L`-wide **lockstep chunks** (every probe level is a compare +
+//!   conditional add across the whole chunk; see
+//!   [`Lut8::encode_slice_lockstep_n`]), and the FMA/dot plane loops are
+//!   constant-trip-count kernels the autovectoriser turns into straight
+//!   SIMD at the build target's width. On x86-64 the AVX2 tier swaps in
+//!   a real `vgatherdpd` table gather and a four-lane `vpcmpgtq` search,
+//!   and the AVX-512 tier runs everything eight lanes per step — 8-wide
+//!   table-gather decode (the software stand-in for the proposed
+//!   `vpermb`/`vpermi2b` hardware decode network), 8-wide masked
+//!   `vpcmpgtq` boundary-search encode, and fused 8-wide FMA/dot planes
+//!   (Hunhold 2024, arXiv:2408.10594).
 //!
-//! Every kernel here is **bit-identical** to its scalar counterpart (the
-//! cross-backend property tests in [`crate::sim::lanes`] and the
-//! machine-level suites enforce it, exhaustively for the 16-bit takum
-//! decode); `Backend` selection is therefore a pure performance knob, the
-//! same contract [`crate::sim::CodecMode`] established for the LUT-vs-
-//! arithmetic axis. [`Backend::Graph`] (the HLO-lite graph interpreter,
-//! [`crate::sim::graph`]) fills the named third slot with the same three
-//! hooks; a future GPU backend plugs in as a fourth variant the same way.
+//! Tier selection happens **once** (engine build / first detection, see
+//! [`crate::sim::simd`]); no kernel in this module consults CPU feature
+//! detection. Every kernel at every tier is **bit-identical** to its
+//! scalar counterpart (the cross-backend property tests in
+//! [`crate::sim::lanes`], the cross-tier suite and the machine-level
+//! suites enforce it, exhaustively for the 16-bit takum decode);
+//! `Backend` and tier selection are therefore pure performance knobs,
+//! the same contract [`crate::sim::CodecMode`] established for the
+//! LUT-vs-arithmetic axis. [`Backend::Graph`] (the HLO-lite graph
+//! interpreter, [`crate::sim::graph`]) fills the named third slot with
+//! the same three hooks; a future GPU backend plugs in as a fourth
+//! variant the same way.
 
 use super::lanes::{FmaKind, FmaOrder};
 use super::register::VecReg;
+use super::simd::PlaneKernels;
 use crate::num::lut::Lut8;
 use anyhow::{bail, Result};
 
@@ -47,8 +58,9 @@ pub enum Backend {
     /// Per-element LUT path (the pre-refactor lane engine).
     #[default]
     Scalar,
-    /// Chunked/vectorised plane kernels (this module), with `std::arch`
-    /// x86 specialisations where the CPU supports them.
+    /// Chunked/vectorised plane kernels (this module), tiered through the
+    /// [`crate::sim::simd::Tier`] cascade with `std::arch` x86
+    /// specialisations where the CPU supports them.
     Vector,
     /// The HLO-lite graph-interpreter backend ([`crate::sim::graph`]):
     /// plane ops execute as graph-node evaluations, and whole recorded
@@ -102,9 +114,11 @@ impl Backend {
 // ---------------------------------------------------------------------------
 
 /// Whole-register chunked table decode: the vector backend's
-/// `decode_plane`. Only reachable with a table attached, i.e. at lane
-/// widths 8 and 16 (the only tabulated widths).
+/// `decode_plane`, routed through the resolved tier's dispatch table.
+/// Only reachable with a table attached, i.e. at lane widths 8 and 16
+/// (the only tabulated widths).
 pub(crate) fn decode_plane_lut(
+    kern: &PlaneKernels,
     lut: &Lut8,
     reg: &VecReg,
     width: u32,
@@ -115,47 +129,59 @@ pub(crate) fn decode_plane_lut(
     match width {
         8 => {
             let mut full = [0.0f64; 64];
-            decode64_w8(lut, &reg.words, &mut full);
+            (kern.decode64_w8)(lut, &reg.words, &mut full);
             out[..lanes].copy_from_slice(&full[..lanes]);
         }
         16 => {
             let mut full = [0.0f64; 32];
-            decode32_w16(lut, &reg.words, &mut full);
+            (kern.decode32_w16)(lut, &reg.words, &mut full);
             out[..lanes].copy_from_slice(&full[..lanes]);
         }
         _ => unreachable!("LUTs only exist at widths 8/16, got {width}"),
     }
 }
 
-/// 64 byte lanes decoded word-at-a-time. The full register is always
-/// decoded (constant trip count); callers take the prefix they need.
-fn decode64_w8(lut: &Lut8, words: &[u64; 8], out: &mut [f64; 64]) {
-    #[cfg(target_arch = "x86_64")]
-    if avx2_available() {
-        // SAFETY: dispatch is gated on runtime AVX2 detection.
-        unsafe { x86::decode64_w8_avx2(lut.decode_table(), words, out) };
-        return;
-    }
-    decode64_w8_portable(lut, words, out);
-}
-
-fn decode64_w8_portable(lut: &Lut8, words: &[u64; 8], out: &mut [f64; 64]) {
+/// 64 byte lanes decoded in `L`-lane gather groups over a constant trip
+/// count (`L` must divide 64 — the tier tables instantiate 1/2/4/8). The
+/// full register is always decoded; callers take the prefix they need.
+pub(crate) fn decode64_w8_generic<const L: usize>(
+    lut: &Lut8,
+    words: &[u64; 8],
+    out: &mut [f64; 64],
+) {
     // The array proof (table.len() == 256) hoists every bounds check out
     // of the loop: a masked byte indexes [f64; 256] infallibly.
     let table: &[f64; 256] = lut.decode_table().try_into().expect("8-bit table");
+    let mut idx = [0usize; 64];
     for (w, &word) in words.iter().enumerate() {
         for k in 0..8 {
-            out[w * 8 + k] = table[((word >> (8 * k)) & 0xFF) as usize];
+            idx[w * 8 + k] = ((word >> (8 * k)) & 0xFF) as usize;
+        }
+    }
+    for (group, o) in idx.chunks_exact(L).zip(out.chunks_exact_mut(L)) {
+        for j in 0..L {
+            o[j] = table[group[j]];
         }
     }
 }
 
-/// 32 halfword lanes decoded word-at-a-time (16-bit tables).
-fn decode32_w16(lut: &Lut8, words: &[u64; 8], out: &mut [f64; 32]) {
+/// 32 halfword lanes decoded in `L`-lane gather groups (16-bit tables;
+/// `L` must divide 32).
+pub(crate) fn decode32_w16_generic<const L: usize>(
+    lut: &Lut8,
+    words: &[u64; 8],
+    out: &mut [f64; 32],
+) {
     let table: &[f64; 65536] = lut.decode_table().try_into().expect("16-bit table");
+    let mut idx = [0usize; 32];
     for (w, &word) in words.iter().enumerate() {
         for k in 0..4 {
-            out[w * 4 + k] = table[((word >> (16 * k)) & 0xFFFF) as usize];
+            idx[w * 4 + k] = ((word >> (16 * k)) & 0xFFFF) as usize;
+        }
+    }
+    for (group, o) in idx.chunks_exact(L).zip(out.chunks_exact_mut(L)) {
+        for j in 0..L {
+            o[j] = table[group[j]];
         }
     }
 }
@@ -165,30 +191,18 @@ fn decode32_w16(lut: &Lut8, words: &[u64; 8], out: &mut [f64; 32]) {
 // ---------------------------------------------------------------------------
 
 /// Chunked boundary-search encode: the vector backend's takum-plane
-/// `encode_slice`. Bit-identical to per-element [`Lut8::encode_bits`],
+/// `encode_slice`, routed through the resolved tier's dispatch table.
+/// Bit-identical to per-element [`Lut8::encode_bits`] at every tier,
 /// including the NaN → NaR fix-up.
-pub(crate) fn encode_slice_lut(lut: &Lut8, xs: &[f64], out: &mut [u64]) {
+pub(crate) fn encode_slice_lut(kern: &PlaneKernels, lut: &Lut8, xs: &[f64], out: &mut [u64]) {
     assert_eq!(xs.len(), out.len());
-    #[cfg(target_arch = "x86_64")]
-    if avx2_available() {
-        let head = xs.len() & !3;
-        for i in (0..head).step_by(4) {
-            // SAFETY: dispatch is gated on runtime AVX2 detection; the
-            // slice windows are exactly four elements.
-            unsafe {
-                x86::encode_chunk4_avx2(
-                    lut,
-                    xs[i..i + 4].try_into().unwrap(),
-                    (&mut out[i..i + 4]).try_into().unwrap(),
-                )
-            };
-        }
-        for i in head..xs.len() {
-            out[i] = lut.encode_bits(xs[i]);
-        }
-        return;
-    }
-    lut.encode_slice_lockstep(xs, out);
+    (kern.encode_slice)(lut, xs, out);
+}
+
+/// `L`-wide lockstep boundary-search encode (the portable tier
+/// instantiation; see [`Lut8::encode_slice_lockstep_n`]).
+pub(crate) fn encode_slice_generic<const L: usize>(lut: &Lut8, xs: &[f64], out: &mut [u64]) {
+    lut.encode_slice_lockstep_n::<L>(xs, out);
 }
 
 // ---------------------------------------------------------------------------
@@ -250,19 +264,134 @@ pub(crate) fn dot_plane(xa: &[f64; 64], xb: &[f64; 64], xz: &[f64; 64], out: &mu
 }
 
 // ---------------------------------------------------------------------------
+// Tier entry points for the x86 specialisations
+// ---------------------------------------------------------------------------
+//
+// The dispatch tables in `sim/simd.rs` are `static`s built on every
+// target, so each specialised entry is a safe `fn` compiled everywhere:
+// on x86-64 it forwards to the `#[target_feature]` kernel, elsewhere it
+// degrades to the generic instantiation at the same lane count (dead
+// code there — `Tier::available()` is false off-x86, and the safe
+// resolution doors check it before handing out a table; see the
+// soundness notes in `sim/simd.rs`).
+
+pub(crate) fn decode64_w8_avx2_entry(lut: &Lut8, words: &[u64; 8], out: &mut [f64; 64]) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: only reachable through a dispatch table resolved after
+    // `Tier::Avx2.available()` (runtime AVX2 detection) held.
+    unsafe {
+        x86::decode64_w8_avx2(lut.decode_table(), words, out)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    decode64_w8_generic::<4>(lut, words, out);
+}
+
+pub(crate) fn encode_slice_avx2_entry(lut: &Lut8, xs: &[f64], out: &mut [u64]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let head = xs.len() & !3;
+        for i in (0..head).step_by(4) {
+            // SAFETY: AVX2 availability was checked at tier resolution;
+            // the slice windows are exactly four elements.
+            unsafe {
+                x86::encode_chunk4_avx2(
+                    lut,
+                    xs[i..i + 4].try_into().unwrap(),
+                    (&mut out[i..i + 4]).try_into().unwrap(),
+                )
+            };
+        }
+        for i in head..xs.len() {
+            out[i] = lut.encode_bits(xs[i]);
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    encode_slice_generic::<4>(lut, xs, out);
+}
+
+pub(crate) fn decode64_w8_avx512_entry(lut: &Lut8, words: &[u64; 8], out: &mut [f64; 64]) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: only reachable through a dispatch table resolved after
+    // `Tier::Avx512.available()` (runtime AVX-512F detection) held.
+    unsafe {
+        x86::decode64_w8_avx512(lut.decode_table(), words, out)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    decode64_w8_generic::<8>(lut, words, out);
+}
+
+pub(crate) fn decode32_w16_avx512_entry(lut: &Lut8, words: &[u64; 8], out: &mut [f64; 32]) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: see `decode64_w8_avx512_entry`.
+    unsafe {
+        x86::decode32_w16_avx512(lut.decode_table(), words, out)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    decode32_w16_generic::<8>(lut, words, out);
+}
+
+pub(crate) fn encode_slice_avx512_entry(lut: &Lut8, xs: &[f64], out: &mut [u64]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        let head = xs.len() & !7;
+        for i in (0..head).step_by(8) {
+            // SAFETY: AVX-512F availability was checked at tier
+            // resolution; the slice windows are exactly eight elements.
+            unsafe {
+                x86::encode_chunk8_avx512(
+                    lut,
+                    xs[i..i + 8].try_into().unwrap(),
+                    (&mut out[i..i + 8]).try_into().unwrap(),
+                )
+            };
+        }
+        for i in head..xs.len() {
+            out[i] = lut.encode_bits(xs[i]);
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    encode_slice_generic::<8>(lut, xs, out);
+}
+
+pub(crate) fn fma_plane_avx512_entry(
+    kind: FmaKind,
+    order: FmaOrder,
+    xa: &[f64; 64],
+    xb: &[f64; 64],
+    xz: &[f64; 64],
+    out: &mut [f64; 64],
+) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: see `decode64_w8_avx512_entry`.
+    unsafe {
+        x86::fma_plane_avx512(kind, order, xa, xb, xz, out)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    fma_plane(kind, order, xa, xb, xz, out);
+}
+
+pub(crate) fn dot_plane_avx512_entry(
+    xa: &[f64; 64],
+    xb: &[f64; 64],
+    xz: &[f64; 64],
+    out: &mut [f64; 64],
+) {
+    #[cfg(target_arch = "x86_64")]
+    // SAFETY: see `decode64_w8_avx512_entry`.
+    unsafe {
+        x86::dot_plane_avx512(xa, xb, xz, out)
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    dot_plane(xa, xb, xz, out);
+}
+
+// ---------------------------------------------------------------------------
 // x86-64 specialisations
 // ---------------------------------------------------------------------------
 
-/// Runtime AVX2 capability, detected once.
-#[cfg(target_arch = "x86_64")]
-pub(crate) fn avx2_available() -> bool {
-    use std::sync::OnceLock;
-    static AVX2: OnceLock<bool> = OnceLock::new();
-    *AVX2.get_or_init(|| is_x86_feature_detected!("avx2"))
-}
-
 #[cfg(target_arch = "x86_64")]
 mod x86 {
+    use super::super::lanes::{FmaKind, FmaOrder};
     use crate::num::lut::{f64_key, Lut8};
     use std::arch::x86_64::*;
 
@@ -270,7 +399,7 @@ mod x86 {
     /// per 64-bit register word.
     ///
     /// # Safety
-    /// Requires AVX2 (the caller dispatches on runtime detection).
+    /// Requires AVX2 (checked once at tier resolution).
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn decode64_w8_avx2(table: &[f64], words: &[u64; 8], out: &mut [f64; 64]) {
         debug_assert_eq!(table.len(), 256);
@@ -303,7 +432,7 @@ mod x86 {
     /// as the scalar path.
     ///
     /// # Safety
-    /// Requires AVX2 (the caller dispatches on runtime detection).
+    /// Requires AVX2 (checked once at tier resolution).
     #[target_feature(enable = "avx2")]
     pub(super) unsafe fn encode_chunk4_avx2(lut: &Lut8, xs: &[f64; 4], out: &mut [u64; 4]) {
         let b = lut.boundary_keys();
@@ -342,10 +471,178 @@ mod x86 {
             out[i] = if xs[i].is_nan() { lut.nan_pattern() } else { bits };
         }
     }
+
+    /// 8-bit table decode as one eight-lane AVX-512 gather per register
+    /// word — the software stand-in for the paper's `vpermb`/`vpermi2b`
+    /// in-register decode network (a 256-entry f64 table outsizes the
+    /// 64-byte permute registers, so the gather plays the permute's
+    /// role).
+    ///
+    /// # Safety
+    /// Requires AVX-512F (checked once at tier resolution).
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn decode64_w8_avx512(table: &[f64], words: &[u64; 8], out: &mut [f64; 64]) {
+        debug_assert_eq!(table.len(), 256);
+        let base = table.as_ptr() as *const u8;
+        for (w, &word) in words.iter().enumerate() {
+            let idx = _mm256_set_epi32(
+                ((word >> 56) & 0xFF) as i32,
+                ((word >> 48) & 0xFF) as i32,
+                ((word >> 40) & 0xFF) as i32,
+                ((word >> 32) & 0xFF) as i32,
+                ((word >> 24) & 0xFF) as i32,
+                ((word >> 16) & 0xFF) as i32,
+                ((word >> 8) & 0xFF) as i32,
+                (word & 0xFF) as i32,
+            );
+            let v = _mm512_i32gather_pd::<8>(idx, base);
+            _mm512_storeu_pd(out.as_mut_ptr().add(w * 8), v);
+        }
+    }
+
+    /// 16-bit table decode, eight halfword lanes (two register words) per
+    /// AVX-512 gather.
+    ///
+    /// # Safety
+    /// Requires AVX-512F (checked once at tier resolution).
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn decode32_w16_avx512(table: &[f64], words: &[u64; 8], out: &mut [f64; 32]) {
+        debug_assert_eq!(table.len(), 65536);
+        let base = table.as_ptr() as *const u8;
+        for p in 0..4 {
+            let (w0, w1) = (words[2 * p], words[2 * p + 1]);
+            let idx = _mm256_set_epi32(
+                ((w1 >> 48) & 0xFFFF) as i32,
+                ((w1 >> 32) & 0xFFFF) as i32,
+                ((w1 >> 16) & 0xFFFF) as i32,
+                (w1 & 0xFFFF) as i32,
+                ((w0 >> 48) & 0xFFFF) as i32,
+                ((w0 >> 32) & 0xFFFF) as i32,
+                ((w0 >> 16) & 0xFFFF) as i32,
+                (w0 & 0xFFFF) as i32,
+            );
+            let v = _mm512_i32gather_pd::<8>(idx, base);
+            _mm512_storeu_pd(out.as_mut_ptr().add(p * 8), v);
+        }
+    }
+
+    /// Eight-lane lockstep boundary search: the AVX2 walk widened to a
+    /// full register word, with the `≤` decision carried in a `__mmask8`
+    /// from `vpcmpgtq` and the conditional advance done as one masked
+    /// add (no and/andnot mask materialisation). NaN lanes are fixed up
+    /// to the format's NaN/NaR pattern, same as the scalar path.
+    ///
+    /// # Safety
+    /// Requires AVX-512F (checked once at tier resolution).
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn encode_chunk8_avx512(lut: &Lut8, xs: &[f64; 8], out: &mut [u64; 8]) {
+        let b = lut.boundary_keys();
+        let mut keys = [0u64; 8];
+        for i in 0..8 {
+            keys[i] = f64_key(xs[i]);
+        }
+        let bias = _mm512_set1_epi64(i64::MIN);
+        let kv = _mm512_xor_si512(_mm512_loadu_epi64(keys.as_ptr() as *const i64), bias);
+        let mut base = _mm512_setzero_si512();
+        let mut len = b.len();
+        // Same invariant as the scalar/AVX2 searches: every lane's answer
+        // lies in [base, base + len] with base + len ≤ b.len(), so each
+        // gather index base + half − 1 stays in bounds.
+        while len > 1 {
+            let half = len / 2;
+            let idx = _mm512_add_epi64(base, _mm512_set1_epi64((half - 1) as i64));
+            let bv = _mm512_i64gather_epi64::<8>(idx, b.as_ptr() as *const u8);
+            let gt = _mm512_cmpgt_epi64_mask(_mm512_xor_si512(bv, bias), kv); // b > k
+            base = _mm512_mask_add_epi64(base, !gt, base, _mm512_set1_epi64(half as i64));
+            len -= half;
+        }
+        if len == 1 {
+            let bv = _mm512_i64gather_epi64::<8>(base, b.as_ptr() as *const u8);
+            let gt = _mm512_cmpgt_epi64_mask(_mm512_xor_si512(bv, bias), kv);
+            base = _mm512_mask_add_epi64(base, !gt, base, _mm512_set1_epi64(1));
+        }
+        let mut idx = [0u64; 8];
+        _mm512_storeu_epi64(idx.as_mut_ptr() as *mut i64, base);
+        let bits_of = lut.interval_bits();
+        for i in 0..8 {
+            let bits = bits_of[idx[i] as usize] as u64;
+            out[i] = if xs[i].is_nan() { lut.nan_pattern() } else { bits };
+        }
+    }
+
+    /// Eight-wide fused-multiply-add planes. Each `vfmadd…pd` variant is
+    /// a single-rounding fused op, exactly like scalar `mul_add`, so the
+    /// plane stays bit-identical to the portable kernel: Madd→`vfmadd`,
+    /// Msub→`vfmsub`, Nmadd→`vfnmadd`, Nmsub→`vfnmsub`.
+    ///
+    /// # Safety
+    /// Requires AVX-512F (checked once at tier resolution).
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn fma_plane_avx512(
+        kind: FmaKind,
+        order: FmaOrder,
+        xa: &[f64; 64],
+        xb: &[f64; 64],
+        xz: &[f64; 64],
+        out: &mut [f64; 64],
+    ) {
+        // Same operand-order hoist as the portable kernel.
+        let (p1, p2, add): (&[f64; 64], &[f64; 64], &[f64; 64]) = match order {
+            FmaOrder::O132 => (xz, xb, xa),
+            FmaOrder::O213 => (xa, xz, xb),
+            FmaOrder::O231 => (xa, xb, xz),
+        };
+        for i in (0..64).step_by(8) {
+            let a = _mm512_loadu_pd(p1.as_ptr().add(i));
+            let m = _mm512_loadu_pd(p2.as_ptr().add(i));
+            let c = _mm512_loadu_pd(add.as_ptr().add(i));
+            let v = match kind {
+                FmaKind::Madd => _mm512_fmadd_pd(a, m, c),
+                FmaKind::Msub => _mm512_fmsub_pd(a, m, c),
+                FmaKind::Nmadd => _mm512_fnmadd_pd(a, m, c),
+                FmaKind::Nmsub => _mm512_fnmsub_pd(a, m, c),
+            };
+            _mm512_storeu_pd(out.as_mut_ptr().add(i), v);
+        }
+    }
+
+    /// Eight-wide widening-dot reduce: `vpermi2pd` deinterleaves the
+    /// even/odd source-lane pairs across two registers, then the plane
+    /// keeps the portable expression tree exactly — separate `vmulpd`s
+    /// added left to right (no FMA contraction), so results stay
+    /// bit-identical to the scalar executor.
+    ///
+    /// # Safety
+    /// Requires AVX-512F (checked once at tier resolution).
+    #[target_feature(enable = "avx512f")]
+    pub(super) unsafe fn dot_plane_avx512(
+        xa: &[f64; 64],
+        xb: &[f64; 64],
+        xz: &[f64; 64],
+        out: &mut [f64; 64],
+    ) {
+        let idx_even = _mm512_set_epi64(14, 12, 10, 8, 6, 4, 2, 0);
+        let idx_odd = _mm512_set_epi64(15, 13, 11, 9, 7, 5, 3, 1);
+        for g in 0..4 {
+            let a0 = _mm512_loadu_pd(xa.as_ptr().add(g * 16));
+            let a1 = _mm512_loadu_pd(xa.as_ptr().add(g * 16 + 8));
+            let b0 = _mm512_loadu_pd(xb.as_ptr().add(g * 16));
+            let b1 = _mm512_loadu_pd(xb.as_ptr().add(g * 16 + 8));
+            let ae = _mm512_permutex2var_pd(a0, idx_even, a1);
+            let ao = _mm512_permutex2var_pd(a0, idx_odd, a1);
+            let be = _mm512_permutex2var_pd(b0, idx_even, b1);
+            let bo = _mm512_permutex2var_pd(b0, idx_odd, b1);
+            let z = _mm512_loadu_pd(xz.as_ptr().add(g * 8));
+            let s =
+                _mm512_add_pd(_mm512_add_pd(z, _mm512_mul_pd(ae, be)), _mm512_mul_pd(ao, bo));
+            _mm512_storeu_pd(out.as_mut_ptr().add(g * 8), s);
+        }
+    }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::simd::Tier;
     use super::*;
     use crate::num::lut;
     use crate::util::rng::Rng;
@@ -358,12 +655,12 @@ mod tests {
             .collect()
     }
 
-    /// The portable 8-bit word-walk is the only decode path on non-AVX2
-    /// hosts but is shadowed by the gather dispatch on CI runners — test
-    /// it directly against per-lane table probes so a regression cannot
-    /// hide behind the AVX2 path.
+    /// Every generic `LANES` instantiation of the 8-bit decode must equal
+    /// per-lane table probes — these are the portable tiers' kernels and
+    /// the off-x86 halves of the specialised entries, shadowed by real
+    /// gathers on CI runners, so test them directly.
     #[test]
-    fn portable_byte_decode_matches_per_lane() {
+    fn generic_byte_decode_matches_per_lane_at_every_lane_count() {
         let mut r = Rng::new(0x8B17);
         for name in ["takum8", "e4m3", "e5m2"] {
             let lut = lut::cached(name).unwrap();
@@ -372,26 +669,35 @@ mod tests {
                 for w in words.iter_mut() {
                     *w = r.next_u64();
                 }
-                let mut got = [0.0f64; 64];
-                decode64_w8_portable(lut, &words, &mut got);
+                let kernels: [(usize, fn(&Lut8, &[u64; 8], &mut [f64; 64])); 4] = [
+                    (1, decode64_w8_generic::<1>),
+                    (2, decode64_w8_generic::<2>),
+                    (4, decode64_w8_generic::<4>),
+                    (8, decode64_w8_generic::<8>),
+                ];
                 let reg = VecReg { words };
-                for i in 0..64 {
-                    let want = lut.decode_bits(reg.get(8, i));
-                    assert!(
-                        got[i] == want || (got[i].is_nan() && want.is_nan()),
-                        "{name} lane {i}: {} vs {}",
-                        got[i],
-                        want
-                    );
+                for (l, kern) in kernels {
+                    let mut got = [0.0f64; 64];
+                    kern(lut, &words, &mut got);
+                    for i in 0..64 {
+                        let want = lut.decode_bits(reg.get(8, i));
+                        assert!(
+                            got[i] == want || (got[i].is_nan() && want.is_nan()),
+                            "{name} L={l} lane {i}: {} vs {}",
+                            got[i],
+                            want
+                        );
+                    }
                 }
             }
         }
     }
 
-    /// The chunked word-walk decode must equal per-lane `VecReg::get` +
-    /// table probe for every register content, at both tabulated widths.
+    /// The tier-dispatched decode must equal per-lane `VecReg::get` +
+    /// table probe for every register content, at both tabulated widths,
+    /// on every tier this host supports (scalar always included).
     #[test]
-    fn chunked_decode_matches_per_lane() {
+    fn chunked_decode_matches_per_lane_on_every_supported_tier() {
         let mut r = Rng::new(0xD0DE);
         for lut in tables() {
             let width = if lut.decode_table().len() == 256 { 8 } else { 16 };
@@ -401,42 +707,53 @@ mod tests {
                 for w in 0..8 {
                     reg.words[w] = r.next_u64();
                 }
-                let mut got = [0.0f64; 64];
-                decode_plane_lut(lut, &reg, width, lanes, &mut got);
-                for i in 0..lanes {
-                    let want = lut.decode_bits(reg.get(width, i));
-                    assert!(
-                        got[i] == want || (got[i].is_nan() && want.is_nan()),
-                        "{} w={width} lane {i}: {} vs {}",
-                        lut.name(),
-                        got[i],
-                        want
-                    );
+                for tier in Tier::supported() {
+                    let mut got = [0.0f64; 64];
+                    decode_plane_lut(tier.kernels(), lut, &reg, width, lanes, &mut got);
+                    for i in 0..lanes {
+                        let want = lut.decode_bits(reg.get(width, i));
+                        assert!(
+                            got[i] == want || (got[i].is_nan() && want.is_nan()),
+                            "{} tier={} w={width} lane {i}: {} vs {}",
+                            lut.name(),
+                            tier.name(),
+                            got[i],
+                            want
+                        );
+                    }
                 }
             }
         }
     }
 
-    /// The chunked encode (AVX2 or lockstep, whatever this host runs)
-    /// must equal the scalar boundary search, NaN included.
+    /// The chunked encode must equal the scalar boundary search on every
+    /// supported tier, NaN and the non-multiple tail included.
     #[test]
-    fn chunked_encode_matches_scalar() {
+    fn chunked_encode_matches_scalar_on_every_supported_tier() {
         let mut r = Rng::new(0xE2C0);
         for lut in tables() {
             let mut xs: Vec<f64> = (0..1025).map(|_| r.wide_f64(-60, 60)).collect();
             xs[17] = f64::NAN;
             xs[101] = 0.0;
             xs[1024] = f64::NAN; // in the remainder tail
-            let mut out = vec![0u64; xs.len()];
-            encode_slice_lut(lut, &xs, &mut out);
-            for (i, &x) in xs.iter().enumerate() {
-                assert_eq!(out[i], lut.encode_bits(x), "{} i={i} x={x}", lut.name());
+            for tier in Tier::supported() {
+                let mut out = vec![0u64; xs.len()];
+                encode_slice_lut(tier.kernels(), lut, &xs, &mut out);
+                for (i, &x) in xs.iter().enumerate() {
+                    assert_eq!(
+                        out[i],
+                        lut.encode_bits(x),
+                        "{} tier={} i={i} x={x}",
+                        lut.name(),
+                        tier.name()
+                    );
+                }
             }
         }
     }
 
     #[test]
-    fn fma_and_dot_planes_match_scalar_expressions() {
+    fn fma_and_dot_planes_match_scalar_expressions_on_every_supported_tier() {
         let mut r = Rng::new(0xF3A);
         let mut xa = [0.0f64; 64];
         let mut xb = [0.0f64; 64];
@@ -446,34 +763,42 @@ mod tests {
             xb[i] = r.wide_f64(-10, 10);
             xz[i] = r.wide_f64(-10, 10);
         }
-        for order in [FmaOrder::O132, FmaOrder::O213, FmaOrder::O231] {
-            for kind in [FmaKind::Madd, FmaKind::Msub, FmaKind::Nmadd, FmaKind::Nmsub] {
-                let mut got = [0.0f64; 64];
-                fma_plane(kind, order, &xa, &xb, &xz, &mut got);
-                for i in 0..64 {
-                    let (x, y, z) = (xa[i], xb[i], xz[i]);
-                    let (p1, p2, add) = match order {
-                        FmaOrder::O132 => (z, y, x),
-                        FmaOrder::O213 => (x, z, y),
-                        FmaOrder::O231 => (x, y, z),
-                    };
-                    let want = match kind {
-                        FmaKind::Madd => p1.mul_add(p2, add),
-                        FmaKind::Msub => p1.mul_add(p2, -add),
-                        FmaKind::Nmadd => (-p1).mul_add(p2, add),
-                        FmaKind::Nmsub => (-p1).mul_add(p2, -add),
-                    };
-                    assert_eq!(got[i].to_bits(), want.to_bits(), "{kind:?}/{order:?} lane {i}");
+        for tier in Tier::supported() {
+            let kern = tier.kernels();
+            for order in [FmaOrder::O132, FmaOrder::O213, FmaOrder::O231] {
+                for kind in [FmaKind::Madd, FmaKind::Msub, FmaKind::Nmadd, FmaKind::Nmsub] {
+                    let mut got = [0.0f64; 64];
+                    (kern.fma_plane)(kind, order, &xa, &xb, &xz, &mut got);
+                    for i in 0..64 {
+                        let (x, y, z) = (xa[i], xb[i], xz[i]);
+                        let (p1, p2, add) = match order {
+                            FmaOrder::O132 => (z, y, x),
+                            FmaOrder::O213 => (x, z, y),
+                            FmaOrder::O231 => (x, y, z),
+                        };
+                        let want = match kind {
+                            FmaKind::Madd => p1.mul_add(p2, add),
+                            FmaKind::Msub => p1.mul_add(p2, -add),
+                            FmaKind::Nmadd => (-p1).mul_add(p2, add),
+                            FmaKind::Nmsub => (-p1).mul_add(p2, -add),
+                        };
+                        assert_eq!(
+                            got[i].to_bits(),
+                            want.to_bits(),
+                            "tier={} {kind:?}/{order:?} lane {i}",
+                            tier.name()
+                        );
+                    }
                 }
             }
-        }
-        let mut got = [0.0f64; 64];
-        dot_plane(&xa, &xb, &xz, &mut got);
-        for i in 0..32 {
-            let mut want = xz[i];
-            want += xa[2 * i] * xb[2 * i];
-            want += xa[2 * i + 1] * xb[2 * i + 1];
-            assert_eq!(got[i].to_bits(), want.to_bits(), "dot lane {i}");
+            let mut got = [0.0f64; 64];
+            (kern.dot_plane)(&xa, &xb, &xz, &mut got);
+            for i in 0..32 {
+                let mut want = xz[i];
+                want += xa[2 * i] * xb[2 * i];
+                want += xa[2 * i + 1] * xb[2 * i + 1];
+                assert_eq!(got[i].to_bits(), want.to_bits(), "tier={} dot lane {i}", tier.name());
+            }
         }
     }
 

@@ -1,0 +1,371 @@
+//! The portable-lane SIMD tier cascade: one-shot host detection and the
+//! function-pointer dispatch table behind the vector plane kernels.
+//!
+//! ## Why a tier axis
+//!
+//! The paper's streamlining claim (§IV) is that takum needs **one**
+//! general-purpose 8/16-bit SIMD basis where AVX10.2 grows a per-format
+//! instruction thicket. Before this module, `Backend::Vector` proved that
+//! on exactly one ISA tier, through `avx2_available()` branches *inside*
+//! the hot plane kernels — a per-plane `OnceLock` consult, and a new
+//! `if`-ladder for every ISA we would ever add. This module replaces the
+//! ladder with a cascade of [`Tier`]s
+//!
+//! ```text
+//! Avx512 → Avx2 → Sse2 → Neon → Wasm128 → Scalar
+//! ```
+//!
+//! resolved **once** (at [`crate::engine::EngineConfig::build`], or
+//! lazily via [`Tier::detect`] for default-constructed machines) into a
+//! [`PlaneKernels`] dispatch table of plain function pointers. The hot
+//! path never consults feature detection again: a plane kernel call is
+//! one indirect call through a `&'static` table.
+//!
+//! ## The dispatch-table contract
+//!
+//! Every [`PlaneKernels`] entry is **bit-identical** to the scalar/LUT
+//! reference — the same contract [`crate::sim::Backend`] and
+//! [`crate::sim::CodecMode`] carry, extended to the tier axis. The
+//! cross-tier equivalence suite (`rust/tests/cross_tier.rs`) and the
+//! differential fuzz corpus force every host-supported tier (down to
+//! [`Tier::Scalar`]) through exhaustive decode, wide-distribution encode
+//! (NaN → NaR included) and the FMA/dot expression trees. A tier is a
+//! pure performance knob; selecting one can never change a result.
+//!
+//! Soundness: the x86 entries wrap `#[target_feature]` kernels in safe
+//! `fn` pointers, so a table for an **unsupported** tier must never be
+//! obtainable from safe code. The two public doors both enforce this:
+//! [`crate::engine::EngineConfig::build`] rejects an unavailable forced
+//! tier with the supported list, and
+//! [`crate::sim::LaneCodec::resolve_tiered`] asserts availability.
+//! Crate-internal resolution ([`Tier::kernels`]) is `pub(crate)` and
+//! only reachable after one of those checks.
+//!
+//! ## Adding a tier (the zero-call-site-churn recipe)
+//!
+//! 1. Add the enum variant to [`Tier`] and slot it into [`Tier::ALL`] at
+//!    its place in the cascade (best first).
+//! 2. Teach [`Tier::available`] how the host advertises it (the **only**
+//!    place feature detection lives) and [`Tier::lanes`] its native f64
+//!    lane count.
+//! 3. Instantiate its kernel table: either reuse the generic
+//!    `LANES`-parameterised kernels of [`crate::sim::plane`]
+//!    (`tier_kernels!` below does this in one line) or point individual
+//!    entries at cfg-gated `std::arch` specialisations, as the AVX2 and
+//!    AVX-512 tiers do.
+//!
+//! No call site changes: `EngineConfig`/`--simd`/`TAKUM_SIMD` parse the
+//! new name from [`Tier::ALL`], the engine tag and telemetry stamp it,
+//! and the cross-tier suites pick it up from [`Tier::supported`]
+//! automatically.
+
+use super::lanes::{FmaKind, FmaOrder};
+use super::plane;
+use crate::num::lut::Lut8;
+use anyhow::{bail, Result};
+use std::sync::OnceLock;
+
+/// Native f64 lanes per vector register for the **compile** target — the
+/// compile-time floor of the cascade (the legato `runtime/lanes.rs`
+/// shape). Runtime dispatch can climb above this (an `x86-64-v1` build
+/// still selects [`Tier::Avx2`] on an AVX2 host) but never below
+/// [`Tier::Scalar`].
+#[cfg(all(target_arch = "x86_64", target_feature = "avx512f"))]
+pub const NATIVE_LANES: usize = 8;
+#[cfg(all(target_arch = "x86_64", target_feature = "avx2", not(target_feature = "avx512f")))]
+pub const NATIVE_LANES: usize = 4;
+#[cfg(all(target_arch = "x86_64", not(target_feature = "avx2")))]
+pub const NATIVE_LANES: usize = 2;
+#[cfg(target_arch = "aarch64")]
+pub const NATIVE_LANES: usize = 2;
+#[cfg(all(target_arch = "wasm32", target_feature = "simd128"))]
+pub const NATIVE_LANES: usize = 2;
+#[cfg(not(any(
+    target_arch = "x86_64",
+    target_arch = "aarch64",
+    all(target_arch = "wasm32", target_feature = "simd128")
+)))]
+pub const NATIVE_LANES: usize = 1;
+
+/// One level of the SIMD tier cascade. Selected per
+/// [`crate::engine::Engine`] (`--simd` / `TAKUM_SIMD`, default
+/// auto-detect); only affects [`crate::sim::Backend::Vector`]'s plane
+/// kernels — the scalar and graph backends are tier-independent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tier {
+    /// 512-bit x86: 8-wide f64 gather decode, 8-wide masked
+    /// `vpcmpgtq` boundary-search encode, fused 8-wide FMA/dot planes.
+    Avx512,
+    /// 256-bit x86: the original 4-wide `vgatherdpd` decode and
+    /// `vpcmpgtq` lockstep encode.
+    Avx2,
+    /// 128-bit x86 baseline: the generic 2-lane kernels (the
+    /// autovectoriser emits SSE2 — it is the x86-64 ABI floor).
+    Sse2,
+    /// aarch64 NEON (baseline on aarch64): generic 2-lane kernels,
+    /// autovectorised to NEON.
+    Neon,
+    /// wasm32 + `simd128`: generic 2-lane kernels, autovectorised to
+    /// SIMD128.
+    Wasm128,
+    /// The always-available floor: 1-lane generic kernels, bit-identical
+    /// to every tier above by contract.
+    Scalar,
+}
+
+impl Tier {
+    /// The full cascade, best tier first — the order [`Tier::detect`]
+    /// probes and the CLI/CI enumerate.
+    pub const ALL: [Tier; 6] =
+        [Tier::Avx512, Tier::Avx2, Tier::Sse2, Tier::Neon, Tier::Wasm128, Tier::Scalar];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tier::Avx512 => "avx512",
+            Tier::Avx2 => "avx2",
+            Tier::Sse2 => "sse2",
+            Tier::Neon => "neon",
+            Tier::Wasm128 => "wasm128",
+            Tier::Scalar => "scalar",
+        }
+    }
+
+    /// Native f64 lanes per vector op at this tier — the `LANES` constant
+    /// its generic kernel instantiations are built with.
+    pub fn lanes(&self) -> usize {
+        match self {
+            Tier::Avx512 => 8,
+            Tier::Avx2 => 4,
+            Tier::Sse2 | Tier::Neon | Tier::Wasm128 => 2,
+            Tier::Scalar => 1,
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Tier> {
+        for t in Tier::ALL {
+            if t.name() == s {
+                return Ok(t);
+            }
+        }
+        // Enumerate every valid name from ALL (plus the auto spelling)
+        // so the message cannot go stale when a tier is added.
+        let names: Vec<&str> = Tier::ALL.iter().map(|t| t.name()).collect();
+        bail!("unknown SIMD tier {s:?} (expected auto or one of: {})", names.join("|"))
+    }
+
+    /// Resolve the value of the `TAKUM_SIMD` environment variable
+    /// (`None` = unset): `None`, empty and `"auto"` mean auto-detect; a
+    /// malformed value warns and falls back to auto-detect rather than
+    /// failing inside `Machine::default`. The env read itself lives in
+    /// [`crate::engine::EngineConfig::from_env`] — the single
+    /// env-reading site; this is the pure, unit-testable half.
+    pub fn parse_env(var: Option<&str>) -> Option<Tier> {
+        match var {
+            None => None,
+            Some("") | Some("auto") => None,
+            Some(v) => match Tier::parse(v) {
+                Ok(t) => Some(t),
+                Err(e) => {
+                    eprintln!("warning: TAKUM_SIMD: {e}; using auto");
+                    None
+                }
+            },
+        }
+    }
+
+    /// Can this host run this tier's kernels? [`Tier::Scalar`] is always
+    /// available; the x86 tiers consult runtime CPUID feature detection
+    /// (confined to this module); NEON/WASM128 are compile-target
+    /// baselines on their architectures.
+    pub fn available(&self) -> bool {
+        match self {
+            Tier::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Tier::Avx512 => is_x86_feature_detected!("avx512f"),
+            #[cfg(target_arch = "x86_64")]
+            Tier::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            Tier::Sse2 => true, // x86-64 ABI baseline
+            #[cfg(not(target_arch = "x86_64"))]
+            Tier::Avx512 | Tier::Avx2 | Tier::Sse2 => false,
+            Tier::Neon => cfg!(target_arch = "aarch64"),
+            Tier::Wasm128 => {
+                cfg!(all(target_arch = "wasm32", target_feature = "simd128"))
+            }
+        }
+    }
+
+    /// The best tier this host supports, detected **once** per process
+    /// (the only `OnceLock` left on the detection path — engine build and
+    /// `Machine::default` both resolve through here, then carry a
+    /// `&'static` dispatch table; no per-plane detection remains).
+    pub fn detect() -> Tier {
+        static BEST: OnceLock<Tier> = OnceLock::new();
+        *BEST.get_or_init(|| {
+            for t in Tier::ALL {
+                if t.available() {
+                    return t;
+                }
+            }
+            Tier::Scalar
+        })
+    }
+
+    /// Every tier this host can run, in cascade order. Always ends with
+    /// [`Tier::Scalar`] — the forced-tier equivalence suites iterate
+    /// this.
+    pub fn supported() -> Vec<Tier> {
+        Tier::ALL.into_iter().filter(Tier::available).collect()
+    }
+
+    /// This tier's dispatch table. `pub(crate)`: the safe public doors
+    /// ([`crate::engine::EngineConfig::build`],
+    /// [`crate::sim::LaneCodec::resolve_tiered`]) validate
+    /// [`Tier::available`] first, which is what makes the x86 entries'
+    /// internal `unsafe` sound (see the module docs).
+    pub(crate) fn kernels(&self) -> &'static PlaneKernels {
+        match self {
+            Tier::Avx512 => &AVX512_KERNELS,
+            Tier::Avx2 => &AVX2_KERNELS,
+            Tier::Sse2 => &SSE2_KERNELS,
+            Tier::Neon => &NEON_KERNELS,
+            Tier::Wasm128 => &WASM128_KERNELS,
+            Tier::Scalar => &SCALAR_KERNELS,
+        }
+    }
+}
+
+/// The function-pointer dispatch table one tier resolves to: the five
+/// plane-kernel hooks behind [`crate::sim::Backend::Vector`]. Built as
+/// `&'static` tables (one per tier, below); a [`crate::sim::Machine`]
+/// carries the resolved table for its whole life, so the per-plane cost
+/// of the tier axis is one indirect call — no detection, no branch.
+pub struct PlaneKernels {
+    /// Which tier this table implements (stamped into the engine tag and
+    /// the per-tier telemetry counters).
+    pub tier: Tier,
+    /// 64×8-bit whole-register table decode.
+    pub(crate) decode64_w8: fn(&Lut8, &[u64; 8], &mut [f64; 64]),
+    /// 32×16-bit whole-register table decode.
+    pub(crate) decode32_w16: fn(&Lut8, &[u64; 8], &mut [f64; 32]),
+    /// Lockstep boundary-search encode over a takum slice (NaN → NaR).
+    pub(crate) encode_slice: fn(&Lut8, &[f64], &mut [u64]),
+    /// Whole-plane fused multiply-add (all four kinds × three orders).
+    pub(crate) fma_plane:
+        fn(FmaKind, FmaOrder, &[f64; 64], &[f64; 64], &[f64; 64], &mut [f64; 64]),
+    /// Whole-plane widening-dot reduce.
+    pub(crate) dot_plane: fn(&[f64; 64], &[f64; 64], &[f64; 64], &mut [f64; 64]),
+}
+
+/// Instantiate a tier's table from the generic `LANES`-parameterised
+/// kernels of [`crate::sim::plane`] — the one-line half of the
+/// adding-a-tier recipe (the portable tiers below are exactly this).
+macro_rules! tier_kernels {
+    ($tier:expr, $lanes:literal) => {
+        PlaneKernels {
+            tier: $tier,
+            decode64_w8: plane::decode64_w8_generic::<$lanes>,
+            decode32_w16: plane::decode32_w16_generic::<$lanes>,
+            encode_slice: plane::encode_slice_generic::<$lanes>,
+            fma_plane: plane::fma_plane,
+            dot_plane: plane::dot_plane,
+        }
+    };
+}
+
+/// AVX-512: `std::arch` specialisations for decode (8-wide f64 gathers —
+/// the software stand-in for the paper's `vpermb`/`vpermi2b` hardware
+/// decode network), encode (8-wide masked `vpcmpgtq` boundary search)
+/// and the FMA/dot planes (8-wide fused ops; dot deinterleaves its lane
+/// pairs with `vpermi2pd`). Off x86-64 the entries fall back to the
+/// generic 8-lane kernels — unreachable there ([`Tier::available`] is
+/// false), present only so the table compiles on every target.
+static AVX512_KERNELS: PlaneKernels = PlaneKernels {
+    tier: Tier::Avx512,
+    decode64_w8: plane::decode64_w8_avx512_entry,
+    decode32_w16: plane::decode32_w16_avx512_entry,
+    encode_slice: plane::encode_slice_avx512_entry,
+    fma_plane: plane::fma_plane_avx512_entry,
+    dot_plane: plane::dot_plane_avx512_entry,
+};
+
+/// AVX2: the pre-tier `vgatherdpd` decode and 4-wide `vpcmpgtq` lockstep
+/// encode, now table entries instead of in-kernel branches. FMA/dot stay
+/// on the generic kernels (as before the refactor — `_mm256_fmadd_pd`
+/// would additionally require the separate `fma` CPUID bit).
+static AVX2_KERNELS: PlaneKernels = PlaneKernels {
+    tier: Tier::Avx2,
+    decode64_w8: plane::decode64_w8_avx2_entry,
+    decode32_w16: plane::decode32_w16_generic::<4>,
+    encode_slice: plane::encode_slice_avx2_entry,
+    fma_plane: plane::fma_plane,
+    dot_plane: plane::dot_plane,
+};
+
+static SSE2_KERNELS: PlaneKernels = tier_kernels!(Tier::Sse2, 2);
+static NEON_KERNELS: PlaneKernels = tier_kernels!(Tier::Neon, 2);
+static WASM128_KERNELS: PlaneKernels = tier_kernels!(Tier::Wasm128, 2);
+static SCALAR_KERNELS: PlaneKernels = tier_kernels!(Tier::Scalar, 1);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tier_parse_and_names_round_trip() {
+        for t in Tier::ALL {
+            assert_eq!(Tier::parse(t.name()).unwrap(), t);
+            assert_eq!(Tier::parse_env(Some(t.name())), Some(t));
+        }
+        let e = Tier::parse("mmx").unwrap_err().to_string();
+        assert!(e.contains("unknown SIMD tier \"mmx\""), "{e:?}");
+        assert!(e.contains("auto"), "{e:?}");
+        for t in Tier::ALL {
+            assert!(e.contains(t.name()), "{e:?} missing {}", t.name());
+        }
+    }
+
+    #[test]
+    fn tier_env_auto_and_invalid_fall_back_to_autodetect() {
+        assert_eq!(Tier::parse_env(None), None);
+        assert_eq!(Tier::parse_env(Some("")), None);
+        assert_eq!(Tier::parse_env(Some("auto")), None);
+        assert_eq!(Tier::parse_env(Some("banana")), None); // warns on stderr
+    }
+
+    /// The cascade floor: scalar is always available, detect() returns a
+    /// supported tier, and supported() is a cascade-ordered list ending
+    /// in scalar.
+    #[test]
+    fn detection_always_lands_on_a_supported_tier() {
+        assert!(Tier::Scalar.available());
+        let best = Tier::detect();
+        assert!(best.available(), "detected tier {best:?} not available");
+        let sup = Tier::supported();
+        assert_eq!(*sup.last().unwrap(), Tier::Scalar);
+        assert_eq!(sup[0], best, "detect() must return the best supported tier");
+        // supported() preserves cascade order.
+        let order: Vec<usize> = sup
+            .iter()
+            .map(|t| Tier::ALL.iter().position(|a| a == t).unwrap())
+            .collect();
+        assert!(order.windows(2).all(|w| w[0] < w[1]), "{sup:?} out of cascade order");
+        // The compile-time floor never exceeds the runtime detection.
+        assert!(NATIVE_LANES <= best.lanes(), "compile floor above detected tier");
+    }
+
+    /// Every tier resolves to a table stamped with its own identity —
+    /// a swapped entry here would mis-stamp telemetry and the bench tag.
+    #[test]
+    fn kernel_tables_are_self_identifying() {
+        for t in Tier::ALL {
+            assert_eq!(t.kernels().tier, t, "table for {t:?} mis-stamped");
+        }
+    }
+
+    #[test]
+    fn lanes_follow_the_cascade() {
+        let lanes: Vec<usize> = Tier::ALL.iter().map(Tier::lanes).collect();
+        assert_eq!(lanes, [8, 4, 2, 2, 2, 1]);
+    }
+}

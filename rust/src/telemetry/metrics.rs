@@ -161,6 +161,11 @@ pub struct Registry {
     /// Executed instructions grouped by resolved `LanePlan` class
     /// (`convert`, `dot`, `fp`, …; see `LanePlan::class_name`).
     classes: Mutex<BTreeMap<&'static str, u64>>,
+    /// Vector-backend plane operations served per SIMD tier, keyed by
+    /// `Tier::name()` (rendered as `tier.<name>.planes`). Shows which
+    /// dispatch table actually served a run — a `tier.scalar.planes`
+    /// count on an AVX-512 host is a dispatch bug made visible.
+    tier_planes: Mutex<BTreeMap<&'static str, u64>>,
     /// Tasks completed per pool worker, accumulated across fan-outs
     /// (index = worker slot; fan-outs with fewer workers fold into the
     /// low slots).
@@ -210,6 +215,10 @@ impl Registry {
         self.shadow_hits.fetch_add(s.shadow_hits, Relaxed);
         self.shadow_misses.fetch_add(s.shadow_misses, Relaxed);
         self.executed.fetch_add(m.executed, Relaxed);
+        if s.tier_planes > 0 {
+            let mut tiers = self.tier_planes.lock().expect("telemetry tiers poisoned");
+            *tiers.entry(m.tier().name()).or_insert(0) += s.tier_planes;
+        }
         if m.counts.is_empty() {
             return;
         }
@@ -260,6 +269,13 @@ impl Registry {
             .iter()
             .map(|(&k, &v)| (k.to_string(), v))
             .collect::<BTreeMap<String, u64>>();
+        let tier_planes = self
+            .tier_planes
+            .lock()
+            .expect("telemetry tiers poisoned")
+            .iter()
+            .map(|(&k, &v)| (k.to_string(), v))
+            .collect::<BTreeMap<String, u64>>();
         let converts = classes.get("convert").copied().unwrap_or(0);
         let dots = classes.get("dot").copied().unwrap_or(0);
         let stages = Stage::ALL
@@ -293,6 +309,7 @@ impl Registry {
             converts,
             dots,
             classes,
+            tier_planes,
             mnemonics,
             per_worker: self.per_worker.lock().expect("telemetry workers poisoned").clone(),
             stages,

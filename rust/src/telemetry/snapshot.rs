@@ -59,6 +59,9 @@ pub struct TelemetrySnapshot {
     pub dots: u64,
     /// Executed instructions per resolved `LanePlan` class.
     pub classes: BTreeMap<String, u64>,
+    /// Vector-backend plane operations served per SIMD tier, keyed by
+    /// tier name (rendered as `tier.<name>.planes`).
+    pub tier_planes: BTreeMap<String, u64>,
     /// Full executed-mnemonic histogram.
     pub mnemonics: BTreeMap<String, u64>,
     /// Cumulative tasks completed per pool-worker slot.
@@ -153,10 +156,11 @@ impl TelemetrySnapshot {
         format!(
             "{{\n  \"schema\": {SNAPSHOT_SCHEMA},\n  \"engine\": \"{}\",\n  \
              \"counters\": {{\n{counter_body}\n  }},\n  \
-             \"classes\": {},\n  \"mnemonics\": {},\n  \
+             \"classes\": {},\n  \"tier_planes\": {},\n  \"mnemonics\": {},\n  \
              \"per_worker\": [{per_worker}],\n  \"stages\": [\n{stages}\n  ]\n}}\n",
             escape(&self.engine),
             json_map(&self.classes, "  "),
+            json_map(&self.tier_planes, "  "),
             json_map(&self.mnemonics, "  "),
         )
     }
@@ -214,6 +218,7 @@ impl TelemetrySnapshot {
             converts: counters.u64_or_zero("converts"),
             dots: counters.u64_or_zero("dots"),
             classes: read_map("classes"),
+            tier_planes: read_map("tier_planes"),
             mnemonics: read_map("mnemonics"),
             per_worker: doc
                 .get("per_worker")
@@ -265,6 +270,17 @@ impl TelemetrySnapshot {
             out.push_str(&cells);
             out.push('\n');
         }
+        if !self.tier_planes.is_empty() {
+            out.push_str("  simd tier planes    ");
+            let cells = self
+                .tier_planes
+                .iter()
+                .map(|(k, v)| format!("tier.{k}.planes={v}"))
+                .collect::<Vec<_>>()
+                .join("  ");
+            out.push_str(&cells);
+            out.push('\n');
+        }
         if !self.per_worker.is_empty() {
             out.push_str(&format!(
                 "  pool tasks/worker   {:?}\n",
@@ -295,7 +311,8 @@ mod tests {
 
     fn sample() -> TelemetrySnapshot {
         TelemetrySnapshot {
-            engine: "backend=scalar;codec=lut;workers=2;verify=off;trace=off".to_string(),
+            engine: "backend=scalar;codec=lut;workers=2;verify=off;trace=off;simd=scalar"
+                .to_string(),
             jobs: 3,
             plan_hits: 120,
             plan_misses: 8,
@@ -313,6 +330,7 @@ mod tests {
             classes: [("convert".to_string(), 12), ("dot".to_string(), 4), ("fp".to_string(), 112)]
                 .into_iter()
                 .collect(),
+            tier_planes: [("avx2".to_string(), 96)].into_iter().collect(),
             mnemonics: [("VADDPT8".to_string(), 64), ("VCVTPH2PSX".to_string(), 12)]
                 .into_iter()
                 .collect(),
@@ -352,6 +370,7 @@ mod tests {
         assert!(txt.contains("decoded shadow"), "{txt}");
         assert!(txt.contains("converts: 12"), "{txt}");
         assert!(txt.contains("denied: 0"), "{txt}");
+        assert!(txt.contains("tier.avx2.planes=96"), "{txt}");
         assert!(txt.contains("submit"), "{txt}");
     }
 

@@ -1,0 +1,294 @@
+//! Cross-tier equivalence suite: every SIMD tier this host supports
+//! (`sim::simd::Tier`), forced through the `--simd` axis down to scalar,
+//! must be **bit-identical** to the scalar/LUT reference on every plane
+//! primitive — decode (exhaustive over all bit patterns of every
+//! tabulated format), encode (exhaustive takum8/takum16 roundtrips plus
+//! the special-value fallback edges), and the packed FMA / widening-dot
+//! planes of engine-built machines.
+//!
+//! This is the acceptance gate of the portable-lane refactor: a tier is
+//! a *speed*, never a *value*. The AVX-512 gather decode, the AVX2 lane
+//! kernels, and every generic `LANES` instantiation sit behind the same
+//! dispatch table (`sim::simd::PlaneKernels`); any divergence from the
+//! scalar tier is a kernel bug, and this suite pins the contract on
+//! every host CI runs on — including the forced-scalar matrix leg, where
+//! `Tier::supported()` still anchors on `Tier::Scalar` and the suite
+//! degenerates to a self-check.
+
+use takum_avx10::engine::EngineConfig;
+use takum_avx10::num::{BF16, E4M3, E5M2, F16};
+use takum_avx10::sim::{
+    Backend, CodecMode, Instruction, LaneCodec, LaneType, Operand, Program, Tier, VecReg,
+};
+
+/// Every tabulated (LUT-backed) lane format, with its width: the formats
+/// whose vector decode/encode planes have specialised tier kernels.
+const TABULATED: [(LaneType, u32); 6] = [
+    (LaneType::Takum(8), 8),
+    (LaneType::Mini(E4M3), 8),
+    (LaneType::Mini(E5M2), 8),
+    (LaneType::Takum(16), 16),
+    (LaneType::Mini(F16), 16),
+    (LaneType::Mini(BF16), 16),
+];
+
+/// Deterministic value stream for the machine-level tests: mostly
+/// moderate finite values, with NaN/±inf/±0 lanes mixed in so the
+/// NaR/NaN canonicalisation contract is exercised on every tier.
+fn values(seed: u64, n: usize) -> Vec<f64> {
+    let mut s = seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1;
+    (0..n)
+        .map(|_| {
+            s = s.wrapping_mul(6_364_136_223_846_793_005).wrapping_add(1_442_695_040_888_963_407);
+            let d = (s >> 32) as u32;
+            match d % 16 {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                2 => f64::NEG_INFINITY,
+                3 => 0.0,
+                4 => -0.0,
+                _ => {
+                    let mant = 1.0 + (d as f64) / (1u64 << 32) as f64;
+                    let e = (d % 31) as i32 - 15;
+                    let sign = if d & 0x8000 != 0 { -1.0 } else { 1.0 };
+                    sign * mant * (e as f64).exp2()
+                }
+            }
+        })
+        .collect()
+}
+
+/// Exhaustive decode: every bit pattern of every tabulated format,
+/// decoded through every supported tier's vector plane, must match the
+/// scalar/LUT reference bit for bit (NaN payloads included — compared
+/// via `to_bits`). The arithmetic codec is pinned alongside as a second
+/// independent reference, so a LUT-generation bug cannot hide a tier
+/// bug (or vice versa).
+#[test]
+fn exhaustive_decode_bit_identical_across_tiers() {
+    for (ty, width) in TABULATED {
+        let scalar_lut = LaneCodec::resolve(ty, CodecMode::Lut);
+        let scalar_arith = LaneCodec::resolve(ty, CodecMode::Arith);
+        let lanes = VecReg::lanes(width);
+        let patterns = 1u64 << width;
+        let tiered: Vec<(Tier, LaneCodec)> = Tier::supported()
+            .iter()
+            .map(|&t| (t, LaneCodec::resolve_tiered(ty, CodecMode::Lut, Backend::Vector, t)))
+            .collect();
+        let mut block = 0u64;
+        while block < patterns {
+            let n = lanes.min((patterns - block) as usize);
+            let mut reg = VecReg::ZERO;
+            for i in 0..n {
+                reg.set(width, i, block + i as u64);
+            }
+            let mut reference = [0.0f64; 64];
+            scalar_lut.decode_plane(&reg, width, n, &mut reference);
+            for i in 0..n {
+                let arith = scalar_arith.decode(block + i as u64);
+                assert_eq!(
+                    reference[i].to_bits(),
+                    arith.to_bits(),
+                    "{ty:?} LUT vs arithmetic decode disagree on bits {:#x}",
+                    block + i as u64
+                );
+            }
+            for (tier, codec) in &tiered {
+                let mut got = [0.0f64; 64];
+                codec.decode_plane(&reg, width, n, &mut got);
+                for i in 0..n {
+                    assert_eq!(
+                        reference[i].to_bits(),
+                        got[i].to_bits(),
+                        "TIER DECODE MISMATCH {ty:?} simd={} bits={:#x}",
+                        tier.name(),
+                        block + i as u64
+                    );
+                }
+            }
+            block += n as u64;
+        }
+    }
+}
+
+/// Exhaustive takum roundtrip: decode every takum8 and takum16 bit
+/// pattern through the scalar reference, then encode the values back
+/// through every tier's vector encode plane. Takum is total and
+/// injective, so `encode(decode(b)) == b` for every pattern — including
+/// NaR, which decodes to NaN and must re-encode to the NaR pattern on
+/// every tier (the boundary-search kernels' NaR fixup lane).
+#[test]
+fn exhaustive_takum_roundtrip_across_tiers() {
+    for n_bits in [8u32, 16] {
+        let ty = LaneType::Takum(n_bits);
+        let scalar = LaneCodec::resolve(ty, CodecMode::Lut);
+        let patterns = 1u64 << n_bits;
+        let all: Vec<f64> = (0..patterns).map(|b| scalar.decode(b)).collect();
+        for tier in Tier::supported() {
+            let codec = LaneCodec::resolve_tiered(ty, CodecMode::Lut, Backend::Vector, tier);
+            // Chunked like the machine's encode batches, so every lane
+            // position of the lockstep kernels gets hit.
+            for (chunk_idx, chunk) in all.chunks(64).enumerate() {
+                let mut bits = vec![0u64; chunk.len()];
+                codec.encode_slice(chunk, &mut bits);
+                for (i, &b) in bits.iter().enumerate() {
+                    let expect = chunk_idx as u64 * 64 + i as u64;
+                    assert_eq!(
+                        b,
+                        expect,
+                        "TIER ROUNDTRIP MISMATCH takum{n_bits} simd={} bits={expect:#x} \
+                         (value {})",
+                        tier.name(),
+                        chunk[i]
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Encode special-value edges: NaN, ±inf, ±0, overflow and underflow
+/// magnitudes — the values whose encode takes the arithmetic fallback
+/// rather than the table sweep. Every tier's batched encode must equal
+/// the scalar per-value encode on every tabulated format; NaN in
+/// particular must land on the format's NaR/NaN pattern identically.
+#[test]
+fn encode_specials_bit_identical_across_tiers() {
+    let specials = [
+        f64::NAN,
+        f64::INFINITY,
+        f64::NEG_INFINITY,
+        0.0,
+        -0.0,
+        1.0,
+        -1.0,
+        1e30,
+        -1e30,
+        1e-30,
+        -1e-30,
+        0.5,
+        -2.75,
+        65504.0,
+        -65504.0,
+        3.0e5,
+    ];
+    for (ty, _) in TABULATED {
+        let scalar = LaneCodec::resolve(ty, CodecMode::Lut);
+        let expect: Vec<u64> = specials.iter().map(|&x| scalar.encode(x)).collect();
+        for tier in Tier::supported() {
+            let codec = LaneCodec::resolve_tiered(ty, CodecMode::Lut, Backend::Vector, tier);
+            let mut got = vec![0u64; specials.len()];
+            codec.encode_slice(&specials, &mut got);
+            assert_eq!(
+                expect,
+                got,
+                "TIER ENCODE MISMATCH {ty:?} simd={} on special values",
+                tier.name()
+            );
+        }
+    }
+}
+
+/// Machine-level FMA and widening-dot planes: the same deterministic
+/// program — packed FMA in all three operand orders, the takum widening
+/// dots, masked writes — run on an engine forced to every supported
+/// tier must leave architectural state bit-identical to the scalar
+/// backend's. This drives the tier dispatch through the real
+/// `Engine::build` → `Machine` path rather than raw codecs.
+#[test]
+fn fma_and_dot_planes_bit_identical_across_forced_engines() {
+    for (sfx, ty, dp) in [
+        ("PT8", LaneType::Takum(8), Some("VDPPT8PT16")),
+        ("PT16", LaneType::Takum(16), Some("VDPPT16PT32")),
+        ("NEPBF16", LaneType::Mini(BF16), Some("VDPBF16PS")),
+        ("PH", LaneType::Mini(F16), Some("VDPPHPS")),
+        ("HF8", LaneType::Mini(E4M3), None),
+    ] {
+        let lanes = VecReg::lanes(ty.width());
+        let loads: Vec<(u8, Vec<f64>)> =
+            (0u8..5).map(|r| (r, values(0xC0DE + r as u64, lanes))).collect();
+
+        let mut prog = Program::default();
+        for (i, (mn, ord)) in [("VFMADD", "132"), ("VFMSUB", "213"), ("VFNMADD", "231")]
+            .iter()
+            .enumerate()
+        {
+            prog.push(Instruction::new(
+                &format!("{mn}{ord}{sfx}"),
+                Operand::Vreg(2 + i as u8),
+                vec![Operand::Vreg(0), Operand::Vreg(1)],
+            ));
+        }
+        // A masked, zeroing FMA so the merge path crosses the tier too.
+        prog.push(
+            Instruction::new(
+                &format!("VFNMSUB213{sfx}"),
+                Operand::Vreg(4),
+                vec![Operand::Vreg(2), Operand::Vreg(3)],
+            )
+            .with_mask(1, true),
+        );
+        if let Some(dp) = dp {
+            prog.push(Instruction::new(
+                dp,
+                Operand::Vreg(9),
+                vec![Operand::Vreg(0), Operand::Vreg(1)],
+            ));
+        }
+
+        let run = |cfg: EngineConfig| {
+            let eng = cfg.build().unwrap();
+            let mut m = eng.machine();
+            for (reg, vals) in &loads {
+                m.load_f64(*reg, ty, vals);
+            }
+            m.set_mask(1, 0xAAAA_AAAA_5555_5555);
+            m.run(&prog).unwrap_or_else(|e| panic!("{sfx}: {e}"));
+            m
+        };
+
+        let reference = run(EngineConfig::new().codec(CodecMode::Lut).backend(Backend::Scalar));
+        for tier in Tier::supported() {
+            let m = run(EngineConfig::new()
+                .codec(CodecMode::Lut)
+                .backend(Backend::Vector)
+                .simd(tier));
+            assert_eq!(m.tier(), tier, "{sfx}: machine must run the forced tier");
+            for reg in 0..32 {
+                assert_eq!(
+                    reference.regs.v[reg],
+                    m.regs.v[reg],
+                    "TIER FMA/DOT MISMATCH {sfx} simd={} v{reg}",
+                    tier.name()
+                );
+            }
+        }
+    }
+}
+
+/// The `--simd` axis end to end: a forced tier sticks through `build()`,
+/// is stamped into the engine tag (and therefore into every schema-v3
+/// bench JSON `engine_config`), and an unavailable tier is rejected at
+/// build time with an error naming the supported set — it never reaches
+/// a dispatch table.
+#[test]
+fn forced_tier_is_stamped_and_unavailable_tiers_rejected() {
+    for tier in Tier::supported() {
+        let eng = EngineConfig::new().simd(tier).build().unwrap();
+        assert_eq!(eng.simd(), tier);
+        assert!(
+            eng.tag().ends_with(&format!(";simd={}", tier.name())),
+            "tag {:?} must stamp the resolved tier",
+            eng.tag()
+        );
+        assert_eq!(eng.machine().tier(), tier);
+    }
+    for &tier in Tier::ALL.iter().filter(|t| !t.available()) {
+        let err = EngineConfig::new().simd(tier).build().unwrap_err().to_string();
+        assert!(
+            err.contains("not available on this host") && err.contains("scalar"),
+            "unavailable tier {:?} must be rejected naming the supported set, got: {err}",
+            tier.name()
+        );
+    }
+}

@@ -4,6 +4,10 @@
 //! state (all 32 vector registers and all 8 mask registers), and the
 //! HLO-lite graph interpreter (`Graph::lift` → `optimize` → `run_on`)
 //! must reproduce the machine replay of every liftable program exactly.
+//! A further axis forces the vector backend through every SIMD tier the
+//! host supports (`sim::simd::Tier`) — specialised lane kernels are held
+//! bit-identical to the scalar reference, NaR/NaN canonicalisation
+//! included.
 //!
 //! Every machine here is built through `engine::EngineConfig`/`Engine` —
 //! the unified execution context — so the corpus simultaneously pins the
@@ -22,7 +26,7 @@ use takum_avx10::engine::{Engine, EngineConfig};
 use takum_avx10::kernels::run_suite;
 use takum_avx10::num::{BF16, E4M3, E5M2, F16, F32};
 use takum_avx10::sim::{
-    Backend, CodecMode, Graph, Instruction, LaneType, Machine, Operand, Program, VecReg,
+    Backend, CodecMode, Graph, Instruction, LaneType, Machine, Operand, Program, Tier, VecReg,
 };
 use takum_avx10::verify::{Externals, Verifier};
 
@@ -351,6 +355,69 @@ fn cross_backend_bit_identity_on_random_programs() {
                 );
             }
             assert_eq!(reference.executed, m.executed, "seed={seed:#x}");
+        }
+    }
+}
+
+/// The SIMD-tier differential gate: the same corpus run on the vector
+/// backend forced through every tier this host supports must leave
+/// bit-identical architectural state to the scalar/LUT reference. This
+/// holds the whole tier cascade (`sim::simd`) — AVX-512 gathers, AVX2
+/// lane kernels, the generic `LANES` instantiations — to the one
+/// contract that matters: a tier is a speed, never a value. NaN payload
+/// lanes from the generator make this simultaneously the NaR-contract
+/// fuzz axis: every tier must canonicalise NaN to the format's NaR/NaN
+/// pattern identically, or a v-reg compare fails.
+#[test]
+fn cross_tier_bit_identity_on_random_programs() {
+    let tiers = Tier::supported();
+    assert!(
+        tiers.contains(&Tier::Scalar),
+        "Tier::supported() must always include the scalar anchor"
+    );
+    let engines: Vec<(Tier, Engine)> = tiers
+        .iter()
+        .map(|&tier| {
+            let eng = EngineConfig::new()
+                .codec(CodecMode::Lut)
+                .backend(Backend::Vector)
+                .simd(tier)
+                .build()
+                .unwrap_or_else(|e| panic!("building forced-{} engine: {e}", tier.name()));
+            assert_eq!(eng.simd(), tier, "forced tier must stick through build()");
+            (tier, eng)
+        })
+        .collect();
+    let reference_engine = engine_for(CodecMode::Lut, Backend::Scalar);
+    for &seed in &SEEDS {
+        let case = generate(seed, false);
+        let mut reference = case.machine(&reference_engine);
+        reference
+            .run(&case.prog)
+            .unwrap_or_else(|e| panic!("seed={seed:#x}: reference run failed: {e}"));
+        for (tier, eng) in &engines {
+            let mut m = case.machine(eng);
+            assert_eq!(m.tier(), *tier, "machine must dispatch through the forced tier");
+            m.run(&case.prog)
+                .unwrap_or_else(|e| panic!("seed={seed:#x} simd={}: {e}", tier.name()));
+            for reg in 0..32 {
+                assert_eq!(
+                    reference.regs.v[reg],
+                    m.regs.v[reg],
+                    "TIER MISMATCH seed={seed:#x} simd={} v{reg} \
+                     (pin this seed in SEEDS to reproduce)",
+                    tier.name()
+                );
+            }
+            for k in 0..8 {
+                assert_eq!(
+                    reference.regs.k[k],
+                    m.regs.k[k],
+                    "TIER MISMATCH seed={seed:#x} simd={} k{k}",
+                    tier.name()
+                );
+            }
+            assert_eq!(reference.executed, m.executed, "seed={seed:#x} simd={}", tier.name());
         }
     }
 }
