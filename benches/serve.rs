@@ -1,0 +1,37 @@
+//! Serving-layer bench: the seeded deterministic replay harness driving
+//! one million requests through the multi-tenant server (lockstep
+//! bursts, batching/coalescing, watermark shedding disabled by sizing
+//! the burst under the watermark) and emitting p50/p99 end-to-end
+//! latency, throughput, the batch-size histogram and the shed rate as
+//! `BENCH_serve.json` (Bencher schema v3 + the deterministic `serve`
+//! object — same seed ⇒ byte-identical modulo the timing rows).
+//!
+//! `TAKUM_BENCH_QUICK` (or `--quick`) cuts the trace to 20k requests
+//! for CI.
+
+use takum_avx10::engine::EngineConfig;
+use takum_avx10::serve::{replay, ReplayConfig};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("TAKUM_BENCH_QUICK").is_ok();
+    let cfg = ReplayConfig {
+        requests: if quick { 20_000 } else { 1_000_000 },
+        tenants: vec![("default".to_string(), EngineConfig::from_env())],
+        ..ReplayConfig::default()
+    };
+    println!(
+        "serve replay: {} requests, burst {}, watermark {}, batch max {}, {} workers",
+        cfg.requests, cfg.burst, cfg.watermark, cfg.batch_max, cfg.server_workers
+    );
+    let report = replay::run(&cfg).expect("replay");
+    print!("{}", report.render());
+    assert_eq!(
+        report.completed + report.errors + report.shed,
+        report.requests,
+        "every driven request must be accounted for"
+    );
+    let path = "BENCH_serve.json";
+    std::fs::write(path, report.to_bench_json()).expect("write artifact");
+    println!("wrote serving artifact to {path}");
+}

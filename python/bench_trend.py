@@ -97,6 +97,10 @@ def hit_rate(counters, kind):
 def telemetry_diff(base_telem, cur_telem):
     """Print hit-rate / convert drift between two embedded snapshots.
 
+    Rows are buffered and the section header is emitted only when at
+    least one row survives — two snapshots with empty or disjoint
+    counters produce no output at all, rather than a dangling header.
+
     Returns the list of flagged drift strings (informational — the
     caller never turns these into a failing exit code).
     """
@@ -105,7 +109,7 @@ def telemetry_diff(base_telem, cur_telem):
     base_c = base_telem.get("counters", {})
     cur_c = cur_telem.get("counters", {})
     flagged = []
-    print("\n  telemetry drift (informational, never gates):")
+    rows = []
     for kind, label in (("plan", "plan-cache"), ("shadow", "decoded-shadow")):
         b, c = hit_rate(base_c, kind), hit_rate(cur_c, kind)
         if b is None or c is None:
@@ -114,13 +118,17 @@ def telemetry_diff(base_telem, cur_telem):
         if b - c > HIT_RATE_DROP_POINTS:
             note = f"  ⚠ dropped >{HIT_RATE_DROP_POINTS:.0f} points"
             flagged.append(f"{label} hit rate {b:.1f}% → {c:.1f}%")
-        print(f"    {label} hit rate: {b:.1f}% → {c:.1f}%{note}")
+        rows.append(f"    {label} hit rate: {b:.1f}% → {c:.1f}%{note}")
     for key in ("converts", "dots", "executed"):
         b, c = base_c.get(key), cur_c.get(key)
         if b is None or c is None:
             continue
         note = " (changed)" if b != c else ""
-        print(f"    {key}: {b} → {c}{note}")
+        rows.append(f"    {key}: {b} → {c}{note}")
+    if rows:
+        print("\n  telemetry drift (informational, never gates):")
+        for row in rows:
+            print(row)
     return flagged
 
 

@@ -1,0 +1,163 @@
+"""Live tests for python/bench_trend.py, the perf-trajectory differ.
+
+Dependency-free by design (unittest + subprocess + tempfile only): the
+script itself runs on bare python3 in CI, and so must its tests — no
+pytest, no jax, no fixtures beyond temp directories.
+
+Covers the output contract CI depends on:
+- empty / counter-less telemetry snapshots emit NO drift header (the
+  header appears only when at least one drift row exists);
+- populated snapshots emit the header plus rows;
+- a regression beyond the threshold exits 2, within-threshold exits 0;
+- a missing baseline directory is a clean first-run skip (exit 0);
+- a serve artifact's extra top-level `serve` object is ignored.
+"""
+
+import json
+import subprocess
+import sys
+import tempfile
+import unittest
+from pathlib import Path
+
+SCRIPT = Path(__file__).resolve().parents[1] / "bench_trend.py"
+
+TAG = "backend=scalar;codec=lut;workers=2;verify=off;trace=none;simd=scalar"
+
+
+def artifact(rows, telemetry=None, extra=None):
+    """A minimal schema-v3 bench JSON document: rows is {name: median_ns}."""
+    doc = {
+        "schema_version": 3,
+        "bench": "unit",
+        "engine_config": TAG,
+        "telemetry": telemetry,
+        "results": [
+            {
+                "group": "g",
+                "name": name,
+                "median_ns": float(median),
+                "mean_ns": float(median),
+                "stddev_ns": 0.0,
+                "iters": 1,
+                "elements": None,
+                "throughput_elem_per_s": None,
+            }
+            for name, median in rows.items()
+        ],
+    }
+    if extra:
+        doc.update(extra)
+    return doc
+
+
+def run_trend(base_docs, cur_docs, threshold=10):
+    """Write the given {filename: doc} trees and run the differ on them."""
+    with tempfile.TemporaryDirectory() as td:
+        td = Path(td)
+        base = td / "base"
+        cur = td / "cur"
+        cur.mkdir()
+        if base_docs is not None:
+            base.mkdir()
+            for name, doc in base_docs.items():
+                (base / name).write_text(json.dumps(doc))
+        for name, doc in cur_docs.items():
+            (cur / name).write_text(json.dumps(doc))
+        return subprocess.run(
+            [sys.executable, str(SCRIPT), str(base), str(cur), "--threshold", str(threshold)],
+            capture_output=True,
+            text=True,
+            check=False,
+        )
+
+
+class TelemetryDriftHeader(unittest.TestCase):
+    def test_empty_counters_emit_no_drift_header(self):
+        """Two snapshots whose counters produce zero drift rows must not
+        print the dangling 'telemetry drift' header."""
+        for counters in ({}, {"unrelated": 1}):
+            telem = {"schema": 1, "counters": counters}
+            p = run_trend(
+                {"BENCH_x.json": artifact({"a": 100}, telemetry=telem)},
+                {"BENCH_x.json": artifact({"a": 100}, telemetry=telem)},
+            )
+            self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+            self.assertNotIn("telemetry drift", p.stdout, p.stdout)
+
+    def test_null_telemetry_emits_no_drift_header(self):
+        p = run_trend(
+            {"BENCH_x.json": artifact({"a": 100})},
+            {"BENCH_x.json": artifact({"a": 100})},
+        )
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertNotIn("telemetry drift", p.stdout, p.stdout)
+
+    def test_populated_counters_emit_header_and_rows(self):
+        base_t = {
+            "schema": 1,
+            "counters": {"plan_hits": 90, "plan_misses": 10, "converts": 5},
+        }
+        cur_t = {
+            "schema": 1,
+            "counters": {"plan_hits": 50, "plan_misses": 50, "converts": 7},
+        }
+        p = run_trend(
+            {"BENCH_x.json": artifact({"a": 100}, telemetry=base_t)},
+            {"BENCH_x.json": artifact({"a": 100}, telemetry=cur_t)},
+        )
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertIn("telemetry drift", p.stdout)
+        self.assertIn("plan-cache hit rate: 90.0% → 50.0%", p.stdout)
+        self.assertIn("converts: 5 → 7 (changed)", p.stdout)
+        # 90 → 50 is a >5-point drop: flagged in the summary.
+        self.assertIn("hit-rate drop", p.stdout)
+
+
+class RegressionGate(unittest.TestCase):
+    def test_regression_beyond_threshold_exits_2(self):
+        p = run_trend(
+            {"BENCH_x.json": artifact({"a": 100})},
+            {"BENCH_x.json": artifact({"a": 150})},
+        )
+        self.assertEqual(p.returncode, 2, p.stdout + p.stderr)
+        self.assertIn("regressed", p.stdout)
+
+    def test_within_threshold_exits_0(self):
+        p = run_trend(
+            {"BENCH_x.json": artifact({"a": 100})},
+            {"BENCH_x.json": artifact({"a": 105})},
+        )
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+
+    def test_missing_baseline_dir_is_first_run_skip(self):
+        p = run_trend(None, {"BENCH_x.json": artifact({"a": 100})})
+        self.assertEqual(p.returncode, 0, p.stdout + p.stderr)
+        self.assertIn("first run", p.stdout)
+
+
+class ServeArtifact(unittest.TestCase):
+    def test_extra_serve_object_is_ignored(self):
+        """BENCH_serve.json carries a deterministic top-level `serve`
+        object; the differ must diff the timing rows and ignore it."""
+        serve = {
+            "serve": {
+                "requests": 1000,
+                "completed": 1000,
+                "shed": 0,
+                "errors": 0,
+                "coalesced": 400,
+                "batches": 60,
+                "batch_size_histogram": {"16": 60},
+            }
+        }
+        p = run_trend(
+            {"BENCH_serve.json": artifact({"e2e latency [p50]": 1000}, extra=serve)},
+            {"BENCH_serve.json": artifact({"e2e latency [p50]": 2000}, extra=serve)},
+        )
+        self.assertEqual(p.returncode, 2, p.stdout + p.stderr)
+        self.assertIn("e2e latency [p50]", p.stdout)
+
+
+if __name__ == "__main__":
+    unittest.main()

@@ -73,6 +73,13 @@ pub struct EngineConfig {
     /// the engine writes its span ring there on drop (see
     /// [`crate::telemetry::spans`]).
     pub(crate) trace: Option<String>,
+    /// Telemetry-snapshot persistence path (`TAKUM_STATS` /
+    /// `--stats-path`); `None` = [`crate::telemetry::STATS_FILE`] in the
+    /// CWD. Snapshots are always installed atomically
+    /// ([`crate::telemetry::TelemetrySnapshot::persist`]); the server
+    /// derives per-tenant paths from this base so tenants never clobber
+    /// each other.
+    pub(crate) stats_path: Option<String>,
 }
 
 impl Default for EngineConfig {
@@ -94,6 +101,7 @@ impl EngineConfig {
             seed: 0xBEEF,
             verify: Verify::default(),
             trace: None,
+            stats_path: None,
         }
     }
 
@@ -108,6 +116,7 @@ impl EngineConfig {
             std::env::var("TAKUM_SIMD").ok().as_deref(),
             std::env::var("TAKUM_VERIFY").ok().as_deref(),
             std::env::var("TAKUM_TRACE").ok().as_deref(),
+            std::env::var("TAKUM_STATS").ok().as_deref(),
         )
     }
 
@@ -116,23 +125,29 @@ impl EngineConfig {
     /// are unit-testable without mutating process state. `trace` is a
     /// file path (any non-empty value enables trace export); an empty
     /// `TAKUM_TRACE` is treated as unset, as are empty/`auto`
-    /// `TAKUM_SIMD` values (auto-detect).
+    /// `TAKUM_SIMD` values (auto-detect). `stats` (`TAKUM_STATS`) is the
+    /// snapshot persistence path; empty = unset (default
+    /// [`crate::telemetry::STATS_FILE`]).
     pub fn from_env_values(
         backend: Option<&str>,
         codec: Option<&str>,
         simd: Option<&str>,
         verify: Option<&str>,
         trace: Option<&str>,
+        stats: Option<&str>,
     ) -> EngineConfig {
         let mut cfg = EngineConfig::new()
             .backend(Backend::parse_env(backend))
             .codec(CodecMode::parse_env(codec))
             .verify(Verify::parse_env(verify));
         cfg.simd = Tier::parse_env(simd);
-        match trace {
-            Some(path) if !path.is_empty() => cfg.trace(path),
-            _ => cfg,
+        if let Some(path) = trace.filter(|p| !p.is_empty()) {
+            cfg = cfg.trace(path);
         }
+        if let Some(path) = stats.filter(|p| !p.is_empty()) {
+            cfg = cfg.stats_path(path);
+        }
+        cfg
     }
 
     /// Select the plane backend.
@@ -195,6 +210,14 @@ impl EngineConfig {
     /// `TAKUM_TRACE=<path>`, the CLI spelling `--trace <path>`.
     pub fn trace(mut self, path: &str) -> EngineConfig {
         self.trace = Some(path.to_string());
+        self
+    }
+
+    /// Persist telemetry snapshots to `path` instead of the default
+    /// [`crate::telemetry::STATS_FILE`]. The env spelling is
+    /// `TAKUM_STATS=<path>`, the CLI spelling `--stats-path <path>`.
+    pub fn stats_path(mut self, path: &str) -> EngineConfig {
+        self.stats_path = Some(path.to_string());
         self
     }
 
@@ -269,11 +292,12 @@ mod tests {
         assert_eq!(base.mode, CodecMode::Lut);
 
         // Unset env ⇒ built-in defaults.
-        let cfg = EngineConfig::from_env_values(None, None, None, None, None);
+        let cfg = EngineConfig::from_env_values(None, None, None, None, None, None);
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Scalar));
         assert_eq!(cfg.simd, None);
         assert_eq!(cfg.verify, Verify::Off);
         assert_eq!(cfg.trace, None);
+        assert_eq!(cfg.stats_path, None);
 
         // Valid env values override the defaults.
         let cfg = EngineConfig::from_env_values(
@@ -282,30 +306,34 @@ mod tests {
             Some("scalar"),
             Some("deny"),
             Some("out/trace.json"),
+            Some("out/stats.json"),
         );
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Arith, Backend::Vector));
         assert_eq!(cfg.simd, Some(Tier::Scalar));
         assert_eq!(cfg.verify, Verify::Deny);
         assert_eq!(cfg.trace.as_deref(), Some("out/trace.json"));
-        let cfg = EngineConfig::from_env_values(Some("graph"), None, None, None, None);
+        assert_eq!(cfg.stats_path.as_deref(), Some("out/stats.json"));
+        let cfg = EngineConfig::from_env_values(Some("graph"), None, None, None, None, None);
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Graph));
 
         // Invalid env values warn (stderr) and fall back to the default
-        // rather than failing construction; an empty TAKUM_TRACE is
-        // unset, not a trace to a file named "", and TAKUM_SIMD falls
-        // back to auto-detect (None), as do ""/"auto".
+        // rather than failing construction; empty TAKUM_TRACE /
+        // TAKUM_STATS are unset, not paths named "", and TAKUM_SIMD
+        // falls back to auto-detect (None), as do ""/"auto".
         let cfg = EngineConfig::from_env_values(
             Some("gpu"),
             Some("banana"),
             Some("mmx"),
             Some("paranoid"),
             Some(""),
+            Some(""),
         );
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Scalar));
         assert_eq!(cfg.simd, None);
         assert_eq!(cfg.verify, Verify::Off);
         assert_eq!(cfg.trace, None);
-        let cfg = EngineConfig::from_env_values(None, None, Some("auto"), None, None);
+        assert_eq!(cfg.stats_path, None);
+        let cfg = EngineConfig::from_env_values(None, None, Some("auto"), None, None, None);
         assert_eq!(cfg.simd, None);
     }
 

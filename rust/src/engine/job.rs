@@ -152,13 +152,17 @@ impl Engine {
     /// returned variant always matches the submitted job's.
     ///
     /// Every submitted job records one span per lifecycle stage
-    /// (`submit → verify → plan → decode → execute → encode`, see
-    /// [`crate::telemetry::spans`]): stages a job kind fuses into its
-    /// execution body appear as zero-duration markers, so the span count
-    /// and ordering are invariants across job kinds. The umbrella
-    /// `submit` span covers the whole call.
+    /// (`queue → submit → verify → plan → decode → execute → encode`,
+    /// see [`crate::telemetry::spans`]): stages a job kind fuses into
+    /// its execution body appear as zero-duration markers, so the span
+    /// count and ordering are invariants across job kinds. Direct
+    /// submits have no queue in front of them, so `queue` is a
+    /// zero-duration marker here; the serving layer records real queue
+    /// waits (`crate::serve`). The umbrella `submit` span covers the
+    /// whole call.
     pub fn submit(&self, job: Job) -> Result<JobResult> {
         let tr = self.begin_job(job.kind());
+        tr.mark(Stage::Queue);
         let start = Instant::now();
         let out = self.submit_traced(job, &tr);
         self.record_span(tr.job, tr.kind, Stage::Submit, start, start.elapsed());

@@ -91,13 +91,24 @@ pub(crate) use config::process_default;
 use crate::num::lut;
 use crate::runtime::{default_artifact_dir, PjrtHandle, PjrtService};
 use crate::sim::{Backend, CodecMode, LanePlan, Machine, Tier};
-use crate::telemetry::{Registry, SpanRecorder, Stage, TelemetrySnapshot, VerifyOutcome};
+use crate::telemetry::{Registry, SpanRecorder, Stage, TelemetrySnapshot, VerifyOutcome, STATS_FILE};
 use crate::verify::{self, Verify};
 use anyhow::{bail, ensure, Context, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
+
+/// State of the engine-owned PJRT artifact service (see
+/// [`Engine::pjrt`]): not yet started, running, or failed-to-start with
+/// the error cached so later callers fail fast instead of re-running the
+/// expensive start.
+#[derive(Debug)]
+enum PjrtSlot {
+    Empty,
+    Ready(PjrtService),
+    Failed(String),
+}
 
 /// The execution context (see the module docs): built once from an
 /// [`EngineConfig`], shared by reference across workers.
@@ -113,8 +124,17 @@ pub struct Engine {
     /// into a machine copies pointers, not strings).
     plans: Mutex<HashMap<&'static str, LanePlan>>,
     /// Lazily started PJRT artifact service (graph-interpreter fallback
-    /// without the `pjrt` feature).
-    pjrt: Mutex<Option<PjrtService>>,
+    /// without the `pjrt` feature). The slot lock is only ever held for
+    /// pointer-sized reads and installs — never across the (expensive,
+    /// I/O-bound) `PjrtService::start`; see [`Engine::pjrt`].
+    pjrt: Mutex<PjrtSlot>,
+    /// Serializes *starters* of the PJRT service (not readers): the
+    /// caller that loses the fast-path race waits here while exactly one
+    /// start runs, without `pjrt` itself being locked.
+    pjrt_start: Mutex<()>,
+    /// How many times `PjrtService::start` actually ran (test surface
+    /// for the single-start contract).
+    pjrt_starts: AtomicU64,
     /// Per-engine metrics registry (see [`crate::telemetry`]): machines
     /// fold their counters in on [`Engine::absorb`]; per-engine so
     /// concurrent engines (and parallel tests) never share counters.
@@ -168,7 +188,9 @@ impl Engine {
             cfg,
             resolved_simd,
             plans: Mutex::new(HashMap::new()),
-            pjrt: Mutex::new(None),
+            pjrt: Mutex::new(PjrtSlot::Empty),
+            pjrt_start: Mutex::new(()),
+            pjrt_starts: AtomicU64::new(0),
             telemetry: Registry::new(),
             spans: SpanRecorder::default(),
             next_job: AtomicU64::new(0),
@@ -328,14 +350,76 @@ impl Engine {
         self.plans.lock().expect("plan cache poisoned").len()
     }
 
+    /// Copy every mnemonic plan `donor` has resolved into this engine's
+    /// shared plan cache. Plans are pure functions of the mnemonic, so
+    /// seeding across engines cannot change results — this is how a
+    /// hot-swapped replacement engine ([`EngineHandle::swap`]) starts
+    /// with the outgoing engine's warm cache instead of re-resolving
+    /// under traffic.
+    pub fn preseed_plans_from(&self, donor: &Engine) {
+        let donor_plans = donor.plans.lock().expect("plan cache poisoned").clone();
+        let mut plans = self.plans.lock().expect("plan cache poisoned");
+        for (mn, plan) in donor_plans {
+            plans.entry(mn).or_insert(plan);
+        }
+    }
+
+    /// Where this engine persists telemetry snapshots: the configured
+    /// `--stats-path` / `TAKUM_STATS`, or [`STATS_FILE`] in the CWD.
+    pub fn stats_path(&self) -> &str {
+        self.cfg.stats_path.as_deref().unwrap_or(STATS_FILE)
+    }
+
     /// The engine-owned PJRT artifact service, started on first use from
     /// the default artifact directory.
+    ///
+    /// Start-outside-lock with install-under-lock: the slot mutex is
+    /// held only for the state check and the install, never across
+    /// [`PjrtService::start`] (which walks the artifact directory — I/O
+    /// a concurrent kernel submitter must not serialize behind). A
+    /// separate starter mutex guarantees the expensive start runs **at
+    /// most once** even under a thundering herd of first callers
+    /// ([`Engine::pjrt_starts`] is the test surface), and a failed start
+    /// is cached so later callers fail fast with the original error
+    /// instead of re-walking the directory per call.
     pub fn pjrt(&self) -> Result<PjrtHandle> {
-        let mut guard = self.pjrt.lock().expect("pjrt service poisoned");
-        if guard.is_none() {
-            *guard = Some(PjrtService::start(&default_artifact_dir())?);
+        // Fast path: the slot is resolved — readers only ever take the
+        // slot lock for the duration of a match.
+        match &*self.pjrt.lock().expect("pjrt service poisoned") {
+            PjrtSlot::Ready(svc) => return Ok(svc.handle()),
+            PjrtSlot::Failed(e) => bail!("pjrt service failed to start: {e}"),
+            PjrtSlot::Empty => {}
         }
-        Ok(guard.as_ref().expect("just installed").handle())
+        // Slow path: serialize starters (slot lock NOT held here).
+        let _starting = self.pjrt_start.lock().expect("pjrt starter poisoned");
+        // A racer may have resolved the slot while we waited.
+        match &*self.pjrt.lock().expect("pjrt service poisoned") {
+            PjrtSlot::Ready(svc) => return Ok(svc.handle()),
+            PjrtSlot::Failed(e) => bail!("pjrt service failed to start: {e}"),
+            PjrtSlot::Empty => {}
+        }
+        self.pjrt_starts.fetch_add(1, Ordering::Relaxed);
+        let started = PjrtService::start(&default_artifact_dir());
+        let mut guard = self.pjrt.lock().expect("pjrt service poisoned");
+        match started {
+            Ok(svc) => {
+                let handle = svc.handle();
+                *guard = PjrtSlot::Ready(svc);
+                Ok(handle)
+            }
+            Err(e) => {
+                let msg = format!("{e:#}");
+                *guard = PjrtSlot::Failed(msg);
+                Err(e.context("starting pjrt service"))
+            }
+        }
+    }
+
+    /// How many times the PJRT service start actually ran (0 until the
+    /// first [`Engine::pjrt`] call; stays 1 under any number of
+    /// concurrent callers — the single-start contract).
+    pub fn pjrt_starts(&self) -> u64 {
+        self.pjrt_starts.load(Ordering::Relaxed)
     }
 
     /// Names of the artifacts the engine-owned runtime can serve.
@@ -423,6 +507,42 @@ impl Drop for Engine {
     }
 }
 
+/// A swappable handle to a shared [`Engine`] — the `arc_swap` idiom on
+/// std primitives: readers [`EngineHandle::load`] an `Arc<Engine>` (a
+/// brief read-lock, then lock-free use of the clone), and
+/// [`EngineHandle::swap`] repoints the slot to a replacement engine
+/// under a write lock **without draining in-flight work** — jobs running
+/// on the outgoing engine keep their `Arc` alive and finish on the
+/// config they started with; only work picked up after the swap sees
+/// the new engine. This is the serving layer's zero-downtime config
+/// hot-swap primitive (`crate::serve::Server::swap_tenant`).
+#[derive(Debug)]
+pub struct EngineHandle {
+    slot: RwLock<Arc<Engine>>,
+}
+
+impl EngineHandle {
+    pub fn new(engine: Arc<Engine>) -> EngineHandle {
+        EngineHandle { slot: RwLock::new(engine) }
+    }
+
+    /// The current engine. The read lock is held only for the `Arc`
+    /// clone — callers then use the engine without any lock.
+    pub fn load(&self) -> Arc<Engine> {
+        Arc::clone(&self.slot.read().expect("engine handle poisoned"))
+    }
+
+    /// Repoint the handle at `next`, pre-seeding it with the outgoing
+    /// engine's resolved mnemonic plans so it starts warm, and return
+    /// the engine it replaced (kept alive by any in-flight jobs still
+    /// holding it).
+    pub fn swap(&self, next: Arc<Engine>) -> Arc<Engine> {
+        let mut slot = self.slot.write().expect("engine handle poisoned");
+        next.preseed_plans_from(&slot);
+        std::mem::replace(&mut *slot, next)
+    }
+}
+
 /// Per-job span context: created by [`Engine::begin_job`] at the top of
 /// `Engine::submit`, passed down so each lifecycle stage records exactly
 /// one span (see [`crate::telemetry::spans`]). Stages a job kind fuses
@@ -446,6 +566,15 @@ impl JobTrace<'_> {
     /// Record a zero-duration marker for a stage fused into another.
     pub(crate) fn mark(&self, stage: Stage) {
         self.eng.record_span(self.job, self.kind, stage, Instant::now(), Duration::ZERO);
+    }
+
+    /// Record a span into the trace ring **only** — not the per-stage
+    /// latency histogram. The serving layer uses this for its per-batch
+    /// queue spans: each member request already records its own wait
+    /// into the `queue` histogram, so a second histogram entry per batch
+    /// would skew the quantiles.
+    pub(crate) fn span_only(&self, stage: Stage, start: Instant, dur: Duration) {
+        self.eng.spans.record(self.job, self.kind, stage, start, dur);
     }
 }
 
@@ -579,6 +708,43 @@ mod tests {
             assert!(e.contains("not available on this host"), "{e:?}");
             assert!(e.contains("scalar"), "error must list the supported tiers: {e:?}");
         }
+    }
+
+    /// [`EngineHandle::swap`] repoints the slot without invalidating
+    /// clones loaded before the swap, pre-seeds the incoming engine with
+    /// the outgoing engine's plan cache, and returns the replaced
+    /// engine.
+    #[test]
+    fn engine_handle_swap_preseeds_and_keeps_old_engine_alive() {
+        use crate::sim::{Instruction, LaneType, Operand};
+        let old = Arc::new(EngineConfig::new().workers(1).build().unwrap());
+        // Resolve one plan on the outgoing engine.
+        let mut m = old.machine();
+        let t = LaneType::Takum(16);
+        m.load_f64(0, t, &[1.0]);
+        m.load_f64(1, t, &[2.0]);
+        m.step(&Instruction::new(
+            "VADDPT16",
+            Operand::Vreg(2),
+            vec![Operand::Vreg(0), Operand::Vreg(1)],
+        ))
+        .unwrap();
+        old.absorb_plans(&m);
+        assert_eq!(old.cached_plans(), 1);
+
+        let handle = EngineHandle::new(Arc::clone(&old));
+        let in_flight = handle.load(); // a job that started pre-swap
+        let next = Arc::new(
+            EngineConfig::new().codec(CodecMode::Arith).workers(2).build().unwrap(),
+        );
+        assert_eq!(next.cached_plans(), 0);
+        let replaced = handle.swap(Arc::clone(&next));
+        assert!(Arc::ptr_eq(&replaced, &old), "swap returns the outgoing engine");
+        assert!(Arc::ptr_eq(&handle.load(), &next), "new loads see the replacement");
+        assert_eq!(next.cached_plans(), 1, "replacement starts with the donor's plans");
+        // The pre-swap clone still works on the old config (no drain).
+        assert_eq!(in_flight.mode(), CodecMode::Lut);
+        assert!(Arc::ptr_eq(&in_flight, &old));
     }
 
     /// `Engine::absorb` folds a finished machine's counters into the

@@ -41,6 +41,12 @@
 //! a job-lifecycle span recorder with Chrome-trace export
 //! (`TAKUM_TRACE=<path>` / `--trace`), surfaced through
 //! `Engine::telemetry()` and the `stats` CLI subcommand.
+//!
+//! On top of the engine sits the [`serve`] module: a long-lived
+//! multi-tenant serving layer (bounded request queue, batching and
+//! coalescing, per-tenant configs with zero-downtime hot-swap,
+//! watermark load-shedding) plus a seeded deterministic replay harness
+//! — the `serve` CLI subcommand and `benches/serve.rs`.
 
 // The seed idiom predates the clippy CI gate: eagerly-evaluated
 // `Option::or(strip_prefix(..))` chains on cheap operands are pervasive
@@ -59,6 +65,7 @@ pub mod matrix;
 pub mod harness;
 pub mod runtime;
 pub mod coordinator;
+pub mod serve;
 
 pub use engine::{Engine, EngineConfig, Job, JobResult};
 pub use telemetry::TelemetrySnapshot;

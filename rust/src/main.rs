@@ -28,6 +28,7 @@ use takum_avx10::isa::database::Category;
 use takum_avx10::kernels::{workloads::TILE_ALIGN, Kernel, Pipeline};
 use takum_avx10::kernels::KernelSpec;
 use takum_avx10::matrix::generator::CollectionSpec;
+use takum_avx10::serve::ReplayConfig;
 use takum_avx10::sim::{assemble, LaneType};
 use takum_avx10::telemetry::{TelemetrySnapshot, STATS_FILE};
 use takum_avx10::verify::{isa_cross_check, Externals, StaticMix, Verify};
@@ -94,6 +95,7 @@ fn run(raw: &[String]) -> Result<()> {
         "lint" => cmd_lint(&args),
         "artifacts" => cmd_artifacts(&args),
         "stats" => cmd_stats(&args),
+        "serve" => cmd_serve(&args),
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -124,8 +126,16 @@ commands:
   stats   [--json] [--path FILE]  report the telemetry snapshot the last
           engine command persisted (plan/shadow cache hit rates, verifier
           gate outcomes, per-class instruction counts, stage latencies)
+  serve   [--requests N] [--seed S] [--burst N] [--watermark N]
+          [--batch-max N] [--serve-workers N] [--tenants scalar,vector]
+          [--out FILE]            drive the multi-tenant serving layer
+          with a seeded deterministic replay trace (lockstep bursts:
+          same seed => same sheds/batches/coalescing at any worker
+          count); prints p50/p99 e2e latency, throughput, shed rate and
+          the batch-size histogram, writes the Bencher-v3 artifact
+          (default BENCH_serve.json) and per-tenant stats snapshots
 
-engine flags (shared by figure2/simulate/gemm/kernels/lint/artifacts):
+engine flags (shared by figure2/simulate/gemm/kernels/lint/artifacts/serve):
   --backend scalar|vector|graph   plane backend
   --codec lut|arith               lane codec mode
   --simd auto|avx512|avx2|sse2|neon|wasm128|scalar
@@ -136,9 +146,12 @@ engine flags (shared by figure2/simulate/gemm/kernels/lint/artifacts):
   --verify off|warn|deny          static verify-before-run policy
   --trace FILE                    write job-lifecycle spans as
           Chrome-trace JSON (chrome://tracing, Perfetto) on exit
+  --stats-path FILE               where engine commands persist the
+          telemetry snapshot (default takum-stats.json; `serve` derives
+          per-tenant paths from it, e.g. takum-stats.<tenant>.json)
 Precedence: CLI flag > TAKUM_BACKEND/TAKUM_CODEC/TAKUM_SIMD/TAKUM_VERIFY/
-TAKUM_TRACE env > default (scalar/lut/auto/off/none). sizes must be
-positive multiples of 64 (whole compute tiles).
+TAKUM_TRACE/TAKUM_STATS env > default (scalar/lut/auto/off/none). sizes
+must be positive multiples of 64 (whole compute tiles).
 ";
 
 fn cmd_figure1() -> Result<()> {
@@ -176,16 +189,29 @@ fn parse_engine_cfg(args: &Args) -> Result<EngineConfig> {
         anyhow::ensure!(t != "true", "--trace needs a file path, e.g. --trace trace.json");
         cfg = cfg.trace(t);
     }
+    if let Some(p) = args.get("stats-path") {
+        anyhow::ensure!(
+            p != "true",
+            "--stats-path needs a file path, e.g. --stats-path out/stats.json"
+        );
+        cfg = cfg.stats_path(p);
+    }
     Ok(cfg)
 }
 
-/// Persist the engine's telemetry snapshot to [`STATS_FILE`] so the
+/// Persist the engine's telemetry snapshot to its configured stats path
+/// (`--stats-path` / `TAKUM_STATS`, default [`STATS_FILE`]) so the
 /// `stats` subcommand (a separate process) can report on the run.
-/// Best-effort: a read-only working directory downgrades to a warning —
-/// observability must never fail the job that produced it.
+/// The write is atomic — temp file then rename
+/// ([`TelemetrySnapshot::persist`]) — so a concurrent reader, or a
+/// second engine process racing on the same path, never observes a torn
+/// half-written document. Best-effort: a read-only working directory
+/// downgrades to a warning — observability must never fail the job that
+/// produced it.
 fn persist_stats(eng: &Engine) {
-    if let Err(e) = std::fs::write(STATS_FILE, eng.telemetry().to_json()) {
-        eprintln!("warning: could not persist telemetry snapshot to {STATS_FILE}: {e}");
+    let path = eng.stats_path();
+    if let Err(e) = eng.telemetry().persist(path) {
+        eprintln!("warning: could not persist telemetry snapshot to {path}: {e:#}");
     }
 }
 
@@ -463,6 +489,50 @@ fn cmd_lint(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Drive the multi-tenant serving layer with a seeded deterministic
+/// replay trace (see [`takum_avx10::serve::replay`]): lockstep bursts
+/// make sheds, batch shapes and coalescing pure functions of the seed,
+/// so the run is reproducible at any worker count. Writes the Bencher
+/// schema-v3 artifact (p50/p99 e2e latency, throughput, shed rate,
+/// batch-size histogram) for `python/bench_trend.py`, and per-tenant
+/// telemetry snapshots via the engine stats path.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let base = parse_engine_cfg(args)?;
+    let defaults = ReplayConfig::default();
+    let tenants = match args.get("tenants") {
+        // Single tenant on the shared engine flags.
+        None => vec![("default".to_string(), base.clone())],
+        // One tenant per named backend, layered on the shared flags —
+        // the multi-tenant axis the serving layer exists for.
+        Some(list) => list
+            .split(',')
+            .map(|b| {
+                let b = b.trim();
+                Ok((b.to_string(), base.clone().try_backend(b)?))
+            })
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let cfg = ReplayConfig {
+        seed: args.get_parse("seed", defaults.seed)?,
+        requests: args.get_parse("requests", defaults.requests)?,
+        burst: args.get_parse("burst", defaults.burst)?,
+        tenants,
+        server_workers: args.get_parse("serve-workers", defaults.server_workers)?,
+        watermark: args.get_parse("watermark", defaults.watermark)?,
+        batch_max: args.get_parse("batch-max", defaults.batch_max)?,
+        persist_stats: true,
+        ..defaults
+    };
+    let report = takum_avx10::serve::replay::run(&cfg)?;
+    print!("{}", report.render());
+    let out = args.get("out").unwrap_or("BENCH_serve.json");
+    anyhow::ensure!(out != "true", "--out needs a file path, e.g. --out BENCH_serve.json");
+    std::fs::write(out, report.to_bench_json())
+        .with_context(|| format!("writing serving artifact to {out}"))?;
+    println!("wrote serving artifact to {out}");
+    Ok(())
+}
+
 fn cmd_artifacts(args: &Args) -> Result<()> {
     // Listing artifact names touches no lane codec — skip the LUT warm.
     let eng = parse_engine_cfg(args)?.warm(WarmPolicy::Lazy).build()?;
@@ -572,6 +642,16 @@ mod tests {
         assert_eq!(cfg, EngineConfig::from_env().trace("out/trace.json"));
         let e = parse_engine_cfg(&args(&["--trace"])).unwrap_err().to_string();
         assert!(e.contains("--trace needs a file path"), "{e:?}");
+    }
+
+    /// `--stats-path` redirects where engine commands persist the
+    /// telemetry snapshot; a bare flag is rejected like `--trace`.
+    #[test]
+    fn engine_cfg_parses_stats_path() {
+        let cfg = parse_engine_cfg(&args(&["--stats-path", "out/stats.json"])).unwrap();
+        assert_eq!(cfg, EngineConfig::from_env().stats_path("out/stats.json"));
+        let e = parse_engine_cfg(&args(&["--stats-path"])).unwrap_err().to_string();
+        assert!(e.contains("--stats-path needs a file path"), "{e:?}");
     }
 
     #[test]

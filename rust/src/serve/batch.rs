@@ -1,0 +1,162 @@
+//! Batch planning and execution for the serving layer: compatibility
+//! (which requests may share a fan-out), coalescing (which requests may
+//! share a *run*), and the execution path that keeps served responses
+//! bit-identical to direct `Engine::submit`.
+//!
+//! A batch executes on the engine it is handed — [`execute`] never
+//! reloads the tenant handle, so a batch picked up before a hot-swap
+//! finishes on the engine it started with (see [`crate::serve`]).
+
+use super::{Reply, Request};
+use crate::engine::Engine;
+use crate::kernels::KernelSpec;
+use crate::telemetry::Stage;
+use std::time::Instant;
+
+/// Whether two requests may share a batch: same tenant (one engine per
+/// batch) and same kernel × format (one sweep family — members differ
+/// only in size and seed, exactly the axes `Job::Sweep` fans over).
+pub fn compatible(a: &Request, b: &Request) -> bool {
+    a.tenant == b.tenant && a.spec.kernel == b.spec.kernel && a.spec.format == b.spec.format
+}
+
+/// Coalescing plan for one batch: the unique specs to actually run, and
+/// for each request the index of the unique spec that answers it.
+/// Requests are identical when size *and* seed match (kernel/format
+/// already match batch-wide); results are pure functions of the spec,
+/// so deduplicated members receive bit-identical answers.
+pub fn plan(requests: &[Request]) -> (Vec<KernelSpec>, Vec<usize>) {
+    let mut unique: Vec<KernelSpec> = Vec::new();
+    let mut assignment = Vec::with_capacity(requests.len());
+    for r in requests {
+        match unique.iter().position(|u| u.n == r.spec.n && u.seed == r.spec.seed) {
+            Some(i) => assignment.push(i),
+            None => {
+                unique.push(r.spec);
+                assignment.push(unique.len() - 1);
+            }
+        }
+    }
+    (unique, assignment)
+}
+
+/// Execute one batch on `engine` and fan the responses out.
+///
+/// Single-spec batches run the spec directly; multi-spec batches fan
+/// out through the slot-merged pool (`Engine::run_tasks`) — the same
+/// sweep-shaped execution `Job::Sweep` uses, so results are independent
+/// of worker count and scheduling. On a batch error every member
+/// receives the (first, reproducible) error rendered to a string.
+///
+/// Telemetry: one `serve.batched` count (with the batch's coalesced
+/// member count), one `queue` histogram entry **per request** (its
+/// individual wait), and one batch-level `queue` span in the trace ring
+/// (ring-only — a second histogram entry per batch would skew the
+/// quantiles).
+pub(crate) fn execute(engine: &Engine, requests: Vec<Request>) {
+    let picked = Instant::now();
+    let (unique, assignment) = plan(&requests);
+    let coalesced = (requests.len() - unique.len()) as u64;
+
+    let tr = engine.begin_job("batch");
+    // Batch-level queue span: from the earliest member's enqueue to
+    // pick-up, on the batch's own trace row.
+    if let Some(oldest) = requests.iter().map(|r| r.enqueued).min() {
+        tr.span_only(Stage::Queue, oldest, picked.saturating_duration_since(oldest));
+    }
+    // Per-request queue waits feed the stage histogram (p50/p99 of
+    // time-in-queue across *requests*, not batches).
+    let waits: Vec<u64> = requests
+        .iter()
+        .map(|r| picked.saturating_duration_since(r.enqueued).as_nanos() as u64)
+        .collect();
+    for &ns in &waits {
+        engine.registry().record_stage(Stage::Queue, ns);
+    }
+    engine.registry().count_serve_batch(coalesced);
+
+    let outcome = tr.stage(Stage::Execute, || {
+        if unique.len() == 1 {
+            unique[0].run(engine).map(|r| vec![r])
+        } else {
+            engine.run_tasks(unique.len(), |i| unique[i].run(engine)).map(|(r, _)| r)
+        }
+    });
+
+    match outcome {
+        Ok(results) => {
+            let mut first_use = vec![true; unique.len()];
+            for ((req, &slot), queue_ns) in requests.iter().zip(&assignment).zip(waits) {
+                let coalesced = !std::mem::take(&mut first_use[slot]);
+                let _ = req.reply.send(Reply {
+                    id: req.id,
+                    result: Ok(results[slot].clone()),
+                    queue_ns,
+                    coalesced,
+                });
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for (req, queue_ns) in requests.iter().zip(waits) {
+                let _ = req.reply.send(Reply {
+                    id: req.id,
+                    result: Err(msg.clone()),
+                    queue_ns,
+                    coalesced: false,
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Kernel;
+    use std::sync::mpsc;
+    use std::time::Instant;
+
+    fn req(tenant: usize, kernel: Kernel, format: &'static str, n: usize, seed: u64) -> Request {
+        let (reply, _rx) = mpsc::channel();
+        // The receiver is dropped: these requests are only planned, not
+        // executed.
+        Request {
+            id: 0,
+            tenant,
+            spec: KernelSpec { kernel, format, n, seed },
+            enqueued: Instant::now(),
+            reply,
+        }
+    }
+
+    /// Compatibility is tenant × kernel × format; size and seed are the
+    /// in-batch axes.
+    #[test]
+    fn compatibility_axes() {
+        let a = req(0, Kernel::Dot, "t8", 64, 1);
+        assert!(compatible(&a, &req(0, Kernel::Dot, "t8", 128, 9)));
+        assert!(!compatible(&a, &req(1, Kernel::Dot, "t8", 64, 1)), "tenant splits");
+        assert!(!compatible(&a, &req(0, Kernel::Axpy, "t8", 64, 1)), "kernel splits");
+        assert!(!compatible(&a, &req(0, Kernel::Dot, "e4m3", 64, 1)), "format splits");
+    }
+
+    /// The coalescing plan dedupes on (n, seed) and assigns every
+    /// request to a unique-spec slot, first occurrence first.
+    #[test]
+    fn plan_coalesces_identical_specs() {
+        let requests = vec![
+            req(0, Kernel::Dot, "t8", 64, 1),
+            req(0, Kernel::Dot, "t8", 128, 1),
+            req(0, Kernel::Dot, "t8", 64, 1), // dup of #0
+            req(0, Kernel::Dot, "t8", 64, 2),
+            req(0, Kernel::Dot, "t8", 128, 1), // dup of #1
+        ];
+        let (unique, assignment) = plan(&requests);
+        assert_eq!(unique.len(), 3);
+        assert_eq!(assignment, vec![0, 1, 0, 2, 1]);
+        assert_eq!((unique[0].n, unique[0].seed), (64, 1));
+        assert_eq!((unique[1].n, unique[1].seed), (128, 1));
+        assert_eq!((unique[2].n, unique[2].seed), (64, 2));
+    }
+}

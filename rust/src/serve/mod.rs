@@ -1,0 +1,108 @@
+//! # The serving layer: long-lived multi-tenant kernel serving over the [`crate::engine::Engine`]
+//!
+//! The ROADMAP's north star is takum kernels served at production scale
+//! — millions of requests through the engine the crate already built to
+//! be sharded and scheduled. This module is that service: a bounded
+//! MPMC request queue feeding `Engine::submit`-equivalent execution
+//! through the slot-merged worker pool, with request batching,
+//! coalescing, per-tenant configs, load shedding, and zero-downtime
+//! config hot-swap.
+//!
+//! ## Queue / batch / shed model
+//!
+//! Producers call [`Server::submit`] with a [`crate::kernels::KernelSpec`];
+//! the request lands in a bounded queue ([`queue::Queue`]) that **sheds
+//! at a depth watermark** with a typed rejection ([`queue::Rejection`])
+//! instead of blocking — backpressure is explicit and the caller
+//! decides what to do with it. Serving workers pop **batches**: the
+//! queue head plus the maximal run of following requests compatible
+//! with it (same tenant × kernel × format, differing sizes/seeds —
+//! [`batch::compatible`]), capped at the configured batch size. A batch
+//! executes as one sweep-shaped fan-out on the tenant's engine
+//! (`Engine::run_tasks`), and identical member specs (same size *and*
+//! seed) are **coalesced**: the spec runs once and its result fans out
+//! to every requester. Counted in telemetry as `serve.enqueued`,
+//! `serve.shed`, `serve.batched`, `serve.coalesced`; queue wait is the
+//! `queue` lifecycle stage, so Chrome traces and the stats snapshot
+//! show time-in-queue next to time-in-engine.
+//!
+//! ## Tenancy and shared caches
+//!
+//! Each tenant is one [`crate::engine::EngineConfig`] resolved into its
+//! own engine — backend, codec, SIMD tier and verify policy are
+//! per-tenant axes. What is *shared* is the expensive warm state: the
+//! process-wide LUT tables (one `OnceLock`-owned set, warmed by the
+//! first builder), and the mnemonic-plan cache — plans are pure
+//! functions of the mnemonic, so the server broadcasts newly resolved
+//! plans across tenant engines (`Engine::preseed_plans_from`) and
+//! every engine hands pre-seeded machines to its workers.
+//!
+//! ## Hot-swap semantics
+//!
+//! Each tenant's engine lives behind an [`crate::engine::EngineHandle`] (the
+//! `arc_swap` idiom on std primitives): workers `load()` an
+//! `Arc<Engine>` per batch, and [`Server::swap_tenant`] repoints the
+//! handle at a freshly built engine **without draining** — batches
+//! in flight finish on the engine they loaded, batches picked up after
+//! the swap run the new config, and the replacement is pre-seeded with
+//! the outgoing engine's plan cache so it starts warm. No queue pause,
+//! no dropped requests.
+//!
+//! ## Determinism contract
+//!
+//! Kernel results are pure functions of `(spec, engine config)` —
+//! batching and coalescing reorder *scheduling*, never numerics, so a
+//! served response is **bit-identical** to a direct `Engine::submit` of
+//! the same spec on the same config (pinned for every `Backend ×
+//! CodecMode` by `rust/tests/serve.rs`). Batch *shapes* and shed counts
+//! are deterministic whenever enqueue order is: segmentation consumes
+//! strictly from the queue head under the queue lock, and the
+//! accept/shed decision depends only on depth at arrival. The replay
+//! harness ([`replay`]) exploits this with gated lockstep bursts —
+//! same seed ⇒ same sheds, same batches, same coalescing, same result
+//! bits, at any worker count.
+
+pub mod batch;
+pub mod queue;
+pub mod replay;
+pub mod server;
+
+pub use queue::{Queue, Rejection};
+pub use replay::{ReplayConfig, ReplayReport};
+pub use server::{Server, ServerConfig};
+
+use crate::kernels::{KernelResult, KernelSpec};
+use std::sync::mpsc;
+use std::time::Instant;
+
+/// One queued serving request: a kernel spec bound for a tenant's
+/// engine, plus the reply channel the response fans back through.
+#[derive(Debug)]
+pub struct Request {
+    /// Caller-chosen correlation id, echoed in the [`Reply`].
+    pub id: u64,
+    /// Index into the server's tenant table.
+    pub tenant: usize,
+    pub spec: KernelSpec,
+    /// When the request entered the queue (the `queue` stage clock).
+    pub enqueued: Instant,
+    /// Where the response goes. Each request owns its own sender clone,
+    /// so one receiver can collect replies for many requests.
+    pub reply: mpsc::Sender<Reply>,
+}
+
+/// The response to one [`Request`].
+#[derive(Debug)]
+pub struct Reply {
+    /// The request's correlation id.
+    pub id: u64,
+    /// The kernel result, or the execution error rendered to a string
+    /// (errors fan out to every member of a failed batch).
+    pub result: Result<KernelResult, String>,
+    /// Nanoseconds the request waited in the queue before its batch was
+    /// picked up.
+    pub queue_ns: u64,
+    /// Whether this response was served by another member's coalesced
+    /// execution rather than a run of its own.
+    pub coalesced: bool,
+}

@@ -1,0 +1,453 @@
+//! Seeded deterministic replay harness: drive the serving layer with a
+//! reproducible request trace in gated lockstep bursts and report
+//! end-to-end latency quantiles, throughput, the batch-size histogram,
+//! and the shed rate.
+//!
+//! ## Lockstep bursts
+//!
+//! Timing-free determinism comes from the queue gate: each round the
+//! harness **pauses** the queue, enqueues one burst of seeded requests
+//! (the accept/shed split is then a pure function of burst size vs.
+//! watermark), **resumes**, and collects every accepted reply before
+//! the next round. Batch segmentation consumes from the queue head
+//! under the queue lock while no producer is running, so the batch
+//! sequence — and with it coalescing, batch counts, and the batch-size
+//! histogram — is identical run-to-run and at **any** server worker
+//! count. Same seed ⇒ same deterministic report fields; only the
+//! measured timings differ.
+//!
+//! ## The artifact
+//!
+//! [`ReplayReport::to_bench_json`] renders the report in the exact
+//! Bencher schema-v3 shape (`schema_version`/`bench`/`engine_config`/
+//! `telemetry`/`results`), so `python/bench_trend.py` diffs
+//! `BENCH_serve.json` like any other bench artifact, plus one extra
+//! top-level `serve` object carrying the deterministic replay fields
+//! (trend tooling ignores unknown top-level keys).
+
+use super::server::{Server, ServerConfig};
+use super::Reply;
+use crate::engine::EngineConfig;
+use crate::kernels::{Kernel, KernelSpec, Pipeline};
+use crate::util::rng::Rng;
+use anyhow::{ensure, Result};
+use std::collections::{BTreeMap, HashMap};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Configuration of one replay run.
+#[derive(Debug, Clone)]
+pub struct ReplayConfig {
+    /// Trace seed: every request attribute derives from this.
+    pub seed: u64,
+    /// Total requests to drive.
+    pub requests: u64,
+    /// Requests per lockstep burst. Bursts ≤ the watermark shed
+    /// nothing; larger bursts shed `burst - watermark` requests each
+    /// round, deterministically.
+    pub burst: usize,
+    /// Tenants for the underlying server.
+    pub tenants: Vec<(String, EngineConfig)>,
+    /// Serving workers (the determinism contract holds at any count).
+    pub server_workers: usize,
+    pub watermark: usize,
+    pub batch_max: usize,
+    /// Candidate problem sizes (the in-batch sweep axis; kernel sizes
+    /// must be positive multiples of 64 — whole compute tiles).
+    pub sizes: Vec<usize>,
+    /// Seed lanes per spec: small lane counts make coalescing common,
+    /// exercising the dedup path.
+    pub seed_lanes: u64,
+    /// Persist each tenant's telemetry snapshot on completion
+    /// ([`Server::persist_stats`] — per-tenant paths, no collisions).
+    pub persist_stats: bool,
+}
+
+impl Default for ReplayConfig {
+    fn default() -> ReplayConfig {
+        ReplayConfig {
+            seed: 0x7a4b_u64,
+            requests: 1_000_000,
+            burst: 512,
+            tenants: vec![("default".to_string(), EngineConfig::new())],
+            server_workers: 2,
+            watermark: 1024,
+            batch_max: 32,
+            sizes: vec![64, 128, 192],
+            seed_lanes: 3,
+            persist_stats: false,
+        }
+    }
+}
+
+/// What one replay run produced. The latency/wall fields are the only
+/// non-deterministic members; everything else is a pure function of the
+/// [`ReplayConfig`].
+#[derive(Debug)]
+pub struct ReplayReport {
+    pub requests: u64,
+    /// Requests that received a successful reply.
+    pub completed: u64,
+    /// Requests shed at the watermark.
+    pub shed: u64,
+    /// Requests that received an error reply.
+    pub errors: u64,
+    /// Replies served by another member's coalesced execution.
+    pub coalesced: u64,
+    /// Batches executed.
+    pub batches: u64,
+    /// Batch size → number of batches at that size.
+    pub batch_sizes: BTreeMap<usize, u64>,
+    /// End-to-end submit→reply latencies, sorted ascending (exact
+    /// quantiles — independent of the telemetry feature).
+    pub latencies_ns: Vec<u64>,
+    pub wall: Duration,
+    /// `Engine::tag()` of tenant 0 (the artifact's `engine_config`).
+    pub engine_tag: String,
+    /// Tenant 0's telemetry snapshot JSON, embedded in the artifact.
+    pub telemetry_json: String,
+}
+
+impl ReplayReport {
+    /// Exact quantile over the recorded latencies (0 when none).
+    pub fn latency_quantile(&self, q: f64) -> u64 {
+        if self.latencies_ns.is_empty() {
+            return 0;
+        }
+        let rank = ((q * self.latencies_ns.len() as f64).ceil() as usize)
+            .clamp(1, self.latencies_ns.len());
+        self.latencies_ns[rank - 1]
+    }
+
+    /// Completed requests per second of wall time.
+    pub fn throughput(&self) -> f64 {
+        let secs = self.wall.as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.completed as f64 / secs
+    }
+
+    /// Shed requests as a fraction of all driven requests.
+    pub fn shed_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.shed as f64 / self.requests as f64
+    }
+
+    fn latency_mean_stddev(&self) -> (f64, f64) {
+        if self.latencies_ns.is_empty() {
+            return (0.0, 0.0);
+        }
+        let n = self.latencies_ns.len() as f64;
+        let mean = self.latencies_ns.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var = self
+            .latencies_ns
+            .iter()
+            .map(|&x| (x as f64 - mean) * (x as f64 - mean))
+            .sum::<f64>()
+            / n;
+        (mean, var.sqrt())
+    }
+
+    /// Human-readable summary (the `serve` subcommand's stdout).
+    pub fn render(&self) -> String {
+        let (mean, _) = self.latency_mean_stddev();
+        let mut out = String::new();
+        out.push_str("serve replay\n");
+        out.push_str(&format!(
+            "  requests: {}  completed: {}  shed: {} ({:.2}%)  errors: {}\n",
+            self.requests,
+            self.completed,
+            self.shed,
+            self.shed_rate() * 100.0,
+            self.errors
+        ));
+        out.push_str(&format!(
+            "  batches: {}  coalesced: {}  mean batch size: {:.2}\n",
+            self.batches,
+            self.coalesced,
+            if self.batches == 0 { 0.0 } else { self.completed as f64 / self.batches as f64 }
+        ));
+        out.push_str(&format!(
+            "  e2e latency  p50: {}  p99: {}  mean: {}\n",
+            crate::util::bench::fmt_ns(self.latency_quantile(0.50) as f64),
+            crate::util::bench::fmt_ns(self.latency_quantile(0.99) as f64),
+            crate::util::bench::fmt_ns(mean),
+        ));
+        out.push_str(&format!(
+            "  throughput: {:.0} req/s over {:.2?} wall\n",
+            self.throughput(),
+            self.wall
+        ));
+        if !self.batch_sizes.is_empty() {
+            out.push_str("  batch sizes: ");
+            let rows: Vec<String> =
+                self.batch_sizes.iter().map(|(s, c)| format!("{s}×{c}")).collect();
+            out.push_str(&rows.join("  "));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render the report in the Bencher schema-v3 artifact shape (see
+    /// [`crate::util::bench::Bencher::json`]) plus a top-level `serve`
+    /// object with the deterministic replay fields. Same seed ⇒ the
+    /// `serve` object is byte-identical run-to-run; only the timing
+    /// rows differ.
+    pub fn to_bench_json(&self) -> String {
+        fn esc(s: &str) -> String {
+            s.replace('\\', "\\\\").replace('"', "\\\"")
+        }
+        let (mean, stddev) = self.latency_mean_stddev();
+        let p50 = self.latency_quantile(0.50) as f64;
+        let p99 = self.latency_quantile(0.99) as f64;
+        let ns_per_req = if self.completed == 0 {
+            0.0
+        } else {
+            self.wall.as_nanos() as f64 / self.completed as f64
+        };
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str("  \"schema_version\": 3,\n");
+        out.push_str("  \"bench\": \"serve_replay\",\n");
+        out.push_str(&format!("  \"engine_config\": \"{}\",\n", esc(&self.engine_tag)));
+        out.push_str(&format!("  \"telemetry\": {},\n", self.telemetry_json.trim_end()));
+        let sizes: Vec<String> = self
+            .batch_sizes
+            .iter()
+            .map(|(s, c)| format!("\"{s}\": {c}"))
+            .collect();
+        out.push_str(&format!(
+            "  \"serve\": {{\"requests\": {}, \"completed\": {}, \"shed\": {}, \
+             \"errors\": {}, \"coalesced\": {}, \"batches\": {}, \
+             \"batch_size_histogram\": {{{}}}}},\n",
+            self.requests,
+            self.completed,
+            self.shed,
+            self.errors,
+            self.coalesced,
+            self.batches,
+            sizes.join(", ")
+        ));
+        out.push_str("  \"results\": [\n");
+        let rows = [
+            ("e2e latency [p50]", p50, mean, stddev, None),
+            ("e2e latency [p99]", p99, mean, stddev, None),
+            ("request throughput", ns_per_req, ns_per_req, 0.0, Some(1u64)),
+        ];
+        for (i, (name, median, mean, stddev, elements)) in rows.iter().enumerate() {
+            let elements_s =
+                elements.map(|e| e.to_string()).unwrap_or_else(|| "null".to_string());
+            let throughput = match elements {
+                Some(e) if *median > 0.0 => format!("{:.1}", *e as f64 / (median * 1e-9)),
+                _ => "null".to_string(),
+            };
+            out.push_str(&format!(
+                "    {{\"group\": \"serve\", \"name\": \"{}\", \"median_ns\": {:.1}, \
+                 \"mean_ns\": {:.1}, \"stddev_ns\": {:.1}, \"iters\": {}, \
+                 \"elements\": {}, \"throughput_elem_per_s\": {}}}{}\n",
+                esc(name),
+                median,
+                mean,
+                stddev,
+                self.completed,
+                elements_s,
+                throughput,
+                if i + 1 < rows.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+}
+
+/// Drive `cfg.requests` seeded requests through a fresh server in
+/// lockstep bursts (see the module docs) and report.
+pub fn run(cfg: &ReplayConfig) -> Result<ReplayReport> {
+    ensure!(cfg.burst >= 1, "replay burst must be at least 1");
+    ensure!(!cfg.sizes.is_empty(), "replay needs at least one problem size");
+    ensure!(cfg.seed_lanes >= 1, "replay needs at least one seed lane");
+    let server = Server::start(ServerConfig {
+        tenants: cfg.tenants.clone(),
+        workers: cfg.server_workers,
+        watermark: cfg.watermark,
+        batch_max: cfg.batch_max,
+    })?;
+    let tenant_count = server.tenant_names().len() as u64;
+
+    let mut rng = Rng::new(cfg.seed);
+    let (tx, rx) = mpsc::channel::<Reply>();
+    let mut completed = 0u64;
+    let mut shed = 0u64;
+    let mut errors = 0u64;
+    let mut coalesced = 0u64;
+    let mut latencies_ns: Vec<u64> = Vec::with_capacity(cfg.requests as usize);
+    let mut submitted_at: HashMap<u64, Instant> = HashMap::with_capacity(cfg.burst);
+
+    let start = Instant::now();
+    let mut driven = 0u64;
+    while driven < cfg.requests {
+        let burst = (cfg.requests - driven).min(cfg.burst as u64);
+        server.pause();
+        submitted_at.clear();
+        for _ in 0..burst {
+            let spec = KernelSpec {
+                kernel: *rng.choose(&Kernel::ALL),
+                format: *rng.choose(&Pipeline::ALL_FORMATS),
+                n: *rng.choose(&cfg.sizes),
+                seed: rng.below(cfg.seed_lanes),
+            };
+            let tenant = rng.below(tenant_count) as usize;
+            let at = Instant::now();
+            match server.submit(tenant, spec, tx.clone()) {
+                Ok(id) => {
+                    submitted_at.insert(id, at);
+                }
+                Err(_) => shed += 1,
+            }
+        }
+        driven += burst;
+        server.resume();
+        for _ in 0..submitted_at.len() {
+            let reply = rx.recv().expect("server dropped replies mid-replay");
+            let at = submitted_at
+                .get(&reply.id)
+                .copied()
+                .expect("reply id must come from this burst");
+            latencies_ns.push(at.elapsed().as_nanos() as u64);
+            match reply.result {
+                Ok(_) => {
+                    completed += 1;
+                    if reply.coalesced {
+                        coalesced += 1;
+                    }
+                }
+                Err(_) => errors += 1,
+            }
+        }
+    }
+    let wall = start.elapsed();
+
+    let batch_sizes = server.batch_size_histogram();
+    let batches = batch_sizes.values().sum();
+    let engine = server.tenant_engine(0);
+    let engine_tag = engine.tag();
+    let telemetry_json = engine.telemetry().to_json();
+    if cfg.persist_stats {
+        server.persist_stats()?;
+    }
+    server.shutdown();
+    latencies_ns.sort_unstable();
+
+    Ok(ReplayReport {
+        requests: cfg.requests,
+        completed,
+        shed,
+        errors,
+        coalesced,
+        batches,
+        batch_sizes,
+        latencies_ns,
+        wall,
+        engine_tag,
+        telemetry_json,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_cfg(seed: u64) -> ReplayConfig {
+        ReplayConfig {
+            seed,
+            requests: 400,
+            burst: 64,
+            server_workers: 2,
+            watermark: 128,
+            batch_max: 16,
+            sizes: vec![64, 128],
+            seed_lanes: 2,
+            ..Default::default()
+        }
+    }
+
+    /// A burst that fits under the watermark sheds nothing and every
+    /// request completes.
+    #[test]
+    fn replay_completes_everything_under_watermark() {
+        let report = run(&small_cfg(11)).unwrap();
+        assert_eq!(report.requests, 400);
+        assert_eq!(report.completed, 400);
+        assert_eq!(report.shed, 0);
+        assert_eq!(report.errors, 0);
+        assert_eq!(report.latencies_ns.len(), 400);
+        assert!(report.batches > 0);
+        assert_eq!(report.batch_sizes.values().sum::<u64>(), report.batches);
+        assert!(report.latency_quantile(0.99) >= report.latency_quantile(0.50));
+        assert!(report.throughput() > 0.0);
+    }
+
+    /// Bursts over the watermark shed the overflow — deterministically:
+    /// exactly `burst - watermark` per full burst.
+    #[test]
+    fn replay_sheds_deterministically_over_watermark() {
+        let cfg = ReplayConfig {
+            requests: 300,
+            burst: 100,
+            watermark: 75,
+            ..small_cfg(5)
+        };
+        let report = run(&cfg).unwrap();
+        assert_eq!(report.shed, 3 * 25);
+        assert_eq!(report.completed, 300 - 75);
+        assert_eq!(report.shed_rate(), 75.0 / 300.0);
+    }
+
+    /// The artifact is valid JSON in the Bencher v3 shape with the
+    /// deterministic `serve` object, and the deterministic fields agree
+    /// across runs and worker counts.
+    #[test]
+    fn bench_json_shape_and_determinism() {
+        let report_a = run(&small_cfg(42)).unwrap();
+        let report_b = run(&ReplayConfig { server_workers: 4, ..small_cfg(42) }).unwrap();
+        assert_eq!(report_a.completed, report_b.completed);
+        assert_eq!(report_a.shed, report_b.shed);
+        assert_eq!(report_a.coalesced, report_b.coalesced);
+        assert_eq!(report_a.batches, report_b.batches);
+        assert_eq!(report_a.batch_sizes, report_b.batch_sizes);
+
+        let json = report_a.to_bench_json();
+        let doc = crate::util::json::Json::parse(&json).expect("artifact must parse");
+        assert_eq!(doc.get("schema_version").and_then(|v| v.as_u64()), Some(3));
+        assert_eq!(
+            doc.get("bench").and_then(|v| v.as_str()),
+            Some("serve_replay")
+        );
+        let serve = doc.get("serve").expect("serve object");
+        assert_eq!(serve.get("completed").and_then(|v| v.as_u64()), Some(report_a.completed));
+        assert_eq!(serve.get("shed").and_then(|v| v.as_u64()), Some(0));
+        let results = doc.get("results").and_then(|v| v.as_arr()).expect("results rows");
+        assert_eq!(results.len(), 3);
+        let names: Vec<&str> =
+            results.iter().filter_map(|r| r.get("name").and_then(|v| v.as_str())).collect();
+        assert_eq!(names, vec!["e2e latency [p50]", "e2e latency [p99]", "request throughput"]);
+        for r in results {
+            assert!(r.get("median_ns").and_then(|v| v.as_f64()).unwrap() >= 0.0);
+        }
+    }
+
+    /// The exact-quantile read-out: rank semantics on a known vector.
+    #[test]
+    fn latency_quantiles_are_exact() {
+        let mut report = run(&small_cfg(3)).unwrap();
+        report.latencies_ns = vec![10, 20, 30, 40, 50, 60, 70, 80, 90, 100];
+        assert_eq!(report.latency_quantile(0.50), 50);
+        assert_eq!(report.latency_quantile(0.99), 100);
+        assert_eq!(report.latency_quantile(0.0), 10);
+        report.latencies_ns.clear();
+        assert_eq!(report.latency_quantile(0.99), 0);
+    }
+}

@@ -1,0 +1,342 @@
+//! The serving loop: worker threads draining the request queue into
+//! per-tenant engines, plan-cache broadcast across tenants, per-tenant
+//! stats persistence, and the zero-downtime config hot-swap surface.
+
+use super::queue::{Queue, Rejection};
+use super::{batch, Reply, Request};
+use crate::engine::{Engine, EngineConfig, EngineHandle};
+use crate::kernels::KernelSpec;
+use anyhow::{ensure, Context, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Configuration of one [`Server`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// The tenants: `(name, engine config)`. Names must be unique; each
+    /// config resolves into its own hot-swappable engine.
+    pub tenants: Vec<(String, EngineConfig)>,
+    /// Serving workers draining the queue (each executes one batch at a
+    /// time; the *intra*-batch fan-out uses the tenant engine's own
+    /// worker pool).
+    pub workers: usize,
+    /// Queue depth watermark: pushes at this depth shed
+    /// ([`Rejection::Shed`]).
+    pub watermark: usize,
+    /// Maximum requests per batch.
+    pub batch_max: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            tenants: vec![("default".to_string(), EngineConfig::new())],
+            workers: 2,
+            watermark: 1024,
+            batch_max: 32,
+        }
+    }
+}
+
+struct Tenant {
+    name: String,
+    handle: EngineHandle,
+    /// Plan count last broadcast from this tenant (guards the
+    /// cross-tenant plan sync against redundant lock traffic).
+    broadcast_plans: AtomicUsize,
+}
+
+struct Shared {
+    queue: Queue<Request>,
+    tenants: Vec<Tenant>,
+    batch_max: usize,
+    /// Batch-size histogram: size → number of batches executed at that
+    /// size (the replay report's batch-shape readout).
+    batch_sizes: Mutex<BTreeMap<usize, u64>>,
+}
+
+impl Shared {
+    /// Broadcast tenant `from`'s newly resolved mnemonic plans to every
+    /// other tenant — plans are pure functions of the mnemonic
+    /// (backend-independent), so all tenants resolve onto one logical
+    /// plan cache. Skipped entirely while the donor has nothing new.
+    fn share_plans(&self, from: usize) {
+        let donor = &self.tenants[from];
+        let engine = donor.handle.load();
+        let have = engine.cached_plans();
+        if donor.broadcast_plans.swap(have, Ordering::Relaxed) >= have {
+            return;
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            if i != from {
+                t.handle.load().preseed_plans_from(&engine);
+            }
+        }
+    }
+}
+
+/// The long-lived serving layer (see [`crate::serve`] for the model).
+/// Dropping the server shuts it down: the queue closes, the backlog
+/// drains, and the workers join.
+pub struct Server {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    next_id: AtomicUsize,
+}
+
+impl Server {
+    /// Build every tenant engine and start the serving workers.
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        ensure!(!cfg.tenants.is_empty(), "server needs at least one tenant");
+        ensure!(cfg.workers >= 1, "server workers must be at least 1, got {}", cfg.workers);
+        ensure!(cfg.batch_max >= 1, "batch size must be at least 1, got {}", cfg.batch_max);
+        let mut seen = std::collections::HashSet::new();
+        let mut tenants = Vec::with_capacity(cfg.tenants.len());
+        for (name, tenant_cfg) in cfg.tenants {
+            ensure!(seen.insert(name.clone()), "duplicate tenant name {name:?}");
+            let engine = tenant_cfg
+                .build()
+                .with_context(|| format!("building engine for tenant {name:?}"))?;
+            tenants.push(Tenant {
+                name,
+                handle: EngineHandle::new(Arc::new(engine)),
+                broadcast_plans: AtomicUsize::new(0),
+            });
+        }
+        let shared = Arc::new(Shared {
+            queue: Queue::bounded(cfg.watermark),
+            tenants,
+            batch_max: cfg.batch_max,
+            batch_sizes: Mutex::new(BTreeMap::new()),
+        });
+        let workers = (0..cfg.workers)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared))
+            })
+            .collect();
+        Ok(Server { shared, workers, next_id: AtomicUsize::new(0) })
+    }
+
+    /// Index of the named tenant.
+    pub fn tenant_index(&self, name: &str) -> Option<usize> {
+        self.shared.tenants.iter().position(|t| t.name == name)
+    }
+
+    /// Tenant names, in table order.
+    pub fn tenant_names(&self) -> Vec<&str> {
+        self.shared.tenants.iter().map(|t| t.name.as_str()).collect()
+    }
+
+    /// The tenant's current engine (a pre-swap clone stays valid for
+    /// work already holding it).
+    pub fn tenant_engine(&self, tenant: usize) -> Arc<Engine> {
+        self.shared.tenants[tenant].handle.load()
+    }
+
+    /// Enqueue `spec` for `tenant`. Returns the correlation id the
+    /// [`Reply`] will echo, or the typed rejection (shed / shutting
+    /// down) — never blocks. `serve.enqueued`/`serve.shed` count on the
+    /// tenant's current engine.
+    pub fn submit(
+        &self,
+        tenant: usize,
+        spec: KernelSpec,
+        reply: mpsc::Sender<Reply>,
+    ) -> Result<u64, Rejection> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed) as u64;
+        let engine = self.shared.tenants[tenant].handle.load();
+        let outcome = self.shared.queue.push(Request {
+            id,
+            tenant,
+            spec,
+            enqueued: Instant::now(),
+            reply,
+        });
+        match outcome {
+            Ok(()) => {
+                engine.registry().count_serve_enqueued(1);
+                Ok(id)
+            }
+            Err(r) => {
+                if matches!(r, Rejection::Shed { .. }) {
+                    engine.registry().count_serve_shed(1);
+                }
+                Err(r)
+            }
+        }
+    }
+
+    /// Close the queue gate: workers stop picking up batches (the
+    /// replay harness's lockstep primitive). In-flight batches finish.
+    pub fn pause(&self) {
+        self.shared.queue.pause();
+    }
+
+    /// Reopen the gate and wake the workers.
+    pub fn resume(&self) {
+        self.shared.queue.resume();
+    }
+
+    /// Current queue depth (exact while paused).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.queue.len()
+    }
+
+    /// Hot-swap `tenant` onto a freshly built engine for `cfg`, without
+    /// draining: requests already batched finish on the old engine, new
+    /// batches run the new config, and the replacement starts with the
+    /// outgoing engine's plan cache ([`EngineHandle::swap`] pre-seeds).
+    /// Returns the replaced engine (alive until its last batch
+    /// finishes).
+    pub fn swap_tenant(&self, tenant: usize, cfg: EngineConfig) -> Result<Arc<Engine>> {
+        let name = &self.shared.tenants[tenant].name;
+        let next = cfg
+            .build()
+            .with_context(|| format!("building replacement engine for tenant {name:?}"))?;
+        Ok(self.shared.tenants[tenant].handle.swap(Arc::new(next)))
+    }
+
+    /// Persist every tenant's telemetry snapshot, atomically, to
+    /// per-tenant paths derived from each engine's configured stats
+    /// path (see [`tenant_stats_path`]) — concurrent tenants never
+    /// clobber one another.
+    pub fn persist_stats(&self) -> Result<()> {
+        for t in &self.shared.tenants {
+            let engine = t.handle.load();
+            let path = tenant_stats_path(engine.stats_path(), &t.name);
+            engine
+                .telemetry()
+                .persist(&path)
+                .with_context(|| format!("persisting stats for tenant {:?}", t.name))?;
+        }
+        Ok(())
+    }
+
+    /// Batch-size histogram across the server's lifetime: size → count.
+    pub fn batch_size_histogram(&self) -> BTreeMap<usize, u64> {
+        self.shared.batch_sizes.lock().expect("batch histogram poisoned").clone()
+    }
+
+    /// Shut down: stop accepting requests, drain the backlog, join the
+    /// workers. Called by `Drop` if not called explicitly.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.shared.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    while let Some(requests) = shared.queue.pop_batch(shared.batch_max, batch::compatible) {
+        let tenant = requests[0].tenant;
+        // Load once per batch: the batch finishes on this engine even
+        // if the tenant is hot-swapped mid-execution.
+        let engine = shared.tenants[tenant].handle.load();
+        *shared
+            .batch_sizes
+            .lock()
+            .expect("batch histogram poisoned")
+            .entry(requests.len())
+            .or_insert(0) += 1;
+        batch::execute(&engine, requests);
+        shared.share_plans(tenant);
+    }
+}
+
+/// Derive the per-tenant stats path from a base path: the tenant name
+/// is spliced in before the final extension (`takum-stats.json` +
+/// tenant `vec` → `takum-stats.vec.json`); extensionless bases get the
+/// name appended (`stats` → `stats.vec`). Distinct tenants therefore
+/// always persist to distinct files.
+pub fn tenant_stats_path(base: &str, tenant: &str) -> String {
+    match base.rfind('.') {
+        // Only treat the dot as an extension separator if it is in the
+        // final path component.
+        Some(i) if !base[i..].contains('/') => {
+            format!("{}.{tenant}{}", &base[..i], &base[i..])
+        }
+        _ => format!("{base}.{tenant}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::Kernel;
+
+    #[test]
+    fn tenant_stats_paths_never_collide() {
+        assert_eq!(tenant_stats_path("takum-stats.json", "a"), "takum-stats.a.json");
+        assert_eq!(tenant_stats_path("out/stats.json", "vec"), "out/stats.vec.json");
+        assert_eq!(tenant_stats_path("stats", "a"), "stats.a");
+        // A dot in a directory component is not an extension.
+        assert_eq!(tenant_stats_path("out.d/stats", "a"), "out.d/stats.a");
+        assert_ne!(
+            tenant_stats_path("takum-stats.json", "a"),
+            tenant_stats_path("takum-stats.json", "b")
+        );
+    }
+
+    #[test]
+    fn server_config_is_validated() {
+        let e = Server::start(ServerConfig { tenants: vec![], ..Default::default() })
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("at least one tenant"), "{e}");
+        let e = Server::start(ServerConfig { workers: 0, ..Default::default() })
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("workers must be at least 1"), "{e}");
+        let cfg = ServerConfig {
+            tenants: vec![
+                ("a".to_string(), EngineConfig::new()),
+                ("a".to_string(), EngineConfig::new()),
+            ],
+            ..Default::default()
+        };
+        let e = Server::start(cfg).unwrap_err().to_string();
+        assert!(e.contains("duplicate tenant name"), "{e}");
+    }
+
+    /// End to end on one tenant: submit → batch → reply, with the serve
+    /// counters visible in the tenant's telemetry.
+    #[cfg(not(feature = "telemetry-off"))]
+    #[test]
+    fn serves_a_request_and_counts_it() {
+        let server = Server::start(ServerConfig {
+            tenants: vec![("t".to_string(), EngineConfig::new().workers(1))],
+            workers: 1,
+            watermark: 16,
+            batch_max: 8,
+        })
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        let spec = KernelSpec { kernel: Kernel::Dot, format: "t8", n: 64, seed: 7 };
+        let id = server.submit(0, spec, tx).unwrap();
+        let reply = rx.recv().unwrap();
+        assert_eq!(reply.id, id);
+        let result = reply.result.expect("kernel must run");
+        assert_eq!(result.n, 64);
+        assert!(!reply.coalesced);
+        let snap = server.tenant_engine(0).telemetry();
+        assert_eq!(snap.serve_enqueued, 1);
+        assert_eq!(snap.serve_batched, 1);
+        assert_eq!(snap.serve_shed, 0);
+        server.shutdown();
+    }
+}

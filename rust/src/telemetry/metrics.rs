@@ -166,6 +166,14 @@ pub struct Registry {
     /// dispatch table actually served a run — a `tier.scalar.planes`
     /// count on an AVX-512 host is a dispatch bug made visible.
     tier_planes: Mutex<BTreeMap<&'static str, u64>>,
+    /// Serving-layer counters (see `crate::serve`): requests accepted
+    /// into the request queue, requests shed at the depth watermark,
+    /// batches executed, and requests whose response came from a
+    /// coalesced (deduplicated) execution rather than their own run.
+    serve_enqueued: AtomicU64,
+    serve_shed: AtomicU64,
+    serve_batched: AtomicU64,
+    serve_coalesced: AtomicU64,
     /// Tasks completed per pool worker, accumulated across fan-outs
     /// (index = worker slot; fan-outs with fewer workers fold into the
     /// low slots).
@@ -251,6 +259,29 @@ impl Registry {
         self.stage_hist[stage.index()].record(ns);
     }
 
+    /// Count requests accepted into the serving layer's queue.
+    pub fn count_serve_enqueued(&self, n: u64) {
+        if enabled() {
+            self.serve_enqueued.fetch_add(n, Relaxed);
+        }
+    }
+
+    /// Count requests shed at the queue-depth watermark.
+    pub fn count_serve_shed(&self, n: u64) {
+        if enabled() {
+            self.serve_shed.fetch_add(n, Relaxed);
+        }
+    }
+
+    /// Count one executed serving batch, of which `coalesced` member
+    /// requests were answered by another member's execution.
+    pub fn count_serve_batch(&self, coalesced: u64) {
+        if enabled() {
+            self.serve_batched.fetch_add(1, Relaxed);
+            self.serve_coalesced.fetch_add(coalesced, Relaxed);
+        }
+    }
+
     /// Materialise the read surface. `engine_tag` is stamped in so a
     /// persisted snapshot is self-describing (which config produced it).
     pub fn snapshot(&self, engine_tag: &str) -> TelemetrySnapshot {
@@ -306,6 +337,10 @@ impl Registry {
             verify_warned: self.verify_warned.load(Relaxed),
             verify_denied: self.verify_denied.load(Relaxed),
             executed: self.executed.load(Relaxed),
+            serve_enqueued: self.serve_enqueued.load(Relaxed),
+            serve_shed: self.serve_shed.load(Relaxed),
+            serve_batched: self.serve_batched.load(Relaxed),
+            serve_coalesced: self.serve_coalesced.load(Relaxed),
             converts,
             dots,
             classes,

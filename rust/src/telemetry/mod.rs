@@ -20,6 +20,8 @@
 //! | `lut_warm8_events` / `lut_warm16_events` | `num::lut` `OnceLock` initialisers | cold table builds — **process-wide**, at most one per table set |
 //! | `verify_{skipped,clean,warned,denied}` | `Engine::enforce_report` + skip paths | verifier-gate outcome per submitted program/cell |
 //! | `executed` | folded on absorb | total executed instructions |
+//! | `serve.enqueued` / `serve.shed` | `serve::Queue` push | serving requests accepted into / shed at the bounded queue (shed = depth watermark hit) |
+//! | `serve.batched` / `serve.coalesced` | `serve::Server` batch execution | batches executed / requests answered by another member's coalesced run |
 //! | `converts` / `dots` | derived from `classes` | executed convert-class / dot-class instructions (the dynamic convert tax) |
 //! | `classes` | folded on absorb | executed instructions per resolved [`crate::sim::LanePlan`] class |
 //! | `mnemonics` | folded on absorb | full executed-mnemonic histogram (interned `&'static str` keys until the snapshot) |
@@ -44,8 +46,9 @@
 //! With a trace path configured (`TAKUM_TRACE=<path>` or `--trace`,
 //! stamped into `Engine::tag()` as `trace=on`), the engine writes the
 //! span ring as Chrome-trace JSON when it is dropped: one complete
-//! (`"ph": "X"`) event per lifecycle stage per job — `submit` (umbrella),
-//! `verify`, `plan`, `decode`, `execute`, `encode` — sorted by
+//! (`"ph": "X"`) event per lifecycle stage per job — `queue` (time
+//! waited in the serving layer; zero for direct submits), `submit`
+//! (umbrella), `verify`, `plan`, `decode`, `execute`, `encode` — sorted by
 //! timestamp, microsecond units, loadable in Perfetto or
 //! `chrome://tracing`. Stages a job kind fuses into its execution body
 //! appear as zero-duration markers so every job renders the full

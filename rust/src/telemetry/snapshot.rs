@@ -52,6 +52,17 @@ pub struct TelemetrySnapshot {
     pub verify_denied: u64,
     /// Total executed instructions folded from finished machines.
     pub executed: u64,
+    /// Serving layer: requests accepted into the request queue
+    /// (rendered as `serve.enqueued`).
+    pub serve_enqueued: u64,
+    /// Serving layer: requests shed at the queue-depth watermark
+    /// (`serve.shed`).
+    pub serve_shed: u64,
+    /// Serving layer: batches executed (`serve.batched`).
+    pub serve_batched: u64,
+    /// Serving layer: requests answered by a coalesced (deduplicated)
+    /// execution (`serve.coalesced`).
+    pub serve_coalesced: u64,
     /// Executed instructions whose resolved plan class is `convert` —
     /// the dynamic convert-tax counter.
     pub converts: u64,
@@ -113,7 +124,7 @@ impl TelemetrySnapshot {
     /// Serialise as the stable snapshot JSON document (see the module
     /// docs; `schema: 1`).
     pub fn to_json(&self) -> String {
-        let counters: [(&str, u64); 14] = [
+        let counters: [(&str, u64); 18] = [
             ("jobs", self.jobs),
             ("plan_hits", self.plan_hits),
             ("plan_misses", self.plan_misses),
@@ -126,6 +137,10 @@ impl TelemetrySnapshot {
             ("verify_warned", self.verify_warned),
             ("verify_denied", self.verify_denied),
             ("executed", self.executed),
+            ("serve.enqueued", self.serve_enqueued),
+            ("serve.shed", self.serve_shed),
+            ("serve.batched", self.serve_batched),
+            ("serve.coalesced", self.serve_coalesced),
             ("converts", self.converts),
             ("dots", self.dots),
         ];
@@ -163,6 +178,24 @@ impl TelemetrySnapshot {
             json_map(&self.tier_planes, "  "),
             json_map(&self.mnemonics, "  "),
         )
+    }
+
+    /// Persist the snapshot JSON to `path` atomically: write a sibling
+    /// temp file, then rename over the target. Readers (the `stats`
+    /// subcommand, CI smoke scripts) either see the old complete
+    /// document or the new complete document — never a torn write, even
+    /// with a server persisting per-tenant snapshots while another
+    /// process reads. The temp name carries the process id so two
+    /// writers to the same target cannot collide on the temp file
+    /// either (last rename wins, both files stay whole).
+    pub fn persist(&self, path: &str) -> Result<()> {
+        let tmp = format!("{path}.tmp.{}", std::process::id());
+        std::fs::write(&tmp, self.to_json())
+            .with_context(|| format!("writing telemetry snapshot temp file {tmp}"))?;
+        std::fs::rename(&tmp, path).with_context(|| {
+            let _ = std::fs::remove_file(&tmp);
+            format!("installing telemetry snapshot at {path}")
+        })
     }
 
     /// Parse a snapshot document produced by [`TelemetrySnapshot::to_json`].
@@ -215,6 +248,10 @@ impl TelemetrySnapshot {
             verify_warned: counters.u64_or_zero("verify_warned"),
             verify_denied: counters.u64_or_zero("verify_denied"),
             executed: counters.u64_or_zero("executed"),
+            serve_enqueued: counters.u64_or_zero("serve.enqueued"),
+            serve_shed: counters.u64_or_zero("serve.shed"),
+            serve_batched: counters.u64_or_zero("serve.batched"),
+            serve_coalesced: counters.u64_or_zero("serve.coalesced"),
             converts: counters.u64_or_zero("converts"),
             dots: counters.u64_or_zero("dots"),
             classes: read_map("classes"),
@@ -259,6 +296,12 @@ impl TelemetrySnapshot {
             "  executed            {} instructions (converts: {}, dots: {})\n",
             self.executed, self.converts, self.dots
         ));
+        if self.serve_enqueued + self.serve_shed + self.serve_batched > 0 {
+            out.push_str(&format!(
+                "  serving layer       enqueued: {}  shed: {}  batched: {}  coalesced: {}\n",
+                self.serve_enqueued, self.serve_shed, self.serve_batched, self.serve_coalesced
+            ));
+        }
         if !self.classes.is_empty() {
             out.push_str("  per class           ");
             let cells = self
@@ -325,6 +368,10 @@ mod tests {
             verify_warned: 0,
             verify_denied: 0,
             executed: 128,
+            serve_enqueued: 20,
+            serve_shed: 2,
+            serve_batched: 5,
+            serve_coalesced: 6,
             converts: 12,
             dots: 4,
             classes: [("convert".to_string(), 12), ("dot".to_string(), 4), ("fp".to_string(), 112)]
@@ -371,7 +418,39 @@ mod tests {
         assert!(txt.contains("converts: 12"), "{txt}");
         assert!(txt.contains("denied: 0"), "{txt}");
         assert!(txt.contains("tier.avx2.planes=96"), "{txt}");
+        assert!(txt.contains("serving layer"), "{txt}");
+        assert!(txt.contains("shed: 2"), "{txt}");
         assert!(txt.contains("submit"), "{txt}");
+    }
+
+    /// A snapshot that never saw serving traffic renders no serving
+    /// line (direct CLI runs keep their old output).
+    #[test]
+    fn render_omits_serve_line_when_idle() {
+        let mut snap = sample();
+        snap.serve_enqueued = 0;
+        snap.serve_shed = 0;
+        snap.serve_batched = 0;
+        snap.serve_coalesced = 0;
+        assert!(!snap.render().contains("serving layer"));
+    }
+
+    /// `persist` installs a complete, parseable document and leaves no
+    /// temp file behind.
+    #[test]
+    fn persist_installs_atomically_and_round_trips() {
+        let snap = sample();
+        let path = std::env::temp_dir()
+            .join(format!("takum-snap-test-{}.json", std::process::id()))
+            .to_string_lossy()
+            .into_owned();
+        snap.persist(&path).unwrap();
+        let parsed =
+            TelemetrySnapshot::from_json(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed, snap);
+        let tmp = format!("{path}.tmp.{}", std::process::id());
+        assert!(!std::path::Path::new(&tmp).exists(), "temp file must be renamed away");
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

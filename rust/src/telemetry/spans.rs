@@ -4,13 +4,18 @@
 //! ## Lifecycle stages
 //!
 //! Every submitted job emits **exactly one span per stage** of the fixed
-//! lifecycle set — `submit`, `verify`, `plan`, `decode`, `execute`,
-//! `encode` ([`Stage::ALL`]). `submit` is the umbrella covering the whole
-//! job; the other five partition the work where the job's execution path
-//! makes the stage separable. Stages a job *fuses* into its execution
-//! body (e.g. input staging inside a builder-lowered kernel) are recorded
-//! as **zero-duration markers** at their position in the lifecycle, so
-//! span count and ordering are invariant across job kinds.
+//! lifecycle set — `queue`, `submit`, `verify`, `plan`, `decode`,
+//! `execute`, `encode` ([`Stage::ALL`]). `queue` is the time a request
+//! waited in the serving layer's queue before an engine picked it up
+//! (zero-duration for direct submits — there is no queue in front of
+//! them); `submit` is the umbrella covering the whole job; the other
+//! five partition the work where the job's execution path makes the
+//! stage separable. Stages a job *fuses* into its execution body (e.g.
+//! input staging inside a builder-lowered kernel) are recorded as
+//! **zero-duration markers** at their position in the lifecycle, so
+//! span count and ordering are invariant across job kinds. Chrome
+//! traces of a served workload therefore show time-in-queue vs
+//! time-in-engine side by side.
 //!
 //! ## Trace format
 //!
@@ -32,13 +37,14 @@ use crate::telemetry::enabled;
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-/// Ring capacity of a default-built recorder: enough for ~680 jobs of 6
+/// Ring capacity of a default-built recorder: enough for ~585 jobs of 7
 /// spans each, at 40 bytes per span ≈ 160 KiB bounded memory.
 pub const DEFAULT_CAPACITY: usize = 4096;
 
 /// One lifecycle stage of a submitted job (see the module docs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Stage {
+    Queue,
     Submit,
     Verify,
     Plan,
@@ -49,7 +55,8 @@ pub enum Stage {
 
 impl Stage {
     /// Every stage, in lifecycle order.
-    pub const ALL: [Stage; 6] = [
+    pub const ALL: [Stage; 7] = [
+        Stage::Queue,
         Stage::Submit,
         Stage::Verify,
         Stage::Plan,
@@ -60,6 +67,7 @@ impl Stage {
 
     pub fn name(self) -> &'static str {
         match self {
+            Stage::Queue => "queue",
             Stage::Submit => "submit",
             Stage::Verify => "verify",
             Stage::Plan => "plan",
@@ -72,12 +80,13 @@ impl Stage {
     /// Dense index (histogram slot).
     pub fn index(self) -> usize {
         match self {
-            Stage::Submit => 0,
-            Stage::Verify => 1,
-            Stage::Plan => 2,
-            Stage::Decode => 3,
-            Stage::Execute => 4,
-            Stage::Encode => 5,
+            Stage::Queue => 0,
+            Stage::Submit => 1,
+            Stage::Verify => 2,
+            Stage::Plan => 3,
+            Stage::Decode => 4,
+            Stage::Execute => 5,
+            Stage::Encode => 6,
         }
     }
 }
@@ -229,7 +238,7 @@ mod tests {
     #[test]
     fn chrome_trace_is_well_formed() {
         let rec = SpanRecorder::with_capacity(64);
-        // Two jobs, all six stages each, recorded out of timestamp order
+        // Two jobs, all seven stages each, recorded out of timestamp order
         // (the umbrella span is recorded last in real submits too).
         for job in [1u64, 0] {
             let base = Duration::from_micros(100 * job);
@@ -240,7 +249,7 @@ mod tests {
         let trace = rec.chrome_trace();
         let doc = Json::parse(&trace).expect("chrome trace must be valid JSON");
         let events = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
-        assert_eq!(events.len(), 12, "one span per stage per job");
+        assert_eq!(events.len(), 2 * Stage::ALL.len(), "one span per stage per job");
         let mut last_ts = f64::MIN;
         for e in events {
             assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"));

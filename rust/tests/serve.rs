@@ -1,0 +1,282 @@
+//! Serving-layer integration tests: the determinism contract (served
+//! responses bit-identical to direct `Engine::submit` across every
+//! backend × codec at any worker/batch size), shed-path determinism,
+//! error fan-out mid-batch, hot-swap under traffic, and the
+//! single-start guarantee of the engine-owned PJRT service under
+//! concurrent artifact submits.
+
+use std::sync::mpsc;
+use takum_avx10::engine::{Engine, EngineConfig, Job};
+use takum_avx10::kernels::{Kernel, KernelResult, KernelSpec};
+use takum_avx10::runtime::TensorF64;
+use takum_avx10::serve::{Rejection, Server, ServerConfig};
+use takum_avx10::sim::{Backend, CodecMode};
+
+/// Field-by-field bit identity for kernel results: floats compared on
+/// their bit patterns, instruction counts and the full mnemonic
+/// histogram exactly.
+fn assert_bit_identical(served: &KernelResult, direct: &KernelResult, ctx: &str) {
+    assert_eq!(served.kernel, direct.kernel, "{ctx}: kernel");
+    assert_eq!(served.format, direct.format, "{ctx}: format");
+    assert_eq!(served.n, direct.n, "{ctx}: n");
+    assert_eq!(
+        served.rel_error.to_bits(),
+        direct.rel_error.to_bits(),
+        "{ctx}: rel_error bits ({} vs {})",
+        served.rel_error,
+        direct.rel_error
+    );
+    assert_eq!(served.executed, direct.executed, "{ctx}: executed");
+    assert_eq!(served.dp_instructions, direct.dp_instructions, "{ctx}: dp");
+    assert_eq!(served.convert_instructions, direct.convert_instructions, "{ctx}: converts");
+    assert_eq!(served.counts, direct.counts, "{ctx}: mnemonic histogram");
+}
+
+/// The core serving contract: for every `Backend × CodecMode`, at
+/// several server worker counts and batch sizes, every served reply —
+/// batched, coalesced or solo — is bit-identical to running the same
+/// spec directly on an engine of the same config.
+#[test]
+fn served_replies_bit_identical_to_direct_submit() {
+    for backend in Backend::ALL {
+        for codec in CodecMode::ALL {
+            let cfg = EngineConfig::new().backend(backend).codec(codec).workers(2);
+            let direct = cfg.clone().build().expect("direct engine");
+
+            // Compatible run with duplicates (coalescing) plus a format
+            // break mid-stream (batch segmentation).
+            let mut specs = Vec::new();
+            for kernel in [Kernel::Dot, Kernel::Softmax] {
+                for format in ["t8", "bf16"] {
+                    for seed in [1u64, 2] {
+                        specs.push(KernelSpec { kernel, format, n: 64, seed });
+                    }
+                }
+            }
+            specs.push(KernelSpec { kernel: Kernel::Dot, format: "t8", n: 64, seed: 1 }); // dup
+            specs.push(KernelSpec { kernel: Kernel::Dot, format: "t8", n: 64, seed: 2 }); // dup
+
+            for (server_workers, batch_max) in [(1usize, 8usize), (3, 2)] {
+                let server = Server::start(ServerConfig {
+                    tenants: vec![("t".to_string(), cfg.clone())],
+                    workers: server_workers,
+                    watermark: 256,
+                    batch_max,
+                })
+                .expect("server");
+                let (tx, rx) = mpsc::channel();
+                let mut by_id = std::collections::HashMap::new();
+                for &spec in &specs {
+                    let id = server.submit(0, spec, tx.clone()).expect("no shedding here");
+                    by_id.insert(id, spec);
+                }
+                for _ in 0..specs.len() {
+                    let reply = rx.recv().expect("reply");
+                    let spec = by_id[&reply.id];
+                    let ctx = format!(
+                        "{}/{} {}/{} n={} seed={} (sw={server_workers}, bm={batch_max})",
+                        backend.name(),
+                        codec.name(),
+                        spec.kernel.name(),
+                        spec.format,
+                        spec.n,
+                        spec.seed
+                    );
+                    let served = reply.result.expect("kernel must run");
+                    let reference = spec.run(&direct).expect("direct run");
+                    assert_bit_identical(&served, &reference, &ctx);
+                }
+                server.shutdown();
+            }
+        }
+    }
+}
+
+/// Shed-path determinism: with the gate closed, exactly the first
+/// `watermark` submissions are accepted and every overflow sheds with
+/// the typed rejection; the accepted prefix then completes in full.
+#[test]
+fn shed_split_is_deterministic_at_watermark() {
+    let server = Server::start(ServerConfig {
+        tenants: vec![("t".to_string(), EngineConfig::new().workers(1))],
+        workers: 2,
+        watermark: 8,
+        batch_max: 4,
+    })
+    .expect("server");
+    server.pause();
+    let (tx, rx) = mpsc::channel();
+    let mut accepted = 0u32;
+    let mut shed = 0u32;
+    for i in 0..12u64 {
+        let spec = KernelSpec { kernel: Kernel::Dot, format: "t8", n: 64, seed: i % 3 };
+        match server.submit(0, spec, tx.clone()) {
+            Ok(_) => {
+                assert!(i < 8, "acceptance must be the prefix, got id at position {i}");
+                accepted += 1;
+            }
+            Err(Rejection::Shed { depth, watermark }) => {
+                assert!(i >= 8, "shed before the watermark at position {i}");
+                assert_eq!((depth, watermark), (8, 8));
+                shed += 1;
+            }
+            Err(Rejection::Closed) => panic!("server is running"),
+        }
+    }
+    assert_eq!((accepted, shed), (8, 4));
+    assert_eq!(server.queue_depth(), 8);
+    server.resume();
+    for _ in 0..8 {
+        let reply = rx.recv().expect("accepted requests complete");
+        assert!(reply.result.is_ok());
+    }
+    #[cfg(not(feature = "telemetry-off"))]
+    {
+        let snap = server.tenant_engine(0).telemetry();
+        assert_eq!(snap.serve_enqueued, 8);
+        assert_eq!(snap.serve_shed, 4);
+        assert!(snap.serve_batched >= 2, "8 accepted / batch_max 4 needs >= 2 batches");
+    }
+    server.shutdown();
+}
+
+/// `Engine::run_tasks` with a task failing mid-fan-out: the abort
+/// drains cleanly (no hang, no poisoned pool), the first error comes
+/// back, and the pool immediately serves a full fan-out afterwards with
+/// per-worker counts summing to the task count.
+#[test]
+fn run_tasks_error_mid_fanout_drains_and_recovers() {
+    let eng = EngineConfig::new().workers(4).build().expect("engine");
+    let err = eng
+        .run_tasks(64, |i| {
+            if i >= 20 {
+                anyhow::bail!("task {i} exploded")
+            }
+            Ok(i * 2)
+        })
+        .expect_err("mid-fan-out failure must surface");
+    assert!(err.to_string().contains("exploded"), "{err:#}");
+
+    // The pool survives: a following fan-out completes with every slot
+    // filled and the per-worker counts accounting for every task.
+    let (results, per_worker) = eng.run_tasks(64, |i| Ok(i + 1)).expect("clean run");
+    assert_eq!(results, (1..=64).collect::<Vec<_>>());
+    assert_eq!(per_worker.len(), 4);
+    assert_eq!(per_worker.iter().sum::<usize>(), 64, "per-worker counts must sum");
+}
+
+/// A batch that fails mid-fan-out (invalid sizes force a kernel error)
+/// fans the same deterministic error to every member, and the server
+/// keeps serving afterwards.
+#[test]
+fn batch_error_fans_out_to_every_member() {
+    let server = Server::start(ServerConfig {
+        tenants: vec![("t".to_string(), EngineConfig::new().workers(2))],
+        workers: 1,
+        watermark: 5,
+        batch_max: 5,
+    })
+    .expect("server");
+    server.pause();
+    let (tx, rx) = mpsc::channel();
+    // Five distinct specs (no coalescing) at an off-tile size: the batch
+    // fan-out hits the kernel-size contract and aborts.
+    for seed in 0..5u64 {
+        let spec = KernelSpec { kernel: Kernel::Dot, format: "t8", n: 32, seed };
+        server.submit(0, spec, tx.clone()).expect("under watermark");
+    }
+    server.resume();
+    let mut messages = Vec::new();
+    for _ in 0..5 {
+        let reply = rx.recv().expect("reply");
+        messages.push(reply.result.expect_err("n=32 must fail"));
+        assert!(!reply.coalesced);
+    }
+    assert!(messages[0].contains("multiple of 64"), "{}", messages[0]);
+    assert!(messages.iter().all(|m| m == &messages[0]), "error must fan out identically");
+
+    // The failed batch did not wedge the worker.
+    let spec = KernelSpec { kernel: Kernel::Dot, format: "t8", n: 64, seed: 1 };
+    server.submit(0, spec, tx).expect("server still accepts");
+    assert!(rx.recv().expect("reply").result.is_ok());
+    server.shutdown();
+}
+
+/// Hot-swapping a tenant while a producer hammers it loses no requests:
+/// every reply arrives Ok (old engine finishes its in-flight batches,
+/// new engine takes over), and the tenant ends on the new config.
+#[test]
+fn hot_swap_under_traffic_loses_nothing() {
+    let server = Server::start(ServerConfig {
+        tenants: vec![("t".to_string(), EngineConfig::new().workers(2))],
+        workers: 2,
+        watermark: 1024,
+        batch_max: 8,
+    })
+    .expect("server");
+    let total = 200u64;
+    std::thread::scope(|scope| {
+        let server = &server;
+        let consumer = scope.spawn(move || {
+            let (tx, rx) = mpsc::channel();
+            for i in 0..total {
+                let spec = KernelSpec { kernel: Kernel::Dot, format: "t8", n: 64, seed: i % 3 };
+                server.submit(0, spec, tx.clone()).expect("under watermark");
+            }
+            let mut ok = 0u64;
+            for _ in 0..total {
+                if rx.recv().expect("reply").result.is_ok() {
+                    ok += 1;
+                }
+            }
+            ok
+        });
+        // Swap mid-traffic: first onto the arith codec, then onto the
+        // vector backend. Old engines stay alive for their in-flight
+        // batches; new batches run the new config.
+        server
+            .swap_tenant(0, EngineConfig::new().workers(2).codec(CodecMode::Arith))
+            .expect("swap 1");
+        server
+            .swap_tenant(
+                0,
+                EngineConfig::new().workers(2).backend(Backend::Vector),
+            )
+            .expect("swap 2");
+        assert_eq!(consumer.join().expect("producer"), total, "every request must complete");
+    });
+    assert!(
+        server.tenant_engine(0).tag().contains("backend=vector"),
+        "tenant must end on the swapped-in config, got {}",
+        server.tenant_engine(0).tag()
+    );
+    server.shutdown();
+}
+
+/// Concurrent `Job::Artifact` submits race the lazy PJRT service start:
+/// the start-outside-lock/install-under-lock protocol runs the
+/// constructor exactly once, and every submitter gets a working handle
+/// (the graph-interpreter fallback without the `pjrt` feature).
+#[test]
+fn pjrt_service_starts_exactly_once_under_concurrent_artifact_submits() {
+    let eng = EngineConfig::new().workers(2).build().expect("engine");
+    let eng: &Engine = &eng;
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                scope.spawn(move || {
+                    eng.submit(Job::Artifact {
+                        name: "takum8_roundtrip".into(),
+                        inputs: vec![TensorF64::vec(vec![1.0, 2.5, -3.0 - i as f64])],
+                    })
+                    .map(|r| r.artifact())
+                })
+            })
+            .collect();
+        for h in handles {
+            let out = h.join().expect("no panic").expect("artifact job");
+            assert_eq!(out[0].len(), 3);
+        }
+    });
+    assert_eq!(eng.pjrt_starts(), 1, "the service must start exactly once");
+}
