@@ -92,6 +92,45 @@ fn main() {
         println!("{k:<16} vector {:>6.2}x  graph {:>6.2}x", sc / vec, sc / gr);
     }
 
+    // Graph-compiler axis (`crate::opt`): the same cells three ways —
+    // direct builder execution, the whole-trace graph-interpreter
+    // backend, and the optimize-then-lower replay (`--opt on`, which
+    // runs the cell directly *and* replays the re-lowered optimized
+    // program, so its rows carry the full compile-and-replay cost). On
+    // OFP8 cells the rewrite fixpoint erases the storage↔compute
+    // convert chains the direct program pays; takum cells enter the
+    // optimizer already at the fixpoint — the printed instruction
+    // deltas are the paper's convert-tax claim, per cell.
+    b.group(&format!("graph compiler: direct vs interpreter vs optimized-lowered (n={n})"));
+    let direct_eng = EngineConfig::new().codec(CodecMode::Lut).build().expect("engine");
+    let interp_eng =
+        EngineConfig::new().codec(CodecMode::Lut).backend(Backend::Graph).build().expect("engine");
+    let opt_eng = EngineConfig::new().codec(CodecMode::Lut).opt(true).build().expect("engine");
+    for kernel in [Kernel::Dot, Kernel::Poly, Kernel::Softmax] {
+        for format in ["t8", "t16", "e4m3", "e5m2"] {
+            let spec = KernelSpec { kernel, format, n, seed: 1 };
+            let d = spec.run(&direct_eng).unwrap();
+            let o = spec.run(&opt_eng).unwrap();
+            println!(
+                "  {} {format:<6} instructions {} -> {} (cvt {} -> {})",
+                kernel.name(),
+                d.executed,
+                o.executed,
+                d.convert_instructions,
+                o.convert_instructions
+            );
+            let legs: [(&str, &takum_avx10::engine::Engine); 3] =
+                [("direct", &direct_eng), ("interp", &interp_eng), ("graph-opt", &opt_eng)];
+            for (label, e) in legs {
+                b.bench_with_elements(
+                    &format!("{} {format} [{label}]", kernel.name()),
+                    n as u64,
+                    || spec.run(e).unwrap(),
+                );
+            }
+        }
+    }
+
     // The verify-before-run gate (`crate::verify`): the same cells with
     // the static pass off vs enforced under `Deny`. The delta is the
     // whole price of verification — the abstract interpretation over the
@@ -193,14 +232,15 @@ fn main() {
     }
 
     // Machine-readable perf trajectory: every measurement above —
-    // including the per-backend kernel timings — lands in
-    // BENCH_kernels.json so CI archives can diff runs over time. The
-    // file-level tag is the process-default engine; rows that pinned a
-    // different config carry it in their measurement name. Schema v3:
-    // the default engine's counter snapshot rides along under
-    // `telemetry`, so trend tooling can diff cache-hit rates and convert
-    // counts alongside the timings.
-    b.set_telemetry(eng.telemetry().to_json());
+    // including the per-backend kernel timings and the graph-opt rows —
+    // lands in BENCH_kernels.json so CI archives can diff runs over
+    // time. The file-level tag is the process-default engine; rows that
+    // pinned a different config carry it in their measurement name.
+    // Schema v3: the graph-opt engine's counter snapshot rides along
+    // under `telemetry` (its own tag stamped inside), so trend tooling
+    // can diff the per-rule `opt.rule.<name>.applied` counters and
+    // `opt.lowered_programs`/`opt.nodes_removed` alongside the timings.
+    b.set_telemetry(opt_eng.telemetry().to_json());
     b.write_json("kernels", &eng.tag(), "BENCH_kernels.json")
         .expect("writing BENCH_kernels.json");
 }

@@ -119,12 +119,26 @@ def telemetry_diff(base_telem, cur_telem):
             note = f"  ⚠ dropped >{HIT_RATE_DROP_POINTS:.0f} points"
             flagged.append(f"{label} hit rate {b:.1f}% → {c:.1f}%")
         rows.append(f"    {label} hit rate: {b:.1f}% → {c:.1f}%{note}")
-    for key in ("converts", "dots", "executed"):
+    for key in ("converts", "dots", "executed", "opt.lowered_programs", "opt.nodes_removed"):
         b, c = base_c.get(key), cur_c.get(key)
         if b is None or c is None:
             continue
         note = " (changed)" if b != c else ""
         rows.append(f"    {key}: {b} → {c}{note}")
+    # Per-rewrite-rule application counters from the graph-compiler
+    # snapshot (`opt.rule.<name>.applied`, carried as the `opt_rules`
+    # map). A shifted count is informational — it usually tracks an
+    # intentional rule-table or kernel-lowering change — but a rule
+    # falling to zero that used to fire is worth a look.
+    base_r = base_telem.get("opt_rules", {}) or {}
+    cur_r = cur_telem.get("opt_rules", {}) or {}
+    if isinstance(base_r, dict) and isinstance(cur_r, dict):
+        for rule in sorted(set(base_r) | set(cur_r)):
+            b, c = base_r.get(rule, 0), cur_r.get(rule, 0)
+            if b == 0 and c == 0:
+                continue
+            note = " (changed)" if b != c else ""
+            rows.append(f"    opt.rule.{rule}.applied: {b} → {c}{note}")
     if rows:
         print("\n  telemetry drift (informational, never gates):")
         for row in rows:

@@ -11,7 +11,8 @@
 //!   default) and overrides with [`EngineConfig::try_backend`] /
 //!   [`EngineConfig::try_codec`] / [`EngineConfig::try_simd`] /
 //!   [`EngineConfig::workers`] only when the flag was given;
-//! * `TAKUM_BACKEND` / `TAKUM_CODEC` / `TAKUM_SIMD` / `TAKUM_VERIFY` are
+//! * `TAKUM_BACKEND` / `TAKUM_CODEC` / `TAKUM_SIMD` / `TAKUM_VERIFY` /
+//!   `TAKUM_OPT` are
 //!   read **here and nowhere else** ([`EngineConfig::from_env`]); a
 //!   malformed value warns and falls back to the default (`scalar` /
 //!   `lut` / auto-detect / `off`) via the pure, unit-testable
@@ -69,6 +70,13 @@ pub struct EngineConfig {
     pub(crate) warm: WarmPolicy,
     pub(crate) seed: u64,
     pub(crate) verify: Verify,
+    /// Graph-compiler routing (`TAKUM_OPT` / `--opt`): when on, kernel
+    /// and suite jobs lift each traced program, run the exact-tier
+    /// rewrite rules ([`crate::opt`]), lower the optimized graph back to
+    /// an instruction stream and execute *that* (bit-identical by
+    /// construction; cells that are not liftable/lowerable fall back to
+    /// direct execution).
+    pub(crate) opt: bool,
     /// Chrome-trace output path (`TAKUM_TRACE` / `--trace`): when set,
     /// the engine writes its span ring there on drop (see
     /// [`crate::telemetry::spans`]).
@@ -100,6 +108,7 @@ impl EngineConfig {
             warm: WarmPolicy::default(),
             seed: 0xBEEF,
             verify: Verify::default(),
+            opt: false,
             trace: None,
             stats_path: None,
         }
@@ -115,6 +124,7 @@ impl EngineConfig {
             std::env::var("TAKUM_CODEC").ok().as_deref(),
             std::env::var("TAKUM_SIMD").ok().as_deref(),
             std::env::var("TAKUM_VERIFY").ok().as_deref(),
+            std::env::var("TAKUM_OPT").ok().as_deref(),
             std::env::var("TAKUM_TRACE").ok().as_deref(),
             std::env::var("TAKUM_STATS").ok().as_deref(),
         )
@@ -133,13 +143,15 @@ impl EngineConfig {
         codec: Option<&str>,
         simd: Option<&str>,
         verify: Option<&str>,
+        opt: Option<&str>,
         trace: Option<&str>,
         stats: Option<&str>,
     ) -> EngineConfig {
         let mut cfg = EngineConfig::new()
             .backend(Backend::parse_env(backend))
             .codec(CodecMode::parse_env(codec))
-            .verify(Verify::parse_env(verify));
+            .verify(Verify::parse_env(verify))
+            .opt(parse_opt_env(opt));
         cfg.simd = Tier::parse_env(simd);
         if let Some(path) = trace.filter(|p| !p.is_empty()) {
             cfg = cfg.trace(path);
@@ -204,6 +216,25 @@ impl EngineConfig {
         Ok(self.verify(Verify::parse(name)?))
     }
 
+    /// Enable or disable the graph-compiler routing (optimize-then-lower
+    /// for kernel/suite jobs; see [`crate::opt`]).
+    pub fn opt(mut self, on: bool) -> EngineConfig {
+        self.opt = on;
+        self
+    }
+
+    /// Select the graph-compiler routing by CLI-flag spelling (`--opt
+    /// on|off`); unknown names error with the valid spellings.
+    pub fn try_opt(self, name: &str) -> Result<EngineConfig> {
+        match name {
+            "on" => Ok(self.opt(true)),
+            "off" => Ok(self.opt(false)),
+            other => anyhow::bail!(
+                "unknown opt setting {other:?} (valid: \"on\", \"off\")"
+            ),
+        }
+    }
+
     /// Enable Chrome-trace export of the job-lifecycle spans to `path`
     /// (written when the engine is dropped; see
     /// [`crate::telemetry::spans`]). The env spelling is
@@ -245,6 +276,21 @@ impl EngineConfig {
     /// the configured LUT set, and takes ownership of the shared caches.
     pub fn build(self) -> Result<Engine> {
         Engine::build(self)
+    }
+}
+
+/// `TAKUM_OPT` parsing: `1`/`on`/`true` enable the graph-compiler
+/// routing, unset/empty/`0`/`off`/`false` disable it, anything else
+/// warns and falls back to off (the same warn-and-fallback contract as
+/// the other env axes).
+fn parse_opt_env(v: Option<&str>) -> bool {
+    match v.map(str::trim) {
+        None | Some("") | Some("0") | Some("off") | Some("false") => false,
+        Some("1") | Some("on") | Some("true") => true,
+        Some(other) => {
+            eprintln!("warning: TAKUM_OPT: unknown value {other:?} (valid: on/off); using off");
+            false
+        }
     }
 }
 
@@ -292,10 +338,11 @@ mod tests {
         assert_eq!(base.mode, CodecMode::Lut);
 
         // Unset env ⇒ built-in defaults.
-        let cfg = EngineConfig::from_env_values(None, None, None, None, None, None);
+        let cfg = EngineConfig::from_env_values(None, None, None, None, None, None, None);
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Scalar));
         assert_eq!(cfg.simd, None);
         assert_eq!(cfg.verify, Verify::Off);
+        assert!(!cfg.opt);
         assert_eq!(cfg.trace, None);
         assert_eq!(cfg.stats_path, None);
 
@@ -305,16 +352,20 @@ mod tests {
             Some("arith"),
             Some("scalar"),
             Some("deny"),
+            Some("on"),
             Some("out/trace.json"),
             Some("out/stats.json"),
         );
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Arith, Backend::Vector));
         assert_eq!(cfg.simd, Some(Tier::Scalar));
         assert_eq!(cfg.verify, Verify::Deny);
+        assert!(cfg.opt);
         assert_eq!(cfg.trace.as_deref(), Some("out/trace.json"));
         assert_eq!(cfg.stats_path.as_deref(), Some("out/stats.json"));
-        let cfg = EngineConfig::from_env_values(Some("graph"), None, None, None, None, None);
+        let cfg =
+            EngineConfig::from_env_values(Some("graph"), None, None, None, Some("1"), None, None);
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Graph));
+        assert!(cfg.opt);
 
         // Invalid env values warn (stderr) and fall back to the default
         // rather than failing construction; empty TAKUM_TRACE /
@@ -325,15 +376,17 @@ mod tests {
             Some("banana"),
             Some("mmx"),
             Some("paranoid"),
+            Some("banana"),
             Some(""),
             Some(""),
         );
         assert_eq!((cfg.mode, cfg.backend), (CodecMode::Lut, Backend::Scalar));
         assert_eq!(cfg.simd, None);
         assert_eq!(cfg.verify, Verify::Off);
+        assert!(!cfg.opt);
         assert_eq!(cfg.trace, None);
         assert_eq!(cfg.stats_path, None);
-        let cfg = EngineConfig::from_env_values(None, None, Some("auto"), None, None, None);
+        let cfg = EngineConfig::from_env_values(None, None, Some("auto"), None, None, None, None);
         assert_eq!(cfg.simd, None);
     }
 
@@ -360,6 +413,12 @@ mod tests {
 
         let cfg = EngineConfig::new().try_verify("deny").unwrap();
         assert_eq!(cfg.verify, Verify::Deny);
+        let cfg = EngineConfig::new().try_opt("on").unwrap();
+        assert!(cfg.opt);
+        let cfg = EngineConfig::new().try_opt("off").unwrap();
+        assert!(!cfg.opt);
+        let e = EngineConfig::new().try_opt("maybe").unwrap_err().to_string();
+        assert!(e.contains("unknown opt setting \"maybe\""), "{e:?}");
         let e = EngineConfig::new().try_verify("paranoid").unwrap_err().to_string();
         assert!(e.contains("unknown verify policy \"paranoid\""), "{e:?}");
         assert!(e.contains("off") && e.contains("warn") && e.contains("deny"), "{e:?}");

@@ -77,7 +77,10 @@
 //! forced tier against [`Tier::supported`] and resolves it **once** into
 //! the engine, every [`Engine::machine`] inherits the resolved
 //! dispatch table, and [`Engine::tag`] stamps `simd=<tier>` into the
-//! bench JSON and telemetry artifacts.
+//! bench JSON and telemetry artifacts. The graph-compiler axis (`--opt`,
+//! `TAKUM_OPT`, `opt=<on|off>` in the tag) followed the same recipe: one
+//! `bool` on the config, one routing decision in the kernel runner, one
+//! tag segment.
 
 pub mod config;
 pub mod job;
@@ -259,6 +262,14 @@ impl Engine {
         self.cfg.verify
     }
 
+    /// Whether the graph-compiler routing is on (`--opt` / `TAKUM_OPT`):
+    /// kernel and suite cells lift → optimize (exact rules) → lower →
+    /// run, falling back to direct execution per cell when the trace is
+    /// not liftable/lowerable. See [`crate::opt`].
+    pub fn opt_enabled(&self) -> bool {
+        self.cfg.opt
+    }
+
     /// Apply the configured [`Verify`] policy to a verification report
     /// produced for `context` (a human-readable job description, e.g.
     /// `"kernel softmax/e4m3"`). `Off` is a no-op; `Warn` prints every
@@ -432,12 +443,13 @@ impl Engine {
     /// telemetry snapshot.
     pub fn tag(&self) -> String {
         format!(
-            "backend={};codec={};workers={};verify={};trace={};simd={}",
+            "backend={};codec={};workers={};verify={};trace={};opt={};simd={}",
             self.cfg.backend.name(),
             self.cfg.mode.name(),
             self.cfg.workers,
             self.cfg.verify.name(),
             if self.cfg.trace.is_some() { "on" } else { "off" },
+            if self.cfg.opt { "on" } else { "off" },
             self.resolved_simd.name()
         )
     }
@@ -655,8 +667,21 @@ mod tests {
             .unwrap();
         assert_eq!(
             eng.tag(),
-            "backend=graph;codec=arith;workers=3;verify=off;trace=off;simd=scalar"
+            "backend=graph;codec=arith;workers=3;verify=off;trace=off;opt=off;simd=scalar"
         );
+        let eng = EngineConfig::new()
+            .backend(Backend::Graph)
+            .codec(CodecMode::Arith)
+            .workers(3)
+            .opt(true)
+            .simd(Tier::Scalar)
+            .build()
+            .unwrap();
+        assert_eq!(
+            eng.tag(),
+            "backend=graph;codec=arith;workers=3;verify=off;trace=off;opt=on;simd=scalar"
+        );
+        assert!(eng.opt_enabled());
         let eng = EngineConfig::new()
             .backend(Backend::Graph)
             .codec(CodecMode::Arith)
@@ -667,7 +692,7 @@ mod tests {
             .unwrap();
         assert_eq!(
             eng.tag(),
-            "backend=graph;codec=arith;workers=3;verify=deny;trace=off;simd=scalar"
+            "backend=graph;codec=arith;workers=3;verify=deny;trace=off;opt=off;simd=scalar"
         );
         // The trace axis is stamped like the others (the path itself is
         // not — it is an output location, not an execution axis).
@@ -682,7 +707,7 @@ mod tests {
             .unwrap();
         assert_eq!(
             eng.tag(),
-            "backend=scalar;codec=lut;workers=2;verify=off;trace=on;simd=scalar"
+            "backend=scalar;codec=lut;workers=2;verify=off;trace=on;opt=off;simd=scalar"
         );
         drop(eng); // the drop flush writes the (possibly empty) trace
         assert!(path.exists(), "drop must write the configured trace file");

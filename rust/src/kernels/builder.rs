@@ -21,7 +21,7 @@
 
 use super::pipeline::Pipeline;
 use crate::engine::Engine;
-use crate::sim::{Instruction, LaneType, Machine, Operand, Program};
+use crate::sim::{Instruction, LaneType, LoadEvent, Machine, Operand, Program};
 use crate::verify::{Externals, Report, Verifier, Verify};
 use anyhow::Result;
 
@@ -46,6 +46,13 @@ pub struct KernelBuilder<'e> {
     /// externally defined — and at which lane type — before each
     /// instruction. Only maintained while tracing.
     externals: Externals,
+    /// Value-carrying twin of the externals journal: the actual `f64`
+    /// lanes each `load_*` wrote, positioned like [`Externals::load`].
+    /// This is what lets [`crate::sim::Graph::lift_with_loads`] replay
+    /// the harness's data movement as graph constants, so a recorded
+    /// kernel can be lifted, optimized and re-lowered. Only maintained
+    /// while tracing.
+    loads: Vec<LoadEvent>,
 }
 
 impl<'e> KernelBuilder<'e> {
@@ -62,6 +69,7 @@ impl<'e> KernelBuilder<'e> {
             tracing: true,
             engine,
             externals,
+            loads: Vec::new(),
         }
     }
 
@@ -97,15 +105,16 @@ impl<'e> KernelBuilder<'e> {
     }
 
     /// [`KernelBuilder::finish`] plus the static verification report for
-    /// the recorded trace (against the builder's external-load journal).
-    /// `None` when the engine's verify policy is `Off` or the builder is
-    /// untraced — computing the report is one linear pass over the
+    /// the recorded trace (against the builder's external-load journal)
+    /// and the value-carrying load journal (for graph lifting).
+    /// The report is `None` when the engine's verify policy is `Off` or
+    /// the builder is untraced — computing it is one linear pass over the
     /// trace, so it is skipped entirely unless asked for.
-    pub fn finish_with_report(self) -> (Machine, Program, Option<Report>) {
+    pub fn finish_with_report(self) -> (Machine, Program, Option<Report>, Vec<LoadEvent>) {
         let report = (self.tracing && self.engine.verify_policy() != Verify::Off)
             .then(|| self.verify_report());
         self.engine.absorb(&self.m);
-        (self.m, self.trace, report)
+        (self.m, self.trace, report, self.loads)
     }
 
     /// The external-load journal recorded so far (in lock-step with
@@ -134,26 +143,29 @@ impl<'e> KernelBuilder<'e> {
     // -------------------------------------------------------------- data I/O
 
     pub fn load_narrow(&mut self, v: u8, xs: &[f64]) {
-        self.journal_load(v, self.pipe.narrow);
+        self.journal_load(v, self.pipe.narrow, xs);
         self.m.load_f64(v, self.pipe.narrow, xs);
     }
 
     pub fn load_compute(&mut self, v: u8, xs: &[f64]) {
-        self.journal_load(v, self.pipe.compute);
+        self.journal_load(v, self.pipe.compute, xs);
         self.m.load_f64(v, self.pipe.compute, xs);
     }
 
     pub fn load_wide(&mut self, v: u8, xs: &[f64]) {
-        self.journal_load(v, self.pipe.wide);
+        self.journal_load(v, self.pipe.wide, xs);
         self.m.load_f64(v, self.pipe.wide, xs);
     }
 
     /// Record an external register definition at the current trace
-    /// position (no-op when untraced: the journal exists to verify the
-    /// trace, and untraced builders keep neither).
-    fn journal_load(&mut self, v: u8, ty: LaneType) {
+    /// position, in both journals: the typed position for the static
+    /// verifier and the value-carrying event for graph lifting (no-op
+    /// when untraced: the journals exist to verify/lift the trace, and
+    /// untraced builders keep neither).
+    fn journal_load(&mut self, v: u8, ty: LaneType, xs: &[f64]) {
         if self.tracing {
             self.externals.load(self.trace.len(), v, ty);
+            self.loads.push(LoadEvent { at: self.trace.len(), reg: v, ty, values: xs.to_vec() });
         }
     }
 

@@ -5,6 +5,9 @@
 use super::pipeline::{Isa, Pipeline};
 use super::workloads::{self, KernelRun};
 use crate::engine::{stage_opt, Engine, JobTrace};
+use crate::opt::{lower, run_lowered, OptReport, Optimizer};
+use crate::sim::register::RegisterFile;
+use crate::sim::{Graph, Machine};
 use crate::telemetry::Stage;
 use anyhow::{bail, Result};
 use std::collections::BTreeMap;
@@ -99,7 +102,7 @@ impl KernelSpec {
             // Input decode is fused into the builder-lowered execution.
             tr.mark(Stage::Decode);
         }
-        let run =
+        let mut run =
             stage_opt(tr, Stage::Execute, || self.kernel.run_raw(&pipe, self.n, self.seed, engine))?;
         stage_opt(tr, Stage::Verify, || match &run.report {
             // The verify-before-run gate (see `crate::verify`): under
@@ -116,7 +119,62 @@ impl KernelSpec {
                 Ok(())
             }
         })?;
+        // Graph-compiler axis (`--opt` / `TAKUM_OPT`): lift the recorded
+        // trace, run the exact-tier rewrite rules to the fixpoint, lower
+        // the optimized graph back to an instruction stream and replay
+        // it. The replayed machine replaces the direct one for metric
+        // extraction, so the cell's instruction counts measure the
+        // *optimized* program — the `graph-opt` bench column. The direct
+        // run still supplies `rel_error` (computed from its mid-run
+        // readbacks) — sound because the exact tier plus the lowering
+        // invariants pin the replay bit-identical to direct execution
+        // (`differential_fuzz::optimized_lowering_bit_identity`).
+        if engine.opt_enabled() {
+            if let Some(m) = self.optimize_and_replay(engine, &run)? {
+                run.machine = m;
+            }
+        }
         Ok(stage_opt(tr, Stage::Encode, || KernelResult::from_run(self, &pipe, run)))
+    }
+
+    /// The optimize-then-lower path for one executed cell: lift → exact
+    /// rewrite fixpoint → lower → static verify (`Deny` must pass) →
+    /// replay on a fresh engine machine. Returns `Ok(None)` when the
+    /// trace is outside the lowering invariants (lowering is an
+    /// optimization, never an obligation — the cell falls back to its
+    /// direct result); a lowered program failing the verifier is a
+    /// compiler bug and errors out loud.
+    ///
+    /// The replayed machine is folded into telemetry through the
+    /// standard [`Engine::absorb`] — the same single fold every executed
+    /// machine gets — so `stats` counts each execution exactly once:
+    /// the direct run absorbed at `KernelBuilder::finish_with_report`,
+    /// the lowered replay here, and nothing counted twice
+    /// (`differential_fuzz::telemetry_counters_match_machine_counts`).
+    fn optimize_and_replay(&self, engine: &Engine, run: &KernelRun) -> Result<Option<Machine>> {
+        let init = RegisterFile::default();
+        let Ok(mut g) = Graph::lift_with_loads(&run.program, &init, &run.loads) else {
+            return Ok(None);
+        };
+        let report = Optimizer::exact().run(&mut g);
+        let low = match lower(&g, &init) {
+            Ok(low) => low,
+            Err(_) => return Ok(None),
+        };
+        let verdict = low.verify();
+        anyhow::ensure!(
+            verdict.passes_deny(),
+            "optimized lowering of kernel {}/{} (n={}) fails static verification:\n{}",
+            self.kernel.name(),
+            self.format,
+            self.n,
+            verdict.render_diagnostics()
+        );
+        let mut m = engine.machine();
+        run_lowered(&mut m, &low)?;
+        engine.absorb(&m);
+        note_opt_telemetry(engine, &report);
+        Ok(Some(m))
     }
 
     /// Lower + execute without the enforcement step, returning the raw
@@ -128,6 +186,19 @@ impl KernelSpec {
         let pipe = Pipeline::for_format(self.format)?;
         self.kernel.run_raw(&pipe, self.n, self.seed, engine)
     }
+}
+
+/// Fold one cell's [`OptReport`] into the engine's telemetry registry:
+/// per-rule application counters, one lowered program, and the node
+/// shrinkage the fixpoint bought.
+fn note_opt_telemetry(engine: &Engine, report: &OptReport) {
+    let reg = engine.registry();
+    for &(rule, n) in &report.per_rule {
+        if n > 0 {
+            reg.count_opt_rule(rule, n as u64);
+        }
+    }
+    reg.count_opt_lowered(report.nodes_removed() as u64);
 }
 
 /// Per-kernel, per-format metrics (the suite's generalisation of

@@ -18,7 +18,7 @@
 use super::builder::KernelBuilder;
 use super::pipeline::Pipeline;
 use crate::engine::Engine;
-use crate::sim::{Machine, Program};
+use crate::sim::{LoadEvent, Machine, Program};
 use crate::util::rng::Rng;
 use crate::verify::Report;
 use anyhow::Result;
@@ -47,6 +47,11 @@ pub struct KernelRun {
     /// external-load journal; `None` when the engine's verify policy is
     /// `Off` (the report is never computed unless asked for).
     pub report: Option<Report>,
+    /// Value-carrying journal of every harness-side `load_*` (in trace
+    /// position order) — what [`crate::sim::Graph::lift_with_loads`]
+    /// needs to lift the recorded program into a dataflow graph for the
+    /// engine's optimize-then-lower path.
+    pub loads: Vec<LoadEvent>,
 }
 
 fn check_size(n: usize) -> Result<()> {
@@ -130,8 +135,8 @@ pub fn run_dot(
     }
     let sum = kb.hsum_wide(WACC, wl, S1, S2)?;
     let rel_error = ((sum - reference) / reference).abs();
-    let (machine, program, report) = kb.finish_with_report();
-    Ok(KernelRun { rel_error, machine, program, report })
+    let (machine, program, report, loads) = kb.finish_with_report();
+    Ok(KernelRun { rel_error, machine, program, report, loads })
 }
 
 /// AXPY `y ← α·x + y`: broadcast constant + one packed FMA per tile, with
@@ -162,8 +167,8 @@ pub fn run_axpy(
         out.extend(kb.read_narrow(s, cl));
     }
     let rel_error = frobenius(&out, &reference);
-    let (machine, program, report) = kb.finish_with_report();
-    Ok(KernelRun { rel_error, machine, program, report })
+    let (machine, program, report, loads) = kb.finish_with_report();
+    Ok(KernelRun { rel_error, machine, program, report, loads })
 }
 
 /// Elementwise activation via a cubic Horner polynomial: three dependent
@@ -198,8 +203,8 @@ pub fn run_poly(
         out.extend(kb.read_narrow(s, cl));
     }
     let rel_error = frobenius(&out, &reference);
-    let (machine, program, report) = kb.finish_with_report();
-    Ok(KernelRun { rel_error, machine, program, report })
+    let (machine, program, report, loads) = kb.finish_with_report();
+    Ok(KernelRun { rel_error, machine, program, report, loads })
 }
 
 /// Numerically-stable softmax: global max (packed + horizontal tree),
@@ -276,8 +281,8 @@ pub fn run_softmax(
         out.extend(kb.read_narrow(s, cl));
     }
     let rel_error = frobenius(&out, &reference);
-    let (machine, program, report) = kb.finish_with_report();
-    Ok(KernelRun { rel_error, machine, program, report })
+    let (machine, program, report, loads) = kb.finish_with_report();
+    Ok(KernelRun { rel_error, machine, program, report, loads })
 }
 
 /// 1-D convolution with the 5-tap filter [`CONV_TAPS`]: per output tile,
@@ -317,8 +322,8 @@ pub fn run_conv1d(
         out.extend(kb.read_narrow(s, cl));
     }
     let rel_error = frobenius(&out, &reference);
-    let (machine, program, report) = kb.finish_with_report();
-    Ok(KernelRun { rel_error, machine, program, report })
+    let (machine, program, report, loads) = kb.finish_with_report();
+    Ok(KernelRun { rel_error, machine, program, report, loads })
 }
 
 /// Sum + max reduction: the sum runs through the widening dot product
@@ -357,8 +362,8 @@ pub fn run_reduce(
     let es = ((sum - ref_sum) / ref_sum).abs();
     let em = ((mx - ref_max) / ref_max).abs();
     let rel_error = ((es * es + em * em) / 2.0).sqrt();
-    let (machine, program, report) = kb.finish_with_report();
-    Ok(KernelRun { rel_error, machine, program, report })
+    let (machine, program, report, loads) = kb.finish_with_report();
+    Ok(KernelRun { rel_error, machine, program, report, loads })
 }
 
 #[cfg(test)]

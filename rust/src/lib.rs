@@ -60,6 +60,7 @@ pub mod sim;
 pub mod telemetry;
 pub mod engine;
 pub mod verify;
+pub mod opt;
 pub mod kernels;
 pub mod matrix;
 pub mod harness;

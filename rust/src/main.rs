@@ -93,6 +93,7 @@ fn run(raw: &[String]) -> Result<()> {
         "gemm" => cmd_gemm(&args),
         "kernels" => cmd_kernels(&args),
         "lint" => cmd_lint(&args),
+        "opt" => cmd_opt(&args),
         "artifacts" => cmd_artifacts(&args),
         "stats" => cmd_stats(&args),
         "serve" => cmd_serve(&args),
@@ -121,6 +122,11 @@ commands:
   lint    [--n 64]                static dataflow lint over every kernel ×
           format lowering: per-cell diagnostics, the static instruction
           mix, and the ISA-database cross-check + executability audit
+  opt     [--kernel dot] [--format e4m3] [--n 64]
+          graph-compiler report for one kernel × format cell: the lifted
+          dataflow graph before and after the exact rewrite fixpoint,
+          the per-rule application report, and the re-lowered
+          instruction stream vs the directly recorded one
   artifacts                       list artifacts loadable by the runtime
           (built-in graph-interpreter set without the pjrt feature)
   stats   [--json] [--path FILE]  report the telemetry snapshot the last
@@ -144,14 +150,17 @@ engine flags (shared by figure2/simulate/gemm/kernels/lint/artifacts/serve):
   --workers N                     worker-pool width (N >= 1)
   --seed S                        default RNG seed
   --verify off|warn|deny          static verify-before-run policy
+  --opt on|off                    graph-compiler axis: lift each kernel
+          trace, run the exact rewrite rules to the fixpoint, lower back
+          and replay — cell metrics then measure the optimized program
   --trace FILE                    write job-lifecycle spans as
           Chrome-trace JSON (chrome://tracing, Perfetto) on exit
   --stats-path FILE               where engine commands persist the
           telemetry snapshot (default takum-stats.json; `serve` derives
           per-tenant paths from it, e.g. takum-stats.<tenant>.json)
 Precedence: CLI flag > TAKUM_BACKEND/TAKUM_CODEC/TAKUM_SIMD/TAKUM_VERIFY/
-TAKUM_TRACE/TAKUM_STATS env > default (scalar/lut/auto/off/none). sizes
-must be positive multiples of 64 (whole compute tiles).
+TAKUM_OPT/TAKUM_TRACE/TAKUM_STATS env > default (scalar/lut/auto/off/off/
+none). sizes must be positive multiples of 64 (whole compute tiles).
 ";
 
 fn cmd_figure1() -> Result<()> {
@@ -184,6 +193,10 @@ fn parse_engine_cfg(args: &Args) -> Result<EngineConfig> {
     }
     if let Some(v) = args.get("verify") {
         cfg = cfg.try_verify(v)?;
+    }
+    if let Some(o) = args.get("opt") {
+        anyhow::ensure!(o != "true", "--opt needs a setting: --opt on or --opt off");
+        cfg = cfg.try_opt(o)?;
     }
     if let Some(t) = args.get("trace") {
         anyhow::ensure!(t != "true", "--trace needs a file path, e.g. --trace trace.json");
@@ -489,6 +502,73 @@ fn cmd_lint(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Graph-compiler report for one kernel × format cell: record the cell's
+/// trace, lift it (with the builder's value-carrying load journal), dump
+/// the dataflow graph before and after the exact rewrite fixpoint with
+/// the per-rule report, lower the optimized graph back to an instruction
+/// stream and compare its mnemonic histogram against the direct one —
+/// the convert-tax erasure, shown on a single cell.
+fn cmd_opt(args: &Args) -> Result<()> {
+    use takum_avx10::opt::{lower, Optimizer};
+    use takum_avx10::sim::register::RegisterFile;
+    use takum_avx10::sim::Graph;
+
+    let kernel = Kernel::parse(args.get("kernel").unwrap_or("dot"))?;
+    let format = {
+        let f = args.get("format").unwrap_or("e4m3");
+        Pipeline::ALL_FORMATS
+            .iter()
+            .copied()
+            .find(|&x| x == f)
+            .ok_or_else(|| anyhow!("unknown format {f:?}"))?
+    };
+    let n: usize = args.get_parse("n", 64)?;
+    anyhow::ensure!(
+        n >= TILE_ALIGN && n % TILE_ALIGN == 0,
+        "--n must be a positive multiple of {TILE_ALIGN}, got {n}"
+    );
+    let eng = parse_engine_cfg(args)?.build()?;
+    let spec = KernelSpec { kernel, format, n, seed: eng.seed() };
+    let run = spec.lower(&eng)?;
+
+    let init = RegisterFile::default();
+    let mut g = Graph::lift_with_loads(&run.program, &init, &run.loads)
+        .context("lifting the recorded kernel trace")?;
+    println!(
+        "cell {}/{} (n={}): {} recorded instructions, {} graph nodes",
+        kernel.name(),
+        format,
+        n,
+        run.program.len(),
+        g.len()
+    );
+    println!("\nbefore optimization:\n{}", g.render());
+    let report = Optimizer::exact().run(&mut g);
+    println!("after optimization:\n{}", g.render());
+    print!("{}", report.render());
+
+    let low = lower(&g, &init).context("lowering the optimized graph")?;
+    anyhow::ensure!(
+        low.verify().passes_deny(),
+        "lowered program fails static verification:\n{}",
+        low.verify().render_diagnostics()
+    );
+    println!("\nlowered program: {} instructions (verify: deny-clean)", low.prog.len());
+    let direct = run.program.histogram();
+    let lowered = low.prog.histogram();
+    println!("{:<20} {:>8} {:>8}", "mnemonic", "direct", "opt");
+    let mut keys: Vec<&str> = direct.keys().chain(lowered.keys()).copied().collect();
+    keys.sort_unstable();
+    keys.dedup();
+    for k in keys {
+        let d = direct.get(k).copied().unwrap_or(0);
+        let o = lowered.get(k).copied().unwrap_or(0);
+        println!("{k:<20} {d:>8} {o:>8}");
+    }
+    persist_stats(&eng);
+    Ok(())
+}
+
 /// Drive the multi-tenant serving layer with a seeded deterministic
 /// replay trace (see [`takum_avx10::serve::replay`]): lockstep bursts
 /// make sheds, batch shapes and coalescing pure functions of the seed,
@@ -631,6 +711,22 @@ mod tests {
         for v in Verify::ALL {
             assert!(e.contains(v.name()), "{e:?} missing {}", v.name());
         }
+    }
+
+    /// `--opt` selects the graph-compiler axis with the same precedence
+    /// and rejection behaviour as the other engine axes; a bare flag is
+    /// rejected with an actionable message.
+    #[test]
+    fn engine_cfg_parses_opt_axis() {
+        let cfg = parse_engine_cfg(&args(&["--opt", "on"])).unwrap();
+        assert_eq!(cfg, EngineConfig::from_env().opt(true));
+        let cfg = parse_engine_cfg(&args(&["--opt", "off"])).unwrap();
+        assert_eq!(cfg, EngineConfig::from_env().opt(false));
+
+        let e = parse_engine_cfg(&args(&["--opt", "sometimes"])).unwrap_err().to_string();
+        assert!(e.contains("unknown opt setting"), "{e:?}");
+        let e = parse_engine_cfg(&args(&["--opt"])).unwrap_err().to_string();
+        assert!(e.contains("--opt needs a setting"), "{e:?}");
     }
 
     /// `--trace` needs a path operand: a bare flag is rejected with an

@@ -1,0 +1,309 @@
+//! The fixpoint pass driver: apply the rule table node by node until
+//! nothing fires, with structural CSE folded into every iteration and a
+//! rule-budget fuse against non-terminating rule sets.
+//!
+//! ## Iteration model
+//!
+//! One iteration walks the graph in topological (construction) order
+//! keeping an **alias table**. For each node it first resolves the
+//! node's operands through the table (so chains collapse within a
+//! single pass — the same idiom as the legacy convert-pair fold), then
+//! offers the node to the rules in table order; the first rule that
+//! fires wins the node for this iteration. Nodes that survive unaliased
+//! are structurally hashed for CSE: a node identical (operator,
+//! operands, immediates, bit-exact constant planes) to an earlier
+//! survivor is aliased to it. After the walk, outputs/returns are
+//! remapped and dead nodes eliminated. Iterations repeat until one
+//! applies no rewrite.
+//!
+//! ## Termination and the budget fuse
+//!
+//! Every built-in rewrite either redirects uses to an *existing* node
+//! (strictly reducing live-node count after elimination) or replaces a
+//! node with a cheaper body (`Fma` for `Add`+`Mul`, a constant for a
+//! multiply) — a lexicographic descent that reaches a fixpoint in
+//! finitely many iterations. The budget ([`RULE_BUDGET_DEFAULT`] total
+//! applications, configurable) is a fuse, not a scheduler: it exists so
+//! a future mis-written rule pair that ping-pongs cannot hang the
+//! engine. The fuse trips at an iteration boundary, so the graph is
+//! always left consistent; [`OptReport::budget_exhausted`] records the
+//! trip.
+
+use std::collections::HashMap;
+
+use crate::sim::graph::{BinOp, Graph, Node, NodeId, PassStats, ReduceOp};
+use crate::sim::lanes::{FmaKind, FmaOrder, LaneType};
+
+use super::rules::{Rewrite, RuleSet, CSE_RULE};
+
+/// Default total-application budget (fuse, not scheduler — see module
+/// docs).
+pub const RULE_BUDGET_DEFAULT: usize = 10_000;
+
+/// Per-run report: what fired, how often, and what it bought.
+#[derive(Debug, Clone, Default)]
+pub struct OptReport {
+    /// `(rule name, applications)` in rule-table order, CSE last. Rules
+    /// that never fired still appear with a zero count, so reports are
+    /// shape-stable across cells.
+    pub per_rule: Vec<(&'static str, usize)>,
+    pub nodes_before: usize,
+    pub nodes_after: usize,
+    pub iterations: usize,
+    /// The budget fuse tripped before the fixpoint was reached.
+    pub budget_exhausted: bool,
+}
+
+impl OptReport {
+    /// Applications of one named rule (0 when absent).
+    pub fn rule(&self, name: &str) -> usize {
+        self.per_rule.iter().find(|(n, _)| *n == name).map_or(0, |(_, c)| *c)
+    }
+
+    /// Total rule applications (CSE included).
+    pub fn total_applied(&self) -> usize {
+        self.per_rule.iter().map(|(_, c)| c).sum()
+    }
+
+    /// Nodes removed end to end.
+    pub fn nodes_removed(&self) -> usize {
+        self.nodes_before.saturating_sub(self.nodes_after)
+    }
+
+    /// The [`PassStats`] view of this report (what the engine and tests
+    /// thread around): convert-rule applications under `converts_folded`,
+    /// node shrinkage under `dead_removed`, the full table in `per_rule`.
+    pub fn pass_stats(&self) -> PassStats {
+        PassStats {
+            converts_folded: self.rule("convert-fold") + self.rule("convert-widen"),
+            dead_removed: self.nodes_removed(),
+            per_rule: self.per_rule.clone(),
+        }
+    }
+
+    /// Human-readable per-rule table (the `opt` subcommand's report).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "nodes {} -> {} ({} removed), {} iteration(s){}\n",
+            self.nodes_before,
+            self.nodes_after,
+            self.nodes_removed(),
+            self.iterations,
+            if self.budget_exhausted { ", BUDGET EXHAUSTED" } else { "" },
+        ));
+        for (name, count) in &self.per_rule {
+            out.push_str(&format!("  {name:<14} {count}\n"));
+        }
+        out
+    }
+}
+
+/// The rewrite driver: a rule set plus a budget.
+pub struct Optimizer {
+    rules: RuleSet,
+    budget: usize,
+}
+
+impl Optimizer {
+    /// Bit-identity-preserving rules only — what the engine's
+    /// optimize-then-lower path runs.
+    pub fn exact() -> Optimizer {
+        Optimizer { rules: RuleSet::exact(), budget: RULE_BUDGET_DEFAULT }
+    }
+
+    /// Exact + contractive rules — interpreter-only workloads that want
+    /// the rounding-reducing fusions too.
+    pub fn all() -> Optimizer {
+        Optimizer { rules: RuleSet::all(), budget: RULE_BUDGET_DEFAULT }
+    }
+
+    /// Override the application budget (tests drive this down to prove
+    /// the fuse trips cleanly).
+    pub fn with_budget(mut self, budget: usize) -> Optimizer {
+        self.budget = budget;
+        self
+    }
+
+    /// Run to fixpoint (or budget) on `g`.
+    pub fn run(&self, g: &mut Graph) -> OptReport {
+        let mut report = OptReport {
+            per_rule: self
+                .rules
+                .rules()
+                .iter()
+                .map(|r| (r.name, 0))
+                .chain([(CSE_RULE, 0)])
+                .collect(),
+            nodes_before: g.len(),
+            ..OptReport::default()
+        };
+        loop {
+            if report.total_applied() >= self.budget {
+                report.budget_exhausted = true;
+                break;
+            }
+            report.iterations += 1;
+            let applied = self.iterate(g, &mut report.per_rule);
+            g.eliminate_dead();
+            if applied == 0 {
+                break;
+            }
+        }
+        report.nodes_after = g.len();
+        report
+    }
+
+    /// One alias-table walk; returns the number of rewrites applied.
+    fn iterate(&self, g: &mut Graph, per_rule: &mut [(&'static str, usize)]) -> usize {
+        let n = g.len();
+        let mut alias: Vec<NodeId> = (0..n).map(NodeId::new).collect();
+        let mut seen: HashMap<Key, NodeId> = HashMap::new();
+        let mut applied = 0usize;
+        for i in 0..n {
+            // Resolve operands through the aliases established so far
+            // (operands always precede their users).
+            for op in g.nodes_mut()[i].operands_mut().into_iter().flatten() {
+                *op = alias[op.idx()];
+            }
+            let id = NodeId::new(i);
+            let mut aliased = false;
+            for (r, rule) in self.rules.rules().iter().enumerate() {
+                match (rule.apply)(g, id) {
+                    Some(Rewrite::Alias(target)) => {
+                        alias[i] = alias[target.idx()];
+                        per_rule[r].1 += 1;
+                        applied += 1;
+                        aliased = true;
+                    }
+                    Some(Rewrite::Replace(node)) => {
+                        g.nodes_mut()[i] = node;
+                        per_rule[r].1 += 1;
+                        applied += 1;
+                    }
+                    None => continue,
+                }
+                break; // first matching rule wins this node
+            }
+            if !aliased {
+                // Structural CSE over the surviving (possibly replaced)
+                // body. Identical structure evaluates to identical
+                // planes — the evaluators are deterministic — so this
+                // is exact.
+                match seen.entry(Key::of(g.node(id))) {
+                    std::collections::hash_map::Entry::Occupied(e) => {
+                        if *e.get() != id {
+                            alias[i] = *e.get();
+                            per_rule.last_mut().expect("cse slot").1 += 1;
+                            applied += 1;
+                        }
+                    }
+                    std::collections::hash_map::Entry::Vacant(e) => {
+                        e.insert(id);
+                    }
+                }
+            }
+        }
+        for o in g.outputs_mut() {
+            o.node = alias[o.node.idx()];
+        }
+        for r in g.returns_mut() {
+            *r = alias[r.idx()];
+        }
+        applied
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Structural hashing for CSE
+// ---------------------------------------------------------------------------
+
+/// Lane types keyed structurally (discriminant, width, spec name) —
+/// [`LaneType`] itself carries a [`crate::num::MinifloatSpec`] that does
+/// not implement `Hash`.
+type TyKey = (u8, u32, &'static str);
+
+fn ty_key(t: LaneType) -> TyKey {
+    match t {
+        LaneType::Takum(n) => (0, n, ""),
+        LaneType::Mini(s) => (1, s.bits(), s.name),
+        LaneType::MiniSat(s) => (2, s.bits(), s.name),
+        LaneType::UInt(w) => (3, w, ""),
+        LaneType::SInt(w) => (4, w, ""),
+    }
+}
+
+/// Structural identity of a node: operator, operands, immediates, and
+/// bit patterns of constant planes (bit-exact — two NaN payloads only
+/// merge when identical).
+#[derive(PartialEq, Eq, Hash)]
+enum Key {
+    Const(Vec<u64>),
+    Param(usize),
+    Load(u8, TyKey),
+    Convert(u32, TyKey),
+    Bin(u8, u32, u32),
+    RndScale(u32, i32),
+    Fma(u8, u8, u32, u32, u32),
+    Dot(u32, u32, u32),
+    Reduce(u8, u32, usize),
+    Select(u64, u32, u32),
+    Broadcast(u32),
+}
+
+impl Key {
+    fn of(n: &Node) -> Key {
+        let ix = |id: NodeId| id.idx() as u32;
+        match n {
+            Node::Const(p) => Key::Const(p.iter().map(|x| x.to_bits()).collect()),
+            Node::Param(k) => Key::Param(*k),
+            Node::Load { reg, ty } => Key::Load(*reg, ty_key(*ty)),
+            Node::Convert { src, ty } => Key::Convert(ix(*src), ty_key(*ty)),
+            Node::Bin { op, a, b } => Key::Bin(bin_key(*op), ix(*a), ix(*b)),
+            Node::RndScale { src, m } => Key::RndScale(ix(*src), *m),
+            Node::Fma { kind, order, a, b, z } => {
+                Key::Fma(fma_key(*kind), order_key(*order), ix(*a), ix(*b), ix(*z))
+            }
+            Node::Dot { a, b, z } => Key::Dot(ix(*a), ix(*b), ix(*z)),
+            Node::Reduce { op, src, lanes } => Key::Reduce(reduce_key(*op), ix(*src), *lanes),
+            Node::Select { mask, a, b } => Key::Select(*mask, ix(*a), ix(*b)),
+            Node::Broadcast { src } => Key::Broadcast(ix(*src)),
+        }
+    }
+}
+
+fn bin_key(op: BinOp) -> u8 {
+    match op {
+        BinOp::Add => 0,
+        BinOp::Sub => 1,
+        BinOp::Mul => 2,
+        BinOp::Div => 3,
+        BinOp::Min => 4,
+        BinOp::Max => 5,
+        BinOp::Scalef => 6,
+    }
+}
+
+fn fma_key(k: FmaKind) -> u8 {
+    match k {
+        FmaKind::Madd => 0,
+        FmaKind::Msub => 1,
+        FmaKind::Nmadd => 2,
+        FmaKind::Nmsub => 3,
+    }
+}
+
+fn order_key(o: FmaOrder) -> u8 {
+    match o {
+        FmaOrder::O132 => 0,
+        FmaOrder::O213 => 1,
+        FmaOrder::O231 => 2,
+    }
+}
+
+fn reduce_key(op: ReduceOp) -> u8 {
+    match op {
+        ReduceOp::Sum => 0,
+        ReduceOp::Max => 1,
+    }
+}

@@ -1,0 +1,1030 @@
+//! Graph → [`Program`] lowering: re-emit an optimized dataflow graph as
+//! an executable instruction stream for the vector backend.
+//!
+//! ## Contract
+//!
+//! [`lower`] consumes a lifted (and usually optimized) [`Graph`] plus the
+//! *initial* [`RegisterFile`] the original program ran against, and
+//! produces a [`Lowered`] bundle: the instruction stream, a harness-load
+//! journal for materialized constants, and the register outputs. Running
+//! the bundle with [`run_lowered`] on a machine whose registers start in
+//! that same initial state leaves the register file **bit-identical** to
+//! a direct replay of the original program — the differential-fuzz suite
+//! pins this across every `Backend × CodecMode` config.
+//!
+//! ## Invariants the emitter maintains
+//!
+//! 1. **Home invariant.** Every materialized node `N` has a *home*
+//!    `(r, T)` such that register `r` holds exactly `encode_T(plane(N))`
+//!    over the full register — including merge-base bits beyond a masked
+//!    write's range, which the graph models with nested `Select`s.
+//! 2. **Operand exactness.** An operand demanded at type `W` when homed
+//!    at `T ≠ W` is rematerialized with a widening `VCVT` only when the
+//!    home is decode-exact (`quantised_ty == Some(T)`) and `T` embeds
+//!    losslessly in `W` — exactly the precondition under which the
+//!    `convert-widen` rule created the cross-type use, so the
+//!    rematerialized register decodes to the identical plane.
+//! 3. **Mask reconstruction.** A partial write mask is only ever
+//!    re-emitted as `{k}` against the *initial* mask-register state, at
+//!    the same lane range the original instruction used — lifted
+//!    programs cannot write mask registers, so the original `k` still
+//!    matches. `k0` is architecturally "no mask" and is never chosen.
+//! 4. **Scratch discipline.** Scratch registers are linearly allocated
+//!    against last-use indices and never collide with pinned input
+//!    registers or with live homes; [`run_lowered`] restores every
+//!    non-output register afterwards, so scratch traffic is invisible in
+//!    the final state.
+//!
+//! Anything outside these invariants (a `Param`/`Reduce` demanded as a
+//! register value, an unquantised cross-type use, a write mask no
+//! initial `k` reproduces, register pressure beyond the 32-register
+//! file) makes the graph *not lowerable*: [`lower`] returns `Err` and
+//! the caller falls back to direct execution — lowering is an
+//! optimization, never an obligation.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, ensure, Result};
+
+use crate::sim::exec::Machine;
+use crate::sim::graph::{BinOp, Graph, LoadEvent, Node, NodeId, Plane, RegOutput};
+use crate::sim::lanes::{FmaKind, FmaOrder, LaneType};
+use crate::sim::program::{Instruction, Operand, Program};
+use crate::sim::register::{RegisterFile, VecReg, NUM_MASKS, NUM_VREGS};
+use crate::verify::{Externals, Report, Verifier};
+
+use super::rules::losslessly_embeds;
+
+/// A lowered graph: the instruction stream plus everything needed to run
+/// and verify it.
+#[derive(Debug, Clone)]
+pub struct Lowered {
+    /// The emitted instruction stream.
+    pub prog: Program,
+    /// Harness-side constant loads, `at` nondecreasing: event `i` is
+    /// applied before executing instruction `loads[i].at`.
+    pub loads: Vec<LoadEvent>,
+    /// Registers the lowered program defines as outputs (the original
+    /// program's written registers). Every other register is restored by
+    /// [`run_lowered`].
+    pub output_regs: Vec<u8>,
+    /// Input registers read from the initial machine state, with the
+    /// lane type(s) they are read at.
+    initial_reads: Vec<(u8, LaneType)>,
+    /// Mask registers referenced by emitted `{k}` suffixes.
+    kregs: Vec<u8>,
+}
+
+impl Lowered {
+    /// The external-load journal for the static verifier: initial-state
+    /// register reads at position 0, constant materializations at their
+    /// emission sites, mask registers as externally set.
+    pub fn externals(&self) -> Externals {
+        let mut e = Externals::new();
+        let mut by_reg: HashMap<u8, Vec<LaneType>> = HashMap::new();
+        for (reg, ty) in &self.initial_reads {
+            let tys = by_reg.entry(*reg).or_default();
+            if !tys.contains(ty) {
+                tys.push(*ty);
+            }
+        }
+        for (reg, tys) in by_reg {
+            // A register read at two types (legal for unwritten inputs)
+            // journals untyped, i.e. readable at any lane type.
+            match tys.as_slice() {
+                [ty] => e.load(0, reg, *ty),
+                _ => e.load_untyped(0, reg),
+            }
+        }
+        for ev in &self.loads {
+            e.load(ev.at, ev.reg, ev.ty);
+        }
+        for &k in &self.kregs {
+            e.set_mask(0, k);
+        }
+        e
+    }
+
+    /// Verify the lowered program under its own externals journal (the
+    /// engine's `Verify::Deny` gate runs exactly this).
+    pub fn verify(&self) -> Report {
+        Verifier::with_externals(self.externals()).implicit_inputs(true).verify(&self.prog)
+    }
+}
+
+/// Execute a lowered bundle on `m`, whose vector *and* mask registers
+/// must be in the initial state that was given to [`lower`]. Interleaves
+/// the constant-load journal at its recorded positions and afterwards
+/// restores every register not in [`Lowered::output_regs`], so the final
+/// register file is bit-identical to a direct replay of the source
+/// program.
+pub fn run_lowered(m: &mut Machine, low: &Lowered) -> Result<()> {
+    let saved = m.regs.v;
+    let mut next = 0usize;
+    for (at, ins) in low.prog.instrs.iter().enumerate() {
+        while next < low.loads.len() && low.loads[next].at <= at {
+            let ev = &low.loads[next];
+            m.load_f64(ev.reg, ev.ty, &ev.values);
+            next += 1;
+        }
+        m.step(ins)?;
+    }
+    for ev in &low.loads[next..] {
+        m.load_f64(ev.reg, ev.ty, &ev.values);
+    }
+    for (r, reg) in saved.iter().enumerate() {
+        if !low.output_regs.contains(&(r as u8)) {
+            m.regs.v[r] = *reg;
+        }
+    }
+    Ok(())
+}
+
+/// Lower `g` to an executable program against the initial register state
+/// `init` (vector registers for input homes, mask registers for `{k}`
+/// reconstruction). Errors are graceful "not lowerable" verdicts — the
+/// caller falls back to direct execution.
+pub fn lower(g: &Graph, init: &RegisterFile) -> Result<Lowered> {
+    ensure!(
+        g.returns().is_empty(),
+        "not lowerable: graph carries plane returns (readback artifact graph)"
+    );
+    ensure!(!g.outputs().is_empty(), "not lowerable: graph has no register outputs");
+    let n = g.len();
+    let mut lw = Lowerer {
+        g,
+        init,
+        prog: Program::default(),
+        loads: Vec::new(),
+        uses: vec![0; n],
+        last_use: vec![0; n],
+        home_needed: vec![false; n],
+        inline_op: vec![false; n],
+        skip: vec![false; n],
+        stype: vec![None; n],
+        target: HashMap::new(),
+        home: vec![None; n],
+        alts: Vec::new(),
+        pinned: [false; NUM_VREGS],
+        release: [None; NUM_VREGS],
+        cursor: 0,
+        epilogue: false,
+        kregs_used: [false; NUM_MASKS],
+        initial_reads: Vec::new(),
+    };
+    lw.prepare()?;
+    lw.emit_all()?;
+    let output_regs = lw.epilogue()?;
+    let kregs = (0..NUM_MASKS as u8).filter(|&k| lw.kregs_used[k as usize]).collect();
+    Ok(Lowered {
+        prog: lw.prog,
+        loads: lw.loads,
+        output_regs,
+        initial_reads: lw.initial_reads,
+        kregs,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// The emitter
+// ---------------------------------------------------------------------------
+
+/// What a `Select` payload is, for range/mnemonic selection.
+enum Payload {
+    /// A raw arithmetic node — emitted directly as a masked op.
+    Raw,
+    /// A quantised value at the given type — emitted as a masked `VCVT`.
+    Quant(LaneType),
+    /// A constant plane — materialized and emitted as a masked
+    /// self-`VMIN` move.
+    Konst,
+}
+
+struct Lowerer<'a> {
+    g: &'a Graph,
+    init: &'a RegisterFile,
+    prog: Program,
+    loads: Vec<LoadEvent>,
+    // -- analysis (prepare) --
+    /// Consumer count per node (operand edges + register outputs).
+    uses: Vec<u32>,
+    /// Last node index that reads this node's register (outputs pin to
+    /// `usize::MAX`). Select payloads/bases bump their operands to the
+    /// select's index because emission is deferred to the select site.
+    last_use: Vec<usize>,
+    /// Node's value must live in a register (it is read as a register).
+    home_needed: Vec<bool>,
+    /// Raw node consumed only as a masked-select payload — emitted at
+    /// the select site, never densely.
+    inline_op: Vec<bool>,
+    /// Inner zeroing-select consumed structurally by its outer select
+    /// (re-emitted as a `{k}{z}` suffix, not an instruction).
+    skip: Vec<bool>,
+    /// Store type demanded of a raw node by its consumers (the lane type
+    /// its register will be encoded at).
+    stype: Vec<Option<LaneType>>,
+    /// Preferred destination register per node index (its output reg).
+    target: HashMap<usize, u8>,
+    // -- emission state --
+    /// `node → (register, store type)` once materialized.
+    home: Vec<Option<(u8, LaneType)>>,
+    /// Alternate materializations: `(node, type, register)` for constant
+    /// loads and widening rematerializations. Linear scan — `LaneType`
+    /// is not `Hash` and the list stays tiny.
+    alts: Vec<(usize, LaneType, u8)>,
+    /// Input registers (Load homes) — never allocated as scratch.
+    pinned: [bool; NUM_VREGS],
+    /// Per register: `None` = never used; `Some(i)` = free once the
+    /// emission cursor passes `i` (`usize::MAX` = live forever).
+    release: [Option<usize>; NUM_VREGS],
+    cursor: usize,
+    /// Epilogue mode: every allocation becomes permanent so output
+    /// staging cannot be stolen.
+    epilogue: bool,
+    kregs_used: [bool; NUM_MASKS],
+    initial_reads: Vec<(u8, LaneType)>,
+}
+
+impl<'a> Lowerer<'a> {
+    // -- analysis ----------------------------------------------------------
+
+    fn prepare(&mut self) -> Result<()> {
+        let g = self.g;
+        let n = g.len();
+        // Forward: use counts and last-use indices. Select payload/base
+        // operands are bumped to the select index (deferred emission).
+        for i in 0..n {
+            let node = g.node(NodeId::new(i));
+            for op in node.operands().into_iter().flatten() {
+                self.uses[op.idx()] += 1;
+                self.last_use[op.idx()] = self.last_use[op.idx()].max(i);
+            }
+            if let Node::Select { a, b, .. } = node {
+                if is_raw(g.node(*a)) {
+                    for op in g.node(*a).operands().into_iter().flatten() {
+                        self.last_use[op.idx()] = self.last_use[op.idx()].max(i);
+                    }
+                }
+                if matches!(g.node(*b), Node::Select { .. }) {
+                    for op in g.node(*b).operands().into_iter().flatten() {
+                        self.last_use[op.idx()] = self.last_use[op.idx()].max(i);
+                    }
+                }
+            }
+        }
+        for o in g.outputs() {
+            let i = o.node.idx();
+            self.uses[i] += 1;
+            self.last_use[i] = usize::MAX;
+            self.target.entry(i).or_insert(o.reg);
+            if !matches!(g.node(o.node), Node::Const(_)) {
+                self.home_needed[i] = true;
+            }
+            // The output tag is the store type for raw nodes and for
+            // mixed (unquantised) selects; quantised nodes carry their
+            // own type and a cross-tag output re-encodes in the
+            // epilogue.
+            match g.node(o.node) {
+                Node::Bin { .. }
+                | Node::RndScale { .. }
+                | Node::Fma { .. }
+                | Node::Dot { .. }
+                | Node::Broadcast { .. } => self.set_stype(o.node, o.ty)?,
+                Node::Select { .. } if g.quantised_ty(o.node).is_none() => {
+                    self.set_stype(o.node, o.ty)?
+                }
+                _ => {}
+            }
+        }
+        // Reverse: demand propagation. A node's flags are final before
+        // its operands are visited (operands always precede users).
+        for i in (0..n).rev() {
+            if !self.home_needed[i] && !self.inline_op[i] {
+                continue;
+            }
+            let id = NodeId::new(i);
+            match g.node(id) {
+                Node::Const(_) | Node::Param(_) | Node::Load { .. } => {}
+                Node::Convert { src, ty } => {
+                    let (src, ty) = (*src, *ty);
+                    if !matches!(g.node(src), Node::Const(_)) {
+                        self.home_needed[src.idx()] = true;
+                    }
+                    match g.node(src) {
+                        Node::Bin { .. }
+                        | Node::RndScale { .. }
+                        | Node::Fma { .. }
+                        | Node::Dot { .. }
+                        | Node::Broadcast { .. } => self.set_stype(src, ty)?,
+                        Node::Select { .. } if g.quantised_ty(src).is_none() => {
+                            self.set_stype(src, ty)?
+                        }
+                        _ => {}
+                    }
+                }
+                Node::Bin { a, b, .. } => self.mark_operands(&[*a, *b]),
+                Node::RndScale { src, .. } | Node::Reduce { src, .. } => {
+                    self.mark_operands(&[*src])
+                }
+                Node::Broadcast { src } => self.mark_operands(&[*src]),
+                Node::Fma { a, b, z, .. } => self.mark_operands(&[*a, *b, *z]),
+                Node::Dot { a, b, z } => self.mark_operands(&[*a, *b, *z]),
+                Node::Select { mask, a, b } => {
+                    let (wm, a, b) = (*mask, *a, *b);
+                    let t = self.stype[i].or_else(|| g.quantised_ty(id));
+                    match g.node(a) {
+                        node if is_raw(node) => {
+                            self.inline_op[a.idx()] = true;
+                            if let Some(t) = t {
+                                self.set_stype(a, t)?;
+                            }
+                        }
+                        Node::Const(_) => {}
+                        _ => self.home_needed[a.idx()] = true,
+                    }
+                    // A single-use inner select that zeroes disjoint
+                    // lanes over an all-zero constant is the lifter's
+                    // `{z}` pattern: consume it structurally.
+                    let mut plain_base = true;
+                    if let Node::Select { mask: m2, a: za, b: b2 } = g.node(b) {
+                        if self.uses[b.idx()] == 1 && is_zero_const(g, *za) && m2 & wm == 0 {
+                            self.skip[b.idx()] = true;
+                            self.home_needed[b2.idx()] = true;
+                            plain_base = false;
+                        }
+                    }
+                    if plain_base && !matches!(g.node(b), Node::Const(_)) {
+                        self.home_needed[b.idx()] = true;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn mark_operands(&mut self, ops: &[NodeId]) {
+        for &op in ops {
+            if !matches!(self.g.node(op), Node::Const(_)) {
+                self.home_needed[op.idx()] = true;
+            }
+        }
+    }
+
+    fn set_stype(&mut self, id: NodeId, t: LaneType) -> Result<()> {
+        let slot = &mut self.stype[id.idx()];
+        match *slot {
+            None => {
+                *slot = Some(t);
+                Ok(())
+            }
+            Some(t0) if t0 == t => Ok(()),
+            Some(t0) => bail!(
+                "not lowerable: node {} demanded at both {t0:?} and {t:?}",
+                id.idx()
+            ),
+        }
+    }
+
+    // -- register allocation -----------------------------------------------
+
+    fn alloc(&mut self, release: usize, pref: Option<u8>) -> Result<u8> {
+        let release = if self.epilogue { usize::MAX } else { release };
+        for r in pref.into_iter().chain(0..NUM_VREGS as u8) {
+            let ri = r as usize;
+            if self.pinned[ri] {
+                continue;
+            }
+            let free = match self.release[ri] {
+                None => true,
+                Some(rel) => rel != usize::MAX && rel < self.cursor,
+            };
+            if free {
+                self.release[ri] = Some(release);
+                return Ok(r);
+            }
+        }
+        bail!("not lowerable: register pressure exceeds the vector register file")
+    }
+
+    /// Keep an aliased home alive until `until` (aliases share the
+    /// source's register but may outlive its own last use).
+    fn extend_release(&mut self, r: u8, until: usize) {
+        if let Some(rel) = &mut self.release[r as usize] {
+            *rel = (*rel).max(until);
+        }
+    }
+
+    // -- instruction emission helpers --------------------------------------
+
+    fn push_ins(
+        &mut self,
+        mnemonic: &str,
+        d: u8,
+        srcs: Vec<Operand>,
+        mask: Option<u8>,
+        zeroing: bool,
+    ) {
+        let mut ins = Instruction::new(mnemonic, Operand::Vreg(d), srcs);
+        if let Some(k) = mask {
+            ins = ins.with_mask(k, zeroing);
+            self.kregs_used[k as usize] = true;
+        }
+        self.prog.push(ins);
+    }
+
+    /// Full-register move: `VMIN t, s, s` — `min(x, x) = x` lane-wise
+    /// and re-encoding canonical register contents is the identity, so
+    /// this is a bit-exact copy for every value the emitter produces.
+    fn move_full(&mut self, d: u8, s: u8, t: LaneType) -> Result<()> {
+        if d == s {
+            return Ok(());
+        }
+        let sfx = packed_suffix(t)
+            .ok_or_else(|| anyhow!("not lowerable: no packed move for {t:?}"))?;
+        self.push_ins(
+            &format!("VMIN{sfx}"),
+            d,
+            vec![Operand::Vreg(s), Operand::Vreg(s)],
+            None,
+            false,
+        );
+        Ok(())
+    }
+
+    /// Journal a constant plane as a harness load into `d` at `ty`.
+    /// `strict` demands per-lane round-trip bit-exactness (a register
+    /// *home* must decode back to the plane); output materialization
+    /// only needs the encode, which matches by construction.
+    fn load_const(&mut self, d: u8, ty: LaneType, plane: &Plane, strict: bool) -> Result<()> {
+        let lanes = VecReg::lanes(ty.width());
+        let values: Vec<f64> = plane[..lanes].to_vec();
+        if strict {
+            for (j, &v) in values.iter().enumerate() {
+                let q = ty.decode(ty.encode(v));
+                ensure!(
+                    q.to_bits() == v.to_bits(),
+                    "not lowerable: constant lane {j} ({v:e}) not representable at {ty:?}"
+                );
+            }
+        }
+        self.loads.push(LoadEvent { at: self.prog.len(), reg: d, ty, values });
+        Ok(())
+    }
+
+    /// Register holding `plane(id)` encoded at `want`, such that
+    /// decoding at `want` yields exactly `plane(id)`.
+    fn operand_reg(&mut self, id: NodeId, want: LaneType) -> Result<u8> {
+        let g = self.g;
+        let i = id.idx();
+        if let Some((r, t)) = self.home[i] {
+            if t == want {
+                return Ok(r);
+            }
+            if let Some(r2) = self.alt(i, want) {
+                return Ok(r2);
+            }
+            // Widening rematerialization — sound under exactly the
+            // `convert-widen` preconditions (see module invariant 2).
+            ensure!(
+                g.quantised_ty(id) == Some(t),
+                "not lowerable: cross-type use of an unquantised value"
+            );
+            ensure!(
+                losslessly_embeds(t, want),
+                "not lowerable: {t:?} does not embed losslessly in {want:?}"
+            );
+            ensure!(
+                VecReg::lanes(t.width().max(want.width())) == VecReg::lanes(want.width()),
+                "not lowerable: narrowing rematerialization"
+            );
+            let d = self.alloc(self.last_use[i], None)?;
+            let (ss, ds) = (must_packed(t)?, must_packed(want)?);
+            self.push_ins(&format!("VCVT{ss}2{ds}"), d, vec![Operand::Vreg(r)], None, false);
+            self.alts.push((i, want, d));
+            Ok(d)
+        } else if let Node::Const(p) = g.node(id) {
+            if let Some(r2) = self.alt(i, want) {
+                return Ok(r2);
+            }
+            let d = self.alloc(self.last_use[i], None)?;
+            let plane = **p;
+            self.load_const(d, want, &plane, true)?;
+            self.alts.push((i, want, d));
+            Ok(d)
+        } else {
+            bail!("internal lowering error: operand node {i} was never materialized")
+        }
+    }
+
+    fn alt(&self, i: usize, want: LaneType) -> Option<u8> {
+        self.alts.iter().find(|(j, ty, _)| *j == i && *ty == want).map(|(_, _, r)| *r)
+    }
+
+    /// Emit a raw arithmetic node into `d` at store type `t`. For
+    /// masked emission (`mask`/`zeroing` from a select site),
+    /// `merge_base` names the select base, which the caller has already
+    /// moved into `d`; FMA/dot accumulators must coincide with it.
+    fn emit_raw_into(
+        &mut self,
+        a: NodeId,
+        t: LaneType,
+        d: u8,
+        mask: Option<u8>,
+        zeroing: bool,
+        scalar: bool,
+        merge_base: Option<NodeId>,
+    ) -> Result<()> {
+        let g = self.g;
+        match *g.node(a) {
+            Node::Bin { op, a: x, b: y } => {
+                let rx = self.operand_reg(x, t)?;
+                let ry = self.operand_reg(y, t)?;
+                let sfx = must_suffix(t, scalar)?;
+                self.push_ins(
+                    &format!("V{}{sfx}", bin_name(op)),
+                    d,
+                    vec![Operand::Vreg(rx), Operand::Vreg(ry)],
+                    mask,
+                    zeroing,
+                );
+            }
+            Node::RndScale { src, m } => {
+                let rs = self.operand_reg(src, t)?;
+                let sfx = must_suffix(t, scalar)?;
+                self.push_ins(
+                    &format!("VRNDSCALE{sfx}"),
+                    d,
+                    vec![Operand::Vreg(rs), Operand::Imm(((m as i64) & 0xF) << 4)],
+                    mask,
+                    zeroing,
+                );
+            }
+            Node::Fma { kind, order, a: x, b: y, z } => {
+                let rx = self.operand_reg(x, t)?;
+                let ry = self.operand_reg(y, t)?;
+                match merge_base {
+                    Some(base) => ensure!(
+                        z == base,
+                        "not lowerable: masked FMA accumulator differs from its merge base"
+                    ),
+                    None => {
+                        let rz = self.operand_reg(z, t)?;
+                        self.move_full(d, rz, t)?;
+                    }
+                }
+                let sfx = must_suffix(t, scalar)?;
+                let mn = format!("VF{}{}{sfx}", fma_name(kind), order_name(order));
+                self.push_ins(&mn, d, vec![Operand::Vreg(rx), Operand::Vreg(ry)], mask, zeroing);
+            }
+            Node::Dot { a: x, b: y, z } => {
+                ensure!(!scalar, "internal lowering error: scalar dot");
+                let (s, mn) = self.dot_types(t, x, y)?;
+                let rx = self.operand_reg(x, s)?;
+                let ry = self.operand_reg(y, s)?;
+                match merge_base {
+                    Some(base) => ensure!(
+                        z == base,
+                        "not lowerable: masked dot accumulator differs from its merge base"
+                    ),
+                    None => {
+                        let rz = self.operand_reg(z, t)?;
+                        self.move_full(d, rz, t)?;
+                    }
+                }
+                self.push_ins(&mn, d, vec![Operand::Vreg(rx), Operand::Vreg(ry)], mask, zeroing);
+            }
+            Node::Broadcast { src } => {
+                let rs = self.operand_reg(src, t)?;
+                self.push_ins(
+                    &format!("VBROADCASTB{}", t.width()),
+                    d,
+                    vec![Operand::Vreg(rs)],
+                    mask,
+                    zeroing,
+                );
+            }
+            _ => bail!("internal lowering error: emit_raw_into on a non-arithmetic node"),
+        }
+        Ok(())
+    }
+
+    /// Widening-dot source type and mnemonic for an accumulator at `t`.
+    fn dot_types(&self, t: LaneType, x: NodeId, y: NodeId) -> Result<(LaneType, String)> {
+        use crate::num::{BF16, F16};
+        match t {
+            LaneType::Takum(n) if n >= 16 => {
+                Ok((LaneType::Takum(n / 2), format!("VDPPT{}PT{n}", n / 2)))
+            }
+            LaneType::Mini(spec) if spec.name == F32.name => {
+                let cands =
+                    [(LaneType::Mini(F16), "VDPPHPS"), (LaneType::Mini(BF16), "VDPBF16PS")];
+                // Prefer the source type an operand is already
+                // quantised at; otherwise any candidate both operands
+                // embed into.
+                let q = [self.g.quantised_ty(x), self.g.quantised_ty(y)];
+                for (s, mn) in cands {
+                    if q.iter().any(|qt| *qt == Some(s))
+                        && self.dot_operand_ok(x, s)
+                        && self.dot_operand_ok(y, s)
+                    {
+                        return Ok((s, mn.to_string()));
+                    }
+                }
+                for (s, mn) in cands {
+                    if self.dot_operand_ok(x, s) && self.dot_operand_ok(y, s) {
+                        return Ok((s, mn.to_string()));
+                    }
+                }
+                bail!("not lowerable: no widening-dot source type fits both operands")
+            }
+            _ => bail!("not lowerable: no dot instruction accumulates at {t:?}"),
+        }
+    }
+
+    fn dot_operand_ok(&self, x: NodeId, s: LaneType) -> bool {
+        match self.g.quantised_ty(x) {
+            Some(t) => t == s || losslessly_embeds(t, s),
+            // Constants are guarded per-lane at materialization.
+            None => matches!(self.g.node(x), Node::Const(_)),
+        }
+    }
+
+    // -- the forward emission pass -----------------------------------------
+
+    fn emit_all(&mut self) -> Result<()> {
+        let g = self.g;
+        // Pin input homes: a Load node's value *is* its register.
+        for i in 0..g.len() {
+            if let Node::Load { reg, ty } = g.node(NodeId::new(i)) {
+                if self.home_needed[i] {
+                    self.pinned[*reg as usize] = true;
+                    self.initial_reads.push((*reg, *ty));
+                    self.home[i] = Some((*reg, *ty));
+                }
+            }
+        }
+        for i in 0..g.len() {
+            self.cursor = i;
+            if !self.home_needed[i] {
+                continue;
+            }
+            let id = NodeId::new(i);
+            match *g.node(id) {
+                Node::Const(_) | Node::Load { .. } => {}
+                Node::Param(_) => bail!("not lowerable: Param demanded as a register value"),
+                Node::Reduce { .. } => {
+                    bail!("not lowerable: Reduce has no register-level instruction")
+                }
+                Node::Convert { src, ty } => self.emit_convert(id, src, ty)?,
+                Node::Select { mask, a, b } => self.emit_select(id, mask, a, b)?,
+                _ => {
+                    // Dense raw arithmetic.
+                    let t = self.store_type(id)?;
+                    let pref = self.target.get(&i).copied();
+                    let d = self.alloc(self.last_use[i], pref)?;
+                    self.emit_raw_into(id, t, d, None, false, false, None)?;
+                    self.home[i] = Some((d, t));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn store_type(&self, id: NodeId) -> Result<LaneType> {
+        self.stype[id.idx()]
+            .or_else(|| self.g.quantised_ty(id))
+            .ok_or_else(|| {
+                anyhow!("not lowerable: node {} has no recoverable store type", id.idx())
+            })
+    }
+
+    fn emit_convert(&mut self, id: NodeId, src: NodeId, ty: LaneType) -> Result<()> {
+        let g = self.g;
+        let i = id.idx();
+        if let Node::Const(p) = g.node(src) {
+            // Quantise-then-load: the journal load encodes at `ty`,
+            // which *is* the convert.
+            let d = self.alloc(self.last_use[i], self.target.get(&i).copied())?;
+            let plane: Plane = core::array::from_fn(|j| ty.decode(ty.encode(p[j])));
+            self.load_const(d, ty, &plane, true)?;
+            self.home[i] = Some((d, ty));
+            return Ok(());
+        }
+        let (r, t) = self.home[src.idx()]
+            .ok_or_else(|| anyhow!("internal lowering error: convert source has no home"))?;
+        if t == ty {
+            // Same-type quantisation of an encoded register is the
+            // identity (idempotence) — alias the home.
+            self.home[i] = Some((r, t));
+            self.extend_release(r, self.last_use[i]);
+            return Ok(());
+        }
+        // Cross-type: the machine convert computes
+        // `encode_ty(decode_t(r))`, which equals `encode_ty(plane(src))`
+        // exactly when the source home is decode-exact.
+        ensure!(
+            g.quantised_ty(src) == Some(t),
+            "not lowerable: cross-type convert of an unquantised home"
+        );
+        ensure!(
+            VecReg::lanes(t.width().max(ty.width())) == VecReg::lanes(ty.width()),
+            "not lowerable: narrowing dense convert (lifted graphs never produce one)"
+        );
+        let d = self.alloc(self.last_use[i], self.target.get(&i).copied())?;
+        let (ss, ds) = (must_packed(t)?, must_packed(ty)?);
+        self.push_ins(&format!("VCVT{ss}2{ds}"), d, vec![Operand::Vreg(r)], None, false);
+        self.home[i] = Some((d, ty));
+        Ok(())
+    }
+
+    fn emit_select(&mut self, id: NodeId, wm: u64, a: NodeId, b: NodeId) -> Result<()> {
+        let g = self.g;
+        let i = id.idx();
+        if self.skip[i] {
+            return Ok(());
+        }
+        let t = self.store_type(id)?;
+        let full_lanes = VecReg::lanes(t.width());
+        // Zero pattern: a skipped inner select means `{z}` semantics
+        // with the zeroed range forced to `m2 | wm`.
+        let (base, zeroing, forced_all) = if self.skip[b.idx()] {
+            match g.node(b) {
+                Node::Select { mask: m2, b: b2, .. } => (*b2, true, Some(*m2 | wm)),
+                _ => bail!("internal lowering error: skipped base is not a select"),
+            }
+        } else {
+            (b, false, None)
+        };
+        let payload = match g.node(a) {
+            node if is_raw(node) => Payload::Raw,
+            Node::Const(_) => Payload::Konst,
+            _ => Payload::Quant(g.quantised_ty(a).ok_or_else(|| {
+                anyhow!("not lowerable: select payload is neither raw nor quantised")
+            })?),
+        };
+        // Candidate emission ranges (lanes, scalar?) — the original
+        // instruction's range is always among them, so its write mask is
+        // reconstructible from the initial `k` state (invariant 3).
+        let ranges: Vec<(usize, bool)> = match (&payload, g.node(a)) {
+            (Payload::Raw, Node::Dot { .. }) | (Payload::Raw, Node::Broadcast { .. }) => {
+                vec![(full_lanes, false)]
+            }
+            (Payload::Raw, _) => {
+                let mut v = vec![(full_lanes, false)];
+                if scalar_suffix(t).is_some() {
+                    v.push((1, true));
+                }
+                v
+            }
+            (Payload::Quant(ta), _) => {
+                vec![(VecReg::lanes(ta.width().max(t.width())), false)]
+            }
+            (Payload::Konst, _) => {
+                let mut v = vec![(full_lanes, false)];
+                if scalar_suffix(t).is_some() {
+                    v.push((1, true));
+                }
+                v
+            }
+        };
+        let mut picked = None;
+        for (lanes, sc) in ranges {
+            let rm = mask_bits(lanes);
+            if let Some(all) = forced_all {
+                if all != rm {
+                    continue;
+                }
+            }
+            if wm & !rm != 0 {
+                continue;
+            }
+            if wm == rm {
+                picked = Some((lanes, sc, None));
+                break;
+            }
+            // k0 is architecturally "no mask" — never a partial mask.
+            if let Some(k) =
+                (1..NUM_MASKS as u8).find(|&k| self.init.k[k as usize] & rm == wm)
+            {
+                picked = Some((lanes, sc, Some(k)));
+                break;
+            }
+        }
+        let (lanes, scalar, kmask) = picked.ok_or_else(|| {
+            anyhow!("not lowerable: no initial mask state reproduces write mask {wm:#x}")
+        })?;
+        let d = self.alloc(self.last_use[i], self.target.get(&i).copied())?;
+        // The base must be in `d` unless the op densely covers the full
+        // register — FMA/dot always need it (accumulator == base).
+        let acc_op = matches!(g.node(a), Node::Fma { .. } | Node::Dot { .. });
+        if !(lanes == full_lanes && wm == mask_bits(lanes)) || acc_op {
+            let rb = self.operand_reg(base, t)?;
+            self.move_full(d, rb, t)?;
+        }
+        match payload {
+            Payload::Raw => self.emit_raw_into(a, t, d, kmask, zeroing, scalar, Some(base))?,
+            Payload::Quant(ta) => {
+                let rp = self.operand_reg(a, ta)?;
+                let (ss, ds) = (must_packed(ta)?, must_packed(t)?);
+                self.push_ins(
+                    &format!("VCVT{ss}2{ds}"),
+                    d,
+                    vec![Operand::Vreg(rp)],
+                    kmask,
+                    zeroing,
+                );
+            }
+            Payload::Konst => {
+                let rp = self.operand_reg(a, t)?;
+                let sfx = must_suffix(t, scalar)?;
+                self.push_ins(
+                    &format!("VMIN{sfx}"),
+                    d,
+                    vec![Operand::Vreg(rp), Operand::Vreg(rp)],
+                    kmask,
+                    zeroing,
+                );
+            }
+        }
+        self.home[i] = Some((d, t));
+        Ok(())
+    }
+
+    // -- the epilogue: install outputs -------------------------------------
+
+    fn epilogue(&mut self) -> Result<Vec<u8>> {
+        let g = self.g;
+        self.epilogue = true;
+        self.cursor = usize::MAX;
+        // Reserve output targets so staging copies and re-encode
+        // converts never land in a register the final moves write.
+        for o in g.outputs() {
+            let t = o.reg as usize;
+            if !self.pinned[t] && self.release[t] != Some(usize::MAX) {
+                self.release[t] = Some(usize::MAX);
+            }
+        }
+        let mut moves: Vec<(u8, u8, LaneType)> = Vec::new();
+        let mut output_regs = Vec::new();
+        for o in g.outputs() {
+            let r = self.output_source(o)?;
+            if r != o.reg {
+                moves.push((o.reg, r, o.ty));
+            }
+            output_regs.push(o.reg);
+        }
+        // Stage sources that are themselves targets out of the way
+        // before any final move clobbers them.
+        let targets: Vec<u8> = moves.iter().map(|m| m.0).collect();
+        for mv in &mut moves {
+            if targets.contains(&mv.1) {
+                let s = self.alloc(usize::MAX, None)?;
+                let (src, ty) = (mv.1, mv.2);
+                self.move_full(s, src, ty)?;
+                mv.1 = s;
+            }
+        }
+        for (tgt, src, ty) in moves {
+            self.move_full(tgt, src, ty)?;
+        }
+        Ok(output_regs)
+    }
+
+    /// Register holding the bits the output demands:
+    /// `encode_{o.ty}(plane(o.node))` over the full register. Unlike
+    /// [`Self::operand_reg`] this is a *bits* demand — a cross-tag
+    /// re-encode is the output's own quantisation, so no lossless-embed
+    /// precondition applies.
+    fn output_source(&mut self, o: &RegOutput) -> Result<u8> {
+        let g = self.g;
+        let i = o.node.idx();
+        if let Some((r, t)) = self.home[i] {
+            if t == o.ty {
+                return Ok(r);
+            }
+            ensure!(
+                g.quantised_ty(o.node) == Some(t),
+                "not lowerable: cross-tag output of an unquantised home"
+            );
+            ensure!(
+                VecReg::lanes(t.width().max(o.ty.width())) == VecReg::lanes(o.ty.width()),
+                "not lowerable: narrowing output re-encode"
+            );
+            let d = self.alloc(usize::MAX, None)?;
+            let (ss, ds) = (must_packed(t)?, must_packed(o.ty)?);
+            self.push_ins(&format!("VCVT{ss}2{ds}"), d, vec![Operand::Vreg(r)], None, false);
+            Ok(d)
+        } else if let Node::Const(p) = g.node(o.node) {
+            // Bits demand: the journal load *encodes* at `o.ty`, which
+            // matches the direct path's output encode by construction —
+            // no round-trip guard needed.
+            let d = self.alloc(usize::MAX, None)?;
+            let plane = **p;
+            self.load_const(d, o.ty, &plane, false)?;
+            Ok(d)
+        } else {
+            bail!("internal lowering error: output node was never materialized")
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Mnemonic spelling
+// ---------------------------------------------------------------------------
+
+use crate::num::F32;
+
+fn is_raw(n: &Node) -> bool {
+    matches!(
+        n,
+        Node::Bin { .. }
+            | Node::RndScale { .. }
+            | Node::Fma { .. }
+            | Node::Dot { .. }
+            | Node::Broadcast { .. }
+    )
+}
+
+fn is_zero_const(g: &Graph, id: NodeId) -> bool {
+    matches!(g.node(id), Node::Const(p) if p.iter().all(|v| v.to_bits() == 0))
+}
+
+fn mask_bits(lanes: usize) -> u64 {
+    if lanes >= 64 {
+        u64::MAX
+    } else {
+        (1u64 << lanes) - 1
+    }
+}
+
+/// Packed-lane mnemonic suffix for `t` (`None`: no packed spelling).
+fn packed_suffix(t: LaneType) -> Option<String> {
+    use crate::num::{NanStyle, BF16, E4M3, E5M2, F16, F64};
+    match t {
+        LaneType::Takum(n) => Some(format!("PT{n}")),
+        LaneType::Mini(s) if s.name == F16.name => Some("PH".into()),
+        LaneType::Mini(s) if s.name == F32.name => Some("PS".into()),
+        LaneType::Mini(s) if s.name == F64.name => Some("PD".into()),
+        LaneType::Mini(s) if s.name == BF16.name => Some("PBF16".into()),
+        LaneType::Mini(s) if s.name == E4M3.name => Some("HF8".into()),
+        LaneType::Mini(s) if s.name == E5M2.name => Some("BF8".into()),
+        LaneType::MiniSat(s) if s.name == E4M3.name && s.nan == NanStyle::Fn => {
+            Some("HF8S".into())
+        }
+        LaneType::MiniSat(s) if s.name == E5M2.name => Some("BF8S".into()),
+        _ => None,
+    }
+}
+
+/// Scalar mnemonic suffix for `t` (`None`: the ISA has no scalar form —
+/// bf16 and the OFP8 formats are packed-only).
+fn scalar_suffix(t: LaneType) -> Option<String> {
+    use crate::num::{F16, F64};
+    match t {
+        LaneType::Takum(n) => Some(format!("ST{n}")),
+        LaneType::Mini(s) if s.name == F16.name => Some("SH".into()),
+        LaneType::Mini(s) if s.name == F32.name => Some("SS".into()),
+        LaneType::Mini(s) if s.name == F64.name => Some("SD".into()),
+        _ => None,
+    }
+}
+
+fn must_packed(t: LaneType) -> Result<String> {
+    packed_suffix(t).ok_or_else(|| anyhow!("not lowerable: no packed mnemonic for {t:?}"))
+}
+
+fn must_suffix(t: LaneType, scalar: bool) -> Result<String> {
+    let s = if scalar { scalar_suffix(t) } else { packed_suffix(t) };
+    s.ok_or_else(|| {
+        anyhow!("not lowerable: no {} mnemonic for {t:?}", if scalar { "scalar" } else { "packed" })
+    })
+}
+
+fn bin_name(op: BinOp) -> &'static str {
+    match op {
+        BinOp::Add => "ADD",
+        BinOp::Sub => "SUB",
+        BinOp::Mul => "MUL",
+        BinOp::Div => "DIV",
+        BinOp::Min => "MIN",
+        BinOp::Max => "MAX",
+        BinOp::Scalef => "SCALEF",
+    }
+}
+
+fn fma_name(k: FmaKind) -> &'static str {
+    match k {
+        FmaKind::Madd => "MADD",
+        FmaKind::Msub => "MSUB",
+        FmaKind::Nmadd => "NMADD",
+        FmaKind::Nmsub => "NMSUB",
+    }
+}
+
+fn order_name(o: FmaOrder) -> &'static str {
+    match o {
+        FmaOrder::O132 => "132",
+        FmaOrder::O213 => "213",
+        FmaOrder::O231 => "231",
+    }
+}

@@ -1,0 +1,105 @@
+//! # Graph compiler: rewrite-rule optimizer + graph→program lowering
+//!
+//! The HLO-lite dataflow graph ([`crate::sim::graph`]) started as an
+//! interpreter with two ad-hoc cleanup passes. This module grows it into
+//! a small compiler: a declarative **rewrite-rule table** ([`rules`]), a
+//! **fixpoint pass driver** with per-rule accounting and a budget fuse
+//! ([`driver`]), and a **lowering pass** back to [`crate::sim::Program`]
+//! ([`lower`]) so an optimized graph runs on the vector backend through
+//! the SIMD tier cascade instead of the interpreter.
+//!
+//! This is the paper's headline made measurable: convert chains and the
+//! OFP8 storage↔compute tax are exactly what a rewrite engine erases,
+//! while takum cells — one format end to end — enter the optimizer
+//! already near the fixpoint. The `graph-opt` column of
+//! `benches/kernels.rs` quantifies the difference.
+//!
+//! ## The rule table
+//!
+//! | rule            | tier        | rewrite                                                |
+//! |-----------------|-------------|--------------------------------------------------------|
+//! | `convert-fold`  | exact       | `Convert_T(x)` → `x` when `x` is already quantised at `T` (or a constant whose lanes round-trip at `T` bit-exactly) |
+//! | `convert-widen` | exact       | `Convert_W(x@T)` → `x` when `T` embeds losslessly in `W` (takum prefix nesting, minifloat spec inclusion) |
+//! | `mul-one`       | exact       | `x * 1` → `x` (per-lane: the constant plane is all-ones) |
+//! | `add-zero`      | exact       | `x + (-0.0)` → `x`, `x - (+0.0)` → `x`                  |
+//! | `mul-zero`      | exact       | `x * 0` → `Const` (lane-wise product — signs/NaNs kept) |
+//! | `dead-select`   | exact       | `Select(mask,a,b)` → `a` when mask is all-set, `b` when all-clear |
+//! | `select-same`   | exact       | `Select(_, a, a)` → `a`                                 |
+//! | `fma-fuse`      | contractive | `Add(Mul(a,b), c)` → `Fma(a,b,c)`                       |
+//! | `dot-widen`     | contractive | `Convert_{2w}(…mul/add…)` dot shapes → widening `Dot`   |
+//! | `cse`           | exact       | structural hash-consing (driver-integrated)             |
+//!
+//! ## Soundness contract
+//!
+//! Every **exact**-tier rule preserves planes *bit-identically*; the
+//! common foundation is **quantisation idempotence**: a plane already
+//! produced by `decode_T ∘ encode_T` is a fixpoint of it, so a second
+//! quantisation at `T` — explicit (`convert-fold`) or via a lossless
+//! embedding (`convert-widen`) — is the identity. The algebraic rules
+//! fire only under **finite-lane proofs**: the rule inspects the actual
+//! constant plane (all lanes `1.0`, all lanes `-0.0`, …), never an
+//! algebraic abstraction, so IEEE corner cases (signed zeros, NaN
+//! payloads, `-0.0 + 0.0`) are decided on the real bits. Each rule's
+//! doc comment in [`rules`] states its individual proof obligation.
+//! **Contractive** rules (`fma-fuse`, `dot-widen`) reduce rounding error
+//! and are mathematically tighter but not bit-identical — they live
+//! behind [`RuleSet::all`] and are *excluded* from the engine's
+//! optimize-then-lower path, which uses [`RuleSet::exact`] so the
+//! bit-identity pin holds.
+//!
+//! ## Fixpoint and the budget fuse
+//!
+//! The driver iterates alias-table walks until an iteration applies no
+//! rewrite. Built-in rules strictly descend (alias to an existing node,
+//! or replace with a cheaper body), so the fixpoint is reached in
+//! finitely many iterations; the budget ([`RULE_BUDGET_DEFAULT`]) is a
+//! fuse against a future mis-written rule pair, tripping only at an
+//! iteration boundary so the graph stays consistent.
+//! [`OptReport`] carries per-rule counts, node shrinkage, iterations and
+//! the fuse state — [`OptReport::pass_stats`] is the
+//! [`crate::sim::PassStats`] view the engine threads into telemetry.
+//!
+//! ## Lowering invariants
+//!
+//! [`lower`] re-emits an optimized graph as an executable instruction
+//! stream (interned mnemonics, the same spellings the assembler and
+//! `LanePlan::resolve` speak). Its four invariants — the home invariant,
+//! operand exactness, initial-state mask reconstruction, scratch
+//! restoration — are documented in [`lower`]'s module docs; together
+//! they pin **lift → optimize → lower → run bit-identical to direct
+//! execution**, which `rust/tests/differential_fuzz.rs` asserts for
+//! every liftable corpus seed across every `Backend × CodecMode`
+//! config. Every lowered program passes the static verifier under
+//! `Verify::Deny` with the [`Lowered::externals`] journal. Graphs
+//! outside the invariants (mask states the initial `k` registers cannot
+//! reproduce, unquantised cross-type uses, register pressure) are *not
+//! lowerable*: the engine falls back to direct execution — lowering is
+//! an optimization, never an obligation.
+//!
+//! ## Adding a rewrite rule
+//!
+//! 1. Write the matcher in [`rules`] as a `fn(&Graph, NodeId) ->
+//!    Option<Rewrite>` — return [`Rewrite::Alias`] to redirect uses to
+//!    an existing node or [`Rewrite::Replace`] to swap the node body.
+//!    Never allocate new nodes; that keeps termination a descent
+//!    argument.
+//! 2. State the soundness proof in the rule's doc comment: why the
+//!    rewritten plane is bit-identical (exact tier) or tighter
+//!    (contractive tier), citing the idempotence/finite-lane facts it
+//!    relies on.
+//! 3. Append a `Rule { name, exact, apply }` entry to the table —
+//!    order matters (first match wins a node per iteration), so put
+//!    cheaper/more-general rules first. Exact rules must keep
+//!    `exact: true` only if step 2's proof is bit-level.
+//! 4. Pin it in `rust/tests/opt.rs` with a positive graph (rule fires,
+//!    plane unchanged) and a negative graph (near-miss must not fire),
+//!    and rely on the differential-fuzz bit-identity axis as the
+//!    backstop.
+
+pub mod rules;
+pub mod driver;
+pub mod lower;
+
+pub use driver::{OptReport, Optimizer, RULE_BUDGET_DEFAULT};
+pub use lower::{lower, run_lowered, Lowered};
+pub use rules::{Rewrite, Rule, RuleSet, CSE_RULE};

@@ -1,0 +1,373 @@
+//! The declarative rewrite-rule table over the HLO-lite [`Graph`] node
+//! set.
+//!
+//! Every rule is a pure pattern: `fn(&Graph, NodeId) -> Option<Rewrite>`
+//! — it inspects one node (whose operands the driver has already
+//! resolved through this iteration's alias table) and either proposes a
+//! rewrite or declines. Rules never allocate graph nodes: a [`Rewrite`]
+//! either **aliases** the node to an existing earlier node or
+//! **replaces** its body in place with one referencing only existing
+//! earlier nodes, which is what keeps the graph topologically ordered
+//! (operands always precede users) without a rebuild.
+//!
+//! ## Soundness contract
+//!
+//! The graph evaluates over f64 planes; a `Convert` node is the
+//! quantisation `decode ∘ encode` at a lane type, and **quantisation is
+//! idempotent**: re-encoding a representable value reproduces its bits
+//! exactly (property-tested per format in [`crate::sim::lanes`]). Each
+//! rule's doc comment states the exact identity it relies on. Rules come
+//! in two tiers:
+//!
+//! * **Exact** ([`RuleSet::exact`]) — the rewritten graph evaluates to
+//!   the *bit-identical* planes of the original on every input,
+//!   NaN/±inf/±0 lanes included. This is the tier the engine's
+//!   optimize-then-lower path uses, because the lowered program is
+//!   pinned bit-identical to direct machine execution (the
+//!   `optimized_lowering_bit_identity` fuzz axis).
+//! * **Contractive** ([`RuleSet::all`] adds these) — value-changing
+//!   contractions that *reduce* rounding steps (`Mul`+`Add` → single
+//!   -rounding `Fma`, accumulator folding into a widening `Dot`). They
+//!   are sound as precision *improvements* for graph-interpreter
+//!   workloads but are excluded from the bit-identity path by
+//!   construction.
+//!
+//! One NaN note applies to every value-returning alias rule (`x·1`,
+//! `x±0`): aliasing hands downstream consumers the original NaN operand
+//! where the arithmetic might have produced a NaN with a different
+//! payload. All of the graph's observation channels are
+//! payload-insensitive — every register write re-encodes (and every
+//! codec canonicalises its NaN pattern), and the plane arithmetic only
+//! propagates NaN-ness — so the alias is unobservable; the rules below
+//! additionally demand *bit-exact* constants wherever constant planes
+//! are compared, so no rule ever fires on a payload it cannot prove.
+
+use crate::num::NanStyle;
+use crate::sim::graph::{BinOp, Graph, Node, NodeId};
+use crate::sim::lanes::LaneType;
+
+/// The action a rule proposes for a matched node.
+pub enum Rewrite {
+    /// Every use of the matched node is redirected to this existing
+    /// (earlier) node; the matched node goes dead.
+    Alias(NodeId),
+    /// The matched node's body is replaced in place. The new body may
+    /// only reference nodes that precede the matched node (all rule
+    /// replacements reference operands of the matched subtree, which do
+    /// by construction).
+    Replace(Node),
+}
+
+/// One rewrite rule: a stable name (telemetry counters are keyed
+/// `opt.rule.<name>.applied`), the exactness tier, and the matcher.
+pub struct Rule {
+    pub name: &'static str,
+    /// `true`: bit-identity preserving. `false`: contractive
+    /// (rounding-reducing, value-changing).
+    pub exact: bool,
+    pub apply: fn(&Graph, NodeId) -> Option<Rewrite>,
+}
+
+/// An ordered rule table (first matching rule wins per node per
+/// iteration). The driver additionally runs structural CSE, reported
+/// under the reserved name [`CSE_RULE`].
+pub struct RuleSet {
+    rules: Vec<Rule>,
+}
+
+/// Reserved per-rule report name for the driver-integrated CSE pass.
+pub const CSE_RULE: &str = "cse";
+
+/// The full rule table, in application order. Exact rules first.
+const TABLE: &[Rule] = &[
+    Rule { name: "convert-fold", exact: true, apply: convert_fold },
+    Rule { name: "convert-widen", exact: true, apply: convert_widen },
+    Rule { name: "mul-one", exact: true, apply: mul_one },
+    Rule { name: "add-zero", exact: true, apply: add_zero },
+    Rule { name: "mul-zero", exact: true, apply: mul_zero },
+    Rule { name: "dead-select", exact: true, apply: dead_select },
+    Rule { name: "select-same", exact: true, apply: select_same },
+    Rule { name: "fma-fuse", exact: false, apply: fma_fuse },
+    Rule { name: "dot-widen", exact: false, apply: dot_widen },
+];
+
+impl RuleSet {
+    /// Only the bit-identity-preserving rules — the engine path.
+    pub fn exact() -> RuleSet {
+        RuleSet { rules: TABLE.iter().filter(|r| r.exact).map(clone_rule).collect() }
+    }
+
+    /// Exact + contractive rules — interpreter-only workloads.
+    pub fn all() -> RuleSet {
+        RuleSet { rules: TABLE.iter().map(clone_rule).collect() }
+    }
+
+    pub fn rules(&self) -> &[Rule] {
+        &self.rules
+    }
+
+    /// Every rule name this set can report (CSE included) — the
+    /// telemetry registry pre-seeds its per-rule counters from this.
+    pub fn names(&self) -> Vec<&'static str> {
+        let mut n: Vec<&'static str> = self.rules.iter().map(|r| r.name).collect();
+        n.push(CSE_RULE);
+        n
+    }
+}
+
+fn clone_rule(r: &Rule) -> Rule {
+    Rule { name: r.name, exact: r.exact, apply: r.apply }
+}
+
+// ---------------------------------------------------------------------------
+// Exact rules
+// ---------------------------------------------------------------------------
+
+/// `Convert(x, T)` where `x` already produces a `T`-quantised plane, or
+/// where `x` is a constant plane every lane of which round-trips
+/// bit-exactly through `T`.
+///
+/// **Soundness (exact):** quantisation idempotence —
+/// `q_T(q_T(x)) = q_T(x)` per lane, bit for bit. The constant arm
+/// demands `decode(encode(lane)).to_bits() == lane.to_bits()` for all 64
+/// lanes, so it cannot fire on a constant the quantisation would move
+/// (NaN payloads included: a constant with a non-canonical payload
+/// simply fails the bit check).
+fn convert_fold(g: &Graph, id: NodeId) -> Option<Rewrite> {
+    let Node::Convert { src, ty } = *g.node(id) else { return None };
+    if g.quantised_ty(src) == Some(ty) {
+        return Some(Rewrite::Alias(src));
+    }
+    if let Node::Const(p) = g.node(src) {
+        let exact = p.iter().all(|&x| ty.decode(ty.encode(x)).to_bits() == x.to_bits());
+        if exact {
+            return Some(Rewrite::Alias(src));
+        }
+    }
+    None
+}
+
+/// `Convert(x, W)` where `x` is provably quantised at `T` and every
+/// value of `T` is exactly representable in `W` (a lossless embedding):
+/// the convert is the identity.
+///
+/// **Soundness (exact):** `q_W` restricted to `range(q_T)` is the
+/// identity when `T ⊆ W` value-wise. The embedding table is
+/// deliberately same-family:
+/// * `Takum(n) ⊆ Takum(m)` for `n ≤ m` — takum is a prefix code, every
+///   shorter encoding is a truncation of a longer one
+///   (property-tested exhaustively in `rust/tests/opt.rs`).
+/// * IEEE-style minifloats embed when the target has at least as many
+///   exponent bits, at least as many mantissa bits and at least the
+///   bias (every finite source value, subnormals included, is exact in
+///   the target; `±inf → ±inf`, NaN → NaN). A **saturating** target
+///   (`MiniSat`) additionally requires an inf-free source — saturating
+///   encode clamps `±inf` to max-finite, which would change the value.
+///   Saturating and `Fn`-style (E4M3) *sources* are inf-free by
+///   construction.
+///
+/// This is the rule that erases the OFP8 storage↔compute convert tax:
+/// `Convert(F16, x@e4m3)` chains (the `cvt_in` half of every OFP8
+/// kernel cell) fold to nothing, while takum cells are already at the
+/// fixpoint — the paper's headline, made measurable in
+/// `BENCH_kernels.json`.
+fn convert_widen(g: &Graph, id: NodeId) -> Option<Rewrite> {
+    let Node::Convert { src, ty } = *g.node(id) else { return None };
+    let t = g.quantised_ty(src)?;
+    if t != ty && losslessly_embeds(t, ty) {
+        return Some(Rewrite::Alias(src));
+    }
+    None
+}
+
+/// Whether every value producible by quantising through `t` is exactly
+/// representable (same value, canonical bits) under `w`'s quantisation.
+pub(crate) fn losslessly_embeds(t: LaneType, w: LaneType) -> bool {
+    use LaneType::*;
+    match (t, w) {
+        (Takum(n), Takum(m)) => n <= m,
+        (Mini(s), Mini(d)) => spec_embeds(s, d),
+        (MiniSat(s), Mini(d)) => spec_embeds(s, d),
+        // Saturating targets clamp ±inf to max-finite: only inf-free
+        // sources embed (Fn-style has no inf encoding; saturating
+        // quantisation never produces one).
+        (Mini(s), MiniSat(d)) => s.nan == NanStyle::Fn && spec_embeds(s, d),
+        (MiniSat(s), MiniSat(d)) => spec_embeds(s, d),
+        _ => false,
+    }
+}
+
+fn spec_embeds(s: crate::num::MinifloatSpec, d: crate::num::MinifloatSpec) -> bool {
+    d.exp_bits >= s.exp_bits && d.man_bits >= s.man_bits && d.bias >= s.bias
+}
+
+/// `x · 1 → x` (either side).
+///
+/// **Soundness (exact):** `x · 1.0 == x` bit-exactly for every f64,
+/// signed zeros (`-0 · 1 = -0`), infinities and NaN-ness included. The
+/// constant must be all-lanes `1.0` *bit*-exact.
+fn mul_one(g: &Graph, id: NodeId) -> Option<Rewrite> {
+    let Node::Bin { op: BinOp::Mul, a, b } = *g.node(id) else { return None };
+    if const_all_bits(g, a, 1.0f64.to_bits()) {
+        return Some(Rewrite::Alias(b));
+    }
+    if const_all_bits(g, b, 1.0f64.to_bits()) {
+        return Some(Rewrite::Alias(a));
+    }
+    None
+}
+
+/// `x + (-0) → x` (either side) and `x - (+0) → x` (second operand).
+///
+/// **Soundness (exact):** `-0.0` is the additive identity under
+/// round-to-nearest: `x + (-0.0) == x` bit-exactly for every x —
+/// including `x = +0.0` (`+0 + -0 = +0`) and `x = -0.0`
+/// (`-0 + -0 = -0`). `+0.0` is **not** (`-0 + +0 = +0` flips the zero
+/// sign), which is why the Add arm demands the `-0.0` bit pattern.
+/// Symmetrically `x - (+0.0) == x` (`-0 - +0 = -0`, `+0 - +0 = +0`).
+fn add_zero(g: &Graph, id: NodeId) -> Option<Rewrite> {
+    match *g.node(id) {
+        Node::Bin { op: BinOp::Add, a, b } => {
+            let neg0 = (-0.0f64).to_bits();
+            if const_all_bits(g, a, neg0) {
+                return Some(Rewrite::Alias(b));
+            }
+            if const_all_bits(g, b, neg0) {
+                return Some(Rewrite::Alias(a));
+            }
+            None
+        }
+        Node::Bin { op: BinOp::Sub, a, b } => {
+            const_all_bits(g, b, 0.0f64.to_bits()).then_some(Rewrite::Alias(a))
+        }
+        _ => None,
+    }
+}
+
+/// `c0 · c → Const(c0 · c)` where `c0` is an all-`±0.0` constant and
+/// `c` a constant with **all-finite** lanes — the finite-lane proof.
+///
+/// **Soundness (exact):** computed lane-wise at fold time with the very
+/// multiplication the evaluator would perform, so signed zeros come out
+/// right (`+0 · -x = -0`). The finite-lane demand is load-bearing:
+/// `±inf · 0 = NaN` and `NaN · 0 = NaN`, so a lane that is not provably
+/// finite blocks the fold.
+fn mul_zero(g: &Graph, id: NodeId) -> Option<Rewrite> {
+    let Node::Bin { op: BinOp::Mul, a, b } = *g.node(id) else { return None };
+    let zero_side = |n: NodeId| match g.node(n) {
+        Node::Const(p) => p.iter().all(|x| *x == 0.0).then_some(p),
+        _ => None,
+    };
+    let finite_side = |n: NodeId| match g.node(n) {
+        Node::Const(p) => p.iter().all(|x| x.is_finite()).then_some(p),
+        _ => None,
+    };
+    let (z, c) = if let (Some(z), Some(c)) = (zero_side(a), finite_side(b)) {
+        (z, c)
+    } else if let (Some(z), Some(c)) = (zero_side(b), finite_side(a)) {
+        (z, c)
+    } else {
+        return None;
+    };
+    let mut out = [0.0f64; 64];
+    for i in 0..64 {
+        out[i] = z[i] * c[i];
+    }
+    Some(Rewrite::Replace(Node::Const(Box::new(out))))
+}
+
+/// `Select(mask, a, b)` with a statically all-set mask → `a`; all-clear
+/// → `b`.
+///
+/// **Soundness (exact):** the Select evaluator is a pure lane mux; a
+/// constant mask of `u64::MAX` selects every lane from `a`, `0` every
+/// lane from `b`. Masks are baked into the node at lift time (the
+/// lifted subset cannot write mask registers), so the staticness is
+/// structural, not an approximation.
+fn dead_select(g: &Graph, id: NodeId) -> Option<Rewrite> {
+    let Node::Select { mask, a, b } = *g.node(id) else { return None };
+    if mask == u64::MAX {
+        return Some(Rewrite::Alias(a));
+    }
+    if mask == 0 {
+        return Some(Rewrite::Alias(b));
+    }
+    None
+}
+
+/// `Select(_, a, a) → a` — both arms identical (commonly exposed by CSE
+/// merging the arms first).
+///
+/// **Soundness (exact):** the mux of a plane with itself is that plane,
+/// whatever the mask.
+fn select_same(g: &Graph, id: NodeId) -> Option<Rewrite> {
+    let Node::Select { a, b, .. } = *g.node(id) else { return None };
+    (a == b).then_some(Rewrite::Alias(a))
+}
+
+// ---------------------------------------------------------------------------
+// Contractive rules (value-changing: fewer roundings)
+// ---------------------------------------------------------------------------
+
+/// `Mul(a,b) + z → Fma(a,b,z)` (the `Bin(Mul)+Bin(Add)→Fma` fusion;
+/// composed under a `Convert`, this is the `Convert(Fma(..))` shape).
+///
+/// **Soundness (contractive):** `fma(a,b,z)` rounds once where
+/// `(a·b)+z` rounds twice — the values differ by at most the eliminated
+/// intermediate rounding, always toward the infinitely precise result.
+/// Value-changing, therefore excluded from [`RuleSet::exact`] and from
+/// the engine's bit-identity path.
+fn fma_fuse(g: &Graph, id: NodeId) -> Option<Rewrite> {
+    let Node::Bin { op: BinOp::Add, a, b } = *g.node(id) else { return None };
+    let as_mul = |n: NodeId| match *g.node(n) {
+        Node::Bin { op: BinOp::Mul, a, b } => Some((a, b)),
+        _ => None,
+    };
+    let (ma, mb, z) = if let Some((ma, mb)) = as_mul(a) {
+        (ma, mb, b)
+    } else if let Some((ma, mb)) = as_mul(b) {
+        (ma, mb, a)
+    } else {
+        return None;
+    };
+    use crate::sim::lanes::{FmaKind, FmaOrder};
+    Some(Rewrite::Replace(Node::Fma {
+        kind: FmaKind::Madd,
+        order: FmaOrder::O213,
+        a: ma,
+        b: mb,
+        z,
+    }))
+}
+
+/// `Dot(a, b, 0) + w → Dot(a, b, w)` — fold a post-add into the widening
+/// dot's accumulator when the accumulator is statically zero.
+///
+/// **Soundness (contractive):** the dot evaluator folds left-to-right
+/// (`((z + p₀) + p₁)`), so moving `w` into the accumulator slot changes
+/// the association order (`((w + p₀) + p₁)` vs `((0 + p₀) + p₁) + w`) —
+/// same terms, one fewer add and a different rounding path.
+/// Value-changing, therefore contractive-tier only.
+fn dot_widen(g: &Graph, id: NodeId) -> Option<Rewrite> {
+    let Node::Bin { op: BinOp::Add, a, b } = *g.node(id) else { return None };
+    let as_zero_dot = |n: NodeId| match *g.node(n) {
+        Node::Dot { a, b, z } if const_all_bits(g, z, 0.0f64.to_bits()) => Some((a, b)),
+        _ => None,
+    };
+    let (da, db, w) = if let Some((da, db)) = as_zero_dot(a) {
+        (da, db, b)
+    } else if let Some((da, db)) = as_zero_dot(b) {
+        (da, db, a)
+    } else {
+        return None;
+    };
+    Some(Rewrite::Replace(Node::Dot { a: da, b: db, z: w }))
+}
+
+/// Whether `n` is a `Const` whose every lane is exactly `bits`.
+fn const_all_bits(g: &Graph, n: NodeId, bits: u64) -> bool {
+    match g.node(n) {
+        Node::Const(p) => p.iter().all(|x| x.to_bits() == bits),
+        _ => false,
+    }
+}

@@ -33,11 +33,16 @@
 //!   `Convert(x, T)` and `Convert(Load{ty: T}, T)` → `Load{ty: T}`.
 //!   Sound because quantisation is idempotent: re-encoding a
 //!   representable value reproduces its bits exactly (property-tested
-//!   exhaustively per format in [`crate::sim::lanes`]). This removes the
-//!   redundant re-quantisation the lifter inserts at every
-//!   register-read boundary.
+//!   exhaustively per format in [`crate::sim::lanes`]). The lifter now
+//!   folds these at construction (a provably quantised node is returned
+//!   as-is instead of being re-wrapped), so this pass is a backstop for
+//!   hand-built graphs.
 //! * **dead-plane elimination** — nodes unreachable from any output are
 //!   dropped (masked stores and scalar ops leave partially-dead chains).
+//!
+//! The full rewrite-rule engine (algebraic identities, cross-format
+//! convert folding, CSE, fixpoint driver, graph→[`Program`] lowering)
+//! lives in [`crate::opt`] and builds on the same node set.
 //!
 //! ## Bit-identity contract
 //!
@@ -80,8 +85,14 @@ pub struct NodeId(u32);
 
 impl NodeId {
     #[inline]
-    fn idx(self) -> usize {
+    pub(crate) fn idx(self) -> usize {
         self.0 as usize
+    }
+
+    /// Construct from a raw index (the optimizer's remap tables).
+    #[inline]
+    pub(crate) fn new(idx: usize) -> NodeId {
+        NodeId(idx as u32)
     }
 }
 
@@ -140,7 +151,7 @@ pub enum Node {
 
 impl Node {
     /// Operand ids, for the passes.
-    fn operands(&self) -> [Option<NodeId>; 3] {
+    pub(crate) fn operands(&self) -> [Option<NodeId>; 3] {
         match *self {
             Node::Const(_) | Node::Param(_) | Node::Load { .. } => [None; 3],
             Node::Convert { src, .. }
@@ -152,7 +163,7 @@ impl Node {
         }
     }
 
-    fn operands_mut(&mut self) -> [Option<&mut NodeId>; 3] {
+    pub(crate) fn operands_mut(&mut self) -> [Option<&mut NodeId>; 3] {
         match self {
             Node::Const(_) | Node::Param(_) | Node::Load { .. } => [None, None, None],
             Node::Convert { src, .. }
@@ -176,13 +187,47 @@ pub struct RegOutput {
     pub node: NodeId,
 }
 
-/// Statistics of one [`Graph::optimize`] run.
-#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+/// One harness load interleaved into a recorded program: immediately
+/// before instruction `at`, register `reg` was fully replaced with the
+/// canonical `ty` encoding of `values` (lanes beyond `values.len()`
+/// hold zero bits — `Machine::load_f64` / `LaneCodec::encode_plane`
+/// semantics). The kernel builder journals these so kernel traces stay
+/// liftable; see [`Graph::lift_with_loads`].
+#[derive(Debug, Clone)]
+pub struct LoadEvent {
+    /// Index of the instruction this load precedes (`program.len()` for
+    /// trailing loads).
+    pub at: usize,
+    pub reg: u8,
+    pub ty: LaneType,
+    pub values: Vec<f64>,
+}
+
+/// Statistics of one [`Graph::optimize`] run (or of a full
+/// [`crate::opt`] driver run, which fills the per-rule report).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct PassStats {
     /// Redundant `Convert` nodes folded away.
     pub converts_folded: usize,
     /// Dead nodes eliminated.
     pub dead_removed: usize,
+    /// Per-rule application counts, in rule-table order (the legacy
+    /// two-pass [`Graph::optimize`] reports its passes under the
+    /// `convert-fold` / `dead-plane` names; the [`crate::opt`] driver
+    /// reports every rewrite rule it applied).
+    pub per_rule: Vec<(&'static str, usize)>,
+}
+
+impl PassStats {
+    /// Applications of one named rule in the report (0 when absent).
+    pub fn rule(&self, name: &str) -> usize {
+        self.per_rule.iter().find(|(n, _)| *n == name).map_or(0, |(_, c)| *c)
+    }
+
+    /// Total rule applications across the report.
+    pub fn total_applied(&self) -> usize {
+        self.per_rule.iter().map(|(_, c)| c).sum()
+    }
 }
 
 /// The dataflow graph (see module docs for the node set and contract).
@@ -210,6 +255,79 @@ impl Graph {
 
     pub fn outputs(&self) -> &[RegOutput] {
         &self.outputs
+    }
+
+    /// Human-readable listing of the graph — one node per line, then the
+    /// register outputs and plane returns. The `opt` CLI subcommand's
+    /// before/after dump; constant planes are summarised by their first
+    /// lanes so a 64-lane tile does not drown the listing.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (i, n) in self.nodes.iter().enumerate() {
+            match n {
+                Node::Const(p) => {
+                    let head =
+                        p[..4].iter().map(|v| format!("{v}")).collect::<Vec<_>>().join(", ");
+                    out.push_str(&format!("  n{i}: Const[{head}, …]\n"));
+                }
+                other => out.push_str(&format!("  n{i}: {other:?}\n")),
+            }
+        }
+        for o in &self.outputs {
+            out.push_str(&format!("  output v{} : {:?} = n{}\n", o.reg, o.ty, o.node.idx()));
+        }
+        for r in &self.returns {
+            out.push_str(&format!("  return n{}\n", r.idx()));
+        }
+        out
+    }
+
+    // Crate-internal views for the rewrite optimizer / lowerer
+    // ([`crate::opt`]): the node vector stays private so external users
+    // can only grow graphs through the type-checked builders, while the
+    // optimizer gets the structural access its passes need.
+
+    pub(crate) fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub(crate) fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.idx()]
+    }
+
+    pub(crate) fn nodes_mut(&mut self) -> &mut [Node] {
+        &mut self.nodes
+    }
+
+    pub(crate) fn outputs_mut(&mut self) -> &mut Vec<RegOutput> {
+        &mut self.outputs
+    }
+
+    pub(crate) fn returns(&self) -> &[NodeId] {
+        &self.returns
+    }
+
+    pub(crate) fn returns_mut(&mut self) -> &mut Vec<NodeId> {
+        &mut self.returns
+    }
+
+    /// The lane type `id`'s plane is statically known to be quantised
+    /// through — i.e. every lane value is a fixed point of
+    /// `decode ∘ encode` at that type. `Convert`/`Load` carry it
+    /// directly; `Select`/`Broadcast` preserve it (their lanes are drawn
+    /// from already-quantised planes). `None` means "not provable", not
+    /// "not quantised".
+    pub(crate) fn quantised_ty(&self, id: NodeId) -> Option<LaneType> {
+        match self.nodes[id.idx()] {
+            Node::Convert { ty, .. } => Some(ty),
+            Node::Load { ty, .. } => Some(ty),
+            Node::Select { a, b, .. } => {
+                let ta = self.quantised_ty(a)?;
+                (ta == self.quantised_ty(b)?).then_some(ta)
+            }
+            Node::Broadcast { src } => self.quantised_ty(src),
+            _ => None,
+        }
     }
 
     fn push(&mut self, n: Node) -> NodeId {
@@ -296,7 +414,11 @@ impl Graph {
     pub fn optimize(&mut self) -> PassStats {
         let converts_folded = self.fold_convert_pairs();
         let dead_removed = self.eliminate_dead();
-        PassStats { converts_folded, dead_removed }
+        PassStats {
+            converts_folded,
+            dead_removed,
+            per_rule: vec![("convert-fold", converts_folded), ("dead-plane", dead_removed)],
+        }
     }
 
     /// `Convert(x, T)` where `x` already produces a `T`-quantised plane
@@ -341,8 +463,9 @@ impl Graph {
 
     /// Drop every node unreachable from an output or return, compacting
     /// ids (operands always precede their users, so one reverse mark
-    /// sweep suffices).
-    fn eliminate_dead(&mut self) -> usize {
+    /// sweep suffices). Crate-visible: the [`crate::opt`] driver runs it
+    /// after each rewrite iteration.
+    pub(crate) fn eliminate_dead(&mut self) -> usize {
         let mut live = vec![false; self.nodes.len()];
         for o in &self.outputs {
             live[o.node.idx()] = true;
@@ -393,16 +516,41 @@ impl Graph {
     /// error — exactly the vocabulary the kernel builder emits is
     /// covered.
     pub fn lift(prog: &Program, regs: &RegisterFile) -> Result<Graph> {
+        Self::lift_with_loads(prog, regs, &[])
+    }
+
+    /// [`Graph::lift`] for traces that interleave **harness loads**
+    /// mid-program (the kernel builder's `load_f64` calls): each
+    /// [`LoadEvent`] fully replaces a register's contents with the
+    /// canonical `ty` encoding of its values — exactly what
+    /// `Machine::load_f64` does — so it enters the graph as a quantised
+    /// constant plane, not a `Load` of the (stale) initial file. Events
+    /// must be sorted by `at` (instruction index they precede), which is
+    /// how the builder journals them.
+    pub fn lift_with_loads(
+        prog: &Program,
+        regs: &RegisterFile,
+        loads: &[LoadEvent],
+    ) -> Result<Graph> {
         let mut l = Lifter {
             g: Graph::new(),
             env: [None; NUM_VREGS],
             written: [false; NUM_VREGS],
         };
-        for ins in &prog.instrs {
+        let mut next = 0usize;
+        for (at, ins) in prog.instrs.iter().enumerate() {
+            while next < loads.len() && loads[next].at <= at {
+                l.apply_load(&loads[next])?;
+                next += 1;
+            }
             l.lift_instruction(ins, regs)?;
         }
-        // Only registers the program wrote become outputs; registers
-        // that were merely read keep their initial contents.
+        for ev in &loads[next..] {
+            l.apply_load(ev)?;
+        }
+        // Only registers the program wrote (instructions or load events)
+        // become outputs; registers that were merely read keep their
+        // initial contents.
         for r in 0..NUM_VREGS {
             if l.written[r] {
                 let (node, ty) = l.env[r].expect("written register has an env entry");
@@ -592,6 +740,17 @@ impl Lifter {
     fn read(&mut self, r: usize, ty: LaneType) -> Result<NodeId> {
         match self.env[r] {
             Some((node, t)) if t == ty => {
+                // Quantisation is idempotent, so when the node already
+                // provably produces a `ty`-quantised plane (a memoized
+                // Convert, a journaled load, a Load of the initial
+                // state), wrapping it in another quantising Convert is
+                // the identity — fold it at construction instead of
+                // leaving trivially redundant nodes for the optimizer
+                // (pinned by the zero-convert-rule assertions in the
+                // lift tests and `rust/tests/opt.rs`).
+                if self.g.quantised_ty(node) == Some(ty) {
+                    return Ok(node);
+                }
                 let c = self.g.convert(node, ty);
                 self.env[r] = Some((c, ty));
                 Ok(c)
@@ -611,6 +770,35 @@ impl Lifter {
                 Ok(l)
             }
         }
+    }
+
+    /// Apply one journaled harness load: the register's new contents are
+    /// the quantised constant plane of the event's values (full
+    /// replacement, like a dense store — `Machine::load_f64` encodes the
+    /// whole register afresh, zero bits beyond the value prefix, and
+    /// `decode(0) == +0.0` for every fp lane type). The constant is
+    /// wrapped in a quantising `Convert` so downstream reads see a
+    /// provably `ty`-quantised node (and the lowerer finds the load-site
+    /// anchor shape).
+    fn apply_load(&mut self, ev: &LoadEvent) -> Result<()> {
+        let lanes = VecReg::lanes(ev.ty.width());
+        anyhow::ensure!(
+            ev.values.len() <= lanes,
+            "load event at {} writes {} values into {} lanes of v{}",
+            ev.at,
+            ev.values.len(),
+            lanes,
+            ev.reg
+        );
+        let mut plane = [0.0f64; 64];
+        for (i, &v) in ev.values.iter().enumerate() {
+            plane[i] = ev.ty.decode(ev.ty.encode(v));
+        }
+        let c = self.g.konst(plane);
+        let q = self.g.convert(c, ev.ty);
+        self.env[ev.reg as usize] = Some((q, ev.ty));
+        self.written[ev.reg as usize] = true;
+        Ok(())
     }
 
     /// Store `node` into `dst` under the instruction's write mask. Mask
@@ -856,7 +1044,9 @@ mod tests {
             let mut g = Graph::lift(&prog, &init).unwrap();
             let unopt = g.run_on(&init, mode).unwrap();
             let stats = g.optimize();
-            assert!(stats.converts_folded > 0, "chained ops must fold converts");
+            // The lifter folds redundant quantising Converts at
+            // construction now, so the legacy pass finds nothing left.
+            assert_eq!(stats.converts_folded, 0, "lift must not emit redundant converts");
             let opt = g.run_on(&init, mode).unwrap();
             for r in 0..NUM_VREGS {
                 assert_eq!(mach.regs.v[r], unopt.v[r], "{mode:?} v{r} (unoptimised)");
@@ -897,8 +1087,8 @@ mod tests {
     }
 
     /// A lifted widening dot (t8 pairs → t16 accumulator) with a
-    /// format-convert epilogue replays bit-identically, and the passes
-    /// both fire.
+    /// format-convert epilogue replays bit-identically; the lifter's
+    /// construction-time fold leaves the legacy convert pass nothing.
     #[test]
     fn lifted_dot_and_convert_match_machine() {
         let t8 = LaneType::Takum(8);
@@ -921,7 +1111,7 @@ mod tests {
         let mut g = Graph::lift(&p, &init).unwrap();
         let before = g.len();
         let stats = g.optimize();
-        assert!(stats.converts_folded > 0);
+        assert_eq!(stats.converts_folded, 0, "lift must not emit redundant converts");
         assert!(g.len() <= before);
         let got = g.run_on(&init, CodecMode::Lut).unwrap();
         for reg in [2usize, 3] {

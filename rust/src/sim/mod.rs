@@ -28,7 +28,7 @@ pub mod assemble;
 pub use assemble::assemble;
 pub use exec::{ExecCounters, Machine};
 pub use intern::intern;
-pub use graph::Graph;
+pub use graph::{Graph, LoadEvent, PassStats};
 pub use lanes::{CodecMode, LaneCodec, LanePlan, LaneType};
 pub use plane::Backend;
 pub use simd::{PlaneKernels, Tier, NATIVE_LANES};

@@ -174,6 +174,13 @@ pub struct Registry {
     serve_shed: AtomicU64,
     serve_batched: AtomicU64,
     serve_coalesced: AtomicU64,
+    /// Graph-compiler counters (see `crate::opt`): rewrite-rule
+    /// applications keyed by rule name (rendered as
+    /// `opt.rule.<name>.applied`), graphs successfully lowered and
+    /// replayed, and the total node shrinkage the fixpoint bought.
+    opt_rules: Mutex<BTreeMap<&'static str, u64>>,
+    opt_lowered: AtomicU64,
+    opt_nodes_removed: AtomicU64,
     /// Tasks completed per pool worker, accumulated across fan-outs
     /// (index = worker slot; fan-outs with fewer workers fold into the
     /// low slots).
@@ -282,6 +289,25 @@ impl Registry {
         }
     }
 
+    /// Count `n` applications of rewrite rule `rule` (from one
+    /// optimizer run's per-rule report).
+    pub fn count_opt_rule(&self, rule: &'static str, n: u64) {
+        if !enabled() || n == 0 {
+            return;
+        }
+        let mut rules = self.opt_rules.lock().expect("telemetry opt rules poisoned");
+        *rules.entry(rule).or_insert(0) += n;
+    }
+
+    /// Count one graph successfully optimized, lowered and replayed,
+    /// whose rewrite fixpoint removed `nodes_removed` graph nodes.
+    pub fn count_opt_lowered(&self, nodes_removed: u64) {
+        if enabled() {
+            self.opt_lowered.fetch_add(1, Relaxed);
+            self.opt_nodes_removed.fetch_add(nodes_removed, Relaxed);
+        }
+    }
+
     /// Materialise the read surface. `engine_tag` is stamped in so a
     /// persisted snapshot is self-describing (which config produced it).
     pub fn snapshot(&self, engine_tag: &str) -> TelemetrySnapshot {
@@ -304,6 +330,13 @@ impl Registry {
             .tier_planes
             .lock()
             .expect("telemetry tiers poisoned")
+            .iter()
+            .map(|(&k, &v)| (k.to_string(), v))
+            .collect::<BTreeMap<String, u64>>();
+        let opt_rules = self
+            .opt_rules
+            .lock()
+            .expect("telemetry opt rules poisoned")
             .iter()
             .map(|(&k, &v)| (k.to_string(), v))
             .collect::<BTreeMap<String, u64>>();
@@ -341,8 +374,11 @@ impl Registry {
             serve_shed: self.serve_shed.load(Relaxed),
             serve_batched: self.serve_batched.load(Relaxed),
             serve_coalesced: self.serve_coalesced.load(Relaxed),
+            opt_lowered_programs: self.opt_lowered.load(Relaxed),
+            opt_nodes_removed: self.opt_nodes_removed.load(Relaxed),
             converts,
             dots,
+            opt_rules,
             classes,
             tier_planes,
             mnemonics,

@@ -22,6 +22,8 @@
 //! | `executed` | folded on absorb | total executed instructions |
 //! | `serve.enqueued` / `serve.shed` | `serve::Queue` push | serving requests accepted into / shed at the bounded queue (shed = depth watermark hit) |
 //! | `serve.batched` / `serve.coalesced` | `serve::Server` batch execution | batches executed / requests answered by another member's coalesced run |
+//! | `opt.rule.<name>.applied` | `kernels::suite` opt path | rewrite-rule applications per [`crate::opt`] rule, from each cell's per-rule report |
+//! | `opt.lowered_programs` / `opt.nodes_removed` | `kernels::suite` opt path | graphs successfully optimized+lowered+replayed / total node shrinkage those fixpoints bought |
 //! | `converts` / `dots` | derived from `classes` | executed convert-class / dot-class instructions (the dynamic convert tax) |
 //! | `classes` | folded on absorb | executed instructions per resolved [`crate::sim::LanePlan`] class |
 //! | `mnemonics` | folded on absorb | full executed-mnemonic histogram (interned `&'static str` keys until the snapshot) |

@@ -63,11 +63,20 @@ pub struct TelemetrySnapshot {
     /// Serving layer: requests answered by a coalesced (deduplicated)
     /// execution (`serve.coalesced`).
     pub serve_coalesced: u64,
+    /// Graph compiler: recorded programs successfully optimized,
+    /// lowered and replayed (`opt.lowered_programs`).
+    pub opt_lowered_programs: u64,
+    /// Graph compiler: total graph nodes removed by the rewrite
+    /// fixpoints behind those lowerings (`opt.nodes_removed`).
+    pub opt_nodes_removed: u64,
     /// Executed instructions whose resolved plan class is `convert` —
     /// the dynamic convert-tax counter.
     pub converts: u64,
     /// Executed widening dot products (plan class `dot`).
     pub dots: u64,
+    /// Graph compiler: rewrite-rule applications keyed by rule name
+    /// (rendered as `opt.rule.<name>.applied`).
+    pub opt_rules: BTreeMap<String, u64>,
     /// Executed instructions per resolved `LanePlan` class.
     pub classes: BTreeMap<String, u64>,
     /// Vector-backend plane operations served per SIMD tier, keyed by
@@ -124,7 +133,7 @@ impl TelemetrySnapshot {
     /// Serialise as the stable snapshot JSON document (see the module
     /// docs; `schema: 1`).
     pub fn to_json(&self) -> String {
-        let counters: [(&str, u64); 18] = [
+        let counters: [(&str, u64); 20] = [
             ("jobs", self.jobs),
             ("plan_hits", self.plan_hits),
             ("plan_misses", self.plan_misses),
@@ -141,6 +150,8 @@ impl TelemetrySnapshot {
             ("serve.shed", self.serve_shed),
             ("serve.batched", self.serve_batched),
             ("serve.coalesced", self.serve_coalesced),
+            ("opt.lowered_programs", self.opt_lowered_programs),
+            ("opt.nodes_removed", self.opt_nodes_removed),
             ("converts", self.converts),
             ("dots", self.dots),
         ];
@@ -171,9 +182,11 @@ impl TelemetrySnapshot {
         format!(
             "{{\n  \"schema\": {SNAPSHOT_SCHEMA},\n  \"engine\": \"{}\",\n  \
              \"counters\": {{\n{counter_body}\n  }},\n  \
+             \"opt_rules\": {},\n  \
              \"classes\": {},\n  \"tier_planes\": {},\n  \"mnemonics\": {},\n  \
              \"per_worker\": [{per_worker}],\n  \"stages\": [\n{stages}\n  ]\n}}\n",
             escape(&self.engine),
+            json_map(&self.opt_rules, "  "),
             json_map(&self.classes, "  "),
             json_map(&self.tier_planes, "  "),
             json_map(&self.mnemonics, "  "),
@@ -252,8 +265,11 @@ impl TelemetrySnapshot {
             serve_shed: counters.u64_or_zero("serve.shed"),
             serve_batched: counters.u64_or_zero("serve.batched"),
             serve_coalesced: counters.u64_or_zero("serve.coalesced"),
+            opt_lowered_programs: counters.u64_or_zero("opt.lowered_programs"),
+            opt_nodes_removed: counters.u64_or_zero("opt.nodes_removed"),
             converts: counters.u64_or_zero("converts"),
             dots: counters.u64_or_zero("dots"),
+            opt_rules: read_map("opt_rules"),
             classes: read_map("classes"),
             tier_planes: read_map("tier_planes"),
             mnemonics: read_map("mnemonics"),
@@ -301,6 +317,23 @@ impl TelemetrySnapshot {
                 "  serving layer       enqueued: {}  shed: {}  batched: {}  coalesced: {}\n",
                 self.serve_enqueued, self.serve_shed, self.serve_batched, self.serve_coalesced
             ));
+        }
+        if self.opt_lowered_programs > 0 || !self.opt_rules.is_empty() {
+            out.push_str(&format!(
+                "  graph compiler      lowered: {}  nodes removed: {}\n",
+                self.opt_lowered_programs, self.opt_nodes_removed
+            ));
+            if !self.opt_rules.is_empty() {
+                out.push_str("  opt rules           ");
+                let cells = self
+                    .opt_rules
+                    .iter()
+                    .map(|(k, v)| format!("opt.rule.{k}.applied={v}"))
+                    .collect::<Vec<_>>()
+                    .join("  ");
+                out.push_str(&cells);
+                out.push('\n');
+            }
         }
         if !self.classes.is_empty() {
             out.push_str("  per class           ");
@@ -372,8 +405,13 @@ mod tests {
             serve_shed: 2,
             serve_batched: 5,
             serve_coalesced: 6,
+            opt_lowered_programs: 2,
+            opt_nodes_removed: 7,
             converts: 12,
             dots: 4,
+            opt_rules: [("convert-fold".to_string(), 9), ("cse".to_string(), 3)]
+                .into_iter()
+                .collect(),
             classes: [("convert".to_string(), 12), ("dot".to_string(), 4), ("fp".to_string(), 112)]
                 .into_iter()
                 .collect(),
@@ -420,7 +458,22 @@ mod tests {
         assert!(txt.contains("tier.avx2.planes=96"), "{txt}");
         assert!(txt.contains("serving layer"), "{txt}");
         assert!(txt.contains("shed: 2"), "{txt}");
+        assert!(txt.contains("graph compiler      lowered: 2  nodes removed: 7"), "{txt}");
+        assert!(txt.contains("opt.rule.convert-fold.applied=9"), "{txt}");
         assert!(txt.contains("submit"), "{txt}");
+    }
+
+    /// A snapshot that never ran the graph compiler renders no opt
+    /// lines (`--opt off` runs keep their old output).
+    #[test]
+    fn render_omits_opt_lines_when_idle() {
+        let mut snap = sample();
+        snap.opt_lowered_programs = 0;
+        snap.opt_nodes_removed = 0;
+        snap.opt_rules.clear();
+        let txt = snap.render();
+        assert!(!txt.contains("graph compiler"), "{txt}");
+        assert!(!txt.contains("opt rules"), "{txt}");
     }
 
     /// A snapshot that never saw serving traffic renders no serving

@@ -457,9 +457,75 @@ fn lifted_interpreter_matches_machine_replay() {
             }
         }
     }
-    // The corpus must exercise the passes, not tiptoe around them.
-    assert!(total_folded > 0, "no convert pairs folded across the corpus");
+    // The lifter folds redundant quantising converts *at construction*
+    // (`Lifter::read`): a convert chain never materialises as graph
+    // nodes in the first place, so the cleanup pass must find nothing
+    // left to fold — over a corpus full of VCVT chains. The dead-plane
+    // pass still has real work (overwritten registers).
+    assert!(
+        total_folded == 0,
+        "lift construction left {total_folded} redundant converts for the pass to fold"
+    );
     assert!(total_dead > 0, "no dead planes eliminated across the corpus");
+}
+
+/// The graph-compiler gate (`crate::opt`): for every liftable corpus
+/// seed, lift → exact rewrite fixpoint → lower → replay must leave
+/// architectural state bit-identical to the direct machine replay, in
+/// every `Backend × CodecMode` config — and every lowered program must
+/// pass the static verifier under `Verify::Deny` semantics. This is the
+/// soundness pin behind the engine's `--opt on` axis: the optimizer may
+/// only erase work, never change a bit.
+#[test]
+fn optimized_lowering_bit_identity() {
+    use takum_avx10::opt::{lower, run_lowered, Optimizer};
+    let engines: Vec<(CodecMode, Backend, Engine)> =
+        CONFIGS.iter().map(|&(m, b)| (m, b, engine_for(m, b))).collect();
+    let mut total_applied = 0usize;
+    for &seed in &SEEDS {
+        let case = generate(seed, true);
+        let init = case.machine(&engines[0].2).regs.clone();
+        let mut g = Graph::lift(&case.prog, &init)
+            .unwrap_or_else(|e| panic!("seed={seed:#x}: lift failed: {e}"));
+        let report = Optimizer::exact().run(&mut g);
+        assert!(!report.budget_exhausted, "seed={seed:#x}: rule budget tripped");
+        total_applied += report.total_applied();
+        let low = lower(&g, &init)
+            .unwrap_or_else(|e| panic!("seed={seed:#x}: lowering failed: {e}"));
+        let verdict = low.verify();
+        assert!(
+            verdict.passes_deny(),
+            "seed={seed:#x}: lowered program fails static verification:\n{}",
+            verdict.render_diagnostics()
+        );
+        for (mode, backend, eng) in &engines {
+            let (mode, backend) = (*mode, *backend);
+            let mut direct = case.machine(eng);
+            direct
+                .run(&case.prog)
+                .unwrap_or_else(|e| panic!("seed={seed:#x} {mode:?}/{backend:?}: {e}"));
+            let mut replay = case.machine(eng);
+            run_lowered(&mut replay, &low).unwrap_or_else(|e| {
+                panic!("seed={seed:#x} {mode:?}/{backend:?}: lowered replay failed: {e}")
+            });
+            for reg in 0..32 {
+                assert_eq!(
+                    direct.regs.v[reg], replay.regs.v[reg],
+                    "LOWERING MISMATCH seed={seed:#x} {mode:?}/{backend:?} v{reg} \
+                     (pin this seed in SEEDS to reproduce)"
+                );
+            }
+            for k in 0..8 {
+                assert_eq!(
+                    direct.regs.k[k], replay.regs.k[k],
+                    "LOWERING MISMATCH seed={seed:#x} {mode:?}/{backend:?} k{k}"
+                );
+            }
+        }
+    }
+    // The corpus must drive the rule table, not vacuously pass on
+    // rewrite-free graphs.
+    assert!(total_applied > 0, "the exact rules never fired across the corpus");
 }
 
 /// Static-vs-dynamic differential: for every liftable corpus seed, the

@@ -1,0 +1,518 @@
+//! Unit tests for the graph compiler (`takum_avx10::opt`): per-rule
+//! positive/negative pattern graphs, the embedding tables behind
+//! `convert-widen`, fixpoint termination and the rule-budget fuse, the
+//! static-verifier cleanliness of lowered programs, and the satellite
+//! pin that lifting a convert-free takum kernel leaves the exact rule
+//! set with zero convert work (the paper's fixpoint claim), while an
+//! OFP8 cell hands it the whole storage↔compute convert tax.
+
+use takum_avx10::engine::EngineConfig;
+use takum_avx10::kernels::{Kernel, KernelSpec};
+use takum_avx10::num::{BF16, E4M3, F16};
+use takum_avx10::opt::{lower, run_lowered, Optimizer, RuleSet, CSE_RULE, RULE_BUDGET_DEFAULT};
+use takum_avx10::sim::graph::BinOp;
+use takum_avx10::sim::register::RegisterFile;
+use takum_avx10::sim::{Graph, LaneType};
+
+fn t8() -> LaneType {
+    LaneType::Takum(8)
+}
+
+fn t16() -> LaneType {
+    LaneType::Takum(16)
+}
+
+fn e4m3() -> LaneType {
+    LaneType::Mini(E4M3)
+}
+
+fn f16() -> LaneType {
+    LaneType::Mini(F16)
+}
+
+// ---------------------------------------------------------------------------
+// Per-rule positive / negative pattern graphs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn convert_fold_erases_requantisation() {
+    // Positive: Convert at the very type the operand is already
+    // quantised at (idempotence).
+    let mut g = Graph::new();
+    let x = g.load(1, e4m3());
+    let c = g.convert(x, e4m3());
+    g.output(1, e4m3(), c);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("convert-fold"), 1);
+    assert_eq!(g.len(), 1, "the redundant Convert must be dead-eliminated:\n{}", g.render());
+
+    // Positive, constant arm: every lane of the constant round-trips
+    // bit-exactly through the target type.
+    let mut g = Graph::new();
+    let one = g.splat(1.0);
+    let c = g.convert(one, t8());
+    g.output(2, t8(), c);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("convert-fold"), 1);
+
+    // Negative: 0.1 is not representable at takum8, so the constant arm
+    // must refuse (the quantisation would move the value).
+    let mut g = Graph::new();
+    let tenth = g.splat(0.1);
+    let c = g.convert(tenth, t8());
+    g.output(2, t8(), c);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("convert-fold"), 0);
+    assert_eq!(report.rule("convert-widen"), 0);
+    assert_eq!(g.len(), 2, "a value-changing Convert must survive:\n{}", g.render());
+}
+
+#[test]
+fn convert_widen_erases_lossless_embeddings() {
+    // Positive: the OFP8 cvt_in shape — storage e4m3 widened to the F16
+    // compute type (every e4m3 value is exact in F16).
+    let mut g = Graph::new();
+    let x = g.load(1, e4m3());
+    let c = g.convert(x, f16());
+    g.output(1, f16(), c);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("convert-widen"), 1);
+    assert_eq!(g.len(), 1, "{}", g.render());
+
+    // Positive: takum prefix-code widening.
+    let mut g = Graph::new();
+    let x = g.load(3, t8());
+    let c = g.convert(x, t16());
+    g.output(3, t16(), c);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("convert-widen"), 1);
+
+    // Negative: narrowing quantises — both convert rules must refuse.
+    let mut g = Graph::new();
+    let x = g.load(1, t16());
+    let c = g.convert(x, t8());
+    g.output(1, t8(), c);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("convert-widen"), 0);
+    assert_eq!(report.rule("convert-fold"), 0);
+
+    // Negative: F16 → BF16 is same-width but loses mantissa bits — not
+    // an embedding even though the exponent range grows.
+    let mut g = Graph::new();
+    let x = g.load(1, f16());
+    let c = g.convert(x, LaneType::Mini(BF16));
+    g.output(1, LaneType::Mini(BF16), c);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("convert-widen"), 0);
+}
+
+/// The embedding table's takum arm, property-tested exhaustively (the
+/// soundness note on `convert-widen` points here): every takum8 value —
+/// NAR included — survives a takum16 round trip bit-for-bit at the f64
+/// level, because shorter takum encodings are truncations of longer
+/// ones.
+#[test]
+fn takum8_embeds_exactly_in_takum16() {
+    for bits in 0u64..256 {
+        let x = t8().decode(bits);
+        let through16 = t16().decode(t16().encode(x));
+        assert_eq!(
+            x.to_bits(),
+            through16.to_bits(),
+            "takum8 bits {bits:#04x} (= {x}) moved under takum16 requantisation"
+        );
+    }
+}
+
+/// Same exhaustive check for the minifloat arm the OFP8 kernels lean
+/// on: every e4m3 encoding is exact in F16.
+#[test]
+fn e4m3_embeds_exactly_in_f16() {
+    for bits in 0u64..256 {
+        let x = e4m3().decode(bits);
+        let through = f16().decode(f16().encode(x));
+        assert_eq!(
+            x.to_bits(),
+            through.to_bits(),
+            "e4m3 bits {bits:#04x} (= {x}) moved under F16 requantisation"
+        );
+    }
+}
+
+#[test]
+fn mul_one_aliases_either_side() {
+    let mut g = Graph::new();
+    let x = g.load(1, t16());
+    let one = g.splat(1.0);
+    let m = g.bin(BinOp::Mul, one, x);
+    g.output(1, t16(), m);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("mul-one"), 1);
+    assert_eq!(g.len(), 1, "{}", g.render());
+
+    // Negative: an all-2.0 constant is not the multiplicative identity.
+    let mut g = Graph::new();
+    let x = g.load(1, t16());
+    let two = g.splat(2.0);
+    let m = g.bin(BinOp::Mul, x, two);
+    g.output(1, t16(), m);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("mul-one"), 0);
+    assert_eq!(g.len(), 3);
+}
+
+#[test]
+fn add_zero_demands_the_signed_identity() {
+    // Positive: x + (-0.0) and the symmetric -0.0 + x.
+    let mut g = Graph::new();
+    let x = g.load(1, f16());
+    let z = g.splat(-0.0);
+    let a = g.bin(BinOp::Add, z, x);
+    g.output(1, f16(), a);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("add-zero"), 1);
+
+    // Positive: x - (+0.0).
+    let mut g = Graph::new();
+    let x = g.load(1, f16());
+    let z = g.splat(0.0);
+    let s = g.bin(BinOp::Sub, x, z);
+    g.output(1, f16(), s);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("add-zero"), 1);
+
+    // Negative: x + (+0.0) flips the sign of a -0.0 lane — must not
+    // fire.
+    let mut g = Graph::new();
+    let x = g.load(1, f16());
+    let z = g.splat(0.0);
+    let a = g.bin(BinOp::Add, x, z);
+    g.output(1, f16(), a);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("add-zero"), 0, "x + (+0.0) is not an identity");
+
+    // Negative: x - (-0.0) likewise (+0 - -0 = +0, but -0 - -0 = +0
+    // flips).
+    let mut g = Graph::new();
+    let x = g.load(1, f16());
+    let z = g.splat(-0.0);
+    let s = g.bin(BinOp::Sub, x, z);
+    g.output(1, f16(), s);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("add-zero"), 0);
+}
+
+#[test]
+fn mul_zero_folds_only_under_the_finite_lane_proof() {
+    // Positive: signed zeros come out of the fold exactly as the
+    // evaluator would produce them (+0 · -3.5 = -0).
+    let mut g = Graph::new();
+    let z = g.splat(0.0);
+    let c = g.splat(-3.5);
+    let m = g.bin(BinOp::Mul, z, c);
+    g.output(1, f16(), m);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("mul-zero"), 1);
+    assert!(g.render().contains("-0"), "the folded constant must keep the -0 lanes:\n{}", g.render());
+
+    // Negative: ±inf · 0 = NaN — a non-finite lane blocks the fold.
+    let mut g = Graph::new();
+    let z = g.splat(0.0);
+    let c = g.splat(f64::INFINITY);
+    let m = g.bin(BinOp::Mul, z, c);
+    g.output(1, f16(), m);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("mul-zero"), 0);
+
+    // Negative: a zero times a non-constant is not folded by this rule
+    // (the runtime operand could be NaN or inf).
+    let mut g = Graph::new();
+    let z = g.splat(0.0);
+    let x = g.load(1, f16());
+    let m = g.bin(BinOp::Mul, z, x);
+    g.output(1, f16(), m);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("mul-zero"), 0);
+}
+
+#[test]
+fn dead_select_takes_the_statically_decided_arm() {
+    let mut g = Graph::new();
+    let a = g.load(1, t16());
+    let b = g.load(2, t16());
+    let s = g.select(u64::MAX, a, b);
+    g.output(1, t16(), s);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("dead-select"), 1);
+    assert_eq!(g.len(), 1, "only the taken arm survives:\n{}", g.render());
+
+    let mut g = Graph::new();
+    let a = g.load(1, t16());
+    let b = g.load(2, t16());
+    let s = g.select(0, a, b);
+    g.output(1, t16(), s);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("dead-select"), 1);
+
+    // Negative: a genuinely mixed mask keeps the Select.
+    let mut g = Graph::new();
+    let a = g.load(1, t16());
+    let b = g.load(2, t16());
+    let s = g.select(0x00FF_00FF, a, b);
+    g.output(1, t16(), s);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("dead-select"), 0);
+    assert_eq!(g.len(), 3);
+}
+
+#[test]
+fn select_same_collapses_identical_arms_via_cse() {
+    // The two arms are distinct nodes with identical structure: CSE
+    // merges them first, which exposes select-same in the same
+    // fixpoint.
+    let mut g = Graph::new();
+    let x = g.load(1, t16());
+    let a = g.bin(BinOp::Add, x, x);
+    let b = g.bin(BinOp::Add, x, x);
+    let s = g.select(0x0F0F, a, b);
+    g.output(1, t16(), s);
+    let report = Optimizer::exact().run(&mut g);
+    assert!(report.rule(CSE_RULE) >= 1, "CSE must merge the arms: {report:?}");
+    assert_eq!(report.rule("select-same"), 1);
+    assert_eq!(g.len(), 2, "{}", g.render());
+}
+
+#[test]
+fn cse_merges_structural_duplicates_bit_exactly() {
+    let mut g = Graph::new();
+    let x = g.load(1, t16());
+    let y = g.load(2, t16());
+    let s1 = g.bin(BinOp::Add, x, y);
+    let s2 = g.bin(BinOp::Add, x, y);
+    g.output(1, t16(), s1);
+    g.output(2, t16(), s2);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule(CSE_RULE), 1);
+    assert_eq!(g.len(), 3, "{}", g.render());
+
+    // Negative: two NaN constants with different payloads are not
+    // structurally identical — CSE keys on bit patterns, not values.
+    let mut g = Graph::new();
+    let n1 = g.splat(f64::from_bits(0x7FF8_0000_0000_0001));
+    let n2 = g.splat(f64::from_bits(0x7FF8_0000_0000_0002));
+    g.output(1, f16(), n1);
+    g.output(2, f16(), n2);
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule(CSE_RULE), 0, "distinct NaN payloads must not merge");
+}
+
+// ---------------------------------------------------------------------------
+// Rule tiers: contractive rules only under `all()`
+// ---------------------------------------------------------------------------
+
+#[test]
+fn contractive_rules_are_excluded_from_the_exact_tier() {
+    let build = || {
+        let mut g = Graph::new();
+        let a = g.load(1, f16());
+        let b = g.load(2, f16());
+        let z = g.load(3, f16());
+        let m = g.bin(BinOp::Mul, a, b);
+        let s = g.bin(BinOp::Add, m, z);
+        g.output(1, f16(), s);
+        g
+    };
+
+    let mut g = build();
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("fma-fuse"), 0);
+    assert_eq!(g.len(), 5, "the exact tier must leave Mul+Add alone:\n{}", g.render());
+
+    let mut g = build();
+    let report = Optimizer::all().run(&mut g);
+    assert_eq!(report.rule("fma-fuse"), 1);
+    assert!(g.render().contains("Fma"), "{}", g.render());
+    assert_eq!(g.len(), 4, "the fused Mul goes dead:\n{}", g.render());
+}
+
+#[test]
+fn dot_widen_folds_the_post_add_into_the_accumulator() {
+    let build = || {
+        let mut g = Graph::new();
+        let a = g.load(1, f16());
+        let b = g.load(2, f16());
+        let w = g.load(3, f16());
+        let zero = g.splat(0.0);
+        let d = g.dot(a, b, zero);
+        let s = g.bin(BinOp::Add, d, w);
+        g.output(1, f16(), s);
+        g
+    };
+
+    let mut g = build();
+    let report = Optimizer::exact().run(&mut g);
+    assert_eq!(report.rule("dot-widen"), 0);
+
+    let mut g = build();
+    let report = Optimizer::all().run(&mut g);
+    assert_eq!(report.rule("dot-widen"), 1);
+    assert_eq!(g.len(), 4, "the zero accumulator and old Dot go dead:\n{}", g.render());
+}
+
+#[test]
+fn rule_set_tiers_and_names() {
+    let exact = RuleSet::exact();
+    let all = RuleSet::all();
+    assert!(exact.rules().iter().all(|r| r.exact));
+    assert!(all.rules().len() > exact.rules().len());
+    // Names are the telemetry counter keys — CSE always included.
+    assert!(exact.names().contains(&CSE_RULE));
+    assert!(all.names().contains(&"fma-fuse"));
+    assert!(!exact.names().contains(&"fma-fuse"));
+}
+
+// ---------------------------------------------------------------------------
+// Fixpoint termination and the budget fuse
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fixpoint_is_reached_and_is_stable() {
+    // A convert ladder interleaved with identities: several rules must
+    // cooperate across iterations, and the default budget is nowhere
+    // near.
+    let mut g = Graph::new();
+    let x = g.load(1, t8());
+    let mut cur = x;
+    for _ in 0..8 {
+        cur = g.convert(cur, t16());
+        let one = g.splat(1.0);
+        cur = g.bin(BinOp::Mul, cur, one);
+    }
+    g.output(1, t16(), cur);
+    let report = Optimizer::exact().run(&mut g);
+    assert!(!report.budget_exhausted);
+    assert!(report.total_applied() < RULE_BUDGET_DEFAULT);
+    assert_eq!(report.rule("mul-one"), 8);
+    // Every convert is the lossless t8 ⊆ t16 widening, so the whole
+    // ladder collapses onto the bare load.
+    assert_eq!(report.rule("convert-widen"), 8);
+    assert_eq!(g.len(), 1, "{}", g.render());
+
+    // Stability: a second run over the optimized graph is a no-op.
+    let again = Optimizer::exact().run(&mut g);
+    assert_eq!(again.total_applied(), 0, "fixpoint must be stable: {again:?}");
+    assert_eq!(again.iterations, 1);
+}
+
+#[test]
+fn budget_fuse_trips_at_an_iteration_boundary() {
+    let build = || {
+        let mut g = Graph::new();
+        let x = g.load(1, t16());
+        let mut cur = x;
+        for _ in 0..16 {
+            let one = g.splat(1.0);
+            cur = g.bin(BinOp::Mul, cur, one);
+        }
+        g.output(1, t16(), cur);
+        g
+    };
+
+    let mut g = build();
+    let report = Optimizer::exact().with_budget(1).run(&mut g);
+    assert!(report.budget_exhausted, "{report:?}");
+    assert!(report.total_applied() >= 1);
+
+    // The fuse trips between iterations, so the graph is left
+    // consistent: a fresh default-budget run completes the fixpoint.
+    let finish = Optimizer::exact().run(&mut g);
+    assert!(!finish.budget_exhausted);
+    assert_eq!(g.len(), 1, "{}", g.render());
+
+    // A budget comfortably above the work needed never trips.
+    let mut g = build();
+    let report = Optimizer::exact().with_budget(RULE_BUDGET_DEFAULT).run(&mut g);
+    assert!(!report.budget_exhausted);
+}
+
+// ---------------------------------------------------------------------------
+// Lowered-program verifier cleanliness + kernel-cell pins
+// ---------------------------------------------------------------------------
+
+/// Every optimized kernel cell must lower to a program the static
+/// verifier passes under `Deny`, and the lowered replay must reproduce
+/// the direct machine's full register file bit-for-bit (the engine's
+/// `--opt on` path relies on both).
+#[test]
+fn optimized_kernel_lowering_is_verifier_clean_and_bit_identical() {
+    let eng = EngineConfig::new().build().expect("engine");
+    let init = RegisterFile::default();
+    for (kernel, format) in
+        [(Kernel::Dot, "e4m3"), (Kernel::Dot, "t8"), (Kernel::Poly, "e5m2"), (Kernel::Softmax, "t16")]
+    {
+        let spec = KernelSpec { kernel, format, n: 64, seed: 7 };
+        let run = spec.lower(&eng).expect("kernel run");
+        let mut g = Graph::lift_with_loads(&run.program, &init, &run.loads)
+            .unwrap_or_else(|e| panic!("{}/{format}: lift failed: {e}", kernel.name()));
+        let report = Optimizer::exact().run(&mut g);
+        assert!(!report.budget_exhausted);
+        let low = lower(&g, &init)
+            .unwrap_or_else(|e| panic!("{}/{format}: lowering failed: {e}", kernel.name()));
+        let verdict = low.verify();
+        assert!(
+            verdict.passes_deny(),
+            "{}/{format}: lowered program fails Verify::Deny:\n{}",
+            kernel.name(),
+            verdict.render_diagnostics()
+        );
+        let mut replay = eng.machine();
+        run_lowered(&mut replay, &low)
+            .unwrap_or_else(|e| panic!("{}/{format}: lowered replay failed: {e}", kernel.name()));
+        for reg in 0..32 {
+            assert_eq!(
+                run.machine.regs.v[reg],
+                replay.regs.v[reg],
+                "{}/{format}: lowered replay diverges at v{reg}",
+                kernel.name()
+            );
+        }
+    }
+}
+
+/// Satellite pin: the lift-time fold removes the one redundant
+/// requantising Convert the builder used to leave, so a convert-free
+/// takum kernel reaches the optimizer *already at the convert fixpoint*
+/// — the `PassStats` view shows zero convert-rule applications. The
+/// OFP8 contrast cell hands the very same rule set its whole
+/// storage↔compute convert chain.
+#[test]
+fn takum_kernels_lift_to_the_convert_fixpoint() {
+    let eng = EngineConfig::new().build().expect("engine");
+    let init = RegisterFile::default();
+
+    for format in ["t8", "t16"] {
+        for kernel in [Kernel::Dot, Kernel::Axpy, Kernel::Poly] {
+            let spec = KernelSpec { kernel, format, n: 64, seed: 3 };
+            let run = spec.lower(&eng).expect("kernel run");
+            let mut g = Graph::lift_with_loads(&run.program, &init, &run.loads)
+                .unwrap_or_else(|e| panic!("{}/{format}: lift failed: {e}", kernel.name()));
+            let stats = Optimizer::exact().run(&mut g).pass_stats();
+            assert_eq!(
+                stats.converts_folded, 0,
+                "{}/{format}: a takum cell must lift convert-clean, stats {stats:?}",
+                kernel.name()
+            );
+        }
+    }
+
+    // Contrast: the e4m3 dot cell's cvt_in chain is entirely foldable —
+    // the measurable half of the paper's convert-tax claim.
+    let spec = KernelSpec { kernel: Kernel::Dot, format: "e4m3", n: 64, seed: 3 };
+    let run = spec.lower(&eng).expect("kernel run");
+    let mut g = Graph::lift_with_loads(&run.program, &init, &run.loads).expect("lift");
+    let stats = Optimizer::exact().run(&mut g).pass_stats();
+    assert!(
+        stats.converts_folded > 0,
+        "the e4m3 cell must hand the optimizer its convert tax, stats {stats:?}"
+    );
+}
